@@ -1,0 +1,74 @@
+//! Bench: end-to-end serving study (§5.5 methodology at testbed scale).
+//!
+//! Sweeps the monolithic engine over model variants (standard MoE, PR-MoE,
+//! MoS, dense) and batch loads, reporting decode-step latency, TTFT and
+//! aggregate throughput — the testbed counterpart of Figs 13/14 (the
+//! variant ordering must match: MoS < PR-MoE < MoE in latency, all three
+//! vs dense per activated-parameter size).
+
+use ds_moe::config::ServingConfig;
+use ds_moe::data::{Corpus, CorpusConfig};
+use ds_moe::runtime::Manifest;
+use ds_moe::server::Engine;
+use ds_moe::util::stats::fmt_ns;
+use ds_moe::util::table::{f1, Table};
+
+fn main() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("run `make artifacts` first");
+        return;
+    };
+    let corpus = Corpus::generate(CorpusConfig::default());
+
+    let mut t = Table::new(
+        "E2E serving (testbed): variants x load",
+        &["model", "params", "requests", "tok/s", "TTFT p50",
+          "decode p50", "decode p99"],
+    );
+    for model in ["dense-s", "dense-m", "dense-l", "moe-s-8", "prmoe-s",
+                  "mos-s"] {
+        for &n_requests in &[8usize, 24] {
+            let mut engine = Engine::new(
+                &manifest,
+                ServingConfig {
+                    model: model.into(),
+                    max_new_tokens: 8,
+                    batch_timeout: std::time::Duration::from_millis(1),
+                    ..Default::default()
+                },
+            )
+            .expect(model);
+            // warmup: compile everything
+            engine.submit(corpus.prompt(0, 8), Some(2)).unwrap();
+            engine.run_until_idle().unwrap();
+
+            let t0 = std::time::Instant::now();
+            for i in 0..n_requests {
+                engine.submit(corpus.prompt(i, 8), Some(8)).unwrap();
+            }
+            let responses = engine.run_until_idle().unwrap();
+            let wall = t0.elapsed();
+            let tokens: usize =
+                responses.iter().map(|r| r.tokens.len()).sum();
+            let mut ttfts: Vec<u64> = responses
+                .iter()
+                .map(|r| r.ttft.as_nanos() as u64)
+                .collect();
+            ttfts.sort();
+            t.row(&[
+                model.to_string(),
+                manifest.model(model).unwrap().config.num_params.to_string(),
+                n_requests.to_string(),
+                f1(tokens as f64 / wall.as_secs_f64()),
+                fmt_ns(ttfts[ttfts.len() / 2]),
+                fmt_ns(engine.metrics.percentile_ns("decode_step", 50.0)),
+                fmt_ns(engine.metrics.percentile_ns("decode_step", 99.0)),
+            ]);
+        }
+    }
+    t.note("paper shape: PR-MoE+MoS < PR-MoE < standard MoE in latency \
+            (Fig 13); MoE variants serve near their activated-parameter \
+            cost, not their total size (Fig 14)");
+    t.print();
+    let _ = t.save_csv("e2e_serving");
+}

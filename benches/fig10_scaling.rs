@@ -1,0 +1,14 @@
+//! Bench: regenerates the paper's Figure 10 via the A100 cluster simulator
+//! (see rust/src/simulator/scenarios.rs for the full workload definition;
+//! the `cargo test --lib simulator` suite asserts the paper-shape claims).
+
+use ds_moe::simulator::scenarios;
+
+fn main() {
+    let t = scenarios::fig10();
+    t.print();
+    match t.save_csv("fig10_scaling") {
+        Ok(p) => println!("csv -> {}", p.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerates the paper's Figure 15 via the A100 cluster simulator
+//! (see rust/src/simulator/scenarios.rs for the full workload definition;
+//! the `cargo test --lib simulator` suite asserts the paper-shape claims).
+
+use ds_moe::simulator::scenarios;
+
+fn main() {
+    let t = scenarios::fig15();
+    t.print();
+    match t.save_csv("fig15_vs_dense_175b") {
+        Ok(p) => println!("csv -> {}", p.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

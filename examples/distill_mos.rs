@@ -1,0 +1,133 @@
+//! Mixture-of-Students distillation driver (§4.2): regenerates Figures 5/6
+//! and Table 5 at testbed scale.
+//!
+//! Trains the PR-MoE teacher (or restores `checkpoints/prmoe-s` from a
+//! previous `train_moe` run), then trains the depth-reduced student under
+//! the three KD regimes the paper compares:
+//!
+//!   * from scratch (no KD)             — Table 5 row "L21"
+//!   * full-run KD                      — row "KD only" (Fig 5: hurts late)
+//!   * staged KD (stop at 70% of steps) — row "MoS" (Fig 6: matches teacher)
+//!
+//! ```sh
+//! cargo run --release --example distill_mos -- --steps 300
+//! ```
+
+use ds_moe::data::{Corpus, CorpusConfig, EvalSuite};
+use ds_moe::runtime::Manifest;
+use ds_moe::training::{Distiller, KdMode, LrSchedule, Trainer};
+use ds_moe::util::args::Args;
+use ds_moe::util::table::{f2, Table};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let steps = args.get_usize("steps", 300, "student training steps");
+    let teacher_steps =
+        args.get_usize("teacher-steps", 300, "teacher training steps");
+    let eval_every = args.get_usize("eval-every", 25, "eval interval");
+    let stop_frac = args.get_f64("kd-stop-frac", 0.7,
+                                 "staged-KD stop fraction (paper ~0.7)");
+    let only_mode = args.get("mode", "", "run a single mode: none|full|staged");
+    let manifest = Manifest::load(args.get("artifacts", "artifacts", ""))?;
+
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let suite = EvalSuite::from_corpus(&corpus, 8);
+    let sched = |n: usize| LrSchedule {
+        peak: 1.5e-3,
+        min: 1.5e-4,
+        warmup_steps: n / 20,
+        decay_steps: n,
+    };
+
+    // --- teacher ----------------------------------------------------------
+    let teacher_dir = std::path::PathBuf::from("checkpoints/prmoe-s");
+    let teacher_valid;
+    if teacher_dir.join("meta.json").exists() {
+        println!("reusing trained teacher at {}", teacher_dir.display());
+        let mut t = Trainer::new(&manifest, "prmoe-s", sched(1))?;
+        t.restore(&teacher_dir)?;
+        teacher_valid = t.eval(&corpus, 8)?;
+    } else {
+        println!("training PR-MoE teacher for {teacher_steps} steps");
+        let mut t = Trainer::new(&manifest, "prmoe-s", sched(teacher_steps))?;
+        t.run(&corpus, teacher_steps, eval_every, false)?;
+        teacher_valid = t.eval(&corpus, 8)?;
+        t.save(&teacher_dir)?;
+    }
+    println!("teacher valid loss: {teacher_valid:.4}");
+
+    // --- students ----------------------------------------------------------
+    let modes: Vec<(&str, KdMode)> = match only_mode.as_str() {
+        "none" => vec![("scratch (L3, no KD)", KdMode::None)],
+        "full" => vec![("full KD", KdMode::Full)],
+        "staged" => vec![("staged KD (MoS)",
+                          KdMode::Staged { frac: stop_frac })],
+        _ => vec![
+            ("scratch (L3, no KD)", KdMode::None),
+            ("full KD", KdMode::Full),
+            ("staged KD (MoS)", KdMode::Staged { frac: stop_frac }),
+        ],
+    };
+
+    let mut table5 = Table::new(
+        "Table 5 analogue — PR-MoE student under KD regimes",
+        &["config", "params", "valid loss", "gap to teacher",
+          "mean cloze %"],
+    );
+    let mut curves = Table::new(
+        "Figs 5/6 — student validation curves",
+        &std::iter::once("step")
+            .chain(modes.iter().map(|(n, _)| *n))
+            .collect::<Vec<_>>(),
+    );
+
+    let mut histories = Vec::new();
+    for (label, mode) in &modes {
+        println!("=== student mos-s, {label}, {steps} steps ===");
+        let mut d = Distiller::new(&manifest, "mos-s", &teacher_dir,
+                                   sched(steps), *mode)?;
+        d.run(&corpus, steps, eval_every, false)?;
+        let valid = d.student.eval(&corpus, 8)?;
+        let (_, acc) = d.student.zero_shot(&suite, 8)?;
+        table5.row(&[
+            label.to_string(),
+            d.student.param_count().to_string(),
+            f2(valid),
+            format!("{:+.4}", valid - teacher_valid),
+            format!("{:.1}", 100.0 * acc),
+        ]);
+        if let KdMode::Staged { .. } = mode {
+            d.student.save("checkpoints/mos-s")?;
+        }
+        histories.push((label.to_string(), d.student.history.clone()));
+    }
+
+    if let Some((_, first)) = histories.first() {
+        for (i, pt) in first.iter().enumerate() {
+            let mut row = vec![pt.step.to_string()];
+            for (_, h) in &histories {
+                row.push(h.get(i).map(|p| f2(p.valid_loss)).unwrap_or_default());
+            }
+            curves.row(&row);
+        }
+    }
+    curves.note(&format!("teacher (prmoe-s) valid loss: {teacher_valid:.4}"));
+    curves.print();
+    table5.print();
+    curves.save_csv("fig5_6_distill_curves")?;
+    table5.save_csv("table5_students")?;
+
+    // Paper-shape summary
+    if histories.len() == 3 {
+        let fin = |i: usize| histories[i].1.last().unwrap().valid_loss;
+        println!(
+            "\npaper-shape checks:\n  staged KD ({:.4}) <= scratch ({:.4}): {}\n  \
+             staged KD within 0.05 of teacher ({:.4}): {}",
+            fin(2), fin(0),
+            if fin(2) <= fin(0) + 0.01 { "yes" } else { "no" },
+            teacher_valid,
+            if (fin(2) - teacher_valid).abs() < 0.05 { "yes" } else { "no" },
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,23 @@
+// RSS probe: repeated train steps, print RSS every 10.
+use ds_moe::data::{Corpus, CorpusConfig};
+use ds_moe::runtime::Manifest;
+use ds_moe::training::{LrSchedule, Trainer};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+
+fn main() {
+    let m = Manifest::load("artifacts").unwrap();
+    let c = Corpus::generate(CorpusConfig { train_seqs: 64, valid_seqs: 32, ..Default::default() });
+    let sched = LrSchedule { peak: 1e-3, min: 1e-4, warmup_steps: 2, decay_steps: 100 };
+    let mut tr = Trainer::new(&m, "dense-m", sched).unwrap();
+    for s in 0..60 {
+        let b = c.train_batch(s, tr.batch);
+        tr.train_step(&b).unwrap();
+        if s % 10 == 0 { println!("step {s}: RSS {:.0} MB", rss_mb()); }
+    }
+    println!("final: RSS {:.0} MB", rss_mb());
+}

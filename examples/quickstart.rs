@@ -1,0 +1,71 @@
+//! Quickstart: load the artifacts, serve a handful of requests on a tiny
+//! MoE model, and print the responses.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ds_moe::config::ServingConfig;
+use ds_moe::data::{Corpus, CorpusConfig};
+use ds_moe::runtime::Manifest;
+use ds_moe::server::Engine;
+use ds_moe::tokenizer::Tokenizer;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The manifest is the ABI to the AOT-compiled JAX/Pallas programs.
+    let manifest = Manifest::load("artifacts")?;
+    println!(
+        "loaded manifest: {} models, {} shared programs",
+        manifest.models.len(),
+        manifest.shared.len()
+    );
+
+    // 2. Build a serving engine for the standard-MoE tiny model.
+    let mut engine = Engine::new(
+        &manifest,
+        ServingConfig {
+            model: "moe-s-8".into(),
+            max_new_tokens: 12,
+            ..Default::default()
+        },
+    )?;
+    let cfg = engine.model_config().clone();
+    println!(
+        "serving {} — {} params, experts per layer {:?}",
+        cfg.name, cfg.num_params, cfg.experts_schedule
+    );
+
+    // 3. Requests come from the synthetic corpus; the tokenizer gives them
+    //    a readable surface form.
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let tok = Tokenizer::new(cfg.vocab_size);
+    for i in 0..8 {
+        let prompt = corpus.prompt(i, 8);
+        println!("prompt #{i}: {}", tok.decode(&prompt));
+        engine.submit(prompt, Some(12))?;
+    }
+
+    // 4. Drain: the engine batches prefills, decodes continuously, retires
+    //    finished sequences.
+    let t0 = std::time::Instant::now();
+    let responses = engine.run_until_idle()?;
+    let wall = t0.elapsed();
+
+    for r in &responses {
+        println!(
+            "  -> #{} ({} tokens, ttft {:?}): {}",
+            r.id,
+            r.tokens.len(),
+            r.ttft,
+            tok.decode(&r.tokens)
+        );
+    }
+    let total: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    println!(
+        "\n{} responses / {total} tokens in {wall:?} ({:.1} tok/s)",
+        responses.len(),
+        total as f64 / wall.as_secs_f64()
+    );
+    println!("\nmetrics:\n{}", engine.metrics.report());
+    Ok(())
+}

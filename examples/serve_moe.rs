@@ -1,0 +1,145 @@
+//! Serving study at testbed scale — the end-to-end validation driver for
+//! the serving half (§5.5): load a small real model (optionally a trained
+//! checkpoint), serve Poisson-arriving batched requests through the full
+//! coordinator stack, and report latency percentiles and throughput for
+//! both the monolithic single-device engine and the disaggregated
+//! expert-parallel engine across worker counts and all-to-all schedules.
+//!
+//! ```sh
+//! cargo run --release --example serve_moe -- --requests 32 --rate 50
+//! ```
+
+use ds_moe::config::{AllToAllKind, ServingConfig};
+use ds_moe::data::{Corpus, CorpusConfig};
+use ds_moe::runtime::Manifest;
+use ds_moe::server::{Engine, EpEngine};
+use ds_moe::util::args::Args;
+use ds_moe::util::rng::Rng;
+use ds_moe::util::stats::fmt_ns;
+use ds_moe::util::table::{f1, Table};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let model = args.get("model", "moe-s-8", "model variant");
+    let n_requests = args.get_usize("requests", 32, "number of requests");
+    let rate = args.get_f64("rate", 100.0, "arrival rate (req/s)");
+    let max_new = args.get_usize("max-new", 10, "tokens per request");
+    let workers_list =
+        args.get_usize_list("workers", "2,4,8", "EP worker counts to test");
+    let manifest = Manifest::load(args.get("artifacts", "artifacts", ""))?;
+    let corpus = Corpus::generate(CorpusConfig::default());
+
+    // ---- monolithic engine under a Poisson open-loop workload -------------
+    println!("== monolithic engine: {model}, Poisson {rate} req/s ==");
+    let mut engine = Engine::new(
+        &manifest,
+        ServingConfig {
+            model: model.clone(),
+            max_new_tokens: max_new,
+            ..Default::default()
+        },
+    )?;
+    let mut rng = Rng::new(7);
+    let mut arrivals: Vec<f64> = Vec::new();
+    let mut t_acc = 0.0;
+    for _ in 0..n_requests {
+        t_acc += rng.exponential(rate);
+        arrivals.push(t_acc);
+    }
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    while submitted < n_requests || engine.active_count() > 0
+        || engine.router.queue_len() > 0
+    {
+        let now = t0.elapsed().as_secs_f64();
+        while submitted < n_requests && arrivals[submitted] <= now {
+            engine.submit(corpus.prompt(submitted, 8), Some(max_new))?;
+            submitted += 1;
+        }
+        if !engine.step()? {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+    let wall = t0.elapsed();
+    let responses = engine.take_done();
+    let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let mut ttfts: Vec<u64> =
+        responses.iter().map(|r| r.ttft.as_nanos() as u64).collect();
+    ttfts.sort();
+    println!(
+        "  {} responses, {:.1} tok/s, TTFT p50 {} p99 {}",
+        responses.len(),
+        total_tokens as f64 / wall.as_secs_f64(),
+        fmt_ns(ttfts[ttfts.len() / 2]),
+        fmt_ns(ttfts[ttfts.len() * 99 / 100]),
+    );
+    println!(
+        "  decode_step p50 {}  prefill p50 {}",
+        fmt_ns(engine.metrics.percentile_ns("decode_step", 50.0)),
+        fmt_ns(engine.metrics.percentile_ns("prefill", 50.0)),
+    );
+
+    // ---- expert-parallel engine across workers + schedules ----------------
+    let mut t = Table::new(
+        "EP engine: decode throughput by workers x all-to-all schedule",
+        &["workers", "schedule", "prefill ms", "decode ms/step",
+          "agg tok/s", "a2a bytes", "max imbalance"],
+    );
+    let batch = 8usize;
+    let steps = 8usize;
+    for &w in &workers_list {
+        for kind in [AllToAllKind::Naive, AllToAllKind::Hierarchical] {
+            let mut ep = EpEngine::new(&manifest, &model, w, kind, batch)?;
+            let smax = ep.cfg.max_seq;
+            let mut tokens = vec![0i32; batch * smax];
+            for b in 0..batch {
+                let p = corpus.prompt(b, 8);
+                tokens[b * smax..b * smax + 8].copy_from_slice(&p);
+            }
+            let tp = std::time::Instant::now();
+            let logits = ep.forward_prefill(&tokens, &vec![8; batch])?;
+            let prefill_ms = tp.elapsed().as_secs_f64() * 1e3;
+            let mut last: Vec<i32> =
+                logits.iter().map(|r| argmax(r)).collect();
+            let mut pos = vec![8i32; batch];
+            let td = std::time::Instant::now();
+            for _ in 0..steps {
+                let logits = ep.forward_decode(&last, &pos)?;
+                last = logits.iter().map(|r| argmax(r)).collect();
+                for p in &mut pos {
+                    *p += 1;
+                }
+            }
+            let decode_s = td.elapsed().as_secs_f64();
+            let imb = ep
+                .load_stats
+                .iter()
+                .map(|s| s.imbalance())
+                .fold(0.0, f64::max);
+            t.row(&[
+                w.to_string(),
+                format!("{kind:?}"),
+                f1(prefill_ms),
+                f1(decode_s / steps as f64 * 1e3),
+                f1(batch as f64 * steps as f64 / decode_s),
+                ep.metrics.counter("alltoall_bytes").to_string(),
+                f1(imb),
+            ]);
+        }
+    }
+    t.note("testbed workers are CPU threads; hop-count effects at paper \
+            scale come from the simulator (benches/fig10_scaling)");
+    t.print();
+    t.save_csv("serve_moe_ep_study")?;
+    Ok(())
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}

@@ -1,0 +1,466 @@
+"""AOT exporter: lower every program to HLO text + write the manifest.
+
+This is the single build-time entry point (``make artifacts``).  It emits,
+under ``artifacts/``:
+
+* ``<model>/<program>.hlo.txt`` — HLO **text** for every exported program
+  (text, not serialized proto: the image's xla_extension 0.5.1 rejects
+  jax>=0.5 protos with 64-bit instruction ids; the text parser reassigns
+  ids — see /opt/xla-example/README.md).
+* ``shared/<program>.hlo.txt`` — layer-granular programs for the
+  disaggregated expert-parallel serving path (the Rust coordinator composes
+  these, inserting the all-to-all between gate and expert FFN).
+* ``ckpt/<model>/`` — initial parameter checkpoints (meta.json + params.bin,
+  f32 little-endian in ``param_specs`` order) that the Rust training driver
+  reads, updates and re-writes.
+* ``manifest.json`` — machine-readable index of all of the above: program
+  file paths, positional input/output specs (name, shape, dtype), model
+  configs and parameter layouts.  This file is the ABI between the Python
+  build path and the Rust runtime.
+
+Python runs ONCE; after this, the Rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+# Batch sizes compiled for serving; the Rust batcher rounds up to one of
+# these.  Prefill sequence length is always cfg.max_seq (prompts padded).
+DECODE_BATCH_SIZES = (1, 4, 8)
+PREFILL_BATCH_SIZES = (1, 4, 8)
+# Expert-block capacities compiled for the disaggregated expert-FFN program;
+# the coordinator pads each expert's token block up to the next one.
+EXPERT_BLOCK_SIZES = (1, 4, 8, 16, 64, 256, 512)
+
+# Training batch geometry (matches rust/src/training defaults).
+TRAIN_BATCH, TRAIN_SEQ = 16, 32
+EVAL_BATCH = 16
+
+# Variants exported with serving (prefill/decode) programs.
+SERVE_MODELS = ("dense-s", "dense-m", "dense-l", "moe-s-8", "prmoe-s",
+                "mos-s")
+# Variants exported with training programs (Figs 1/2/4/5/6, Tables 2/4/5).
+TRAIN_MODELS = tuple(configs.REGISTRY)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32", name=""):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+_DT = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"models": {}, "shared": {}}
+
+    def export_program(self, rel_name: str, fn: Callable,
+                       inputs: List[dict], outputs: List[dict]) -> dict:
+        """Lower ``fn`` against ``inputs`` specs and write HLO text."""
+        arg_specs = [_sds(s["shape"], _DT[s["dtype"]]) for s in inputs]
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, rel_name + ".hlo.txt")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {"file": rel_name + ".hlo.txt", "inputs": inputs,
+                 "outputs": outputs}
+        print(f"  wrote {rel_name}: {len(inputs)} in / {len(outputs)} out, "
+              f"{len(text) // 1024} KiB")
+        return entry
+
+    # -- checkpoints --------------------------------------------------------
+
+    def write_checkpoint(self, cfg: configs.ModelConfig, seed: int) -> str:
+        flat = model.init_params(cfg, seed)
+        specs = model.param_specs(cfg)
+        rel = os.path.join("ckpt", cfg.name)
+        d = os.path.join(self.out_dir, rel)
+        os.makedirs(d, exist_ok=True)
+        meta, offset = [], 0
+        with open(os.path.join(d, "params.bin"), "wb") as f:
+            for (name, shape), arr in zip(specs, flat):
+                a = np.asarray(arr, np.float32)
+                f.write(a.tobytes())
+                meta.append({"name": name, "shape": list(shape),
+                             "dtype": "f32", "offset": offset,
+                             "nelems": int(a.size)})
+                offset += int(a.size)
+        with open(os.path.join(d, "meta.json"), "w") as f:
+            json.dump({"model": cfg.name, "step": 0, "total_elems": offset,
+                       "params": meta}, f, indent=1)
+        return rel
+
+    # -- per-model programs --------------------------------------------------
+
+    def export_model(self, name: str, serve: bool, train: bool):
+        cfg = configs.get(name)
+        print(f"model {name} ({cfg.num_params():,} params)")
+        pspecs = model.param_specs(cfg)
+        par_in = [_spec(s, "f32", "param:" + n) for n, s in pspecs]
+        L, H, Smax, hd = (cfg.n_layers, cfg.n_heads, cfg.max_seq,
+                          cfg.head_dim)
+        V = cfg.vocab_size
+        progs = {}
+
+        if serve:
+            for B in PREFILL_BATCH_SIZES:
+                ins = par_in + [_spec((B, Smax), "i32", "tokens")]
+                outs = [_spec((B, Smax, V), "f32", "logits"),
+                        _spec((L, B, H, Smax, hd), "f32", "k_caches"),
+                        _spec((L, B, H, Smax, hd), "f32", "v_caches")]
+                fn = functools.partial(
+                    lambda *a, cfg=cfg: model.prefill(
+                        list(a[:-1]), a[-1], cfg, use_pallas=True))
+                progs[f"prefill_b{B}"] = self.export_program(
+                    f"{name}/prefill_b{B}", fn, ins, outs)
+            for B in DECODE_BATCH_SIZES:
+                ins = par_in + [
+                    _spec((B,), "i32", "token"),
+                    _spec((L, B, H, Smax, hd), "f32", "k_caches"),
+                    _spec((L, B, H, Smax, hd), "f32", "v_caches"),
+                    _spec((B,), "i32", "pos"),
+                ]
+                outs = [_spec((B, V), "f32", "logits"),
+                        _spec((L, B, H, Smax, hd), "f32", "k_caches"),
+                        _spec((L, B, H, Smax, hd), "f32", "v_caches")]
+                n_par = len(pspecs)
+                fn = (lambda *a, cfg=cfg, n=n_par: model.decode_step(
+                    list(a[:n]), a[n], a[n + 1], a[n + 2], a[n + 3], cfg,
+                    use_pallas=True))
+                progs[f"decode_b{B}"] = self.export_program(
+                    f"{name}/decode_b{B}", fn, ins, outs)
+
+        if train:
+            n = len(pspecs)
+            batch_spec = _spec((TRAIN_BATCH, TRAIN_SEQ + 1), "i32", "batch")
+            opt_in = ([_spec(s, "f32", "m:" + nm) for nm, s in pspecs]
+                      + [_spec(s, "f32", "v:" + nm) for nm, s in pspecs])
+            state_out = ([_spec(s, "f32", "param:" + nm) for nm, s in pspecs]
+                         + [_spec(s, "f32", "m:" + nm) for nm, s in pspecs]
+                         + [_spec(s, "f32", "v:" + nm) for nm, s in pspecs])
+
+            ins = (par_in + opt_in
+                   + [batch_spec, _spec((), "i32", "step"),
+                      _spec((), "f32", "lr")])
+            outs = state_out + [_spec((), "f32", "loss"),
+                                _spec((), "f32", "ce"),
+                                _spec((), "f32", "aux")]
+            fn = (lambda *a, cfg=cfg, n=n: _flatten3(model.train_step(
+                list(a[:n]), list(a[n:2 * n]), list(a[2 * n:3 * n]),
+                a[3 * n], a[3 * n + 1], a[3 * n + 2], cfg)))
+            progs["train_step"] = self.export_program(
+                f"{name}/train_step", fn, ins, outs)
+
+            ins = par_in + [_spec((EVAL_BATCH, TRAIN_SEQ + 1), "i32",
+                                  "batch")]
+            outs = [_spec((), "f32", "loss")]
+            fn = (lambda *a, cfg=cfg, n=n:
+                  (model.eval_loss(list(a[:n]), a[n], cfg),))
+            progs["eval_loss"] = self.export_program(
+                f"{name}/eval_loss", fn, ins, outs)
+
+            # Full next-token logits over an eval batch: used by the Rust
+            # zero-shot evaluation (cloze prediction, Tables 2/4/5).
+            ins = par_in + [_spec((EVAL_BATCH, TRAIN_SEQ + 1), "i32",
+                                  "batch")]
+            outs = [_spec((EVAL_BATCH, TRAIN_SEQ, V), "f32", "logits")]
+            fn = (lambda *a, cfg=cfg, n=n:
+                  (model.teacher_logits_fn(list(a[:n]), a[n], cfg),))
+            progs["logits"] = self.export_program(
+                f"{name}/logits", fn, ins, outs)
+
+            if cfg.teacher is not None:
+                tcfg = configs.get(cfg.teacher)
+                tspecs = model.param_specs(tcfg)
+                tn = len(tspecs)
+                t_in = [_spec(s, "f32", "param:" + nm) for nm, s in tspecs]
+                ins = t_in + [batch_spec]
+                outs = [_spec((TRAIN_BATCH, TRAIN_SEQ, V), "f32",
+                              "teacher_logits")]
+                fn = (lambda *a, tcfg=tcfg, tn=tn:
+                      (model.teacher_logits_fn(list(a[:tn]), a[tn], tcfg),))
+                progs["teacher_logits"] = self.export_program(
+                    f"{name}/teacher_logits", fn, ins, outs)
+
+                ins = (par_in + opt_in
+                       + [batch_spec,
+                          _spec((TRAIN_BATCH, TRAIN_SEQ, V), "f32",
+                                "teacher_logits"),
+                          _spec((), "f32", "kd_alpha"),
+                          _spec((), "i32", "step"), _spec((), "f32", "lr")])
+                outs = state_out + [_spec((), "f32", "loss"),
+                                    _spec((), "f32", "ce"),
+                                    _spec((), "f32", "kl")]
+                fn = (lambda *a, cfg=cfg, n=n: _flatten3(model.distill_step(
+                    list(a[:n]), list(a[n:2 * n]), list(a[2 * n:3 * n]),
+                    a[3 * n], a[3 * n + 1], a[3 * n + 2], a[3 * n + 3],
+                    a[3 * n + 4], cfg)))
+                progs["distill_step"] = self.export_program(
+                    f"{name}/distill_step", fn, ins, outs)
+
+        ckpt = self.write_checkpoint(cfg, seed=hash(name) % (2 ** 31))
+        self.manifest["models"][name] = {
+            "config": {
+                "name": cfg.name, "vocab_size": V, "n_layers": L,
+                "d_model": cfg.d_model, "n_heads": H, "d_ff": cfg.d_ff,
+                "max_seq": Smax,
+                "experts_schedule": list(cfg.experts_schedule),
+                "residual": cfg.residual, "top2": cfg.top2,
+                "capacity_factor": cfg.capacity_factor,
+                "moe_loss_coef": cfg.moe_loss_coef,
+                "teacher": cfg.teacher, "kd_alpha": cfg.kd_alpha,
+                "num_params": cfg.num_params(),
+            },
+            "params": [{"name": nm, "shape": list(s), "dtype": "f32"}
+                       for nm, s in pspecs],
+            "checkpoint": ckpt,
+            "train_geometry": {"batch": TRAIN_BATCH, "seq": TRAIN_SEQ,
+                               "eval_batch": EVAL_BATCH},
+            "programs": progs,
+        }
+
+    # -- shared layer-granular programs (disaggregated serving path) --------
+
+    def export_shared(self, dims: Sequence[Tuple[int, int, int]],
+                      expert_dims: Sequence[Tuple[int, int]],
+                      gate_dims: Sequence[Tuple[int, int]],
+                      vocab_dims: Sequence[Tuple[int, int]],
+                      smax: int):
+        """Export per-layer programs for every distinct dimension tuple.
+
+        dims: set of (M, H, F); expert_dims: (M, F); gate_dims: (M, E);
+        vocab_dims: (V, M).
+        """
+        sh = self.manifest["shared"]
+        for (V, M) in sorted(set(vocab_dims)):
+            for B in PREFILL_BATCH_SIZES:
+                key = f"embed_v{V}_m{M}_b{B}_s{smax}"
+                ins = [_spec((V, M), "f32", "tok_emb"),
+                       _spec((smax, M), "f32", "pos_emb"),
+                       _spec((B, smax), "i32", "tokens"),
+                       _spec((B,), "i32", "pos0")]
+                outs = [_spec((B, smax, M), "f32", "h")]
+                sh[key] = self.export_program(
+                    "shared/" + key,
+                    lambda te, pe, t, p0: (model.prog_embed(te, pe, t, p0),),
+                    ins, outs)
+            for B in DECODE_BATCH_SIZES:
+                key = f"embed_v{V}_m{M}_b{B}_s1"
+                ins = [_spec((V, M), "f32", "tok_emb"),
+                       _spec((smax, M), "f32", "pos_emb"),
+                       _spec((B, 1), "i32", "tokens"),
+                       _spec((B,), "i32", "pos0")]
+                outs = [_spec((B, 1, M), "f32", "h")]
+                sh[key] = self.export_program(
+                    "shared/" + key,
+                    lambda te, pe, t, p0: (model.prog_embed(te, pe, t, p0),),
+                    ins, outs)
+                key = f"lm_head_v{V}_m{M}_b{B}"
+                ins = [_spec((B, M), "f32", "h"),
+                       _spec((M,), "f32", "ln_g"), _spec((M,), "f32", "ln_b"),
+                       _spec((V, M), "f32", "tok_emb")]
+                outs = [_spec((B, V), "f32", "logits")]
+                sh[key] = self.export_program(
+                    "shared/" + key,
+                    lambda h, g, b, te: (model.prog_lm_head(h, g, b, te),),
+                    ins, outs)
+
+        for (M, H, F) in sorted(set(dims)):
+            hd = M // H
+            for B in PREFILL_BATCH_SIZES:
+                key = f"attn_prefill_m{M}_h{H}_b{B}_s{smax}"
+                ins = ([_spec((B, smax, M), "f32", "h")]
+                       + [_spec((M,), "f32", "ln_g"),
+                          _spec((M,), "f32", "ln_b")]
+                       + [_spec((M, M), "f32", w)
+                          for w in ("wq", "wk", "wv", "wo")])
+                outs = [_spec((B, smax, M), "f32", "h"),
+                        _spec((B, H, smax, hd), "f32", "k"),
+                        _spec((B, H, smax, hd), "f32", "v")]
+                sh[key] = self.export_program(
+                    "shared/" + key,
+                    functools.partial(model.prog_attn_prefill, n_heads=H),
+                    ins, outs)
+            for B in DECODE_BATCH_SIZES:
+                key = f"attn_decode_m{M}_h{H}_b{B}_s{smax}"
+                ins = ([_spec((B, 1, M), "f32", "h")]
+                       + [_spec((M,), "f32", "ln_g"),
+                          _spec((M,), "f32", "ln_b")]
+                       + [_spec((M, M), "f32", w)
+                          for w in ("wq", "wk", "wv", "wo")]
+                       + [_spec((B, H, smax, hd), "f32", "k_cache"),
+                          _spec((B, H, smax, hd), "f32", "v_cache"),
+                          _spec((B,), "i32", "pos")])
+                outs = [_spec((B, 1, M), "f32", "h"),
+                        _spec((B, H, smax, hd), "f32", "k_cache"),
+                        _spec((B, H, smax, hd), "f32", "v_cache")]
+                sh[key] = self.export_program(
+                    "shared/" + key,
+                    functools.partial(model.prog_attn_decode, n_heads=H),
+                    ins, outs)
+            for T in sorted({b for b in DECODE_BATCH_SIZES}
+                            | {b * smax for b in PREFILL_BATCH_SIZES}):
+                key = f"dense_ffn_m{M}_f{F}_t{T}"
+                # operates on [B,S,M]; flat T tokens as [1, T, M]
+                ins = ([_spec((1, T, M), "f32", "h")]
+                       + [_spec((M,), "f32", "ln_g"),
+                          _spec((M,), "f32", "ln_b")]
+                       + [_spec((M, F), "f32", "w1"), _spec((F,), "f32", "b1"),
+                          _spec((F, M), "f32", "w2"),
+                          _spec((M,), "f32", "b2")])
+                outs = [_spec((1, T, M), "f32", "h")]
+                sh[key] = self.export_program(
+                    "shared/" + key,
+                    lambda h, g, b, w1, b1, w2, b2:
+                    (model.prog_dense_ffn(h, g, b, w1, b1, w2, b2),),
+                    ins, outs)
+
+        for (M, E) in sorted(set(gate_dims)):
+            for T in sorted({b for b in DECODE_BATCH_SIZES}
+                            | {b * smax for b in PREFILL_BATCH_SIZES}):
+                key = f"gate_m{M}_e{E}_t{T}"
+                ins = [_spec((1, T, M), "f32", "h"),
+                       _spec((M,), "f32", "ln_g"), _spec((M,), "f32", "ln_b"),
+                       _spec((M, E), "f32", "gate_w")]
+                outs = [_spec((T, M), "f32", "ln_h"),
+                        _spec((T, E), "f32", "probs")]
+                sh[key] = self.export_program(
+                    "shared/" + key, model.prog_gate, ins, outs)
+
+        for (M, F) in sorted(set(expert_dims)):
+            for C in EXPERT_BLOCK_SIZES:
+                key = f"expert_ffn_m{M}_f{F}_c{C}"
+                ins = [_spec((C, M), "f32", "x"),
+                       _spec((M, F), "f32", "w1"), _spec((F,), "f32", "b1"),
+                       _spec((F, M), "f32", "w2"), _spec((M,), "f32", "b2")]
+                outs = [_spec((C, M), "f32", "y")]
+                sh[key] = self.export_program(
+                    "shared/" + key,
+                    lambda x, w1, b1, w2, b2:
+                    (model.prog_expert_ffn(x, w1, b1, w2, b2),),
+                    ins, outs)
+            for T in sorted({b for b in DECODE_BATCH_SIZES}
+                            | {b * smax for b in PREFILL_BATCH_SIZES}):
+                key = f"residual_branch_m{M}_f{F}_t{T}"
+                ins = [_spec((T, M), "f32", "x"),
+                       _spec((M, F), "f32", "w1"), _spec((F,), "f32", "b1"),
+                       _spec((F, M), "f32", "w2"), _spec((M,), "f32", "b2")]
+                outs = [_spec((T, M), "f32", "y")]
+                sh[key] = self.export_program(
+                    "shared/" + key,
+                    lambda x, w1, b1, w2, b2:
+                    (model.prog_residual_branch(x, w1, b1, w2, b2),),
+                    ins, outs)
+
+
+    def export_kernel_bench(self):
+        """Fused vs sparse-einsum MoE layer pairs (§5.4 kernel study).
+
+        Same math, two data paths: `kb_fused_*` lowers the Pallas kernels
+        (dense mapping table), `kb_ref_*` lowers the one-hot einsum
+        formulation (the paper's baseline, S x E x M x c_e).  The Rust
+        bench `benches/kernel_latency.rs` times both executables.
+        """
+        from .kernels import moe_layer as k_moe
+        from .kernels import ref as k_ref
+
+        S, M, F = 256, 128, 256
+        for E in (4, 8, 16, 32):
+            cap = max(1, 2 * S // E)
+            ins = [_spec((S, M), "f32", "tokens"),
+                   _spec((M, E), "f32", "gate_w"),
+                   _spec((E, M, F), "f32", "w1"), _spec((E, F), "f32", "b1"),
+                   _spec((E, F, M), "f32", "w2"), _spec((E, M), "f32", "b2")]
+            outs = [_spec((S, M), "f32", "out"), _spec((), "f32", "aux")]
+            self.manifest["shared"][f"kb_fused_e{E}"] = self.export_program(
+                f"shared/kb_fused_e{E}",
+                lambda t, g, w1, b1, w2, b2, cap=cap:
+                k_moe.moe_layer_fused(t, g, w1, b1, w2, b2, cap)[:2],
+                ins, outs)
+            self.manifest["shared"][f"kb_ref_e{E}"] = self.export_program(
+                f"shared/kb_ref_e{E}",
+                lambda t, g, w1, b1, w2, b2, cap=cap:
+                k_ref.moe_layer_ref(t, g, w1, b1, w2, b2, cap),
+                ins, outs)
+
+
+def _flatten3(res):
+    """(list, list, list, *scalars) -> flat tuple for export."""
+    new_p, new_m, new_v, *rest = res
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + tuple(rest)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="",
+                    help="comma-separated subset (default: all)")
+    ap.add_argument("--no-shared", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    ex = Exporter(args.out)
+
+    subset = set(args.models.split(",")) if args.models else None
+    for name in configs.REGISTRY:
+        if subset and name not in subset:
+            continue
+        ex.export_model(name, serve=name in SERVE_MODELS,
+                        train=name in TRAIN_MODELS)
+
+    if not args.no_shared and (subset is None or subset & set(SERVE_MODELS)):
+        dims, gate_dims, expert_dims, vocab_dims = set(), set(), set(), set()
+        smax = None
+        for name in SERVE_MODELS:
+            if subset and name not in subset:
+                continue
+            cfg = configs.get(name)
+            smax = cfg.max_seq
+            dims.add((cfg.d_model, cfg.n_heads, cfg.d_ff))
+            vocab_dims.add((cfg.vocab_size, cfg.d_model))
+            for i in range(cfg.n_layers):
+                e = cfg.experts_at(i)
+                if e:
+                    gate_dims.add((cfg.d_model, e))
+                    expert_dims.add((cfg.d_model, cfg.d_ff))
+        if smax is not None:
+            ex.export_shared(dims, expert_dims, gate_dims, vocab_dims, smax)
+        ex.export_kernel_bench()
+
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(ex.manifest, f, indent=1)
+    n_progs = (sum(len(m["programs"]) for m in ex.manifest["models"].values())
+               + len(ex.manifest["shared"]))
+    print(f"manifest: {n_progs} programs -> {path}")
+
+
+if __name__ == "__main__":
+    main()

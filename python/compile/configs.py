@@ -1,0 +1,178 @@
+"""Model configuration registry — the tiny testbed family (DESIGN.md §4).
+
+Mirrors the paper's Table 1 structurally: a dense base family plus MoE
+variants that add experts on every other feedforward layer, PR-MoE variants
+with a pyramid expert schedule + residual experts, and depth-reduced MoS
+students.  The Rust side has the same presets in ``configs/*.toml``;
+``test_aot_manifest.py`` checks the two stay in sync via the manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one model variant.
+
+    ``experts_schedule[i]`` is the number of experts on layer ``i`` (0 means
+    the layer has a plain dense FFN).  The paper's "350M+MoE-128" pattern —
+    experts on every other feedforward layer — corresponds to nonzero entries
+    at odd indices.  ``residual=True`` gives each MoE layer a fixed dense MLP
+    branch in parallel with the routed expert (Residual-MoE, §4.1.1).
+    """
+
+    name: str
+    vocab_size: int = 512
+    n_layers: int = 4
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 64
+    experts_schedule: tuple = ()  # empty => dense
+    residual: bool = False
+    top2: bool = False
+    capacity_factor: float = 2.0
+    moe_loss_coef: float = 0.01
+    # Distillation (MoS students only)
+    teacher: Optional[str] = None
+    kd_alpha: float = 1.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return any(self.experts_schedule)
+
+    def experts_at(self, layer: int) -> int:
+        if not self.experts_schedule:
+            return 0
+        return self.experts_schedule[layer]
+
+    def capacity(self, n_tokens: int, n_experts: int) -> int:
+        """Expert capacity c_e for a given token count."""
+        import math
+        return max(1, math.ceil(self.capacity_factor * n_tokens / n_experts))
+
+    def num_params(self) -> int:
+        """Exact parameter count (matches init_params)."""
+        V, L, M, F = self.vocab_size, self.n_layers, self.d_model, self.d_ff
+        n = V * M + self.max_seq * M  # tok_emb (tied head) + pos_emb
+        n += 2 * M  # final LN
+        for i in range(L):
+            n += 2 * M + 4 * M * M  # ln1 + wq/wk/wv/wo
+            n += 2 * M  # ln2
+            e = self.experts_at(i)
+            if e == 0:
+                n += M * F + F + F * M + M  # dense FFN
+            else:
+                n += M * e  # gate
+                n += e * (M * F + F + F * M + M)  # stacked experts
+                if self.residual:
+                    n += M * F + F + F * M + M  # fixed residual MLP
+        return n
+
+
+def _every_other(n_layers: int, experts: int) -> tuple:
+    """Experts on every other FFN layer (odd indices), as the paper."""
+    return tuple(experts if i % 2 == 1 else 0 for i in range(n_layers))
+
+
+def _pyramid(n_layers: int, lo: int, hi: int) -> tuple:
+    """Pyramid schedule: MoE on odd layers; the last MoE layer(s) get ``hi``
+    experts, earlier MoE layers get ``lo`` (paper Fig 3 right: deeper layers
+    benefit from more experts)."""
+    sched = []
+    moe_layers = [i for i in range(n_layers) if i % 2 == 1]
+    cut = max(1, len(moe_layers) - max(1, len(moe_layers) // 3))
+    for i in range(n_layers):
+        if i % 2 != 1:
+            sched.append(0)
+        else:
+            sched.append(hi if moe_layers.index(i) >= cut else lo)
+    return tuple(sched)
+
+
+def _first_half(n_layers: int, experts: int) -> tuple:
+    return tuple(
+        experts if (i % 2 == 1 and i < n_layers // 2) else 0
+        for i in range(n_layers))
+
+
+def _second_half(n_layers: int, experts: int) -> tuple:
+    return tuple(
+        experts if (i % 2 == 1 and i >= n_layers // 2) else 0
+        for i in range(n_layers))
+
+
+# ---------------------------------------------------------------------------
+# The registry.  Sizes follow DESIGN.md §4: dense-s is the "350M" analogue,
+# dense-m the "1.3B" (4x activated params via width), dense-l the "6.7B".
+# moe-s-8 is "350M+MoE-128": same base as dense-s, 8 experts on every other
+# FFN layer.  prmoe-s is "350M+PR-MoE-32/64": pyramid 4/8 + residual.
+# mos-s is the depth-reduced PR-MoE student ("+L21+MoS": 4 -> 3 layers).
+# ---------------------------------------------------------------------------
+
+def _registry() -> List[ModelConfig]:
+    L = 4
+    cfgs = [
+        ModelConfig(name="dense-s", n_layers=L, d_model=128, n_heads=4,
+                    d_ff=512),
+        ModelConfig(name="dense-m", n_layers=L, d_model=256, n_heads=8,
+                    d_ff=1024),
+        ModelConfig(name="dense-l", n_layers=6, d_model=384, n_heads=8,
+                    d_ff=1536),
+        ModelConfig(name="moe-s-8", n_layers=L, d_model=128, n_heads=4,
+                    d_ff=512, experts_schedule=_every_other(L, 8)),
+        ModelConfig(name="moe-s-4", n_layers=L, d_model=128, n_heads=4,
+                    d_ff=512, experts_schedule=_every_other(L, 4)),
+        ModelConfig(name="moe-m-8", n_layers=L, d_model=256, n_heads=8,
+                    d_ff=1024, experts_schedule=_every_other(L, 8)),
+        # Fig 2 (left): half-MoE ablations
+        ModelConfig(name="moe-s-8-firsthalf", n_layers=L, d_model=128,
+                    n_heads=4, d_ff=512,
+                    experts_schedule=_first_half(L, 8)),
+        ModelConfig(name="moe-s-8-secondhalf", n_layers=L, d_model=128,
+                    n_heads=4, d_ff=512,
+                    experts_schedule=_second_half(L, 8)),
+        # Fig 2 (right): Top2 vs Residual
+        ModelConfig(name="moe-s-4-top2", n_layers=L, d_model=128, n_heads=4,
+                    d_ff=512, experts_schedule=_every_other(L, 4), top2=True),
+        ModelConfig(name="moe-s-4-residual", n_layers=L, d_model=128,
+                    n_heads=4, d_ff=512, experts_schedule=_every_other(L, 4),
+                    residual=True),
+        # Fig 4: pyramid-only ablation
+        ModelConfig(name="moe-s-pyramid", n_layers=L, d_model=128, n_heads=4,
+                    d_ff=512, experts_schedule=_pyramid(L, 4, 8)),
+        # PR-MoE (§4.1.2): pyramid + residual
+        ModelConfig(name="prmoe-s", n_layers=L, d_model=128, n_heads=4,
+                    d_ff=512, experts_schedule=_pyramid(L, 4, 8),
+                    residual=True),
+        ModelConfig(name="prmoe-m", n_layers=L, d_model=256, n_heads=8,
+                    d_ff=1024, experts_schedule=_pyramid(L, 4, 8),
+                    residual=True),
+        # MoS (§4.2): depth-reduced PR-MoE student distilled from prmoe-s
+        ModelConfig(name="mos-s", n_layers=3, d_model=128, n_heads=4,
+                    d_ff=512, experts_schedule=_pyramid(3, 4, 8),
+                    residual=True, teacher="prmoe-s", kd_alpha=1.0),
+        # Depth-reduced student trained from scratch (Table 5 row 2 analogue)
+        ModelConfig(name="prmoe-s-l3", n_layers=3, d_model=128, n_heads=4,
+                    d_ff=512, experts_schedule=_pyramid(3, 4, 8),
+                    residual=True),
+    ]
+    return cfgs
+
+
+REGISTRY = {c.name: c for c in _registry()}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(
+            f"unknown model {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]

@@ -1,0 +1,116 @@
+"""Grouped expert FFN kernel (Pallas).
+
+The expert computation itself: each expert applies a position-wise
+GeLU MLP to its (capacity-bounded) block of tokens.  On GPU DeepSpeed uses a
+grouped GEMM; the TPU mapping (DESIGN.md §3) is a 3-D grid
+``(expert, token-block, ff-block)`` Pallas matmul whose BlockSpecs express
+the HBM->VMEM schedule the CUDA code expressed with threadblocks:
+
+  * grid axis 0 walks experts — each step streams one expert's weights into
+    VMEM exactly once (the paper's data-locality argument for expert
+    parallelism: fewer experts per device => fewer weight bytes read),
+  * within an expert the (C, M)x(M, F) and (C, F)x(F, M) products are tiled
+    to MXU-shaped (<=128) blocks.
+
+For the tiny testbed dims (C, M, F <= 1024) a single-block-per-expert grid is
+both simpler and faster, so that is the default; ``expert_ffn_tiled`` keeps
+the full 3-D-grid formulation for the VMEM-footprint study in EXPERIMENTS.md
+§Perf.  Both run under ``interpret=True`` on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expert_ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    """One grid step = one expert: (C,M) @ (M,F) -> GeLU -> (F,M)."""
+    x = x_ref[...]  # [C, M] this expert's token block (VMEM)
+    h = jnp.dot(x, w1_ref[...]) + b1_ref[...]  # MXU matmul
+    h = jax.nn.gelu(h)
+    out_ref[...] = (jnp.dot(h, w2_ref[...]) + b2_ref[...]).astype(out_ref.dtype)
+
+
+def expert_ffn(x, w1, b1, w2, b2, *, interpret: bool = True):
+    """Grouped expert FFN: grid over experts, one weight stream per expert.
+
+    Args:
+      x: [E, C, M] scattered token blocks.
+      w1: [E, M, F]; b1: [E, F]; w2: [E, F, M]; b2: [E, M].
+    Returns:
+      [E, C, M].
+    """
+    E, C, M = x.shape
+    F = w1.shape[-1]
+    return pl.pallas_call(
+        _expert_ffn_kernel,
+        grid=(E,),
+        in_specs=[
+            pl.BlockSpec((None, C, M), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, M, F), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, F), lambda e: (e, 0)),
+            pl.BlockSpec((None, F, M), lambda e: (e, 0, 0)),
+            pl.BlockSpec((None, M), lambda e: (e, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, C, M), lambda e: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, M), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+def _ffn_h_kernel(x_ref, w1_ref, b1_ref, h_ref):
+    """Tiled first matmul: out tile [bc, bf] += x tile [bc, M] @ w1 [M, bf]."""
+    h = jnp.dot(x_ref[...], w1_ref[...]) + b1_ref[...]
+    h_ref[...] = jax.nn.gelu(h).astype(h_ref.dtype)
+
+
+def _ffn_o_kernel(h_ref, w2_ref, b2_ref, o_ref):
+    o_ref[...] = (jnp.dot(h_ref[...], w2_ref[...]) + b2_ref[...]).astype(
+        o_ref.dtype)
+
+
+def expert_ffn_tiled(x, w1, b1, w2, b2, *, block_c: int = 128,
+                     block_f: int = 128, interpret: bool = True):
+    """MXU-tiled variant: 3-D grid (expert, token-block, ff-block).
+
+    VMEM working set per grid step (f32): block_c*M + M*block_f + block_c*
+    block_f floats — with block 128 and M 4096 that is ~4.2 MB, comfortably
+    inside a TPU core's ~16 MB VMEM, leaving room for double buffering
+    (pipelined automatically by Pallas across the innermost grid axis).
+    """
+    E, C, M = x.shape
+    F = w1.shape[-1]
+    bc, bf = min(block_c, C), min(block_f, F)
+    assert C % bc == 0 and F % bf == 0, "tile sizes must divide C and F"
+
+    h = pl.pallas_call(
+        _ffn_h_kernel,
+        grid=(E, C // bc, F // bf),
+        in_specs=[
+            pl.BlockSpec((None, bc, M), lambda e, i, j: (e, i, 0)),
+            pl.BlockSpec((None, M, bf), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((None, bf), lambda e, i, j: (e, j)),
+        ],
+        out_specs=pl.BlockSpec((None, bc, bf), lambda e, i, j: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1)
+
+    bm = min(block_f, M)
+    assert M % bm == 0
+    return pl.pallas_call(
+        _ffn_o_kernel,
+        grid=(E, C // bc, M // bm),
+        in_specs=[
+            pl.BlockSpec((None, bc, F), lambda e, i, j: (e, i, 0)),
+            pl.BlockSpec((None, F, bm), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((None, bm), lambda e, i, j: (e, j)),
+        ],
+        out_specs=pl.BlockSpec((None, bc, bm), lambda e, i, j: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, M), x.dtype),
+        interpret=interpret,
+    )(h, w2, b2)

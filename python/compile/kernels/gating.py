@@ -1,0 +1,169 @@
+"""Fused top-k gating kernel (Pallas).
+
+DeepSpeed-MoE §5.4: the conventional gating function is "numerous operations
+to create token-masks, select top-k experts, and perform cumulative-sum ...
+all of which are not only wasteful due to the sparse tensor representation,
+but also extremely slow due to many kernel call invocations".  The paper's
+optimization fuses the whole gating function into a **single kernel** and
+replaces the one-hot mask representation with a **dense token-to-expert
+mapping table**.
+
+This file implements that fused kernel in Pallas.  One ``pallas_call``
+computes, for every token:
+
+  * ``expert_idx[s]``  — the selected expert (top-1; ``top2`` variant emits
+    two tables),
+  * ``gate_prob[s]``   — the softmax probability of that expert,
+  * ``slot[s]``        — the token's position within the expert's capacity
+    queue (the paper's Blelloch-scan cumsum, realized here as a vectorized
+    exclusive prefix sum over the one-hot assignment),
+  * ``keep[s]``        — 1.0 if the token fit under ``capacity``, else 0.0
+    (dropped tokens pass through the residual connection only).
+
+Hardware adaptation (DESIGN.md §3): on GPU the paper parallelizes the cumsum
+with a Blelloch scan across threads; on TPU the whole (S, E) logits tile sits
+in VMEM and the scan is a vector-unit ``cumsum`` along the token axis — one
+kernel launch either way, which is the point being reproduced.
+
+Pallas runs with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the kernel structure is still the TPU structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _top1_gating_kernel(logits_ref, expert_idx_ref, gate_ref, slot_ref,
+                        keep_ref, capacity: int):
+    """Single fused kernel: softmax -> argmax -> capacity cumsum -> tables."""
+    logits = logits_ref[...]  # [S, E] resident in VMEM
+    S, E = logits.shape
+
+    # Numerically stable softmax on the vector unit.
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    ez = jnp.exp(z)
+    probs = ez / jnp.sum(ez, axis=-1, keepdims=True)
+
+    expert_idx = jnp.argmax(probs, axis=-1)  # [S]
+    gate = jnp.max(probs, axis=-1)  # [S] prob of the selected expert
+
+    # One-hot assignment via 2-D iota compare (TPU requires >=2-D iota).
+    eids = jax.lax.broadcasted_iota(jnp.int32, (S, E), 1)
+    onehot = (eids == expert_idx[:, None].astype(jnp.int32)).astype(jnp.int32)
+
+    # Exclusive prefix sum along tokens = position of each token in its
+    # expert's queue.  (Paper: Blelloch scan; here: vector cumsum.)
+    incl = jnp.cumsum(onehot, axis=0)
+    excl = incl - onehot
+    slot = jnp.sum(excl * onehot, axis=-1)  # [S]
+    keep = (slot < capacity) & (jnp.sum(onehot, axis=-1) > 0)
+
+    expert_idx_ref[...] = expert_idx.astype(jnp.int32)
+    gate_ref[...] = gate.astype(logits.dtype)
+    slot_ref[...] = jnp.minimum(slot, capacity).astype(jnp.int32)
+    keep_ref[...] = keep.astype(logits.dtype)
+
+
+def top1_gating(logits, capacity: int, *, interpret: bool = True):
+    """Fused top-1 gating: returns the dense mapping table.
+
+    Args:
+      logits: [S, E] router logits.
+      capacity: expert capacity c_e.
+    Returns:
+      (expert_idx [S] i32, gate_prob [S] f32, slot [S] i32, keep [S] f32).
+      ``slot`` is clamped to ``capacity`` for dropped tokens so it can be used
+      directly as a scatter index into a (capacity+1)-deep staging buffer.
+    """
+    S, E = logits.shape
+    kernel = functools.partial(_top1_gating_kernel, capacity=capacity)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((S,), jnp.int32),
+            jax.ShapeDtypeStruct((S,), logits.dtype),
+            jax.ShapeDtypeStruct((S,), jnp.int32),
+            jax.ShapeDtypeStruct((S,), logits.dtype),
+        ),
+        interpret=interpret,
+    )(logits)
+
+
+def _top2_gating_kernel(logits_ref, expert_idx_ref, gate_ref, slot_ref,
+                        keep_ref, capacity: int):
+    """Fused top-2 gating: two mapping tables, renormalized gate probs.
+
+    Matches ``ref.top2_gating_ref``: second choices queue behind all first
+    choices of the same expert.
+    """
+    logits = logits_ref[...]
+    S, E = logits.shape
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    ez = jnp.exp(z)
+    probs = ez / jnp.sum(ez, axis=-1, keepdims=True)
+
+    idx1 = jnp.argmax(probs, axis=-1)
+    eids = jax.lax.broadcasted_iota(jnp.int32, (S, E), 1)
+    oh1 = (eids == idx1[:, None].astype(jnp.int32)).astype(probs.dtype)
+    probs_wo1 = probs * (1.0 - oh1)
+    idx2 = jnp.argmax(probs_wo1, axis=-1)
+    oh2 = (eids == idx2[:, None].astype(jnp.int32)).astype(probs.dtype)
+
+    g1 = jnp.sum(probs * oh1, axis=-1)
+    g2 = jnp.sum(probs * oh2, axis=-1)
+
+    pos1 = jnp.cumsum(oh1, axis=0) * oh1 - oh1
+    pos2 = (jnp.cumsum(oh2, axis=0) - oh2) + jnp.sum(oh1, axis=0)[None, :]
+    pos2 = pos2 * oh2
+    s1 = jnp.sum(pos1 * oh1, axis=-1)
+    s2 = jnp.sum(pos2 * oh2, axis=-1)
+    keep1 = s1 < capacity
+    keep2 = s2 < capacity
+
+    denom = jnp.maximum(g1 * keep1 + g2 * keep2, 1e-9)
+
+    expert_idx_ref[...] = jnp.stack([idx1, idx2], axis=-1).astype(jnp.int32)
+    gate_ref[...] = (jnp.stack([g1 * keep1, g2 * keep2], axis=-1)
+                     / denom[:, None]).astype(logits.dtype)
+    slot_ref[...] = jnp.minimum(
+        jnp.stack([s1, s2], axis=-1), capacity).astype(jnp.int32)
+    keep_ref[...] = jnp.stack(
+        [keep1, keep2], axis=-1).astype(logits.dtype)
+
+
+def top2_gating(logits, capacity: int, *, interpret: bool = True):
+    """Fused top-2 gating (paper's Top2-MoE ablation).
+
+    Returns (expert_idx [S,2] i32, gate [S,2] f32, slot [S,2] i32,
+    keep [S,2] f32); gates of kept assignments renormalized to sum to 1.
+    """
+    S, E = logits.shape
+    kernel = functools.partial(_top2_gating_kernel, capacity=capacity)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((S, 2), jnp.int32),
+            jax.ShapeDtypeStruct((S, 2), logits.dtype),
+            jax.ShapeDtypeStruct((S, 2), jnp.int32),
+            jax.ShapeDtypeStruct((S, 2), logits.dtype),
+        ),
+        interpret=interpret,
+    )(logits)
+
+
+def load_balance_aux_loss(logits, expert_idx, num_experts: int):
+    """Switch-style auxiliary loss computed from the dense mapping table.
+
+    Kept outside the kernel: it is a training-only quantity and the paper's
+    fused kernel is an inference kernel.  ``aux = E * sum_e f_e * p_e``.
+    """
+    probs = jax.nn.softmax(logits, axis=-1)
+    oh = jax.nn.one_hot(expert_idx, num_experts, dtype=probs.dtype)
+    fraction = jnp.mean(oh, axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(fraction * mean_prob)

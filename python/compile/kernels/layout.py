@@ -1,0 +1,119 @@
+"""Data-layout transformation kernels (Pallas): scatter / gather.
+
+DeepSpeed-MoE §5.4: the two sparse einsums around the expert computation
+(sort tokens by assigned expert id; un-sort and scale by gate probability)
+cost ``S x E x M x c_e`` because (E-1)/E of the multiply-adds are against
+zeros.  The paper implements them "as data layout transformations using the
+mapping table ... reducing the complexity of these operations from
+``S x E x M x c_e`` to ``S x M x c_e``".
+
+These kernels are those data-layout transformations: pure permutations driven
+by the dense ``(expert_idx, slot, keep)`` tables emitted by ``gating.py``.
+
+Hardware adaptation (DESIGN.md §3): the CUDA version is a thread-per-token
+gather.  The Pallas version stages (1, M) token rows through VMEM and keeps
+the mapping table as scalar operands (on real TPU: scalar-prefetch / SMEM) so
+index arithmetic stays off the vector unit.  Dropped tokens are routed to a
+trash slot (row ``capacity``) of a (C+1)-deep staging buffer, which keeps the
+store loop mask-free; the wrapper slices the trash row off.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scatter_kernel(tokens_ref, expert_idx_ref, slot_ref, out_ref):
+    """Permute tokens into [E, C+1, M] expert blocks (row C = trash)."""
+    S, M = tokens_ref.shape
+
+    # Zero-init: capacity slots that receive no token must read as zeros so
+    # the expert FFN sees padded blocks (matches ref scatter semantics).
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    def body(s, _):
+        e = expert_idx_ref[s]
+        c = slot_ref[s]  # already == capacity (trash row) for dropped tokens
+        row = tokens_ref[s, :]
+        pl.store(out_ref, (e, c, pl.dslice(0, M)), row)
+        return 0
+
+    jax.lax.fori_loop(0, S, body, 0)
+
+
+def scatter_tokens(tokens, expert_idx, slot, num_experts: int, capacity: int,
+                   *, interpret: bool = True):
+    """Sort tokens by expert id into dense per-expert blocks.
+
+    Args:
+      tokens: [S, M] activations.
+      expert_idx: [S] i32 from ``top1_gating`` (or one column of top-2).
+      slot: [S] i32; ``capacity`` marks a dropped token.
+    Returns:
+      expert_inputs: [E, C, M] — token ``s`` at ``[expert_idx[s], slot[s]]``.
+    """
+    S, M = tokens.shape
+    out = pl.pallas_call(
+        _scatter_kernel,
+        out_shape=jax.ShapeDtypeStruct(
+            (num_experts, capacity + 1, M), tokens.dtype),
+        interpret=interpret,
+    )(tokens, expert_idx, slot)
+    return out[:, :capacity, :]  # drop the trash row
+
+
+def _gather_kernel(expert_out_ref, expert_idx_ref, slot_ref, gate_ref,
+                   keep_ref, out_ref):
+    """Inverse permutation + gate scaling: [E, C, M] -> [S, M]."""
+    S, M = out_ref.shape
+    C = expert_out_ref.shape[1]
+
+    def body(s, _):
+        e = expert_idx_ref[s]
+        c = jnp.minimum(slot_ref[s], C - 1)  # dropped tokens read garbage...
+        row = pl.load(expert_out_ref, (e, c, pl.dslice(0, M)))
+        scale = gate_ref[s] * keep_ref[s]  # ...but keep==0 zeroes them out
+        pl.store(out_ref, (s, pl.dslice(0, M)), row * scale)
+        return 0
+
+    jax.lax.fori_loop(0, S, body, 0)
+
+
+def gather_tokens(expert_outputs, expert_idx, slot, gate, keep,
+                  *, interpret: bool = True):
+    """Restore original token order and scale by gate probability.
+
+    Dropped tokens (``keep == 0``) produce zero rows — they contribute only
+    through the transformer's residual connection, as in GShard/Switch.
+
+    Args:
+      expert_outputs: [E, C, M]; expert_idx/slot: [S] i32;
+      gate/keep: [S] f32.
+    Returns:
+      tokens: [S, M].
+    """
+    E, C, M = expert_outputs.shape
+    S = expert_idx.shape[0]
+    return pl.pallas_call(
+        _gather_kernel,
+        out_shape=jax.ShapeDtypeStruct((S, M), expert_outputs.dtype),
+        interpret=interpret,
+    )(expert_outputs, expert_idx, slot, gate, keep)
+
+
+def gather_tokens_top2(expert_outputs, expert_idx, slot, gate, keep,
+                       *, interpret: bool = True):
+    """Top-2 combine: sum of the two gathered-and-scaled expert outputs.
+
+    Args:
+      expert_outputs: [E, C, M]; expert_idx/slot: [S, 2]; gate/keep: [S, 2].
+    """
+    a = gather_tokens(expert_outputs, expert_idx[:, 0], slot[:, 0],
+                      gate[:, 0], keep[:, 0], interpret=interpret)
+    b = gather_tokens(expert_outputs, expert_idx[:, 1], slot[:, 1],
+                      gate[:, 1], keep[:, 1], interpret=interpret)
+    return a + b

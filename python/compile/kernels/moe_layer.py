@@ -1,0 +1,85 @@
+"""Fused-kernel MoE layer: the paper's optimized inference data path.
+
+Composes the three §5.4 kernels —
+
+    top1_gating  ->  scatter_tokens  ->  expert_ffn  ->  gather_tokens
+
+— exactly the pipeline DeepSpeed-MoE runs per MoE layer at inference time.
+``moe_layer_fused`` is what the L2 inference programs (``forward_full`` /
+``decode_full`` and the per-layer ``moe_gate`` / ``expert_ffn`` programs used
+by the Rust expert-parallel coordinator) lower into HLO.
+
+The un-fused, one-hot einsum equivalent lives in ``ref.py``; pytest asserts
+bit-level agreement and ``test_kernel_perf.py`` measures the latency ratio.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import gating, layout, expert_mlp
+
+
+def moe_layer_fused(tokens, gate_w, w1, b1, w2, b2, capacity: int,
+                    *, top2: bool = False, interpret: bool = True):
+    """Optimized MoE layer over flattened tokens.
+
+    Args:
+      tokens: [S, M] activations (S = batch x seq after flattening).
+      gate_w: [M, E] router weights.
+      w1/b1/w2/b2: stacked expert FFN parameters ([E, M, F] etc.).
+      capacity: expert capacity c_e.
+    Returns:
+      (output [S, M], aux_loss scalar, expert_idx [S] or [S,2] i32).
+      aux_loss is returned for parity with the training path; at inference the
+      caller ignores it.
+    """
+    E = gate_w.shape[-1]
+    logits = tokens @ gate_w
+
+    if top2:
+        eidx, gate, slot, keep = gating.top2_gating(
+            logits, capacity, interpret=interpret)
+        # Both assignment columns scatter into the same expert blocks; second
+        # choices queue behind first choices (slots are disjoint by
+        # construction, matching ref.top2_gating_ref).
+        x1 = layout.scatter_tokens(tokens, eidx[:, 0], slot[:, 0], E, capacity,
+                                   interpret=interpret)
+        x2 = layout.scatter_tokens(tokens, eidx[:, 1], slot[:, 1], E, capacity,
+                                   interpret=interpret)
+        expert_in = x1 + x2
+        expert_out = expert_mlp.expert_ffn(expert_in, w1, b1, w2, b2,
+                                           interpret=interpret)
+        out = layout.gather_tokens_top2(expert_out, eidx, slot, gate, keep,
+                                        interpret=interpret)
+        aux = gating.load_balance_aux_loss(logits, eidx[:, 0], E)
+        return out, aux, eidx
+
+    eidx, gate, slot, keep = gating.top1_gating(
+        logits, capacity, interpret=interpret)
+    expert_in = layout.scatter_tokens(tokens, eidx, slot, E, capacity,
+                                      interpret=interpret)
+    expert_out = expert_mlp.expert_ffn(expert_in, w1, b1, w2, b2,
+                                       interpret=interpret)
+    out = layout.gather_tokens(expert_out, eidx, slot, gate, keep,
+                               interpret=interpret)
+    aux = gating.load_balance_aux_loss(logits, eidx, E)
+    return out, aux, eidx
+
+
+def residual_moe_layer_fused(tokens, mlp_w1, mlp_b1, mlp_w2, mlp_b2,
+                             gate_w, w1, b1, w2, b2, capacity: int,
+                             *, interpret: bool = True):
+    """Residual-MoE layer (paper §4.1.1 Phenomenon-II, Fig 3 right).
+
+    Every token passes a fixed dense MLP *and* one routed expert; outputs are
+    summed.  Top-2 quality at top-1 communication volume — the routed branch
+    still moves only one expert's worth of tokens through the all-to-all.
+    """
+    h = jnp.dot(tokens, mlp_w1) + mlp_b1
+    h = jax.nn.gelu(h)
+    dense_out = jnp.dot(h, mlp_w2) + mlp_b2
+    moe_out, aux, eidx = moe_layer_fused(
+        tokens, gate_w, w1, b1, w2, b2, capacity, interpret=interpret)
+    return dense_out + moe_out, aux, eidx

@@ -1,0 +1,172 @@
+"""Pure-jnp reference implementation of the MoE data path.
+
+This file serves two roles:
+
+1. **Correctness oracle** — pytest checks the fused Pallas kernels in
+   ``gating.py`` / ``layout.py`` / ``expert_mlp.py`` against these functions
+   (``assert_allclose`` over hypothesis-swept shapes).
+
+2. **The paper's baseline** — DeepSpeed-MoE §5.4 describes the conventional
+   MoE formulation as "highly sparse-dense einsums" over one-hot masks with
+   complexity ``S x E x M x c_e``; the paper's contribution replaces it with a
+   dense token->expert mapping table (``S x M x c_e``).  The functions here
+   implement the einsum formulation verbatim (GShard-style), so the kernel
+   benchmark (`benches/kernel_latency.rs` + `python/tests/test_kernel_perf.py`)
+   can measure the fused-vs-einsum ratio the paper reports (~6x).
+
+All functions are differentiable; the training path of the L2 model uses them
+directly (the paper likewise trains with the standard formulation and applies
+the fused kernels at inference).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def top1_gating_ref(logits, capacity):
+    """Reference top-1 gating with capacity, via one-hot masks and cumsum.
+
+    Args:
+      logits: [S, E] router logits.
+      capacity: int, max tokens per expert (c_e).
+
+    Returns:
+      combine: [S, E, C] float — combine weights (gate prob at the token's
+        (expert, slot) coordinate, 0 elsewhere).  This is the GShard-style
+        sparse "combine tensor" used by the einsum data path.
+      dispatch: [S, E, C] bool — one-hot dispatch mask.
+      aux_loss: scalar load-balancing auxiliary loss (Switch-style):
+        E * sum_e (fraction_tokens_e * mean_prob_e).
+      expert_idx: [S] int32 — argmax expert per token (for stats/tests).
+    """
+    S, E = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    expert_idx = jnp.argmax(probs, axis=-1)
+    mask = jax.nn.one_hot(expert_idx, E, dtype=logits.dtype)  # [S, E]
+
+    # Switch Transformer aux loss uses the *pre-capacity* assignment
+    # fractions (dropping happens after the routing decision).
+    fraction = jnp.mean(mask, axis=0)  # [E] fraction of tokens per expert
+    mean_prob = jnp.mean(probs, axis=0)  # [E]
+    aux_loss = E * jnp.sum(fraction * mean_prob)
+
+    # Position of each token within its expert's queue (exclusive cumsum).
+    position_in_expert = jnp.cumsum(mask, axis=0) * mask - mask  # [S, E]
+    keep = (position_in_expert < capacity) & (mask > 0)  # [S, E] bool
+    mask = mask * keep.astype(mask.dtype)
+
+    gate = jnp.sum(probs * mask, axis=-1)  # [S] prob of kept assignment
+    slot = jnp.sum(position_in_expert * mask, axis=-1).astype(jnp.int32)  # [S]
+
+    slot_oh = jax.nn.one_hot(slot, capacity, dtype=logits.dtype)  # [S, C]
+    dispatch = (mask[:, :, None] * slot_oh[:, None, :]) > 0  # [S, E, C]
+    combine = gate[:, None, None] * dispatch.astype(logits.dtype)
+    return combine, dispatch, aux_loss, expert_idx
+
+
+def top2_gating_ref(logits, capacity):
+    """Reference top-2 gating (paper's Top2-MoE ablation, Fig 2 right).
+
+    Returns combine/dispatch of shape [S, E, C] plus aux loss.  Gate values of
+    the two selected experts are renormalized to sum to 1.
+    """
+    S, E = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    idx1 = jnp.argmax(probs, axis=-1)
+    mask1 = jax.nn.one_hot(idx1, E, dtype=logits.dtype)
+    probs_wo1 = probs * (1.0 - mask1)
+    idx2 = jnp.argmax(probs_wo1, axis=-1)
+    mask2 = jax.nn.one_hot(idx2, E, dtype=logits.dtype)
+
+    # Pre-capacity aux loss (first-choice fractions), as in top-1.
+    fraction = jnp.mean(mask1, axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(fraction * mean_prob)
+
+    # Slots: first-choice tokens occupy earlier slots (GShard ordering);
+    # second choices queue behind all first choices of that expert.
+    pos1 = jnp.cumsum(mask1, axis=0) * mask1 - mask1
+    pos2 = (jnp.cumsum(mask2, axis=0) - mask2) + jnp.sum(mask1, axis=0)[None, :]
+    pos2 = pos2 * mask2
+
+    keep1 = (pos1 < capacity) & (mask1 > 0)
+    keep2 = (pos2 < capacity) & (mask2 > 0)
+    mask1 = mask1 * keep1.astype(mask1.dtype)
+    mask2 = mask2 * keep2.astype(mask2.dtype)
+
+    g1 = jnp.sum(probs * mask1, axis=-1)
+    g2 = jnp.sum(probs * mask2, axis=-1)
+    denom = jnp.maximum(g1 + g2, 1e-9)
+    g1, g2 = g1 / denom, g2 / denom
+
+    s1 = jnp.sum(pos1 * mask1, axis=-1).astype(jnp.int32)
+    s2 = jnp.sum(pos2 * mask2, axis=-1).astype(jnp.int32)
+    d1 = (mask1[:, :, None] * jax.nn.one_hot(s1, capacity)[:, None, :]) > 0
+    d2 = (mask2[:, :, None] * jax.nn.one_hot(s2, capacity)[:, None, :]) > 0
+    combine = (
+        g1[:, None, None] * d1.astype(logits.dtype)
+        + g2[:, None, None] * d2.astype(logits.dtype)
+    )
+    dispatch = d1 | d2
+    return combine, dispatch, aux_loss, jnp.stack([idx1, idx2], axis=-1)
+
+
+def scatter_tokens_ref(tokens, dispatch):
+    """Sparse-einsum token dispatch (the paper's baseline data path).
+
+    ``S x E x M x c_e`` complexity: every token multiplies against every
+    (expert, slot) pair even though at most one is nonzero.
+
+    Args:
+      tokens: [S, M]; dispatch: [S, E, C] bool.
+    Returns:
+      expert_inputs: [E, C, M].
+    """
+    return jnp.einsum("sm,sec->ecm", tokens, dispatch.astype(tokens.dtype))
+
+
+def gather_tokens_ref(expert_outputs, combine):
+    """Sparse-einsum un-dispatch + gate scaling (baseline data path).
+
+    Args:
+      expert_outputs: [E, C, M]; combine: [S, E, C].
+    Returns:
+      tokens: [S, M] = sum over (e, c) of combine * expert_outputs.
+    """
+    return jnp.einsum("ecm,sec->sm", expert_outputs, combine)
+
+
+def expert_ffn_ref(x, w1, b1, w2, b2):
+    """Per-expert position-wise FFN (GeLU), batched over experts.
+
+    Args:
+      x: [E, C, M]; w1: [E, M, F]; b1: [E, F]; w2: [E, F, M]; b2: [E, M].
+    Returns:
+      [E, C, M].
+    """
+    h = jnp.einsum("ecm,emf->ecf", x, w1) + b1[:, None, :]
+    h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efm->ecm", h, w2) + b2[:, None, :]
+
+
+def moe_layer_ref(tokens, gate_w, w1, b1, w2, b2, capacity, top2=False):
+    """Full reference MoE layer: gate -> scatter -> expert FFN -> gather.
+
+    Args:
+      tokens: [S, M] flattened token activations.
+      gate_w: [M, E] router weights.
+      w1/b1/w2/b2: stacked expert FFN params (see expert_ffn_ref).
+    Returns:
+      (output [S, M], aux_loss scalar).
+    """
+    logits = tokens @ gate_w
+    if top2:
+        combine, dispatch, aux, _ = top2_gating_ref(logits, capacity)
+    else:
+        combine, dispatch, aux, _ = top1_gating_ref(logits, capacity)
+    expert_in = scatter_tokens_ref(tokens, dispatch)
+    expert_out = expert_ffn_ref(expert_in, w1, b1, w2, b2)
+    return gather_tokens_ref(expert_out, combine), aux

@@ -1,0 +1,447 @@
+"""L2 — the GPT-style MoE model family (JAX, build-time only).
+
+Implements the paper's model zoo (§3.1, §4): dense GPT, standard MoE with
+top-1 gating on every other FFN layer, Pyramid-MoE, Residual-MoE, PR-MoE and
+depth-reduced MoS students — all from one ``ModelConfig``.
+
+Two compute paths:
+
+* **Inference path** (``use_pallas=True``) — MoE layers run the fused §5.4
+  Pallas kernels (``kernels.moe_layer``).  This is what the exported
+  ``prefill`` / ``decode`` programs lower.
+* **Training path** (``use_pallas=False``) — MoE layers run the
+  differentiable sparse-einsum reference (``kernels.ref``), matching how
+  DeepSpeed trains (the fused kernels are inference kernels).
+
+Parameters are a *flat ordered list* of named arrays (``param_specs``); the
+same ordering is recorded in the AOT manifest and mirrored by the Rust
+checkpoint loader, so a checkpoint written by the Rust training driver reads
+back here and vice versa.
+
+Everything here is lowered once by ``aot.py``; no Python at serving time.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import moe_layer as k_moe
+from .kernels import ref as k_ref
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic flat parameter layout: list of (name, shape).
+
+    The order here *is* the ABI between Python and Rust: exported programs
+    take parameters positionally in exactly this order, and checkpoints store
+    them contiguously in this order.
+    """
+    M, F, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (V, M)),
+        ("pos_emb", (cfg.max_seq, M)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1.g", (M,)), (p + "ln1.b", (M,)),
+            (p + "attn.wq", (M, M)), (p + "attn.wk", (M, M)),
+            (p + "attn.wv", (M, M)), (p + "attn.wo", (M, M)),
+            (p + "ln2.g", (M,)), (p + "ln2.b", (M,)),
+        ]
+        E = cfg.experts_at(i)
+        if E == 0:
+            specs += [
+                (p + "mlp.w1", (M, F)), (p + "mlp.b1", (F,)),
+                (p + "mlp.w2", (F, M)), (p + "mlp.b2", (M,)),
+            ]
+        else:
+            specs += [(p + "moe.gate", (M, E))]
+            specs += [
+                (p + "moe.w1", (E, M, F)), (p + "moe.b1", (E, F)),
+                (p + "moe.w2", (E, F, M)), (p + "moe.b2", (E, M)),
+            ]
+            if cfg.residual:
+                specs += [
+                    (p + "moe.res.w1", (M, F)), (p + "moe.res.b1", (F,)),
+                    (p + "moe.res.w2", (F, M)), (p + "moe.res.b2", (M,)),
+                ]
+    specs += [("lnf.g", (M,)), ("lnf.b", (M,))]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """GPT-2-style init over the flat layout (numpy RNG: reproducible)."""
+    rng = np.random.RandomState(seed)
+    out = []
+    scale = 0.02
+    resid_scale = scale / math.sqrt(2 * cfg.n_layers)
+    for name, shape in param_specs(cfg):
+        if name.endswith((".g",)):
+            a = np.ones(shape, np.float32)
+        elif name.endswith((".b", ".b1", ".b2")) and "emb" not in name:
+            a = np.zeros(shape, np.float32)
+        elif name.endswith(("attn.wo", ".w2")):
+            a = rng.randn(*shape).astype(np.float32) * resid_scale
+        else:
+            a = rng.randn(*shape).astype(np.float32) * scale
+        out.append(jnp.asarray(a))
+    return out
+
+
+def params_dict(cfg: ModelConfig, flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return {name: arr for (name, _), arr in zip(param_specs(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_heads):
+    B, S, M = x.shape
+    return x.reshape(B, S, n_heads, M // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    B, H, S, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+
+
+def attention_prefill(h, p, prefix, cfg: ModelConfig):
+    """Causal self-attention over the whole prompt; returns (out, k, v)."""
+    x = layer_norm(h, p[prefix + "ln1.g"], p[prefix + "ln1.b"])
+    q = _split_heads(x @ p[prefix + "attn.wq"], cfg.n_heads)
+    k = _split_heads(x @ p[prefix + "attn.wk"], cfg.n_heads)
+    v = _split_heads(x @ p[prefix + "attn.wv"], cfg.n_heads)
+    S = h.shape[1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(causal[None, None], scores, -1e9)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = _merge_heads(jnp.einsum("bhqk,bhkd->bhqd", att, v))
+    return h + out @ p[prefix + "attn.wo"], k, v
+
+
+def attention_decode(h, p, prefix, cfg: ModelConfig, k_cache, v_cache, pos):
+    """One-token attention against the KV cache.
+
+    Args:
+      h: [B, 1, M]; k_cache/v_cache: [B, H, Smax, hd]; pos: [B] i32 — the
+        write position (= current sequence length) per batch lane.
+    Returns:
+      (h' [B,1,M], k_cache', v_cache').
+    """
+    B = h.shape[0]
+    Smax = k_cache.shape[2]
+    x = layer_norm(h, p[prefix + "ln1.g"], p[prefix + "ln1.b"])
+    q = _split_heads(x @ p[prefix + "attn.wq"], cfg.n_heads)  # [B,H,1,hd]
+    k_new = _split_heads(x @ p[prefix + "attn.wk"], cfg.n_heads)
+    v_new = _split_heads(x @ p[prefix + "attn.wv"], cfg.n_heads)
+
+    # Per-lane cache write at pos[b] via one-hot (batch lanes differ).
+    sel = jax.nn.one_hot(pos, Smax, dtype=h.dtype)  # [B, Smax]
+    sel4 = sel[:, None, :, None]  # [B,1,Smax,1]
+    k_cache = k_cache * (1.0 - sel4) + k_new * sel4
+    v_cache = v_cache * (1.0 - sel4) + v_new * sel4
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_cache) / math.sqrt(cfg.head_dim)
+    idx = jnp.arange(Smax)[None, :]  # [1, Smax]
+    valid = idx <= pos[:, None]  # [B, Smax]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e9)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = _merge_heads(jnp.einsum("bhqk,bhkd->bhqd", att, v_cache))
+    return h + out @ p[prefix + "attn.wo"], k_cache, v_cache
+
+
+def dense_ffn(h, p, prefix):
+    x = layer_norm(h, p[prefix + "ln2.g"], p[prefix + "ln2.b"])
+    x = jax.nn.gelu(x @ p[prefix + "mlp.w1"] + p[prefix + "mlp.b1"])
+    return h + (x @ p[prefix + "mlp.w2"] + p[prefix + "mlp.b2"])
+
+
+def moe_ffn(h, p, prefix, cfg: ModelConfig, n_experts: int, capacity: int,
+            use_pallas: bool):
+    """MoE FFN sublayer (standard / residual), both compute paths.
+
+    Returns (h', aux_loss).
+    """
+    B, S, M = h.shape
+    x = layer_norm(h, p[prefix + "ln2.g"], p[prefix + "ln2.b"])
+    flat = x.reshape(B * S, M)
+    gw = p[prefix + "moe.gate"]
+    ew = (p[prefix + "moe.w1"], p[prefix + "moe.b1"],
+          p[prefix + "moe.w2"], p[prefix + "moe.b2"])
+    if use_pallas:
+        out, aux, _ = k_moe.moe_layer_fused(
+            flat, gw, *ew, capacity, top2=cfg.top2)
+    else:
+        out, aux = k_ref.moe_layer_ref(
+            flat, gw, *ew, capacity, top2=cfg.top2)
+    if cfg.residual:
+        r = jax.nn.gelu(flat @ p[prefix + "moe.res.w1"]
+                        + p[prefix + "moe.res.b1"])
+        out = out + (r @ p[prefix + "moe.res.w2"] + p[prefix + "moe.res.b2"])
+    return h + out.reshape(B, S, M), aux
+
+
+# ---------------------------------------------------------------------------
+# Full model programs
+# ---------------------------------------------------------------------------
+
+def forward(flat_params, tokens, cfg: ModelConfig, use_pallas: bool,
+            full_capacity: bool = False):
+    """Full forward over [B, S] tokens -> (logits [B,S,V], aux_sum).
+
+    ``full_capacity=True`` (inference) sizes every expert queue to B*S so no
+    token is ever dropped; ``False`` (training) uses cfg.capacity_factor,
+    which is where the paper's capacity/communication trade-offs live.
+    """
+    p = params_dict(cfg, flat_params)
+    B, S = tokens.shape
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, :S, :]
+    aux_sum = jnp.zeros((), jnp.float32)
+    for i in range(cfg.n_layers):
+        prefix = f"layer{i}."
+        h, _, _ = attention_prefill(h, p, prefix, cfg)
+        E = cfg.experts_at(i)
+        if E == 0:
+            h = dense_ffn(h, p, prefix)
+        else:
+            cap = B * S if full_capacity else cfg.capacity(B * S, E)
+            h, aux = moe_ffn(h, p, prefix, cfg, E, cap, use_pallas)
+            aux_sum = aux_sum + aux
+    h = layer_norm(h, p["lnf.g"], p["lnf.b"])
+    logits = h @ p["tok_emb"].T  # tied LM head
+    return logits, aux_sum
+
+
+def prefill(flat_params, tokens, cfg: ModelConfig, use_pallas: bool = True):
+    """Prefill program: logits + stacked KV caches sized to max_seq.
+
+    Returns (logits [B,S,V], k_caches [L,B,H,Smax,hd], v_caches [...]).
+    """
+    p = params_dict(cfg, flat_params)
+    B, S = tokens.shape
+    Smax = cfg.max_seq
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, :S, :]
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        prefix = f"layer{i}."
+        h, k, v = attention_prefill(h, p, prefix, cfg)
+        pad = Smax - S
+        ks.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        vs.append(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        E = cfg.experts_at(i)
+        if E == 0:
+            h = dense_ffn(h, p, prefix)
+        else:
+            # Inference never drops tokens: worst-case capacity (all tokens
+            # on one expert).  Training uses cfg.capacity_factor instead.
+            h, _ = moe_ffn(h, p, prefix, cfg, E, B * S, use_pallas)
+    h = layer_norm(h, p["lnf.g"], p["lnf.b"])
+    logits = h @ p["tok_emb"].T
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(flat_params, token, k_caches, v_caches, pos,
+                cfg: ModelConfig, use_pallas: bool = True):
+    """Single decode step program.
+
+    Args:
+      token: [B] i32 current tokens; k/v_caches: [L,B,H,Smax,hd];
+      pos: [B] i32 write positions (current lengths).
+    Returns:
+      (logits [B,V], k_caches', v_caches').
+    """
+    p = params_dict(cfg, flat_params)
+    B = token.shape[0]
+    h = p["tok_emb"][token][:, None, :] + p["pos_emb"][pos][:, None, :]
+    new_ks, new_vs = [], []
+    for i in range(cfg.n_layers):
+        prefix = f"layer{i}."
+        h, k, v = attention_decode(h, p, prefix, cfg,
+                                   k_caches[i], v_caches[i], pos)
+        new_ks.append(k)
+        new_vs.append(v)
+        E = cfg.experts_at(i)
+        if E == 0:
+            h = dense_ffn(h, p, prefix)
+        else:
+            # Worst-case capacity: decode never drops tokens.
+            h, _ = moe_ffn(h, p, prefix, cfg, E, B, use_pallas)
+    h = layer_norm(h, p["lnf.g"], p["lnf.b"])
+    logits = (h @ p["tok_emb"].T)[:, 0, :]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+# ---------------------------------------------------------------------------
+# Losses / training
+# ---------------------------------------------------------------------------
+
+def lm_loss(flat_params, batch, cfg: ModelConfig):
+    """Next-token CE + MoE aux loss.  batch: [B, S+1] i32."""
+    inputs, targets = batch[:, :-1], batch[:, 1:]
+    logits, aux = forward(flat_params, inputs, cfg, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+    return ce + cfg.moe_loss_coef * aux, (ce, aux)
+
+
+def distill_loss(flat_params, batch, teacher_logits, kd_alpha,
+                 cfg: ModelConfig):
+    """Staged-KD objective (§4.2.1, Eq. 1): CE + alpha * KL(student||teacher).
+
+    ``kd_alpha`` is a runtime scalar input so the Rust staged-KD controller
+    can anneal/stop KD without recompiling (set 0 after the staging step).
+    """
+    inputs, targets = batch[:, :-1], batch[:, 1:]
+    logits, aux = forward(flat_params, inputs, cfg, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+    t_logp = jax.nn.log_softmax(teacher_logits, axis=-1)
+    kl = jnp.sum(jnp.exp(t_logp) * (t_logp - logp), axis=-1).mean()
+    return ce + kd_alpha * kl + cfg.moe_loss_coef * aux, (ce, kl)
+
+
+def adam_update(flat_params, flat_m, flat_v, grads, step, lr):
+    """Adam with bias correction; step is the 1-based step number (i32)."""
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_p, new_m, new_v = [], [], []
+    for pp, m, v, g in zip(flat_params, flat_m, flat_v, grads):
+        m = ADAM_B1 * m + (1 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1 - ADAM_B2) * (g * g)
+        mh = m / bc1
+        vh = v / bc2
+        new_p.append(pp - lr * mh / (jnp.sqrt(vh) + ADAM_EPS))
+        new_m.append(m)
+        new_v.append(v)
+    return new_p, new_m, new_v
+
+
+def train_step(flat_params, flat_m, flat_v, batch, step, lr,
+               cfg: ModelConfig):
+    """Fused train step: grads + Adam.  All inputs/outputs flat arrays.
+
+    Returns (new_params, new_m, new_v, loss, ce, aux).
+    """
+    (loss, (ce, aux)), grads = jax.value_and_grad(
+        lambda ps: lm_loss(ps, batch, cfg), has_aux=True)(flat_params)
+    new_p, new_m, new_v = adam_update(flat_params, flat_m, flat_v, grads,
+                                      step, lr)
+    return new_p, new_m, new_v, loss, ce, aux
+
+
+def distill_step(flat_params, flat_m, flat_v, batch, teacher_logits,
+                 kd_alpha, step, lr, cfg: ModelConfig):
+    """Fused distillation step (student update given teacher logits)."""
+    (loss, (ce, kl)), grads = jax.value_and_grad(
+        lambda ps: distill_loss(ps, batch, teacher_logits, kd_alpha, cfg),
+        has_aux=True)(flat_params)
+    new_p, new_m, new_v = adam_update(flat_params, flat_m, flat_v, grads,
+                                      step, lr)
+    return new_p, new_m, new_v, loss, ce, kl
+
+
+def eval_loss(flat_params, batch, cfg: ModelConfig):
+    """Validation CE (no aux) over [B, S+1] token batch."""
+    inputs, targets = batch[:, :-1], batch[:, 1:]
+    logits, _ = forward(flat_params, inputs, cfg, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+
+
+def teacher_logits_fn(flat_params, batch, cfg: ModelConfig):
+    """Teacher forward for KD: [B, S+1] batch -> logits over inputs."""
+    logits, _ = forward(flat_params, batch[:, :-1], cfg, use_pallas=False)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Per-layer programs for the disaggregated expert-parallel serving path
+# (the Rust coordinator composes these, inserting all-to-all between them).
+# ---------------------------------------------------------------------------
+
+def prog_embed(tok_emb, pos_emb, tokens, pos0):
+    """tokens [B,S] + per-lane start positions pos0 [B] -> h [B,S,M]."""
+    B, S = tokens.shape
+    positions = pos0[:, None] + jnp.arange(S)[None, :]
+    return tok_emb[tokens] + pos_emb[positions]
+
+
+def prog_attn_prefill(h, ln_g, ln_b, wq, wk, wv, wo, n_heads: int):
+    """One layer's attention sublayer over a full prompt (shared across
+    layers: weights are inputs)."""
+    cfg_like = type("C", (), {"n_heads": n_heads,
+                              "head_dim": h.shape[-1] // n_heads})
+    p = {"x.ln1.g": ln_g, "x.ln1.b": ln_b, "x.attn.wq": wq, "x.attn.wk": wk,
+         "x.attn.wv": wv, "x.attn.wo": wo}
+    return attention_prefill(h, p, "x.", cfg_like)
+
+
+def prog_attn_decode(h, ln_g, ln_b, wq, wk, wv, wo, k_cache, v_cache, pos,
+                     n_heads: int):
+    cfg_like = type("C", (), {"n_heads": n_heads,
+                              "head_dim": h.shape[-1] // n_heads})
+    p = {"x.ln1.g": ln_g, "x.ln1.b": ln_b, "x.attn.wq": wq, "x.attn.wk": wk,
+         "x.attn.wv": wv, "x.attn.wo": wo}
+    return attention_decode(h, p, "x.", cfg_like, k_cache, v_cache, pos)
+
+
+def prog_dense_ffn(h, ln_g, ln_b, w1, b1, w2, b2):
+    """One layer's dense FFN sublayer (pre-LN + residual add inside)."""
+    p = {"x.ln2.g": ln_g, "x.ln2.b": ln_b, "x.mlp.w1": w1, "x.mlp.b1": b1,
+         "x.mlp.w2": w2, "x.mlp.b2": b2}
+    return dense_ffn(h, p, "x.")
+
+
+def prog_gate(h, ln_g, ln_b, gate_w):
+    """MoE gate for the disaggregated path: returns (ln_h flat [T,M],
+    probs [T,E]).  Top-1 selection + capacity assignment happen in the Rust
+    coordinator (it needs the routing decision to drive the all-to-all)."""
+    B, S, M = h.shape
+    x = layer_norm(h, ln_g, ln_b).reshape(B * S, M)
+    logits = x @ gate_w
+    return x, jax.nn.softmax(logits, axis=-1)
+
+
+def prog_expert_ffn(x, w1, b1, w2, b2):
+    """One expert's FFN over its gathered token block [C, M] (no residual:
+    the coordinator combines outputs host-side, §5.4 data-layout step)."""
+    return (jax.nn.gelu(x @ w1 + b1)) @ w2 + b2
+
+
+def prog_residual_branch(x, w1, b1, w2, b2):
+    """Fixed dense branch of Residual-MoE over flat tokens [T, M]."""
+    return (jax.nn.gelu(x @ w1 + b1)) @ w2 + b2
+
+
+def prog_combine(h, expert_out, gate):
+    """h [B,S,M] + gate-scaled expert outputs (flat [T,M]) -> h'."""
+    B, S, M = h.shape
+    return h + (expert_out * gate[:, None]).reshape(B, S, M)
+
+
+def prog_lm_head(h, ln_g, ln_b, tok_emb):
+    """Final LN + tied head over the last position: h [B,M] -> logits."""
+    x = layer_norm(h, ln_g, ln_b)
+    return x @ tok_emb.T

@@ -1,0 +1,119 @@
+"""Manifest/ABI consistency: the exported artifacts must describe exactly
+what the Rust side will load.  Skipped when `make artifacts` has not run."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, configs, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_every_registry_model_exported(manifest):
+    for name in configs.REGISTRY:
+        assert name in manifest["models"], name
+
+
+def test_param_layout_matches_registry(manifest):
+    for name, entry in manifest["models"].items():
+        cfg = configs.get(name)
+        specs = model.param_specs(cfg)
+        assert len(entry["params"]) == len(specs), name
+        for got, (want_name, want_shape) in zip(entry["params"], specs):
+            assert got["name"] == want_name
+            assert tuple(got["shape"]) == tuple(want_shape)
+        assert entry["config"]["num_params"] == cfg.num_params()
+
+
+def test_all_program_files_exist(manifest):
+    count = 0
+    for entry in manifest["models"].values():
+        for prog in entry["programs"].values():
+            path = os.path.join(ART, prog["file"])
+            assert os.path.exists(path), path
+            count += 1
+    for prog in manifest["shared"].values():
+        assert os.path.exists(os.path.join(ART, prog["file"]))
+        count += 1
+    assert count > 100  # the full export is substantial
+
+
+def test_checkpoint_sizes_match_meta(manifest):
+    for name, entry in manifest["models"].items():
+        d = os.path.join(ART, entry["checkpoint"])
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        size = os.path.getsize(os.path.join(d, "params.bin"))
+        assert size == meta["total_elems"] * 4, name
+        assert meta["model"] == name
+        # offsets are contiguous and ordered
+        off = 0
+        for p in meta["params"]:
+            assert p["offset"] == off
+            off += p["nelems"]
+        assert off == meta["total_elems"]
+
+
+def test_train_program_arity(manifest):
+    for name, entry in manifest["models"].items():
+        n = len(entry["params"])
+        ts = entry["programs"].get("train_step")
+        if ts is None:
+            continue
+        # params + m + v + batch + step + lr
+        assert len(ts["inputs"]) == 3 * n + 3, name
+        # params' + m' + v' + loss + ce + aux
+        assert len(ts["outputs"]) == 3 * n + 3, name
+
+
+def test_serve_program_shapes(manifest):
+    for name in aot.SERVE_MODELS:
+        entry = manifest["models"][name]
+        cfg = entry["config"]
+        for b in aot.DECODE_BATCH_SIZES:
+            dec = entry["programs"][f"decode_b{b}"]
+            # last four inputs: token, k, v, pos
+            tok, k, v, pos = dec["inputs"][-4:]
+            assert tok["shape"] == [b]
+            assert k["shape"] == [cfg["n_layers"], b, cfg["n_heads"],
+                                  cfg["max_seq"],
+                                  cfg["d_model"] // cfg["n_heads"]]
+            assert pos["shape"] == [b]
+            logits = dec["outputs"][0]
+            assert logits["shape"] == [b, cfg["vocab_size"]]
+
+
+def test_hlo_files_are_text(manifest):
+    entry = next(iter(manifest["models"].values()))
+    prog = next(iter(entry["programs"].values()))
+    with open(os.path.join(ART, prog["file"])) as f:
+        head = f.read(200)
+    assert head.startswith("HloModule"), "interchange must be HLO text"
+
+
+def test_initial_checkpoint_statistics(manifest):
+    """Init follows the documented scheme (unit LN gains, ~0.02 std)."""
+    entry = manifest["models"]["dense-s"]
+    d = os.path.join(ART, entry["checkpoint"])
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.fromfile(os.path.join(d, "params.bin"), dtype="<f4")
+    by_name = {p["name"]: (p["offset"], p["nelems"]) for p in meta["params"]}
+    off, n = by_name["layer0.ln1.g"]
+    assert np.all(data[off:off + n] == 1.0)
+    off, n = by_name["tok_emb"]
+    emb = data[off:off + n]
+    assert 0.01 < emb.std() < 0.03
+    assert abs(float(emb.mean())) < 5e-3

@@ -1,0 +1,129 @@
+"""Grouped expert FFN kernel vs reference (plain + tiled variants)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import expert_mlp, moe_layer, ref
+
+
+def _params(rng, e, m, f):
+    return (
+        jnp.asarray(rng.randn(e, m, f).astype(np.float32) * 0.1),
+        jnp.asarray(rng.randn(e, f).astype(np.float32) * 0.1),
+        jnp.asarray(rng.randn(e, f, m).astype(np.float32) * 0.1),
+        jnp.asarray(rng.randn(e, m).astype(np.float32) * 0.1),
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    e=st.integers(min_value=1, max_value=8),
+    c=st.integers(min_value=1, max_value=16),
+    m=st.sampled_from([4, 8, 16]),
+    f=st.sampled_from([8, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_expert_ffn_matches_ref(e, c, m, f, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(e, c, m).astype(np.float32))
+    w1, b1, w2, b2 = _params(rng, e, m, f)
+    got = expert_mlp.expert_ffn(x, w1, b1, w2, b2)
+    want = ref.expert_ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    e=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**16),
+    bc=st.sampled_from([2, 4, 8]),
+    bf=st.sampled_from([8, 16]),
+)
+def test_expert_ffn_tiled_matches_plain(e, seed, bc, bf):
+    c, m, f = 8, 16, 16  # divisible by all sampled tile sizes
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(e, c, m).astype(np.float32))
+    w1, b1, w2, b2 = _params(rng, e, m, f)
+    plain = expert_mlp.expert_ffn(x, w1, b1, w2, b2)
+    tiled = expert_mlp.expert_ffn_tiled(x, w1, b1, w2, b2,
+                                        block_c=bc, block_f=bf)
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(plain),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_experts_are_independent():
+    """Changing expert j's weights must not change expert i's output."""
+    rng = np.random.RandomState(5)
+    e, c, m, f = 4, 4, 8, 16
+    x = jnp.asarray(rng.randn(e, c, m).astype(np.float32))
+    w1, b1, w2, b2 = _params(rng, e, m, f)
+    base = np.asarray(expert_mlp.expert_ffn(x, w1, b1, w2, b2))
+    w1_mut = w1.at[2].set(w1[2] * 3.0)
+    mut = np.asarray(expert_mlp.expert_ffn(x, w1_mut, b1, w2, b2))
+    for i in range(e):
+        if i == 2:
+            assert not np.allclose(mut[i], base[i])
+        else:
+            np.testing.assert_array_equal(mut[i], base[i])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(min_value=2, max_value=32),
+    e=st.integers(min_value=2, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_full_fused_layer_matches_ref(s, e, seed):
+    m, f = 8, 16
+    cap = max(1, s // e)
+    rng = np.random.RandomState(seed)
+    tokens = jnp.asarray(rng.randn(s, m).astype(np.float32))
+    gw = jnp.asarray(rng.randn(m, e).astype(np.float32) * 0.1)
+    w1, b1, w2, b2 = _params(rng, e, m, f)
+    got, aux_g, _ = moe_layer.moe_layer_fused(tokens, gw, w1, b1, w2, b2, cap)
+    want, aux_w = ref.moe_layer_ref(tokens, gw, w1, b1, w2, b2, cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(aux_g), float(aux_w), rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.integers(min_value=4, max_value=24),
+    e=st.integers(min_value=3, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_full_fused_layer_top2_matches_ref(s, e, seed):
+    m, f = 8, 16
+    cap = max(2, (2 * s) // e)
+    rng = np.random.RandomState(seed)
+    tokens = jnp.asarray(rng.randn(s, m).astype(np.float32))
+    gw = jnp.asarray(rng.randn(m, e).astype(np.float32) * 0.1)
+    w1, b1, w2, b2 = _params(rng, e, m, f)
+    got, _, _ = moe_layer.moe_layer_fused(tokens, gw, w1, b1, w2, b2, cap,
+                                          top2=True)
+    want, _ = ref.moe_layer_ref(tokens, gw, w1, b1, w2, b2, cap, top2=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_residual_moe_layer():
+    """Residual-MoE = dense MLP branch + routed expert branch."""
+    rng = np.random.RandomState(9)
+    s, e, m, f = 16, 4, 8, 16
+    tokens = jnp.asarray(rng.randn(s, m).astype(np.float32))
+    gw = jnp.asarray(rng.randn(m, e).astype(np.float32) * 0.1)
+    w1, b1, w2, b2 = _params(rng, e, m, f)
+    mw1 = jnp.asarray(rng.randn(m, f).astype(np.float32) * 0.1)
+    mb1 = jnp.asarray(rng.randn(f).astype(np.float32) * 0.1)
+    mw2 = jnp.asarray(rng.randn(f, m).astype(np.float32) * 0.1)
+    mb2 = jnp.asarray(rng.randn(m).astype(np.float32) * 0.1)
+    out, aux, _ = moe_layer.residual_moe_layer_fused(
+        tokens, mw1, mb1, mw2, mb2, gw, w1, b1, w2, b2, s)
+    import jax
+    dense = jnp.dot(jax.nn.gelu(jnp.dot(tokens, mw1) + mb1), mw2) + mb2
+    moe, _ = ref.moe_layer_ref(tokens, gw, w1, b1, w2, b2, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense + moe),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,100 @@
+"""Scatter/gather layout kernels vs sparse-einsum reference."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gating, layout, ref
+
+
+def _setup(seed, s, e, m, cap):
+    rng = np.random.RandomState(seed)
+    logits = jnp.asarray(rng.randn(s, e).astype(np.float32))
+    tokens = jnp.asarray(rng.randn(s, m).astype(np.float32))
+    return logits, tokens
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.integers(min_value=1, max_value=48),
+    e=st.integers(min_value=2, max_value=8),
+    m=st.sampled_from([4, 8, 16]),
+    cap_frac=st.floats(min_value=0.2, max_value=2.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_scatter_matches_ref(s, e, m, cap_frac, seed):
+    cap = max(1, int(cap_frac * s / e))
+    logits, tokens = _setup(seed, s, e, m, cap)
+    combine, dispatch, _, _ = ref.top1_gating_ref(logits, cap)
+    eidx, gate, slot, keep = gating.top1_gating(logits, cap)
+    got = layout.scatter_tokens(tokens, eidx, slot, e, cap)
+    want = ref.scatter_tokens_ref(tokens, dispatch)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.integers(min_value=1, max_value=48),
+    e=st.integers(min_value=2, max_value=8),
+    m=st.sampled_from([4, 8]),
+    cap_frac=st.floats(min_value=0.2, max_value=2.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_gather_matches_ref(s, e, m, cap_frac, seed):
+    cap = max(1, int(cap_frac * s / e))
+    logits, tokens = _setup(seed, s, e, m, cap)
+    combine, dispatch, _, _ = ref.top1_gating_ref(logits, cap)
+    eidx, gate, slot, keep = gating.top1_gating(logits, cap)
+    rng = np.random.RandomState(seed + 1)
+    expert_out = jnp.asarray(rng.randn(e, cap, m).astype(np.float32))
+    got = layout.gather_tokens(expert_out, eidx, slot, gate, keep)
+    want = ref.gather_tokens_ref(expert_out, combine)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(min_value=2, max_value=32),
+    e=st.integers(min_value=2, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_scatter_gather_roundtrip_identity(s, e, seed):
+    """With full capacity and identity experts, gather(scatter(x)) scales each
+    token by its gate prob — the permutation property of the layout kernels."""
+    m, cap = 8, s  # full capacity: nothing dropped
+    logits, tokens = _setup(seed, s, e, m, cap)
+    eidx, gate, slot, keep = gating.top1_gating(logits, cap)
+    blocks = layout.scatter_tokens(tokens, eidx, slot, e, cap)
+    back = layout.gather_tokens(blocks, eidx, slot, gate, keep)
+    want = np.asarray(tokens) * np.asarray(gate)[:, None]
+    np.testing.assert_allclose(np.asarray(back), want, rtol=1e-5, atol=1e-6)
+
+
+def test_dropped_tokens_zeroed():
+    # capacity 1, all tokens routed to the same expert -> only one survives.
+    s, e, m = 6, 3, 4
+    logits = jnp.asarray(
+        np.tile([5.0, 0.0, 0.0], (s, 1)).astype(np.float32))
+    tokens = jnp.asarray(np.random.RandomState(0).randn(s, m).astype(np.float32))
+    eidx, gate, slot, keep = gating.top1_gating(logits, 1)
+    assert np.asarray(keep).sum() == 1
+    blocks = layout.scatter_tokens(tokens, eidx, slot, e, 1)
+    out = layout.gather_tokens(blocks, eidx, slot, gate, keep)
+    out = np.asarray(out)
+    assert np.count_nonzero(out.any(axis=1)) == 1  # only the kept token
+    np.testing.assert_allclose(
+        out[0], np.asarray(tokens)[0] * np.asarray(gate)[0], rtol=1e-5)
+
+
+def test_trash_row_not_in_output():
+    """Dropped tokens write to the trash slot; it must never leak."""
+    s, e, m, cap = 8, 2, 4, 2
+    logits = jnp.zeros((s, e), jnp.float32)  # all to expert 0, 6 dropped
+    tokens = jnp.ones((s, m), jnp.float32) * 7.0
+    eidx, gate, slot, keep = gating.top1_gating(logits, cap)
+    blocks = np.asarray(layout.scatter_tokens(tokens, eidx, slot, e, cap))
+    assert blocks.shape == (e, cap, m)
+    # expert 0 has exactly `cap` rows filled; expert 1 all zeros.
+    assert np.count_nonzero(blocks[0].any(axis=1)) == cap
+    assert not blocks[1].any()

@@ -1,0 +1,198 @@
+"""L2 model tests: variant construction, prefill/decode consistency,
+pallas-vs-ref forward parity, and training-step behaviour."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, model
+
+
+TINY = configs.ModelConfig(
+    name="tiny-test", vocab_size=64, n_layers=2, d_model=16, n_heads=2,
+    d_ff=32, max_seq=16, experts_schedule=(0, 4))
+TINY_RES = configs.ModelConfig(
+    name="tiny-res", vocab_size=64, n_layers=2, d_model=16, n_heads=2,
+    d_ff=32, max_seq=16, experts_schedule=(0, 4), residual=True)
+TINY_DENSE = configs.ModelConfig(
+    name="tiny-dense", vocab_size=64, n_layers=2, d_model=16, n_heads=2,
+    d_ff=32, max_seq=16)
+
+
+def _toks(cfg, b, s, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (b, s)).astype(np.int32))
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_RES, TINY_DENSE])
+def test_param_specs_match_init(cfg):
+    specs = model.param_specs(cfg)
+    flat = model.init_params(cfg, 3)
+    assert len(specs) == len(flat)
+    for (name, shape), arr in zip(specs, flat):
+        assert tuple(arr.shape) == tuple(shape), name
+    total = sum(int(np.prod(s)) for _, s in specs)
+    assert total == cfg.num_params()
+
+
+def test_registry_param_counts():
+    for name, cfg in configs.REGISTRY.items():
+        specs = model.param_specs(cfg)
+        total = sum(int(np.prod(s)) for _, s in specs)
+        assert total == cfg.num_params(), name
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_RES, TINY_DENSE])
+def test_prefill_decode_equals_forward(cfg):
+    flat = model.init_params(cfg, 0)
+    B, S = 2, 6
+    toks = _toks(cfg, B, S + 1)
+    logits_full, _ = model.forward(flat, toks, cfg, use_pallas=False,
+                                   full_capacity=True)
+    logits_p, kc, vc = model.prefill(flat, toks[:, :-1], cfg,
+                                     use_pallas=False)
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(logits_full)[:, :S], rtol=2e-3,
+        atol=1e-4)
+    pos = jnp.full((B,), S, jnp.int32)
+    logits_d, _, _ = model.decode_step(flat, toks[:, -1], kc, vc, pos, cfg,
+                                       use_pallas=False)
+    np.testing.assert_allclose(
+        np.asarray(logits_d), np.asarray(logits_full)[:, -1], rtol=2e-3,
+        atol=1e-4)
+
+
+def test_decode_with_ragged_positions():
+    """Lanes at different sequence lengths decode independently."""
+    cfg = TINY
+    flat = model.init_params(cfg, 1)
+    B = 2
+    toks = _toks(cfg, B, 8)
+    # lane 0 has 4 tokens of context, lane 1 has 7
+    _, kc, vc = model.prefill(flat, toks, cfg, use_pallas=False)
+    pos = jnp.asarray([4, 7], jnp.int32)
+    nxt = jnp.asarray([5, 9], jnp.int32)
+    logits, kc2, vc2 = model.decode_step(flat, nxt, kc, vc, pos, cfg,
+                                         use_pallas=False)
+    # compare lane 0 against a forward over its true 5-token prefix
+    seq0 = jnp.concatenate([toks[0, :4], jnp.asarray([5], jnp.int32)])
+    ref, _ = model.forward(flat, seq0[None, :], cfg, use_pallas=False,
+                           full_capacity=True)
+    # build the same 5-length prefill+decode for a batch of B by masking is
+    # complex; instead check lane 0 logits match the B=1 decode path
+    _, kc1, vc1 = model.prefill(flat, toks[:1], cfg, use_pallas=False)
+    l1, _, _ = model.decode_step(flat, jnp.asarray([5], jnp.int32), kc1, vc1,
+                                 jnp.asarray([4], jnp.int32), cfg,
+                                 use_pallas=False)
+    np.testing.assert_allclose(np.asarray(logits)[0], np.asarray(l1)[0],
+                               rtol=2e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ref)[0, -1], np.asarray(l1)[0],
+                               rtol=2e-3, atol=1e-4)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16))
+def test_pallas_forward_matches_ref(seed):
+    cfg = TINY_RES
+    flat = model.init_params(cfg, seed % 7)
+    toks = _toks(cfg, 2, 8, seed)
+    a, _ = model.forward(flat, toks, cfg, use_pallas=True,
+                         full_capacity=True)
+    b, _ = model.forward(flat, toks, cfg, use_pallas=False,
+                         full_capacity=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                               atol=1e-4)
+
+
+def test_train_step_decreases_loss_all_variant_kinds():
+    for cfg in [TINY, TINY_RES, TINY_DENSE]:
+        flat = model.init_params(cfg, 0)
+        m = [jnp.zeros_like(p) for p in flat]
+        v = [jnp.zeros_like(p) for p in flat]
+        batch = _toks(cfg, 4, 9)
+        ts = jax.jit(lambda p_, m_, v_, b_, s_, lr_, cfg=cfg:
+                     model.train_step(p_, m_, v_, b_, s_, lr_, cfg))
+        first = None
+        for step in range(1, 13):
+            flat, m, v, loss, ce, aux = ts(
+                flat, m, v, batch, jnp.asarray(step, jnp.int32),
+                jnp.asarray(2e-3, jnp.float32))
+            if step == 1:
+                first = float(loss)
+        assert float(loss) < first, cfg.name
+
+
+def test_distill_step_moves_student_toward_teacher():
+    cfg = TINY_RES
+    teacher = model.init_params(cfg, 42)
+    student = model.init_params(cfg, 7)
+    m = [jnp.zeros_like(p) for p in student]
+    v = [jnp.zeros_like(p) for p in student]
+    batch = _toks(cfg, 4, 9)
+    t_logits = model.teacher_logits_fn(teacher, batch, cfg)
+
+    def kl_to_teacher(params):
+        s_logits, _ = model.forward(params, batch[:, :-1], cfg,
+                                    use_pallas=False)
+        tl = jax.nn.log_softmax(t_logits, -1)
+        sl = jax.nn.log_softmax(s_logits, -1)
+        return float(jnp.sum(jnp.exp(tl) * (tl - sl), -1).mean())
+
+    # Differential check: training with a strong KD term must end closer to
+    # the teacher than training with the KD term disabled (alpha=0), from
+    # the same initialization.  (Absolute KL can rise early because the CE
+    # term dominates near init.)
+    ds = jax.jit(lambda p_, m_, v_, b_, t_, a_, s_, lr_:
+                 model.distill_step(p_, m_, v_, b_, t_, a_, s_, lr_, cfg))
+
+    def run(alpha):
+        p = [jnp.array(x) for x in student]
+        mm = [jnp.zeros_like(x) for x in p]
+        vv = [jnp.zeros_like(x) for x in p]
+        for step in range(1, 13):
+            p, mm, vv, loss, ce, kl = ds(
+                p, mm, vv, batch, t_logits,
+                jnp.asarray(alpha, jnp.float32),
+                jnp.asarray(step, jnp.int32),
+                jnp.asarray(2e-3, jnp.float32))
+        return kl_to_teacher(p)
+
+    assert run(8.0) < run(0.0)
+
+
+def test_eval_loss_matches_manual_ce():
+    cfg = TINY_DENSE
+    flat = model.init_params(cfg, 0)
+    batch = _toks(cfg, 2, 9)
+    got = float(model.eval_loss(flat, batch, cfg))
+    logits, _ = model.forward(flat, batch[:, :-1], cfg, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, -1)
+    want = float(-jnp.take_along_axis(
+        logp, batch[:, 1:][..., None], axis=-1).mean())
+    assert abs(got - want) < 1e-6
+
+
+def test_capacity_semantics():
+    assert TINY.capacity(512, 8) == 128  # cf=2.0
+    assert TINY.capacity(1, 128) == 1
+    assert TINY.moe_layers_note() if hasattr(TINY, "moe_layers_note") else True
+
+
+def test_pyramid_schedule_shape():
+    cfg = configs.get("prmoe-s")
+    sched = cfg.experts_schedule
+    nz = [e for e in sched if e]
+    assert nz == sorted(nz), "pyramid must be non-decreasing with depth"
+    assert cfg.residual
+
+
+def test_half_schedules():
+    fh = configs.get("moe-s-8-firsthalf").experts_schedule
+    sh = configs.get("moe-s-8-secondhalf").experts_schedule
+    n = len(fh)
+    assert all(e == 0 for e in fh[n // 2:])
+    assert all(e == 0 for e in sh[:n // 2])
+    assert sum(1 for e in fh if e) == sum(1 for e in sh if e)

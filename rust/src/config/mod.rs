@@ -1,0 +1,239 @@
+//! Configuration types: model architecture (mirrors
+//! `python/compile/configs.py` via the manifest), serving and training
+//! settings, and the paper-scale inference configurations of Table 6.
+
+pub mod paper;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Architecture of one model variant (loaded from the manifest — the Python
+/// registry is the single source of truth for the tiny testbed family).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    /// experts_schedule[i] = number of experts on layer i (0 = dense FFN).
+    pub experts_schedule: Vec<usize>,
+    pub residual: bool,
+    pub top2: bool,
+    pub capacity_factor: f64,
+    pub moe_loss_coef: f64,
+    pub teacher: Option<String>,
+    pub kd_alpha: f64,
+    pub num_params: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().with_context(|| format!("field {k}"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            j.req(k)?.as_f64().with_context(|| format!("field {k}"))
+        };
+        Ok(ModelConfig {
+            name: j.req("name")?.as_str().context("name")?.to_string(),
+            vocab_size: u("vocab_size")?,
+            n_layers: u("n_layers")?,
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            d_ff: u("d_ff")?,
+            max_seq: u("max_seq")?,
+            experts_schedule: j.req("experts_schedule")?.usize_vec()?,
+            residual: j.req("residual")?.as_bool().unwrap_or(false),
+            top2: j.req("top2")?.as_bool().unwrap_or(false),
+            capacity_factor: f("capacity_factor")?,
+            moe_loss_coef: f("moe_loss_coef")?,
+            teacher: j
+                .get("teacher")
+                .and_then(|t| t.as_str())
+                .map(|s| s.to_string()),
+            kd_alpha: j.get("kd_alpha").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            num_params: u("num_params")?,
+        })
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.experts_schedule.iter().any(|&e| e > 0)
+    }
+
+    pub fn experts_at(&self, layer: usize) -> usize {
+        self.experts_schedule.get(layer).copied().unwrap_or(0)
+    }
+
+    /// Layers that carry an MoE FFN (index, n_experts).
+    pub fn moe_layers(&self) -> Vec<(usize, usize)> {
+        self.experts_schedule
+            .iter()
+            .enumerate()
+            .filter(|&(_, &e)| e > 0)
+            .map(|(i, &e)| (i, e))
+            .collect()
+    }
+
+    /// Max experts on any layer (drives expert-parallel worker layout).
+    pub fn max_experts(&self) -> usize {
+        self.experts_schedule.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Total expert parameter count vs non-expert ("base") count: the split
+    /// that drives the paper's parallelism choices (EP for experts, TP/DP
+    /// for the rest).
+    pub fn param_split(&self) -> (usize, usize) {
+        let (m, f) = (self.d_model, self.d_ff);
+        let expert_ffn = m * f + f + f * m + m;
+        let mut expert = 0usize;
+        for &e in &self.experts_schedule {
+            if e > 0 {
+                expert += e * expert_ffn + m * e; // experts + gate
+            }
+        }
+        (expert, self.num_params - expert)
+    }
+}
+
+/// Serving engine settings (testbed scale).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Model variant to serve (must have prefill/decode programs).
+    pub model: String,
+    /// Expert-parallel worker count (1 = single device).
+    pub workers: usize,
+    /// Decode batch lanes (must be one of the compiled batch sizes).
+    pub max_batch: usize,
+    /// Batch formation timeout.
+    pub batch_timeout: std::time::Duration,
+    /// Max new tokens per request unless the request says otherwise.
+    pub max_new_tokens: usize,
+    /// All-to-all schedule used by the expert-parallel path.
+    pub alltoall: AllToAllKind,
+    /// Greedy (argmax) vs temperature sampling.
+    pub temperature: f32,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            model: "moe-s-8".into(),
+            workers: 1,
+            max_batch: 8,
+            batch_timeout: std::time::Duration::from_millis(2),
+            max_new_tokens: 16,
+            alltoall: AllToAllKind::Hierarchical,
+            temperature: 0.0,
+        }
+    }
+}
+
+/// The three all-to-all schedules the paper compares (§5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllToAllKind {
+    /// Naive: every pair exchanges directly — O(p) hops.
+    Naive,
+    /// Hierarchical: intra-node exchange + inter-node — O(G + p/G).
+    Hierarchical,
+    /// Parallelism-coordinated: all-to-all only within same tensor-slicing
+    /// rank — O(p/L) + O(L).
+    Coordinated,
+}
+
+impl std::str::FromStr for AllToAllKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "naive" => AllToAllKind::Naive,
+            "hierarchical" => AllToAllKind::Hierarchical,
+            "coordinated" => AllToAllKind::Coordinated,
+            _ => anyhow::bail!("unknown all-to-all kind {s:?}"),
+        })
+    }
+}
+
+/// Training settings (Table 1 analogue for the tiny family).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub steps: usize,
+    pub lr: f64,
+    pub min_lr: f64,
+    pub warmup_steps: usize,
+    /// Cosine decay horizon (paper: decay over 260–300B tokens).
+    pub decay_steps: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Staged KD: stop distillation at this fraction of total steps
+    /// (paper stops at 400K of ~570K steps ≈ 0.7); None = no KD.
+    pub kd_stop_frac: Option<f64>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "moe-s-8".into(),
+            steps: 400,
+            lr: 1e-3,
+            min_lr: 1e-4,
+            warmup_steps: 20,
+            decay_steps: 400,
+            eval_every: 20,
+            seed: 1234,
+            kd_stop_frac: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_json() -> Json {
+        Json::parse(
+            r#"{"name":"moe-s-8","vocab_size":512,"n_layers":4,
+                "d_model":128,"n_heads":4,"d_ff":512,"max_seq":64,
+                "experts_schedule":[0,8,0,8],"residual":false,"top2":false,
+                "capacity_factor":2.0,"moe_loss_coef":0.01,
+                "teacher":null,"kd_alpha":1.0,"num_params":3200000}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_model_config() {
+        let c = ModelConfig::from_json(&demo_json()).unwrap();
+        assert_eq!(c.name, "moe-s-8");
+        assert!(c.is_moe());
+        assert_eq!(c.moe_layers(), vec![(1, 8), (3, 8)]);
+        assert_eq!(c.max_experts(), 8);
+        assert_eq!(c.head_dim(), 32);
+        assert!(c.teacher.is_none());
+    }
+
+    #[test]
+    fn param_split_counts_experts() {
+        let c = ModelConfig::from_json(&demo_json()).unwrap();
+        let (expert, base) = c.param_split();
+        let ffn = 128 * 512 + 512 + 512 * 128 + 128;
+        assert_eq!(expert, 2 * (8 * ffn + 128 * 8));
+        assert_eq!(expert + base, c.num_params);
+    }
+
+    #[test]
+    fn alltoall_parse() {
+        assert_eq!(
+            "hierarchical".parse::<AllToAllKind>().unwrap(),
+            AllToAllKind::Hierarchical
+        );
+        assert!("bogus".parse::<AllToAllKind>().is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! Paper-scale model configurations (Table 6 + the dense comparators of
+//! Figures 14/15 and the training models of Table 1).  These drive the
+//! cluster performance simulator; they are never executed on the testbed.
+
+/// A paper-scale transformer (dense base; experts added via `experts`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PaperModel {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    /// Experts per MoE layer (0 = dense model).  MoE on every other layer.
+    pub experts: usize,
+    /// Tensor-slicing (model-parallel) degree used in the paper's setup.
+    pub mp_degree: usize,
+    /// Expert-parallel degree used in the paper's setup.
+    pub ep_degree: usize,
+    /// Total parameter count (billions) as declared in the paper's tables.
+    /// 0.0 = derive from the architecture.  Declared values are used for
+    /// memory/bandwidth modelling because the paper's larger configs do not
+    /// exactly match the standard GPT parameter formula (their table is
+    /// authoritative for bytes moved).
+    pub declared_total_b: f64,
+}
+
+impl PaperModel {
+    pub fn d_ff(&self) -> usize {
+        4 * self.hidden
+    }
+
+    pub fn n_moe_layers(&self) -> usize {
+        if self.experts == 0 {
+            0
+        } else {
+            self.n_layers / 2
+        }
+    }
+
+    /// Total parameters in billions: the paper's declared figure when
+    /// available, else derived from the architecture.
+    pub fn params_b(&self) -> f64 {
+        if self.declared_total_b > 0.0 {
+            self.declared_total_b
+        } else {
+            self.derived_params_b()
+        }
+    }
+
+    /// Architecture-derived parameter count (embeddings + per-layer
+    /// attn/FFN, experts on every other FFN layer).
+    pub fn derived_params_b(&self) -> f64 {
+        let h = self.hidden as f64;
+        let vocab = 51_200.0; // GPT-2 BPE vocab padded, as Megatron
+        let emb = vocab * h;
+        let attn = 4.0 * h * h;
+        let ffn = 8.0 * h * h; // w1 (h x 4h) + w2 (4h x h)
+        let mut total = emb;
+        for i in 0..self.n_layers {
+            total += attn;
+            if self.experts > 0 && i % 2 == 1 {
+                total += ffn * self.experts as f64 + h * self.experts as f64;
+            } else {
+                total += ffn;
+            }
+        }
+        total / 1e9
+    }
+
+    /// Parameters on the token's critical path (base + one expert per MoE
+    /// layer) — the quantity the paper's §5.1 "best-case view" is about.
+    pub fn activated_params_b(&self) -> f64 {
+        let h = self.hidden as f64;
+        let vocab = 51_200.0;
+        let total = vocab * h
+            + self.n_layers as f64 * (4.0 * h * h + 8.0 * h * h);
+        total / 1e9
+    }
+
+    /// Expert vs non-expert parameter split, in billions.  The derived
+    /// expert/base ratio is applied to the (possibly declared) total so the
+    /// two always sum to `params_b()`.
+    pub fn param_split_b(&self) -> (f64, f64) {
+        let h = self.hidden as f64;
+        let ffn = 8.0 * h * h;
+        let expert_derived = self.n_moe_layers() as f64
+            * (ffn * self.experts as f64 + h * self.experts as f64)
+            / 1e9;
+        let frac = expert_derived / self.derived_params_b();
+        let expert = frac * self.params_b();
+        (expert, self.params_b() - expert)
+    }
+}
+
+/// Table 6: the MoE configurations of the inference evaluation.
+pub fn table6() -> Vec<PaperModel> {
+    vec![
+        PaperModel { name: "1.3B+MoE-128", n_layers: 24, hidden: 2048,
+                     n_heads: 16, experts: 128, mp_degree: 1, ep_degree: 128,
+                     declared_total_b: 52.0 },
+        PaperModel { name: "2.4B+MoE-128", n_layers: 16, hidden: 3584,
+                     n_heads: 28, experts: 128, mp_degree: 1, ep_degree: 128,
+                     declared_total_b: 107.7 },
+        PaperModel { name: "8B+MoE-128", n_layers: 30, hidden: 4096,
+                     n_heads: 32, experts: 128, mp_degree: 4, ep_degree: 128,
+                     declared_total_b: 349.0 },
+        PaperModel { name: "24B+MoE-128", n_layers: 40, hidden: 8192,
+                     n_heads: 64, experts: 128, mp_degree: 8, ep_degree: 128,
+                     declared_total_b: 1064.9 },
+        PaperModel { name: "47B+MoE-128", n_layers: 58, hidden: 8192,
+                     n_heads: 64, experts: 128, mp_degree: 8, ep_degree: 128,
+                     declared_total_b: 2024.0 },
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<PaperModel> {
+    table6()
+        .into_iter()
+        .chain(dense_models())
+        .chain(training_models())
+        .find(|m| m.name == name)
+}
+
+/// Dense comparators (Figs 14/15) and the MT-NLG-ish 530B for context.
+pub fn dense_models() -> Vec<PaperModel> {
+    vec![
+        PaperModel { name: "dense-6.7B", n_layers: 32, hidden: 4096,
+                     n_heads: 32, experts: 0, mp_degree: 1, ep_degree: 1,
+                     declared_total_b: 6.7 },
+        PaperModel { name: "dense-175B", n_layers: 96, hidden: 12288,
+                     n_heads: 96, experts: 0, mp_degree: 16, ep_degree: 1,
+                     declared_total_b: 175.0 },
+    ]
+}
+
+/// Table 1 training models (dense + MoE pairs used by Table 3 / Fig 1).
+pub fn training_models() -> Vec<PaperModel> {
+    vec![
+        PaperModel { name: "dense-350M", n_layers: 24, hidden: 1024,
+                     n_heads: 16, experts: 0, mp_degree: 1, ep_degree: 1,
+                     declared_total_b: 0.35 },
+        PaperModel { name: "dense-1.3B", n_layers: 24, hidden: 2048,
+                     n_heads: 16, experts: 0, mp_degree: 1, ep_degree: 1,
+                     declared_total_b: 1.3 },
+        PaperModel { name: "350M+MoE-128", n_layers: 24, hidden: 1024,
+                     n_heads: 16, experts: 128, mp_degree: 1, ep_degree: 128,
+                     declared_total_b: 13.0 },
+    ]
+}
+
+/// PR-MoE / MoS variants of a standard-MoE config (Figs 12/13): the paper
+/// reports "up to 3x" (PR-MoE) and "up to 3.7x" (PR-MoE+MoS) total-size
+/// reduction at the same quality.  We model them as parameter scale factors
+/// on the expert partition plus a depth reduction for MoS (12.5%).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Standard,
+    PrMoe,
+    PrMoeMos,
+}
+
+impl Variant {
+    pub fn label(self) -> &'static str {
+        match self {
+            Variant::Standard => "MoE",
+            Variant::PrMoe => "PR-MoE",
+            Variant::PrMoeMos => "PR-MoE+MoS",
+        }
+    }
+
+    /// Multiplier on expert parameter bytes (paper §4 summary: PR-MoE up to
+    /// 3x smaller; +MoS 3.7x including the 12.5% depth cut).
+    pub fn expert_scale(self) -> f64 {
+        match self {
+            Variant::Standard => 1.0,
+            // 1.3B case: 31B/52B expert partitions -> ~0.58; 350M case 4/13
+            // -> ~0.31.  We use the 1.3B-class ratio (the inference study's
+            // models are all 1.3B+ scale).
+            Variant::PrMoe => 0.58,
+            Variant::PrMoeMos => 0.58 * 0.875,
+        }
+    }
+
+    /// Multiplier on depth (MoS removes 12.5% of layers).
+    pub fn depth_scale(self) -> f64 {
+        match self {
+            Variant::Standard | Variant::PrMoe => 1.0,
+            Variant::PrMoeMos => 0.875,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_sizes_match_paper() {
+        // Paper Table 6 total sizes (billions): 52, 107.7, 349, 1064.9, 2024.
+        let want = [52.0, 107.7, 349.0, 1064.9, 2024.0];
+        for (m, w) in table6().iter().zip(want) {
+            let got = m.params_b();
+            let rel = (got - w).abs() / w;
+            assert!(rel < 0.01, "{}: got {got:.1}B want {w}B", m.name);
+        }
+        // The derived formula reproduces the small configs closely (the
+        // larger ones use the declared figures; see declared_total_b doc).
+        let m0 = &table6()[0];
+        let rel = (m0.derived_params_b() - 52.0).abs() / 52.0;
+        assert!(rel < 0.05, "derived 1.3B+MoE-128: {:.1}B", m0.derived_params_b());
+    }
+
+    #[test]
+    fn param_split_sums_to_total() {
+        for m in table6() {
+            let (e, b) = m.param_split_b();
+            assert!((e + b - m.params_b()).abs() < 1e-6, "{}", m.name);
+            assert!(e > b, "{}: experts should dominate", m.name);
+        }
+    }
+
+    #[test]
+    fn activated_equals_dense_base() {
+        // 1.3B+MoE-128 activates ~1.3B params per token.
+        let m = &table6()[0];
+        let a = m.activated_params_b();
+        assert!((a - 1.3).abs() < 0.3, "activated {a:.2}B");
+    }
+
+    #[test]
+    fn dense_comparators() {
+        let d = dense_models();
+        assert!((d[0].params_b() - 6.7).abs() < 1.0);
+        assert!((d[1].params_b() - 175.0).abs() < 20.0);
+    }
+
+    #[test]
+    fn variant_scales_ordered() {
+        assert!(Variant::PrMoe.expert_scale() < 1.0);
+        assert!(Variant::PrMoeMos.expert_scale() < Variant::PrMoe.expert_scale());
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("1.3B+MoE-128").is_some());
+        assert!(by_name("dense-175B").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,177 @@
+//! Dynamic batcher: forms prefill batches at compiled batch sizes.
+//!
+//! The AOT artifacts are compiled for fixed batch geometries (aot.py's
+//! `PREFILL_BATCH_SIZES` / `DECODE_BATCH_SIZES`), so batching is a rounding
+//! problem: given `waiting` requests, `free` decode lanes, and the oldest
+//! request's wait time, choose a compiled prefill size now or keep waiting
+//! for a fuller batch.  Policy (classic size-or-timeout):
+//!
+//! * flush when `waiting >= max(compiled sizes) that fits free lanes`, or
+//! * flush whatever fits once the oldest request has waited `timeout`.
+
+use std::time::Duration;
+
+/// Batch-formation decision.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Decision {
+    /// Run a prefill of this compiled batch size (taking `take` requests,
+    /// padding the rest of the lanes).
+    Prefill { compiled: usize, take: usize },
+    /// Keep waiting (accumulate a fuller batch).
+    Wait,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Compiled prefill batch sizes, ascending (e.g. [1, 4, 8]).
+    pub sizes: Vec<usize>,
+    pub timeout: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(mut sizes: Vec<usize>, timeout: Duration) -> Self {
+        assert!(!sizes.is_empty());
+        sizes.sort();
+        BatchPolicy { sizes, timeout }
+    }
+
+    /// Smallest compiled size >= n (or the largest available).
+    pub fn round_up(&self, n: usize) -> usize {
+        *self
+            .sizes
+            .iter()
+            .find(|&&s| s >= n)
+            .unwrap_or(self.sizes.last().unwrap())
+    }
+
+    /// Largest compiled size <= n (None if even the smallest exceeds n).
+    pub fn round_down(&self, n: usize) -> Option<usize> {
+        self.sizes.iter().rev().find(|&&s| s <= n).copied()
+    }
+
+    pub fn decide(
+        &self,
+        waiting: usize,
+        free_lanes: usize,
+        oldest_wait: Option<Duration>,
+    ) -> Decision {
+        if waiting == 0 || free_lanes == 0 {
+            return Decision::Wait;
+        }
+        let Some(cap) = self.round_down(free_lanes) else {
+            return Decision::Wait; // no compiled size fits the free lanes
+        };
+        let full = cap.min(*self.sizes.last().unwrap());
+        if waiting >= full {
+            return Decision::Prefill { compiled: full, take: full };
+        }
+        match oldest_wait {
+            Some(w) if w >= self.timeout => {
+                let take = waiting.min(cap);
+                Decision::Prefill { compiled: self.round_up(take).min(cap), take }
+            }
+            _ => Decision::Wait,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(2))
+    }
+
+    #[test]
+    fn rounding() {
+        let p = policy();
+        assert_eq!(p.round_up(1), 1);
+        assert_eq!(p.round_up(3), 4);
+        assert_eq!(p.round_up(5), 8);
+        assert_eq!(p.round_up(20), 8); // clamp to largest
+        assert_eq!(p.round_down(6), Some(4));
+        assert_eq!(p.round_down(0), None);
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let p = policy();
+        assert_eq!(
+            p.decide(10, 8, Some(Duration::ZERO)),
+            Decision::Prefill { compiled: 8, take: 8 }
+        );
+    }
+
+    #[test]
+    fn partial_batch_waits_until_timeout() {
+        let p = policy();
+        assert_eq!(p.decide(2, 8, Some(Duration::from_micros(100))),
+                   Decision::Wait);
+        assert_eq!(
+            p.decide(2, 8, Some(Duration::from_millis(3))),
+            Decision::Prefill { compiled: 4, take: 2 }
+        );
+    }
+
+    #[test]
+    fn limited_by_free_lanes() {
+        let p = policy();
+        // 10 waiting but only 3 free lanes: largest compiled <= 3 is 1...
+        assert_eq!(
+            p.decide(10, 3, Some(Duration::ZERO)),
+            Decision::Prefill { compiled: 1, take: 1 }
+        );
+        // 5 free lanes -> compiled 4
+        assert_eq!(
+            p.decide(10, 5, Some(Duration::ZERO)),
+            Decision::Prefill { compiled: 4, take: 4 }
+        );
+    }
+
+    #[test]
+    fn nothing_waiting_or_no_lanes() {
+        let p = policy();
+        assert_eq!(p.decide(0, 8, None), Decision::Wait);
+        assert_eq!(p.decide(5, 0, Some(Duration::from_secs(1))),
+                   Decision::Wait);
+    }
+
+    #[test]
+    fn single_request_low_traffic_latency() {
+        // After timeout a single request runs alone at compiled size 1 —
+        // the low-traffic latency path.
+        let p = policy();
+        assert_eq!(
+            p.decide(1, 8, Some(Duration::from_millis(5))),
+            Decision::Prefill { compiled: 1, take: 1 }
+        );
+    }
+
+    #[test]
+    fn property_take_never_exceeds_compiled_or_lanes() {
+        use crate::util::prop::prop;
+        prop(200, |c| {
+            let p = policy();
+            let waiting = c.usize(0, 32);
+            let free = c.usize(0, 16);
+            let wait_ms = c.usize(0, 10);
+            if let Decision::Prefill { compiled, take } = p.decide(
+                waiting,
+                free,
+                Some(Duration::from_millis(wait_ms as u64)),
+            ) {
+                crate::prop_assert!(take <= compiled, "take > compiled");
+                crate::prop_assert!(compiled <= free.max(1),
+                                    "compiled {compiled} > free {free}");
+                crate::prop_assert!(take <= waiting, "take > waiting");
+                crate::prop_assert!(take > 0, "empty prefill");
+                crate::prop_assert!(
+                    p.sizes.contains(&compiled),
+                    "compiled {compiled} not a compiled size"
+                );
+            }
+            Ok(())
+        });
+    }
+}

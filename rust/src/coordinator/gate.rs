@@ -1,0 +1,204 @@
+//! Host-side gating for the expert-parallel serving path.
+//!
+//! The AOT `gate_*` program returns softmax router probabilities; the
+//! coordinator turns them into the paper's **dense token-to-expert mapping
+//! table** (§5.4) — `(expert, slot)` per token — because the routing
+//! decision is what drives token grouping and the all-to-all (§5.1: "group
+//! and route all tokens with the same critical data path together").
+//!
+//! This mirrors the L1 Pallas gating kernel exactly (same assignment, same
+//! slot ordering); `python/tests/test_gating.py` pins the kernel to the
+//! reference and `rust/tests/integration_parity.rs` pins this host version
+//! to the kernel through the end-to-end logits comparison.
+
+use crate::moe;
+
+/// Routing decision for a token batch at one MoE layer.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    pub n_experts: usize,
+    /// Per token: selected expert.
+    pub expert: Vec<usize>,
+    /// Per token: gate probability of the selected expert.
+    pub prob: Vec<f32>,
+    /// Per token: slot within the expert's block (dense mapping table).
+    pub slot: Vec<usize>,
+    /// Tokens routed to each expert (= block sizes before padding).
+    pub counts: Vec<usize>,
+}
+
+impl Routing {
+    /// Build the mapping table from gate probabilities (`[T, E]` row-major).
+    ///
+    /// Inference never drops tokens (worst-case capacity), so every token
+    /// gets a slot; `counts[e]` tells the dispatcher how large each expert's
+    /// block really is before padding to a compiled size.
+    pub fn top1(probs: &[f32], n_experts: usize) -> Routing {
+        let routed = moe::top1_route(probs, n_experts);
+        let t = routed.len();
+        let mut expert = Vec::with_capacity(t);
+        let mut prob = Vec::with_capacity(t);
+        let mut slot = Vec::with_capacity(t);
+        let mut counts = vec![0usize; n_experts];
+        for (e, p) in routed {
+            expert.push(e);
+            prob.push(p);
+            slot.push(counts[e]); // exclusive running count = queue position
+            counts[e] += 1;
+        }
+        Routing { n_experts, expert, prob, slot, counts }
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.expert.len()
+    }
+
+    /// Gather each expert's token rows from flat activations `[T, M]` into
+    /// a dense block `[counts[e], M]` (the scatter data-layout transform of
+    /// §5.4, done host-side because blocks cross worker boundaries here).
+    pub fn expert_block(&self, ln_h: &[f32], m: usize, e: usize) -> Vec<f32> {
+        let mut block = vec![0f32; self.counts[e] * m];
+        for (t, &te) in self.expert.iter().enumerate() {
+            if te == e {
+                let s = self.slot[t];
+                block[s * m..(s + 1) * m]
+                    .copy_from_slice(&ln_h[t * m..(t + 1) * m]);
+            }
+        }
+        block
+    }
+
+    /// Inverse transform: scale expert outputs by gate prob and write them
+    /// back in original token order (the gather/un-sort of §5.4).
+    /// `expert_outputs[e]` is the unpadded `[counts[e], M]` block.
+    pub fn combine(&self, expert_outputs: &[Vec<f32>], m: usize) -> Vec<f32> {
+        let t = self.n_tokens();
+        let mut out = vec![0f32; t * m];
+        for tok in 0..t {
+            let e = self.expert[tok];
+            let s = self.slot[tok];
+            let block = &expert_outputs[e];
+            debug_assert!(s * m + m <= block.len());
+            let p = self.prob[tok];
+            for (o, &x) in out[tok * m..(tok + 1) * m]
+                .iter_mut()
+                .zip(&block[s * m..(s + 1) * m])
+            {
+                *o = p * x;
+            }
+        }
+        out
+    }
+
+    /// Tokens per expert as expert ids (for load stats).
+    pub fn assignments(&self) -> &[usize] {
+        &self.expert
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+    use crate::util::rng::Rng;
+
+    fn softmax_rows(t: usize, e: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut probs = vec![0f32; t * e];
+        for row in probs.chunks_exact_mut(e) {
+            let mut sum = 0f32;
+            for v in row.iter_mut() {
+                *v = (rng.gauss() as f32).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        probs
+    }
+
+    #[test]
+    fn slots_are_dense_per_expert() {
+        let probs = softmax_rows(32, 4, 7);
+        let r = Routing::top1(&probs, 4);
+        for e in 0..4 {
+            let mut slots: Vec<usize> = (0..32)
+                .filter(|&t| r.expert[t] == e)
+                .map(|t| r.slot[t])
+                .collect();
+            slots.sort();
+            assert_eq!(slots, (0..r.counts[e]).collect::<Vec<_>>());
+        }
+        assert_eq!(r.counts.iter().sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn scatter_combine_roundtrip() {
+        // identity experts: combine(scatter(x)) == prob * x
+        let t_toks = 16;
+        let m = 8;
+        let probs = softmax_rows(t_toks, 4, 3);
+        let r = Routing::top1(&probs, 4);
+        let mut rng = Rng::new(5);
+        let ln_h: Vec<f32> = (0..t_toks * m).map(|_| rng.gauss() as f32).collect();
+        let blocks: Vec<Vec<f32>> =
+            (0..4).map(|e| r.expert_block(&ln_h, m, e)).collect();
+        let out = r.combine(&blocks, m);
+        for tok in 0..t_toks {
+            for i in 0..m {
+                let want = r.prob[tok] * ln_h[tok * m + i];
+                assert!((out[tok * m + i] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn property_no_token_lost_or_duplicated() {
+        prop(100, |c| {
+            let t = c.usize(1, 64);
+            let e = c.usize(1, 16);
+            let probs = softmax_rows(t, e, c.seed);
+            let r = Routing::top1(&probs, e);
+            crate::prop_assert_eq!(r.counts.iter().sum::<usize>(), t);
+            crate::prop_assert_eq!(r.expert.len(), t);
+            // every (expert, slot) pair unique
+            let mut seen = std::collections::HashSet::new();
+            for tok in 0..t {
+                crate::prop_assert!(
+                    seen.insert((r.expert[tok], r.slot[tok])),
+                    "duplicate (expert, slot) for token {tok}"
+                );
+                crate::prop_assert!(
+                    r.slot[tok] < r.counts[r.expert[tok]],
+                    "slot out of range"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_argmax_selected() {
+        prop(50, |c| {
+            let t = c.usize(1, 32);
+            let e = c.usize(2, 8);
+            let probs = softmax_rows(t, e, c.seed ^ 0xABC);
+            let r = Routing::top1(&probs, e);
+            for tok in 0..t {
+                let row = &probs[tok * e..(tok + 1) * e];
+                let best = row
+                    .iter()
+                    .cloned()
+                    .fold(f32::NEG_INFINITY, f32::max);
+                crate::prop_assert!(
+                    (r.prob[tok] - best).abs() < 1e-7,
+                    "token {tok}: picked {} not max {}",
+                    r.prob[tok],
+                    best
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,273 @@
+//! KV-cache manager: lane-granular cache state for continuous batching.
+//!
+//! The monolithic decode program operates on a fixed-lane group
+//! (`[L, B, H, Smax, hd]` caches, per-lane positions).  This manager owns
+//! those host-side tensors, tracks which lanes are live, and splices a
+//! freshly prefilled single-request cache (`[L, 1, H, Smax, hd]`) into a free
+//! lane — which is how new requests join an in-flight decode group without
+//! recomputing the others (iteration-level batching at the decode loop).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::HostTensor;
+
+/// Identity of a request occupying a lane.
+pub type RequestId = u64;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Lane {
+    Free,
+    /// (request, current length = next write position)
+    Busy { request: RequestId, pos: usize },
+}
+
+/// Cache group for one decode batch.
+#[derive(Debug)]
+pub struct KvCacheGroup {
+    pub n_layers: usize,
+    pub batch: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub k: HostTensor,
+    pub v: HostTensor,
+    pub lanes: Vec<Lane>,
+}
+
+impl KvCacheGroup {
+    pub fn new(
+        n_layers: usize,
+        batch: usize,
+        n_heads: usize,
+        max_seq: usize,
+        head_dim: usize,
+    ) -> Self {
+        let shape = [n_layers, batch, n_heads, max_seq, head_dim];
+        KvCacheGroup {
+            n_layers,
+            batch,
+            n_heads,
+            max_seq,
+            head_dim,
+            k: HostTensor::zeros_f32(&shape),
+            v: HostTensor::zeros_f32(&shape),
+            lanes: vec![Lane::Free; batch],
+        }
+    }
+
+    pub fn free_lanes(&self) -> Vec<usize> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| matches!(l, Lane::Free))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn busy_lanes(&self) -> Vec<(usize, RequestId, usize)> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| match l {
+                Lane::Busy { request, pos } => Some((i, *request, *pos)),
+                Lane::Free => None,
+            })
+            .collect()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.lanes.iter().all(|l| matches!(l, Lane::Free))
+    }
+
+    /// Splice a prefilled single-lane cache (`[L, 1, H, Smax, hd]`) into
+    /// `lane`, marking it busy at `pos` (= prompt length).
+    pub fn admit(
+        &mut self,
+        lane: usize,
+        request: RequestId,
+        pos: usize,
+        k1: &HostTensor,
+        v1: &HostTensor,
+    ) -> Result<()> {
+        if lane >= self.batch {
+            bail!("lane {lane} out of range (batch {})", self.batch);
+        }
+        if !matches!(self.lanes[lane], Lane::Free) {
+            bail!("lane {lane} is busy");
+        }
+        let want = [self.n_layers, 1, self.n_heads, self.max_seq, self.head_dim];
+        if k1.shape != want || v1.shape != want {
+            bail!("prefill cache shape {:?}, want {:?}", k1.shape, want);
+        }
+        if pos > self.max_seq {
+            bail!("pos {pos} exceeds max_seq {}", self.max_seq);
+        }
+        self.splice(lane, k1, v1)?;
+        self.lanes[lane] = Lane::Busy { request, pos };
+        Ok(())
+    }
+
+    fn splice(&mut self, lane: usize, k1: &HostTensor, v1: &HostTensor) -> Result<()> {
+        let lane_elems = self.n_heads * self.max_seq * self.head_dim;
+        let batch = self.batch;
+        for (dst_all, src_all) in
+            [(&mut self.k, k1), (&mut self.v, v1)]
+        {
+            let src = src_all.as_f32()?.to_vec();
+            let dst = dst_all.as_f32_mut()?;
+            for layer in 0..self.n_layers {
+                let src_off = layer * lane_elems;
+                let dst_off = (layer * batch + lane) * lane_elems;
+                dst[dst_off..dst_off + lane_elems]
+                    .copy_from_slice(&src[src_off..src_off + lane_elems]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance a lane after a decode step (one more token in the cache).
+    pub fn advance(&mut self, lane: usize) -> Result<usize> {
+        match &mut self.lanes[lane] {
+            Lane::Busy { pos, .. } => {
+                *pos += 1;
+                if *pos >= self.max_seq {
+                    bail!("lane {lane} hit max_seq {}", self.max_seq);
+                }
+                Ok(*pos)
+            }
+            Lane::Free => bail!("advancing free lane {lane}"),
+        }
+    }
+
+    /// Release a finished request's lane.
+    pub fn release(&mut self, lane: usize) {
+        self.lanes[lane] = Lane::Free;
+    }
+
+    /// Positions vector for the decode program: busy lanes their real pos,
+    /// free lanes 0 (their one-hot writes land on slot 0 of an unused lane
+    /// and are overwritten by the next admit's splice).
+    pub fn positions(&self) -> Vec<i32> {
+        self.lanes
+            .iter()
+            .map(|l| match l {
+                Lane::Busy { pos, .. } => *pos as i32,
+                Lane::Free => 0,
+            })
+            .collect()
+    }
+
+    /// Replace the whole group state with updated caches from a decode step.
+    pub fn update(&mut self, k: HostTensor, v: HostTensor) -> Result<()> {
+        if k.shape != self.k.shape || v.shape != self.v.shape {
+            bail!("cache update shape mismatch");
+        }
+        self.k = k;
+        self.v = v;
+        Ok(())
+    }
+
+    pub fn cache_bytes(&self) -> usize {
+        self.k.byte_len() + self.v.byte_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn group() -> KvCacheGroup {
+        KvCacheGroup::new(2, 4, 2, 8, 4)
+    }
+
+    fn lane_cache(fill: f32) -> HostTensor {
+        let shape = [2, 1, 2, 8, 4];
+        HostTensor::f32(&shape, vec![fill; shape.iter().product()])
+    }
+
+    #[test]
+    fn admit_and_release_lifecycle() {
+        let mut g = group();
+        assert_eq!(g.free_lanes(), vec![0, 1, 2, 3]);
+        g.admit(1, 100, 5, &lane_cache(1.0), &lane_cache(2.0)).unwrap();
+        assert_eq!(g.free_lanes(), vec![0, 2, 3]);
+        assert_eq!(g.busy_lanes(), vec![(1, 100, 5)]);
+        assert_eq!(g.positions(), vec![0, 5, 0, 0]);
+        assert_eq!(g.advance(1).unwrap(), 6);
+        g.release(1);
+        assert!(g.is_idle());
+    }
+
+    #[test]
+    fn splice_writes_only_target_lane() {
+        let mut g = group();
+        g.admit(2, 7, 3, &lane_cache(9.0), &lane_cache(9.0)).unwrap();
+        let k = g.k.as_f32().unwrap();
+        let lane_elems = 2 * 8 * 4;
+        for layer in 0..2 {
+            for lane in 0..4 {
+                let off = (layer * 4 + lane) * lane_elems;
+                let want = if lane == 2 { 9.0 } else { 0.0 };
+                assert!(
+                    k[off..off + lane_elems].iter().all(|&x| x == want),
+                    "layer {layer} lane {lane}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn admit_guards() {
+        let mut g = group();
+        g.admit(0, 1, 2, &lane_cache(0.0), &lane_cache(0.0)).unwrap();
+        // busy lane
+        assert!(g.admit(0, 2, 2, &lane_cache(0.0), &lane_cache(0.0)).is_err());
+        // bad shape
+        let bad = HostTensor::zeros_f32(&[2, 1, 2, 4, 4]);
+        assert!(g.admit(1, 3, 2, &bad, &bad).is_err());
+        // out-of-range lane / pos
+        assert!(g.admit(9, 4, 2, &lane_cache(0.0), &lane_cache(0.0)).is_err());
+        assert!(g.admit(1, 5, 99, &lane_cache(0.0), &lane_cache(0.0)).is_err());
+    }
+
+    #[test]
+    fn advance_overflow_detected() {
+        let mut g = group();
+        g.admit(0, 1, 6, &lane_cache(0.0), &lane_cache(0.0)).unwrap();
+        assert_eq!(g.advance(0).unwrap(), 7);
+        assert!(g.advance(0).is_err()); // 8 == max_seq
+        assert!(g.advance(1).is_err()); // free lane
+    }
+
+    #[test]
+    fn property_splice_preserves_other_lanes() {
+        use crate::util::prop::prop;
+        prop(40, |c| {
+            let lanes = c.usize(1, 6);
+            let mut g = KvCacheGroup::new(2, lanes, 2, 4, 2);
+            let mk = |f: f32| {
+                let shape = [2, 1, 2, 4, 2];
+                HostTensor::f32(&shape, vec![f; shape.iter().product()])
+            };
+            let a = c.usize(0, lanes - 1);
+            g.admit(a, 1, 1, &mk(1.0), &mk(1.0)).map_err(|e| e.to_string())?;
+            let before = g.k.as_f32().unwrap().to_vec();
+            let b = c.usize(0, lanes - 1);
+            if b != a {
+                g.admit(b, 2, 1, &mk(2.0), &mk(2.0))
+                    .map_err(|e| e.to_string())?;
+                let after = g.k.as_f32().unwrap();
+                let lane_elems = 2 * 4 * 2;
+                for layer in 0..2 {
+                    let off = (layer * lanes + a) * lane_elems;
+                    crate::prop_assert!(
+                        after[off..off + lane_elems]
+                            == before[off..off + lane_elems],
+                        "lane {a} disturbed by admit into {b}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

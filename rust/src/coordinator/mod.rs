@@ -1,0 +1,25 @@
+//! The L3 coordinator — DeepSpeed-MoE's system contribution (§5):
+//!
+//! * [`router`] — request admission + inbound FIFO.
+//! * [`batcher`] — dynamic batch formation at compiled batch sizes.
+//! * [`gate`] — host-side top-1 routing: the dense token→expert mapping
+//!   table that drives token grouping (§5.4's kernel, mirrored at the
+//!   coordinator where blocks cross worker boundaries).
+//! * [`placement`] — multi-expert/multi-data expert placement (§4.1.3).
+//! * [`alltoall`] — naive / hierarchical / parallelism-coordinated token
+//!   exchange schedules (§5.3, Figs 8–9).
+//! * [`kv_cache`] — lane-granular KV caches for continuous decode batching.
+
+pub mod alltoall;
+pub mod batcher;
+pub mod gate;
+pub mod kv_cache;
+pub mod placement;
+pub mod router;
+
+pub use alltoall::{plan, Plan, Topology};
+pub use batcher::{BatchPolicy, Decision};
+pub use gate::Routing;
+pub use kv_cache::KvCacheGroup;
+pub use placement::{LayerPlacement, Placement};
+pub use router::{Limits, Request, Response, Router};

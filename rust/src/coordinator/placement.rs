@@ -1,0 +1,210 @@
+//! Expert placement: which worker owns which experts at which layer.
+//!
+//! Reproduces the paper's **multi-expert and multi-data parallelism**
+//! (§4.1.3): a PR-MoE model has different expert counts per layer, so no
+//! single expert-parallel degree fits all layers.  DeepSpeed's solution —
+//! per-layer EP degree equal to `min(experts_at_layer, workers)` with the
+//! remaining factor as data parallelism — places **exactly
+//! `experts/ep_degree` experts per worker group member**, giving zero load
+//! imbalance and no per-GPU memory increase.
+//!
+//! At testbed scale the "workers" are fabric threads; the same structure is
+//! evaluated analytically at paper scale by the simulator.
+
+use std::collections::BTreeMap;
+
+use crate::config::ModelConfig;
+
+/// Placement of one MoE layer's experts over `workers` workers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlacement {
+    pub layer: usize,
+    pub n_experts: usize,
+    /// Expert-parallel degree for this layer (<= workers).
+    pub ep_degree: usize,
+    /// Data-parallel replication factor for this layer's experts
+    /// (workers / ep_degree) — the "multi-data" part of §4.1.3.
+    pub dp_degree: usize,
+    /// experts_of[w] = expert ids resident on worker w.
+    pub experts_of: Vec<Vec<usize>>,
+}
+
+impl LayerPlacement {
+    /// The paper's scheme: ep = min(E, W); each EP-group worker holds
+    /// E/ep experts; the W/ep replicas process different data shards.
+    pub fn balanced(layer: usize, n_experts: usize, workers: usize) -> Self {
+        assert!(workers > 0 && n_experts > 0);
+        let ep_degree = n_experts.min(workers);
+        let dp_degree = (workers / ep_degree).max(1);
+        let mut experts_of = vec![Vec::new(); workers];
+        for e in 0..n_experts {
+            // Round-robin keeps |max - min| <= 1 even when ep does not
+            // divide the expert count (PR-MoE layers have varying E).
+            let owner_in_group = e % ep_degree;
+            // replica r of the EP group lives at worker r*ep + owner.
+            for r in 0..dp_degree {
+                let w = r * ep_degree + owner_in_group;
+                if w < workers {
+                    experts_of[w].push(e);
+                }
+            }
+        }
+        LayerPlacement { layer, n_experts, ep_degree, dp_degree, experts_of }
+    }
+
+    /// Worker that owns expert `e` for replica group `replica`.
+    pub fn owner(&self, e: usize, replica: usize) -> usize {
+        (replica % self.dp_degree) * self.ep_degree + e % self.ep_degree
+    }
+
+    /// Max experts hosted by any single worker (the §4.1.3 balance metric).
+    pub fn max_experts_per_worker(&self) -> usize {
+        self.experts_of.iter().map(|v| v.len()).max().unwrap_or(0)
+    }
+
+    pub fn min_experts_per_worker(&self) -> usize {
+        self.experts_of
+            .iter()
+            .take(self.ep_degree) // replica 0 group
+            .map(|v| v.len())
+            .min()
+            .unwrap_or(0)
+    }
+}
+
+/// Whole-model placement: one LayerPlacement per MoE layer.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub workers: usize,
+    pub layers: BTreeMap<usize, LayerPlacement>,
+}
+
+impl Placement {
+    pub fn for_model(cfg: &ModelConfig, workers: usize) -> Self {
+        let layers = cfg
+            .moe_layers()
+            .into_iter()
+            .map(|(i, e)| (i, LayerPlacement::balanced(i, e, workers)))
+            .collect();
+        Placement { workers, layers }
+    }
+
+    pub fn layer(&self, i: usize) -> Option<&LayerPlacement> {
+        self.layers.get(&i)
+    }
+
+    /// All (layer, expert) pairs assigned to worker `w` — what the engine
+    /// ships to each fabric worker at startup.
+    pub fn worker_manifest(&self, w: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for (layer, lp) in &self.layers {
+            for &e in &lp.experts_of[w] {
+                out.push((*layer, e));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+
+    #[test]
+    fn paper_example_multi_degree() {
+        // §4.1.3: 128 workers, layers with 32/64/128 experts ->
+        // EP {32,64,128} x DP {4,2,1}, exactly one expert per worker.
+        for (e, want_ep, want_dp) in [(32, 32, 4), (64, 64, 2), (128, 128, 1)] {
+            let lp = LayerPlacement::balanced(0, e, 128);
+            assert_eq!(lp.ep_degree, want_ep);
+            assert_eq!(lp.dp_degree, want_dp);
+            assert_eq!(lp.max_experts_per_worker(), 1);
+        }
+    }
+
+    #[test]
+    fn fewer_workers_than_experts() {
+        let lp = LayerPlacement::balanced(1, 8, 4);
+        assert_eq!(lp.ep_degree, 4);
+        assert_eq!(lp.dp_degree, 1);
+        assert_eq!(lp.max_experts_per_worker(), 2);
+        // every expert exactly once across the EP group
+        let mut all: Vec<usize> =
+            lp.experts_of.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn owner_matches_expert_lists() {
+        let lp = LayerPlacement::balanced(0, 8, 4);
+        for e in 0..8 {
+            let w = lp.owner(e, 0);
+            assert!(lp.experts_of[w].contains(&e), "expert {e} owner {w}");
+        }
+    }
+
+    #[test]
+    fn replicas_hold_same_expert_sets() {
+        let lp = LayerPlacement::balanced(0, 4, 8); // dp=2
+        assert_eq!(lp.dp_degree, 2);
+        for i in 0..4 {
+            assert_eq!(lp.experts_of[i], lp.experts_of[4 + i]);
+        }
+    }
+
+    #[test]
+    fn property_every_expert_exactly_once_per_replica() {
+        prop(150, |c| {
+            let e = c.usize(1, 64);
+            let w = c.usize(1, 64);
+            let lp = LayerPlacement::balanced(0, e, w);
+            // replica group 0 = workers 0..ep_degree
+            let mut seen = vec![0usize; e];
+            for worker in 0..lp.ep_degree {
+                for &ex in &lp.experts_of[worker] {
+                    seen[ex] += 1;
+                }
+            }
+            crate::prop_assert!(
+                seen.iter().all(|&c| c == 1),
+                "experts not exactly-once: {seen:?} (e={e}, w={w})"
+            );
+            // near-perfect balance: max-min <= 1 within the EP group
+            let diff = lp.max_experts_per_worker() as i64
+                - lp.min_experts_per_worker() as i64;
+            crate::prop_assert!(diff <= 1, "imbalance {diff} (e={e}, w={w})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pr_moe_model_gets_per_layer_degrees() {
+        let cfg = crate::config::ModelConfig {
+            name: "prmoe-test".into(),
+            vocab_size: 512,
+            n_layers: 4,
+            d_model: 128,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 64,
+            experts_schedule: vec![0, 4, 0, 8],
+            residual: true,
+            top2: false,
+            capacity_factor: 2.0,
+            moe_loss_coef: 0.01,
+            teacher: None,
+            kd_alpha: 1.0,
+            num_params: 0,
+        };
+        let p = Placement::for_model(&cfg, 8);
+        assert_eq!(p.layer(1).unwrap().ep_degree, 4);
+        assert_eq!(p.layer(1).unwrap().dp_degree, 2);
+        assert_eq!(p.layer(3).unwrap().ep_degree, 8);
+        assert_eq!(p.layer(3).unwrap().dp_degree, 1);
+        // worker 0 hosts one expert from each MoE layer
+        let m = p.worker_manifest(0);
+        assert_eq!(m.len(), 2);
+    }
+}

@@ -1,0 +1,167 @@
+//! Request router: admission control and the inbound queue.
+//!
+//! The leader's front door — validates requests against model limits,
+//! assigns ids, timestamps arrivals, and exposes the FIFO the batcher
+//! drains.  (The cross-GPU "routing" of tokens to experts is
+//! `gate.rs`/`alltoall.rs`; this module routes *requests*.)
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+/// An admitted generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrival: Instant,
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Time from arrival to first generated token.
+    pub ttft: std::time::Duration,
+    /// Time from arrival to completion.
+    pub total: std::time::Duration,
+}
+
+/// Admission limits (derived from the model + serving config).
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    pub max_seq: usize,
+    pub vocab_size: usize,
+    pub default_max_new: usize,
+}
+
+#[derive(Debug)]
+pub struct Router {
+    limits: Limits,
+    next_id: u64,
+    queue: VecDeque<Request>,
+    pub admitted: u64,
+    pub rejected: u64,
+}
+
+impl Router {
+    pub fn new(limits: Limits) -> Self {
+        Router { limits, next_id: 1, queue: VecDeque::new(), admitted: 0,
+                 rejected: 0 }
+    }
+
+    /// Validate + enqueue.  Returns the assigned request id.
+    pub fn submit(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new_tokens: Option<usize>,
+    ) -> Result<u64> {
+        let max_new = max_new_tokens.unwrap_or(self.limits.default_max_new);
+        if prompt.is_empty() {
+            self.rejected += 1;
+            bail!("empty prompt");
+        }
+        if prompt.len() + max_new > self.limits.max_seq {
+            self.rejected += 1;
+            bail!(
+                "prompt ({}) + max_new ({}) exceeds max_seq {}",
+                prompt.len(), max_new, self.limits.max_seq
+            );
+        }
+        if let Some(&bad) = prompt
+            .iter()
+            .find(|&&t| t < 0 || t as usize >= self.limits.vocab_size)
+        {
+            self.rejected += 1;
+            bail!("token {bad} outside vocab {}", self.limits.vocab_size);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.admitted += 1;
+        self.queue.push_back(Request {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            arrival: Instant::now(),
+        });
+        Ok(id)
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.queue.pop_front()
+    }
+
+    /// Pop up to `n` requests (batch formation).
+    pub fn pop_up_to(&mut self, n: usize) -> Vec<Request> {
+        let take = n.min(self.queue.len());
+        self.queue.drain(..take).collect()
+    }
+
+    /// Age of the oldest waiting request (drives batching timeout).
+    pub fn oldest_wait(&self) -> Option<std::time::Duration> {
+        self.queue.front().map(|r| r.arrival.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> Limits {
+        Limits { max_seq: 64, vocab_size: 512, default_max_new: 16 }
+    }
+
+    #[test]
+    fn fifo_order_and_ids() {
+        let mut r = Router::new(limits());
+        let a = r.submit(vec![1, 2, 3], None).unwrap();
+        let b = r.submit(vec![4], Some(8)).unwrap();
+        assert!(b > a);
+        assert_eq!(r.queue_len(), 2);
+        assert_eq!(r.pop().unwrap().id, a);
+        assert_eq!(r.pop().unwrap().id, b);
+        assert!(r.pop().is_none());
+    }
+
+    #[test]
+    fn admission_limits() {
+        let mut r = Router::new(limits());
+        assert!(r.submit(vec![], None).is_err());
+        assert!(r.submit(vec![1; 60], Some(10)).is_err()); // 70 > 64
+        assert!(r.submit(vec![600], None).is_err()); // out of vocab
+        assert!(r.submit(vec![-1], None).is_err());
+        assert_eq!(r.rejected, 4);
+        assert_eq!(r.admitted, 0);
+        assert!(r.submit(vec![1; 48], Some(16)).is_ok()); // exactly max_seq
+    }
+
+    #[test]
+    fn pop_up_to_drains_prefix() {
+        let mut r = Router::new(limits());
+        for i in 0..5 {
+            r.submit(vec![1 + i], None).unwrap();
+        }
+        let batch = r.pop_up_to(3);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].prompt, vec![1]);
+        assert_eq!(r.queue_len(), 2);
+        assert_eq!(r.pop_up_to(10).len(), 2);
+    }
+
+    #[test]
+    fn oldest_wait_tracks_head() {
+        let mut r = Router::new(limits());
+        assert!(r.oldest_wait().is_none());
+        r.submit(vec![1], None).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(r.oldest_wait().unwrap().as_micros() >= 2000);
+    }
+}

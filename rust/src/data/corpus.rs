@@ -1,0 +1,210 @@
+//! Mixture-of-domains Markov corpus generator (see module docs in mod.rs).
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Corpus generation settings.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub vocab_size: usize,
+    /// Latent domains, each with its own Markov transition structure.
+    pub n_domains: usize,
+    /// Tokens per generated sequence (train batches slice these).
+    pub seq_len: usize,
+    /// Sequences in the training split.
+    pub train_seqs: usize,
+    /// Sequences in the held-out validation split.
+    pub valid_seqs: usize,
+    pub seed: u64,
+    /// Zipf exponent of the per-domain emission head.
+    pub zipf_s: f64,
+    /// Sparsity: successors per (domain, token) pair.
+    pub branching: usize,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            vocab_size: 512,
+            n_domains: 8,
+            seq_len: 33, // train geometry: batch rows are [seq+1] tokens
+            train_seqs: 4096,
+            valid_seqs: 512,
+            seed: 20220717, // DeepSpeed-MoE arXiv v1 date
+            zipf_s: 1.05,
+            branching: 6,
+        }
+    }
+}
+
+/// A generated corpus: token sequences with domain labels.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub config: CorpusConfig,
+    pub train: Vec<Vec<i32>>,
+    pub valid: Vec<Vec<i32>>,
+    /// Domain id of each train/valid sequence (for eval-by-domain).
+    pub train_domain: Vec<usize>,
+    pub valid_domain: Vec<usize>,
+}
+
+/// Per-domain Markov tables: successors[token] = [(next, weight); branching].
+struct Domain {
+    successors: Vec<Vec<(usize, f64)>>,
+    start_tokens: Vec<usize>,
+}
+
+impl Corpus {
+    pub fn generate(config: CorpusConfig) -> Self {
+        assert!(config.vocab_size > 8, "vocab too small");
+        let mut rng = Rng::new(config.seed);
+        let zipf = Zipf::new(config.vocab_size - 4, config.zipf_s);
+
+        // Reserve ids 0..4 for specials: 0=pad, 1=bos, 2=eos, 3=sep.
+        let tok = |z: usize| z + 4;
+
+        let domains: Vec<Domain> = (0..config.n_domains)
+            .map(|_| {
+                let successors = (0..config.vocab_size)
+                    .map(|_| {
+                        (0..config.branching)
+                            .map(|_| {
+                                (tok(zipf.sample(&mut rng)),
+                                 0.25 + rng.f64())
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let start_tokens =
+                    (0..8).map(|_| tok(zipf.sample(&mut rng))).collect();
+                Domain { successors, start_tokens }
+            })
+            .collect();
+
+        let gen_split = |n: usize, rng: &mut Rng| {
+            let mut seqs = Vec::with_capacity(n);
+            let mut doms = Vec::with_capacity(n);
+            for i in 0..n {
+                let d = i % config.n_domains; // balanced domains
+                let domain = &domains[d];
+                let mut seq = Vec::with_capacity(config.seq_len);
+                seq.push(1i32); // bos
+                let mut cur =
+                    domain.start_tokens[rng.below(domain.start_tokens.len())];
+                while seq.len() < config.seq_len {
+                    seq.push(cur as i32);
+                    let succ = &domain.successors[cur];
+                    let weights: Vec<f64> =
+                        succ.iter().map(|&(_, w)| w).collect();
+                    cur = succ[rng.weighted(&weights)].0;
+                }
+                seqs.push(seq);
+                doms.push(d);
+            }
+            (seqs, doms)
+        };
+
+        let (train, train_domain) = gen_split(config.train_seqs, &mut rng);
+        let (valid, valid_domain) = gen_split(config.valid_seqs, &mut rng);
+        Corpus { config, train, valid, train_domain, valid_domain }
+    }
+
+    /// Deterministic training batch: `batch` rows of `seq_len` tokens,
+    /// flattened row-major, drawn by a seeded schedule over the train split.
+    pub fn train_batch(&self, step: usize, batch: usize) -> Vec<i32> {
+        let mut rng = Rng::new(self.config.seed ^ (step as u64) << 1);
+        let mut out = Vec::with_capacity(batch * self.config.seq_len);
+        for _ in 0..batch {
+            let idx = rng.below(self.train.len());
+            out.extend_from_slice(&self.train[idx]);
+        }
+        out
+    }
+
+    /// Fixed validation batch `i` (no randomness: comparable across runs).
+    pub fn valid_batch(&self, i: usize, batch: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * self.config.seq_len);
+        for b in 0..batch {
+            let idx = (i * batch + b) % self.valid.len();
+            out.extend_from_slice(&self.valid[idx]);
+        }
+        out
+    }
+
+    pub fn n_valid_batches(&self, batch: usize) -> usize {
+        self.valid.len() / batch
+    }
+
+    /// A prompt for serving demos: the first `len` tokens of a valid seq.
+    pub fn prompt(&self, i: usize, len: usize) -> Vec<i32> {
+        let seq = &self.valid[i % self.valid.len()];
+        seq[..len.min(seq.len())].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Corpus::generate(CorpusConfig::default());
+        let b = Corpus::generate(CorpusConfig::default());
+        assert_eq!(a.train[0], b.train[0]);
+        assert_eq!(a.valid[10], b.valid[10]);
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let cfg = CorpusConfig { train_seqs: 64, valid_seqs: 16,
+                                 ..Default::default() };
+        let c = Corpus::generate(cfg.clone());
+        assert_eq!(c.train.len(), 64);
+        assert_eq!(c.valid.len(), 16);
+        for seq in c.train.iter().chain(&c.valid) {
+            assert_eq!(seq.len(), cfg.seq_len);
+            assert!(seq.iter().all(|&t| (0..cfg.vocab_size as i32).contains(&t)));
+            assert_eq!(seq[0], 1); // bos
+        }
+    }
+
+    #[test]
+    fn domains_have_distinct_statistics() {
+        // Bigram distributions must differ across domains, else experts have
+        // nothing to specialize on.
+        let c = Corpus::generate(CorpusConfig {
+            train_seqs: 512, ..Default::default()
+        });
+        let mut bigrams: Vec<std::collections::HashSet<(i32, i32)>> =
+            vec![Default::default(); c.config.n_domains];
+        for (seq, &d) in c.train.iter().zip(&c.train_domain) {
+            for w in seq.windows(2) {
+                bigrams[d].insert((w[0], w[1]));
+            }
+        }
+        let inter: Vec<_> = bigrams[0].intersection(&bigrams[1]).collect();
+        let overlap = inter.len() as f64 / bigrams[0].len() as f64;
+        assert!(overlap < 0.3, "domains too similar: overlap {overlap:.2}");
+    }
+
+    #[test]
+    fn batches_are_deterministic_and_sized() {
+        let c = Corpus::generate(CorpusConfig {
+            train_seqs: 64, valid_seqs: 32, ..Default::default()
+        });
+        assert_eq!(c.train_batch(3, 4), c.train_batch(3, 4));
+        assert_ne!(c.train_batch(3, 4), c.train_batch(4, 4));
+        assert_eq!(c.train_batch(0, 4).len(), 4 * c.config.seq_len);
+        assert_eq!(c.valid_batch(0, 8), c.valid_batch(0, 8));
+        assert_eq!(c.n_valid_batches(8), 4);
+    }
+
+    #[test]
+    fn prompts_come_from_valid_split() {
+        let c = Corpus::generate(CorpusConfig {
+            train_seqs: 16, valid_seqs: 8, ..Default::default()
+        });
+        let p = c.prompt(2, 10);
+        assert_eq!(p.len(), 10);
+        assert_eq!(p, c.valid[2][..10].to_vec());
+    }
+}

@@ -1,0 +1,138 @@
+//! Synthetic zero-shot evaluation suite (Table 2/4/5 analogue).
+//!
+//! The paper evaluates on LAMBADA / PIQA / BoolQ / RACE-h / TriviaQA / WebQs.
+//! Those datasets measure whether models of different architectures reach the
+//! same quality; the synthetic analogue preserving that comparison is
+//! per-domain held-out completion: given the first `k` tokens of an unseen
+//! sequence from domain `d`, predict token `k+1` (top-1 accuracy).  Each
+//! domain plays the role of one downstream task — domains differ in
+//! transition structure exactly as the paper's tasks differ in skill.
+
+use super::corpus::Corpus;
+
+/// One synthetic task: completion over a single latent domain.
+#[derive(Debug, Clone)]
+pub struct EvalTask {
+    pub name: String,
+    pub domain: usize,
+    /// (prompt tokens, gold next token) pairs.
+    pub items: Vec<(Vec<i32>, i32)>,
+}
+
+/// The full suite: one task per domain.
+#[derive(Debug, Clone)]
+pub struct EvalSuite {
+    pub tasks: Vec<EvalTask>,
+}
+
+impl EvalSuite {
+    /// Build from the corpus' validation split.  `prompt_len` tokens of
+    /// context, predict the next.
+    pub fn from_corpus(corpus: &Corpus, prompt_len: usize) -> Self {
+        let n_domains = corpus.config.n_domains;
+        let mut tasks: Vec<EvalTask> = (0..n_domains)
+            .map(|d| EvalTask {
+                name: format!("domain-{d}"),
+                domain: d,
+                items: Vec::new(),
+            })
+            .collect();
+        for (seq, &d) in corpus.valid.iter().zip(&corpus.valid_domain) {
+            if seq.len() > prompt_len {
+                tasks[d]
+                    .items
+                    .push((seq[..prompt_len].to_vec(), seq[prompt_len]));
+            }
+        }
+        EvalSuite { tasks }
+    }
+
+    /// Score a predictor: `predict(prompt) -> token`.  Returns per-task
+    /// accuracies plus the mean (the paper reports per-task and averages).
+    pub fn score<F: FnMut(&[i32]) -> i32>(
+        &self,
+        mut predict: F,
+    ) -> (Vec<(String, f64)>, f64) {
+        let mut per_task = Vec::new();
+        for t in &self.tasks {
+            if t.items.is_empty() {
+                continue;
+            }
+            let correct = t
+                .items
+                .iter()
+                .filter(|(p, gold)| predict(p) == *gold)
+                .count();
+            per_task.push((
+                t.name.clone(),
+                correct as f64 / t.items.len() as f64,
+            ));
+        }
+        let mean = if per_task.is_empty() {
+            0.0
+        } else {
+            per_task.iter().map(|(_, a)| a).sum::<f64>() / per_task.len() as f64
+        };
+        (per_task, mean)
+    }
+
+    pub fn total_items(&self) -> usize {
+        self.tasks.iter().map(|t| t.items.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusConfig;
+
+    fn tiny_corpus() -> Corpus {
+        Corpus::generate(CorpusConfig {
+            train_seqs: 32,
+            valid_seqs: 64,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn suite_covers_all_domains() {
+        let c = tiny_corpus();
+        let s = EvalSuite::from_corpus(&c, 8);
+        assert_eq!(s.tasks.len(), c.config.n_domains);
+        assert_eq!(s.total_items(), 64);
+        for t in &s.tasks {
+            assert_eq!(t.items.len(), 64 / c.config.n_domains);
+            for (p, _) in &t.items {
+                assert_eq!(p.len(), 8);
+            }
+        }
+    }
+
+    #[test]
+    fn perfect_predictor_scores_one() {
+        let c = tiny_corpus();
+        let s = EvalSuite::from_corpus(&c, 8);
+        // Look up the gold answer by matching the prompt in the valid split.
+        let (per_task, mean) = s.score(|prompt| {
+            c.valid
+                .iter()
+                .find(|seq| &seq[..8] == prompt)
+                .map(|seq| seq[8])
+                .unwrap_or(-1)
+        });
+        assert!(mean > 0.99, "mean {mean}");
+        assert!(per_task.iter().all(|(_, a)| *a > 0.99));
+    }
+
+    #[test]
+    fn random_predictor_scores_near_chance() {
+        let c = tiny_corpus();
+        let s = EvalSuite::from_corpus(&c, 8);
+        let mut x = 0i32;
+        let (_, mean) = s.score(|_| {
+            x = (x + 7) % 512;
+            x
+        });
+        assert!(mean < 0.2, "mean {mean}");
+    }
+}

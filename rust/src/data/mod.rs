@@ -1,0 +1,22 @@
+//! Synthetic corpus + batching + evaluation tasks.
+//!
+//! The paper trains on the 300B-token MT-NLG corpus, which we do not have
+//! (DESIGN.md §0 substitution table).  The substitute must preserve the one
+//! property the architecture comparisons depend on: **enough latent
+//! structure that extra expert capacity helps**.  We therefore generate a
+//! mixture-of-domains Markov corpus: `n_domains` first-order Markov chains
+//! over a shared Zipfian vocabulary, each with its own transition structure.
+//! A model must allocate capacity per domain to predict well — which is
+//! exactly the regime where MoE experts specialize (and where a small dense
+//! model underfits), reproducing the paper's dense-vs-MoE quality gap
+//! qualitatively.
+//!
+//! The evaluation side mirrors the paper's zero-shot suite with synthetic
+//! analogues: per-domain held-out completion accuracy (LAMBADA-style "guess
+//! the final token") over sequences the model never saw in training.
+
+pub mod corpus;
+pub mod eval;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use eval::{EvalSuite, EvalTask};

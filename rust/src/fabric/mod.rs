@@ -1,0 +1,359 @@
+//! In-process cluster fabric: expert-parallel workers + byte-counted links.
+//!
+//! Each worker is an OS thread owning its **own** PJRT runtime (the `xla`
+//! client is thread-bound) and the expert FFN weights assigned to it by the
+//! [`crate::coordinator::placement`] module.  The leader dispatches gathered
+//! token blocks; workers run the AOT `expert_ffn_c{C}` program (padding each
+//! block up to the nearest compiled capacity) and send results back.
+//!
+//! Links are bounded channels with byte accounting ([`Traffic`]): every
+//! payload that crosses a worker boundary is counted, which is what the
+//! e2e bench uses to report communication volume per schedule.  The fabric
+//! also supports raw peer-to-peer routing ([`Fabric::route`]) so the
+//! all-to-all schedules of `coordinator::alltoall` are executed for real —
+//! relayed messages and all — in `rust/tests/integration_fabric.rs`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::alltoall::Plan;
+use crate::runtime::{HostTensor, ProgramSpec, Runtime};
+
+/// Cumulative traffic counters (shared, lock-free).
+#[derive(Debug, Default)]
+pub struct Traffic {
+    pub bytes_to_workers: AtomicU64,
+    pub bytes_from_workers: AtomicU64,
+    pub messages: AtomicU64,
+    /// Peer-to-peer bytes moved by `route` (all-to-all execution).
+    pub p2p_bytes: AtomicU64,
+    pub p2p_messages: AtomicU64,
+}
+
+impl Traffic {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_to_workers.load(Ordering::Relaxed)
+            + self.bytes_from_workers.load(Ordering::Relaxed)
+            + self.p2p_bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// Commands the leader sends to a worker.
+enum Cmd {
+    /// Install expert weights [w1, b1, w2, b2] for (layer, expert).
+    LoadExpert { layer: usize, expert: usize, weights: Vec<HostTensor> },
+    /// Run expert FFN on an unpadded [count, M] block; reply with FfnDone.
+    ExpertFfn { layer: usize, expert: usize, block: HostTensor, tag: u64 },
+    /// Deliver a raw p2p payload (all-to-all execution path).
+    Deliver { from: usize, payload: Vec<u8>, tag: u64 },
+    /// Forward a payload to another worker (relay hop), then ack.
+    Forward { to: usize, payload: Vec<u8>, tag: u64 },
+    Shutdown,
+}
+
+/// Replies from workers to the leader.
+pub enum Reply {
+    Loaded,
+    FfnDone { layer: usize, expert: usize, out: HostTensor, tag: u64 },
+    Delivered { worker: usize, from: usize, bytes: usize, tag: u64 },
+    Forwarded,
+    Err(String),
+}
+
+struct WorkerHandle {
+    tx: Sender<Cmd>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Program specs a worker needs (expert_ffn ladder for one (M, F) shape).
+#[derive(Clone)]
+pub struct WorkerPrograms {
+    /// ascending capacities with their specs: [(C, spec)]
+    pub expert_ffn: Vec<(usize, ProgramSpec)>,
+}
+
+pub struct Fabric {
+    workers: Vec<WorkerHandle>,
+    reply_rx: Receiver<Reply>,
+    pub traffic: Arc<Traffic>,
+    peer_txs: Vec<Sender<Cmd>>,
+}
+
+impl Fabric {
+    /// Spawn `n` workers, each compiling its own copies of the expert FFN
+    /// programs on first use.
+    pub fn spawn(n: usize, programs: WorkerPrograms) -> Result<Fabric> {
+        assert!(n > 0);
+        let traffic = Arc::new(Traffic::default());
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let mut txs = Vec::new();
+        let mut workers = Vec::new();
+        // Create all command channels first so workers can relay peer-to-peer.
+        let chans: Vec<(Sender<Cmd>, Receiver<Cmd>)> =
+            (0..n).map(|_| channel()).collect();
+        let peer_txs: Vec<Sender<Cmd>> =
+            chans.iter().map(|(tx, _)| tx.clone()).collect();
+        for (w, (tx, rx)) in chans.into_iter().enumerate() {
+            let reply_tx = reply_tx.clone();
+            let progs = programs.clone();
+            let peers = peer_txs.clone();
+            let traffic_w = traffic.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("dsmoe-worker-{w}"))
+                .spawn(move || worker_main(w, rx, reply_tx, progs, peers, traffic_w))
+                .context("spawning worker")?;
+            txs.push(tx.clone());
+            workers.push(WorkerHandle { tx, join: Some(join) });
+        }
+        Ok(Fabric { workers, reply_rx, traffic, peer_txs })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Ship expert weights to their owning worker (startup).
+    pub fn load_expert(
+        &self,
+        worker: usize,
+        layer: usize,
+        expert: usize,
+        weights: Vec<HostTensor>,
+    ) -> Result<()> {
+        let bytes: usize = weights.iter().map(|t| t.byte_len()).sum();
+        self.traffic
+            .bytes_to_workers
+            .fetch_add(bytes as u64, Ordering::Relaxed);
+        self.workers[worker]
+            .tx
+            .send(Cmd::LoadExpert { layer, expert, weights })
+            .context("worker gone")?;
+        match self.reply_rx.recv()? {
+            Reply::Loaded => Ok(()),
+            Reply::Err(e) => anyhow::bail!("worker {worker}: {e}"),
+            _ => anyhow::bail!("unexpected reply to LoadExpert"),
+        }
+    }
+
+    /// Dispatch one expert's token block (non-blocking).
+    pub fn dispatch_ffn(
+        &self,
+        worker: usize,
+        layer: usize,
+        expert: usize,
+        block: HostTensor,
+        tag: u64,
+    ) -> Result<()> {
+        self.traffic
+            .bytes_to_workers
+            .fetch_add(block.byte_len() as u64, Ordering::Relaxed);
+        self.traffic.messages.fetch_add(1, Ordering::Relaxed);
+        self.workers[worker]
+            .tx
+            .send(Cmd::ExpertFfn { layer, expert, block, tag })
+            .context("worker gone")
+    }
+
+    /// Collect `n` FFN results (any order).
+    pub fn collect_ffn(&self, n: usize) -> Result<Vec<(usize, usize, HostTensor, u64)>> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match self.reply_rx.recv()? {
+                Reply::FfnDone { layer, expert, out: t, tag } => {
+                    self.traffic
+                        .bytes_from_workers
+                        .fetch_add(t.byte_len() as u64, Ordering::Relaxed);
+                    out.push((layer, expert, t, tag));
+                }
+                Reply::Err(e) => anyhow::bail!("worker error: {e}"),
+                _ => {}
+            }
+        }
+        Ok(out)
+    }
+
+    /// Execute an all-to-all plan with raw payloads for real: phase by
+    /// phase, messages of a phase in flight concurrently, hierarchical
+    /// relays forwarded by the intermediate worker.  `payload_of` builds
+    /// the bytes for each plan message (typically `msg.bytes` long);
+    /// returns (receiver, sender, bytes) tuples observed at destinations.
+    pub fn route(
+        &self,
+        plan: &Plan,
+        payload_of: impl Fn(&crate::coordinator::alltoall::Message) -> Vec<u8>,
+    ) -> Result<Vec<(usize, usize, usize)>> {
+        let mut delivered = Vec::new();
+        let mut tag = 0u64;
+        for phase in 0..plan.n_phases {
+            let msgs: Vec<_> = plan
+                .messages
+                .iter()
+                .filter(|m| m.phase == phase)
+                .collect();
+            if msgs.is_empty() {
+                continue;
+            }
+            for m in &msgs {
+                tag += 1;
+                let payload = payload_of(m);
+                self.traffic
+                    .p2p_bytes
+                    .fetch_add(payload.len() as u64, Ordering::Relaxed);
+                self.traffic.p2p_messages.fetch_add(1, Ordering::Relaxed);
+                self.peer_txs[m.src]
+                    .send(Cmd::Forward { to: m.dst, payload, tag })
+                    .context("worker gone")?;
+            }
+            // Phase barrier: each Forward triggers a Delivered at the
+            // destination plus a Forwarded ack from the relay source.
+            let mut acks = 0;
+            let want = msgs.len() * 2;
+            while acks < want {
+                match self.reply_rx.recv()? {
+                    Reply::Delivered { worker, from, bytes, .. } => {
+                        delivered.push((worker, from, bytes));
+                        acks += 1;
+                    }
+                    Reply::Forwarded => acks += 1,
+                    Reply::Err(e) => anyhow::bail!("route: {e}"),
+                    _ => {}
+                }
+            }
+        }
+        Ok(delivered)
+    }
+
+    pub fn shutdown(mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Drop for Fabric {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+fn worker_main(
+    me: usize,
+    rx: Receiver<Cmd>,
+    reply: Sender<Reply>,
+    programs: WorkerPrograms,
+    peers: Vec<Sender<Cmd>>,
+    _traffic: Arc<Traffic>,
+) {
+    // Thread-local runtime; compile lazily on first use per block size.
+    let runtime = match Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = reply.send(Reply::Err(format!("runtime init: {e:#}")));
+            return;
+        }
+    };
+    let mut experts: HashMap<(usize, usize), Vec<xla::Literal>> = HashMap::new();
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Shutdown => break,
+            Cmd::LoadExpert { layer, expert, weights } => {
+                let lits: Result<Vec<_>> =
+                    weights.iter().map(|t| t.to_literal()).collect();
+                match lits {
+                    Ok(l) => {
+                        experts.insert((layer, expert), l);
+                        let _ = reply.send(Reply::Loaded);
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Reply::Err(format!("{e:#}")));
+                    }
+                }
+            }
+            Cmd::ExpertFfn { layer, expert, block, tag } => {
+                let r = run_expert_ffn(
+                    &runtime, &programs, &experts, layer, expert, &block,
+                );
+                match r {
+                    Ok(out) => {
+                        let _ = reply.send(Reply::FfnDone {
+                            layer,
+                            expert,
+                            out,
+                            tag,
+                        });
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Reply::Err(format!(
+                            "worker {me} ffn l{layer} e{expert}: {e:#}"
+                        )));
+                    }
+                }
+            }
+            Cmd::Forward { to, payload, tag } => {
+                // Relay hop: push to the destination peer, ack the leader.
+                let _ = peers[to].send(Cmd::Deliver { from: me, payload, tag });
+                let _ = reply.send(Reply::Forwarded);
+            }
+            Cmd::Deliver { from, payload, tag } => {
+                let _ = reply.send(Reply::Delivered {
+                    worker: me,
+                    from,
+                    bytes: payload.len(),
+                    tag,
+                });
+            }
+        }
+    }
+}
+
+fn run_expert_ffn(
+    runtime: &Runtime,
+    programs: &WorkerPrograms,
+    experts: &HashMap<(usize, usize), Vec<xla::Literal>>,
+    layer: usize,
+    expert: usize,
+    block: &HostTensor,
+) -> Result<HostTensor> {
+    let weights = experts
+        .get(&(layer, expert))
+        .with_context(|| format!("expert (l{layer}, e{expert}) not loaded"))?;
+    let count = block.shape[0];
+    let m = block.shape[1];
+    // Pad to the smallest compiled capacity.
+    let (cap, spec) = programs
+        .expert_ffn
+        .iter()
+        .find(|(c, _)| *c >= count)
+        .or_else(|| programs.expert_ffn.last())
+        .context("no expert_ffn programs")?;
+    anyhow::ensure!(count <= *cap, "block {count} exceeds largest capacity {cap}");
+    let mut padded = vec![0f32; cap * m];
+    padded[..count * m].copy_from_slice(block.as_f32()?);
+    let x = HostTensor::f32(&[*cap, m], padded).to_literal()?;
+
+    let prog = runtime.load(spec)?;
+    let mut inputs: Vec<&xla::Literal> = vec![&x];
+    inputs.extend(weights.iter());
+    let outs = prog.run_literal_refs(&inputs)?;
+    let full = HostTensor::from_literal(&outs[0])?;
+    // Slice back to the true count.
+    let data = full.as_f32()?[..count * m].to_vec();
+    Ok(HostTensor::f32(&[count, m], data))
+}

@@ -1,0 +1,30 @@
+//! # ds-moe — DeepSpeed-MoE reproduction
+//!
+//! A three-layer reproduction of *DeepSpeed-MoE: Advancing Mixture-of-Experts
+//! Inference and Training to Power Next-Generation AI Scale* (ICML 2022):
+//!
+//! * **L1** — Pallas kernels (fused gating, scatter/gather layout transforms,
+//!   grouped expert FFN) in `python/compile/kernels/`;
+//! * **L2** — the JAX GPT+MoE model family in `python/compile/model.py`,
+//!   AOT-lowered to HLO text by `python/compile/aot.py`;
+//! * **L3** — this crate: the serving coordinator (routing, batching, expert
+//!   parallelism, KV-cache management), the PJRT runtime that executes the
+//!   AOT artifacts, the training driver (incl. staged knowledge
+//!   distillation), and the A100 cluster performance simulator that
+//!   regenerates the paper's Figures 10–15 and Table 3 at paper scale.
+//!
+//! Python never runs on the request path: after `make artifacts`, the Rust
+//! binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fabric;
+pub mod metrics;
+pub mod moe;
+pub mod runtime;
+pub mod server;
+pub mod simulator;
+pub mod tokenizer;
+pub mod training;
+pub mod util;

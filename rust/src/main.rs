@@ -1,0 +1,301 @@
+//! ds-moe CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   serve     — run the serving engine on a model and a synthetic workload
+//!   ep-serve  — expert-parallel serving across fabric workers
+//!   train     — train a variant on the synthetic corpus
+//!   distill   — staged-KD Mixture-of-Students training
+//!   eval      — zero-shot cloze evaluation of a checkpoint
+//!   simulate  — paper-scale cluster simulations (Figs 10–15, Table 3)
+//!   info      — dump manifest / model inventory
+
+use anyhow::{Context, Result};
+
+use ds_moe::config::{AllToAllKind, ServingConfig};
+use ds_moe::data::{Corpus, CorpusConfig, EvalSuite};
+use ds_moe::runtime::Manifest;
+use ds_moe::server::{Engine, EpEngine};
+use ds_moe::simulator;
+use ds_moe::training::{Distiller, KdMode, LrSchedule, Trainer};
+use ds_moe::util::args::Args;
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = args.remove(0);
+    let rest = Args::parse(args);
+    let r = match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "ep-serve" => cmd_ep_serve(rest),
+        "train" => cmd_train(rest),
+        "distill" => cmd_distill(rest),
+        "eval" => cmd_eval(rest),
+        "simulate" => cmd_simulate(rest),
+        "info" => cmd_info(rest),
+        "--help" | "help" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "ds-moe — DeepSpeed-MoE reproduction\n\
+         usage: ds-moe <serve|ep-serve|train|distill|eval|simulate|info> \
+         [--help] [options]\n\
+         run a subcommand with --help for its options"
+    );
+}
+
+fn manifest(args: &mut Args) -> Result<Manifest> {
+    let root = args.get("artifacts", "artifacts",
+                        "artifact directory (make artifacts)");
+    Manifest::load(root)
+}
+
+fn corpus(args: &mut Args) -> Corpus {
+    let seed = args.get_usize("corpus-seed", 20220717, "corpus seed");
+    Corpus::generate(CorpusConfig { seed: seed as u64, ..Default::default() })
+}
+
+fn cmd_serve(mut args: Args) -> Result<()> {
+    let m = manifest(&mut args)?;
+    let model = args.get("model", "moe-s-8", "model variant to serve");
+    let n_requests =
+        args.get_usize("requests", 16, "synthetic requests to serve");
+    let max_new = args.get_usize("max-new", 12, "tokens to generate");
+    let prompt_len = args.get_usize("prompt-len", 8, "prompt length");
+    let serving = ServingConfig {
+        model: model.clone(),
+        max_new_tokens: max_new,
+        ..Default::default()
+    };
+    if args.has("help") {
+        eprint!("{}", args.usage("ds-moe serve"));
+        return Ok(());
+    }
+    let mut engine = Engine::new(&m, serving)?;
+    let corpus = corpus(&mut args);
+    println!("serving {model} ({} params)", engine.model_config().num_params);
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        engine.submit(corpus.prompt(i, prompt_len), Some(max_new))?;
+    }
+    let responses = engine.run_until_idle()?;
+    let wall = t0.elapsed();
+    let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    println!(
+        "{} responses, {toks} tokens in {wall:?} ({:.1} tok/s)",
+        responses.len(),
+        toks as f64 / wall.as_secs_f64()
+    );
+    let tok = ds_moe::tokenizer::Tokenizer::new(
+        engine.model_config().vocab_size,
+    );
+    for r in responses.iter().take(3) {
+        println!("  #{}: {}", r.id, tok.decode(&r.tokens));
+    }
+    println!("--- metrics ---\n{}", engine.metrics.report());
+    Ok(())
+}
+
+fn cmd_ep_serve(mut args: Args) -> Result<()> {
+    let m = manifest(&mut args)?;
+    let model = args.get("model", "moe-s-8", "MoE model variant");
+    let workers = args.get_usize("workers", 4, "fabric workers");
+    let batch = args.get_usize("batch", 8, "decode batch");
+    let steps = args.get_usize("steps", 8, "decode steps to run");
+    let a2a: AllToAllKind = args
+        .get("alltoall", "hierarchical", "naive|hierarchical|coordinated")
+        .parse()?;
+    if args.has("help") {
+        eprint!("{}", args.usage("ds-moe ep-serve"));
+        return Ok(());
+    }
+    let corpus = corpus(&mut args);
+    let mut ep = EpEngine::new(&m, &model, workers, a2a, batch)?;
+    println!(
+        "ep-serve {model}: {workers} workers, batch {batch}, {a2a:?}"
+    );
+
+    let smax = ep.cfg.max_seq;
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    let mut lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+        lens[b] = plen;
+    }
+    let t0 = std::time::Instant::now();
+    let logits = ep.forward_prefill(&tokens, &lens)?;
+    let mut last: Vec<i32> = logits.iter().map(|row| argmax(row)).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    for _ in 0..steps {
+        let logits = ep.forward_decode(&last, &pos)?;
+        last = logits.iter().map(|row| argmax(row)).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "prefill + {steps} decode steps in {wall:?} \
+         ({:.1} tok/s aggregate)",
+        (batch * steps) as f64 / wall.as_secs_f64()
+    );
+    println!("traffic: {} bytes total, {} expert messages",
+             ep.traffic().total_bytes(),
+             ep.traffic().messages.load(std::sync::atomic::Ordering::Relaxed));
+    for s in &ep.load_stats {
+        println!(
+            "layer {}: imbalance {:.2} entropy {:.2} utilization {:.0}%",
+            s.layer, s.imbalance(), s.entropy(), 100.0 * s.utilization()
+        );
+    }
+    println!("--- metrics ---\n{}", ep.metrics.report());
+    Ok(())
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+fn cmd_train(mut args: Args) -> Result<()> {
+    let m = manifest(&mut args)?;
+    let model = args.get("model", "moe-s-8", "model variant");
+    let steps = args.get_usize("steps", 200, "training steps");
+    let eval_every = args.get_usize("eval-every", 20, "eval interval");
+    let lr = args.get_f64("lr", 1e-3, "peak learning rate");
+    let save = args.get("save", "", "checkpoint dir to save to (optional)");
+    if args.has("help") {
+        eprint!("{}", args.usage("ds-moe train"));
+        return Ok(());
+    }
+    let corpus = corpus(&mut args);
+    let sched = LrSchedule {
+        peak: lr,
+        min: lr / 10.0,
+        warmup_steps: steps / 20,
+        decay_steps: steps,
+    };
+    let mut tr = Trainer::new(&m, &model, sched)?;
+    println!("training {model} ({} params) for {steps} steps", tr.param_count());
+    tr.run(&corpus, steps, eval_every, false)?;
+    if !save.is_empty() {
+        tr.save(&save)?;
+        println!("saved checkpoint to {save}");
+    }
+    Ok(())
+}
+
+fn cmd_distill(mut args: Args) -> Result<()> {
+    let m = manifest(&mut args)?;
+    let student = args.get("student", "mos-s", "student model");
+    let teacher_ckpt = args.get(
+        "teacher-ckpt",
+        "checkpoints/prmoe-s",
+        "trained teacher checkpoint dir",
+    );
+    let steps = args.get_usize("steps", 200, "training steps");
+    let eval_every = args.get_usize("eval-every", 20, "eval interval");
+    let mode = args.get("mode", "staged", "none|full|staged");
+    let frac = args.get_f64("kd-stop-frac", 0.7, "staged KD stop fraction");
+    let lr = args.get_f64("lr", 1e-3, "peak learning rate");
+    let save = args.get("save", "", "checkpoint dir to save to (optional)");
+    if args.has("help") {
+        eprint!("{}", args.usage("ds-moe distill"));
+        return Ok(());
+    }
+    let kd = match mode.as_str() {
+        "none" => KdMode::None,
+        "full" => KdMode::Full,
+        "staged" => KdMode::Staged { frac },
+        other => anyhow::bail!("unknown KD mode {other}"),
+    };
+    let corpus = corpus(&mut args);
+    let sched = LrSchedule {
+        peak: lr,
+        min: lr / 10.0,
+        warmup_steps: steps / 20,
+        decay_steps: steps,
+    };
+    let mut d = Distiller::new(&m, &student, &teacher_ckpt, sched, kd)?;
+    println!("distilling {student} (mode {mode}) for {steps} steps");
+    d.run(&corpus, steps, eval_every, false)?;
+    if !save.is_empty() {
+        d.student.save(&save)?;
+        println!("saved student checkpoint to {save}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(mut args: Args) -> Result<()> {
+    let m = manifest(&mut args)?;
+    let model = args.get("model", "moe-s-8", "model variant");
+    let ckpt = args.get("ckpt", "", "trained checkpoint dir (default: initial)");
+    let prompt_len = args.get_usize("prompt-len", 8, "cloze prompt length");
+    if args.has("help") {
+        eprint!("{}", args.usage("ds-moe eval"));
+        return Ok(());
+    }
+    let corpus = corpus(&mut args);
+    let suite = EvalSuite::from_corpus(&corpus, prompt_len);
+    let sched = LrSchedule { peak: 0.0, min: 0.0, warmup_steps: 1,
+                             decay_steps: 1 };
+    let mut tr = Trainer::new(&m, &model, sched)?;
+    if !ckpt.is_empty() {
+        tr.restore(&ckpt).context("restoring checkpoint")?;
+    }
+    let valid = tr.eval(&corpus, 8)?;
+    let (per_task, mean) = tr.zero_shot(&suite, prompt_len)?;
+    println!("{model}: valid loss {valid:.4}");
+    for (name, acc) in per_task {
+        println!("  {name}: {:.1}%", 100.0 * acc);
+    }
+    println!("  mean: {:.1}%", 100.0 * mean);
+    Ok(())
+}
+
+fn cmd_simulate(mut args: Args) -> Result<()> {
+    let what = args.get("figure", "fig10",
+                        "fig10|fig11|fig12|fig13|fig14|fig15|table3");
+    if args.has("help") {
+        eprint!("{}", args.usage("ds-moe simulate"));
+        return Ok(());
+    }
+    simulator::run_named(&what)
+}
+
+fn cmd_info(mut args: Args) -> Result<()> {
+    let m = manifest(&mut args)?;
+    println!("{} models, {} shared programs", m.models.len(), m.shared.len());
+    for (name, arts) in &m.models {
+        println!(
+            "  {name:<22} {:>10} params  layers {:?}  programs: {}",
+            arts.config.num_params,
+            arts.config.experts_schedule,
+            arts.programs.keys().cloned().collect::<Vec<_>>().join(",")
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! Serving metrics registry: named counters + latency histograms, shared
+//! across coordinator threads.  Rendered as a text report (`/metrics`-style)
+//! by the server and quoted by the e2e bench.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    latencies: BTreeMap<String, LatencyHistogram>,
+}
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut m = self.inner.lock().unwrap();
+        *m.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn gauge(&self, name: &str, value: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn observe_ns(&self, name: &str, ns: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.latencies.entry(name.to_string()).or_default().record(ns);
+    }
+
+    pub fn observe(&self, name: &str, d: std::time::Duration) {
+        self.observe_ns(name, d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Time a closure into histogram `name`.
+    pub fn timed<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = std::time::Instant::now();
+        let out = f();
+        self.observe(name, t.elapsed());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn percentile_ns(&self, name: &str, q: f64) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .latencies
+            .get(name)
+            .map(|h| h.percentile_ns(q))
+            .unwrap_or(0)
+    }
+
+    pub fn mean_ns(&self, name: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .latencies
+            .get(name)
+            .map(|h| h.mean_ns())
+            .unwrap_or(0.0)
+    }
+
+    /// Text report, one metric per line.
+    pub fn report(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &m.counters {
+            out.push_str(&format!("counter {k} {v}\n"));
+        }
+        for (k, v) in &m.gauges {
+            out.push_str(&format!("gauge {k} {v:.4}\n"));
+        }
+        for (k, h) in &m.latencies {
+            out.push_str(&format!("latency {k} {}\n", h.summary_string()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.inc("requests", 1);
+        m.inc("requests", 2);
+        m.gauge("queue_depth", 5.0);
+        assert_eq!(m.counter("requests"), 3);
+        assert_eq!(m.counter("missing"), 0);
+        let r = m.report();
+        assert!(r.contains("counter requests 3"));
+        assert!(r.contains("gauge queue_depth 5.0000"));
+    }
+
+    #[test]
+    fn latency_observation() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.observe_ns("decode", i * 1_000);
+        }
+        let p50 = m.percentile_ns("decode", 50.0);
+        assert!((45_000..60_000).contains(&p50), "p50 {p50}");
+        assert!(m.mean_ns("decode") > 0.0);
+    }
+
+    #[test]
+    fn timed_records() {
+        let m = Metrics::new();
+        let v = m.timed("op", || {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(m.percentile_ns("op", 50.0) >= 100_000);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.inc("n", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 400);
+    }
+}

@@ -1,0 +1,159 @@
+//! MoE accounting: expert load statistics, capacity math, and imbalance
+//! metrics used by the coordinator's placement decisions and surfaced by the
+//! serving metrics endpoint.
+
+/// Per-layer expert load tracker.
+#[derive(Debug, Clone)]
+pub struct ExpertLoadStats {
+    pub layer: usize,
+    pub n_experts: usize,
+    /// Tokens routed to each expert (cumulative).
+    pub tokens_per_expert: Vec<u64>,
+    /// Tokens dropped at this layer due to capacity (training-path only;
+    /// inference uses worst-case capacity and never drops).
+    pub dropped: u64,
+    pub total_tokens: u64,
+}
+
+impl ExpertLoadStats {
+    pub fn new(layer: usize, n_experts: usize) -> Self {
+        ExpertLoadStats {
+            layer,
+            n_experts,
+            tokens_per_expert: vec![0; n_experts],
+            dropped: 0,
+            total_tokens: 0,
+        }
+    }
+
+    pub fn record_assignments(&mut self, expert_ids: &[usize]) {
+        for &e in expert_ids {
+            debug_assert!(e < self.n_experts);
+            self.tokens_per_expert[e] += 1;
+        }
+        self.total_tokens += expert_ids.len() as u64;
+    }
+
+    pub fn record_dropped(&mut self, n: u64) {
+        self.dropped += n;
+    }
+
+    /// Load imbalance = max_e(load) / mean(load); 1.0 is perfectly balanced.
+    /// This is the quantity that makes naive expert-parallel placement slow
+    /// (§4.1.3: "some GPUs have more experts to process than the others").
+    pub fn imbalance(&self) -> f64 {
+        if self.total_tokens == 0 {
+            return 1.0;
+        }
+        let max = *self.tokens_per_expert.iter().max().unwrap() as f64;
+        let mean = self.total_tokens as f64 / self.n_experts as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Normalized routing entropy in [0, 1]: 1 = uniform expert usage.
+    pub fn entropy(&self) -> f64 {
+        if self.total_tokens == 0 || self.n_experts < 2 {
+            return 1.0;
+        }
+        let total = self.total_tokens as f64;
+        let h: f64 = self
+            .tokens_per_expert
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / total;
+                -p * p.ln()
+            })
+            .sum();
+        h / (self.n_experts as f64).ln()
+    }
+
+    /// Fraction of experts that received any traffic.
+    pub fn utilization(&self) -> f64 {
+        self.tokens_per_expert.iter().filter(|&&c| c > 0).count() as f64
+            / self.n_experts as f64
+    }
+}
+
+/// Expert capacity (GShard/Switch convention): tokens each expert can take.
+pub fn capacity(n_tokens: usize, n_experts: usize, capacity_factor: f64) -> usize {
+    ((capacity_factor * n_tokens as f64 / n_experts as f64).ceil() as usize)
+        .max(1)
+}
+
+/// Host-side top-1 gating over a `[T, E]` probability matrix (row-major):
+/// returns (expert_id, prob) per token.  This mirrors the L1 kernel — the
+/// coordinator needs the routing decision to drive the all-to-all, which is
+/// precisely the paper's "group and route all tokens with the same critical
+/// data path together" (§5.1).
+pub fn top1_route(probs: &[f32], n_experts: usize) -> Vec<(usize, f32)> {
+    assert_eq!(probs.len() % n_experts, 0);
+    probs
+        .chunks_exact(n_experts)
+        .map(|row| {
+            let mut best = 0;
+            for (i, &p) in row.iter().enumerate() {
+                if p > row[best] {
+                    best = i;
+                }
+            }
+            (best, row[best])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_formula() {
+        assert_eq!(capacity(512, 8, 2.0), 128);
+        assert_eq!(capacity(8, 8, 1.0), 1);
+        assert_eq!(capacity(1, 128, 1.0), 1); // never zero
+    }
+
+    #[test]
+    fn imbalance_and_entropy() {
+        let mut s = ExpertLoadStats::new(0, 4);
+        s.record_assignments(&[0, 1, 2, 3]);
+        assert!((s.imbalance() - 1.0).abs() < 1e-9);
+        assert!((s.entropy() - 1.0).abs() < 1e-9);
+        assert_eq!(s.utilization(), 1.0);
+
+        let mut skew = ExpertLoadStats::new(0, 4);
+        skew.record_assignments(&[0, 0, 0, 1]);
+        assert!(skew.imbalance() > 2.9);
+        assert!(skew.entropy() < 0.6);
+        assert_eq!(skew.utilization(), 0.5);
+    }
+
+    #[test]
+    fn empty_stats_are_neutral() {
+        let s = ExpertLoadStats::new(0, 8);
+        assert_eq!(s.imbalance(), 1.0);
+        assert_eq!(s.entropy(), 1.0);
+    }
+
+    #[test]
+    fn top1_route_picks_argmax() {
+        let probs = vec![
+            0.1, 0.7, 0.2, // -> 1
+            0.5, 0.3, 0.2, // -> 0
+        ];
+        let r = top1_route(&probs, 3);
+        assert_eq!(r[0].0, 1);
+        assert!((r[0].1 - 0.7).abs() < 1e-6);
+        assert_eq!(r[1].0, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn top1_route_checks_shape() {
+        top1_route(&[0.1, 0.2, 0.3], 2);
+    }
+}

@@ -1,0 +1,277 @@
+//! Artifact manifest: the ABI between the Python build path and this
+//! runtime.  `artifacts/manifest.json` (written by `python/compile/aot.py`)
+//! describes every AOT program — file path, positional input/output specs —
+//! plus per-model configs, parameter layouts and checkpoint locations.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+/// One tensor slot of a program signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str().unwrap_or("").to_string(),
+            shape: j.req("shape")?.usize_vec()?,
+            dtype: j.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+        })
+    }
+
+    pub fn nelems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// True if this input slot is fed from the model checkpoint
+    /// (names are "param:<param name>").
+    pub fn is_param(&self) -> bool {
+        self.name.starts_with("param:")
+    }
+
+    pub fn param_name(&self) -> Option<&str> {
+        self.name.strip_prefix("param:")
+    }
+}
+
+/// One AOT-compiled program.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub key: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ProgramSpec {
+    fn from_json(key: &str, root: &Path, j: &Json) -> Result<Self> {
+        let specs = |field: &str| -> Result<Vec<TensorSpec>> {
+            j.req(field)?
+                .as_arr()
+                .context("specs must be an array")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(ProgramSpec {
+            key: key.to_string(),
+            file: root.join(
+                j.req("file")?.as_str().context("file must be a string")?,
+            ),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// Parameter layout entry (checkpoint ABI).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub config: ModelConfig,
+    pub params: Vec<ParamSpec>,
+    pub checkpoint_dir: PathBuf,
+    pub programs: BTreeMap<String, ProgramSpec>,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub eval_batch: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelArtifacts>,
+    pub shared: BTreeMap<String, ProgramSpec>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().context("models")? {
+            let config = ModelConfig::from_json(m.req("config")?)
+                .with_context(|| format!("config of model {name}"))?;
+            let params = m
+                .req("params")?
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.req("name")?.as_str().unwrap_or("").to_string(),
+                        shape: p.req("shape")?.usize_vec()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut programs = BTreeMap::new();
+            for (key, pj) in m.req("programs")?.as_obj().context("programs")? {
+                programs.insert(
+                    key.clone(),
+                    ProgramSpec::from_json(key, &root, pj)
+                        .with_context(|| format!("program {name}/{key}"))?,
+                );
+            }
+            let geo = m.req("train_geometry")?;
+            models.insert(
+                name.clone(),
+                ModelArtifacts {
+                    config,
+                    params,
+                    checkpoint_dir: root.join(
+                        m.req("checkpoint")?.as_str().context("checkpoint")?,
+                    ),
+                    programs,
+                    train_batch: geo.req("batch")?.as_usize().context("batch")?,
+                    train_seq: geo.req("seq")?.as_usize().context("seq")?,
+                    eval_batch: geo
+                        .req("eval_batch")?
+                        .as_usize()
+                        .context("eval_batch")?,
+                },
+            );
+        }
+
+        let mut shared = BTreeMap::new();
+        for (key, pj) in j.req("shared")?.as_obj().context("shared")? {
+            shared.insert(
+                key.clone(),
+                ProgramSpec::from_json(key, &root, pj)
+                    .with_context(|| format!("shared program {key}"))?,
+            );
+        }
+
+        Ok(Manifest { root, models, shared })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn shared_program(&self, key: &str) -> Result<&ProgramSpec> {
+        self.shared
+            .get(key)
+            .with_context(|| format!("shared program {key:?} not in manifest"))
+    }
+
+    /// Shared-program key helpers (must match aot.py naming).
+    pub fn key_attn_decode(m: usize, h: usize, b: usize, smax: usize) -> String {
+        format!("attn_decode_m{m}_h{h}_b{b}_s{smax}")
+    }
+
+    pub fn key_attn_prefill(m: usize, h: usize, b: usize, smax: usize) -> String {
+        format!("attn_prefill_m{m}_h{h}_b{b}_s{smax}")
+    }
+
+    pub fn key_embed(v: usize, m: usize, b: usize, s: usize) -> String {
+        format!("embed_v{v}_m{m}_b{b}_s{s}")
+    }
+
+    pub fn key_lm_head(v: usize, m: usize, b: usize) -> String {
+        format!("lm_head_v{v}_m{m}_b{b}")
+    }
+
+    pub fn key_dense_ffn(m: usize, f: usize, t: usize) -> String {
+        format!("dense_ffn_m{m}_f{f}_t{t}")
+    }
+
+    pub fn key_gate(m: usize, e: usize, t: usize) -> String {
+        format!("gate_m{m}_e{e}_t{t}")
+    }
+
+    pub fn key_expert_ffn(m: usize, f: usize, c: usize) -> String {
+        format!("expert_ffn_m{m}_f{f}_c{c}")
+    }
+
+    pub fn key_residual_branch(m: usize, f: usize, t: usize) -> String {
+        format!("residual_branch_m{m}_f{f}_t{t}")
+    }
+
+    /// Smallest compiled expert-block capacity >= `need` (aot.py's
+    /// EXPERT_BLOCK_SIZES ladder).
+    pub fn expert_block_sizes(&self) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .shared
+            .keys()
+            .filter_map(|k| {
+                k.rsplit_once("_c").and_then(|(pre, c)| {
+                    pre.starts_with("expert_ffn").then(|| c.parse().ok())?
+                })
+            })
+            .collect();
+        sizes.sort();
+        sizes.dedup();
+        sizes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_param_detection() {
+        let t = TensorSpec {
+            name: "param:layer0.attn.wq".into(),
+            shape: vec![8, 8],
+            dtype: "f32".into(),
+        };
+        assert!(t.is_param());
+        assert_eq!(t.param_name(), Some("layer0.attn.wq"));
+        assert_eq!(t.nelems(), 64);
+    }
+
+    #[test]
+    fn key_naming_matches_aot() {
+        assert_eq!(
+            Manifest::key_attn_decode(128, 4, 8, 64),
+            "attn_decode_m128_h4_b8_s64"
+        );
+        assert_eq!(Manifest::key_expert_ffn(128, 512, 16),
+                   "expert_ffn_m128_f512_c16");
+    }
+
+    #[test]
+    fn manifest_loads_if_built() {
+        // Integration-level check; skipped when artifacts are absent.
+        let root = std::path::Path::new("artifacts");
+        if !root.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(root).unwrap();
+        assert!(!m.models.is_empty());
+        let ms = m.model("moe-s-8").unwrap();
+        assert!(ms.config.is_moe());
+        assert!(ms.programs.contains_key("train_step"));
+        // every referenced file exists
+        for p in ms.programs.values() {
+            assert!(p.file.exists(), "missing {:?}", p.file);
+        }
+    }
+}

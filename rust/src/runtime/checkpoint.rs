@@ -1,0 +1,193 @@
+//! Checkpoint I/O — the shared format between Python (`aot.py` writes the
+//! initial checkpoint) and the Rust training driver (reads, updates,
+//! re-writes):
+//!
+//! * `meta.json` — `{model, step, total_elems, params: [{name, shape,
+//!   dtype, offset, nelems}]}`
+//! * `params.bin` — all parameters as little-endian f32, concatenated in
+//!   `param_specs` order (offsets are element offsets, not bytes).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::host_tensor::HostTensor;
+
+/// A loaded checkpoint: named parameter tensors in ABI order.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub model: String,
+    pub step: usize,
+    pub names: Vec<String>,
+    pub tensors: Vec<HostTensor>,
+}
+
+impl Checkpoint {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {:?}/meta.json", dir))?;
+        let meta = Json::parse(&meta_text).context("parsing meta.json")?;
+        let bin = std::fs::read(dir.join("params.bin"))
+            .with_context(|| format!("reading {:?}/params.bin", dir))?;
+
+        let total = meta.req("total_elems")?.as_usize().context("total_elems")?;
+        if bin.len() != total * 4 {
+            bail!(
+                "params.bin is {} bytes, meta promises {} elems ({} bytes)",
+                bin.len(), total, total * 4
+            );
+        }
+
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        for p in meta.req("params")?.as_arr().context("params")? {
+            let name = p.req("name")?.as_str().context("name")?.to_string();
+            let shape = p.req("shape")?.usize_vec()?;
+            let offset = p.req("offset")?.as_usize().context("offset")?;
+            let nelems = p.req("nelems")?.as_usize().context("nelems")?;
+            if shape.iter().product::<usize>() != nelems {
+                bail!("param {name}: shape {shape:?} != nelems {nelems}");
+            }
+            let start = offset * 4;
+            let end = start + nelems * 4;
+            if end > bin.len() {
+                bail!("param {name}: range {start}..{end} out of file");
+            }
+            let data: Vec<f32> = bin[start..end]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            names.push(name);
+            tensors.push(HostTensor::f32(&shape, data));
+        }
+
+        Ok(Checkpoint {
+            model: meta
+                .req("model")?
+                .as_str()
+                .context("model")?
+                .to_string(),
+            step: meta.req("step")?.as_usize().context("step")?,
+            names,
+            tensors,
+        })
+    }
+
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let mut bin: Vec<u8> = Vec::new();
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            let data = t.as_f32()?;
+            for v in data {
+                bin.extend_from_slice(&v.to_le_bytes());
+            }
+            entries.push(json::obj(vec![
+                ("name", json::s(name)),
+                ("shape", json::usizes(&t.shape)),
+                ("dtype", json::s("f32")),
+                ("offset", json::num(offset as f64)),
+                ("nelems", json::num(t.nelems() as f64)),
+            ]));
+            offset += t.nelems();
+        }
+        let meta = json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("step", json::num(self.step as f64)),
+            ("total_elems", json::num(offset as f64)),
+            ("params", Json::Arr(entries)),
+        ]);
+        std::fs::write(dir.join("params.bin"), &bin)?;
+        std::fs::write(dir.join("meta.json"), meta.to_string())?;
+        Ok(dir.to_path_buf())
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.tensors.iter().map(|t| t.nelems()).sum()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&HostTensor> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| &self.tensors[i])
+    }
+
+    /// Zero-filled optimizer-state twin (Adam m or v).
+    pub fn zeros_like(&self) -> Vec<HostTensor> {
+        self.tensors
+            .iter()
+            .map(|t| HostTensor::zeros_f32(&t.shape))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsmoe-ckpt-test-{}",
+            std::process::id()
+        ));
+        let ck = Checkpoint {
+            model: "test".into(),
+            step: 7,
+            names: vec!["a".into(), "b.w".into()],
+            tensors: vec![
+                HostTensor::f32(&[2, 2], vec![1., -2., 3.5, 0.25]),
+                HostTensor::f32(&[3], vec![9., 8., 7.]),
+            ],
+        };
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.model, "test");
+        assert_eq!(back.step, 7);
+        assert_eq!(back.names, ck.names);
+        assert_eq!(back.tensors, ck.tensors);
+        assert_eq!(back.total_elems(), 7);
+        assert_eq!(back.by_name("b.w").unwrap().shape, vec![3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_bin_detected() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsmoe-ckpt-corrupt-{}",
+            std::process::id()
+        ));
+        let ck = Checkpoint {
+            model: "t".into(),
+            step: 0,
+            names: vec!["a".into()],
+            tensors: vec![HostTensor::f32(&[2], vec![1., 2.])],
+        };
+        ck.save(&dir).unwrap();
+        // truncate params.bin
+        std::fs::write(dir.join("params.bin"), [0u8; 4]).unwrap();
+        let err = Checkpoint::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("bytes"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn initial_checkpoints_load_if_built() {
+        let root = std::path::Path::new("artifacts/ckpt/moe-s-8");
+        if !root.exists() {
+            return;
+        }
+        let ck = Checkpoint::load(root).unwrap();
+        assert_eq!(ck.model, "moe-s-8");
+        assert_eq!(ck.step, 0);
+        // tok_emb first per the ABI
+        assert_eq!(ck.names[0], "tok_emb");
+        assert!(ck.total_elems() > 1_000_000);
+    }
+}

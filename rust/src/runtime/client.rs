@@ -1,0 +1,252 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! One `Runtime` per thread (the `xla` crate's `PjRtClient` is `Rc`-based
+//! and thread-bound).  Programs are compiled lazily and cached by manifest
+//! key; `Program::run` validates inputs against the manifest specs so shape
+//! bugs surface as errors naming the offending slot rather than opaque XLA
+//! failures.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ProgramSpec, TensorSpec};
+use super::host_tensor::HostTensor;
+
+/// Thread-local PJRT CPU runtime with a compiled-program cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Program>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) the program described by `spec`.
+    pub fn load(&self, spec: &ProgramSpec) -> Result<Rc<Program>> {
+        if let Some(p) = self.cache.borrow().get(&spec.key) {
+            return Ok(p.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.key))?;
+        tracing_compile(&spec.key, t0.elapsed());
+        let prog = Rc::new(Program {
+            spec: spec.clone(),
+            exe,
+            client: self.client.clone(),
+        });
+        self.cache.borrow_mut().insert(spec.key.clone(), prog.clone());
+        Ok(prog)
+    }
+
+    pub fn cached_programs(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+fn tracing_compile(key: &str, d: std::time::Duration) {
+    if std::env::var_os("DSMOE_LOG_COMPILE").is_some() {
+        eprintln!("[runtime] compiled {key} in {:?}", d);
+    }
+}
+
+/// A compiled executable plus its manifest signature.
+pub struct Program {
+    pub spec: ProgramSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Program {
+    pub fn key(&self) -> &str {
+        &self.spec.key
+    }
+
+    fn check_input(&self, i: usize, spec: &TensorSpec, t: &HostTensor) -> Result<()> {
+        if t.shape != spec.shape || t.dtype() != spec.dtype {
+            bail!(
+                "program {}: input {} ({}) expects {:?} {} but got {:?} {}",
+                self.spec.key, i, spec.name, spec.shape, spec.dtype,
+                t.shape, t.dtype()
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors; returns outputs as host tensors.
+    ///
+    /// The AOT programs are lowered with `return_tuple=True`, so the PJRT
+    /// result is a single tuple buffer that we decompose on the host.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits = self.to_literals(inputs)?;
+        let out = self.run_literals(&lits)?;
+        out.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Validate + convert inputs to literals (callers that loop can keep
+    /// literals across iterations to skip repeated conversion).
+    pub fn to_literals(&self, inputs: &[HostTensor]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "program {}: expected {} inputs, got {}",
+                self.spec.key, self.spec.inputs.len(), inputs.len()
+            );
+        }
+        inputs
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                self.check_input(i, &self.spec.inputs[i], t)?;
+                t.to_literal()
+            })
+            .collect()
+    }
+
+    /// Execute with pre-converted literals (hot path).
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.run_literal_refs(&refs)
+    }
+
+    /// Execute with borrowed literals (avoids moving state tuples around).
+    pub fn run_literal_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "program {}: expected {} inputs, got {}",
+                self.spec.key, self.spec.inputs.len(), inputs.len()
+            );
+        }
+        // NOTE: we deliberately avoid `PjRtLoadedExecutable::execute`
+        // (xla 0.1.6 leaks every input device buffer: xla_rs.cc `execute`
+        // does `buffer.release()` and never deletes them — one full input
+        // set leaked per call, ~40 MB/step for a training step).  Instead
+        // we create the input buffers ourselves (owned `PjRtBuffer`s with a
+        // correct Drop) and go through the leak-free `execute_b`.
+        let in_bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                self.literal_to_buffer(lit).with_context(|| {
+                    format!("uploading input {i} of {}", self.spec.key)
+                })
+            })
+            .collect::<Result<_>>()?;
+        let bufs = self
+            .exe
+            .execute_b(&in_bufs)
+            .with_context(|| format!("executing {}", self.spec.key))?;
+        let tuple = bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result tuple")?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "program {}: manifest promises {} outputs, executable \
+                 returned {}",
+                self.spec.key, self.spec.outputs.len(), parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Upload one literal as an owned device buffer (see the leak note in
+    /// `run_literal_refs`).
+    fn literal_to_buffer(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let v = lit.to_vec::<f32>()?;
+                Ok(self.client.buffer_from_host_buffer(&v, &dims, None)?)
+            }
+            xla::ElementType::S32 => {
+                let v = lit.to_vec::<i32>()?;
+                Ok(self.client.buffer_from_host_buffer(&v, &dims, None)?)
+            }
+            other => anyhow::bail!("unsupported input dtype {other:?}"),
+        }
+    }
+
+    /// Outputs converted to host tensors with manifest names attached.
+    pub fn run_named(&self, inputs: &[HostTensor]) -> Result<Vec<(String, HostTensor)>> {
+        let outs = self.run(inputs)?;
+        Ok(self
+            .spec
+            .outputs
+            .iter()
+            .map(|o| o.name.clone())
+            .zip(outs)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        let root = std::path::Path::new("artifacts");
+        root.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(root).unwrap())
+    }
+
+    #[test]
+    fn load_and_run_shared_program() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::cpu().unwrap();
+        // expert_ffn_m128_f512_c1: y = gelu(x@w1+b1)@w2+b2 with zeros -> 0
+        let spec = m.shared_program("expert_ffn_m128_f512_c1").unwrap();
+        let prog = rt.load(spec).unwrap();
+        let ins = vec![
+            HostTensor::zeros_f32(&[1, 128]),
+            HostTensor::zeros_f32(&[128, 512]),
+            HostTensor::zeros_f32(&[512]),
+            HostTensor::zeros_f32(&[512, 128]),
+            HostTensor::zeros_f32(&[128]),
+        ];
+        let out = prog.run(&ins).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![1, 128]);
+        assert!(out[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        // cached on second load
+        let again = rt.load(spec).unwrap();
+        assert!(Rc::ptr_eq(&prog, &again));
+        assert_eq!(rt.cached_programs(), 1);
+    }
+
+    #[test]
+    fn shape_validation_errors_name_the_slot() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let spec = m.shared_program("expert_ffn_m128_f512_c1").unwrap();
+        let prog = rt.load(spec).unwrap();
+        let bad = vec![
+            HostTensor::zeros_f32(&[2, 128]), // wrong C
+            HostTensor::zeros_f32(&[128, 512]),
+            HostTensor::zeros_f32(&[512]),
+            HostTensor::zeros_f32(&[512, 128]),
+            HostTensor::zeros_f32(&[128]),
+        ];
+        let err = prog.run(&bad).unwrap_err().to_string();
+        assert!(err.contains("input 0"), "{err}");
+        let too_few = prog.run(&bad[..3]).unwrap_err().to_string();
+        assert!(too_few.contains("expected 5 inputs"), "{too_few}");
+    }
+}

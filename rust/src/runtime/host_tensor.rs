@@ -1,0 +1,196 @@
+//! Host-side tensors: the `Send`-able currency between coordinator threads.
+//!
+//! PJRT objects (`PjRtClient` is `Rc`-based) are thread-bound, so everything
+//! that crosses a channel — activations moving through the all-to-all
+//! fabric, checkpoint params, batches — travels as a `HostTensor` and is
+//! converted to an `xla::Literal` at the owning thread's edge.
+
+use anyhow::{bail, Result};
+
+/// Supported element types (mirrors the dtypes the manifest emits).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs {} elems", data.len());
+        HostTensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        Self::f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::f32(&[], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self::i32(&[], vec![v])
+    }
+
+    pub fn nelems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.nelems() * 4
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is {} not f32", self.dtype()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is {} not i32", self.dtype()),
+        }
+    }
+
+    /// Row-major offset of a multi-index.
+    pub fn offset(&self, index: &[usize]) -> usize {
+        assert_eq!(index.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &dim)) in index.iter().zip(&self.shape).enumerate() {
+            assert!(ix < dim, "index {index:?} out of shape {:?} at axis {i}",
+                    self.shape);
+            off = off * dim + ix;
+        }
+        off
+    }
+
+    /// Copy of row `r` of a 2-D f32 tensor.
+    pub fn row_f32(&self, r: usize) -> Result<Vec<f32>> {
+        let d = self.as_f32()?;
+        anyhow::ensure!(self.shape.len() == 2, "need 2-D, got {:?}", self.shape);
+        let w = self.shape[1];
+        Ok(d[r * w..(r + 1) * w].to_vec())
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshaped(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.nelems());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // -- Literal conversion (thread-edge) ------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+            TensorData::I32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::f32(&dims, lit.to_vec::<f32>()?))
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::i32(&dims, lit.to_vec::<i32>()?))
+            }
+            other => bail!("unsupported literal dtype {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = HostTensor::f32(&[2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.nelems(), 6);
+        assert_eq!(t.offset(&[1, 2]), 5);
+        assert_eq!(t.row_f32(1).unwrap(), vec![3., 4., 5.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn dtype_guards() {
+        let t = HostTensor::i32(&[2], vec![1, 2]);
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = HostTensor::scalar_i32(7);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[7]);
+        assert!(back.shape.is_empty());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = HostTensor::f32(&[4], vec![1., 2., 3., 4.]).reshaped(&[2, 2]);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.as_f32().unwrap(), &[1., 2., 3., 4.]);
+    }
+}

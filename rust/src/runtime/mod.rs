@@ -1,0 +1,19 @@
+//! PJRT runtime layer: manifest-driven loading and execution of the AOT
+//! artifacts produced by `python/compile/aot.py`.
+//!
+//! * [`artifact::Manifest`] — parses `artifacts/manifest.json` (the ABI).
+//! * [`client::Runtime`] / [`client::Program`] — thread-local PJRT CPU
+//!   client with a compile cache; spec-validated execution.
+//! * [`host_tensor::HostTensor`] — `Send` host tensors that cross threads.
+//! * [`checkpoint::Checkpoint`] — params.bin/meta.json I/O shared with the
+//!   Python side.
+
+pub mod artifact;
+pub mod checkpoint;
+pub mod client;
+pub mod host_tensor;
+
+pub use artifact::{Manifest, ModelArtifacts, ProgramSpec, TensorSpec};
+pub use checkpoint::Checkpoint;
+pub use client::{Program, Runtime};
+pub use host_tensor::{HostTensor, TensorData};

@@ -1,0 +1,362 @@
+//! Monolithic serving engine: continuous decode batching on one device.
+//!
+//! Event loop (one `step()` per iteration, driven by the caller or
+//! `run_until_idle`):
+//!
+//! 1. Ask the [`BatchPolicy`] whether to admit waiting requests; if so, run
+//!    a `prefill_b{B}` at a compiled batch size, splice each request's KV
+//!    cache into a free decode lane, and emit its first token.
+//! 2. If any lane is live, run one `decode_b{B}` step over the whole group
+//!    (fixed compiled B; free lanes are padded), append tokens, retire
+//!    finished requests.
+//!
+//! Tokens are sampled greedily (`temperature == 0`) or with temperature
+//! sampling; sequences end at `max_new_tokens` or EOS.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::config::ServingConfig;
+use crate::coordinator::{
+    BatchPolicy, Decision, KvCacheGroup, Limits, Request, Response, Router,
+};
+use crate::metrics::Metrics;
+use crate::runtime::{Checkpoint, HostTensor, Manifest, Program, Runtime};
+use crate::tokenizer::EOS;
+use crate::util::rng::Rng;
+
+struct ActiveSeq {
+    request: Request,
+    generated: Vec<i32>,
+    last_token: i32,
+    first_token_at: std::time::Instant,
+}
+
+pub struct Engine {
+    rt: Runtime,
+    cfg: crate::config::ModelConfig,
+    serving: ServingConfig,
+    params: Vec<xla::Literal>,
+    prefill_progs: HashMap<usize, Rc<Program>>, // by batch size
+    decode_prog: Rc<Program>,
+    pub router: Router,
+    policy: BatchPolicy,
+    group: KvCacheGroup,
+    active: HashMap<usize, ActiveSeq>, // by lane
+    pub done: Vec<Response>,
+    pub metrics: std::sync::Arc<Metrics>,
+    rng: Rng,
+    /// Cached literal mirror of the KV cache; invalidated by lane splices.
+    cache_lits: Option<(xla::Literal, xla::Literal)>,
+}
+
+impl Engine {
+    pub fn new(manifest: &Manifest, serving: ServingConfig) -> Result<Engine> {
+        let arts = manifest.model(&serving.model)?;
+        let cfg = arts.config.clone();
+        let rt = Runtime::cpu()?;
+
+        // Load checkpoint into literals once (params are read-only here).
+        let ck = Checkpoint::load(&arts.checkpoint_dir)?;
+        anyhow::ensure!(
+            ck.names.len() == arts.params.len(),
+            "checkpoint/manifest param count mismatch"
+        );
+        let params: Result<Vec<_>> =
+            ck.tensors.iter().map(|t| t.to_literal()).collect();
+
+        // Compile prefill programs for every available batch size and the
+        // decode program at the serving batch size.
+        let mut prefill_progs = HashMap::new();
+        let mut prefill_sizes = Vec::new();
+        for (key, spec) in &arts.programs {
+            if let Some(b) = key.strip_prefix("prefill_b") {
+                let b: usize = b.parse().context("prefill key")?;
+                prefill_progs.insert(b, rt.load(spec)?);
+                prefill_sizes.push(b);
+            }
+        }
+        anyhow::ensure!(!prefill_progs.is_empty(),
+                        "model {} exports no prefill programs", cfg.name);
+        let decode_key = format!("decode_b{}", serving.max_batch);
+        let decode_prog = rt.load(
+            arts.programs
+                .get(&decode_key)
+                .with_context(|| format!("no {decode_key} program"))?,
+        )?;
+
+        let router = Router::new(Limits {
+            max_seq: cfg.max_seq,
+            vocab_size: cfg.vocab_size,
+            default_max_new: serving.max_new_tokens,
+        });
+        let policy = BatchPolicy::new(prefill_sizes, serving.batch_timeout);
+        let group = KvCacheGroup::new(
+            cfg.n_layers,
+            serving.max_batch,
+            cfg.n_heads,
+            cfg.max_seq,
+            cfg.head_dim(),
+        );
+        Ok(Engine {
+            rt,
+            cfg,
+            serving,
+            params: params?,
+            prefill_progs,
+            decode_prog,
+            router,
+            policy,
+            group,
+            active: HashMap::new(),
+            done: Vec::new(),
+            metrics: std::sync::Arc::new(Metrics::new()),
+            rng: Rng::new(0xD5),
+            cache_lits: None,
+        })
+    }
+
+    pub fn model_config(&self) -> &crate::config::ModelConfig {
+        &self.cfg
+    }
+
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new: Option<usize>) -> Result<u64> {
+        self.metrics.inc("requests_submitted", 1);
+        self.router.submit(prompt, max_new)
+    }
+
+    /// One scheduler iteration.  Returns true if any work was done.
+    pub fn step(&mut self) -> Result<bool> {
+        let free = self.group.free_lanes().len();
+        let decision = self.policy.decide(
+            self.router.queue_len(),
+            free,
+            self.router.oldest_wait(),
+        );
+        let mut worked = false;
+        if let Decision::Prefill { compiled, take } = decision {
+            let reqs = self.router.pop_up_to(take);
+            let t = std::time::Instant::now();
+            self.do_prefill(compiled, reqs)?;
+            self.metrics.observe("prefill", t.elapsed());
+            worked = true;
+        }
+        if !self.group.is_idle() {
+            let t = std::time::Instant::now();
+            self.do_decode()?;
+            self.metrics.observe("decode_step", t.elapsed());
+            worked = true;
+        }
+        Ok(worked)
+    }
+
+    /// Drain the queue and all in-flight sequences.
+    pub fn run_until_idle(&mut self) -> Result<Vec<Response>> {
+        while self.router.queue_len() > 0 || !self.group.is_idle() {
+            // When only partial batches wait, force the timeout path rather
+            // than spinning.
+            if !self.step()? {
+                std::thread::sleep(self.serving.batch_timeout);
+            }
+        }
+        Ok(std::mem::take(&mut self.done))
+    }
+
+    pub fn take_done(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.done)
+    }
+
+    fn sample(&mut self, logits: &[f32]) -> i32 {
+        if self.serving.temperature <= 0.0 {
+            let mut best = 0;
+            for (i, &v) in logits.iter().enumerate() {
+                if v > logits[best] {
+                    best = i;
+                }
+            }
+            return best as i32;
+        }
+        let t = self.serving.temperature;
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f64> = logits
+            .iter()
+            .map(|&v| (((v - max) / t) as f64).exp())
+            .collect();
+        self.rng.weighted(&weights) as i32
+    }
+
+    /// Materialize the literal cache mirror back into the host-side group
+    /// (needed before lane splicing).
+    fn sync_cache_to_host(&mut self) -> Result<()> {
+        if let Some((k, v)) = self.cache_lits.take() {
+            self.group.update(
+                HostTensor::from_literal(&k)?,
+                HostTensor::from_literal(&v)?,
+            )?;
+        }
+        Ok(())
+    }
+
+    fn do_prefill(&mut self, compiled: usize, reqs: Vec<Request>) -> Result<()> {
+        self.sync_cache_to_host()?;
+        let smax = self.cfg.max_seq;
+        let prog = self.prefill_progs[&compiled].clone();
+
+        // Pack prompts (right-padded) into [compiled, smax].
+        let mut tokens = vec![0i32; compiled * smax];
+        for (b, r) in reqs.iter().enumerate() {
+            tokens[b * smax..b * smax + r.prompt.len()]
+                .copy_from_slice(&r.prompt);
+        }
+        let tok_lit = HostTensor::i32(&[compiled, smax], tokens).to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&tok_lit);
+        let outs = prog.run_literal_refs(&inputs)?;
+        let logits = HostTensor::from_literal(&outs[0])?; // [B, smax, V]
+        let kc = HostTensor::from_literal(&outs[1])?; // [L, B, H, smax, hd]
+        let vc = HostTensor::from_literal(&outs[2])?;
+
+        let v = self.cfg.vocab_size;
+        let (l, h, hd) = (self.cfg.n_layers, self.cfg.n_heads, self.cfg.head_dim());
+        let lane_elems = h * smax * hd;
+        let free = self.group.free_lanes();
+        anyhow::ensure!(free.len() >= reqs.len(), "prefill without free lanes");
+
+        let logits_data = logits.as_f32()?;
+        let kc_data = kc.as_f32()?;
+        let vc_data = vc.as_f32()?;
+        for (i, req) in reqs.into_iter().enumerate() {
+            let lane = free[i];
+            let plen = req.prompt.len();
+            // First generated token comes from the prompt's last position.
+            let row =
+                &logits_data[(i * smax + plen - 1) * v..(i * smax + plen) * v];
+            let first = self.sample(row);
+
+            // Extract this request's [L, 1, H, smax, hd] cache slice.
+            let mut k1 = vec![0f32; l * lane_elems];
+            let mut v1 = vec![0f32; l * lane_elems];
+            for layer in 0..l {
+                let src = (layer * compiled + i) * lane_elems;
+                let dst = layer * lane_elems;
+                k1[dst..dst + lane_elems]
+                    .copy_from_slice(&kc_data[src..src + lane_elems]);
+                v1[dst..dst + lane_elems]
+                    .copy_from_slice(&vc_data[src..src + lane_elems]);
+            }
+            let shape = [l, 1, h, smax, hd];
+            self.group.admit(
+                lane,
+                req.id,
+                plen,
+                &HostTensor::f32(&shape, k1),
+                &HostTensor::f32(&shape, v1),
+            )?;
+            self.cache_lits = None; // lane splice invalidates the mirror
+            let now = std::time::Instant::now();
+            self.metrics.observe("ttft", now - req.arrival);
+            self.metrics.inc("prefills", 1);
+            self.active.insert(
+                lane,
+                ActiveSeq {
+                    request: req,
+                    generated: vec![first],
+                    last_token: first,
+                    first_token_at: now,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    fn do_decode(&mut self) -> Result<()> {
+        let b = self.group.batch;
+        let mut tokens = vec![0i32; b];
+        for (&lane, seq) in &self.active {
+            tokens[lane] = seq.last_token;
+        }
+        let pos = self.group.positions();
+
+        let tok_lit = HostTensor::i32(&[b], tokens).to_literal()?;
+        let pos_lit = HostTensor::i32(&[b], pos).to_literal()?;
+        if self.cache_lits.is_none() {
+            self.cache_lits =
+                Some((self.group.k.to_literal()?, self.group.v.to_literal()?));
+        }
+        let (k_lit, v_lit) = self.cache_lits.take().unwrap();
+
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&tok_lit);
+        inputs.push(&k_lit);
+        inputs.push(&v_lit);
+        inputs.push(&pos_lit);
+        let mut outs = self.decode_prog.run_literal_refs(&inputs)?;
+        let logits = HostTensor::from_literal(&outs[0])?; // [B, V]
+        // Keep the updated caches as literals for the next decode step —
+        // they are only materialized back to host tensors when a prefill
+        // needs to splice a lane (see do_prefill / sync_cache_to_host).
+        // DSMOE_NO_CACHE_MIRROR forces the pre-optimization behaviour
+        // (full literal->host->literal round trip per step) for the §Perf
+        // before/after measurement in EXPERIMENTS.md.
+        let v_new = outs.pop().unwrap();
+        let k_new = outs.pop().unwrap();
+        if std::env::var_os("DSMOE_NO_CACHE_MIRROR").is_some() {
+            self.group.update(
+                HostTensor::from_literal(&k_new)?,
+                HostTensor::from_literal(&v_new)?,
+            )?;
+            self.cache_lits = None;
+        } else {
+            self.cache_lits = Some((k_new, v_new));
+        }
+        self.metrics.inc("decode_steps", 1);
+        self.metrics.inc(
+            "decode_tokens",
+            self.active.len() as u64,
+        );
+
+        let v = self.cfg.vocab_size;
+        let logits_data = logits.as_f32()?.to_vec();
+        let lanes: Vec<usize> = self.active.keys().copied().collect();
+        for lane in lanes {
+            // advance cache position for the token just written
+            self.group.advance(lane)?;
+            let row = &logits_data[lane * v..(lane + 1) * v];
+            let next = self.sample(row);
+            let seq = self.active.get_mut(&lane).unwrap();
+            seq.generated.push(next);
+            seq.last_token = next;
+            let finished = next == EOS
+                || seq.generated.len() >= seq.request.max_new_tokens
+                || seq.request.prompt.len() + seq.generated.len()
+                    >= self.cfg.max_seq;
+            if finished {
+                let seq = self.active.remove(&lane).unwrap();
+                self.group.release(lane);
+                let total = seq.request.arrival.elapsed();
+                self.metrics.observe("request_total", total);
+                self.metrics.inc("requests_completed", 1);
+                self.metrics
+                    .inc("tokens_generated", seq.generated.len() as u64);
+                self.done.push(Response {
+                    id: seq.request.id,
+                    prompt_len: seq.request.prompt.len(),
+                    tokens: seq.generated,
+                    ttft: seq.first_token_at - seq.request.arrival,
+                    total,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn compiled_programs(&self) -> usize {
+        self.rt.cached_programs()
+    }
+}

@@ -1,0 +1,493 @@
+//! Disaggregated expert-parallel engine (§5's system, at testbed scale).
+//!
+//! The leader owns the dense backbone (embeddings, attention, layer norms,
+//! gates, residual branches, LM head) and drives it layer by layer through
+//! the shared AOT programs; fabric workers own the expert FFN weights per
+//! the [`Placement`].  At every MoE layer:
+//!
+//! 1. `gate_*` program → router probabilities;
+//! 2. host top-1 gating builds the dense token→expert mapping table
+//!    ([`Routing`]);
+//! 3. token blocks are grouped per expert and dispatched to owning workers
+//!    (the all-to-all; schedule metrics logged per [`AllToAllKind`]);
+//! 4. workers run `expert_ffn_c{C}` on their blocks (padded to compiled
+//!    capacities);
+//! 5. returned blocks are combined (gate-scaled, un-permuted) and added to
+//!    the residual stream (+ the Residual-MoE fixed branch for PR-MoE).
+//!
+//! `forward_prefill` / `forward_decode` produce logits bit-comparable to the
+//! monolithic engine's programs (integration_parity.rs).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::{AllToAllKind, ModelConfig};
+use crate::coordinator::alltoall::{self, Topology};
+use crate::coordinator::{Placement, Routing};
+use crate::fabric::{Fabric, WorkerPrograms};
+use crate::metrics::Metrics;
+use crate::moe::ExpertLoadStats;
+use crate::runtime::{
+    Checkpoint, HostTensor, Manifest, Program, Runtime,
+};
+
+pub struct EpEngine {
+    rt: Runtime,
+    pub cfg: ModelConfig,
+    params: HashMap<String, xla::Literal>,
+    #[allow(dead_code)] // retained for checkpoint hot-swap (future work)
+    params_host: HashMap<String, HostTensor>,
+    placement: Placement,
+    fabric: Fabric,
+    pub metrics: std::sync::Arc<Metrics>,
+    pub load_stats: Vec<ExpertLoadStats>,
+    manifest_keys: ManifestKeys,
+    progs: HashMap<String, Rc<Program>>,
+    alltoall: AllToAllKind,
+    /// Per-layer decode KV caches [B, H, Smax, hd] (monolithic layout is
+    /// [L, B, ...]; the EP engine keeps per-layer tensors).
+    caches: Option<(Vec<xla::Literal>, Vec<xla::Literal>)>,
+    batch: usize,
+}
+
+struct ManifestKeys {
+    manifest: Manifest,
+}
+
+impl EpEngine {
+    pub fn new(
+        manifest: &Manifest,
+        model: &str,
+        workers: usize,
+        alltoall: AllToAllKind,
+        batch: usize,
+    ) -> Result<EpEngine> {
+        let arts = manifest.model(model)?;
+        let cfg = arts.config.clone();
+        anyhow::ensure!(cfg.is_moe(), "EP engine needs an MoE model");
+        let rt = Runtime::cpu()?;
+
+        let ck = Checkpoint::load(&arts.checkpoint_dir)?;
+        let mut params = HashMap::new();
+        let mut params_host = HashMap::new();
+        for (n, t) in ck.names.iter().zip(&ck.tensors) {
+            params.insert(n.clone(), t.to_literal()?);
+            params_host.insert(n.clone(), t.clone());
+        }
+
+        // Expert FFN program ladder for the fabric workers.
+        let (m, f) = (cfg.d_model, cfg.d_ff);
+        let ladder: Vec<_> = manifest
+            .expert_block_sizes()
+            .into_iter()
+            .filter_map(|c| {
+                manifest
+                    .shared_program(&Manifest::key_expert_ffn(m, f, c))
+                    .ok()
+                    .map(|s| (c, s.clone()))
+            })
+            .collect();
+        anyhow::ensure!(!ladder.is_empty(), "no expert_ffn programs for m{m} f{f}");
+
+        let placement = Placement::for_model(&cfg, workers);
+        let fabric = Fabric::spawn(workers, WorkerPrograms { expert_ffn: ladder })?;
+
+        // Ship expert weights to their owners.
+        for w in 0..workers {
+            for (layer, e) in placement.worker_manifest(w) {
+                let weights = ["w1", "b1", "w2", "b2"]
+                    .iter()
+                    .map(|part| {
+                        let full = &params_host
+                            [&format!("layer{layer}.moe.{part}")];
+                        Ok(slice_expert(full, e, part)?)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                fabric.load_expert(w, layer, e, weights)?;
+            }
+        }
+
+        let load_stats = cfg
+            .moe_layers()
+            .into_iter()
+            .map(|(i, e)| ExpertLoadStats::new(i, e))
+            .collect();
+
+        Ok(EpEngine {
+            rt,
+            cfg,
+            params,
+            params_host,
+            placement,
+            fabric,
+            metrics: std::sync::Arc::new(Metrics::new()),
+            load_stats,
+            manifest_keys: ManifestKeys { manifest: manifest.clone() },
+            progs: HashMap::new(),
+            alltoall,
+            caches: None,
+            batch,
+        })
+    }
+
+    fn prog(&mut self, key: &str) -> Result<Rc<Program>> {
+        if let Some(p) = self.progs.get(key) {
+            return Ok(p.clone());
+        }
+        let spec = self.manifest_keys.manifest.shared_program(key)?;
+        let p = self.rt.load(spec)?;
+        self.progs.insert(key.to_string(), p.clone());
+        Ok(p)
+    }
+
+    fn p(&self, name: &str) -> &xla::Literal {
+        &self.params[name]
+    }
+
+    /// Full prefill over padded prompts [B, smax]; returns last-position
+    /// logits per lane at `lens[b]-1` and primes the decode caches.
+    pub fn forward_prefill(
+        &mut self,
+        tokens: &[i32],
+        lens: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        let (b, smax) = (self.batch, self.cfg.max_seq);
+        anyhow::ensure!(tokens.len() == b * smax, "tokens shape");
+        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
+        let t_tokens = b * smax;
+
+        // embed
+        let embed = self.prog(&Manifest::key_embed(v, m, b, smax))?;
+        let tok = HostTensor::i32(&[b, smax], tokens.to_vec()).to_literal()?;
+        let pos0 = HostTensor::i32(&[b], vec![0; b]).to_literal()?;
+        let mut h = embed
+            .run_literal_refs(&[
+                self.p("tok_emb"),
+                self.p("pos_emb"),
+                &tok,
+                &pos0,
+            ])?
+            .remove(0);
+
+        let mut kcs = Vec::new();
+        let mut vcs = Vec::new();
+        for layer in 0..self.cfg.n_layers {
+            let (h2, k, vv) = self.attn_prefill(layer, h)?;
+            kcs.push(k);
+            vcs.push(vv);
+            h = self.ffn_layer(layer, h2, t_tokens)?;
+        }
+        self.caches = Some((kcs, vcs));
+
+        // LM head on each lane's last real position.
+        let h_host = HostTensor::from_literal(&h)?; // [B, smax, M]
+        let hd = h_host.as_f32()?;
+        let mut last = vec![0f32; b * m];
+        for lane in 0..b {
+            let p = lens[lane].max(1) - 1;
+            let off = (lane * smax + p) * m;
+            last[lane * m..(lane + 1) * m]
+                .copy_from_slice(&hd[off..off + m]);
+        }
+        self.lm_head(last)
+    }
+
+    /// One decode step over [B] tokens at per-lane positions.
+    pub fn forward_decode(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = self.batch;
+        anyhow::ensure!(tokens.len() == b && pos.len() == b);
+        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
+        anyhow::ensure!(self.caches.is_some(), "decode before prefill");
+
+        let embed = self.prog(&Manifest::key_embed(v, m, b, 1))?;
+        let tok = HostTensor::i32(&[b, 1], tokens.to_vec()).to_literal()?;
+        let pos_lit = HostTensor::i32(&[b], pos.to_vec()).to_literal()?;
+        let mut h = embed
+            .run_literal_refs(&[
+                self.p("tok_emb"),
+                self.p("pos_emb"),
+                &tok,
+                &pos_lit,
+            ])?
+            .remove(0);
+
+        for layer in 0..self.cfg.n_layers {
+            h = self.attn_decode(layer, h, &pos_lit)?;
+            h = self.ffn_layer(layer, h, b)?;
+        }
+        let h_host = HostTensor::from_literal(&h)?; // [B, 1, M]
+        self.lm_head(h_host.as_f32()?.to_vec())
+    }
+
+    fn attn_prefill(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+        let (m, hh, b, smax) =
+            (self.cfg.d_model, self.cfg.n_heads, self.batch, self.cfg.max_seq);
+        let prog = self.prog(&Manifest::key_attn_prefill(m, hh, b, smax))?;
+        let pre = format!("layer{layer}.");
+        let mut outs = prog.run_literal_refs(&[
+            &h,
+            self.p(&format!("{pre}ln1.g")),
+            self.p(&format!("{pre}ln1.b")),
+            self.p(&format!("{pre}attn.wq")),
+            self.p(&format!("{pre}attn.wk")),
+            self.p(&format!("{pre}attn.wv")),
+            self.p(&format!("{pre}attn.wo")),
+        ])?;
+        let vv = outs.pop().unwrap();
+        let k = outs.pop().unwrap();
+        let h2 = outs.pop().unwrap();
+        Ok((h2, k, vv))
+    }
+
+    fn attn_decode(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+        pos: &xla::Literal,
+    ) -> Result<xla::Literal> {
+        let (m, hh, b, smax) =
+            (self.cfg.d_model, self.cfg.n_heads, self.batch, self.cfg.max_seq);
+        let prog = self.prog(&Manifest::key_attn_decode(m, hh, b, smax))?;
+        let pre = format!("layer{layer}.");
+        let (kcs, vcs) = self.caches.as_ref().unwrap();
+        let mut outs = prog.run_literal_refs(&[
+            &h,
+            self.p(&format!("{pre}ln1.g")),
+            self.p(&format!("{pre}ln1.b")),
+            self.p(&format!("{pre}attn.wq")),
+            self.p(&format!("{pre}attn.wk")),
+            self.p(&format!("{pre}attn.wv")),
+            self.p(&format!("{pre}attn.wo")),
+            &kcs[layer],
+            &vcs[layer],
+            pos,
+        ])?;
+        let vc = outs.pop().unwrap();
+        let kc = outs.pop().unwrap();
+        let h2 = outs.pop().unwrap();
+        let (kcs, vcs) = self.caches.as_mut().unwrap();
+        kcs[layer] = kc;
+        vcs[layer] = vc;
+        Ok(h2)
+    }
+
+    /// FFN sublayer: dense program or the expert-parallel MoE path.
+    fn ffn_layer(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+        t_tokens: usize,
+    ) -> Result<xla::Literal> {
+        let (m, f) = (self.cfg.d_model, self.cfg.d_ff);
+        let pre = format!("layer{layer}.");
+        let n_experts = self.cfg.experts_at(layer);
+        if n_experts == 0 {
+            let prog = self.prog(&Manifest::key_dense_ffn(m, f, t_tokens))?;
+            // dense_ffn operates on [1, T, M]
+            let h_host = HostTensor::from_literal(&h)?;
+            let shape = h_host.shape.clone();
+            let flat = HostTensor::f32(
+                &[1, t_tokens, m],
+                h_host.as_f32()?.to_vec(),
+            )
+            .to_literal()?;
+            let out = prog
+                .run_literal_refs(&[
+                    &flat,
+                    self.p(&format!("{pre}ln2.g")),
+                    self.p(&format!("{pre}ln2.b")),
+                    self.p(&format!("{pre}mlp.w1")),
+                    self.p(&format!("{pre}mlp.b1")),
+                    self.p(&format!("{pre}mlp.w2")),
+                    self.p(&format!("{pre}mlp.b2")),
+                ])?
+                .remove(0);
+            let out_host = HostTensor::from_literal(&out)?;
+            return HostTensor::f32(&shape, out_host.as_f32()?.to_vec())
+                .to_literal();
+        }
+
+        // --- MoE path -------------------------------------------------
+        let t0 = std::time::Instant::now();
+        let gate = self.prog(&Manifest::key_gate(m, n_experts, t_tokens))?;
+        let h_host = HostTensor::from_literal(&h)?;
+        let shape = h_host.shape.clone();
+        let flat = HostTensor::f32(&[1, t_tokens, m], h_host.as_f32()?.to_vec())
+            .to_literal()?;
+        let outs = gate.run_literal_refs(&[
+            &flat,
+            self.p(&format!("{pre}ln2.g")),
+            self.p(&format!("{pre}ln2.b")),
+            self.p(&format!("{pre}moe.gate")),
+        ])?;
+        let ln_h = HostTensor::from_literal(&outs[0])?; // [T, M]
+        let probs = HostTensor::from_literal(&outs[1])?; // [T, E]
+        self.metrics.observe("gate", t0.elapsed());
+
+        let routing = Routing::top1(probs.as_f32()?, n_experts);
+        if let Some(stats) = self
+            .load_stats
+            .iter_mut()
+            .find(|s| s.layer == layer)
+        {
+            stats.record_assignments(routing.assignments());
+        }
+
+        // Log the all-to-all schedule this exchange would use at scale.
+        let lp = self.placement.layer(layer).unwrap();
+        let plan = self.exchange_plan(&routing, lp.ep_degree, m);
+        self.metrics
+            .inc("alltoall_bytes", plan.volume() as u64);
+        self.metrics.inc("alltoall_hops", plan.hops() as u64);
+
+        // Dispatch expert blocks to their owners (replica 0 group).
+        let t1 = std::time::Instant::now();
+        let ln_flat = ln_h.as_f32()?;
+        let mut inflight = 0usize;
+        for e in 0..n_experts {
+            if routing.counts[e] == 0 {
+                continue;
+            }
+            let block = routing.expert_block(ln_flat, m, e);
+            let owner = lp.owner(e, 0);
+            self.fabric.dispatch_ffn(
+                owner,
+                layer,
+                e,
+                HostTensor::f32(&[routing.counts[e], m], block),
+                e as u64,
+            )?;
+            inflight += 1;
+        }
+        let results = self.fabric.collect_ffn(inflight)?;
+        self.metrics.observe("expert_exchange", t1.elapsed());
+
+        let mut expert_outputs: Vec<Vec<f32>> =
+            vec![Vec::new(); n_experts];
+        for (_, e, out, _) in results {
+            expert_outputs[e] = out.as_f32()?.to_vec();
+        }
+        let mut combined = routing.combine(&expert_outputs, m);
+
+        // Residual-MoE fixed branch (PR-MoE): runs at the leader (it is a
+        // dense, non-expert computation).
+        if self.cfg.residual {
+            let rb =
+                self.prog(&Manifest::key_residual_branch(m, f, t_tokens))?;
+            let lnh_lit =
+                HostTensor::f32(&[t_tokens, m], ln_flat.to_vec()).to_literal()?;
+            let out = rb
+                .run_literal_refs(&[
+                    &lnh_lit,
+                    self.p(&format!("{pre}moe.res.w1")),
+                    self.p(&format!("{pre}moe.res.b1")),
+                    self.p(&format!("{pre}moe.res.w2")),
+                    self.p(&format!("{pre}moe.res.b2")),
+                ])?
+                .remove(0);
+            let res = HostTensor::from_literal(&out)?;
+            for (c, r) in combined.iter_mut().zip(res.as_f32()?) {
+                *c += r;
+            }
+        }
+
+        // Residual add: h + combined.
+        let mut out = h_host.as_f32()?.to_vec();
+        for (o, c) in out.iter_mut().zip(&combined) {
+            *o += c;
+        }
+        HostTensor::f32(&shape, out).to_literal()
+    }
+
+    /// Build the all-to-all byte matrix this routing implies at EP degree
+    /// `ep` (tokens sharded round-robin over workers, as they would be when
+    /// each worker owns part of the batch) and plan it with the configured
+    /// schedule.
+    fn exchange_plan(
+        &self,
+        routing: &Routing,
+        ep: usize,
+        m: usize,
+    ) -> alltoall::Plan {
+        let mut bytes = vec![vec![0usize; ep]; ep];
+        for (t, &e) in routing.expert.iter().enumerate() {
+            let src = t % ep; // token's home shard
+            let dst = e % ep; // expert's owner (round-robin placement)
+            if src != dst {
+                bytes[src][dst] += m * 4;
+            }
+        }
+        let topo = Topology {
+            workers: ep,
+            node_size: ep.min(8),
+            ts_degree: 1,
+        };
+        alltoall::plan(self.alltoall, topo, &bytes)
+    }
+
+    fn lm_head(&mut self, last_h: Vec<f32>) -> Result<Vec<Vec<f32>>> {
+        let (v, m, b) = (self.cfg.vocab_size, self.cfg.d_model, self.batch);
+        let prog = self.prog(&Manifest::key_lm_head(v, m, b))?;
+        let h = HostTensor::f32(&[b, m], last_h).to_literal()?;
+        let out = prog
+            .run_literal_refs(&[
+                &h,
+                self.p("lnf.g"),
+                self.p("lnf.b"),
+                self.p("tok_emb"),
+            ])?
+            .remove(0);
+        let logits = HostTensor::from_literal(&out)?;
+        let data = logits.as_f32()?;
+        Ok((0..b).map(|lane| data[lane * v..(lane + 1) * v].to_vec()).collect())
+    }
+
+    pub fn traffic(&self) -> &crate::fabric::Traffic {
+        &self.fabric.traffic
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+}
+
+/// Slice expert `e`'s weights out of the stacked parameter tensors
+/// (`moe.w1 [E, M, F]` → `[M, F]`, biases `[E, F]` → `[F]`, …).
+fn slice_expert(full: &HostTensor, e: usize, _part: &str) -> Result<HostTensor> {
+    let shape = &full.shape;
+    anyhow::ensure!(shape.len() >= 2, "stacked expert tensor expected");
+    let per: usize = shape[1..].iter().product();
+    let data = full.as_f32()?[e * per..(e + 1) * per].to_vec();
+    Ok(HostTensor::f32(&shape[1..], data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_expert_extracts_rows() {
+        let full = HostTensor::f32(
+            &[2, 3],
+            vec![1., 2., 3., 10., 20., 30.],
+        );
+        let e1 = slice_expert(&full, 1, "b1").unwrap();
+        assert_eq!(e1.shape, vec![3]);
+        assert_eq!(e1.as_f32().unwrap(), &[10., 20., 30.]);
+        let full3 = HostTensor::f32(&[2, 2, 2],
+                                    vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        let e0 = slice_expert(&full3, 0, "w1").unwrap();
+        assert_eq!(e0.shape, vec![2, 2]);
+        assert_eq!(e0.as_f32().unwrap(), &[0., 1., 2., 3.]);
+    }
+}

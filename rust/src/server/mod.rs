@@ -1,0 +1,21 @@
+//! Serving engines.
+//!
+//! * [`engine::Engine`] — single-device serving over the monolithic AOT
+//!   programs (`prefill_b{B}` / `decode_b{B}`, fused Pallas kernels inside):
+//!   continuous decode batching with lane-level admission, the baseline the
+//!   paper's single-GPU numbers correspond to.
+//! * [`ep::EpEngine`] — the disaggregated expert-parallel engine: the leader
+//!   runs the dense backbone layer by layer via the shared AOT programs and
+//!   dispatches gathered expert blocks to fabric workers (§5's architecture:
+//!   gate → group tokens by expert → all-to-all → expert FFN → return &
+//!   combine).
+//!
+//! Both engines produce identical logits for identical weights/input — the
+//! parity test in `rust/tests/integration_parity.rs` is the end-to-end
+//! correctness anchor of the whole stack.
+
+pub mod engine;
+pub mod ep;
+
+pub use engine::Engine;
+pub use ep::EpEngine;

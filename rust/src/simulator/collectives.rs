@@ -1,0 +1,154 @@
+//! Analytic cost models for the collectives the serving system issues:
+//! all-to-all (three schedules of §5.3), ring all-reduce (tensor-slicing),
+//! and all-gather (parallelism-coordinated re-replication).
+
+use crate::config::AllToAllKind;
+
+use super::device::Cluster;
+
+/// All-to-all over `p` ranks exchanging `bytes_per_pair` to each peer.
+///
+/// * naive: p-1 sequential point-to-point rounds; each round's cost is the
+///   slowest involved link (inter-node once the exchange spans nodes).
+/// * hierarchical: G intra-node rounds + p/G inter-node rounds with bundled
+///   (G-times larger) messages — fewer latency terms, 2x volume (§5.3).
+/// * coordinated: the exchange runs only among the p/L ranks that share a
+///   tensor-slicing rank, plus an allgather of the result across the L
+///   slicing ranks (§5.3, Fig 9).
+pub fn alltoall(
+    kind: AllToAllKind,
+    cluster: &Cluster,
+    p: usize,
+    bytes_per_pair: f64,
+    ts_degree: usize,
+    per_hop_overhead: f64,
+) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let g = cluster.gpus_per_node.min(p);
+    match kind {
+        AllToAllKind::Naive => {
+            let mut t = 0.0;
+            // rounds hit intra-node peers for (g-1) rounds, inter-node after
+            for r in 1..p {
+                let link = if r < g { cluster.intra } else { cluster.inter };
+                t += link.xfer(bytes_per_pair) + per_hop_overhead;
+            }
+            t
+        }
+        AllToAllKind::Hierarchical => {
+            let n_nodes = p.div_ceil(g);
+            // intra-node: g-1 rounds of (bundled toward gateways) messages,
+            // each carrying n_nodes * bytes_per_pair.
+            let intra = (g - 1) as f64
+                * (cluster.intra.xfer(bytes_per_pair * n_nodes as f64)
+                   + per_hop_overhead);
+            // inter-node: n_nodes-1 rounds of bundled messages carrying
+            // g * bytes_per_pair.
+            let inter = n_nodes.saturating_sub(1) as f64
+                * (cluster.inter.xfer(bytes_per_pair * g as f64)
+                   + per_hop_overhead);
+            intra + inter
+        }
+        AllToAllKind::Coordinated => {
+            let l = ts_degree.max(1);
+            let group = (p / l).max(1);
+            // independent naive exchange within each rank group (groups run
+            // in parallel), messages L-times larger is NOT needed: data is
+            // already replicated, each group moves its own share.
+            let mut t = 0.0;
+            for r in 1..group {
+                let link = if r < g { cluster.intra } else { cluster.inter };
+                t += link.xfer(bytes_per_pair) + per_hop_overhead;
+            }
+            // + allgather across the L slicing ranks (intra-node: slicing
+            // is within a node by construction, §5.2).
+            t + allgather(cluster, l, bytes_per_pair * group as f64)
+        }
+    }
+}
+
+/// Ring all-reduce of `bytes` across `n` ranks (NCCL ring model:
+/// 2(n-1)/n * bytes at ring bandwidth + 2(n-1) latency terms).
+pub fn allreduce(cluster: &Cluster, n: usize, bytes: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let spans_nodes = n > cluster.gpus_per_node;
+    let link = if spans_nodes { cluster.inter } else { cluster.intra };
+    let vol = 2.0 * (n - 1) as f64 / n as f64 * bytes;
+    vol / link.bandwidth + 2.0 * (n - 1) as f64 * link.latency
+}
+
+/// Ring all-gather of `bytes` per rank across `n` ranks.
+pub fn allgather(cluster: &Cluster, n: usize, bytes: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let spans_nodes = n > cluster.gpus_per_node;
+    let link = if spans_nodes { cluster.inter } else { cluster.intra };
+    (n - 1) as f64 * link.xfer(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cl(p: usize) -> Cluster {
+        Cluster::azure_a100(p)
+    }
+
+    #[test]
+    fn naive_grows_linearly_with_p() {
+        let b = 4096.0;
+        let t16 = alltoall(AllToAllKind::Naive, &cl(16), 16, b, 1, 0.0);
+        let t64 = alltoall(AllToAllKind::Naive, &cl(64), 64, b, 1, 0.0);
+        assert!(t64 > 3.0 * t16, "t16 {t16} t64 {t64}");
+    }
+
+    #[test]
+    fn hierarchical_beats_naive_at_scale_small_messages() {
+        let b = 2048.0; // latency-bound regime
+        for p in [32, 64, 128, 256] {
+            let n = alltoall(AllToAllKind::Naive, &cl(p), p, b, 1, 0.0);
+            let h = alltoall(AllToAllKind::Hierarchical, &cl(p), p, b, 1, 0.0);
+            assert!(h < n, "p={p}: hier {h} !< naive {n}");
+        }
+    }
+
+    #[test]
+    fn hierarchical_loses_for_huge_messages() {
+        // bandwidth-bound: the 2x volume hurts (paper: "better scaling for
+        // small batch sizes ... latency-bound").
+        let b = 64e6;
+        let p = 64;
+        let n = alltoall(AllToAllKind::Naive, &cl(p), p, b, 1, 0.0);
+        let h = alltoall(AllToAllKind::Hierarchical, &cl(p), p, b, 1, 0.0);
+        assert!(h > n * 0.9, "hier should not win big-message: {h} vs {n}");
+    }
+
+    #[test]
+    fn coordinated_beats_naive_with_slicing() {
+        let b = 4096.0;
+        let p = 128;
+        let n = alltoall(AllToAllKind::Naive, &cl(p), p, b, 1, 0.0);
+        let c = alltoall(AllToAllKind::Coordinated, &cl(p), p, b, 8, 0.0);
+        assert!(c < n / 3.0, "coord {c} vs naive {n}");
+    }
+
+    #[test]
+    fn allreduce_model_monotone() {
+        let c = cl(8);
+        let t2 = allreduce(&c, 2, 1e6);
+        let t8 = allreduce(&c, 8, 1e6);
+        assert!(t8 > t2);
+        assert_eq!(allreduce(&c, 1, 1e6), 0.0);
+    }
+
+    #[test]
+    fn allgather_zero_for_single() {
+        assert_eq!(allgather(&cl(8), 1, 1e6), 0.0);
+        assert!(allgather(&cl(8), 8, 1e6) > 0.0);
+    }
+}

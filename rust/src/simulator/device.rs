@@ -1,0 +1,140 @@
+//! Device and interconnect models for the paper's testbed: Azure ND A100
+//! instances (A100-40GB, NVLink within a node of 8, HDR InfiniBand across
+//! nodes).  All constants carry their sources.
+
+/// One GPU's capabilities.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    /// HBM capacity in bytes.
+    pub mem_bytes: u64,
+    /// Peak HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Achievable fraction of peak bandwidth for streaming weight reads
+    /// under an optimized kernel stack (DeepSpeed kernels hit 0.8–0.9 of
+    /// peak on memory-bound transformer inference; see DeepSpeed-inference
+    /// paper [51]).
+    pub mem_eff: f64,
+    /// Dense fp16 peak, FLOP/s (A100 tensor core: 312 TFLOPS).
+    pub flops: f64,
+    /// Per-kernel launch overhead, seconds (CUDA launch + framework
+    /// dispatch; ~5-10us from PyTorch profiling literature).
+    pub kernel_overhead: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100 40GB SXM (Azure ND A100 v4).
+    pub fn a100_40g() -> Self {
+        GpuSpec {
+            mem_bytes: 40 * (1 << 30),
+            mem_bw: 1.555e12, // 1555 GB/s
+            mem_eff: 0.85,
+            flops: 312e12,
+            kernel_overhead: 8e-6,
+        }
+    }
+}
+
+/// A point-to-point link.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSpec {
+    /// One-way latency per message, seconds.
+    pub latency: f64,
+    /// Bandwidth per direction, bytes/s.
+    pub bandwidth: f64,
+}
+
+impl LinkSpec {
+    /// NVLink 3 (A100): 600 GB/s total bidirectional => ~300 GB/s per
+    /// direction; ~3 us software latency (NCCL intra-node small-message).
+    pub fn nvlink() -> Self {
+        LinkSpec { latency: 3e-6, bandwidth: 300e9 }
+    }
+
+    /// HDR InfiniBand on Azure ND A100 v4: 8x200 Gb/s per node = 200 GB/s
+    /// aggregate, ~25 GB/s per GPU pair; ~8 us cross-node latency.
+    pub fn infiniband() -> Self {
+        LinkSpec { latency: 8e-6, bandwidth: 25e9 }
+    }
+
+    /// Transfer time for one message.
+    pub fn xfer(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.bandwidth
+    }
+}
+
+/// Cluster shape.
+#[derive(Debug, Clone, Copy)]
+pub struct Cluster {
+    pub n_gpus: usize,
+    pub gpus_per_node: usize,
+    pub gpu: GpuSpec,
+    pub intra: LinkSpec,
+    pub inter: LinkSpec,
+}
+
+impl Cluster {
+    pub fn azure_a100(n_gpus: usize) -> Self {
+        Cluster {
+            n_gpus,
+            gpus_per_node: 8,
+            gpu: GpuSpec::a100_40g(),
+            intra: LinkSpec::nvlink(),
+            inter: LinkSpec::infiniband(),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_gpus.div_ceil(self.gpus_per_node)
+    }
+
+    /// Link between two ranks (node-major placement).
+    pub fn link(&self, a: usize, b: usize) -> LinkSpec {
+        if a / self.gpus_per_node == b / self.gpus_per_node {
+            self.intra
+        } else {
+            self.inter
+        }
+    }
+
+    /// Time to stream `bytes` of weights from HBM on one GPU.
+    pub fn weight_stream(&self, bytes: f64) -> f64 {
+        bytes / (self.gpu.mem_bw * self.gpu.mem_eff)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_constants_sane() {
+        let g = GpuSpec::a100_40g();
+        assert_eq!(g.mem_bytes, 42_949_672_960);
+        assert!(g.mem_bw > 1e12 && g.mem_bw < 2.1e12);
+    }
+
+    #[test]
+    fn link_selection() {
+        let c = Cluster::azure_a100(16);
+        assert_eq!(c.n_nodes(), 2);
+        assert!((c.link(0, 7).bandwidth - 300e9).abs() < 1.0);
+        assert!((c.link(0, 8).bandwidth - 25e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn weight_stream_time() {
+        let c = Cluster::azure_a100(1);
+        // 13.4 GB (6.7B fp16) at ~1.32 TB/s effective -> ~10 ms
+        let t = c.weight_stream(13.4e9);
+        assert!(t > 0.008 && t < 0.012, "t {t}");
+    }
+
+    #[test]
+    fn xfer_latency_dominates_small_messages() {
+        let ib = LinkSpec::infiniband();
+        let small = ib.xfer(1024.0);
+        assert!((small - 8e-6) / 8e-6 < 0.01); // latency-bound
+        let big = ib.xfer(1e9);
+        assert!(big > 0.039); // bandwidth-bound
+    }
+}

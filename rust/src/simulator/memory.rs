@@ -1,0 +1,96 @@
+//! Memory-fit solver: minimum GPUs to serve a model (Fig 12).
+//!
+//! A deployment fits when every GPU's share of the weights plus activation
+//! headroom fits in HBM.  PR-MoE shrinks the expert partition (~0.58x at
+//! 1.3B-class ratios) and MoS removes 12.5% of layers, which together halve
+//! the minimum GPU count — the paper's "2x fewer resources" (Fig 12).
+
+use crate::config::paper::{PaperModel, Variant};
+
+use super::device::GpuSpec;
+use super::inference::BYTES_PER_PARAM;
+
+/// Fraction of HBM usable for weights (the rest: activations, KV cache,
+/// workspace, fragmentation).
+pub const USABLE_FRACTION: f64 = 0.8;
+
+/// Bytes each GPU must hold for a deployment on `n` GPUs (paper-default
+/// layout: EP over experts + expert-slicing beyond, TP for the base).
+pub fn bytes_per_gpu(model: &PaperModel, variant: Variant, n: usize) -> f64 {
+    let (expert_b, base_b) = model.param_split_b();
+    let expert_bytes =
+        expert_b * 1e9 * BYTES_PER_PARAM * variant.expert_scale();
+    let base_bytes = base_b * 1e9 * BYTES_PER_PARAM * variant.depth_scale();
+    let tp = model.mp_degree.min(n).max(1);
+    let expert_shard = if model.experts > 0 {
+        let ep = model.experts.min(n);
+        let slice = (n / model.experts).max(1);
+        (ep * slice) as f64
+    } else {
+        1.0
+    };
+    base_bytes / tp as f64 + expert_bytes / expert_shard
+}
+
+/// Minimum power-of-two GPU count at which the deployment fits.
+pub fn min_gpus(model: &PaperModel, variant: Variant, gpu: &GpuSpec) -> usize {
+    let budget = gpu.mem_bytes as f64 * USABLE_FRACTION;
+    let mut n = 1;
+    while n <= 1 << 14 {
+        if bytes_per_gpu(model, variant, n) <= budget {
+            return n;
+        }
+        n *= 2;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper;
+    use crate::simulator::device::GpuSpec;
+
+    #[test]
+    fn variants_need_fewer_or_equal_gpus() {
+        let gpu = GpuSpec::a100_40g();
+        for m in paper::table6() {
+            let std = min_gpus(&m, Variant::Standard, &gpu);
+            let pr = min_gpus(&m, Variant::PrMoe, &gpu);
+            let mos = min_gpus(&m, Variant::PrMoeMos, &gpu);
+            assert!(pr <= std, "{}: pr {pr} > std {std}", m.name);
+            assert!(mos <= pr, "{}: mos {mos} > pr {pr}", m.name);
+        }
+    }
+
+    #[test]
+    fn fig12_headline_2x_somewhere() {
+        // Paper Fig 12: PR-MoE+MoS serves with 2x fewer GPUs for at least
+        // one of the studied sizes.
+        let gpu = GpuSpec::a100_40g();
+        let any_2x = paper::table6().iter().any(|m| {
+            let std = min_gpus(m, Variant::Standard, &gpu);
+            let mos = min_gpus(m, Variant::PrMoeMos, &gpu);
+            std >= 2 * mos
+        });
+        assert!(any_2x, "no configuration shows the 2x reduction");
+    }
+
+    #[test]
+    fn bytes_per_gpu_decreases_with_n() {
+        let m = &paper::table6()[2]; // 349B
+        let b8 = bytes_per_gpu(m, Variant::Standard, 8);
+        let b128 = bytes_per_gpu(m, Variant::Standard, 128);
+        assert!(b128 < b8);
+    }
+
+    #[test]
+    fn dense_min_gpus_driven_by_tp() {
+        let gpu = GpuSpec::a100_40g();
+        let d = &paper::dense_models()[1]; // 175B
+        let n = min_gpus(d, Variant::Standard, &gpu);
+        // 350 GB fp16 / 32 GB usable ≈ 11 -> 16 (power of two); tp capped
+        // at 16 so it fits exactly there.
+        assert_eq!(n, 16);
+    }
+}

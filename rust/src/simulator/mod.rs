@@ -1,0 +1,39 @@
+//! A100 cluster performance simulator (paper scale).
+//!
+//! The paper's evaluation ran on up to 256 A100s; this module carries
+//! calibrated device/link models ([`device`]), collective cost models for
+//! the §5.3 all-to-all schedules ([`collectives`]), the memory-bandwidth-
+//! bound decode latency model ([`inference`]), the memory-fit solver
+//! ([`memory`]), the training-throughput model ([`training`]), and the
+//! figure-level scenario runners ([`scenarios`]) that regenerate Figures
+//! 10–15 and Table 3.  Absolute numbers are modelled; the *shapes* (who
+//! wins, by what factor, where scaling stalls) are asserted by unit tests
+//! and quoted next to the paper's numbers in EXPERIMENTS.md.
+
+pub mod collectives;
+pub mod device;
+pub mod inference;
+pub mod memory;
+pub mod scenarios;
+pub mod training;
+
+pub use device::{Cluster, GpuSpec, LinkSpec};
+pub use inference::{decode_latency, Breakdown, Layout, Stack};
+
+/// CLI entry: run a named scenario and print its table.
+pub fn run_named(name: &str) -> anyhow::Result<()> {
+    let t = match name {
+        "fig10" => scenarios::fig10(),
+        "fig11" => scenarios::fig11(),
+        "fig12" => scenarios::fig12(),
+        "fig13" => scenarios::fig13(),
+        "fig14" => scenarios::fig14(),
+        "fig15" => scenarios::fig15(),
+        "table3" => scenarios::table3(),
+        other => anyhow::bail!(
+            "unknown scenario {other:?} (fig10..fig15, table3)"
+        ),
+    };
+    t.print();
+    Ok(())
+}

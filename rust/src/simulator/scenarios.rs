@@ -1,0 +1,290 @@
+//! Figure/table scenario runners: each function regenerates one of the
+//! paper's evaluation artifacts as a [`Table`] (printed + CSV by benches).
+
+use crate::config::paper::{self, PaperModel, Variant};
+use crate::util::table::{f1, f2, ratio, Table};
+
+use super::device::{Cluster, GpuSpec};
+use super::inference::{decode_latency, Layout, Stack};
+use super::memory;
+use super::training;
+
+/// Batch lanes per GPU used across the serving scenarios (latency studies
+/// run moderate per-device batches; the shapes are insensitive to the exact
+/// value — see fig10 sweep in the bench).
+pub const TOKENS_PER_GPU: f64 = 16.0;
+
+fn lat_ms(
+    m: &PaperModel,
+    v: Variant,
+    stack: Stack,
+    n: usize,
+    layout: Layout,
+) -> f64 {
+    let cl = Cluster::azure_a100(n);
+    decode_latency(m, v, stack, &cl, layout, TOKENS_PER_GPU).total() * 1e3
+}
+
+fn thr_per_gpu(lat_ms: f64) -> f64 {
+    TOKENS_PER_GPU / (lat_ms / 1e3)
+}
+
+/// Fig 10: 52B (1.3B+MoE-128), 8→64 GPUs, DS vs PyTorch.
+pub fn fig10() -> Table {
+    let m = paper::by_name("1.3B+MoE-128").unwrap();
+    let mut t = Table::new(
+        "Figure 10 — 52B MoE (1.3B+MoE-128), scaling 8..64 GPUs",
+        &["GPUs", "PyTorch ms", "DS ms", "speedup",
+          "PyTorch tok/s/GPU", "DS tok/s/GPU"],
+    );
+    for n in [8, 16, 32, 64] {
+        let lay = Layout { n_gpus: n, tp: 1, ep: n, expert_slice: 1 };
+        let pt = lat_ms(&m, Variant::Standard, Stack::PyTorch, n, lay);
+        let ds = lat_ms(&m, Variant::Standard, Stack::DeepSpeed, n, lay);
+        t.row(&[
+            n.to_string(),
+            f2(pt),
+            f2(ds),
+            ratio(pt / ds),
+            f1(thr_per_gpu(pt)),
+            f1(thr_per_gpu(ds)),
+        ]);
+    }
+    t.note("paper: DS scales past 32 GPUs with *increasing* per-GPU \
+            throughput (super-linear); PyTorch stalls");
+    t
+}
+
+/// Fig 11: Table 6 models (107B..2T) on 128/256 GPUs, DS vs PyTorch.
+pub fn fig11() -> Table {
+    let mut t = Table::new(
+        "Figure 11 — 107B..2T MoE models, DS (opt) vs PyTorch (base)",
+        &["model", "params", "GPUs", "PyTorch ms", "DS ms", "reduction"],
+    );
+    for m in paper::table6().iter().skip(1) {
+        // 128 GPUs baseline; DS gets 256 for the trillion-scale models
+        // (as the paper: "128/256 GPUs ... 256 for the trillion-scale").
+        let n_base = 128;
+        let n_ds = if m.params_b() > 500.0 { 256 } else { 128 };
+        let lay_pt = Layout::paper_default(m, n_base);
+        let lay_ds = Layout::paper_default(m, n_ds);
+        let pt = lat_ms(m, Variant::Standard, Stack::PyTorch, n_base, lay_pt);
+        let ds = lat_ms(m, Variant::Standard, Stack::DeepSpeed, n_ds, lay_ds);
+        t.row(&[
+            m.name.to_string(),
+            format!("{:.0}B", m.params_b()),
+            format!("{n_base}/{n_ds}"),
+            f2(pt),
+            f2(ds),
+            ratio(pt / ds),
+        ]);
+    }
+    t.note("paper: up to 7.3x latency reduction; 1T-parameter model \
+            under 25 ms");
+    t
+}
+
+/// Fig 12: minimum GPUs to serve — MoE vs PR-MoE vs PR-MoE+MoS.
+pub fn fig12() -> Table {
+    let gpu = GpuSpec::a100_40g();
+    let mut t = Table::new(
+        "Figure 12 — minimum GPUs required for inference",
+        &["model", "MoE", "PR-MoE", "PR-MoE+MoS", "reduction"],
+    );
+    for m in paper::table6() {
+        let std = memory::min_gpus(&m, Variant::Standard, &gpu);
+        let pr = memory::min_gpus(&m, Variant::PrMoe, &gpu);
+        let mos = memory::min_gpus(&m, Variant::PrMoeMos, &gpu);
+        t.row(&[
+            m.name.to_string(),
+            std.to_string(),
+            pr.to_string(),
+            mos.to_string(),
+            ratio(std as f64 / mos as f64),
+        ]);
+    }
+    t.note("paper: PR-MoE+MoS serves with 2x fewer GPUs (e.g. 16 vs 32)");
+    t
+}
+
+/// Fig 13: latency of MoE / PR-MoE / PR-MoE+MoS across GPU counts.
+pub fn fig13() -> Table {
+    let mut t = Table::new(
+        "Figure 13 — PR-MoE / MoS latency (DeepSpeed)",
+        &["model", "GPUs", "MoE ms", "PR-MoE ms", "PR-MoE+MoS ms"],
+    );
+    for m in [paper::by_name("8B+MoE-128").unwrap(),
+              paper::by_name("24B+MoE-128").unwrap()] {
+        for n in [16usize, 32, 64, 128] {
+            let lay = Layout::paper_default(&m, n);
+            if memory::bytes_per_gpu(&m, Variant::Standard, n)
+                > GpuSpec::a100_40g().mem_bytes as f64 * memory::USABLE_FRACTION
+            {
+                continue; // standard variant does not fit this few GPUs
+            }
+            t.row(&[
+                m.name.to_string(),
+                n.to_string(),
+                f2(lat_ms(&m, Variant::Standard, Stack::DeepSpeed, n, lay)),
+                f2(lat_ms(&m, Variant::PrMoe, Stack::DeepSpeed, n, lay)),
+                f2(lat_ms(&m, Variant::PrMoeMos, Stack::DeepSpeed, n, lay)),
+            ]);
+        }
+    }
+    t.note("paper: PR-MoE+MoS is lowest-latency at every point");
+    t
+}
+
+/// Fig 14: 52B MoE vs quality-equivalent 6.7B dense.
+pub fn fig14() -> Table {
+    let moe = paper::by_name("1.3B+MoE-128").unwrap();
+    let dense = paper::by_name("dense-6.7B").unwrap();
+    let mut t = Table::new(
+        "Figure 14 — 52B MoE vs quality-equivalent 6.7B dense",
+        &["config", "GPUs", "latency ms", "tok/s/GPU (cost proxy)"],
+    );
+    // dense on 1 GPU (the paper: "1 GPU ... offers the lowest latency").
+    let d_lay = Layout { n_gpus: 1, tp: 1, ep: 1, expert_slice: 1 };
+    let d_pt = lat_ms(&dense, Variant::Standard, Stack::PyTorch, 1, d_lay);
+    let d_ds = lat_ms(&dense, Variant::Standard, Stack::DeepSpeed, 1, d_lay);
+    let n = 128;
+    let m_lay = Layout { n_gpus: n, tp: 1, ep: 128, expert_slice: 1 };
+    let m_pt = lat_ms(&moe, Variant::Standard, Stack::PyTorch, n, m_lay);
+    let m_ds = lat_ms(&moe, Variant::Standard, Stack::DeepSpeed, n, m_lay);
+    let m_mos = lat_ms(&moe, Variant::PrMoeMos, Stack::DeepSpeed, n, m_lay);
+    for (name, gpus, ms) in [
+        ("6.7B dense (PyTorch)", 1, d_pt),
+        ("6.7B dense (DeepSpeed)", 1, d_ds),
+        ("52B MoE (PyTorch)", n, m_pt),
+        ("52B MoE (DeepSpeed)", n, m_ds),
+        ("PR-MoE+MoS (DeepSpeed)", n, m_mos),
+    ] {
+        t.row(&[
+            name.to_string(),
+            gpus.to_string(),
+            f2(ms),
+            f1(thr_per_gpu(ms)),
+        ]);
+    }
+    t.note(&format!(
+        "paper: PR-MoE+MoS 2.4x faster than dense-on-PyTorch; here {}",
+        ratio(d_pt / m_mos)
+    ));
+    t
+}
+
+/// Fig 15: trillion-scale MoE vs quality-equivalent 175B dense.
+pub fn fig15() -> Table {
+    let moe = paper::by_name("24B+MoE-128").unwrap(); // ~1.06T params
+    let dense = paper::by_name("dense-175B").unwrap();
+    let mut t = Table::new(
+        "Figure 15 — ~1T MoE vs quality-equivalent 175B dense",
+        &["config", "GPUs", "tp", "latency ms", "tok/s/GPU (cost proxy)"],
+    );
+    // dense-175B: 16-way tensor slicing (paper), PyTorch vs DS.
+    let d_lay = Layout { n_gpus: 16, tp: 16, ep: 1, expert_slice: 1 };
+    let d_pt = lat_ms(&dense, Variant::Standard, Stack::PyTorch, 16, d_lay);
+    let d_ds = lat_ms(&dense, Variant::Standard, Stack::DeepSpeed, 16, d_lay);
+    // MoE: 256 GPUs, tp=8 (half the dense degree, §5.5.4), EP 128, slice 2.
+    let n = 256;
+    let m_lay = Layout { n_gpus: n, tp: 8, ep: 128, expert_slice: 2 };
+    let m_pt = lat_ms(&moe, Variant::Standard, Stack::PyTorch, n, m_lay);
+    let m_ds = lat_ms(&moe, Variant::Standard, Stack::DeepSpeed, n, m_lay);
+    let m_mos = lat_ms(&moe, Variant::PrMoeMos, Stack::DeepSpeed, n, m_lay);
+    for (name, gpus, tp, ms) in [
+        ("175B dense (PyTorch)", 16, 16, d_pt),
+        ("175B dense (DeepSpeed)", 16, 16, d_ds),
+        ("1T MoE (PyTorch)", n, 8, m_pt),
+        ("1T MoE (DeepSpeed)", n, 8, m_ds),
+        ("1T PR-MoE+MoS (DeepSpeed)", n, 8, m_mos),
+    ] {
+        t.row(&[
+            name.to_string(),
+            gpus.to_string(),
+            tp.to_string(),
+            f2(ms),
+            f1(thr_per_gpu(ms)),
+        ]);
+    }
+    t.note(&format!(
+        "paper: 4.5x faster / 9x cheaper vs dense-PyTorch; here {} faster, \
+         {} cheaper",
+        ratio(d_pt / m_mos),
+        ratio(thr_per_gpu(m_mos) / thr_per_gpu(d_pt))
+    ));
+    t
+}
+
+/// Table 3: training throughput, 6.7B dense vs 1.3B+MoE-128.
+pub fn table3() -> Table {
+    let cl = Cluster::azure_a100(128);
+    let dense = PaperModel {
+        name: "6.7B dense",
+        n_layers: 32,
+        hidden: 4096,
+        n_heads: 32,
+        experts: 0,
+        mp_degree: 8,
+        ep_degree: 1,
+        declared_total_b: 6.7,
+    };
+    let moe = paper::by_name("1.3B+MoE-128").unwrap();
+    let d = training::samples_per_sec(&dense, &cl);
+    let m = training::samples_per_sec(&moe, &cl);
+    let mut t = Table::new(
+        "Table 3 — training throughput on 128 A100s",
+        &["model", "samples/s (paper)", "samples/s (model)", "gain"],
+    );
+    t.row(&["6.7B dense".into(), "70".into(), f1(d), ratio(1.0)]);
+    t.row(&["1.3B+MoE-128".into(), "372".into(), f1(m), ratio(m / d)]);
+    t.note("paper: 5x throughput gain / cost reduction");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_scenarios_render() {
+        for t in [fig10(), fig11(), fig12(), fig13(), fig14(), fig15(),
+                  table3()] {
+            assert!(!t.rows.is_empty(), "{} empty", t.title);
+            let s = t.render();
+            assert!(s.contains("=="));
+        }
+    }
+
+    #[test]
+    fn fig11_headline_ratios() {
+        let t = fig11();
+        // at least one configuration shows >= 4x latency reduction
+        let best: f64 = t
+            .rows
+            .iter()
+            .map(|r| r[5].trim_end_matches('x').parse::<f64>().unwrap())
+            .fold(0.0, f64::max);
+        assert!(best >= 4.0, "best DS/PyTorch reduction {best}x");
+    }
+
+    #[test]
+    fn fig14_moe_beats_dense_on_ds() {
+        let t = fig14();
+        let ms = |i: usize| t.rows[i][2].parse::<f64>().unwrap();
+        // MoE on DeepSpeed faster than dense on PyTorch
+        assert!(ms(3) < ms(0), "52B-on-DS {} vs dense-on-PT {}", ms(3), ms(0));
+        // ...and PR-MoE+MoS fastest of all MoE rows
+        assert!(ms(4) < ms(3));
+    }
+
+    #[test]
+    fn fig15_cost_and_speed_gains() {
+        let t = fig15();
+        let ms = |i: usize| t.rows[i][3].parse::<f64>().unwrap();
+        let cost = |i: usize| t.rows[i][4].parse::<f64>().unwrap();
+        let speedup = ms(0) / ms(4);
+        let cheaper = cost(4) / cost(0);
+        assert!(speedup > 2.0, "speedup {speedup:.1} (paper 4.5x)");
+        assert!(cheaper > 3.0, "cost gain {cheaper:.1} (paper 9x)");
+    }
+}

@@ -1,0 +1,137 @@
+//! Tokenizer over the synthetic vocabulary.
+//!
+//! The corpus is generated directly in token-id space; to make the serving
+//! path exercise a real text boundary (requests arrive as text, responses
+//! leave as text) each id is given a deterministic pseudo-word surface form
+//! built from syllables.  Encoding is an exact-match lookup with a fallback
+//! to `<sep>` for unknown words — mirroring a byte-fallback tokenizer's
+//! "never fails to encode" contract at testbed scale.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const N_SPECIALS: usize = 4;
+
+const ONSETS: &[&str] = &["b", "d", "f", "g", "k", "l", "m", "n", "p", "r",
+                          "s", "t", "v", "z", "ch", "st"];
+const NUCLEI: &[&str] = &["a", "e", "i", "o", "u", "ai", "ou"];
+const CODAS: &[&str] = &["", "n", "r", "s", "t", "l", "m"];
+
+/// Bijective id <-> pseudo-word tokenizer.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    words: Vec<String>,
+    lookup: HashMap<String, i32>,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize) -> Self {
+        assert!(vocab_size > N_SPECIALS);
+        let mut words = vec![
+            "<pad>".to_string(),
+            "<bos>".to_string(),
+            "<eos>".to_string(),
+            "<sep>".to_string(),
+        ];
+        for id in 0..vocab_size - N_SPECIALS {
+            words.push(Self::word_for(id));
+        }
+        let lookup = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Tokenizer { words, lookup }
+    }
+
+    /// Deterministic two-syllable pseudo-word for a content id.
+    fn word_for(id: usize) -> String {
+        let n1 = ONSETS.len() * NUCLEI.len();
+        let syl = |i: usize| {
+            format!("{}{}", ONSETS[i % ONSETS.len()],
+                    NUCLEI[(i / ONSETS.len()) % NUCLEI.len()])
+        };
+        if id < n1 * CODAS.len() {
+            format!("{}{}", syl(id % n1), CODAS[id / n1])
+        } else {
+            // Extend with a second syllable for large vocabs.
+            let rest = id - n1 * CODAS.len();
+            format!("{}{}", syl(rest % n1), Self::word_for(rest / n1))
+        }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn decode_token(&self, id: i32) -> &str {
+        self.words
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<oov>")
+    }
+
+    /// Token ids -> space-joined text, dropping specials.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&id| id >= N_SPECIALS as i32)
+            .map(|&id| self.decode_token(id))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Whitespace-split encode; unknown words become `<sep>`.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace()
+            .map(|w| self.lookup.get(w).copied().unwrap_or(SEP))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_ids() {
+        let t = Tokenizer::new(512);
+        assert_eq!(t.vocab_size(), 512);
+        for id in N_SPECIALS as i32..512 {
+            let text = t.decode_token(id).to_string();
+            let back = t.encode(&text);
+            assert_eq!(back, vec![id], "word {text:?}");
+        }
+    }
+
+    #[test]
+    fn words_are_unique() {
+        let t = Tokenizer::new(512);
+        let set: std::collections::HashSet<_> = t.words.iter().collect();
+        assert_eq!(set.len(), 512);
+    }
+
+    #[test]
+    fn unknown_maps_to_sep() {
+        let t = Tokenizer::new(512);
+        assert_eq!(t.encode("xyzzyqqq"), vec![SEP]);
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let t = Tokenizer::new(512);
+        let text = t.decode(&[BOS, 10, 11, EOS, PAD]);
+        assert!(!text.contains('<'));
+        assert_eq!(text.split(' ').count(), 2);
+    }
+
+    #[test]
+    fn sentence_roundtrip() {
+        let t = Tokenizer::new(512);
+        let ids = vec![7, 42, 100, 300];
+        let text = t.decode(&ids);
+        assert_eq!(t.encode(&text), ids);
+    }
+}

@@ -1,0 +1,184 @@
+//! Staged knowledge distillation controller (§4.2, Figs 5/6, Table 5).
+//!
+//! Mixture-of-Students training: a depth-reduced PR-MoE student imitates a
+//! PR-MoE teacher.  The paper's finding is that *full-run* KD hurts late in
+//! training (the reduced-capacity student underfits when forced to minimize
+//! both losses), while **staged KD** — stop the KD term partway through —
+//! matches the teacher's validation curve.  This controller owns that
+//! staging decision at L3: it runs the teacher's `logits` program, feeds the
+//! student's fused `distill_step`, and zeroes `kd_alpha` after
+//! `kd_stop_frac` of the step budget (the paper stops at 400K/~570K ≈ 0.7).
+
+use anyhow::{Context, Result};
+
+use crate::data::Corpus;
+use crate::runtime::{HostTensor, Manifest, Program};
+
+use super::driver::{scalar_f32, HistoryPoint, Trainer};
+use super::lr::LrSchedule;
+
+/// KD schedule modes compared in Table 5 / Figs 5-6.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KdMode {
+    /// No KD at all (student trained from scratch; Table 5 row 2).
+    None,
+    /// KD for the entire run (Table 5 row 3, Fig 5 — hurts late).
+    Full,
+    /// KD until `frac` of total steps, then pure LM loss (rows 4/7, Fig 6).
+    Staged { frac: f64 },
+}
+
+pub struct Distiller {
+    pub student: Trainer,
+    teacher_params: Vec<xla::Literal>,
+    teacher_logits_prog: std::rc::Rc<Program>,
+    distill_prog: std::rc::Rc<Program>,
+    kd_alpha: f32,
+    pub mode: KdMode,
+}
+
+impl Distiller {
+    /// `teacher_ckpt`: a trained teacher checkpoint directory (the
+    /// artifacts' initial checkpoint is untrained — train the teacher first
+    /// with [`Trainer`]).
+    pub fn new(
+        manifest: &Manifest,
+        student_model: &str,
+        teacher_ckpt: impl AsRef<std::path::Path>,
+        schedule: LrSchedule,
+        mode: KdMode,
+    ) -> Result<Distiller> {
+        let student = Trainer::new(manifest, student_model, schedule)?;
+        let arts = manifest.model(student_model)?;
+        let teacher_name = arts
+            .config
+            .teacher
+            .clone()
+            .with_context(|| format!("{student_model} declares no teacher"))?;
+
+        let rt = student.runtime();
+        let teacher_logits_prog = rt.load(
+            arts.programs
+                .get("teacher_logits")
+                .context("no teacher_logits program")?,
+        )?;
+        let distill_prog = rt.load(
+            arts.programs
+                .get("distill_step")
+                .context("no distill_step program")?,
+        )?;
+
+        let t_ck = crate::runtime::Checkpoint::load(teacher_ckpt)?;
+        anyhow::ensure!(
+            t_ck.model == teacher_name,
+            "teacher checkpoint is {} but student expects {}",
+            t_ck.model, teacher_name
+        );
+        let teacher_params: Result<Vec<_>> =
+            t_ck.tensors.iter().map(|t| t.to_literal()).collect();
+
+        let kd_alpha = arts.config.kd_alpha as f32;
+        Ok(Distiller {
+            student,
+            teacher_params: teacher_params?,
+            teacher_logits_prog,
+            distill_prog,
+            kd_alpha,
+            mode,
+        })
+    }
+
+    /// Effective KD weight at step `t` of `total`.
+    pub fn alpha_at(&self, t: usize, total: usize) -> f32 {
+        match self.mode {
+            KdMode::None => 0.0,
+            KdMode::Full => self.kd_alpha,
+            KdMode::Staged { frac } => {
+                if (t as f64) < frac * total as f64 {
+                    self.kd_alpha
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// One distillation step.  Returns (loss, ce, kl).
+    pub fn step(&mut self, batch_tokens: &[i32], alpha: f32) -> Result<(f64, f64, f64)> {
+        let s = &mut self.student;
+        s.step += 1;
+        let lr = s.schedule.at(s.step);
+        let batch =
+            HostTensor::i32(&[s.batch, s.seq + 1], batch_tokens.to_vec())
+                .to_literal()?;
+
+        // Teacher forward (L3 orchestrates teacher and student — at paper
+        // scale these run on disjoint devices).
+        let mut t_in: Vec<&xla::Literal> = self.teacher_params.iter().collect();
+        t_in.push(&batch);
+        let t_out = self.teacher_logits_prog.run_literal_refs(&t_in)?;
+        let teacher_logits = &t_out[0];
+
+        let step_lit = HostTensor::scalar_i32(s.step as i32).to_literal()?;
+        let lr_lit = HostTensor::scalar_f32(lr as f32).to_literal()?;
+        let alpha_lit = HostTensor::scalar_f32(alpha).to_literal()?;
+
+        let (params, m, v) = s.state_refs();
+        let n = params.len();
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 5);
+        inputs.extend(params);
+        inputs.extend(m);
+        inputs.extend(v);
+        inputs.push(&batch);
+        inputs.push(teacher_logits);
+        inputs.push(&alpha_lit);
+        inputs.push(&step_lit);
+        inputs.push(&lr_lit);
+
+        let mut outs = self.distill_prog.run_literal_refs(&inputs)?;
+        let kl = scalar_f32(&outs.pop().unwrap())?;
+        let ce = scalar_f32(&outs.pop().unwrap())?;
+        let loss = scalar_f32(&outs.pop().unwrap())?;
+        s.set_state(outs)?;
+        Ok((loss, ce, kl))
+    }
+
+    /// Full distillation run mirroring [`Trainer::run`].
+    pub fn run(
+        &mut self,
+        corpus: &Corpus,
+        steps: usize,
+        eval_every: usize,
+        quiet: bool,
+    ) -> Result<()> {
+        for _ in 0..steps {
+            let t = self.student.step + 1;
+            let alpha = self.alpha_at(t, steps);
+            let tokens = corpus.train_batch(t, self.student.batch);
+            let (loss, ce, kl) = if alpha == 0.0 && self.mode == KdMode::None {
+                // Pure-LM student: use the ordinary train_step (identical
+                // objective, avoids the teacher forward).
+                self.student.train_step(&tokens)?
+            } else {
+                self.step(&tokens, alpha)?
+            };
+            let step = self.student.step;
+            if step % eval_every == 0 || step == steps {
+                let valid = self.student.eval(corpus, 4)?;
+                self.student.history.push(HistoryPoint {
+                    step,
+                    train_loss: loss,
+                    valid_loss: valid,
+                });
+                if !quiet {
+                    println!(
+                        "[distill {:>8}] step {:>5} alpha {:.2} loss {:.4} \
+                         ce {:.4} kl {:.4} valid {:.4}",
+                        self.student.model, step, alpha, loss, ce, kl, valid
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}

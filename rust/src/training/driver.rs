@@ -1,0 +1,321 @@
+//! Training driver: runs the AOT-compiled fused `train_step` in a loop.
+//!
+//! The entire optimizer (Adam + bias correction) is inside the XLA program;
+//! Rust owns the loop, the LR schedule, the data order, validation, and
+//! checkpointing — exactly the paper's DeepSpeed split where the Python
+//! model definition is compiled once and the surrounding system does the
+//! rest.  State (params, m, v) stays in `xla::Literal`s between steps.
+
+use anyhow::{Context, Result};
+
+use crate::data::{Corpus, EvalSuite};
+use crate::runtime::{Checkpoint, HostTensor, Manifest, Program, Runtime};
+
+use super::lr::LrSchedule;
+
+/// One evaluation record (step, train loss, valid loss).
+#[derive(Debug, Clone)]
+pub struct HistoryPoint {
+    pub step: usize,
+    pub train_loss: f64,
+    pub valid_loss: f64,
+}
+
+pub struct Trainer {
+    pub model: String,
+    rt: Runtime,
+    train_prog: std::rc::Rc<Program>,
+    eval_prog: std::rc::Rc<Program>,
+    logits_prog: Option<std::rc::Rc<Program>>,
+    n_params: usize,
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    pub step: usize,
+    pub schedule: LrSchedule,
+    pub batch: usize,
+    pub seq: usize,
+    pub eval_batch: usize,
+    pub history: Vec<HistoryPoint>,
+    param_shapes: Vec<Vec<usize>>,
+    param_names: Vec<String>,
+}
+
+impl Trainer {
+    pub fn new(
+        manifest: &Manifest,
+        model: &str,
+        schedule: LrSchedule,
+    ) -> Result<Trainer> {
+        let arts = manifest.model(model)?;
+        let rt = Runtime::cpu()?;
+        let train_prog = rt.load(
+            arts.programs
+                .get("train_step")
+                .with_context(|| format!("{model} has no train_step"))?,
+        )?;
+        let eval_prog = rt.load(
+            arts.programs
+                .get("eval_loss")
+                .with_context(|| format!("{model} has no eval_loss"))?,
+        )?;
+        let logits_prog = arts
+            .programs
+            .get("logits")
+            .map(|s| rt.load(s))
+            .transpose()?;
+
+        let ck = Checkpoint::load(&arts.checkpoint_dir)?;
+        let n_params = ck.tensors.len();
+        let params: Result<Vec<_>> =
+            ck.tensors.iter().map(|t| t.to_literal()).collect();
+        let zeros: Result<Vec<_>> = ck
+            .tensors
+            .iter()
+            .map(|t| HostTensor::zeros_f32(&t.shape).to_literal())
+            .collect();
+        let m = zeros?;
+        let zeros2: Result<Vec<_>> = ck
+            .tensors
+            .iter()
+            .map(|t| HostTensor::zeros_f32(&t.shape).to_literal())
+            .collect();
+
+        Ok(Trainer {
+            model: model.to_string(),
+            rt,
+            train_prog,
+            eval_prog,
+            logits_prog,
+            n_params,
+            params: params?,
+            m,
+            v: zeros2?,
+            step: ck.step,
+            schedule,
+            batch: arts.train_batch,
+            seq: arts.train_seq,
+            eval_batch: arts.eval_batch,
+            history: Vec::new(),
+            param_shapes: ck.tensors.iter().map(|t| t.shape.clone()).collect(),
+            param_names: ck.names.clone(),
+        })
+    }
+
+    /// One optimizer step on the given batch (row-major [batch, seq+1]).
+    /// Returns (total loss, ce, aux).
+    pub fn train_step(&mut self, batch_tokens: &[i32]) -> Result<(f64, f64, f64)> {
+        self.step += 1;
+        let lr = self.schedule.at(self.step);
+        let batch = HostTensor::i32(&[self.batch, self.seq + 1],
+                                    batch_tokens.to_vec())
+            .to_literal()?;
+        let step_lit = HostTensor::scalar_i32(self.step as i32).to_literal()?;
+        let lr_lit = HostTensor::scalar_f32(lr as f32).to_literal()?;
+
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(3 * self.n_params + 3);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+        inputs.push(&batch);
+        inputs.push(&step_lit);
+        inputs.push(&lr_lit);
+
+        let mut outs = self.train_prog.run_literal_refs(&inputs)?;
+        // Outputs: params' + m' + v' + [loss, ce, aux]
+        let aux = scalar_f32(&outs.pop().unwrap())?;
+        let ce = scalar_f32(&outs.pop().unwrap())?;
+        let loss = scalar_f32(&outs.pop().unwrap())?;
+        let n = self.n_params;
+        anyhow::ensure!(outs.len() == 3 * n, "train_step output arity");
+        self.v = outs.split_off(2 * n);
+        self.m = outs.split_off(n);
+        self.params = outs;
+        Ok((loss, ce, aux))
+    }
+
+    /// Mean validation loss over `n_batches` fixed batches.
+    pub fn eval(&self, corpus: &Corpus, n_batches: usize) -> Result<f64> {
+        let mut total = 0.0;
+        let n = n_batches.min(corpus.n_valid_batches(self.eval_batch)).max(1);
+        for i in 0..n {
+            let tokens = corpus.valid_batch(i, self.eval_batch);
+            let batch = HostTensor::i32(
+                &[self.eval_batch, self.seq + 1],
+                tokens,
+            )
+            .to_literal()?;
+            let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+            inputs.push(&batch);
+            let outs = self.eval_prog.run_literal_refs(&inputs)?;
+            total += scalar_f32(&outs[0])?;
+        }
+        Ok(total / n as f64)
+    }
+
+    /// Train `steps` steps on the corpus, recording eval every `eval_every`.
+    pub fn run(
+        &mut self,
+        corpus: &Corpus,
+        steps: usize,
+        eval_every: usize,
+        quiet: bool,
+    ) -> Result<()> {
+        for _ in 0..steps {
+            let tokens = corpus.train_batch(self.step + 1, self.batch);
+            let (loss, _, _) = self.train_step(&tokens)?;
+            let last_train = loss;
+            if self.step % eval_every == 0 || self.step == steps {
+                let valid = self.eval(corpus, 4)?;
+                self.history.push(HistoryPoint {
+                    step: self.step,
+                    train_loss: last_train,
+                    valid_loss: valid,
+                });
+                if !quiet {
+                    println!(
+                        "[{:>10}] step {:>5}  lr {:.2e}  train {:.4}  valid {:.4}",
+                        self.model, self.step,
+                        self.schedule.at(self.step), last_train, valid
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Zero-shot cloze evaluation (Tables 2/4/5 analogue): top-1 accuracy
+    /// predicting token `prompt_len` of held-out sequences, per domain.
+    pub fn zero_shot(
+        &self,
+        suite: &EvalSuite,
+        prompt_len: usize,
+    ) -> Result<(Vec<(String, f64)>, f64)> {
+        let prog = self
+            .logits_prog
+            .as_ref()
+            .context("model exports no logits program")?;
+        // Batch all items through the [eval_batch, seq+1] logits program.
+        let mut items: Vec<(&[i32], i32)> = Vec::new();
+        for t in &suite.tasks {
+            for (p, gold) in &t.items {
+                items.push((p, *gold));
+            }
+        }
+        let mut predictions = Vec::with_capacity(items.len());
+        let rows = self.eval_batch;
+        let width = self.seq + 1;
+        let vocab = {
+            let spec = &prog.spec.outputs[0];
+            spec.shape[2]
+        };
+        for chunk in items.chunks(rows) {
+            let mut tokens = vec![0i32; rows * width];
+            for (r, (p, _)) in chunk.iter().enumerate() {
+                let n = p.len().min(width);
+                tokens[r * width..r * width + n].copy_from_slice(&p[..n]);
+            }
+            let batch =
+                HostTensor::i32(&[rows, width], tokens).to_literal()?;
+            let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+            inputs.push(&batch);
+            let outs = prog.run_literal_refs(&inputs)?;
+            let logits = HostTensor::from_literal(&outs[0])?; // [rows, seq, V]
+            let data = logits.as_f32()?;
+            for r in 0..chunk.len() {
+                let off = (r * self.seq + (prompt_len - 1)) * vocab;
+                let row = &data[off..off + vocab];
+                let mut best = 0;
+                for (i, &x) in row.iter().enumerate() {
+                    if x > row[best] {
+                        best = i;
+                    }
+                }
+                predictions.push(best as i32);
+            }
+        }
+        // Score per task.
+        let mut idx = 0;
+        let mut per_task = Vec::new();
+        for t in &suite.tasks {
+            if t.items.is_empty() {
+                continue;
+            }
+            let correct = t
+                .items
+                .iter()
+                .map(|(_, gold)| {
+                    let ok = predictions[idx] == *gold;
+                    idx += 1;
+                    ok
+                })
+                .filter(|&b| b)
+                .count();
+            per_task
+                .push((t.name.clone(), correct as f64 / t.items.len() as f64));
+        }
+        let mean =
+            per_task.iter().map(|(_, a)| a).sum::<f64>() / per_task.len() as f64;
+        Ok((per_task, mean))
+    }
+
+    /// Snapshot current params to a checkpoint directory.
+    pub fn save(&self, dir: impl AsRef<std::path::Path>) -> Result<()> {
+        let tensors: Result<Vec<_>> = self
+            .params
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect();
+        Checkpoint {
+            model: self.model.clone(),
+            step: self.step,
+            names: self.param_names.clone(),
+            tensors: tensors?,
+        }
+        .save(dir)?;
+        Ok(())
+    }
+
+    /// Restore params (e.g. a trained teacher) from a checkpoint directory.
+    pub fn restore(&mut self, dir: impl AsRef<std::path::Path>) -> Result<()> {
+        let ck = Checkpoint::load(dir)?;
+        anyhow::ensure!(ck.names == self.param_names, "param layout mismatch");
+        let params: Result<Vec<_>> =
+            ck.tensors.iter().map(|t| t.to_literal()).collect();
+        self.params = params?;
+        self.step = ck.step;
+        Ok(())
+    }
+
+    pub fn params_ref(&self) -> &[xla::Literal] {
+        &self.params
+    }
+
+    /// Borrow (params, m, v) for composing custom step programs (KD).
+    pub fn state_refs(&self) -> (&[xla::Literal], &[xla::Literal], &[xla::Literal]) {
+        (&self.params, &self.m, &self.v)
+    }
+
+    /// Install new (params + m + v) state from a step program's outputs.
+    pub fn set_state(&mut self, mut outs: Vec<xla::Literal>) -> Result<()> {
+        let n = self.n_params;
+        anyhow::ensure!(outs.len() == 3 * n, "state arity {} != 3x{n}", outs.len());
+        self.v = outs.split_off(2 * n);
+        self.m = outs.split_off(n);
+        self.params = outs;
+        Ok(())
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+pub(crate) fn scalar_f32(lit: &xla::Literal) -> Result<f64> {
+    Ok(lit.to_vec::<f32>()?[0] as f64)
+}

@@ -1,0 +1,69 @@
+//! Learning-rate schedule: linear warmup + cosine decay to a floor
+//! (Table 1: "LR linear warmup tokens" + "LR cosine decay tokens"; the MoE
+//! models use a lower minimum LR and a longer decay horizon than dense).
+
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub peak: f64,
+    pub min: f64,
+    pub warmup_steps: usize,
+    pub decay_steps: usize,
+}
+
+impl LrSchedule {
+    /// LR at 1-based step `t`.
+    pub fn at(&self, t: usize) -> f64 {
+        if self.warmup_steps > 0 && t <= self.warmup_steps {
+            return self.peak * t as f64 / self.warmup_steps as f64;
+        }
+        let progressed = (t - self.warmup_steps) as f64;
+        let horizon = (self.decay_steps.saturating_sub(self.warmup_steps))
+            .max(1) as f64;
+        let frac = (progressed / horizon).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * frac).cos());
+        self.min + (self.peak - self.min) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> LrSchedule {
+        LrSchedule { peak: 1e-3, min: 1e-4, warmup_steps: 10, decay_steps: 100 }
+    }
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = sched();
+        assert!((s.at(1) - 1e-4).abs() < 1e-12);
+        assert!((s.at(5) - 5e-4).abs() < 1e-12);
+        assert!((s.at(10) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decays_to_min_and_stays() {
+        let s = sched();
+        assert!((s.at(100) - 1e-4).abs() < 1e-9);
+        assert!((s.at(1000) - 1e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = sched();
+        let mut prev = s.at(10);
+        for t in 11..=100 {
+            let cur = s.at(t);
+            assert!(cur <= prev + 1e-12, "step {t}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn midpoint_is_halfway() {
+        let s = sched();
+        // halfway through decay: cos(pi/2)=0 -> (peak+min)/2
+        let mid = s.at(55);
+        assert!((mid - 5.5e-4).abs() < 1e-5, "mid {mid}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Training stack: AOT train-step driver, LR schedule, and the staged
+//! knowledge-distillation controller (§3 training runs, §4.2 MoS).
+
+pub mod distill;
+pub mod driver;
+pub mod lr;
+
+pub use distill::{Distiller, KdMode};
+pub use driver::{HistoryPoint, Trainer};
+pub use lr::LrSchedule;

@@ -1,0 +1,162 @@
+//! Tiny CLI argument parser (no `clap` in the offline environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    /// (name, default, help) registered for usage output.
+    specs: Vec<(String, String, String)>,
+}
+
+impl Args {
+    /// Parse from an iterator (usually `std::env::args().skip(1)`).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut a = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map_or(false, |n| !n.starts_with("--"))
+                {
+                    let v = it.next().unwrap();
+                    a.flags.insert(stripped.to_string(), v);
+                } else {
+                    a.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&mut self, key: &str, default: &str, help: &str) -> String {
+        self.specs
+            .push((key.to_string(), default.to_string(), help.to_string()));
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&mut self, key: &str, default: usize, help: &str) -> usize {
+        let v = self.get(key, &default.to_string(), help);
+        v.parse().unwrap_or_else(|_| {
+            panic!("--{key} expects an integer, got {v:?}")
+        })
+    }
+
+    pub fn get_f64(&mut self, key: &str, default: f64, help: &str) -> f64 {
+        let v = self.get(key, &default.to_string(), help);
+        v.parse()
+            .unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}"))
+    }
+
+    pub fn get_bool(&mut self, key: &str, default: bool, help: &str) -> bool {
+        let v = self.get(key, &default.to_string(), help);
+        matches!(v.as_str(), "true" | "1" | "yes")
+    }
+
+    /// Values like "1,4,8" -> vec![1,4,8].
+    pub fn get_usize_list(
+        &mut self,
+        key: &str,
+        default: &str,
+        help: &str,
+    ) -> Vec<usize> {
+        self.get(key, default, help)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects comma-separated integers")
+                })
+            })
+            .collect()
+    }
+
+    /// Usage text from all getters called so far.
+    pub fn usage(&self, prog: &str) -> String {
+        let mut out = format!("usage: {prog} [options]\n");
+        for (k, d, h) in &self.specs {
+            out.push_str(&format!("  --{k:<20} {h} (default: {d})\n"));
+        }
+        out
+    }
+
+    /// Unknown-flag check: call after all getters to catch typos.
+    pub fn check_unknown(&self) -> anyhow::Result<()> {
+        let known: std::collections::BTreeSet<&str> =
+            self.specs.iter().map(|(k, _, _)| k.as_str()).collect();
+        for k in self.flags.keys() {
+            if !known.contains(k.as_str()) && k != "help" {
+                anyhow::bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_styles() {
+        // Note: a bare boolean flag followed by a non-flag token consumes it
+        // as a value, so bare flags go last or use `--flag=true`.
+        let mut a = parse(&["--x", "5", "--y=7", "pos1", "--flag"]);
+        assert_eq!(a.get_usize("x", 0, ""), 5);
+        assert_eq!(a.get_usize("y", 0, ""), 7);
+        assert!(a.get_bool("flag", false, ""));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = parse(&[]);
+        assert_eq!(a.get("model", "moe-s-8", ""), "moe-s-8");
+        assert_eq!(a.get_f64("rate", 2.5, ""), 2.5);
+    }
+
+    #[test]
+    fn lists() {
+        let mut a = parse(&["--gpus", "8,16,32"]);
+        assert_eq!(a.get_usize_list("gpus", "1", ""), vec![8, 16, 32]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let mut a = parse(&["--verbose", "--n", "3"]);
+        assert!(a.get_bool("verbose", false, ""));
+        assert_eq!(a.get_usize("n", 0, ""), 3);
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let mut a = parse(&["--typo", "1"]);
+        let _ = a.get("model", "x", "");
+        assert!(a.check_unknown().is_err());
+    }
+}

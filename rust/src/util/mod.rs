@@ -1,0 +1,9 @@
+//! Hand-rolled utility substrate (the offline build has no serde / rand /
+//! clap / criterion / proptest — see DESIGN.md §0).
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,235 @@
+//! Property-testing mini-framework (offline substitute for `proptest`).
+//!
+//! Runs a property against N seeded random cases; on failure it performs
+//! bounded greedy shrinking over the case's integer knobs and reports the
+//! smallest failing case plus its seed, so failures are reproducible with
+//! `Case::from_seed`.
+//!
+//! Usage:
+//! ```ignore
+//! prop(200, |c| {
+//!     let n = c.usize(1, 64);       // shrinkable knob
+//!     let xs = c.vec_f64(n, -1.0, 1.0);
+//!     my_invariant(&xs)              // -> Result<(), String>
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// One generated test case: a seeded RNG plus a record of the integer knobs
+/// drawn from it (the shrink targets).
+pub struct Case {
+    rng: Rng,
+    pub seed: u64,
+    /// (lo, drawn) for every `usize` knob, in draw order.
+    knobs: Vec<(usize, usize)>,
+    /// When replaying a shrunk case, overrides for knob draws.
+    overrides: Vec<Option<usize>>,
+    draw_idx: usize,
+}
+
+impl Case {
+    pub fn from_seed(seed: u64) -> Self {
+        Case {
+            rng: Rng::new(seed),
+            seed,
+            knobs: Vec::new(),
+            overrides: Vec::new(),
+            draw_idx: 0,
+        }
+    }
+
+    fn with_overrides(seed: u64, overrides: Vec<Option<usize>>) -> Self {
+        Case { overrides, ..Case::from_seed(seed) }
+    }
+
+    /// Shrinkable integer in [lo, hi] (inclusive).
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let idx = self.draw_idx;
+        self.draw_idx += 1;
+        let v = match self.overrides.get(idx).copied().flatten() {
+            Some(o) => o.clamp(lo, hi),
+            None => self.rng.range(lo, hi + 1),
+        };
+        self.knobs.push((lo, v));
+        v
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        // Non-shrinkable bulk draws (vec contents shrink via n).
+        (0..n).map(|_| self.rng.range(lo, hi + 1)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Result type for properties: Ok(()) or a failure description.
+pub type PropResult = Result<(), String>;
+
+/// Run `f` against `cases` random cases (seeds 0..cases mixed with a fixed
+/// session salt for variety but reproducibility).  Panics with the smallest
+/// failing case found.
+pub fn prop<F: Fn(&mut Case) -> PropResult>(cases: usize, f: F) {
+    prop_seeded(0xDEE9_5EED, cases, f)
+}
+
+pub fn prop_seeded<F: Fn(&mut Case) -> PropResult>(
+    salt: u64,
+    cases: usize,
+    f: F,
+) {
+    for i in 0..cases {
+        let seed = salt.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut case = Case::from_seed(seed);
+        if let Err(msg) = f(&mut case) {
+            // Greedy shrink: repeatedly try to lower each knob toward lo.
+            let (shrunk, final_msg, tries) = shrink(seed, &case.knobs, &f);
+            panic!(
+                "property failed (seed {seed:#x}, {tries} shrink steps):\n  \
+                 original: {msg}\n  shrunk knobs: {shrunk:?}\n  \
+                 shrunk failure: {final_msg}"
+            );
+        }
+    }
+}
+
+fn shrink<F: Fn(&mut Case) -> PropResult>(
+    seed: u64,
+    knobs: &[(usize, usize)],
+    f: &F,
+) -> (Vec<usize>, String, usize) {
+    let mut current: Vec<usize> = knobs.iter().map(|&(_, v)| v).collect();
+    let lows: Vec<usize> = knobs.iter().map(|&(lo, _)| lo).collect();
+    let mut last_msg = String::new();
+    let mut steps = 0;
+    let mut improved = true;
+    while improved && steps < 400 {
+        improved = false;
+        for k in 0..current.len() {
+            while current[k] > lows[k] && steps < 400 {
+                // Try halving toward lo first; if that passes (overshoots the
+                // boundary), fall back to decrement-by-1 so we land on the
+                // true minimal failing value.
+                let half = lows[k] + (current[k] - lows[k]) / 2;
+                let candidates = if half < current[k] {
+                    vec![half, current[k] - 1]
+                } else {
+                    vec![current[k] - 1]
+                };
+                let mut lowered = false;
+                for cv in candidates {
+                    let mut cand = current.clone();
+                    cand[k] = cv;
+                    steps += 1;
+                    let mut case = Case::with_overrides(
+                        seed,
+                        cand.iter().map(|&v| Some(v)).collect(),
+                    );
+                    if let Err(m) = f(&mut case) {
+                        current = cand;
+                        last_msg = m;
+                        improved = true;
+                        lowered = true;
+                        break;
+                    }
+                }
+                if !lowered {
+                    break;
+                }
+            }
+        }
+    }
+    (current, last_msg, steps)
+}
+
+/// Assertion helpers for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "assertion failed: {:?} != {:?} ({} vs {})",
+                a, b,
+                stringify!($a), stringify!($b)
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        prop(50, |c| {
+            let n = c.usize(0, 10);
+            counter.set(counter.get() + 1);
+            if n <= 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            prop(100, |c| {
+                let n = c.usize(0, 1000);
+                // fails for n >= 17; minimal failing value is 17
+                if n < 17 {
+                    Ok(())
+                } else {
+                    Err(format!("n={n}"))
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk knobs: [17]"), "got: {msg}");
+    }
+
+    #[test]
+    fn reproducible_from_seed() {
+        let mut a = Case::from_seed(99);
+        let mut b = Case::from_seed(99);
+        assert_eq!(a.usize(0, 100), b.usize(0, 100));
+        assert_eq!(a.vec_f64(5, 0.0, 1.0), b.vec_f64(5, 0.0, 1.0));
+    }
+}

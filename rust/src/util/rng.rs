@@ -1,0 +1,225 @@
+//! Deterministic pseudo-random number generation (no external `rand`).
+//!
+//! SplitMix64 core with helpers used across the repo: uniform ranges,
+//! Gaussian (Box–Muller), Zipf sampling (for the synthetic corpus vocabulary
+//! distribution), Poisson inter-arrival times (for the serving workload
+//! generator), and Fisher–Yates shuffling.  Every consumer takes an explicit
+//! seed so experiments are reproducible end to end.
+
+/// SplitMix64: tiny, fast, passes BigCrush for our purposes.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second Box–Muller sample.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15), gauss_spare: None }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n) — n must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Multiply-shift; bias is negligible for our n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(s) = self.gauss_spare.take() {
+            return s;
+        }
+        let (mut u1, u2) = (self.f64(), self.f64());
+        if u1 < 1e-300 {
+            u1 = 1e-300;
+        }
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_spare = Some(r * th.sin());
+        r * th.cos()
+    }
+
+    /// Exponential with rate `lambda` (Poisson inter-arrival times).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        -self.f64().max(1e-300).ln() / lambda
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// Precomputed Zipf(s) sampler over [0, n): p(k) ∝ 1/(k+1)^s.
+///
+/// Used by the synthetic-corpus generator — natural-language token
+/// frequencies are approximately Zipfian, and the MoE gate's expert
+/// specialization behaviour depends on that skew.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let x = rng.f64();
+        // Binary search for the first cdf entry >= x.
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let x = r.range(10, 20);
+            assert!((10..20).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let z = Zipf::new(100, 1.1);
+        let mut r = Rng::new(9);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[0] > counts[50]);
+        // head mass: top-10 should dominate under s=1.1
+        let head: usize = counts[..10].iter().sum();
+        assert!(head > 8_000, "head {head}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(5);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| r.exponential(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(11);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Rng::new(13);
+        let mut c = [0usize; 3];
+        for _ in 0..10_000 {
+            c[r.weighted(&[1.0, 1.0, 8.0])] += 1;
+        }
+        assert!(c[2] > c[0] * 4 && c[2] > c[1] * 4, "{c:?}");
+    }
+}

@@ -1,0 +1,283 @@
+//! Statistics helpers: streaming summaries, percentile estimation, and a
+//! log-bucketed latency histogram (HdrHistogram-lite) used by the serving
+//! benches and the metrics module.
+
+/// Simple summary over a recorded sample set (exact percentiles).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile (nearest-rank), `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let n = self.samples.len();
+        let rank = ((q / 100.0) * (n as f64 - 1.0)).round() as usize;
+        self.samples[rank.min(n - 1)]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Log-bucketed histogram for latencies in nanoseconds: ~4% relative error,
+/// constant memory, O(1) record.  Range 1ns .. ~584s.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// buckets\[i\] counts values v with floor(log_{1.04}(v)) == i.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    max_ns: u64,
+    min_ns: u64,
+}
+
+const LOG_BASE: f64 = 1.04;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // log_{1.04}(2^63) ≈ 1114 buckets.
+        LatencyHistogram {
+            buckets: vec![0; 1120],
+            count: 0,
+            sum_ns: 0,
+            max_ns: 0,
+            min_ns: u64::MAX,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn index(ns: u64) -> usize {
+        if ns <= 1 {
+            return 0;
+        }
+        ((ns as f64).ln() / LOG_BASE.ln()) as usize
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        let i = Self::index(ns).min(self.buckets.len() - 1);
+        self.buckets[i] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+        self.min_ns = self.min_ns.min(ns);
+    }
+
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.count as f64
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Percentile with ~4% relative error (bucket upper bound).
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q / 100.0) * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return LOG_BASE.powi(i as i32 + 1) as u64;
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+    }
+
+    /// "p50=1.2ms p99=4.5ms mean=1.5ms n=1234"
+    pub fn summary_string(&self) -> String {
+        format!(
+            "p50={} p99={} mean={} max={} n={}",
+            fmt_ns(self.percentile_ns(50.0)),
+            fmt_ns(self.percentile_ns(99.0)),
+            fmt_ns(self.mean_ns() as u64),
+            fmt_ns(self.max_ns),
+            self.count
+        )
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Measure a closure's wall time repeatedly: returns per-iteration Summary
+/// in nanoseconds.  Used by the hand-rolled bench harness (no criterion in
+/// the offline environment).
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t = std::time::Instant::now();
+        f();
+        s.record(t.elapsed().as_nanos() as f64);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.record(v);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+        assert!((s.std() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut s = Summary::new();
+        for v in 0..100 {
+            s.record(v as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 99.0);
+        assert!((s.percentile(90.0) - 89.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_accuracy() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i * 1000); // 1us .. 10ms
+        }
+        let p50 = h.percentile_ns(50.0);
+        let expect = 5_000_000.0;
+        assert!(
+            (p50 as f64 - expect).abs() / expect < 0.08,
+            "p50 {p50} vs {expect}"
+        );
+        assert_eq!(h.count(), 10_000);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(1000);
+        b.record(2000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max_ns(), 2000);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500), "500ns");
+        assert_eq!(fmt_ns(1_500), "1.5us");
+        assert_eq!(fmt_ns(2_500_000), "2.50ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.00s");
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_ns(99.0), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! The correctness anchor of the whole stack: the disaggregated
+//! expert-parallel engine (leader + fabric workers, host-side gating,
+//! real token exchange) must produce the same logits as the monolithic
+//! AOT program (fused Pallas kernels inside one XLA executable) for the
+//! same weights and inputs.
+
+use ds_moe::config::AllToAllKind;
+use ds_moe::data::{Corpus, CorpusConfig};
+use ds_moe::runtime::{Checkpoint, HostTensor, Manifest, Runtime};
+use ds_moe::server::EpEngine;
+
+fn manifest() -> Option<Manifest> {
+    let root = std::path::Path::new("artifacts");
+    root.join("manifest.json")
+        .exists()
+        .then(|| Manifest::load(root).unwrap())
+}
+
+/// Run the monolithic prefill program directly; return logits rows at
+/// each lane's last prompt position plus the KV caches.
+fn monolithic_prefill(
+    m: &Manifest,
+    model: &str,
+    tokens: &[i32],
+    lens: &[usize],
+    batch: usize,
+) -> (Vec<Vec<f32>>, HostTensor, HostTensor) {
+    let arts = m.model(model).unwrap();
+    let cfg = &arts.config;
+    let rt = Runtime::cpu().unwrap();
+    let prog = rt
+        .load(arts.programs.get(&format!("prefill_b{batch}")).unwrap())
+        .unwrap();
+    let ck = Checkpoint::load(&arts.checkpoint_dir).unwrap();
+    let mut inputs: Vec<HostTensor> = ck.tensors.clone();
+    inputs.push(HostTensor::i32(&[batch, cfg.max_seq], tokens.to_vec()));
+    let outs = prog.run(&inputs).unwrap();
+    let logits = &outs[0]; // [B, smax, V]
+    let v = cfg.vocab_size;
+    let data = logits.as_f32().unwrap();
+    let rows = (0..batch)
+        .map(|b| {
+            let p = lens[b] - 1;
+            data[(b * cfg.max_seq + p) * v..(b * cfg.max_seq + p + 1) * v]
+                .to_vec()
+        })
+        .collect();
+    (rows, outs[1].clone(), outs[2].clone())
+}
+
+fn assert_rows_close(a: &[Vec<f32>], b: &[Vec<f32>], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (lane, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len());
+        let mut max_abs = 0f32;
+        for (x, y) in ra.iter().zip(rb) {
+            max_abs = max_abs.max((x - y).abs());
+        }
+        assert!(
+            max_abs < tol,
+            "{what}: lane {lane} max |diff| = {max_abs}"
+        );
+    }
+}
+
+fn parity_for(model: &str, workers: usize, a2a: AllToAllKind) {
+    let Some(m) = manifest() else { return };
+    let batch = 4usize;
+    let cfg = m.model(model).unwrap().config.clone();
+    let smax = cfg.max_seq;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+
+    let (mono_rows, _, _) =
+        monolithic_prefill(&m, model, &tokens, &lens, batch);
+
+    let mut ep = EpEngine::new(&m, model, workers, a2a, batch).unwrap();
+    let ep_rows = ep.forward_prefill(&tokens, &lens).unwrap();
+    assert_rows_close(&mono_rows, &ep_rows, 2e-3, &format!("{model} prefill"));
+
+    // Decode parity: continue two tokens greedily on both paths.
+    let argmax = |row: &[f32]| -> i32 {
+        let mut b = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[b] {
+                b = i;
+            }
+        }
+        b as i32
+    };
+    // Monolithic decode via the decode program.
+    let arts = m.model(model).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let dec = rt
+        .load(arts.programs.get(&format!("decode_b{batch}")).unwrap())
+        .unwrap();
+    let ck = Checkpoint::load(&arts.checkpoint_dir).unwrap();
+    let (_, mut kc, mut vc) =
+        monolithic_prefill(&m, model, &tokens, &lens, batch);
+    let mut mono_tok: Vec<i32> = mono_rows.iter().map(|r| argmax(r)).collect();
+    let mut ep_tok: Vec<i32> = ep_rows.iter().map(|r| argmax(r)).collect();
+    assert_eq!(mono_tok, ep_tok, "{model}: first sampled tokens differ");
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    for step in 0..2 {
+        // monolithic step
+        let mut ins: Vec<HostTensor> = ck.tensors.clone();
+        ins.push(HostTensor::i32(&[batch], mono_tok.clone()));
+        ins.push(kc.clone());
+        ins.push(vc.clone());
+        ins.push(HostTensor::i32(&[batch], pos.clone()));
+        let outs = dec.run(&ins).unwrap();
+        let v = cfg.vocab_size;
+        let mono_step_rows: Vec<Vec<f32>> = (0..batch)
+            .map(|b| outs[0].as_f32().unwrap()[b * v..(b + 1) * v].to_vec())
+            .collect();
+        kc = outs[1].clone();
+        vc = outs[2].clone();
+        // ep step
+        let ep_step_rows = ep.forward_decode(&ep_tok, &pos).unwrap();
+        assert_rows_close(
+            &mono_step_rows,
+            &ep_step_rows,
+            2e-3,
+            &format!("{model} decode step {step}"),
+        );
+        mono_tok = mono_step_rows.iter().map(|r| argmax(r)).collect();
+        ep_tok = ep_step_rows.iter().map(|r| argmax(r)).collect();
+        assert_eq!(mono_tok, ep_tok);
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+}
+
+#[test]
+fn parity_moe_2_workers_naive() {
+    parity_for("moe-s-8", 2, AllToAllKind::Naive);
+}
+
+#[test]
+fn parity_moe_4_workers_hierarchical() {
+    parity_for("moe-s-8", 4, AllToAllKind::Hierarchical);
+}
+
+#[test]
+fn parity_moe_8_workers() {
+    parity_for("moe-s-8", 8, AllToAllKind::Hierarchical);
+}
+
+#[test]
+fn parity_prmoe_residual_branch() {
+    // PR-MoE exercises pyramid schedules + the residual branch program.
+    parity_for("prmoe-s", 4, AllToAllKind::Hierarchical);
+}
+
+#[test]
+fn parity_mos_student() {
+    parity_for("mos-s", 2, AllToAllKind::Naive);
+}
+
+#[test]
+fn expert_load_stats_populated() {
+    let Some(m) = manifest() else { return };
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let batch = 4;
+    let mut ep =
+        EpEngine::new(&m, "moe-s-8", 4, AllToAllKind::Hierarchical, batch)
+            .unwrap();
+    let smax = ep.cfg.max_seq;
+    let mut tokens = vec![0i32; batch * smax];
+    for b in 0..batch {
+        let p = corpus.prompt(b, 8);
+        tokens[b * smax..b * smax + 8].copy_from_slice(&p);
+    }
+    ep.forward_prefill(&tokens, &vec![8; batch]).unwrap();
+    for s in &ep.load_stats {
+        assert_eq!(s.total_tokens as usize, batch * smax,
+                   "layer {} tokens", s.layer);
+        assert!(s.utilization() > 0.0);
+    }
+    assert!(ep.traffic().total_bytes() > 0);
+}

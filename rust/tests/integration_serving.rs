@@ -1,0 +1,135 @@
+//! End-to-end serving over the monolithic engine: submit real requests,
+//! batch, prefill, decode, retire — using the AOT artifacts.
+
+use ds_moe::config::ServingConfig;
+use ds_moe::data::{Corpus, CorpusConfig};
+use ds_moe::runtime::Manifest;
+use ds_moe::server::Engine;
+
+fn manifest() -> Option<Manifest> {
+    let root = std::path::Path::new("artifacts");
+    root.join("manifest.json")
+        .exists()
+        .then(|| Manifest::load(root).unwrap())
+}
+
+fn corpus() -> Corpus {
+    Corpus::generate(CorpusConfig {
+        train_seqs: 64,
+        valid_seqs: 64,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn serve_batch_of_requests_moe() {
+    let Some(m) = manifest() else { return };
+    let mut engine = Engine::new(
+        &m,
+        ServingConfig {
+            model: "moe-s-8".into(),
+            max_new_tokens: 6,
+            batch_timeout: std::time::Duration::from_millis(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let c = corpus();
+    let mut ids = Vec::new();
+    for i in 0..10 {
+        ids.push(engine.submit(c.prompt(i, 8), Some(6)).unwrap());
+    }
+    let responses = engine.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 10);
+    let mut got: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    got.sort();
+    assert_eq!(got, ids);
+    for r in &responses {
+        assert!(!r.tokens.is_empty() && r.tokens.len() <= 6);
+        assert!(r.tokens.iter().all(|&t| (0..512).contains(&t)));
+        assert!(r.ttft <= r.total);
+        assert_eq!(r.prompt_len, 8);
+    }
+    assert_eq!(engine.metrics.counter("requests_completed"), 10);
+    assert!(engine.metrics.counter("decode_steps") >= 5);
+}
+
+#[test]
+fn greedy_decoding_is_deterministic() {
+    let Some(m) = manifest() else { return };
+    let gen = |_: u64| -> Vec<i32> {
+        let mut e = Engine::new(
+            &m,
+            ServingConfig { model: "moe-s-8".into(), ..Default::default() },
+        )
+        .unwrap();
+        let c = corpus();
+        e.submit(c.prompt(3, 8), Some(8)).unwrap();
+        let r = e.run_until_idle().unwrap();
+        r[0].tokens.clone()
+    };
+    assert_eq!(gen(0), gen(1));
+}
+
+#[test]
+fn continuous_batching_admits_mid_flight() {
+    let Some(m) = manifest() else { return };
+    let mut engine = Engine::new(
+        &m,
+        ServingConfig {
+            model: "dense-s".into(),
+            max_new_tokens: 10,
+            batch_timeout: std::time::Duration::ZERO, // admit immediately
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let c = corpus();
+    engine.submit(c.prompt(0, 8), Some(10)).unwrap();
+    // a few decode steps alone
+    for _ in 0..3 {
+        engine.step().unwrap();
+    }
+    assert_eq!(engine.active_count(), 1);
+    // second request joins while the first is mid-decode
+    engine.submit(c.prompt(1, 4), Some(4)).unwrap();
+    let responses = engine.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 2);
+    // the late-joining short request must still be complete and correct
+    let late = responses.iter().find(|r| r.prompt_len == 4).unwrap();
+    assert_eq!(late.tokens.len(), 4);
+}
+
+#[test]
+fn prompts_longer_than_budget_rejected() {
+    let Some(m) = manifest() else { return };
+    let mut engine = Engine::new(
+        &m,
+        ServingConfig { model: "dense-s".into(), ..Default::default() },
+    )
+    .unwrap();
+    assert!(engine.submit(vec![1; 60], Some(10)).is_err());
+    assert!(engine.submit(vec![], None).is_err());
+    assert!(engine.submit(vec![999], Some(1)).is_err());
+}
+
+#[test]
+fn serve_all_exported_variants() {
+    let Some(m) = manifest() else { return };
+    let c = corpus();
+    for model in ["dense-s", "moe-s-8", "prmoe-s", "mos-s"] {
+        let mut e = Engine::new(
+            &m,
+            ServingConfig {
+                model: model.into(),
+                max_new_tokens: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        e.submit(c.prompt(0, 8), Some(3)).unwrap();
+        let r = e.run_until_idle().unwrap();
+        assert_eq!(r.len(), 1, "{model}");
+        assert_eq!(r[0].tokens.len(), 3, "{model}");
+    }
+}

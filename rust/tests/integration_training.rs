@@ -1,0 +1,129 @@
+//! Training-stack integration: loss decreases, checkpoints round-trip
+//! through the Rust<->Python ABI, and the staged-KD controller behaves.
+
+use ds_moe::data::{Corpus, CorpusConfig, EvalSuite};
+use ds_moe::runtime::Manifest;
+use ds_moe::training::{Distiller, KdMode, LrSchedule, Trainer};
+
+fn manifest() -> Option<Manifest> {
+    let root = std::path::Path::new("artifacts");
+    root.join("manifest.json")
+        .exists()
+        .then(|| Manifest::load(root).unwrap())
+}
+
+fn corpus() -> Corpus {
+    Corpus::generate(CorpusConfig {
+        train_seqs: 256,
+        valid_seqs: 64,
+        ..Default::default()
+    })
+}
+
+fn sched(steps: usize) -> LrSchedule {
+    LrSchedule { peak: 2e-3, min: 2e-4, warmup_steps: 5, decay_steps: steps }
+}
+
+#[test]
+fn moe_training_reduces_loss() {
+    let Some(m) = manifest() else { return };
+    let c = corpus();
+    let mut tr = Trainer::new(&m, "moe-s-8", sched(30)).unwrap();
+    let before = tr.eval(&c, 2).unwrap();
+    tr.run(&c, 30, 10, true).unwrap();
+    let after = tr.eval(&c, 2).unwrap();
+    assert!(
+        after < before - 0.5,
+        "loss should drop substantially: {before:.3} -> {after:.3}"
+    );
+    assert_eq!(tr.step, 30);
+    assert!(!tr.history.is_empty());
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let Some(m) = manifest() else { return };
+    let c = corpus();
+    let dir = std::env::temp_dir().join(format!(
+        "dsmoe-train-ckpt-{}",
+        std::process::id()
+    ));
+    let val_a;
+    {
+        let mut tr = Trainer::new(&m, "dense-s", sched(10)).unwrap();
+        tr.run(&c, 10, 5, true).unwrap();
+        val_a = tr.eval(&c, 2).unwrap();
+        tr.save(&dir).unwrap();
+    }
+    {
+        let mut tr2 = Trainer::new(&m, "dense-s", sched(10)).unwrap();
+        tr2.restore(&dir).unwrap();
+        assert_eq!(tr2.step, 10);
+        let val_b = tr2.eval(&c, 2).unwrap();
+        assert!(
+            (val_a - val_b).abs() < 1e-5,
+            "restored eval differs: {val_a} vs {val_b}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn zero_shot_improves_with_training() {
+    let Some(m) = manifest() else { return };
+    let c = corpus();
+    let suite = EvalSuite::from_corpus(&c, 8);
+    let mut tr = Trainer::new(&m, "dense-s", sched(40)).unwrap();
+    let (_, acc_before) = tr.zero_shot(&suite, 8).unwrap();
+    tr.run(&c, 40, 20, true).unwrap();
+    let (per_task, acc_after) = tr.zero_shot(&suite, 8).unwrap();
+    assert!(acc_after > acc_before + 0.05,
+            "cloze accuracy {acc_before:.3} -> {acc_after:.3}");
+    assert_eq!(per_task.len(), c.config.n_domains);
+}
+
+#[test]
+fn distillation_stages_alpha_and_trains() {
+    let Some(m) = manifest() else { return };
+    let c = corpus();
+    // train a tiny teacher first
+    let tdir = std::env::temp_dir().join(format!(
+        "dsmoe-teacher-{}",
+        std::process::id()
+    ));
+    {
+        let mut teacher = Trainer::new(&m, "prmoe-s", sched(20)).unwrap();
+        teacher.run(&c, 20, 10, true).unwrap();
+        teacher.save(&tdir).unwrap();
+    }
+    let mut d = Distiller::new(&m, "mos-s", &tdir, sched(20),
+                               KdMode::Staged { frac: 0.5 })
+        .unwrap();
+    // alpha on early, off late
+    assert!(d.alpha_at(1, 20) > 0.0);
+    assert_eq!(d.alpha_at(11, 20), 0.0);
+    let before = d.student.eval(&c, 2).unwrap();
+    d.run(&c, 20, 10, true).unwrap();
+    let after = d.student.eval(&c, 2).unwrap();
+    assert!(after < before, "distill: {before:.3} -> {after:.3}");
+    std::fs::remove_dir_all(&tdir).ok();
+}
+
+#[test]
+fn distiller_rejects_wrong_teacher() {
+    let Some(m) = manifest() else { return };
+    let dir = std::env::temp_dir().join(format!(
+        "dsmoe-wrong-teacher-{}",
+        std::process::id()
+    ));
+    {
+        let tr = Trainer::new(&m, "dense-s", sched(1)).unwrap();
+        tr.save(&dir).unwrap(); // a dense-s checkpoint, not prmoe-s
+    }
+    let err = Distiller::new(&m, "mos-s", &dir, sched(1), KdMode::Full)
+        .err()
+        .expect("should reject")
+        .to_string();
+    assert!(err.contains("teacher"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,67 @@
+//! §Perf measurement harness (not a pass/fail test of speed): measures the
+//! decode hot path with and without the KV-cache literal-mirror
+//! optimization and prints the numbers quoted in EXPERIMENTS.md §Perf.
+//!
+//! Run with `cargo test --release --test perf_decode -- --nocapture`.
+
+use ds_moe::config::ServingConfig;
+use ds_moe::data::{Corpus, CorpusConfig};
+use ds_moe::runtime::Manifest;
+use ds_moe::server::Engine;
+
+fn run_decode_heavy(model: &str) -> (f64, f64) {
+    let manifest = Manifest::load("artifacts").unwrap();
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 32,
+        valid_seqs: 32,
+        ..Default::default()
+    });
+    let mut engine = Engine::new(
+        &manifest,
+        ServingConfig {
+            model: model.into(),
+            max_new_tokens: 24,
+            batch_timeout: std::time::Duration::from_millis(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // warmup / compile
+    engine.submit(corpus.prompt(0, 8), Some(2)).unwrap();
+    engine.run_until_idle().unwrap();
+    for i in 0..8 {
+        engine.submit(corpus.prompt(i, 8), Some(24)).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    let responses = engine.run_until_idle().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    (
+        engine.metrics.percentile_ns("decode_step", 50.0) as f64 / 1e6,
+        tokens as f64 / wall,
+    )
+}
+
+#[test]
+fn measure_cache_mirror_effect() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    for model in ["moe-s-8", "dense-s"] {
+        std::env::remove_var("DSMOE_NO_CACHE_MIRROR");
+        let (p50_opt, tps_opt) = run_decode_heavy(model);
+        std::env::set_var("DSMOE_NO_CACHE_MIRROR", "1");
+        let (p50_base, tps_base) = run_decode_heavy(model);
+        std::env::remove_var("DSMOE_NO_CACHE_MIRROR");
+        println!(
+            "[perf] {model}: decode p50 {p50_base:.2} -> {p50_opt:.2} ms \
+             ({:+.1}%), throughput {tps_base:.1} -> {tps_opt:.1} tok/s",
+            100.0 * (p50_opt - p50_base) / p50_base
+        );
+        // The optimization must never make things slower by more than noise.
+        assert!(
+            p50_opt <= p50_base * 1.15,
+            "{model}: mirror made decode slower ({p50_opt} vs {p50_base})"
+        );
+    }
+}

@@ -1,0 +1,35 @@
+// De-risk check: pallas-interpret HLO (with While/dynamic-update-slice from
+// fori_loop scatter) loads, compiles and runs on the PJRT CPU client.
+#[test]
+fn load_pallas_moe_hlo() -> anyhow::Result<()> {
+    let path = "/tmp/moe_hlo.txt";
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: {path} not present");
+        return Ok(());
+    }
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let (s, e, m, f) = (16usize, 4usize, 8usize, 16usize);
+    let mk = |n: usize, dims: &[i64]| -> anyhow::Result<xla::Literal> {
+        let v: Vec<f32> = (0..n).map(|i| ((i * 37 % 17) as f32 - 8.0) * 0.05).collect();
+        Ok(xla::Literal::vec1(&v).reshape(dims)?)
+    };
+    let args = vec![
+        mk(s * m, &[s as i64, m as i64])?,
+        mk(m * e, &[m as i64, e as i64])?,
+        mk(e * m * f, &[e as i64, m as i64, f as i64])?,
+        mk(e * f, &[e as i64, f as i64])?,
+        mk(e * f * m, &[e as i64, f as i64, m as i64])?,
+        mk(e * m, &[e as i64, m as i64])?,
+    ];
+    let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+    let elems = result.to_tuple()?;
+    assert_eq!(elems.len(), 2);
+    let out = elems[0].to_vec::<f32>()?;
+    assert_eq!(out.len(), s * m);
+    assert!(out.iter().all(|v| v.is_finite()));
+    println!("pallas MoE HLO executed, out[0..4]={:?}", &out[..4]);
+    Ok(())
+}
