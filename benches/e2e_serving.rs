@@ -1,17 +1,62 @@
 //! Bench: end-to-end serving study (§5.5 methodology at testbed scale).
 //!
-//! Sweeps the monolithic engine over model variants (standard MoE, PR-MoE,
-//! MoS, dense) and batch loads, reporting decode-step latency, TTFT and
-//! aggregate throughput — the testbed counterpart of Figs 13/14 (the
+//! Part 1 sweeps the monolithic engine over model variants (standard MoE,
+//! PR-MoE, MoS, dense) and batch loads, reporting decode-step latency, TTFT
+//! and aggregate throughput — the testbed counterpart of Figs 13/14 (the
 //! variant ordering must match: MoS < PR-MoE < MoE in latency, all three
 //! vs dense per activated-parameter size).
+//!
+//! Part 2 is the MoE-pipeline study: the expert-parallel engine run twice —
+//! `DSMOE_SERIAL_MOE` serialized path vs the overlapped/coalesced pipeline —
+//! comparing per-MoE-layer leader wall-clock, per-phase timers and fabric
+//! messages per layer.
+//!
+//! Everything is also emitted to `BENCH_e2e.json` at the repo root so the
+//! perf trajectory is tracked across PRs.
 
-use ds_moe::config::ServingConfig;
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+use ds_moe::config::{AllToAllKind, ServingConfig};
 use ds_moe::data::{Corpus, CorpusConfig};
+use ds_moe::metrics::Metrics;
 use ds_moe::runtime::Manifest;
-use ds_moe::server::Engine;
-use ds_moe::util::stats::fmt_ns;
-use ds_moe::util::table::{f1, Table};
+use ds_moe::server::{Engine, EpEngine};
+use ds_moe::util::stats::{argmax, fmt_ns};
+use ds_moe::util::table::{f1, f2, Table};
+
+struct ServingRow {
+    model: String,
+    requests: usize,
+    tok_per_s: f64,
+    ttft_p50_ns: u64,
+    decode_p50_ns: u64,
+    decode_p99_ns: u64,
+}
+
+struct PipelineSide {
+    moe_layer_ns: f64,
+    layer_runs: u64,
+    messages: u64,
+    phases: Vec<(&'static str, f64)>,
+}
+
+struct PipelineStudy {
+    model: String,
+    workers: usize,
+    serial: PipelineSide,
+    overlap: PipelineSide,
+}
+
+impl PipelineStudy {
+    fn speedup(&self) -> f64 {
+        if self.overlap.moe_layer_ns > 0.0 {
+            self.serial.moe_layer_ns / self.overlap.moe_layer_ns
+        } else {
+            0.0
+        }
+    }
+}
 
 fn main() {
     let Ok(manifest) = Manifest::load("artifacts") else {
@@ -20,6 +65,7 @@ fn main() {
     };
     let corpus = Corpus::generate(CorpusConfig::default());
 
+    let mut rows = Vec::new();
     let mut t = Table::new(
         "E2E serving (testbed): variants x load",
         &["model", "params", "requests", "tok/s", "TTFT p50",
@@ -55,15 +101,28 @@ fn main() {
                 .map(|r| r.ttft.as_nanos() as u64)
                 .collect();
             ttfts.sort();
+            let row = ServingRow {
+                model: model.to_string(),
+                requests: n_requests,
+                tok_per_s: tokens as f64 / wall.as_secs_f64(),
+                ttft_p50_ns: ttfts[ttfts.len() / 2],
+                decode_p50_ns: engine
+                    .metrics
+                    .percentile_ns("decode_step", 50.0),
+                decode_p99_ns: engine
+                    .metrics
+                    .percentile_ns("decode_step", 99.0),
+            };
             t.row(&[
                 model.to_string(),
                 manifest.model(model).unwrap().config.num_params.to_string(),
                 n_requests.to_string(),
-                f1(tokens as f64 / wall.as_secs_f64()),
-                fmt_ns(ttfts[ttfts.len() / 2]),
-                fmt_ns(engine.metrics.percentile_ns("decode_step", 50.0)),
-                fmt_ns(engine.metrics.percentile_ns("decode_step", 99.0)),
+                f1(row.tok_per_s),
+                fmt_ns(row.ttft_p50_ns),
+                fmt_ns(row.decode_p50_ns),
+                fmt_ns(row.decode_p99_ns),
             ]);
+            rows.push(row);
         }
     }
     t.note("paper shape: PR-MoE+MoS < PR-MoE < standard MoE in latency \
@@ -71,4 +130,175 @@ fn main() {
             cost, not their total size (Fig 14)");
     t.print();
     let _ = t.save_csv("e2e_serving");
+
+    // --- MoE pipeline study: serialized vs overlapped/coalesced ----------
+    let mut studies = Vec::new();
+    let mut pt = Table::new(
+        "MoE-layer pipeline: serialized vs overlapped (leader wall-clock)",
+        &["model", "workers", "serial/layer", "overlap/layer", "speedup",
+          "msgs/layer serial", "msgs/layer overlap"],
+    );
+    for (model, workers) in [("moe-s-8", 4usize), ("prmoe-s", 4)] {
+        let Some(study) = pipeline_study(&manifest, &corpus, model, workers)
+        else {
+            continue;
+        };
+        pt.row(&[
+            study.model.clone(),
+            workers.to_string(),
+            fmt_ns(study.serial.moe_layer_ns as u64),
+            fmt_ns(study.overlap.moe_layer_ns as u64),
+            format!("{:.2}x", study.speedup()),
+            f2(study.serial.messages as f64
+                / study.serial.layer_runs.max(1) as f64),
+            f2(study.overlap.messages as f64
+                / study.overlap.layer_runs.max(1) as f64),
+        ]);
+        studies.push(study);
+    }
+    pt.note("overlap = coalesced per-worker dispatch + leader compute \
+             (residual branch, a2a accounting, combine prep) hidden behind \
+             the expert round-trip; acceptance floor is 1.3x");
+    pt.print();
+    let _ = pt.save_csv("e2e_moe_pipeline");
+
+    write_bench_json(&rows, &studies);
+}
+
+/// Run the EP engine on one model with the serialized and the overlapped
+/// MoE path, measuring steady-state per-MoE-layer leader wall-clock,
+/// per-phase timers and fabric messages (warmup excluded via a fresh
+/// metrics registry).
+fn pipeline_study(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    model: &str,
+    workers: usize,
+) -> Option<PipelineStudy> {
+    let batch = 4usize;
+    let mut sides = Vec::new();
+    for serial in [true, false] {
+        let mut ep = EpEngine::new(
+            manifest,
+            model,
+            workers,
+            AllToAllKind::Hierarchical,
+            batch,
+        )
+        .ok()?;
+        ep.set_serial_moe(serial);
+        let smax = ep.cfg.max_seq;
+        let plen = 8usize;
+        let mut tokens = vec![0i32; batch * smax];
+        for b in 0..batch {
+            let p = corpus.prompt(b, plen);
+            tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+        }
+        let lens = vec![plen; batch];
+
+        // Warmup compiles every program (leader + workers) for BOTH the
+        // prefill and decode shapes, so no one-time Program load/compile
+        // cost lands in the measured means.
+        let first = ep.forward_prefill(&tokens, &lens).ok()?;
+        let mut tok: Vec<i32> =
+            first.iter().map(|r| argmax(r) as i32).collect();
+        let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+        ep.forward_decode(&tok, &pos).ok()?;
+        // Fresh counters: measure steady state only.
+        ep.metrics = std::sync::Arc::new(Metrics::new());
+        let msgs0 = ep.traffic().messages.load(Ordering::Relaxed);
+
+        for _ in 0..2 {
+            ep.forward_prefill(&tokens, &lens).ok()?;
+        }
+        for _ in 0..6 {
+            let out = ep.forward_decode(&tok, &pos).ok()?;
+            tok = out.iter().map(|r| argmax(r) as i32).collect();
+            for p in &mut pos {
+                *p += 1;
+            }
+        }
+
+        let phase_names: &[&'static str] = if serial {
+            &["gate", "expert_exchange"]
+        } else {
+            &["gate", "dispatch", "leader_overlap", "expert_wait",
+              "combine"]
+        };
+        sides.push(PipelineSide {
+            moe_layer_ns: ep.metrics.mean_ns("moe_layer"),
+            layer_runs: ep.metrics.samples("moe_layer"),
+            messages: ep.traffic().messages.load(Ordering::Relaxed) - msgs0,
+            phases: phase_names
+                .iter()
+                .map(|&n| (n, ep.metrics.mean_ns(n)))
+                .collect(),
+        });
+    }
+    let overlap = sides.pop()?;
+    let serial = sides.pop()?;
+    Some(PipelineStudy { model: model.to_string(), workers, serial, overlap })
+}
+
+/// Emit `BENCH_e2e.json` at the repo root: the serving sweep plus the MoE
+/// pipeline study, so future PRs have a machine-readable perf baseline.
+fn write_bench_json(rows: &[ServingRow], studies: &[PipelineStudy]) {
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"e2e_serving\",\n  \"serving\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"model\": \"{}\", \"requests\": {}, \
+             \"tok_per_s\": {:.2}, \"ttft_p50_ns\": {}, \
+             \"decode_p50_ns\": {}, \"decode_p99_ns\": {}}}{}\n",
+            r.model,
+            r.requests,
+            r.tok_per_s,
+            r.ttft_p50_ns,
+            r.decode_p50_ns,
+            r.decode_p99_ns,
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ],\n  \"moe_pipeline\": [\n");
+    for (i, st) in studies.iter().enumerate() {
+        let phases = |side: &PipelineSide| -> String {
+            let mut p = String::from("{");
+            for (j, (name, ns)) in side.phases.iter().enumerate() {
+                let _ = write!(
+                    p,
+                    "\"{name}_ns\": {:.0}{}",
+                    ns,
+                    if j + 1 == side.phases.len() { "" } else { ", " }
+                );
+            }
+            p.push('}');
+            p
+        };
+        let _ = write!(
+            s,
+            "    {{\"model\": \"{}\", \"workers\": {}, \
+             \"moe_layer_serial_ns\": {:.0}, \
+             \"moe_layer_overlap_ns\": {:.0}, \
+             \"overlap_speedup\": {:.3}, \
+             \"msgs_per_layer_serial\": {:.2}, \
+             \"msgs_per_layer_overlap\": {:.2}, \
+             \"phases_serial\": {}, \"phases_overlap\": {}}}{}\n",
+            st.model,
+            st.workers,
+            st.serial.moe_layer_ns,
+            st.overlap.moe_layer_ns,
+            st.speedup(),
+            st.serial.messages as f64 / st.serial.layer_runs.max(1) as f64,
+            st.overlap.messages as f64 / st.overlap.layer_runs.max(1) as f64,
+            phases(&st.serial),
+            phases(&st.overlap),
+            if i + 1 == studies.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_e2e.json", &s) {
+        Ok(()) => println!("wrote BENCH_e2e.json"),
+        Err(e) => eprintln!("BENCH_e2e.json: {e}"),
+    }
 }

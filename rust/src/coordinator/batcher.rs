@@ -49,6 +49,18 @@ impl BatchPolicy {
         self.sizes.iter().rev().find(|&&s| s <= n).copied()
     }
 
+    /// Time remaining until the oldest waiting request hits the flush
+    /// timeout (`Duration::ZERO` once elapsed); `None` when nothing waits.
+    /// `Engine::run_until_idle` sleeps only this long instead of a full
+    /// extra `timeout`, so partial batches flush on their deadline rather
+    /// than up to one timeout late (TTFT, low-traffic path).
+    pub fn time_to_flush(
+        &self,
+        oldest_wait: Option<Duration>,
+    ) -> Option<Duration> {
+        oldest_wait.map(|w| self.timeout.saturating_sub(w))
+    }
+
     pub fn decide(
         &self,
         waiting: usize,
@@ -146,6 +158,57 @@ mod tests {
             p.decide(1, 8, Some(Duration::from_millis(5))),
             Decision::Prefill { compiled: 1, take: 1 }
         );
+    }
+
+    #[test]
+    fn waiting_exceeds_largest_compiled_size() {
+        let p = policy();
+        // Far more waiting than any compiled size: flush at the max size,
+        // leaving the rest queued for the next decide().
+        assert_eq!(
+            p.decide(100, 16, Some(Duration::ZERO)),
+            Decision::Prefill { compiled: 8, take: 8 }
+        );
+        // round_up clamps to the largest size for any oversized n
+        assert_eq!(p.round_up(usize::MAX), 8);
+    }
+
+    #[test]
+    fn free_lanes_below_smallest_compiled_size() {
+        let p = BatchPolicy::new(vec![4, 8], Duration::from_millis(2));
+        // Even an elapsed timeout cannot flush into 3 lanes when the
+        // smallest compiled size is 4 — there is no program to run.
+        assert_eq!(p.decide(6, 3, Some(Duration::from_secs(1))),
+                   Decision::Wait);
+        assert_eq!(p.round_down(3), None);
+        // round_up of 0 picks the smallest compiled size
+        assert_eq!(p.round_up(0), 4);
+    }
+
+    #[test]
+    fn timeout_exactly_elapsed_flushes() {
+        let p = policy(); // timeout = 2ms
+        // w == timeout must flush (>=, not >): a request is never made to
+        // wait an extra scheduler round at its exact deadline.
+        assert_eq!(
+            p.decide(2, 8, Some(Duration::from_millis(2))),
+            Decision::Prefill { compiled: 4, take: 2 }
+        );
+    }
+
+    #[test]
+    fn time_to_flush_remaining() {
+        let p = policy(); // timeout = 2ms
+        assert_eq!(p.time_to_flush(None), None);
+        assert_eq!(
+            p.time_to_flush(Some(Duration::from_millis(1))),
+            Some(Duration::from_millis(1))
+        );
+        // exactly elapsed and past-due both clamp to zero
+        assert_eq!(p.time_to_flush(Some(Duration::from_millis(2))),
+                   Some(Duration::ZERO));
+        assert_eq!(p.time_to_flush(Some(Duration::from_secs(1))),
+                   Some(Duration::ZERO));
     }
 
     #[test]

@@ -90,6 +90,86 @@ impl Routing {
         out
     }
 
+    /// Pack several experts' blocks back to back (each in slot order) into
+    /// `out` — the coalesced per-worker payload of the overlapped EP path.
+    /// The result is exactly the concatenation of
+    /// [`Routing::expert_block`]`(ln_h, m, e)` for each `e` in `experts`,
+    /// built in a single pass over the tokens.  `out` is cleared and
+    /// resized, so callers can reuse one buffer across layers.
+    pub fn pack_blocks(
+        &self,
+        ln_h: &[f32],
+        m: usize,
+        experts: &[usize],
+        out: &mut Vec<f32>,
+    ) {
+        let total: usize = experts.iter().map(|&e| self.counts[e]).sum();
+        out.clear();
+        out.resize(total * m, 0.0);
+        // Row base of each packed expert; usize::MAX = not in this pack.
+        let mut base = vec![usize::MAX; self.n_experts];
+        let mut acc = 0usize;
+        for &e in experts {
+            base[e] = acc;
+            acc += self.counts[e];
+        }
+        for (t, &te) in self.expert.iter().enumerate() {
+            if base[te] != usize::MAX {
+                let row = base[te] + self.slot[t];
+                out[row * m..(row + 1) * m]
+                    .copy_from_slice(&ln_h[t * m..(t + 1) * m]);
+            }
+        }
+    }
+
+    /// Inverse of [`Routing::pack_blocks`] over coalesced worker replies:
+    /// gate-scale each token's expert output and write it back in original
+    /// token order (bitwise-identical to [`Routing::combine`] over the
+    /// equivalent per-expert blocks).  `packs` are
+    /// `(experts-with-counts, packed rows)` pairs as returned by the
+    /// workers; `out` is cleared and resized to `[T * m]`.  Every routed
+    /// expert must appear in exactly one pack — a missing one means a lost
+    /// or truncated worker reply, which is an error, never a silent zero
+    /// contribution.
+    pub fn combine_packed(
+        &self,
+        packs: &[(&[(usize, usize)], &[f32])],
+        m: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let t = self.n_tokens();
+        out.clear();
+        out.resize(t * m, 0.0);
+        // (pack index, row base) of each expert's block across all packs.
+        let mut loc = vec![(usize::MAX, 0usize); self.n_experts];
+        for (pi, (experts, _)) in packs.iter().enumerate() {
+            let mut acc = 0usize;
+            for &(e, count) in experts.iter() {
+                loc[e] = (pi, acc);
+                acc += count;
+            }
+        }
+        for tok in 0..t {
+            let (pi, b) = loc[self.expert[tok]];
+            anyhow::ensure!(
+                pi != usize::MAX,
+                "expert {} has routed tokens but no block in any worker \
+                 reply",
+                self.expert[tok]
+            );
+            let rows = packs[pi].1;
+            let row = b + self.slot[tok];
+            let p = self.prob[tok];
+            for (o, &x) in out[tok * m..(tok + 1) * m]
+                .iter_mut()
+                .zip(&rows[row * m..(row + 1) * m])
+            {
+                *o = p * x;
+            }
+        }
+        Ok(())
+    }
+
     /// Tokens per expert as expert ids (for load stats).
     pub fn assignments(&self) -> &[usize] {
         &self.expert
@@ -150,6 +230,69 @@ mod tests {
                 let want = r.prob[tok] * ln_h[tok * m + i];
                 assert!((out[tok * m + i] - want).abs() < 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn pack_blocks_concatenates_expert_blocks() {
+        let t_toks = 20;
+        let m = 4;
+        let probs = softmax_rows(t_toks, 5, 13);
+        let r = Routing::top1(&probs, 5);
+        let mut rng = Rng::new(17);
+        let ln_h: Vec<f32> =
+            (0..t_toks * m).map(|_| rng.gauss() as f32).collect();
+        let mut buf = Vec::new();
+        r.pack_blocks(&ln_h, m, &[1, 3], &mut buf);
+        let want: Vec<f32> = r
+            .expert_block(&ln_h, m, 1)
+            .into_iter()
+            .chain(r.expert_block(&ln_h, m, 3))
+            .collect();
+        assert_eq!(buf, want);
+        // buffer reuse: a second pack overwrites, not appends
+        r.pack_blocks(&ln_h, m, &[0], &mut buf);
+        assert_eq!(buf, r.expert_block(&ln_h, m, 0));
+    }
+
+    #[test]
+    fn combine_packed_matches_per_expert_combine() {
+        let t_toks = 24;
+        let m = 4;
+        let n_e = 6;
+        let probs = softmax_rows(t_toks, n_e, 11);
+        let r = Routing::top1(&probs, n_e);
+        let mut rng = Rng::new(9);
+        let ln_h: Vec<f32> =
+            (0..t_toks * m).map(|_| rng.gauss() as f32).collect();
+        // Two "workers" owning interleaved experts; identity expert FFNs
+        // mean the packed reply equals the packed request.
+        let groups = [vec![0usize, 2, 4], vec![1, 3, 5]];
+        let mut packs_data = Vec::new();
+        for g in &groups {
+            let mut buf = Vec::new();
+            r.pack_blocks(&ln_h, m, g, &mut buf);
+            let counts: Vec<(usize, usize)> =
+                g.iter().map(|&e| (e, r.counts[e])).collect();
+            packs_data.push((counts, buf));
+        }
+        let packs: Vec<(&[(usize, usize)], &[f32])> = packs_data
+            .iter()
+            .map(|(c, d)| (c.as_slice(), d.as_slice()))
+            .collect();
+        let mut out = Vec::new();
+        r.combine_packed(&packs, m, &mut out).unwrap();
+        let blocks: Vec<Vec<f32>> =
+            (0..n_e).map(|e| r.expert_block(&ln_h, m, e)).collect();
+        let want = r.combine(&blocks, m);
+        assert_eq!(out, want, "packed combine must be bitwise identical");
+
+        // A pack set missing a routed expert is a loud error, not a
+        // silent zero contribution.
+        let partial: Vec<(&[(usize, usize)], &[f32])> =
+            packs[..1].to_vec();
+        if r.counts[1] > 0 {
+            assert!(r.combine_packed(&partial, m, &mut out).is_err());
         }
     }
 

@@ -107,6 +107,56 @@ impl KvCacheGroup {
         Ok(())
     }
 
+    /// Splice lane `lane` directly out of a **batched** prefill output
+    /// (`[L, src_batch, H, Smax, hd]` flat buffers, source lane
+    /// `src_lane`) — the zero-copy admit path: no intermediate
+    /// `[L, 1, H, Smax, hd]` per-request tensors are materialized.
+    #[allow(clippy::too_many_arguments)]
+    pub fn admit_from_batch(
+        &mut self,
+        lane: usize,
+        request: RequestId,
+        pos: usize,
+        kc: &[f32],
+        vc: &[f32],
+        src_lane: usize,
+        src_batch: usize,
+    ) -> Result<()> {
+        if lane >= self.batch {
+            bail!("lane {lane} out of range (batch {})", self.batch);
+        }
+        if !matches!(self.lanes[lane], Lane::Free) {
+            bail!("lane {lane} is busy");
+        }
+        if pos > self.max_seq {
+            bail!("pos {pos} exceeds max_seq {}", self.max_seq);
+        }
+        if src_lane >= src_batch {
+            bail!("source lane {src_lane} out of batch {src_batch}");
+        }
+        let lane_elems = self.n_heads * self.max_seq * self.head_dim;
+        let want = self.n_layers * src_batch * lane_elems;
+        if kc.len() != want || vc.len() != want {
+            bail!(
+                "batched prefill cache has k={} / v={} elems, want {want} \
+                 (L={} x B={src_batch} x {lane_elems})",
+                kc.len(), vc.len(), self.n_layers
+            );
+        }
+        let batch = self.batch;
+        for (dst_all, src_all) in [(&mut self.k, kc), (&mut self.v, vc)] {
+            let dst = dst_all.as_f32_mut()?;
+            for layer in 0..self.n_layers {
+                let src_off = (layer * src_batch + src_lane) * lane_elems;
+                let dst_off = (layer * batch + lane) * lane_elems;
+                dst[dst_off..dst_off + lane_elems]
+                    .copy_from_slice(&src_all[src_off..src_off + lane_elems]);
+            }
+        }
+        self.lanes[lane] = Lane::Busy { request, pos };
+        Ok(())
+    }
+
     fn splice(&mut self, lane: usize, k1: &HostTensor, v1: &HostTensor) -> Result<()> {
         let lane_elems = self.n_heads * self.max_seq * self.head_dim;
         let batch = self.batch;
@@ -228,6 +278,61 @@ mod tests {
         // out-of-range lane / pos
         assert!(g.admit(9, 4, 2, &lane_cache(0.0), &lane_cache(0.0)).is_err());
         assert!(g.admit(1, 5, 99, &lane_cache(0.0), &lane_cache(0.0)).is_err());
+    }
+
+    #[test]
+    fn admit_from_batch_matches_admit() {
+        // A fake batched prefill output: 2 layers, source batch 3, each
+        // element tagged by (layer, src_lane) so slices are identifiable.
+        let (l, src_b, h, s, hd) = (2usize, 3usize, 2usize, 8usize, 4usize);
+        let lane_elems = h * s * hd;
+        let mut kc = vec![0f32; l * src_b * lane_elems];
+        for layer in 0..l {
+            for lane in 0..src_b {
+                let off = (layer * src_b + lane) * lane_elems;
+                for x in &mut kc[off..off + lane_elems] {
+                    *x = (layer * 10 + lane) as f32;
+                }
+            }
+        }
+        let vc: Vec<f32> = kc.iter().map(|x| x + 100.0).collect();
+
+        // Reference path: extract [L,1,H,S,hd] slices, then admit().
+        let mut reference = group();
+        let extract = |src: &[f32], src_lane: usize| {
+            let mut one = vec![0f32; l * lane_elems];
+            for layer in 0..l {
+                let s_off = (layer * src_b + src_lane) * lane_elems;
+                one[layer * lane_elems..(layer + 1) * lane_elems]
+                    .copy_from_slice(&src[s_off..s_off + lane_elems]);
+            }
+            HostTensor::f32(&[l, 1, h, s, hd], one)
+        };
+        reference
+            .admit(3, 42, 5, &extract(&kc, 1), &extract(&vc, 1))
+            .unwrap();
+
+        // Zero-copy path: splice straight from the batched buffers.
+        let mut direct = group();
+        direct.admit_from_batch(3, 42, 5, &kc, &vc, 1, src_b).unwrap();
+        assert_eq!(direct.k, reference.k);
+        assert_eq!(direct.v, reference.v);
+        assert_eq!(direct.busy_lanes(), reference.busy_lanes());
+    }
+
+    #[test]
+    fn admit_from_batch_guards() {
+        let mut g = group();
+        let lane_elems = 2 * 8 * 4;
+        let ok = vec![0f32; 2 * 2 * lane_elems];
+        // src_lane out of src_batch
+        assert!(g.admit_from_batch(0, 1, 2, &ok, &ok, 2, 2).is_err());
+        // wrong buffer size
+        let short = vec![0f32; 3];
+        assert!(g.admit_from_batch(0, 1, 2, &short, &ok, 0, 2).is_err());
+        // busy lane
+        g.admit_from_batch(0, 1, 2, &ok, &ok, 0, 2).unwrap();
+        assert!(g.admit_from_batch(0, 2, 2, &ok, &ok, 1, 2).is_err());
     }
 
     #[test]

@@ -6,6 +6,18 @@
 //! token blocks; workers run the AOT `expert_ffn_c{C}` program (padding each
 //! block up to the nearest compiled capacity) and send results back.
 //!
+//! Two dispatch granularities exist:
+//!
+//! * [`Fabric::dispatch_ffn`] — one channel message per expert block (the
+//!   original serialized path, kept for `DSMOE_SERIAL_MOE` measurement);
+//! * [`Fabric::dispatch_ffn_batch`] — one [`ExpertFfnBatch`] per worker per
+//!   layer carrying *all* of that worker's expert blocks packed into a
+//!   single contiguous payload (the paper's grouped all-to-all, §5.1).  The
+//!   worker slices each expert's rows out of the packed buffer, pads them
+//!   against the compiled capacity ladder, and replies with one equally
+//!   packed [`FfnBatchResult`] — O(workers) messages per MoE layer instead
+//!   of O(experts).
+//!
 //! Links are bounded channels with byte accounting ([`Traffic`]): every
 //! payload that crosses a worker boundary is counted, which is what the
 //! e2e bench uses to report communication volume per schedule.  The fabric
@@ -42,12 +54,40 @@ impl Traffic {
     }
 }
 
+/// Coalesced per-worker expert batch: all of one worker's expert blocks for
+/// a single MoE layer, packed back to back into one contiguous payload.
+/// One of these crosses the channel per worker per layer — one wakeup per
+/// worker — instead of one message per expert.
+#[derive(Debug)]
+pub struct ExpertFfnBatch {
+    pub layer: usize,
+    /// `(expert id, row count)` in the order the blocks are packed in
+    /// `data`.  The worker slices/pads each block internally against its
+    /// compiled capacity ladder.
+    pub experts: Vec<(usize, usize)>,
+    /// `[total_rows, M]` activation rows, expert blocks concatenated.
+    pub data: HostTensor,
+    pub tag: u64,
+}
+
+/// Reply to an [`ExpertFfnBatch`]: expert outputs packed in the same order
+/// and layout as the request payload.
+#[derive(Debug)]
+pub struct FfnBatchResult {
+    pub layer: usize,
+    pub experts: Vec<(usize, usize)>,
+    pub data: HostTensor,
+    pub tag: u64,
+}
+
 /// Commands the leader sends to a worker.
 enum Cmd {
     /// Install expert weights [w1, b1, w2, b2] for (layer, expert).
     LoadExpert { layer: usize, expert: usize, weights: Vec<HostTensor> },
     /// Run expert FFN on an unpadded [count, M] block; reply with FfnDone.
     ExpertFfn { layer: usize, expert: usize, block: HostTensor, tag: u64 },
+    /// Run every expert sub-block of a coalesced batch; reply FfnBatchDone.
+    ExpertFfnBatch(ExpertFfnBatch),
     /// Deliver a raw p2p payload (all-to-all execution path).
     Deliver { from: usize, payload: Vec<u8>, tag: u64 },
     /// Forward a payload to another worker (relay hop), then ack.
@@ -59,6 +99,7 @@ enum Cmd {
 pub enum Reply {
     Loaded,
     FfnDone { layer: usize, expert: usize, out: HostTensor, tag: u64 },
+    FfnBatchDone(FfnBatchResult),
     Delivered { worker: usize, from: usize, bytes: usize, tag: u64 },
     Forwarded,
     Err(String),
@@ -168,6 +209,58 @@ impl Fabric {
                         .bytes_from_workers
                         .fetch_add(t.byte_len() as u64, Ordering::Relaxed);
                     out.push((layer, expert, t, tag));
+                }
+                Reply::Err(e) => anyhow::bail!("worker error: {e}"),
+                _ => {}
+            }
+        }
+        Ok(out)
+    }
+
+    /// Dispatch one worker's coalesced expert batch (non-blocking): a
+    /// single channel message — and a single worker wakeup — for all of
+    /// the worker's expert blocks at this layer.
+    pub fn dispatch_ffn_batch(
+        &self,
+        worker: usize,
+        batch: ExpertFfnBatch,
+    ) -> Result<()> {
+        self.traffic
+            .bytes_to_workers
+            .fetch_add(batch.data.byte_len() as u64, Ordering::Relaxed);
+        self.traffic.messages.fetch_add(1, Ordering::Relaxed);
+        self.workers[worker]
+            .tx
+            .send(Cmd::ExpertFfnBatch(batch))
+            .context("worker gone")
+    }
+
+    /// Collect `n` coalesced batch results for MoE layer `layer`, exchange
+    /// generation `tag` (any order).  A reply carrying a different layer
+    /// *or* tag is a stale in-flight result from an aborted earlier
+    /// exchange — even one at the same layer of a retried forward — and
+    /// must be a loud error, never silently combined into the current
+    /// layer's routing.
+    pub fn collect_ffn_batches(
+        &self,
+        n: usize,
+        layer: usize,
+        tag: u64,
+    ) -> Result<Vec<FfnBatchResult>> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match self.reply_rx.recv()? {
+                Reply::FfnBatchDone(r) => {
+                    anyhow::ensure!(
+                        r.layer == layer && r.tag == tag,
+                        "stale expert batch reply: got (layer {}, tag {}) \
+                         while collecting (layer {layer}, tag {tag})",
+                        r.layer, r.tag
+                    );
+                    self.traffic
+                        .bytes_from_workers
+                        .fetch_add(r.data.byte_len() as u64, Ordering::Relaxed);
+                    out.push(r);
                 }
                 Reply::Err(e) => anyhow::bail!("worker error: {e}"),
                 _ => {}
@@ -306,6 +399,25 @@ fn worker_main(
                     }
                 }
             }
+            Cmd::ExpertFfnBatch(batch) => {
+                match run_expert_ffn_batch(&runtime, &programs, &experts, &batch) {
+                    Ok(data) => {
+                        let ExpertFfnBatch { layer, experts: ex, tag, .. } = batch;
+                        let _ = reply.send(Reply::FfnBatchDone(FfnBatchResult {
+                            layer,
+                            experts: ex,
+                            data,
+                            tag,
+                        }));
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Reply::Err(format!(
+                            "worker {me} ffn batch l{}: {e:#}",
+                            batch.layer
+                        )));
+                    }
+                }
+            }
             Cmd::Forward { to, payload, tag } => {
                 // Relay hop: push to the destination peer, ack the leader.
                 let _ = peers[to].send(Cmd::Deliver { from: me, payload, tag });
@@ -331,11 +443,60 @@ fn run_expert_ffn(
     expert: usize,
     block: &HostTensor,
 ) -> Result<HostTensor> {
+    anyhow::ensure!(block.shape.len() == 2, "block must be [count, M]");
+    let count = block.shape[0];
+    let m = block.shape[1];
+    let data = run_expert_rows(
+        runtime, programs, experts, layer, expert, block.as_f32()?, count, m,
+    )?;
+    Ok(HostTensor::f32(&[count, m], data))
+}
+
+/// Run every expert sub-block of a coalesced batch; returns the output rows
+/// packed in the same order/layout as the request payload.
+fn run_expert_ffn_batch(
+    runtime: &Runtime,
+    programs: &WorkerPrograms,
+    experts: &HashMap<(usize, usize), Vec<xla::Literal>>,
+    batch: &ExpertFfnBatch,
+) -> Result<HostTensor> {
+    anyhow::ensure!(batch.data.shape.len() == 2, "batch data must be [rows, M]");
+    let (total, m) = (batch.data.shape[0], batch.data.shape[1]);
+    let declared: usize = batch.experts.iter().map(|&(_, c)| c).sum();
+    anyhow::ensure!(
+        declared == total,
+        "batch declares {declared} rows but payload has {total}"
+    );
+    let flat = batch.data.as_f32()?;
+    let mut out = vec![0f32; total * m];
+    let mut off = 0usize;
+    for &(e, count) in &batch.experts {
+        let rows = &flat[off * m..(off + count) * m];
+        let y = run_expert_rows(
+            runtime, programs, experts, batch.layer, e, rows, count, m,
+        )?;
+        out[off * m..(off + count) * m].copy_from_slice(&y);
+        off += count;
+    }
+    Ok(HostTensor::f32(&[total, m], out))
+}
+
+/// Pad `rows` (`[count, m]`, unpadded) to the smallest compiled capacity,
+/// run the expert FFN program, and slice the result back to `count` rows.
+#[allow(clippy::too_many_arguments)]
+fn run_expert_rows(
+    runtime: &Runtime,
+    programs: &WorkerPrograms,
+    experts: &HashMap<(usize, usize), Vec<xla::Literal>>,
+    layer: usize,
+    expert: usize,
+    rows: &[f32],
+    count: usize,
+    m: usize,
+) -> Result<Vec<f32>> {
     let weights = experts
         .get(&(layer, expert))
         .with_context(|| format!("expert (l{layer}, e{expert}) not loaded"))?;
-    let count = block.shape[0];
-    let m = block.shape[1];
     // Pad to the smallest compiled capacity.
     let (cap, spec) = programs
         .expert_ffn
@@ -345,7 +506,7 @@ fn run_expert_ffn(
         .context("no expert_ffn programs")?;
     anyhow::ensure!(count <= *cap, "block {count} exceeds largest capacity {cap}");
     let mut padded = vec![0f32; cap * m];
-    padded[..count * m].copy_from_slice(block.as_f32()?);
+    padded[..count * m].copy_from_slice(rows);
     let x = HostTensor::f32(&[*cap, m], padded).to_literal()?;
 
     let prog = runtime.load(spec)?;
@@ -354,6 +515,5 @@ fn run_expert_ffn(
     let outs = prog.run_literal_refs(&inputs)?;
     let full = HostTensor::from_literal(&outs[0])?;
     // Slice back to the true count.
-    let data = full.as_f32()?[..count * m].to_vec();
-    Ok(HostTensor::f32(&[count, m], data))
+    Ok(full.as_f32()?[..count * m].to_vec())
 }

@@ -171,13 +171,7 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
 }
 
 fn argmax(row: &[f32]) -> i32 {
-    let mut best = 0;
-    for (i, &v) in row.iter().enumerate() {
-        if v > row[best] {
-            best = i;
-        }
-    }
-    best as i32
+    ds_moe::util::stats::argmax(row) as i32
 }
 
 fn cmd_train(mut args: Args) -> Result<()> {

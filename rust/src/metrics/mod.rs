@@ -72,6 +72,17 @@ impl Metrics {
             .unwrap_or(0)
     }
 
+    /// Number of samples recorded in latency histogram `name`.
+    pub fn samples(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .latencies
+            .get(name)
+            .map(|h| h.count())
+            .unwrap_or(0)
+    }
+
     pub fn mean_ns(&self, name: &str) -> f64 {
         self.inner
             .lock()
@@ -125,6 +136,8 @@ mod tests {
         let p50 = m.percentile_ns("decode", 50.0);
         assert!((45_000..60_000).contains(&p50), "p50 {p50}");
         assert!(m.mean_ns("decode") > 0.0);
+        assert_eq!(m.samples("decode"), 100);
+        assert_eq!(m.samples("missing"), 0);
     }
 
     #[test]

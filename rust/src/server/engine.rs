@@ -155,10 +155,20 @@ impl Engine {
     /// Drain the queue and all in-flight sequences.
     pub fn run_until_idle(&mut self) -> Result<Vec<Response>> {
         while self.router.queue_len() > 0 || !self.group.is_idle() {
-            // When only partial batches wait, force the timeout path rather
-            // than spinning.
+            // When only partial batches wait, sleep just until the oldest
+            // request's flush deadline (capped at one timeout) instead of
+            // a fixed full timeout — a request that has already waited
+            // most of the timeout should not eat another whole one of
+            // TTFT.  The floor avoids a busy spin when the deadline is
+            // due on the next decide().
             if !self.step()? {
-                std::thread::sleep(self.serving.batch_timeout);
+                // time_to_flush is <= the policy timeout by construction.
+                let remaining = self
+                    .policy
+                    .time_to_flush(self.router.oldest_wait())
+                    .unwrap_or(self.serving.batch_timeout);
+                let floor = std::time::Duration::from_micros(50);
+                std::thread::sleep(remaining.max(floor));
             }
         }
         Ok(std::mem::take(&mut self.done))
@@ -214,19 +224,20 @@ impl Engine {
         let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
         inputs.push(&tok_lit);
         let outs = prog.run_literal_refs(&inputs)?;
-        let logits = HostTensor::from_literal(&outs[0])?; // [B, smax, V]
-        let kc = HostTensor::from_literal(&outs[1])?; // [L, B, H, smax, hd]
-        let vc = HostTensor::from_literal(&outs[2])?;
+        // Single host pull per output; per-lane rows/slices are consumed in
+        // place below (no HostTensor wrappers, no per-request [L,1,H,S,hd]
+        // owned copies).
+        let logits_data: Vec<f32> = outs[0].to_vec()?; // [B, smax, V]
+        let kc_data: Vec<f32> = outs[1].to_vec()?; // [L, B, H, smax, hd]
+        let vc_data: Vec<f32> = outs[2].to_vec()?;
 
         let v = self.cfg.vocab_size;
-        let (l, h, hd) = (self.cfg.n_layers, self.cfg.n_heads, self.cfg.head_dim());
-        let lane_elems = h * smax * hd;
         let free = self.group.free_lanes();
         anyhow::ensure!(free.len() >= reqs.len(), "prefill without free lanes");
 
-        let logits_data = logits.as_f32()?;
-        let kc_data = kc.as_f32()?;
-        let vc_data = vc.as_f32()?;
+        // Lane splices invalidate the literal mirror once per prefill, not
+        // per admitted lane (sync_cache_to_host has already drained it).
+        self.cache_lits = None;
         for (i, req) in reqs.into_iter().enumerate() {
             let lane = free[i];
             let plen = req.prompt.len();
@@ -235,26 +246,11 @@ impl Engine {
                 &logits_data[(i * smax + plen - 1) * v..(i * smax + plen) * v];
             let first = self.sample(row);
 
-            // Extract this request's [L, 1, H, smax, hd] cache slice.
-            let mut k1 = vec![0f32; l * lane_elems];
-            let mut v1 = vec![0f32; l * lane_elems];
-            for layer in 0..l {
-                let src = (layer * compiled + i) * lane_elems;
-                let dst = layer * lane_elems;
-                k1[dst..dst + lane_elems]
-                    .copy_from_slice(&kc_data[src..src + lane_elems]);
-                v1[dst..dst + lane_elems]
-                    .copy_from_slice(&vc_data[src..src + lane_elems]);
-            }
-            let shape = [l, 1, h, smax, hd];
-            self.group.admit(
-                lane,
-                req.id,
-                plen,
-                &HostTensor::f32(&shape, k1),
-                &HostTensor::f32(&shape, v1),
+            // Splice this request's cache slice straight out of the batched
+            // prefill outputs into the lane storage.
+            self.group.admit_from_batch(
+                lane, req.id, plen, &kc_data, &vc_data, i, compiled,
             )?;
-            self.cache_lits = None; // lane splice invalidates the mirror
             let now = std::time::Instant::now();
             self.metrics.observe("ttft", now - req.arrival);
             self.metrics.inc("prefills", 1);

@@ -3,17 +3,42 @@
 //! The leader owns the dense backbone (embeddings, attention, layer norms,
 //! gates, residual branches, LM head) and drives it layer by layer through
 //! the shared AOT programs; fabric workers own the expert FFN weights per
-//! the [`Placement`].  At every MoE layer:
+//! the [`Placement`].
 //!
-//! 1. `gate_*` program → router probabilities;
-//! 2. host top-1 gating builds the dense token→expert mapping table
-//!    ([`Routing`]);
-//! 3. token blocks are grouped per expert and dispatched to owning workers
-//!    (the all-to-all; schedule metrics logged per [`AllToAllKind`]);
-//! 4. workers run `expert_ffn_c{C}` on their blocks (padded to compiled
-//!    capacities);
-//! 5. returned blocks are combined (gate-scaled, un-permuted) and added to
-//!    the residual stream (+ the Residual-MoE fixed branch for PR-MoE).
+//! ## The overlapped, coalesced MoE pipeline
+//!
+//! Every MoE layer runs as five phases (per-phase latencies land in
+//! [`Metrics`] under the same names):
+//!
+//! 1. **`gate`** — the `gate_*` program produces `ln(h)` and router
+//!    probabilities; the `[B,S,M] → [1,T,M]` reshape is a literal-level
+//!    reshape (no host round trip), and host top-1 gating builds the dense
+//!    token→expert mapping table ([`Routing`]).
+//! 2. **`dispatch`** — token blocks are *coalesced per owning worker*: one
+//!    [`crate::fabric::ExpertFfnBatch`] per worker carries all of that
+//!    worker's expert blocks packed into a single contiguous payload (the
+//!    paper's grouped all-to-all, §5.1) — one channel message and one
+//!    worker wakeup per worker per layer, O(workers) not O(experts).
+//! 3. **`leader_overlap`** — *while the workers execute* `expert_ffn_c{C}`
+//!    (each block padded internally against the compiled capacity ladder),
+//!    the leader runs everything that does not depend on the expert
+//!    outputs: the all-to-all plan accounting, the PR-MoE fixed residual
+//!    branch, and the combine-buffer preparation (pulling the residual
+//!    stream to the host).
+//! 4. **`expert_wait`** — block on the coalesced worker replies (the only
+//!    part of the round trip still exposed on the leader's critical path).
+//! 5. **`combine`** — gate-scale and un-permute the packed expert outputs
+//!    (reusing a scratch buffer across layers), add the residual branch and
+//!    the residual stream.
+//!
+//! Setting `DSMOE_SERIAL_MOE=1` (or [`EpEngine::set_serial_moe`]) restores
+//! the old serialized data path — gate → one message per expert → blocking
+//! collect → residual branch after the round trip, with the original
+//! literal→host→literal staging — for before/after measurement.  Both paths
+//! produce **bit-identical** logits (asserted in `integration_parity.rs`);
+//! the whole-layer leader wall clock lands in the `moe_layer` metric for
+//! both, which is what `benches/e2e_serving.rs` compares into
+//! `BENCH_e2e.json`.
 //!
 //! `forward_prefill` / `forward_decode` produce logits bit-comparable to the
 //! monolithic engine's programs (integration_parity.rs).
@@ -26,7 +51,7 @@ use anyhow::Result;
 use crate::config::{AllToAllKind, ModelConfig};
 use crate::coordinator::alltoall::{self, Topology};
 use crate::coordinator::{Placement, Routing};
-use crate::fabric::{Fabric, WorkerPrograms};
+use crate::fabric::{ExpertFfnBatch, Fabric, WorkerPrograms};
 use crate::metrics::Metrics;
 use crate::moe::ExpertLoadStats;
 use crate::runtime::{
@@ -50,10 +75,28 @@ pub struct EpEngine {
     /// [L, B, ...]; the EP engine keeps per-layer tensors).
     caches: Option<(Vec<xla::Literal>, Vec<xla::Literal>)>,
     batch: usize,
+    /// `DSMOE_SERIAL_MOE`: run the old serialized per-expert MoE path
+    /// instead of the overlapped/coalesced pipeline (for measurement).
+    serial_moe: bool,
+    scratch: MoeScratch,
+    /// Monotonic exchange generation: stamped into every coalesced batch
+    /// so stale replies of an aborted exchange (even at the same layer of
+    /// a retried forward) can never be combined into a later one.
+    exchange_seq: u64,
 }
 
 struct ManifestKeys {
     manifest: Manifest,
+}
+
+/// Routing pack/combine scratch reused across MoE layers (and forwards) so
+/// the hot path does not reallocate its staging buffers per layer.
+#[derive(Default)]
+struct MoeScratch {
+    /// `[T * M]` combine accumulation buffer.
+    combine: Vec<f32>,
+    /// Per-worker expert lists for the current layer.
+    worker_experts: Vec<Vec<usize>>,
 }
 
 impl EpEngine {
@@ -129,7 +172,23 @@ impl EpEngine {
             alltoall,
             caches: None,
             batch,
+            serial_moe: std::env::var_os("DSMOE_SERIAL_MOE")
+                .map_or(false, |v| v != "0"),
+            scratch: MoeScratch::default(),
+            exchange_seq: 0,
         })
+    }
+
+    /// Select the serialized (`true`) or overlapped/coalesced (`false`)
+    /// MoE data path.  Defaults to the `DSMOE_SERIAL_MOE` env toggle;
+    /// exposed programmatically so tests and benches can compare both paths
+    /// in one process without racing on the environment.
+    pub fn set_serial_moe(&mut self, serial: bool) {
+        self.serial_moe = serial;
+    }
+
+    pub fn serial_moe(&self) -> bool {
+        self.serial_moe
     }
 
     fn prog(&mut self, key: &str) -> Result<Rc<Program>> {
@@ -221,8 +280,9 @@ impl EpEngine {
             h = self.attn_decode(layer, h, &pos_lit)?;
             h = self.ffn_layer(layer, h, b)?;
         }
-        let h_host = HostTensor::from_literal(&h)?; // [B, 1, M]
-        self.lm_head(h_host.as_f32()?.to_vec())
+        // [B, 1, M]: feed the LM head straight from the literal (one host
+        // copy, not the from_literal + to_vec double copy).
+        self.lm_head(h.to_vec::<f32>()?)
     }
 
     fn attn_prefill(
@@ -293,14 +353,10 @@ impl EpEngine {
         let n_experts = self.cfg.experts_at(layer);
         if n_experts == 0 {
             let prog = self.prog(&Manifest::key_dense_ffn(m, f, t_tokens))?;
-            // dense_ffn operates on [1, T, M]
-            let h_host = HostTensor::from_literal(&h)?;
-            let shape = h_host.shape.clone();
-            let flat = HostTensor::f32(
-                &[1, t_tokens, m],
-                h_host.as_f32()?.to_vec(),
-            )
-            .to_literal()?;
+            // dense_ffn operates on [1, T, M]: reshape at the literal level
+            // instead of the old literal->host->literal round trip.
+            let orig_dims: Vec<i64> = h.array_shape()?.dims().to_vec();
+            let flat = h.reshape(&[1, t_tokens as i64, m as i64])?;
             let out = prog
                 .run_literal_refs(&[
                     &flat,
@@ -312,12 +368,174 @@ impl EpEngine {
                     self.p(&format!("{pre}mlp.b2")),
                 ])?
                 .remove(0);
-            let out_host = HostTensor::from_literal(&out)?;
-            return HostTensor::f32(&shape, out_host.as_f32()?.to_vec())
-                .to_literal();
+            return Ok(out.reshape(&orig_dims)?);
+        }
+        if self.serial_moe {
+            return self.moe_layer_serial(layer, h, t_tokens);
         }
 
-        // --- MoE path -------------------------------------------------
+        // --- MoE path: overlapped, coalesced pipeline ------------------
+        let t_layer = std::time::Instant::now();
+
+        // Phase 1: gate.  [B,S,M] -> [1,T,M] is a literal reshape; only
+        // ln(h) and the router probabilities come back to the host (the
+        // routing tables need them).
+        let t0 = std::time::Instant::now();
+        let gate = self.prog(&Manifest::key_gate(m, n_experts, t_tokens))?;
+        let shape: Vec<usize> = h
+            .array_shape()?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        let flat = h.reshape(&[1, t_tokens as i64, m as i64])?;
+        let outs = gate.run_literal_refs(&[
+            &flat,
+            self.p(&format!("{pre}ln2.g")),
+            self.p(&format!("{pre}ln2.b")),
+            self.p(&format!("{pre}moe.gate")),
+        ])?;
+        let ln_h = HostTensor::from_literal(&outs[0])?; // [T, M]
+        let probs = HostTensor::from_literal(&outs[1])?; // [T, E]
+        self.metrics.observe("gate", t0.elapsed());
+
+        let routing = Routing::top1(probs.as_f32()?, n_experts);
+        if let Some(stats) = self
+            .load_stats
+            .iter_mut()
+            .find(|s| s.layer == layer)
+        {
+            stats.record_assignments(routing.assignments());
+        }
+
+        // Phase 2: coalesced dispatch — one ExpertFfnBatch per owning
+        // worker (replica 0 group), all of its expert blocks packed into a
+        // single payload whose ownership moves into the channel.
+        let t1 = std::time::Instant::now();
+        let (ep_degree, owners): (usize, Vec<usize>) = {
+            let lp = self.placement.layer(layer).unwrap();
+            (lp.ep_degree, (0..n_experts).map(|e| lp.owner(e, 0)).collect())
+        };
+        let mut worker_experts =
+            std::mem::take(&mut self.scratch.worker_experts);
+        for v in &mut worker_experts {
+            v.clear();
+        }
+        if worker_experts.len() < self.fabric.n_workers() {
+            worker_experts.resize(self.fabric.n_workers(), Vec::new());
+        }
+        for e in 0..n_experts {
+            if routing.counts[e] > 0 {
+                worker_experts[owners[e]].push(e);
+            }
+        }
+        let ln_flat = ln_h.as_f32()?;
+        self.exchange_seq += 1;
+        let exchange_tag = self.exchange_seq;
+        let mut inflight = 0usize;
+        for (w, experts) in worker_experts.iter().enumerate() {
+            if experts.is_empty() {
+                continue;
+            }
+            let total: usize =
+                experts.iter().map(|&e| routing.counts[e]).sum();
+            let mut data = Vec::new();
+            routing.pack_blocks(ln_flat, m, experts, &mut data);
+            self.fabric.dispatch_ffn_batch(
+                w,
+                ExpertFfnBatch {
+                    layer,
+                    experts: experts
+                        .iter()
+                        .map(|&e| (e, routing.counts[e]))
+                        .collect(),
+                    data: HostTensor::f32(&[total, m], data),
+                    tag: exchange_tag,
+                },
+            )?;
+            inflight += 1;
+        }
+        self.metrics.observe("dispatch", t1.elapsed());
+
+        // Phase 3: leader overlap — everything that does not depend on the
+        // expert outputs runs while the workers execute: all-to-all plan
+        // accounting, the PR-MoE fixed residual branch, and the combine
+        // buffer prep (pulling the residual stream to the host).
+        let t2 = std::time::Instant::now();
+        let plan = self.exchange_plan(&routing, ep_degree, m);
+        self.metrics.inc("alltoall_bytes", plan.volume() as u64);
+        self.metrics.inc("alltoall_hops", plan.hops() as u64);
+        let residual: Option<Vec<f32>> = if self.cfg.residual {
+            let rb =
+                self.prog(&Manifest::key_residual_branch(m, f, t_tokens))?;
+            let out = rb
+                .run_literal_refs(&[
+                    &outs[0], // ln(h) [T, M], no host round trip
+                    self.p(&format!("{pre}moe.res.w1")),
+                    self.p(&format!("{pre}moe.res.b1")),
+                    self.p(&format!("{pre}moe.res.w2")),
+                    self.p(&format!("{pre}moe.res.b2")),
+                ])?
+                .remove(0);
+            Some(out.to_vec::<f32>()?)
+        } else {
+            None
+        };
+        // Combine prep: the residual stream, pulled to the host once (the
+        // [1,T,M] reshape shares h's row-major element order).
+        let mut out_data: Vec<f32> = flat.to_vec()?;
+        self.metrics.observe("leader_overlap", t2.elapsed());
+
+        // Phase 4: wait for the coalesced worker replies.
+        let t3 = std::time::Instant::now();
+        let results =
+            self.fabric.collect_ffn_batches(inflight, layer, exchange_tag)?;
+        self.metrics.observe("expert_wait", t3.elapsed());
+
+        // Phase 5: combine — gate-scale, un-permute (scratch buffer reused
+        // across layers), then add the residual branch and the residual
+        // stream in the same order as the serial path (bit-identical).
+        let t4 = std::time::Instant::now();
+        let mut combined = std::mem::take(&mut self.scratch.combine);
+        {
+            let packs: Vec<(&[(usize, usize)], &[f32])> = results
+                .iter()
+                .map(|r| Ok((r.experts.as_slice(), r.data.as_f32()?)))
+                .collect::<Result<_>>()?;
+            routing.combine_packed(&packs, m, &mut combined)?;
+        }
+        if let Some(res) = &residual {
+            for (c, r) in combined.iter_mut().zip(res) {
+                *c += *r;
+            }
+        }
+        for (o, c) in out_data.iter_mut().zip(&combined) {
+            *o += *c;
+        }
+        let out = HostTensor::f32(&shape, out_data).to_literal()?;
+        self.scratch.combine = combined;
+        self.scratch.worker_experts = worker_experts;
+        self.metrics.observe("combine", t4.elapsed());
+        self.metrics.observe("moe_layer", t_layer.elapsed());
+        Ok(out)
+    }
+
+    /// The pre-overlap serialized MoE path (`DSMOE_SERIAL_MOE=1`): gate →
+    /// one message per expert → blocking collect → combine → residual
+    /// branch, with the original literal→host→literal staging.  Kept
+    /// verbatim as the before/after measurement baseline; must stay
+    /// bit-identical to the overlapped pipeline.
+    fn moe_layer_serial(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+        t_tokens: usize,
+    ) -> Result<xla::Literal> {
+        let (m, f) = (self.cfg.d_model, self.cfg.d_ff);
+        let pre = format!("layer{layer}.");
+        let n_experts = self.cfg.experts_at(layer);
+        let t_layer = std::time::Instant::now();
+
         let t0 = std::time::Instant::now();
         let gate = self.prog(&Manifest::key_gate(m, n_experts, t_tokens))?;
         let h_host = HostTensor::from_literal(&h)?;
@@ -406,7 +624,9 @@ impl EpEngine {
         for (o, c) in out.iter_mut().zip(&combined) {
             *o += c;
         }
-        HostTensor::f32(&shape, out).to_literal()
+        let out = HostTensor::f32(&shape, out).to_literal()?;
+        self.metrics.observe("moe_layer", t_layer.elapsed());
+        Ok(out)
     }
 
     /// Build the all-to-all byte matrix this routing implies at EP degree

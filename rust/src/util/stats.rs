@@ -183,6 +183,18 @@ impl LatencyHistogram {
     }
 }
 
+/// Index of the maximum element (first wins on ties; 0 for empty input).
+/// The greedy-decoding argmax shared by the CLI, benches and parity tests.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 /// Human-readable nanoseconds.
 pub fn fmt_ns(ns: u64) -> String {
     if ns >= 1_000_000_000 {
@@ -264,6 +276,14 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.max_ns(), 2000);
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0, 5.0, 4.0]), 0); // tie: first wins
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
     }
 
     #[test]

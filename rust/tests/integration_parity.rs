@@ -8,6 +8,7 @@ use ds_moe::config::AllToAllKind;
 use ds_moe::data::{Corpus, CorpusConfig};
 use ds_moe::runtime::{Checkpoint, HostTensor, Manifest, Runtime};
 use ds_moe::server::EpEngine;
+use ds_moe::util::stats::argmax;
 
 fn manifest() -> Option<Manifest> {
     let root = std::path::Path::new("artifacts");
@@ -89,15 +90,6 @@ fn parity_for(model: &str, workers: usize, a2a: AllToAllKind) {
     assert_rows_close(&mono_rows, &ep_rows, 2e-3, &format!("{model} prefill"));
 
     // Decode parity: continue two tokens greedily on both paths.
-    let argmax = |row: &[f32]| -> i32 {
-        let mut b = 0;
-        for (i, &v) in row.iter().enumerate() {
-            if v > row[b] {
-                b = i;
-            }
-        }
-        b as i32
-    };
     // Monolithic decode via the decode program.
     let arts = m.model(model).unwrap();
     let rt = Runtime::cpu().unwrap();
@@ -107,8 +99,10 @@ fn parity_for(model: &str, workers: usize, a2a: AllToAllKind) {
     let ck = Checkpoint::load(&arts.checkpoint_dir).unwrap();
     let (_, mut kc, mut vc) =
         monolithic_prefill(&m, model, &tokens, &lens, batch);
-    let mut mono_tok: Vec<i32> = mono_rows.iter().map(|r| argmax(r)).collect();
-    let mut ep_tok: Vec<i32> = ep_rows.iter().map(|r| argmax(r)).collect();
+    let mut mono_tok: Vec<i32> =
+        mono_rows.iter().map(|r| argmax(r) as i32).collect();
+    let mut ep_tok: Vec<i32> =
+        ep_rows.iter().map(|r| argmax(r) as i32).collect();
     assert_eq!(mono_tok, ep_tok, "{model}: first sampled tokens differ");
     let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
     for step in 0..2 {
@@ -133,13 +127,86 @@ fn parity_for(model: &str, workers: usize, a2a: AllToAllKind) {
             2e-3,
             &format!("{model} decode step {step}"),
         );
-        mono_tok = mono_step_rows.iter().map(|r| argmax(r)).collect();
-        ep_tok = ep_step_rows.iter().map(|r| argmax(r)).collect();
+        mono_tok =
+            mono_step_rows.iter().map(|r| argmax(r) as i32).collect();
+        ep_tok = ep_step_rows.iter().map(|r| argmax(r) as i32).collect();
         assert_eq!(mono_tok, ep_tok);
         for p in &mut pos {
             *p += 1;
         }
     }
+}
+
+/// The overlapped/coalesced MoE pipeline must be **bit-identical** (not
+/// just tolerance-close) to the serialized `DSMOE_SERIAL_MOE` path: same
+/// expert blocks, same padding, same combine order, same residual-add
+/// order — only the schedule differs.
+fn bitwise_serial_vs_overlap(model: &str, workers: usize) {
+    let Some(m) = manifest() else { return };
+    let batch = 4usize;
+    let cfg = m.model(model).unwrap().config.clone();
+    let smax = cfg.max_seq;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+
+    let mut overlap =
+        EpEngine::new(&m, model, workers, AllToAllKind::Hierarchical, batch)
+            .unwrap();
+    overlap.set_serial_moe(false);
+    let mut serial =
+        EpEngine::new(&m, model, workers, AllToAllKind::Hierarchical, batch)
+            .unwrap();
+    serial.set_serial_moe(true);
+
+    let a = overlap.forward_prefill(&tokens, &lens).unwrap();
+    let b = serial.forward_prefill(&tokens, &lens).unwrap();
+    assert_eq!(
+        a, b,
+        "{model}: overlapped prefill logits not bit-identical to serial"
+    );
+
+    let mut tok: Vec<i32> = a.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    for step in 0..3 {
+        let ra = overlap.forward_decode(&tok, &pos).unwrap();
+        let rb = serial.forward_decode(&tok, &pos).unwrap();
+        assert_eq!(
+            ra, rb,
+            "{model}: decode step {step} not bit-identical"
+        );
+        tok = ra.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+}
+
+#[test]
+fn overlap_bitwise_identical_moe() {
+    bitwise_serial_vs_overlap("moe-s-8", 4);
+}
+
+#[test]
+fn overlap_bitwise_identical_prmoe_residual() {
+    // PR-MoE also exercises the overlapped residual branch + pyramid
+    // per-layer placements.
+    bitwise_serial_vs_overlap("prmoe-s", 4);
+}
+
+#[test]
+fn overlap_bitwise_identical_single_worker() {
+    // Degenerate fabric: every expert on one worker, one batch per layer.
+    bitwise_serial_vs_overlap("moe-s-8", 1);
 }
 
 #[test]
