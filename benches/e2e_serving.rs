@@ -6,10 +6,14 @@
 //! variant ordering must match: MoS < PR-MoE < MoE in latency, all three
 //! vs dense per activated-parameter size).
 //!
-//! Part 2 is the MoE-pipeline study: the expert-parallel engine run twice —
-//! `DSMOE_SERIAL_MOE` serialized path vs the overlapped/coalesced pipeline —
-//! comparing per-MoE-layer leader wall-clock, per-phase timers and fabric
-//! messages per layer.
+//! Part 2 is the MoE-pipeline study: the expert-parallel engine run three
+//! ways — `DSMOE_SERIAL_MOE` serialized baseline, the per-layer
+//! overlapped/coalesced path (`DSMOE_NO_PIPELINE`), and the
+//! microbatch-interleaved cross-layer pipeline — comparing forward
+//! latencies (prefill and decode), the **exposed** expert wait
+//! (`expert_wait` + `pipeline_bubble` sums), per-phase timers and fabric
+//! messages per layer.  The pipeline's acceptance bar is its summed
+//! exposed wait landing below the overlapped path's `expert_wait`.
 //!
 //! Everything is also emitted to `BENCH_e2e.json` at the repo root so the
 //! perf trajectory is tracked across PRs.
@@ -34,27 +38,69 @@ struct ServingRow {
     decode_p99_ns: u64,
 }
 
+#[derive(Clone, Copy, PartialEq)]
+enum MoePath {
+    Serial,
+    Overlap,
+    Pipelined,
+}
+
+impl MoePath {
+    fn name(self) -> &'static str {
+        match self {
+            MoePath::Serial => "serial",
+            MoePath::Overlap => "overlap",
+            MoePath::Pipelined => "pipelined",
+        }
+    }
+}
+
 struct PipelineSide {
+    path: MoePath,
     moe_layer_ns: f64,
+    /// Model-layer executions (microbatch runs are folded together, so
+    /// msgs/layer exposes the pipelined path's ~2x message count rather
+    /// than hiding it behind a per-microbatch denominator).
     layer_runs: u64,
     messages: u64,
+    prefill_ns: f64,
+    decode_ns: f64,
+    /// Summed exposed wait over the measured run: `expert_exchange` on the
+    /// serial path, `expert_wait` on the overlapped path,
+    /// `expert_wait + pipeline_bubble` on the pipelined path.
+    exposed_wait_ns: u64,
     phases: Vec<(&'static str, f64)>,
 }
 
 struct PipelineStudy {
     model: String,
     workers: usize,
-    serial: PipelineSide,
-    overlap: PipelineSide,
+    microbatches: usize,
+    /// serial, overlap, pipelined — in that order.
+    sides: Vec<PipelineSide>,
 }
 
 impl PipelineStudy {
-    fn speedup(&self) -> f64 {
-        if self.overlap.moe_layer_ns > 0.0 {
-            self.serial.moe_layer_ns / self.overlap.moe_layer_ns
+    fn side(&self, path: MoePath) -> &PipelineSide {
+        self.sides.iter().find(|s| s.path == path).unwrap()
+    }
+
+    /// Per-MoE-layer leader wall-clock: serial vs overlapped.
+    fn overlap_speedup(&self) -> f64 {
+        let o = self.side(MoePath::Overlap).moe_layer_ns;
+        if o > 0.0 {
+            self.side(MoePath::Serial).moe_layer_ns / o
         } else {
             0.0
         }
+    }
+
+    /// Exposed-wait reduction: overlapped `expert_wait` sum over the
+    /// pipelined `expert_wait + pipeline_bubble` sum (the acceptance bar
+    /// is > 1.0).
+    fn exposed_wait_ratio(&self) -> f64 {
+        let p = self.side(MoePath::Pipelined).exposed_wait_ns.max(1);
+        self.side(MoePath::Overlap).exposed_wait_ns as f64 / p as f64
     }
 }
 
@@ -131,53 +177,66 @@ fn main() {
     t.print();
     let _ = t.save_csv("e2e_serving");
 
-    // --- MoE pipeline study: serialized vs overlapped/coalesced ----------
+    // --- MoE pipeline study: serial vs overlapped vs pipelined -----------
     let mut studies = Vec::new();
     let mut pt = Table::new(
-        "MoE-layer pipeline: serialized vs overlapped (leader wall-clock)",
-        &["model", "workers", "serial/layer", "overlap/layer", "speedup",
-          "msgs/layer serial", "msgs/layer overlap"],
+        "MoE data path: serial vs overlapped vs microbatch-pipelined",
+        &["model", "path", "prefill", "decode", "moe layer", "exposed wait",
+          "msgs/layer"],
     );
     for (model, workers) in [("moe-s-8", 4usize), ("prmoe-s", 4)] {
         let Some(study) = pipeline_study(&manifest, &corpus, model, workers)
         else {
             continue;
         };
-        pt.row(&[
-            study.model.clone(),
-            workers.to_string(),
-            fmt_ns(study.serial.moe_layer_ns as u64),
-            fmt_ns(study.overlap.moe_layer_ns as u64),
-            format!("{:.2}x", study.speedup()),
-            f2(study.serial.messages as f64
-                / study.serial.layer_runs.max(1) as f64),
-            f2(study.overlap.messages as f64
-                / study.overlap.layer_runs.max(1) as f64),
-        ]);
+        for s in &study.sides {
+            pt.row(&[
+                study.model.clone(),
+                s.path.name().to_string(),
+                fmt_ns(s.prefill_ns as u64),
+                fmt_ns(s.decode_ns as u64),
+                fmt_ns(s.moe_layer_ns as u64),
+                fmt_ns(s.exposed_wait_ns),
+                f2(s.messages as f64 / s.layer_runs.max(1) as f64),
+            ]);
+        }
+        println!(
+            "  {}: overlap {:.2}x faster per MoE layer than serial; \
+             pipelined exposes {:.2}x less wait than overlapped \
+             ({} microbatches)",
+            study.model,
+            study.overlap_speedup(),
+            study.exposed_wait_ratio(),
+            study.microbatches,
+        );
         studies.push(study);
     }
-    pt.note("overlap = coalesced per-worker dispatch + leader compute \
-             (residual branch, a2a accounting, combine prep) hidden behind \
-             the expert round-trip; acceptance floor is 1.3x");
+    pt.note("exposed wait = summed expert_exchange (serial) / expert_wait \
+             (overlap) / expert_wait+pipeline_bubble (pipelined); the \
+             pipeline hides the expert round-trip behind the partner \
+             microbatch's attention+gate, so only fill/drain bubbles \
+             remain exposed");
     pt.print();
     let _ = pt.save_csv("e2e_moe_pipeline");
 
     write_bench_json(&rows, &studies);
 }
 
-/// Run the EP engine on one model with the serialized and the overlapped
-/// MoE path, measuring steady-state per-MoE-layer leader wall-clock,
-/// per-phase timers and fabric messages (warmup excluded via a fresh
-/// metrics registry).
+/// Run the EP engine on one model with the serialized, overlapped and
+/// pipelined MoE paths, measuring steady-state forward latencies,
+/// per-MoE-layer leader wall-clock, exposed waits, per-phase timers and
+/// fabric messages (warmup excluded via a fresh metrics registry).  Batch
+/// 8 so the pipelined path's half-batch (b=4) program shapes exist.
 fn pipeline_study(
     manifest: &Manifest,
     corpus: &Corpus,
     model: &str,
     workers: usize,
 ) -> Option<PipelineStudy> {
-    let batch = 4usize;
+    let batch = 8usize;
+    let mut microbatches = 1usize;
     let mut sides = Vec::new();
-    for serial in [true, false] {
+    for path in [MoePath::Serial, MoePath::Overlap, MoePath::Pipelined] {
         let mut ep = EpEngine::new(
             manifest,
             model,
@@ -186,7 +245,18 @@ fn pipeline_study(
             batch,
         )
         .ok()?;
-        ep.set_serial_moe(serial);
+        ep.set_serial_moe(matches!(path, MoePath::Serial));
+        ep.set_pipeline(matches!(path, MoePath::Pipelined));
+        if matches!(path, MoePath::Pipelined) {
+            microbatches = ep.microbatches();
+            if microbatches != 2 {
+                eprintln!(
+                    "  WARNING: {model}: half-batch programs missing — the \
+                     'pipelined' side fell back to the overlapped path \
+                     (microbatches_pipelined=1 in BENCH_e2e.json)"
+                );
+            }
+        }
         let smax = ep.cfg.max_seq;
         let plen = 8usize;
         let mut tokens = vec![0i32; batch * smax];
@@ -219,25 +289,47 @@ fn pipeline_study(
             }
         }
 
-        let phase_names: &[&'static str] = if serial {
-            &["gate", "expert_exchange"]
+        let phase_names: &[&'static str] = match path {
+            MoePath::Serial => &["gate", "expert_exchange"],
+            MoePath::Overlap => &[
+                "gate", "dispatch", "leader_overlap", "expert_wait",
+                "combine",
+            ],
+            MoePath::Pipelined => &[
+                "gate", "dispatch", "leader_overlap", "pipeline_bubble",
+                "combine", "attn_overlap",
+            ],
+        };
+        let exposed = ep.metrics.sum_ns("expert_exchange")
+            + ep.metrics.sum_ns("expert_wait")
+            + ep.metrics.sum_ns("pipeline_bubble");
+        // "moe_layer" records one sample per *microbatch* per layer, so
+        // divide by the microbatch count to normalize to model layers.
+        let mb = if matches!(path, MoePath::Pipelined) {
+            microbatches.max(1) as u64
         } else {
-            &["gate", "dispatch", "leader_overlap", "expert_wait",
-              "combine"]
+            1
         };
         sides.push(PipelineSide {
+            path,
             moe_layer_ns: ep.metrics.mean_ns("moe_layer"),
-            layer_runs: ep.metrics.samples("moe_layer"),
+            layer_runs: ep.metrics.samples("moe_layer") / mb,
             messages: ep.traffic().messages.load(Ordering::Relaxed) - msgs0,
+            prefill_ns: ep.metrics.mean_ns("forward_prefill"),
+            decode_ns: ep.metrics.mean_ns("forward_decode"),
+            exposed_wait_ns: exposed,
             phases: phase_names
                 .iter()
                 .map(|&n| (n, ep.metrics.mean_ns(n)))
                 .collect(),
         });
     }
-    let overlap = sides.pop()?;
-    let serial = sides.pop()?;
-    Some(PipelineStudy { model: model.to_string(), workers, serial, overlap })
+    Some(PipelineStudy {
+        model: model.to_string(),
+        workers,
+        microbatches,
+        sides,
+    })
 }
 
 /// Emit `BENCH_e2e.json` at the repo root: the serving sweep plus the MoE
@@ -275,24 +367,34 @@ fn write_bench_json(rows: &[ServingRow], studies: &[PipelineStudy]) {
             p.push('}');
             p
         };
+        let side_json = |side: &PipelineSide| -> String {
+            format!(
+                "{{\"moe_layer_ns\": {:.0}, \"prefill_ns\": {:.0}, \
+                 \"decode_ns\": {:.0}, \"exposed_wait_ns\": {}, \
+                 \"msgs_per_layer\": {:.2}, \"phases\": {}}}",
+                side.moe_layer_ns,
+                side.prefill_ns,
+                side.decode_ns,
+                side.exposed_wait_ns,
+                side.messages as f64 / side.layer_runs.max(1) as f64,
+                phases(side),
+            )
+        };
         let _ = write!(
             s,
             "    {{\"model\": \"{}\", \"workers\": {}, \
-             \"moe_layer_serial_ns\": {:.0}, \
-             \"moe_layer_overlap_ns\": {:.0}, \
+             \"microbatches_pipelined\": {}, \
              \"overlap_speedup\": {:.3}, \
-             \"msgs_per_layer_serial\": {:.2}, \
-             \"msgs_per_layer_overlap\": {:.2}, \
-             \"phases_serial\": {}, \"phases_overlap\": {}}}{}\n",
+             \"exposed_wait_ratio\": {:.3}, \
+             \"serial\": {}, \"overlap\": {}, \"pipelined\": {}}}{}\n",
             st.model,
             st.workers,
-            st.serial.moe_layer_ns,
-            st.overlap.moe_layer_ns,
-            st.speedup(),
-            st.serial.messages as f64 / st.serial.layer_runs.max(1) as f64,
-            st.overlap.messages as f64 / st.overlap.layer_runs.max(1) as f64,
-            phases(&st.serial),
-            phases(&st.overlap),
+            st.microbatches,
+            st.overlap_speedup(),
+            st.exposed_wait_ratio(),
+            side_json(st.side(MoePath::Serial)),
+            side_json(st.side(MoePath::Overlap)),
+            side_json(st.side(MoePath::Pipelined)),
             if i + 1 == studies.len() { "" } else { "," }
         );
     }

@@ -38,8 +38,10 @@ from . import configs, model
 
 # Batch sizes compiled for serving; the Rust batcher rounds up to one of
 # these.  Prefill sequence length is always cfg.max_seq (prompts padded).
-DECODE_BATCH_SIZES = (1, 4, 8)
-PREFILL_BATCH_SIZES = (1, 4, 8)
+# Half-batch shapes (2 = half of 4, 4 = half of 8) double as microbatch
+# shapes for the EP engine's cross-layer pipeline.
+DECODE_BATCH_SIZES = (1, 2, 4, 8)
+PREFILL_BATCH_SIZES = (1, 2, 4, 8)
 # Expert-block capacities compiled for the disaggregated expert-FFN program;
 # the coordinator pads each expert's token block up to the next one.
 EXPERT_BLOCK_SIZES = (1, 4, 8, 16, 64, 256, 512)
@@ -307,6 +309,16 @@ class Exporter:
                 sh[key] = self.export_program(
                     "shared/" + key,
                     functools.partial(model.prog_attn_prefill, n_heads=H),
+                    ins, outs)
+                # LM-head tail: gather each lane's last-position row at the
+                # device level so the leader never pulls [B,smax,M] host-side.
+                key = f"gather_last_m{M}_b{B}_s{smax}"
+                ins = [_spec((B, smax, M), "f32", "h"),
+                       _spec((B,), "i32", "lens")]
+                outs = [_spec((B, M), "f32", "last")]
+                sh[key] = self.export_program(
+                    "shared/" + key,
+                    lambda h, lens: (model.prog_gather_last(h, lens),),
                     ins, outs)
             for B in DECODE_BATCH_SIZES:
                 key = f"attn_decode_m{M}_h{H}_b{B}_s{smax}"

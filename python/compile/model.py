@@ -441,6 +441,14 @@ def prog_combine(h, expert_out, gate):
     return h + (expert_out * gate[:, None]).reshape(B, S, M)
 
 
+def prog_gather_last(h, lens):
+    """Each lane's last-position row: h [B,S,M] + prompt lengths [B] ->
+    [B,M] rows at lens[b]-1.  Lets the serving leader feed the LM head
+    without pulling the whole [B,S,M] prefill activation to the host."""
+    idx = jnp.clip(lens - 1, 0, h.shape[1] - 1)
+    return jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0, :]
+
+
 def prog_lm_head(h, ln_g, ln_b, tok_emb):
     """Final LN + tied head over the last position: h [B,M] -> logits."""
     x = layer_norm(h, ln_g, ln_b)

@@ -222,6 +222,25 @@ impl KvCacheGroup {
     }
 }
 
+/// Split a lane-major flat buffer (`lane_elems` contiguous elements per
+/// lane, e.g. one layer's `[B, H, Smax, hd]` cache) into per-group chunks
+/// given as `(lane0, lanes)` ranges.  Because the lane axis is outermost,
+/// each group is a single contiguous copy — this is how the expert-parallel
+/// engine repartitions its decode caches between the full-batch and the
+/// per-microbatch lane layouts.
+pub fn split_lanes(
+    buf: &[f32],
+    lane_elems: usize,
+    groups: &[(usize, usize)],
+) -> Vec<Vec<f32>> {
+    groups
+        .iter()
+        .map(|&(lane0, lanes)| {
+            buf[lane0 * lane_elems..(lane0 + lanes) * lane_elems].to_vec()
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +352,25 @@ mod tests {
         // busy lane
         g.admit_from_batch(0, 1, 2, &ok, &ok, 0, 2).unwrap();
         assert!(g.admit_from_batch(0, 2, 2, &ok, &ok, 1, 2).is_err());
+    }
+
+    #[test]
+    fn split_lanes_partitions_lane_major_buffers() {
+        // 4 lanes x 3 elems, each lane tagged by its index.
+        let lane_elems = 3;
+        let buf: Vec<f32> = (0..4)
+            .flat_map(|lane| vec![lane as f32; lane_elems])
+            .collect();
+        let halves = split_lanes(&buf, lane_elems, &[(0, 2), (2, 2)]);
+        assert_eq!(halves[0], vec![0., 0., 0., 1., 1., 1.]);
+        assert_eq!(halves[1], vec![2., 2., 2., 3., 3., 3.]);
+        // Merging the halves back is plain concatenation (lane-major), and
+        // a full-range "split" is the identity.
+        let mut merged = halves[0].clone();
+        merged.extend_from_slice(&halves[1]);
+        assert_eq!(merged, buf);
+        let full = split_lanes(&buf, lane_elems, &[(0, 4)]);
+        assert_eq!(full[0], buf);
     }
 
     #[test]

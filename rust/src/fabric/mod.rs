@@ -18,6 +18,15 @@
 //!   packed [`FfnBatchResult`] — O(workers) messages per MoE layer instead
 //!   of O(experts).
 //!
+//! Batch collection is **tag-keyed** so the cross-layer pipeline can keep
+//! two exchange generations in flight at once: while
+//! [`Fabric::collect_ffn_batches`] (blocking) or
+//! [`Fabric::try_collect_ffn_batches`] (non-blocking drain) gathers one
+//! generation's replies, replies carrying the tag of another *open*
+//! generation are stashed and handed out when that generation is
+//! collected; a reply whose tag is neither collected nor open is stale and
+//! fails loudly — it is never silently combined.
+//!
 //! Links are bounded channels with byte accounting ([`Traffic`]): every
 //! payload that crosses a worker boundary is counted, which is what the
 //! e2e bench uses to report communication volume per schedule.  The fabric
@@ -25,9 +34,10 @@
 //! all-to-all schedules of `coordinator::alltoall` are executed for real —
 //! relayed messages and all — in `rust/tests/integration_fabric.rs`.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -122,6 +132,10 @@ pub struct Fabric {
     reply_rx: Receiver<Reply>,
     pub traffic: Arc<Traffic>,
     peer_txs: Vec<Sender<Cmd>>,
+    /// Replies of *other* still-open tagged exchanges received while
+    /// collecting a given one (the leader is single-threaded; the stash
+    /// holds at most one generation's worth of replies).
+    stash: RefCell<Vec<FfnBatchResult>>,
 }
 
 impl Fabric {
@@ -150,7 +164,13 @@ impl Fabric {
             txs.push(tx.clone());
             workers.push(WorkerHandle { tx, join: Some(join) });
         }
-        Ok(Fabric { workers, reply_rx, traffic, peer_txs })
+        Ok(Fabric {
+            workers,
+            reply_rx,
+            traffic,
+            peer_txs,
+            stash: RefCell::new(Vec::new()),
+        })
     }
 
     pub fn n_workers(&self) -> usize {
@@ -235,9 +255,88 @@ impl Fabric {
             .context("worker gone")
     }
 
+    /// Move stashed replies of exchange `tag` into `out` (checking their
+    /// layer), leaving other *open* exchanges' replies stashed.  A stashed
+    /// reply whose exchange is neither collected nor open anymore can only
+    /// come from an aborted earlier forward — fail loudly.
+    fn take_stashed(
+        &self,
+        layer: usize,
+        tag: u64,
+        open: &[u64],
+        out: &mut Vec<FfnBatchResult>,
+    ) -> Result<()> {
+        let mut stash = self.stash.borrow_mut();
+        let mut i = 0;
+        while i < stash.len() {
+            if stash[i].tag == tag {
+                let r = stash.remove(i);
+                anyhow::ensure!(
+                    r.layer == layer,
+                    "expert batch reply for layer {} carries tag {tag} of \
+                     an exchange at layer {layer}",
+                    r.layer
+                );
+                out.push(r);
+            } else if open.contains(&stash[i].tag) {
+                i += 1;
+            } else {
+                // Consume the stale entry before failing (mirrors the
+                // channel path, where the failing recv eats the reply) so
+                // one loud error doesn't wedge every later collect.
+                let r = stash.remove(i);
+                anyhow::bail!(
+                    "stale stashed expert batch reply: (layer {}, tag {}) \
+                     is neither collected (tag {tag}) nor open ({open:?})",
+                    r.layer,
+                    r.tag
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Route one received batch reply: the collected exchange's tag goes
+    /// to `out`, another open exchange's tag is stashed for its own
+    /// collection, anything else is stale and fails loudly.
+    fn accept_batch_reply(
+        &self,
+        r: FfnBatchResult,
+        layer: usize,
+        tag: u64,
+        open: &[u64],
+        out: &mut Vec<FfnBatchResult>,
+    ) -> Result<()> {
+        self.traffic
+            .bytes_from_workers
+            .fetch_add(r.data.byte_len() as u64, Ordering::Relaxed);
+        if r.tag == tag {
+            anyhow::ensure!(
+                r.layer == layer,
+                "expert batch reply for layer {} carries tag {tag} of an \
+                 exchange at layer {layer}",
+                r.layer
+            );
+            out.push(r);
+        } else if open.contains(&r.tag) {
+            self.stash.borrow_mut().push(r);
+        } else {
+            anyhow::bail!(
+                "stale expert batch reply: got (layer {}, tag {}) while \
+                 collecting (layer {layer}, tag {tag}; open tags {open:?})",
+                r.layer,
+                r.tag
+            );
+        }
+        Ok(())
+    }
+
     /// Collect `n` coalesced batch results for MoE layer `layer`, exchange
-    /// generation `tag` (any order).  A reply carrying a different layer
-    /// *or* tag is a stale in-flight result from an aborted earlier
+    /// generation `tag` (any order), blocking until all `n` arrived.
+    /// `open` lists the tags of *other* exchanges still legitimately in
+    /// flight (the pipeline's partner microbatch): their replies are
+    /// stashed, tag-keyed, for their own collection.  A reply carrying any
+    /// other tag is a stale in-flight result from an aborted earlier
     /// exchange — even one at the same layer of a retried forward — and
     /// must be a loud error, never silently combined into the current
     /// layer's routing.
@@ -246,24 +345,45 @@ impl Fabric {
         n: usize,
         layer: usize,
         tag: u64,
+        open: &[u64],
     ) -> Result<Vec<FfnBatchResult>> {
         let mut out = Vec::with_capacity(n);
+        self.take_stashed(layer, tag, open, &mut out)?;
         while out.len() < n {
             match self.reply_rx.recv()? {
                 Reply::FfnBatchDone(r) => {
-                    anyhow::ensure!(
-                        r.layer == layer && r.tag == tag,
-                        "stale expert batch reply: got (layer {}, tag {}) \
-                         while collecting (layer {layer}, tag {tag})",
-                        r.layer, r.tag
-                    );
-                    self.traffic
-                        .bytes_from_workers
-                        .fetch_add(r.data.byte_len() as u64, Ordering::Relaxed);
-                    out.push(r);
+                    self.accept_batch_reply(r, layer, tag, open, &mut out)?;
                 }
                 Reply::Err(e) => anyhow::bail!("worker error: {e}"),
                 _ => {}
+            }
+        }
+        Ok(out)
+    }
+
+    /// Non-blocking variant of [`Fabric::collect_ffn_batches`]: drain
+    /// whatever replies of exchange `tag` have already arrived (stashed or
+    /// on the channel) and return immediately — possibly with an empty
+    /// result.  Same tag-keyed stash/stale semantics.
+    pub fn try_collect_ffn_batches(
+        &self,
+        layer: usize,
+        tag: u64,
+        open: &[u64],
+    ) -> Result<Vec<FfnBatchResult>> {
+        let mut out = Vec::new();
+        self.take_stashed(layer, tag, open, &mut out)?;
+        loop {
+            match self.reply_rx.try_recv() {
+                Ok(Reply::FfnBatchDone(r)) => {
+                    self.accept_batch_reply(r, layer, tag, open, &mut out)?;
+                }
+                Ok(Reply::Err(e)) => anyhow::bail!("worker error: {e}"),
+                Ok(_) => {}
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    anyhow::bail!("fabric workers disconnected")
+                }
             }
         }
         Ok(out)

@@ -121,14 +121,29 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
     let a2a: AllToAllKind = args
         .get("alltoall", "hierarchical", "naive|hierarchical|coordinated")
         .parse()?;
+    let serial = args.get_bool(
+        "serial", false, "serialized per-expert MoE path (DSMOE_SERIAL_MOE)",
+    );
+    let no_pipeline = args.get_bool(
+        "no-pipeline", false,
+        "disable microbatch interleaving (DSMOE_NO_PIPELINE)",
+    );
     if args.has("help") {
         eprint!("{}", args.usage("ds-moe ep-serve"));
         return Ok(());
     }
     let corpus = corpus(&mut args);
     let mut ep = EpEngine::new(&m, &model, workers, a2a, batch)?;
+    if serial {
+        ep.set_serial_moe(true);
+    }
+    if no_pipeline {
+        ep.set_pipeline(false);
+    }
     println!(
-        "ep-serve {model}: {workers} workers, batch {batch}, {a2a:?}"
+        "ep-serve {model}: {workers} workers, batch {batch}, {a2a:?}, \
+         {} microbatch(es)",
+        ep.microbatches()
     );
 
     let smax = ep.cfg.max_seq;

@@ -72,6 +72,18 @@ impl Metrics {
             .unwrap_or(0)
     }
 
+    /// Summed time (ns) recorded in latency histogram `name` — total time
+    /// spent in that phase across the whole run.
+    pub fn sum_ns(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .latencies
+            .get(name)
+            .map(|h| h.total_ns().min(u64::MAX as u128) as u64)
+            .unwrap_or(0)
+    }
+
     /// Number of samples recorded in latency histogram `name`.
     pub fn samples(&self, name: &str) -> u64 {
         self.inner
@@ -138,6 +150,8 @@ mod tests {
         assert!(m.mean_ns("decode") > 0.0);
         assert_eq!(m.samples("decode"), 100);
         assert_eq!(m.samples("missing"), 0);
+        assert_eq!(m.sum_ns("decode"), 5_050_000); // exact, not bucketed
+        assert_eq!(m.sum_ns("missing"), 0);
     }
 
     #[test]

@@ -213,6 +213,13 @@ impl Manifest {
         format!("residual_branch_m{m}_f{f}_t{t}")
     }
 
+    /// Gather of each lane's last-position row out of a `[B, smax, M]`
+    /// prefill activation (LM-head tail, literal-level — no full host
+    /// pull).
+    pub fn key_gather_last(m: usize, b: usize, smax: usize) -> String {
+        format!("gather_last_m{m}_b{b}_s{smax}")
+    }
+
     /// Smallest compiled expert-block capacity >= `need` (aot.py's
     /// EXPERT_BLOCK_SIZES ladder).
     pub fn expert_block_sizes(&self) -> Vec<usize> {

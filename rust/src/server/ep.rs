@@ -5,43 +5,63 @@
 //! the shared AOT programs; fabric workers own the expert FFN weights per
 //! the [`Placement`].
 //!
-//! ## The overlapped, coalesced MoE pipeline
+//! ## Split-phase MoE
 //!
-//! Every MoE layer runs as five phases (per-phase latencies land in
-//! [`Metrics`] under the same names):
+//! Every MoE layer is driven through a two-call API instead of a monolithic
+//! FFN call (per-phase latencies land in [`Metrics`] under these names):
 //!
-//! 1. **`gate`** — the `gate_*` program produces `ln(h)` and router
-//!    probabilities; the `[B,S,M] → [1,T,M]` reshape is a literal-level
-//!    reshape (no host round trip), and host top-1 gating builds the dense
-//!    token→expert mapping table ([`Routing`]).
-//! 2. **`dispatch`** — token blocks are *coalesced per owning worker*: one
-//!    [`crate::fabric::ExpertFfnBatch`] per worker carries all of that
-//!    worker's expert blocks packed into a single contiguous payload (the
-//!    paper's grouped all-to-all, §5.1) — one channel message and one
-//!    worker wakeup per worker per layer, O(workers) not O(experts).
-//! 3. **`leader_overlap`** — *while the workers execute* `expert_ffn_c{C}`
-//!    (each block padded internally against the compiled capacity ladder),
-//!    the leader runs everything that does not depend on the expert
-//!    outputs: the all-to-all plan accounting, the PR-MoE fixed residual
-//!    branch, and the combine-buffer preparation (pulling the residual
-//!    stream to the host).
-//! 4. **`expert_wait`** — block on the coalesced worker replies (the only
-//!    part of the round trip still exposed on the leader's critical path).
-//! 5. **`combine`** — gate-scale and un-permute the packed expert outputs
-//!    (reusing a scratch buffer across layers), add the residual branch and
-//!    the residual stream.
+//! * [`EpEngine::moe_dispatch`]`(layer, h) -> InflightMoe` runs
+//!   1. **`gate`** — the `gate_*` program produces `ln(h)` and router
+//!      probabilities (`[B,S,M] → [1,T,M]` stays a literal-level reshape);
+//!      host top-1 gating builds the dense token→expert mapping table
+//!      ([`Routing`]);
+//!   2. **`dispatch`** — token blocks coalesced per owning worker: one
+//!      tagged [`crate::fabric::ExpertFfnBatch`] per worker carries all of
+//!      that worker's expert blocks in one contiguous payload (the paper's
+//!      grouped all-to-all, §5.1) — O(workers) messages per layer;
+//!   3. **`leader_overlap`** — while the workers execute: all-to-all plan
+//!      accounting, the PR-MoE fixed residual branch, and combine-buffer
+//!      prep — then returns with the exchange still out on the fabric.
+//! * [`EpEngine::moe_finish`]`(inflight) -> h'` runs
+//!   4. **`expert_wait`** (or **`pipeline_bubble`** under the pipelined
+//!      driver) — block on the coalesced tagged replies; and
+//!   5. **`combine`** — gate-scale and un-permute the packed expert
+//!      outputs, then add the residual branch and the residual stream.
 //!
-//! Setting `DSMOE_SERIAL_MOE=1` (or [`EpEngine::set_serial_moe`]) restores
-//! the old serialized data path — gate → one message per expert → blocking
-//! collect → residual branch after the round trip, with the original
-//! literal→host→literal staging — for before/after measurement.  Both paths
-//! produce **bit-identical** logits (asserted in `integration_parity.rs`);
-//! the whole-layer leader wall clock lands in the `moe_layer` metric for
-//! both, which is what `benches/e2e_serving.rs` compares into
-//! `BENCH_e2e.json`.
+//! [`MoeScratch`] is double-buffered (one slot per pipeline microbatch), so
+//! two tagged exchanges can be in flight at once; a reply from any exchange
+//! that is neither being collected nor still open fails loudly (tag-keyed
+//! collection in [`crate::fabric::Fabric`]).
 //!
-//! `forward_prefill` / `forward_decode` produce logits bit-comparable to the
-//! monolithic engine's programs (integration_parity.rs).
+//! ## Microbatch-interleaved cross-layer pipelining
+//!
+//! `forward_prefill`/`forward_decode` split the batch into two microbatches
+//! when the half-batch AOT shapes exist.  While microbatch A's expert
+//! blocks are out on the fabric for layer L, the leader runs microbatch B's
+//! attention + gate + dispatch for the same layer (timed as
+//! `attn_overlap`), finishes A, and immediately starts A's layer L+1
+//! behind B's exchange.  The only exposed wait is the pipeline fill/drain
+//! bubble (`pipeline_bubble`).  Decode KV caches live in per-microbatch
+//! lane groups and are repartitioned on the host if the path toggles
+//! between forwards.
+//!
+//! ## Env toggles
+//!
+//! | variable            | effect                                         |
+//! |---------------------|------------------------------------------------|
+//! | `DSMOE_SERIAL_MOE`  | serialized per-expert MoE path (pre-overlap    |
+//! |                     | baseline): gate → one message per expert →     |
+//! |                     | blocking collect → combine; also disables the  |
+//! |                     | pipeline ([`EpEngine::set_serial_moe`]).       |
+//! | `DSMOE_NO_PIPELINE` | per-layer overlapped path (the pre-pipeline    |
+//! |                     | behaviour): split-phase dispatch immediately   |
+//! |                     | followed by finish, full-batch shapes          |
+//! |                     | ([`EpEngine::set_pipeline`]).                  |
+//!
+//! All three paths — serial, overlapped, pipelined — produce
+//! **bit-identical** logits for prefill and decode (asserted in
+//! `integration_parity.rs`); `benches/e2e_serving.rs` compares their
+//! forward latencies and exposed waits into `BENCH_e2e.json`.
 
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -50,8 +70,9 @@ use anyhow::Result;
 
 use crate::config::{AllToAllKind, ModelConfig};
 use crate::coordinator::alltoall::{self, Topology};
+use crate::coordinator::kv_cache::split_lanes;
 use crate::coordinator::{Placement, Routing};
-use crate::fabric::{ExpertFfnBatch, Fabric, WorkerPrograms};
+use crate::fabric::{ExpertFfnBatch, Fabric, FfnBatchResult, WorkerPrograms};
 use crate::metrics::Metrics;
 use crate::moe::ExpertLoadStats;
 use crate::runtime::{
@@ -68,21 +89,36 @@ pub struct EpEngine {
     fabric: Fabric,
     pub metrics: std::sync::Arc<Metrics>,
     pub load_stats: Vec<ExpertLoadStats>,
+    /// `stats_idx[layer]` = index into `load_stats` (None for dense
+    /// layers): O(1) per-layer lookup instead of a linear scan.
+    stats_idx: Vec<Option<usize>>,
     manifest_keys: ManifestKeys,
     progs: HashMap<String, Rc<Program>>,
     alltoall: AllToAllKind,
-    /// Per-layer decode KV caches [B, H, Smax, hd] (monolithic layout is
-    /// [L, B, ...]; the EP engine keeps per-layer tensors).
-    caches: Option<(Vec<xla::Literal>, Vec<xla::Literal>)>,
+    /// Decode KV caches in per-microbatch lane groups; each group holds
+    /// per-layer `[lanes, H, Smax, hd]` tensors (monolithic layout is
+    /// `[L, B, ...]`).  One group when the pipeline is off, two when on.
+    caches: Vec<LaneGroupCaches>,
     batch: usize,
     /// `DSMOE_SERIAL_MOE`: run the old serialized per-expert MoE path
     /// instead of the overlapped/coalesced pipeline (for measurement).
     serial_moe: bool,
-    scratch: MoeScratch,
+    /// `DSMOE_NO_PIPELINE` (inverted): microbatch-interleave forwards when
+    /// the half-batch program shapes are available.
+    pipeline: bool,
+    /// Computed once at construction: the manifest has every program the
+    /// pipelined path needs at `batch / 2` (false for odd batches).
+    half_shapes_ok: bool,
+    /// Double-buffered routing/combine scratch: one slot per pipeline
+    /// microbatch so two exchanges can be staged at once.
+    scratch: [MoeScratch; 2],
     /// Monotonic exchange generation: stamped into every coalesced batch
     /// so stale replies of an aborted exchange (even at the same layer of
     /// a retried forward) can never be combined into a later one.
     exchange_seq: u64,
+    /// Tags of exchanges currently out on the fabric (at most two): the
+    /// collector stashes replies for these instead of failing.
+    open_tags: Vec<u64>,
 }
 
 struct ManifestKeys {
@@ -90,13 +126,84 @@ struct ManifestKeys {
 }
 
 /// Routing pack/combine scratch reused across MoE layers (and forwards) so
-/// the hot path does not reallocate its staging buffers per layer.
+/// the hot path does not reallocate its staging buffers per layer.  The
+/// engine keeps one slot per pipeline microbatch (double buffering).
 #[derive(Default)]
 struct MoeScratch {
     /// `[T * M]` combine accumulation buffer.
     combine: Vec<f32>,
     /// Per-worker expert lists for the current layer.
     worker_experts: Vec<Vec<usize>>,
+}
+
+/// Decode KV caches for one contiguous lane group (a pipeline microbatch).
+struct LaneGroupCaches {
+    lane0: usize,
+    lanes: usize,
+    k: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+}
+
+/// What kind of forward the shared interleave scheduler
+/// ([`EpEngine::run_pipeline`]) is driving, with the per-microbatch state
+/// its start step needs.
+enum PipeCtx<'a> {
+    /// Prefill: KV cache groups being built layer by layer.
+    Prefill(&'a mut [LaneGroupCaches]),
+    /// Decode: per-microbatch position literals.
+    Decode(&'a [xla::Literal]),
+}
+
+/// A split-phase MoE layer whose expert exchange may still be on the
+/// fabric: produced by [`EpEngine::moe_dispatch`], consumed by
+/// [`EpEngine::moe_finish`].  Dense FFN layers complete at dispatch time
+/// and carry their result through the same type so pipeline drivers treat
+/// every layer uniformly.
+pub struct InflightMoe {
+    layer: usize,
+    /// Leader time spent in the dispatch half (gate → leader overlap).
+    /// `moe_layer` is recorded as this plus the finish half, so the
+    /// pipelined path's number measures the layer's own cost and not the
+    /// partner microbatch's work interleaved between the two halves.
+    dispatch_elapsed: std::time::Duration,
+    state: InflightState,
+}
+
+enum InflightState {
+    /// Dense FFN — nothing on the fabric, result already computed.
+    Done(xla::Literal),
+    Pending(Box<PendingMoe>),
+}
+
+struct PendingMoe {
+    slot: usize,
+    /// Original `h` dims, restored on combine.
+    shape: Vec<usize>,
+    routing: Routing,
+    /// Worker replies not yet received.
+    outstanding: usize,
+    tag: u64,
+    /// PR-MoE fixed-branch output (leader-side), if the model has one.
+    residual: Option<Vec<f32>>,
+    /// Residual stream pulled to the host (combine accumulates into it).
+    out_data: Vec<f32>,
+    /// Taken from the slot's [`MoeScratch`], returned at finish.
+    worker_experts: Vec<Vec<usize>>,
+    results: Vec<FfnBatchResult>,
+    /// Metric the exposed wait lands in: `expert_wait` on the per-layer
+    /// path, `pipeline_bubble` under the pipelined driver.
+    wait_metric: &'static str,
+}
+
+impl InflightMoe {
+    /// True while the expert exchange is (possibly) still on the fabric.
+    pub fn pending(&self) -> bool {
+        matches!(self.state, InflightState::Pending(_))
+    }
+
+    pub fn layer(&self) -> usize {
+        self.layer
+    }
 }
 
 impl EpEngine {
@@ -152,11 +259,17 @@ impl EpEngine {
             }
         }
 
-        let load_stats = cfg
+        let load_stats: Vec<ExpertLoadStats> = cfg
             .moe_layers()
             .into_iter()
             .map(|(i, e)| ExpertLoadStats::new(i, e))
             .collect();
+        let mut stats_idx = vec![None; cfg.n_layers];
+        for (i, s) in load_stats.iter().enumerate() {
+            stats_idx[s.layer] = Some(i);
+        }
+        let half_shapes_ok = batch % 2 == 0
+            && half_shapes_available(manifest, &cfg, batch / 2);
 
         Ok(EpEngine {
             rt,
@@ -167,15 +280,20 @@ impl EpEngine {
             fabric,
             metrics: std::sync::Arc::new(Metrics::new()),
             load_stats,
+            stats_idx,
             manifest_keys: ManifestKeys { manifest: manifest.clone() },
             progs: HashMap::new(),
             alltoall,
-            caches: None,
+            caches: Vec::new(),
             batch,
             serial_moe: std::env::var_os("DSMOE_SERIAL_MOE")
-                .map_or(false, |v| v != "0"),
-            scratch: MoeScratch::default(),
+                .is_some_and(|v| v != "0"),
+            pipeline: !std::env::var_os("DSMOE_NO_PIPELINE")
+                .is_some_and(|v| v != "0"),
+            half_shapes_ok,
+            scratch: [MoeScratch::default(), MoeScratch::default()],
             exchange_seq: 0,
+            open_tags: Vec::new(),
         })
     }
 
@@ -189,6 +307,24 @@ impl EpEngine {
 
     pub fn serial_moe(&self) -> bool {
         self.serial_moe
+    }
+
+    /// Enable/disable the microbatch-interleaved pipeline (defaults to the
+    /// inverse of the `DSMOE_NO_PIPELINE` env toggle).  Even when enabled
+    /// the engine falls back to the per-layer path unless the half-batch
+    /// program shapes exist in the manifest.
+    pub fn set_pipeline(&mut self, pipeline: bool) {
+        self.pipeline = pipeline;
+    }
+
+    pub fn pipeline(&self) -> bool {
+        self.pipeline
+    }
+
+    /// Number of microbatches the next forward will run with (2 when the
+    /// pipelined path is active, 1 otherwise).
+    pub fn microbatches(&self) -> usize {
+        self.lane_groups().len()
     }
 
     fn prog(&mut self, key: &str) -> Result<Rc<Program>> {
@@ -205,6 +341,17 @@ impl EpEngine {
         &self.params[name]
     }
 
+    /// Contiguous `(lane0, lanes)` microbatch groups for the next forward:
+    /// two halves when pipelining is on and every half-batch program shape
+    /// exists (precomputed at construction), else one full-batch group.
+    fn lane_groups(&self) -> Vec<(usize, usize)> {
+        if !self.pipeline || self.serial_moe || !self.half_shapes_ok {
+            return vec![(0, self.batch)];
+        }
+        let half = self.batch / 2;
+        vec![(0, half), (half, half)]
+    }
+
     /// Full prefill over padded prompts [B, smax]; returns last-position
     /// logits per lane at `lens[b]-1` and primes the decode caches.
     pub fn forward_prefill(
@@ -214,10 +361,39 @@ impl EpEngine {
     ) -> Result<Vec<Vec<f32>>> {
         let (b, smax) = (self.batch, self.cfg.max_seq);
         anyhow::ensure!(tokens.len() == b * smax, "tokens shape");
-        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
-        let t_tokens = b * smax;
+        anyhow::ensure!(lens.len() == b, "lens shape");
+        // Range-check here so the literal-level gather and the host
+        // fallback in lm_head_last fail identically (the AOT program would
+        // silently clip, the host path would panic).
+        anyhow::ensure!(
+            lens.iter().all(|&l| l <= smax),
+            "prompt length exceeds max_seq {smax}"
+        );
+        let t_fwd = std::time::Instant::now();
+        // Exchanges of an aborted earlier forward are no longer open: any
+        // reply of theirs that straggles in must fail loudly, not sit in
+        // the stash forever.
+        self.open_tags.clear();
+        let groups = self.lane_groups();
+        let out = if groups.len() == 2 {
+            self.prefill_pipelined(tokens, lens, &groups)?
+        } else {
+            self.prefill_single(tokens, lens)?
+        };
+        self.metrics.observe("forward_prefill", t_fwd.elapsed());
+        Ok(out)
+    }
 
-        // embed
+    /// Single-microbatch prefill: the per-layer (serial or overlapped)
+    /// data path over full-batch program shapes.
+    fn prefill_single(
+        &mut self,
+        tokens: &[i32],
+        lens: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        let (b, smax) = (self.batch, self.cfg.max_seq);
+        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
+
         let embed = self.prog(&Manifest::key_embed(v, m, b, smax))?;
         let tok = HostTensor::i32(&[b, smax], tokens.to_vec()).to_literal()?;
         let pos0 = HostTensor::i32(&[b], vec![0; b]).to_literal()?;
@@ -230,27 +406,156 @@ impl EpEngine {
             ])?
             .remove(0);
 
-        let mut kcs = Vec::new();
-        let mut vcs = Vec::new();
+        let mut group = LaneGroupCaches {
+            lane0: 0,
+            lanes: b,
+            k: Vec::new(),
+            v: Vec::new(),
+        };
         for layer in 0..self.cfg.n_layers {
-            let (h2, k, vv) = self.attn_prefill(layer, h)?;
-            kcs.push(k);
-            vcs.push(vv);
-            h = self.ffn_layer(layer, h2, t_tokens)?;
+            let (h2, k, vv) = self.attn_prefill(layer, h, b)?;
+            group.k.push(k);
+            group.v.push(vv);
+            h = self.ffn_layer(layer, h2)?;
         }
-        self.caches = Some((kcs, vcs));
+        self.caches = vec![group];
 
-        // LM head on each lane's last real position.
-        let h_host = HostTensor::from_literal(&h)?; // [B, smax, M]
-        let hd = h_host.as_f32()?;
-        let mut last = vec![0f32; b * m];
-        for lane in 0..b {
-            let p = lens[lane].max(1) - 1;
-            let off = (lane * smax + p) * m;
-            last[lane * m..(lane + 1) * m]
-                .copy_from_slice(&hd[off..off + m]);
+        self.lm_head_last(&h, lens)
+    }
+
+    /// Microbatch-interleaved prefill: while one microbatch's expert blocks
+    /// are on the fabric for layer L, the leader runs the other
+    /// microbatch's attention + gate + dispatch, so only the fill/drain
+    /// bubble of the pipeline is an exposed wait.
+    fn prefill_pipelined(
+        &mut self,
+        tokens: &[i32],
+        lens: &[usize],
+        groups: &[(usize, usize)],
+    ) -> Result<Vec<Vec<f32>>> {
+        let smax = self.cfg.max_seq;
+        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
+        let n_layers = self.cfg.n_layers;
+
+        let mut cache_groups: Vec<LaneGroupCaches> = groups
+            .iter()
+            .map(|&(lane0, lanes)| LaneGroupCaches {
+                lane0,
+                lanes,
+                k: Vec::with_capacity(n_layers),
+                v: Vec::with_capacity(n_layers),
+            })
+            .collect();
+        let mut hs: Vec<Option<xla::Literal>> = Vec::with_capacity(2);
+        for &(lane0, lanes) in groups {
+            let embed = self.prog(&Manifest::key_embed(v, m, lanes, smax))?;
+            let tok = HostTensor::i32(
+                &[lanes, smax],
+                tokens[lane0 * smax..(lane0 + lanes) * smax].to_vec(),
+            )
+            .to_literal()?;
+            let pos0 = HostTensor::i32(&[lanes], vec![0; lanes]).to_literal()?;
+            hs.push(Some(
+                embed
+                    .run_literal_refs(&[
+                        self.p("tok_emb"),
+                        self.p("pos_emb"),
+                        &tok,
+                        &pos0,
+                    ])?
+                    .remove(0),
+            ));
         }
-        self.lm_head(last)
+
+        self.run_pipeline(&mut hs, &mut PipeCtx::Prefill(&mut cache_groups))?;
+        self.caches = cache_groups;
+
+        let mut rows = Vec::with_capacity(self.batch);
+        for (g, &(lane0, lanes)) in groups.iter().enumerate() {
+            let h = hs[g].take().unwrap();
+            rows.extend(self.lm_head_last(&h, &lens[lane0..lane0 + lanes])?);
+        }
+        Ok(rows)
+    }
+
+    /// The microbatch-interleave scheduler shared by prefill and decode:
+    /// fill with microbatch 0's first layer, then per layer — start
+    /// microbatch 1 behind 0's exchange (timed as `attn_overlap` when an
+    /// exchange is actually pending), finish 0, start 0's next layer
+    /// behind 1's exchange, finish 1.  `hs` holds each microbatch's
+    /// activation and is left holding the final layer outputs.
+    fn run_pipeline(
+        &mut self,
+        hs: &mut [Option<xla::Literal>],
+        ctx: &mut PipeCtx<'_>,
+    ) -> Result<()> {
+        let n_layers = self.cfg.n_layers;
+        let mut inflight: [Option<InflightMoe>; 2] = [None, None];
+        // Pipeline fill: microbatch 0's first layer has nothing to hide
+        // behind.
+        let h0 = hs[0].take().unwrap();
+        inflight[0] = Some(self.start_layer(0, h0, 0, ctx)?);
+        for layer in 0..n_layers {
+            // Microbatch 1's attention + gate + dispatch run while
+            // microbatch 0's exchange is on the fabric.
+            let t = std::time::Instant::now();
+            let h1 = hs[1].take().unwrap();
+            inflight[1] = Some(self.start_layer(layer, h1, 1, ctx)?);
+            if inflight[0].as_ref().is_some_and(InflightMoe::pending) {
+                self.metrics.observe("attn_overlap", t.elapsed());
+            }
+            if let Some(fl) = inflight[0].as_mut() {
+                self.poll_inflight(fl)?;
+            }
+            let done = inflight[0].take().unwrap();
+            hs[0] = Some(self.moe_finish(done)?);
+            if layer + 1 < n_layers {
+                // Microbatch 0's next layer hides behind 1's exchange.
+                let t = std::time::Instant::now();
+                let h0 = hs[0].take().unwrap();
+                inflight[0] = Some(self.start_layer(layer + 1, h0, 0, ctx)?);
+                if inflight[1].as_ref().is_some_and(InflightMoe::pending) {
+                    self.metrics.observe("attn_overlap", t.elapsed());
+                }
+            }
+            if let Some(fl) = inflight[1].as_mut() {
+                self.poll_inflight(fl)?;
+            }
+            let done = inflight[1].take().unwrap();
+            hs[1] = Some(self.moe_finish(done)?);
+        }
+        Ok(())
+    }
+
+    /// One microbatch's attention + split-phase dispatch at one layer,
+    /// dispatched on the pipeline kind.
+    fn start_layer(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+        mb: usize,
+        ctx: &mut PipeCtx<'_>,
+    ) -> Result<InflightMoe> {
+        match ctx {
+            PipeCtx::Prefill(groups) => {
+                self.start_prefill(layer, h, &mut groups[mb], mb)
+            }
+            PipeCtx::Decode(pos) => self.start_decode(layer, h, &pos[mb], mb),
+        }
+    }
+
+    /// Attention + split-phase dispatch for one prefill microbatch layer.
+    fn start_prefill(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+        cache: &mut LaneGroupCaches,
+        slot: usize,
+    ) -> Result<InflightMoe> {
+        let (h2, k, vv) = self.attn_prefill(layer, h, cache.lanes)?;
+        cache.k.push(k);
+        cache.v.push(vv);
+        self.moe_dispatch_in(layer, h2, slot, "pipeline_bubble")
     }
 
     /// One decode step over [B] tokens at per-lane positions.
@@ -261,8 +566,30 @@ impl EpEngine {
     ) -> Result<Vec<Vec<f32>>> {
         let b = self.batch;
         anyhow::ensure!(tokens.len() == b && pos.len() == b);
+        anyhow::ensure!(!self.caches.is_empty(), "decode before prefill");
+        let t_fwd = std::time::Instant::now();
+        // See forward_prefill: aborted exchanges are no longer open.
+        self.open_tags.clear();
+        let groups = self.lane_groups();
+        // A toggle between forwards (pipeline on/off) changes the lane
+        // partition; reshape the cache groups before decoding.
+        self.repartition_caches(&groups)?;
+        let out = if groups.len() == 2 {
+            self.decode_pipelined(tokens, pos, &groups)?
+        } else {
+            self.decode_single(tokens, pos)?
+        };
+        self.metrics.observe("forward_decode", t_fwd.elapsed());
+        Ok(out)
+    }
+
+    fn decode_single(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = self.batch;
         let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
-        anyhow::ensure!(self.caches.is_some(), "decode before prefill");
 
         let embed = self.prog(&Manifest::key_embed(v, m, b, 1))?;
         let tok = HostTensor::i32(&[b, 1], tokens.to_vec()).to_literal()?;
@@ -277,22 +604,132 @@ impl EpEngine {
             .remove(0);
 
         for layer in 0..self.cfg.n_layers {
-            h = self.attn_decode(layer, h, &pos_lit)?;
-            h = self.ffn_layer(layer, h, b)?;
+            h = self.attn_decode(layer, h, &pos_lit, 0)?;
+            h = self.ffn_layer(layer, h)?;
         }
-        // [B, 1, M]: feed the LM head straight from the literal (one host
-        // copy, not the from_literal + to_vec double copy).
-        self.lm_head(h.to_vec::<f32>()?)
+        // [B, 1, M]: feed the LM head straight from the literal (a reshape,
+        // not a host round trip).
+        let flat = h.reshape(&[b as i64, m as i64])?;
+        self.lm_head_rows(&flat, b)
+    }
+
+    /// Microbatch-interleaved decode step (same schedule as
+    /// [`EpEngine::prefill_pipelined`], with per-microbatch KV lane
+    /// groups).
+    fn decode_pipelined(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        groups: &[(usize, usize)],
+    ) -> Result<Vec<Vec<f32>>> {
+        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
+
+        let mut hs: Vec<Option<xla::Literal>> = Vec::with_capacity(2);
+        let mut pos_lits: Vec<xla::Literal> = Vec::with_capacity(2);
+        for &(lane0, lanes) in groups {
+            let embed = self.prog(&Manifest::key_embed(v, m, lanes, 1))?;
+            let tok = HostTensor::i32(
+                &[lanes, 1],
+                tokens[lane0..lane0 + lanes].to_vec(),
+            )
+            .to_literal()?;
+            let pos_lit =
+                HostTensor::i32(&[lanes], pos[lane0..lane0 + lanes].to_vec())
+                    .to_literal()?;
+            hs.push(Some(
+                embed
+                    .run_literal_refs(&[
+                        self.p("tok_emb"),
+                        self.p("pos_emb"),
+                        &tok,
+                        &pos_lit,
+                    ])?
+                    .remove(0),
+            ));
+            pos_lits.push(pos_lit);
+        }
+
+        self.run_pipeline(&mut hs, &mut PipeCtx::Decode(&pos_lits))?;
+
+        let mut rows = Vec::with_capacity(self.batch);
+        for (g, &(_, lanes)) in groups.iter().enumerate() {
+            let h = hs[g].take().unwrap();
+            let flat = h.reshape(&[lanes as i64, m as i64])?;
+            rows.extend(self.lm_head_rows(&flat, lanes)?);
+        }
+        Ok(rows)
+    }
+
+    /// Attention + split-phase dispatch for one decode microbatch layer
+    /// (`group` selects the KV lane group).
+    fn start_decode(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+        pos: &xla::Literal,
+        group: usize,
+    ) -> Result<InflightMoe> {
+        let h2 = self.attn_decode(layer, h, pos, group)?;
+        self.moe_dispatch_in(layer, h2, group, "pipeline_bubble")
+    }
+
+    /// Rebuild the decode cache groups for a new lane partition (host-side
+    /// merge + split; only runs when the pipeline toggle changed between a
+    /// prefill and a decode).
+    fn repartition_caches(&mut self, groups: &[(usize, usize)]) -> Result<()> {
+        let current: Vec<(usize, usize)> =
+            self.caches.iter().map(|c| (c.lane0, c.lanes)).collect();
+        if current.as_slice() == groups {
+            return Ok(());
+        }
+        let (hh, smax, hd) =
+            (self.cfg.n_heads, self.cfg.max_seq, self.cfg.head_dim());
+        let lane_elems = hh * smax * hd;
+        let n_layers = self.cfg.n_layers;
+        let mut new_groups: Vec<LaneGroupCaches> = groups
+            .iter()
+            .map(|&(lane0, lanes)| LaneGroupCaches {
+                lane0,
+                lanes,
+                k: Vec::with_capacity(n_layers),
+                v: Vec::with_capacity(n_layers),
+            })
+            .collect();
+        for layer in 0..n_layers {
+            // Lane-major cache layout: concatenating the groups' buffers
+            // yields the full [B, H, Smax, hd] tensor, and contiguous
+            // chunks of it are the target groups.
+            let mut full_k: Vec<f32> =
+                Vec::with_capacity(self.batch * lane_elems);
+            let mut full_v: Vec<f32> =
+                Vec::with_capacity(self.batch * lane_elems);
+            for g in &self.caches {
+                full_k.extend(g.k[layer].to_vec::<f32>()?);
+                full_v.extend(g.v[layer].to_vec::<f32>()?);
+            }
+            let kparts = split_lanes(&full_k, lane_elems, groups);
+            let vparts = split_lanes(&full_v, lane_elems, groups);
+            for ((ng, kp), vp) in
+                new_groups.iter_mut().zip(kparts).zip(vparts)
+            {
+                let shape = [ng.lanes, hh, smax, hd];
+                ng.k.push(HostTensor::f32(&shape, kp).to_literal()?);
+                ng.v.push(HostTensor::f32(&shape, vp).to_literal()?);
+            }
+        }
+        self.caches = new_groups;
+        Ok(())
     }
 
     fn attn_prefill(
         &mut self,
         layer: usize,
         h: xla::Literal,
+        lanes: usize,
     ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
-        let (m, hh, b, smax) =
-            (self.cfg.d_model, self.cfg.n_heads, self.batch, self.cfg.max_seq);
-        let prog = self.prog(&Manifest::key_attn_prefill(m, hh, b, smax))?;
+        let (m, hh, smax) =
+            (self.cfg.d_model, self.cfg.n_heads, self.cfg.max_seq);
+        let prog = self.prog(&Manifest::key_attn_prefill(m, hh, lanes, smax))?;
         let pre = format!("layer{layer}.");
         let mut outs = prog.run_literal_refs(&[
             &h,
@@ -314,12 +751,14 @@ impl EpEngine {
         layer: usize,
         h: xla::Literal,
         pos: &xla::Literal,
+        group: usize,
     ) -> Result<xla::Literal> {
-        let (m, hh, b, smax) =
-            (self.cfg.d_model, self.cfg.n_heads, self.batch, self.cfg.max_seq);
-        let prog = self.prog(&Manifest::key_attn_decode(m, hh, b, smax))?;
+        let (m, hh, smax) =
+            (self.cfg.d_model, self.cfg.n_heads, self.cfg.max_seq);
+        let lanes = self.caches[group].lanes;
+        let prog = self.prog(&Manifest::key_attn_decode(m, hh, lanes, smax))?;
         let pre = format!("layer{layer}.");
-        let (kcs, vcs) = self.caches.as_ref().unwrap();
+        let cache = &self.caches[group];
         let mut outs = prog.run_literal_refs(&[
             &h,
             self.p(&format!("{pre}ln1.g")),
@@ -328,34 +767,68 @@ impl EpEngine {
             self.p(&format!("{pre}attn.wk")),
             self.p(&format!("{pre}attn.wv")),
             self.p(&format!("{pre}attn.wo")),
-            &kcs[layer],
-            &vcs[layer],
+            &cache.k[layer],
+            &cache.v[layer],
             pos,
         ])?;
         let vc = outs.pop().unwrap();
         let kc = outs.pop().unwrap();
         let h2 = outs.pop().unwrap();
-        let (kcs, vcs) = self.caches.as_mut().unwrap();
-        kcs[layer] = kc;
-        vcs[layer] = vc;
+        let cache = &mut self.caches[group];
+        cache.k[layer] = kc;
+        cache.v[layer] = vc;
         Ok(h2)
     }
 
-    /// FFN sublayer: dense program or the expert-parallel MoE path.
-    fn ffn_layer(
+    /// FFN sublayer on the per-layer path: split-phase dispatch followed
+    /// immediately by finish (the PR-1 overlapped schedule), or the
+    /// serialized baseline under `DSMOE_SERIAL_MOE`.
+    fn ffn_layer(&mut self, layer: usize, h: xla::Literal) -> Result<xla::Literal> {
+        if self.serial_moe && self.cfg.experts_at(layer) > 0 {
+            return self.moe_layer_serial(layer, h);
+        }
+        let inflight = self.moe_dispatch(layer, h)?;
+        self.moe_finish(inflight)
+    }
+
+    /// Split-phase MoE, phase 1 of 2: gate, coalesced tagged dispatch, and
+    /// the leader-overlap work (all-to-all accounting, PR-MoE residual
+    /// branch, combine prep).  Returns with the exchange still on the
+    /// fabric; pass the result to [`EpEngine::moe_finish`].  Dense FFN
+    /// layers complete here and flow through the same [`InflightMoe`].
+    pub fn moe_dispatch(
         &mut self,
         layer: usize,
         h: xla::Literal,
-        t_tokens: usize,
-    ) -> Result<xla::Literal> {
+    ) -> Result<InflightMoe> {
+        self.moe_dispatch_in(layer, h, 0, "expert_wait")
+    }
+
+    fn moe_dispatch_in(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+        slot: usize,
+        wait_metric: &'static str,
+    ) -> Result<InflightMoe> {
         let (m, f) = (self.cfg.d_model, self.cfg.d_ff);
         let pre = format!("layer{layer}.");
         let n_experts = self.cfg.experts_at(layer);
+        let t_layer = std::time::Instant::now();
+        let shape: Vec<usize> = h
+            .array_shape()?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        let t_tokens: usize = shape.iter().product::<usize>() / m;
+
         if n_experts == 0 {
             let prog = self.prog(&Manifest::key_dense_ffn(m, f, t_tokens))?;
             // dense_ffn operates on [1, T, M]: reshape at the literal level
-            // instead of the old literal->host->literal round trip.
-            let orig_dims: Vec<i64> = h.array_shape()?.dims().to_vec();
+            // instead of a literal->host->literal round trip.
+            let orig_dims: Vec<i64> =
+                shape.iter().map(|&d| d as i64).collect();
             let flat = h.reshape(&[1, t_tokens as i64, m as i64])?;
             let out = prog
                 .run_literal_refs(&[
@@ -368,26 +841,18 @@ impl EpEngine {
                     self.p(&format!("{pre}mlp.b2")),
                 ])?
                 .remove(0);
-            return Ok(out.reshape(&orig_dims)?);
+            return Ok(InflightMoe {
+                layer,
+                dispatch_elapsed: t_layer.elapsed(),
+                state: InflightState::Done(out.reshape(&orig_dims)?),
+            });
         }
-        if self.serial_moe {
-            return self.moe_layer_serial(layer, h, t_tokens);
-        }
-
-        // --- MoE path: overlapped, coalesced pipeline ------------------
-        let t_layer = std::time::Instant::now();
 
         // Phase 1: gate.  [B,S,M] -> [1,T,M] is a literal reshape; only
         // ln(h) and the router probabilities come back to the host (the
         // routing tables need them).
         let t0 = std::time::Instant::now();
         let gate = self.prog(&Manifest::key_gate(m, n_experts, t_tokens))?;
-        let shape: Vec<usize> = h
-            .array_shape()?
-            .dims()
-            .iter()
-            .map(|&d| d as usize)
-            .collect();
         let flat = h.reshape(&[1, t_tokens as i64, m as i64])?;
         let outs = gate.run_literal_refs(&[
             &flat,
@@ -400,26 +865,22 @@ impl EpEngine {
         self.metrics.observe("gate", t0.elapsed());
 
         let routing = Routing::top1(probs.as_f32()?, n_experts);
-        if let Some(stats) = self
-            .load_stats
-            .iter_mut()
-            .find(|s| s.layer == layer)
-        {
-            stats.record_assignments(routing.assignments());
+        if let Some(i) = self.stats_idx[layer] {
+            self.load_stats[i].record_assignments(routing.assignments());
         }
 
-        // Phase 2: coalesced dispatch — one ExpertFfnBatch per owning
-        // worker (replica 0 group), all of its expert blocks packed into a
-        // single payload whose ownership moves into the channel.
+        // Phase 2: coalesced dispatch — one tagged ExpertFfnBatch per
+        // owning worker (replica 0 group), all of its expert blocks packed
+        // into a single payload whose ownership moves into the channel.
         let t1 = std::time::Instant::now();
         let (ep_degree, owners): (usize, Vec<usize>) = {
             let lp = self.placement.layer(layer).unwrap();
             (lp.ep_degree, (0..n_experts).map(|e| lp.owner(e, 0)).collect())
         };
         let mut worker_experts =
-            std::mem::take(&mut self.scratch.worker_experts);
-        for v in &mut worker_experts {
-            v.clear();
+            std::mem::take(&mut self.scratch[slot].worker_experts);
+        for list in &mut worker_experts {
+            list.clear();
         }
         if worker_experts.len() < self.fabric.n_workers() {
             worker_experts.resize(self.fabric.n_workers(), Vec::new());
@@ -432,7 +893,7 @@ impl EpEngine {
         let ln_flat = ln_h.as_f32()?;
         self.exchange_seq += 1;
         let exchange_tag = self.exchange_seq;
-        let mut inflight = 0usize;
+        let mut outstanding = 0usize;
         for (w, experts) in worker_experts.iter().enumerate() {
             if experts.is_empty() {
                 continue;
@@ -453,7 +914,7 @@ impl EpEngine {
                     tag: exchange_tag,
                 },
             )?;
-            inflight += 1;
+            outstanding += 1;
         }
         self.metrics.observe("dispatch", t1.elapsed());
 
@@ -483,40 +944,103 @@ impl EpEngine {
         };
         // Combine prep: the residual stream, pulled to the host once (the
         // [1,T,M] reshape shares h's row-major element order).
-        let mut out_data: Vec<f32> = flat.to_vec()?;
+        let out_data: Vec<f32> = flat.to_vec()?;
         self.metrics.observe("leader_overlap", t2.elapsed());
 
-        // Phase 4: wait for the coalesced worker replies.
+        self.open_tags.push(exchange_tag);
+        Ok(InflightMoe {
+            layer,
+            dispatch_elapsed: t_layer.elapsed(),
+            state: InflightState::Pending(Box::new(PendingMoe {
+                slot,
+                shape,
+                routing,
+                outstanding,
+                tag: exchange_tag,
+                residual,
+                out_data,
+                worker_experts,
+                results: Vec::new(),
+                wait_metric,
+            })),
+        })
+    }
+
+    /// Opportunistically drain any already-arrived replies of an in-flight
+    /// exchange (non-blocking), so the eventual [`EpEngine::moe_finish`]
+    /// wait only covers work that is genuinely still outstanding.
+    pub fn poll_inflight(&mut self, inflight: &mut InflightMoe) -> Result<()> {
+        let layer = inflight.layer;
+        if let InflightState::Pending(p) = &mut inflight.state {
+            if p.outstanding > 0 {
+                let got = self.fabric.try_collect_ffn_batches(
+                    layer,
+                    p.tag,
+                    &self.open_tags,
+                )?;
+                p.outstanding -= got.len();
+                p.results.extend(got);
+            }
+        }
+        Ok(())
+    }
+
+    /// Split-phase MoE, phase 2 of 2: block on the remaining coalesced
+    /// replies of this exchange and combine (gate-scale, un-permute,
+    /// residual adds) in the same order as the serial path —
+    /// bit-identical logits by construction.
+    pub fn moe_finish(&mut self, inflight: InflightMoe) -> Result<xla::Literal> {
+        let InflightMoe { layer, dispatch_elapsed, state } = inflight;
+        let p = match state {
+            InflightState::Done(h) => return Ok(h),
+            InflightState::Pending(p) => p,
+        };
+        let m = self.cfg.d_model;
+
+        // Phase 4: wait for the coalesced worker replies still in flight
+        // (replies of the *other* open exchange get stashed, tag-keyed).
         let t3 = std::time::Instant::now();
-        let results =
-            self.fabric.collect_ffn_batches(inflight, layer, exchange_tag)?;
-        self.metrics.observe("expert_wait", t3.elapsed());
+        let mut results = p.results;
+        if p.outstanding > 0 {
+            results.extend(self.fabric.collect_ffn_batches(
+                p.outstanding,
+                layer,
+                p.tag,
+                &self.open_tags,
+            )?);
+        }
+        self.open_tags.retain(|&t| t != p.tag);
+        self.metrics.observe(p.wait_metric, t3.elapsed());
 
         // Phase 5: combine — gate-scale, un-permute (scratch buffer reused
         // across layers), then add the residual branch and the residual
         // stream in the same order as the serial path (bit-identical).
         let t4 = std::time::Instant::now();
-        let mut combined = std::mem::take(&mut self.scratch.combine);
+        let mut combined = std::mem::take(&mut self.scratch[p.slot].combine);
         {
             let packs: Vec<(&[(usize, usize)], &[f32])> = results
                 .iter()
                 .map(|r| Ok((r.experts.as_slice(), r.data.as_f32()?)))
                 .collect::<Result<_>>()?;
-            routing.combine_packed(&packs, m, &mut combined)?;
+            p.routing.combine_packed(&packs, m, &mut combined)?;
         }
-        if let Some(res) = &residual {
+        if let Some(res) = &p.residual {
             for (c, r) in combined.iter_mut().zip(res) {
                 *c += *r;
             }
         }
+        let mut out_data = p.out_data;
         for (o, c) in out_data.iter_mut().zip(&combined) {
             *o += *c;
         }
-        let out = HostTensor::f32(&shape, out_data).to_literal()?;
-        self.scratch.combine = combined;
-        self.scratch.worker_experts = worker_experts;
+        let out = HostTensor::f32(&p.shape, out_data).to_literal()?;
+        self.scratch[p.slot].combine = combined;
+        self.scratch[p.slot].worker_experts = p.worker_experts;
         self.metrics.observe("combine", t4.elapsed());
-        self.metrics.observe("moe_layer", t_layer.elapsed());
+        // Dispatch half + finish half: excludes whatever the pipeline
+        // interleaved between the two (the per-layer path has no gap).
+        self.metrics
+            .observe("moe_layer", dispatch_elapsed + t3.elapsed());
         Ok(out)
     }
 
@@ -524,12 +1048,11 @@ impl EpEngine {
     /// one message per expert → blocking collect → combine → residual
     /// branch, with the original literal→host→literal staging.  Kept
     /// verbatim as the before/after measurement baseline; must stay
-    /// bit-identical to the overlapped pipeline.
+    /// bit-identical to the split-phase pipeline.
     fn moe_layer_serial(
         &mut self,
         layer: usize,
         h: xla::Literal,
-        t_tokens: usize,
     ) -> Result<xla::Literal> {
         let (m, f) = (self.cfg.d_model, self.cfg.d_ff);
         let pre = format!("layer{layer}.");
@@ -537,8 +1060,9 @@ impl EpEngine {
         let t_layer = std::time::Instant::now();
 
         let t0 = std::time::Instant::now();
-        let gate = self.prog(&Manifest::key_gate(m, n_experts, t_tokens))?;
         let h_host = HostTensor::from_literal(&h)?;
+        let t_tokens = h_host.nelems() / m;
+        let gate = self.prog(&Manifest::key_gate(m, n_experts, t_tokens))?;
         let shape = h_host.shape.clone();
         let flat = HostTensor::f32(&[1, t_tokens, m], h_host.as_f32()?.to_vec())
             .to_literal()?;
@@ -553,12 +1077,8 @@ impl EpEngine {
         self.metrics.observe("gate", t0.elapsed());
 
         let routing = Routing::top1(probs.as_f32()?, n_experts);
-        if let Some(stats) = self
-            .load_stats
-            .iter_mut()
-            .find(|s| s.layer == layer)
-        {
-            stats.record_assignments(routing.assignments());
+        if let Some(i) = self.stats_idx[layer] {
+            self.load_stats[i].record_assignments(routing.assignments());
         }
 
         // Log the all-to-all schedule this exchange would use at scale.
@@ -655,21 +1175,63 @@ impl EpEngine {
         alltoall::plan(self.alltoall, topo, &bytes)
     }
 
-    fn lm_head(&mut self, last_h: Vec<f32>) -> Result<Vec<Vec<f32>>> {
-        let (v, m, b) = (self.cfg.vocab_size, self.cfg.d_model, self.batch);
-        let prog = self.prog(&Manifest::key_lm_head(v, m, b))?;
-        let h = HostTensor::f32(&[b, m], last_h).to_literal()?;
+    /// LM head over each lane's last real position.  `h` is
+    /// `[lanes, smax, M]`; the last-position rows are gathered **at the
+    /// literal level** by the `gather_last_*` AOT program (one `[lanes, M]`
+    /// transfer instead of pulling the whole activation); artifact sets
+    /// predating that program fall back to a host-side gather.
+    fn lm_head_last(
+        &mut self,
+        h: &xla::Literal,
+        lens: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        let (m, smax) = (self.cfg.d_model, self.cfg.max_seq);
+        let lanes = lens.len();
+        let key = Manifest::key_gather_last(m, lanes, smax);
+        let last = if self.manifest_keys.manifest.shared_program(&key).is_ok()
+        {
+            let gather = self.prog(&key)?;
+            let lens_lit = HostTensor::i32(
+                &[lanes],
+                lens.iter().map(|&l| l as i32).collect(),
+            )
+            .to_literal()?;
+            gather.run_literal_refs(&[h, &lens_lit])?.remove(0)
+        } else {
+            let hd: Vec<f32> = h.to_vec()?;
+            let mut last = vec![0f32; lanes * m];
+            for lane in 0..lanes {
+                let p = lens[lane].max(1) - 1;
+                let off = (lane * smax + p) * m;
+                last[lane * m..(lane + 1) * m]
+                    .copy_from_slice(&hd[off..off + m]);
+            }
+            HostTensor::f32(&[lanes, m], last).to_literal()?
+        };
+        self.lm_head_rows(&last, lanes)
+    }
+
+    /// LM head over `[lanes, M]` hidden rows, fed straight from the
+    /// literal; returns one logits row per lane.
+    fn lm_head_rows(
+        &mut self,
+        h: &xla::Literal,
+        lanes: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
+        let prog = self.prog(&Manifest::key_lm_head(v, m, lanes))?;
         let out = prog
             .run_literal_refs(&[
-                &h,
+                h,
                 self.p("lnf.g"),
                 self.p("lnf.b"),
                 self.p("tok_emb"),
             ])?
             .remove(0);
-        let logits = HostTensor::from_literal(&out)?;
-        let data = logits.as_f32()?;
-        Ok((0..b).map(|lane| data[lane * v..(lane + 1) * v].to_vec()).collect())
+        let data: Vec<f32> = out.to_vec()?;
+        Ok((0..lanes)
+            .map(|lane| data[lane * v..(lane + 1) * v].to_vec())
+            .collect())
     }
 
     pub fn traffic(&self) -> &crate::fabric::Traffic {
@@ -679,6 +1241,43 @@ impl EpEngine {
     pub fn placement(&self) -> &Placement {
         &self.placement
     }
+}
+
+/// True if every AOT program the pipelined path needs at microbatch size
+/// `bh` exists in the manifest (prefill and decode shapes).  Evaluated
+/// once at engine construction — the manifest never changes afterwards.
+fn half_shapes_available(
+    manifest: &Manifest,
+    cfg: &ModelConfig,
+    bh: usize,
+) -> bool {
+    let (v, m, hh, f, smax) = (
+        cfg.vocab_size,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.d_ff,
+        cfg.max_seq,
+    );
+    let mut keys = vec![
+        Manifest::key_embed(v, m, bh, smax),
+        Manifest::key_embed(v, m, bh, 1),
+        Manifest::key_attn_prefill(m, hh, bh, smax),
+        Manifest::key_attn_decode(m, hh, bh, smax),
+        Manifest::key_lm_head(v, m, bh),
+    ];
+    let has_dense = cfg.experts_schedule.iter().any(|&e| e == 0);
+    for t in [bh, bh * smax] {
+        for (_, e) in cfg.moe_layers() {
+            keys.push(Manifest::key_gate(m, e, t));
+        }
+        if has_dense {
+            keys.push(Manifest::key_dense_ffn(m, f, t));
+        }
+        if cfg.residual {
+            keys.push(Manifest::key_residual_branch(m, f, t));
+        }
+    }
+    keys.iter().all(|k| manifest.shared_program(k).is_ok())
 }
 
 /// Slice expert `e`'s weights out of the stacked parameter tensors

@@ -18,4 +18,4 @@ pub mod engine;
 pub mod ep;
 
 pub use engine::Engine;
-pub use ep::EpEngine;
+pub use ep::{EpEngine, InflightMoe};

@@ -24,7 +24,7 @@ impl Args {
                     a.flags.insert(k.to_string(), v.to_string());
                 } else if it
                     .peek()
-                    .map_or(false, |n| !n.starts_with("--"))
+                    .is_some_and(|n| !n.starts_with("--"))
                 {
                     let v = it.next().unwrap();
                     a.flags.insert(stripped.to_string(), v);

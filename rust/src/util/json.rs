@@ -183,7 +183,7 @@ impl<'a> Parser<'a> {
         }
         while self
             .peek()
-            .map_or(false, |c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
         {
             self.i += 1;
         }

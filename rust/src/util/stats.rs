@@ -140,6 +140,12 @@ impl LatencyHistogram {
         self.sum_ns as f64 / self.count as f64
     }
 
+    /// Exact sum of all recorded values (ns) — the "total time spent in
+    /// this phase" quantity the exposed-wait comparisons use.
+    pub fn total_ns(&self) -> u128 {
+        self.sum_ns
+    }
+
     pub fn max_ns(&self) -> u64 {
         self.max_ns
     }

@@ -193,7 +193,7 @@ fn coalesced_batch_matches_per_expert_path_with_fewer_messages() {
             )
             .unwrap();
     }
-    let results = fabric.collect_ffn_batches(2, 0, 7).unwrap();
+    let results = fabric.collect_ffn_batches(2, 0, 7, &[]).unwrap();
     assert_eq!(
         fabric.traffic.messages.load(Ordering::Relaxed) - msgs1,
         2,
@@ -239,6 +239,9 @@ fn ep_engine_sends_one_message_per_worker_per_moe_layer() {
     )
     .unwrap();
     ep.set_serial_moe(false);
+    // Pin the per-layer coalesced path: the pipelined path legitimately
+    // sends one batch per worker per *microbatch* (up to 2x per layer).
+    ep.set_pipeline(false);
     let tokens = mk_tokens(&ep);
     ep.forward_prefill(&tokens, &vec![8; batch]).unwrap();
     let overlap_msgs = ep.traffic().messages.load(Ordering::Relaxed);
@@ -262,6 +265,89 @@ fn ep_engine_sends_one_message_per_worker_per_moe_layer() {
         serial_msgs > overlap_msgs,
         "serial {serial_msgs} vs coalesced {overlap_msgs}"
     );
+}
+
+/// Two tagged exchange generations in flight at once (the cross-layer
+/// pipeline's steady state): tag-keyed collection must hand each
+/// generation exactly its own replies — never cross-combining — while a
+/// reply whose tag is neither collected nor open still fails loudly.
+#[test]
+fn concurrent_tagged_exchanges_collect_by_tag() {
+    let Some(m) = manifest() else { return };
+    let fabric = Fabric::spawn(2, worker_programs(&m)).unwrap();
+    let (mdim, f) = (128usize, 512usize);
+    // Distinct weights per (layer, expert) so any cross-combination of the
+    // two generations shows up as a value mismatch.
+    fabric.load_expert(0, 0, 0, diag_weights(mdim, f, 0.5, 2.0)).unwrap();
+    fabric.load_expert(1, 1, 1, diag_weights(mdim, f, 0.25, 4.0)).unwrap();
+
+    let block_a: Vec<f32> =
+        (0..3 * mdim).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+    let block_b: Vec<f32> =
+        (0..5 * mdim).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+
+    // Reference outputs via the per-expert path.
+    fabric
+        .dispatch_ffn(0, 0, 0, HostTensor::f32(&[3, mdim], block_a.clone()), 1)
+        .unwrap();
+    fabric
+        .dispatch_ffn(1, 1, 1, HostTensor::f32(&[5, mdim], block_b.clone()), 2)
+        .unwrap();
+    let mut want_a = Vec::new();
+    let mut want_b = Vec::new();
+    for (_, e, out, _) in fabric.collect_ffn(2).unwrap() {
+        if e == 0 {
+            want_a = out.as_f32().unwrap().to_vec();
+        } else {
+            want_b = out.as_f32().unwrap().to_vec();
+        }
+    }
+
+    // Both generations in flight, then collect the *second* one first:
+    // generation 21's reply must be stashed (it is open), not combined.
+    let mk_batch = |layer: usize, e: usize, block: &[f32], tag: u64| {
+        let count = block.len() / mdim;
+        ExpertFfnBatch {
+            layer,
+            experts: vec![(e, count)],
+            data: HostTensor::f32(&[count, mdim], block.to_vec()),
+            tag,
+        }
+    };
+    fabric.dispatch_ffn_batch(0, mk_batch(0, 0, &block_a, 21)).unwrap();
+    fabric.dispatch_ffn_batch(1, mk_batch(1, 1, &block_b, 22)).unwrap();
+    let rb = fabric.collect_ffn_batches(1, 1, 22, &[21]).unwrap();
+    assert_eq!((rb[0].layer, rb[0].tag), (1, 22));
+    assert_eq!(rb[0].data.as_f32().unwrap(), want_b.as_slice());
+    // Draining the first generation picks the stashed (or in-channel)
+    // reply of tag 21 and nothing else.
+    let ra = fabric.collect_ffn_batches(1, 0, 21, &[]).unwrap();
+    assert_eq!((ra[0].layer, ra[0].tag), (0, 21));
+    assert_eq!(ra[0].data.as_f32().unwrap(), want_a.as_slice());
+
+    // try_collect: non-blocking drain — empty results until the reply
+    // lands, then exactly one.
+    fabric.dispatch_ffn_batch(0, mk_batch(0, 0, &block_a, 30)).unwrap();
+    let mut got = Vec::new();
+    for _ in 0..2000 {
+        got.extend(fabric.try_collect_ffn_batches(0, 30, &[]).unwrap());
+        if !got.is_empty() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].data.as_f32().unwrap(), want_a.as_slice());
+
+    // A reply whose tag is neither collected nor open is stale: loud
+    // error, never a silent combine.
+    fabric.dispatch_ffn_batch(0, mk_batch(0, 0, &block_a, 31)).unwrap();
+    let err = fabric
+        .collect_ffn_batches(1, 0, 99, &[])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("stale"), "{err}");
+    fabric.shutdown();
 }
 
 #[test]

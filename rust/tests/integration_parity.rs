@@ -163,6 +163,9 @@ fn bitwise_serial_vs_overlap(model: &str, workers: usize) {
         EpEngine::new(&m, model, workers, AllToAllKind::Hierarchical, batch)
             .unwrap();
     overlap.set_serial_moe(false);
+    // Pin the per-layer overlapped path: the pipelined path has its own
+    // three-way bitwise test below.
+    overlap.set_pipeline(false);
     let mut serial =
         EpEngine::new(&m, model, workers, AllToAllKind::Hierarchical, batch)
             .unwrap();
@@ -189,6 +192,85 @@ fn bitwise_serial_vs_overlap(model: &str, workers: usize) {
             *p += 1;
         }
     }
+}
+
+/// The microbatch-interleaved pipeline must be **bit-identical** to both
+/// per-layer paths: the same tokens route to the same experts with the
+/// same slot order inside each microbatch, every program is per-lane /
+/// per-row independent, and the host-side combine runs in the same order —
+/// only the schedule (and the program batch dimension) differs.  Batch 8
+/// so the half-batch (b=4) program shapes exist in every artifact set.
+fn bitwise_three_way(model: &str, workers: usize) {
+    let Some(m) = manifest() else { return };
+    let batch = 8usize;
+    let cfg = m.model(model).unwrap().config.clone();
+    let smax = cfg.max_seq;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+
+    let mk = |serial: bool, pipeline: bool| {
+        let mut e =
+            EpEngine::new(&m, model, workers, AllToAllKind::Hierarchical, batch)
+                .unwrap();
+        e.set_serial_moe(serial);
+        e.set_pipeline(pipeline);
+        e
+    };
+    let mut serial = mk(true, false);
+    let mut overlap = mk(false, false);
+    let mut pipelined = mk(false, true);
+    assert_eq!(overlap.microbatches(), 1);
+    assert_eq!(
+        pipelined.microbatches(),
+        2,
+        "{model}: pipelined path unavailable (missing half-batch programs?)"
+    );
+
+    let rs = serial.forward_prefill(&tokens, &lens).unwrap();
+    let ro = overlap.forward_prefill(&tokens, &lens).unwrap();
+    let rp = pipelined.forward_prefill(&tokens, &lens).unwrap();
+    assert_eq!(ro, rs, "{model}: overlapped prefill != serial");
+    assert_eq!(rp, rs, "{model}: pipelined prefill != serial");
+
+    let mut tok: Vec<i32> = rs.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    for step in 0..3 {
+        let ds = serial.forward_decode(&tok, &pos).unwrap();
+        let dov = overlap.forward_decode(&tok, &pos).unwrap();
+        let dp = pipelined.forward_decode(&tok, &pos).unwrap();
+        assert_eq!(dov, ds, "{model}: overlapped decode step {step}");
+        assert_eq!(dp, ds, "{model}: pipelined decode step {step}");
+        tok = ds.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    // The pipeline actually hid waits behind leader compute.
+    assert!(pipelined.metrics.samples("attn_overlap") > 0);
+    assert!(pipelined.metrics.samples("pipeline_bubble") > 0);
+    assert_eq!(pipelined.metrics.samples("expert_wait"), 0);
+}
+
+#[test]
+fn pipelined_bitwise_identical_moe() {
+    bitwise_three_way("moe-s-8", 4);
+}
+
+#[test]
+fn pipelined_bitwise_identical_prmoe_residual() {
+    // PR-MoE: the pipeline also crosses dense layers and the overlapped
+    // residual branch.
+    bitwise_three_way("prmoe-s", 4);
 }
 
 #[test]

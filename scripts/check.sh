@@ -1,12 +1,13 @@
 #!/usr/bin/env bash
-# Tier-1 gate: release build, tests, formatting.  Run from anywhere; the
-# script cd's to the repo root.  CI and pre-PR checks should run exactly
-# this (ROADMAP.md "Tier-1 verify").
+# Tier-1 gate: release build, tests, lints, formatting.  Run from anywhere;
+# the script cd's to the repo root.  CI (.github/workflows/ci.yml) and
+# pre-PR checks should run exactly this (ROADMAP.md "Tier-1 verify").
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
+cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 
 echo "tier-1 gate: OK"
