@@ -15,6 +15,12 @@
 //! messages per layer.  The pipeline's acceptance bar is its summed
 //! exposed wait landing below the overlapped path's `expert_wait`.
 //!
+//! Part 3 is the continuous-batching study: the scheduler-backed EP
+//! engine under an arrival-driven (Poisson open-loop) workload, overlap
+//! vs pipelined — TTFT percentiles, aggregate tokens/s, mean lane
+//! occupancy (busy lanes per decode step), and the exposed
+//! `pipeline_bubble` under load.
+//!
 //! Everything is also emitted to `BENCH_e2e.json` at the repo root so the
 //! perf trajectory is tracked across PRs.
 
@@ -25,7 +31,7 @@ use ds_moe::config::{AllToAllKind, ServingConfig};
 use ds_moe::data::{Corpus, CorpusConfig};
 use ds_moe::metrics::Metrics;
 use ds_moe::runtime::Manifest;
-use ds_moe::server::{Engine, EpEngine};
+use ds_moe::server::{ttft_percentile, Engine, EpEngine, Scheduler};
 use ds_moe::util::stats::{argmax, fmt_ns};
 use ds_moe::util::table::{f1, f2, Table};
 
@@ -120,16 +126,16 @@ fn main() {
     for model in ["dense-s", "dense-m", "dense-l", "moe-s-8", "prmoe-s",
                   "mos-s"] {
         for &n_requests in &[8usize, 24] {
-            let mut engine = Engine::new(
-                &manifest,
-                ServingConfig {
-                    model: model.into(),
-                    max_new_tokens: 8,
-                    batch_timeout: std::time::Duration::from_millis(1),
-                    ..Default::default()
-                },
-            )
-            .expect(model);
+            let serving = ServingConfig {
+                model: model.into(),
+                max_new_tokens: 8,
+                batch_timeout: std::time::Duration::from_millis(1),
+                ..Default::default()
+            };
+            let mut engine = Scheduler::new(
+                Engine::new(&manifest, serving.clone()).expect(model),
+                serving,
+            );
             // warmup: compile everything
             engine.submit(corpus.prompt(0, 8), Some(2)).unwrap();
             engine.run_until_idle().unwrap();
@@ -142,16 +148,11 @@ fn main() {
             let wall = t0.elapsed();
             let tokens: usize =
                 responses.iter().map(|r| r.tokens.len()).sum();
-            let mut ttfts: Vec<u64> = responses
-                .iter()
-                .map(|r| r.ttft.as_nanos() as u64)
-                .collect();
-            ttfts.sort();
             let row = ServingRow {
                 model: model.to_string(),
                 requests: n_requests,
                 tok_per_s: tokens as f64 / wall.as_secs_f64(),
-                ttft_p50_ns: ttfts[ttfts.len() / 2],
+                ttft_p50_ns: ttft_percentile(&responses, 50),
                 decode_p50_ns: engine
                     .metrics
                     .percentile_ns("decode_step", 50.0),
@@ -219,7 +220,119 @@ fn main() {
     pt.print();
     let _ = pt.save_csv("e2e_moe_pipeline");
 
-    write_bench_json(&rows, &studies);
+    // --- continuous batching on the EP engine: arrival-driven load -------
+    let mut cb_rows = Vec::new();
+    let mut ct = Table::new(
+        "EP continuous batching (scheduler-backed, Poisson arrivals)",
+        &["model", "path", "req", "tok/s", "TTFT p50", "TTFT p99",
+          "occupancy %", "pipeline bubble"],
+    );
+    for (model, workers) in [("moe-s-8", 4usize), ("prmoe-s", 4)] {
+        for pipelined in [false, true] {
+            let Some(row) = continuous_batching_study(
+                &manifest, &corpus, model, workers, pipelined,
+            ) else {
+                continue;
+            };
+            ct.row(&[
+                row.model.clone(),
+                row.path.to_string(),
+                row.requests.to_string(),
+                f1(row.tok_per_s),
+                fmt_ns(row.ttft_p50_ns),
+                fmt_ns(row.ttft_p99_ns),
+                f1(100.0 * row.occupancy),
+                fmt_ns(row.pipeline_bubble_ns),
+            ]);
+            cb_rows.push(row);
+        }
+    }
+    ct.note("arrival-driven admission through Scheduler<EpEngine>: \
+             requests splice into free decode lanes (balanced across the \
+             two pipeline microbatch groups), dead lanes are masked out \
+             of expert dispatch; occupancy = mean busy-lane fraction per \
+             decode step");
+    ct.print();
+    let _ = ct.save_csv("e2e_continuous_batching");
+
+    write_bench_json(&rows, &studies, &cb_rows);
+}
+
+struct CbRow {
+    model: String,
+    workers: usize,
+    path: &'static str,
+    requests: usize,
+    rate: f64,
+    tok_per_s: f64,
+    ttft_p50_ns: u64,
+    ttft_p99_ns: u64,
+    /// Mean busy-lane fraction per decode step.
+    occupancy: f64,
+    pipeline_bubble_ns: u64,
+    expert_wait_ns: u64,
+    decode_steps: u64,
+}
+
+/// Drive the scheduler-backed EP engine with a Poisson open-loop arrival
+/// stream and collect the continuous-batching serving metrics.
+fn continuous_batching_study(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    model: &str,
+    workers: usize,
+    pipelined: bool,
+) -> Option<CbRow> {
+    let batch = 8usize;
+    let n_requests = 24usize;
+    let rate = 200.0; // req/s: enough to overlap admissions with decode
+    let max_new = 6usize;
+    let mut ep = EpEngine::new(
+        manifest,
+        model,
+        workers,
+        AllToAllKind::Hierarchical,
+        batch,
+    )
+    .ok()?;
+    ep.set_serial_moe(false);
+    ep.set_pipeline(pipelined);
+    let serving = ServingConfig {
+        model: model.into(),
+        workers,
+        max_batch: batch,
+        max_new_tokens: max_new,
+        batch_timeout: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(ep, serving);
+
+    // Warmup: compile every admission-prefill and decode shape, then
+    // measure steady state only.
+    for i in 0..batch {
+        sched.submit(corpus.prompt(i, 8), Some(2)).ok()?;
+    }
+    sched.run_until_idle().ok()?;
+    sched.reset_metrics();
+
+    let (responses, wall) = sched
+        .run_poisson(n_requests, rate, max_new, 29, |i| corpus.prompt(i, 8))
+        .ok()?;
+    let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    Some(CbRow {
+        model: model.to_string(),
+        workers,
+        path: if pipelined { "pipelined" } else { "overlap" },
+        requests: responses.len(),
+        rate,
+        tok_per_s: tokens as f64 / wall,
+        ttft_p50_ns: ttft_percentile(&responses, 50),
+        ttft_p99_ns: ttft_percentile(&responses, 99),
+        occupancy: sched.metrics.value_mean("decode_utilization"),
+        pipeline_bubble_ns: sched.metrics.sum_ns("pipeline_bubble"),
+        expert_wait_ns: sched.metrics.sum_ns("expert_wait"),
+        decode_steps: sched.metrics.counter("decode_steps"),
+    })
 }
 
 /// Run the EP engine on one model with the serialized, overlapped and
@@ -332,9 +445,14 @@ fn pipeline_study(
     })
 }
 
-/// Emit `BENCH_e2e.json` at the repo root: the serving sweep plus the MoE
-/// pipeline study, so future PRs have a machine-readable perf baseline.
-fn write_bench_json(rows: &[ServingRow], studies: &[PipelineStudy]) {
+/// Emit `BENCH_e2e.json` at the repo root: the serving sweep, the MoE
+/// pipeline study, and the continuous-batching study, so future PRs have
+/// a machine-readable perf baseline.
+fn write_bench_json(
+    rows: &[ServingRow],
+    studies: &[PipelineStudy],
+    cb_rows: &[CbRow],
+) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"e2e_serving\",\n  \"serving\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -396,6 +514,31 @@ fn write_bench_json(rows: &[ServingRow], studies: &[PipelineStudy]) {
             side_json(st.side(MoePath::Overlap)),
             side_json(st.side(MoePath::Pipelined)),
             if i + 1 == studies.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ],\n  \"continuous_batching\": [\n");
+    for (i, r) in cb_rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"model\": \"{}\", \"workers\": {}, \"path\": \"{}\", \
+             \"requests\": {}, \"rate_req_s\": {:.1}, \
+             \"tok_per_s\": {:.2}, \"ttft_p50_ns\": {}, \
+             \"ttft_p99_ns\": {}, \"decode_utilization\": {:.4}, \
+             \"decode_steps\": {}, \"pipeline_bubble_ns\": {}, \
+             \"expert_wait_ns\": {}}}{}\n",
+            r.model,
+            r.workers,
+            r.path,
+            r.requests,
+            r.rate,
+            r.tok_per_s,
+            r.ttft_p50_ns,
+            r.ttft_p99_ns,
+            r.occupancy,
+            r.decode_steps,
+            r.pipeline_bubble_ns,
+            r.expert_wait_ns,
+            if i + 1 == cb_rows.len() { "" } else { "," }
         );
     }
     s.push_str("  ]\n}\n");

@@ -8,7 +8,7 @@
 use ds_moe::config::ServingConfig;
 use ds_moe::data::{Corpus, CorpusConfig};
 use ds_moe::runtime::Manifest;
-use ds_moe::server::Engine;
+use ds_moe::server::{Engine, Scheduler};
 use ds_moe::tokenizer::Tokenizer;
 
 fn main() -> anyhow::Result<()> {
@@ -20,16 +20,16 @@ fn main() -> anyhow::Result<()> {
         manifest.shared.len()
     );
 
-    // 2. Build a serving engine for the standard-MoE tiny model.
-    let mut engine = Engine::new(
-        &manifest,
-        ServingConfig {
-            model: "moe-s-8".into(),
-            max_new_tokens: 12,
-            ..Default::default()
-        },
-    )?;
-    let cfg = engine.model_config().clone();
+    // 2. Build the serving stack for the standard-MoE tiny model: the
+    //    continuous-batching scheduler over the monolithic backend.
+    let serving = ServingConfig {
+        model: "moe-s-8".into(),
+        max_new_tokens: 12,
+        ..Default::default()
+    };
+    let mut engine =
+        Scheduler::new(Engine::new(&manifest, serving.clone())?, serving);
+    let cfg = engine.model.model_config().clone();
     println!(
         "serving {} — {} params, experts per layer {:?}",
         cfg.name, cfg.num_params, cfg.experts_schedule

@@ -1,9 +1,10 @@
 //! Serving study at testbed scale — the end-to-end validation driver for
-//! the serving half (§5.5): load a small real model (optionally a trained
-//! checkpoint), serve Poisson-arriving batched requests through the full
-//! coordinator stack, and report latency percentiles and throughput for
-//! both the monolithic single-device engine and the disaggregated
-//! expert-parallel engine across worker counts and all-to-all schedules.
+//! the serving half (§5.5): serve Poisson-arriving requests through the
+//! engine-agnostic continuous-batching scheduler
+//! (`Scheduler<M: ForwardModel>`) over **both** backends — the monolithic
+//! single-device engine and the disaggregated expert-parallel engine
+//! across worker counts and all-to-all schedules — and report latency
+//! percentiles, throughput, and lane occupancy.
 //!
 //! ```sh
 //! cargo run --release --example serve_moe -- --requests 32 --rate 50
@@ -12,9 +13,8 @@
 use ds_moe::config::{AllToAllKind, ServingConfig};
 use ds_moe::data::{Corpus, CorpusConfig};
 use ds_moe::runtime::Manifest;
-use ds_moe::server::{Engine, EpEngine};
+use ds_moe::server::{ttft_percentile, Engine, EpEngine, Scheduler};
 use ds_moe::util::args::Args;
-use ds_moe::util::rng::Rng;
 use ds_moe::util::stats::fmt_ns;
 use ds_moe::util::table::{f1, Table};
 
@@ -29,89 +29,58 @@ fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(args.get("artifacts", "artifacts", ""))?;
     let corpus = Corpus::generate(CorpusConfig::default());
 
-    // ---- monolithic engine under a Poisson open-loop workload -------------
-    println!("== monolithic engine: {model}, Poisson {rate} req/s ==");
-    let mut engine = Engine::new(
-        &manifest,
-        ServingConfig {
-            model: model.clone(),
-            max_new_tokens: max_new,
-            ..Default::default()
-        },
-    )?;
-    let mut rng = Rng::new(7);
-    let mut arrivals: Vec<f64> = Vec::new();
-    let mut t_acc = 0.0;
-    for _ in 0..n_requests {
-        t_acc += rng.exponential(rate);
-        arrivals.push(t_acc);
-    }
-    let t0 = std::time::Instant::now();
-    let mut submitted = 0usize;
-    while submitted < n_requests || engine.active_count() > 0
-        || engine.router.queue_len() > 0
-    {
-        let now = t0.elapsed().as_secs_f64();
-        while submitted < n_requests && arrivals[submitted] <= now {
-            engine.submit(corpus.prompt(submitted, 8), Some(max_new))?;
-            submitted += 1;
-        }
-        if !engine.step()? {
-            std::thread::sleep(std::time::Duration::from_micros(200));
-        }
-    }
-    let wall = t0.elapsed();
-    let responses = engine.take_done();
+    // ---- monolithic backend under a Poisson open-loop workload ------------
+    println!("== scheduler/monolithic: {model}, Poisson {rate} req/s ==");
+    let serving = ServingConfig {
+        model: model.clone(),
+        max_new_tokens: max_new,
+        ..Default::default()
+    };
+    let engine = Engine::new(&manifest, serving.clone())?;
+    let mut sched = Scheduler::new(engine, serving);
+    let (responses, wall) = sched
+        .run_poisson(n_requests, rate, max_new, 7, |i| corpus.prompt(i, 8))?;
     let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
-    let mut ttfts: Vec<u64> =
-        responses.iter().map(|r| r.ttft.as_nanos() as u64).collect();
-    ttfts.sort();
     println!(
         "  {} responses, {:.1} tok/s, TTFT p50 {} p99 {}",
         responses.len(),
-        total_tokens as f64 / wall.as_secs_f64(),
-        fmt_ns(ttfts[ttfts.len() / 2]),
-        fmt_ns(ttfts[ttfts.len() * 99 / 100]),
+        total_tokens as f64 / wall,
+        fmt_ns(ttft_percentile(&responses, 50)),
+        fmt_ns(ttft_percentile(&responses, 99)),
     );
     println!(
-        "  decode_step p50 {}  prefill p50 {}",
-        fmt_ns(engine.metrics.percentile_ns("decode_step", 50.0)),
-        fmt_ns(engine.metrics.percentile_ns("prefill", 50.0)),
+        "  decode_step p50 {}  prefill p50 {}  occupancy {:.1}%",
+        fmt_ns(sched.metrics.percentile_ns("decode_step", 50.0)),
+        fmt_ns(sched.metrics.percentile_ns("prefill", 50.0)),
+        100.0 * sched.metrics.value_mean("decode_utilization"),
     );
 
-    // ---- expert-parallel engine across workers + schedules ----------------
+    // ---- expert-parallel backend across workers + schedules ---------------
     let mut t = Table::new(
-        "EP engine: decode throughput by workers x all-to-all schedule",
-        &["workers", "schedule", "prefill ms", "decode ms/step",
-          "agg tok/s", "a2a bytes", "max imbalance"],
+        "scheduler/EP: continuous batching by workers x all-to-all schedule",
+        &["workers", "schedule", "tok/s", "TTFT p50", "occupancy %",
+          "a2a bytes", "max imbalance"],
     );
     let batch = 8usize;
-    let steps = 8usize;
     for &w in &workers_list {
         for kind in [AllToAllKind::Naive, AllToAllKind::Hierarchical] {
-            let mut ep = EpEngine::new(&manifest, &model, w, kind, batch)?;
-            let smax = ep.cfg.max_seq;
-            let mut tokens = vec![0i32; batch * smax];
-            for b in 0..batch {
-                let p = corpus.prompt(b, 8);
-                tokens[b * smax..b * smax + 8].copy_from_slice(&p);
-            }
-            let tp = std::time::Instant::now();
-            let logits = ep.forward_prefill(&tokens, &vec![8; batch])?;
-            let prefill_ms = tp.elapsed().as_secs_f64() * 1e3;
-            let mut last: Vec<i32> =
-                logits.iter().map(|r| argmax(r)).collect();
-            let mut pos = vec![8i32; batch];
-            let td = std::time::Instant::now();
-            for _ in 0..steps {
-                let logits = ep.forward_decode(&last, &pos)?;
-                last = logits.iter().map(|r| argmax(r)).collect();
-                for p in &mut pos {
-                    *p += 1;
-                }
-            }
-            let decode_s = td.elapsed().as_secs_f64();
-            let imb = ep
+            let ep = EpEngine::new(&manifest, &model, w, kind, batch)?;
+            let serving = ServingConfig {
+                model: model.clone(),
+                workers: w,
+                max_batch: batch,
+                max_new_tokens: max_new,
+                alltoall: kind,
+                ..Default::default()
+            };
+            let mut sched = Scheduler::new(ep, serving);
+            let (responses, wall) = sched.run_poisson(
+                n_requests, rate, max_new, 7, |i| corpus.prompt(i, 8),
+            )?;
+            let tokens: usize =
+                responses.iter().map(|r| r.tokens.len()).sum();
+            let imb = sched
+                .model
                 .load_stats
                 .iter()
                 .map(|s| s.imbalance())
@@ -119,10 +88,10 @@ fn main() -> anyhow::Result<()> {
             t.row(&[
                 w.to_string(),
                 format!("{kind:?}"),
-                f1(prefill_ms),
-                f1(decode_s / steps as f64 * 1e3),
-                f1(batch as f64 * steps as f64 / decode_s),
-                ep.metrics.counter("alltoall_bytes").to_string(),
+                f1(tokens as f64 / wall),
+                fmt_ns(ttft_percentile(&responses, 50)),
+                f1(100.0 * sched.metrics.value_mean("decode_utilization")),
+                sched.metrics.counter("alltoall_bytes").to_string(),
                 f1(imb),
             ]);
         }
@@ -132,14 +101,4 @@ fn main() -> anyhow::Result<()> {
     t.print();
     t.save_csv("serve_moe_ep_study")?;
     Ok(())
-}
-
-fn argmax(row: &[f32]) -> i32 {
-    let mut best = 0;
-    for (i, &v) in row.iter().enumerate() {
-        if v > row[best] {
-            best = i;
-        }
-    }
-    best as i32
 }

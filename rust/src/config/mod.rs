@@ -120,6 +120,10 @@ pub struct ServingConfig {
     pub alltoall: AllToAllKind,
     /// Greedy (argmax) vs temperature sampling.
     pub temperature: f32,
+    /// Seed for temperature sampling (`util::sampling::Sampler`), so
+    /// sampled generations are reproducible-but-configurable.  Greedy
+    /// decoding ignores it.
+    pub seed: u64,
 }
 
 impl Default for ServingConfig {
@@ -132,6 +136,7 @@ impl Default for ServingConfig {
             max_new_tokens: 16,
             alltoall: AllToAllKind::Hierarchical,
             temperature: 0.0,
+            seed: 0xD5, // the old Engine's hard-coded RNG seed
         }
     }
 }

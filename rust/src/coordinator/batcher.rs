@@ -4,7 +4,9 @@
 //! `PREFILL_BATCH_SIZES` / `DECODE_BATCH_SIZES`), so batching is a rounding
 //! problem: given `waiting` requests, `free` decode lanes, and the oldest
 //! request's wait time, choose a compiled prefill size now or keep waiting
-//! for a fuller batch.  Policy (classic size-or-timeout):
+//! for a fuller batch.  Owned by the engine-agnostic
+//! `server::Scheduler` and fed each backend's compiled sizes
+//! (`ForwardModel::prefill_sizes`).  Policy (classic size-or-timeout):
 //!
 //! * flush when `waiting >= max(compiled sizes) that fits free lanes`, or
 //! * flush whatever fits once the oldest request has waited `timeout`.
@@ -51,7 +53,7 @@ impl BatchPolicy {
 
     /// Time remaining until the oldest waiting request hits the flush
     /// timeout (`Duration::ZERO` once elapsed); `None` when nothing waits.
-    /// `Engine::run_until_idle` sleeps only this long instead of a full
+    /// `Scheduler::run_until_idle` sleeps only this long instead of a full
     /// extra `timeout`, so partial batches flush on their deadline rather
     /// than up to one timeout late (TTFT, low-traffic path).
     pub fn time_to_flush(

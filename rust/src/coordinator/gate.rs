@@ -13,11 +13,16 @@
 
 use crate::moe;
 
+/// Sentinel expert id for a token masked out of routing (a dead decode
+/// lane or prefill padding): it gets no expert, no slot, and no dispatch —
+/// a dead lane must send no expert traffic.
+pub const MASKED: usize = usize::MAX;
+
 /// Routing decision for a token batch at one MoE layer.
 #[derive(Debug, Clone)]
 pub struct Routing {
     pub n_experts: usize,
-    /// Per token: selected expert.
+    /// Per token: selected expert ([`MASKED`] = not routed).
     pub expert: Vec<usize>,
     /// Per token: gate probability of the selected expert.
     pub prob: Vec<f32>,
@@ -34,13 +39,37 @@ impl Routing {
     /// gets a slot; `counts[e]` tells the dispatcher how large each expert's
     /// block really is before padding to a compiled size.
     pub fn top1(probs: &[f32], n_experts: usize) -> Routing {
+        Self::top1_masked(probs, n_experts, None)
+    }
+
+    /// [`Routing::top1`] with an optional per-token liveness mask: tokens
+    /// with `mask[t] == false` are assigned [`MASKED`] — they take no slot,
+    /// count toward no expert, and are skipped by pack/combine — so free
+    /// decode lanes and prefill padding generate no expert traffic.  Live
+    /// tokens route exactly as in the unmasked case (per-token top-1 is
+    /// independent across tokens), which keeps the continuous-batching
+    /// path bit-identical to the fixed-lane path for live lanes.
+    pub fn top1_masked(
+        probs: &[f32],
+        n_experts: usize,
+        mask: Option<&[bool]>,
+    ) -> Routing {
         let routed = moe::top1_route(probs, n_experts);
+        if let Some(mask) = mask {
+            assert_eq!(routed.len(), mask.len(), "mask length != token count");
+        }
         let t = routed.len();
         let mut expert = Vec::with_capacity(t);
         let mut prob = Vec::with_capacity(t);
         let mut slot = Vec::with_capacity(t);
         let mut counts = vec![0usize; n_experts];
-        for (e, p) in routed {
+        for (tok, (e, p)) in routed.into_iter().enumerate() {
+            if mask.is_some_and(|m| !m[tok]) {
+                expert.push(MASKED);
+                prob.push(0.0);
+                slot.push(0);
+                continue;
+            }
             expert.push(e);
             prob.push(p);
             slot.push(counts[e]); // exclusive running count = queue position
@@ -76,6 +105,9 @@ impl Routing {
         let mut out = vec![0f32; t * m];
         for tok in 0..t {
             let e = self.expert[tok];
+            if e == MASKED {
+                continue; // dead lane: zero expert contribution
+            }
             let s = self.slot[tok];
             let block = &expert_outputs[e];
             debug_assert!(s * m + m <= block.len());
@@ -114,7 +146,7 @@ impl Routing {
             acc += self.counts[e];
         }
         for (t, &te) in self.expert.iter().enumerate() {
-            if base[te] != usize::MAX {
+            if te != MASKED && base[te] != usize::MAX {
                 let row = base[te] + self.slot[t];
                 out[row * m..(row + 1) * m]
                     .copy_from_slice(&ln_h[t * m..(t + 1) * m]);
@@ -150,6 +182,9 @@ impl Routing {
             }
         }
         for tok in 0..t {
+            if self.expert[tok] == MASKED {
+                continue; // dead lane: stays zero in the combine buffer
+            }
             let (pi, b) = loc[self.expert[tok]];
             anyhow::ensure!(
                 pi != usize::MAX,
@@ -294,6 +329,61 @@ mod tests {
         if r.counts[1] > 0 {
             assert!(r.combine_packed(&partial, m, &mut out).is_err());
         }
+    }
+
+    #[test]
+    fn masked_tokens_take_no_slot_and_send_no_traffic() {
+        let t_toks = 16;
+        let m = 4;
+        let probs = softmax_rows(t_toks, 4, 21);
+        // Mask the odd tokens (dead decode lanes).
+        let mask: Vec<bool> = (0..t_toks).map(|t| t % 2 == 0).collect();
+        let r = Routing::top1_masked(&probs, 4, Some(&mask));
+        let full = Routing::top1(&probs, 4);
+        assert_eq!(r.counts.iter().sum::<usize>(), t_toks / 2);
+        let mut rng = Rng::new(31);
+        let ln_h: Vec<f32> =
+            (0..t_toks * m).map(|_| rng.gauss() as f32).collect();
+        for tok in 0..t_toks {
+            if mask[tok] {
+                // Live tokens route exactly as in the unmasked case.
+                assert_eq!(r.expert[tok], full.expert[tok]);
+                assert_eq!(r.prob[tok], full.prob[tok]);
+            } else {
+                assert_eq!(r.expert[tok], MASKED);
+            }
+        }
+        // Pack/combine round trip: identity experts, masked rows zero.
+        let experts: Vec<usize> = (0..4).collect();
+        let mut buf = Vec::new();
+        r.pack_blocks(&ln_h, m, &experts, &mut buf);
+        assert_eq!(buf.len(), (t_toks / 2) * m, "only live rows packed");
+        let counts: Vec<(usize, usize)> =
+            experts.iter().map(|&e| (e, r.counts[e])).collect();
+        let packs: Vec<(&[(usize, usize)], &[f32])> =
+            vec![(counts.as_slice(), buf.as_slice())];
+        let mut out = Vec::new();
+        r.combine_packed(&packs, m, &mut out).unwrap();
+        for tok in 0..t_toks {
+            for i in 0..m {
+                let want = if mask[tok] {
+                    r.prob[tok] * ln_h[tok * m + i]
+                } else {
+                    0.0
+                };
+                assert!((out[tok * m + i] - want).abs() < 1e-6);
+            }
+        }
+        // The serial-path combine agrees.
+        let blocks: Vec<Vec<f32>> =
+            (0..4).map(|e| r.expert_block(&ln_h, m, e)).collect();
+        assert_eq!(r.combine(&blocks, m), out);
+        // An all-live mask is exactly the unmasked routing.
+        let all = vec![true; t_toks];
+        let ra = Routing::top1_masked(&probs, 4, Some(&all));
+        assert_eq!(ra.expert, full.expert);
+        assert_eq!(ra.slot, full.slot);
+        assert_eq!(ra.counts, full.counts);
     }
 
     #[test]

@@ -241,6 +241,22 @@ pub fn split_lanes(
         .collect()
 }
 
+/// Copy one lane's contiguous block between two lane-major flat buffers
+/// (e.g. one layer's `[lanes, H, Smax, hd]` cache).  This is the splice
+/// primitive the expert-parallel engine uses to admit a freshly prefilled
+/// request's KV into a free lane of a decode group.
+pub fn copy_lane(
+    dst: &mut [f32],
+    dst_lane: usize,
+    src: &[f32],
+    src_lane: usize,
+    lane_elems: usize,
+) {
+    dst[dst_lane * lane_elems..(dst_lane + 1) * lane_elems].copy_from_slice(
+        &src[src_lane * lane_elems..(src_lane + 1) * lane_elems],
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -371,6 +387,19 @@ mod tests {
         assert_eq!(merged, buf);
         let full = split_lanes(&buf, lane_elems, &[(0, 4)]);
         assert_eq!(full[0], buf);
+    }
+
+    #[test]
+    fn copy_lane_moves_one_block() {
+        let lane_elems = 3;
+        let src: Vec<f32> = (0..9).map(|x| x as f32).collect(); // 3 lanes
+        let mut dst = vec![0f32; 12]; // 4 lanes
+        copy_lane(&mut dst, 2, &src, 1, lane_elems);
+        assert_eq!(dst, vec![0., 0., 0., 0., 0., 0., 3., 4., 5., 0., 0., 0.]);
+        // Other lanes untouched by a second copy.
+        copy_lane(&mut dst, 0, &src, 2, lane_elems);
+        assert_eq!(dst[..3], [6., 7., 8.]);
+        assert_eq!(dst[6..9], [3., 4., 5.]);
     }
 
     #[test]

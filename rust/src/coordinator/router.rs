@@ -1,9 +1,11 @@
 //! Request router: admission control and the inbound queue.
 //!
-//! The leader's front door — validates requests against model limits,
-//! assigns ids, timestamps arrivals, and exposes the FIFO the batcher
-//! drains.  (The cross-GPU "routing" of tokens to experts is
-//! `gate.rs`/`alltoall.rs`; this module routes *requests*.)
+//! The serving stack's front door — validates requests against model
+//! limits, assigns ids, timestamps arrivals, and exposes the FIFO the
+//! batcher drains.  Owned by the engine-agnostic `server::Scheduler`, one
+//! instance per serving stack regardless of backend.  (The cross-GPU
+//! "routing" of tokens to experts is `gate.rs`/`alltoall.rs`; this module
+//! routes *requests*.)
 
 use std::collections::VecDeque;
 use std::time::Instant;

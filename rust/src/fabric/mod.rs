@@ -177,6 +177,17 @@ impl Fabric {
         self.workers.len()
     }
 
+    /// Number of replies currently parked in the tag-keyed stash.  Bounded
+    /// by the number of *open* exchange generations (at most one coalesced
+    /// reply per worker per open tag); every entry is handed out when its
+    /// generation is collected, so the stash drains to zero once no
+    /// exchange is in flight — `rust/tests/integration_fabric.rs` pins
+    /// this bound before the pipeline is allowed to go deeper than two
+    /// microbatches.
+    pub fn stash_depth(&self) -> usize {
+        self.stash.borrow().len()
+    }
+
     /// Ship expert weights to their owning worker (startup).
     pub fn load_expert(
         &self,

@@ -14,10 +14,11 @@ use anyhow::{Context, Result};
 use ds_moe::config::{AllToAllKind, ServingConfig};
 use ds_moe::data::{Corpus, CorpusConfig, EvalSuite};
 use ds_moe::runtime::Manifest;
-use ds_moe::server::{Engine, EpEngine};
+use ds_moe::server::{ttft_percentile, Engine, EpEngine, Scheduler};
 use ds_moe::simulator;
 use ds_moe::training::{Distiller, KdMode, LrSchedule, Trainer};
 use ds_moe::util::args::Args;
+use ds_moe::util::stats::fmt_ns;
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
@@ -87,9 +88,13 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         eprint!("{}", args.usage("ds-moe serve"));
         return Ok(());
     }
-    let mut engine = Engine::new(&m, serving)?;
+    let mut engine =
+        Scheduler::new(Engine::new(&m, serving.clone())?, serving);
     let corpus = corpus(&mut args);
-    println!("serving {model} ({} params)", engine.model_config().num_params);
+    println!(
+        "serving {model} ({} params)",
+        engine.model.model_config().num_params
+    );
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
         engine.submit(corpus.prompt(i, prompt_len), Some(max_new))?;
@@ -103,7 +108,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         toks as f64 / wall.as_secs_f64()
     );
     let tok = ds_moe::tokenizer::Tokenizer::new(
-        engine.model_config().vocab_size,
+        engine.model.model_config().vocab_size,
     );
     for r in responses.iter().take(3) {
         println!("  #{}: {}", r.id, tok.decode(&r.tokens));
@@ -116,8 +121,8 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
     let m = manifest(&mut args)?;
     let model = args.get("model", "moe-s-8", "MoE model variant");
     let workers = args.get_usize("workers", 4, "fabric workers");
-    let batch = args.get_usize("batch", 8, "decode batch");
-    let steps = args.get_usize("steps", 8, "decode steps to run");
+    let batch = args.get_usize("batch", 8, "decode batch (lanes)");
+    let steps = args.get_usize("steps", 8, "decode steps (legacy mode)");
     let a2a: AllToAllKind = args
         .get("alltoall", "hierarchical", "naive|hierarchical|coordinated")
         .parse()?;
@@ -128,6 +133,14 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         "no-pipeline", false,
         "disable microbatch interleaving (DSMOE_NO_PIPELINE)",
     );
+    let legacy = args.get_bool(
+        "legacy", false,
+        "fixed-lane driver (no request admission; pre-scheduler behaviour)",
+    );
+    let n_requests =
+        args.get_usize("requests", 16, "requests (request-driven mode)");
+    let rate = args.get_f64("rate", 100.0, "Poisson arrival rate, req/s");
+    let max_new = args.get_usize("max-new", 8, "tokens per request");
     if args.has("help") {
         eprint!("{}", args.usage("ds-moe ep-serve"));
         return Ok(());
@@ -142,10 +155,59 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
     }
     println!(
         "ep-serve {model}: {workers} workers, batch {batch}, {a2a:?}, \
-         {} microbatch(es)",
-        ep.microbatches()
+         {} microbatch(es), {} mode",
+        ep.microbatches(),
+        if legacy { "fixed-lane" } else { "request-driven" }
     );
+    if legacy {
+        return ep_serve_fixed(ep, &corpus, batch, steps);
+    }
 
+    // Request-driven continuous batching: Poisson-ish open-loop arrivals
+    // through the engine-agnostic scheduler.
+    let serving = ServingConfig {
+        model: model.clone(),
+        workers,
+        max_batch: batch,
+        max_new_tokens: max_new,
+        alltoall: a2a,
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(ep, serving);
+    let plen = 8usize;
+    let (responses, wall) = sched
+        .run_poisson(n_requests, rate, max_new, 7, |i| {
+            corpus.prompt(i, plen)
+        })?;
+    let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    println!(
+        "{} responses / {tokens} tokens in {wall:.3}s ({:.1} tok/s), \
+         TTFT p50 {} p99 {}",
+        responses.len(),
+        tokens as f64 / wall,
+        fmt_ns(ttft_percentile(&responses, 50)),
+        fmt_ns(ttft_percentile(&responses, 99)),
+    );
+    println!(
+        "lane occupancy: {:.1}% mean over {} decode steps; \
+         exposed pipeline bubble {}",
+        100.0 * sched.metrics.value_mean("decode_utilization"),
+        sched.metrics.counter("decode_steps"),
+        fmt_ns(sched.metrics.sum_ns("pipeline_bubble")),
+    );
+    ep_report(&sched.model);
+    println!("--- metrics ---\n{}", sched.metrics.report());
+    Ok(())
+}
+
+/// The legacy fixed-lane driver: one full-batch prefill, then `steps`
+/// decode steps over every lane (no admission, no retirement).
+fn ep_serve_fixed(
+    mut ep: EpEngine,
+    corpus: &Corpus,
+    batch: usize,
+    steps: usize,
+) -> Result<()> {
     let smax = ep.cfg.max_seq;
     let plen = 8usize;
     let mut tokens = vec![0i32; batch * smax];
@@ -172,6 +234,12 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
          ({:.1} tok/s aggregate)",
         (batch * steps) as f64 / wall.as_secs_f64()
     );
+    ep_report(&ep);
+    println!("--- metrics ---\n{}", ep.metrics.report());
+    Ok(())
+}
+
+fn ep_report(ep: &EpEngine) {
     println!("traffic: {} bytes total, {} expert messages",
              ep.traffic().total_bytes(),
              ep.traffic().messages.load(std::sync::atomic::Ordering::Relaxed));
@@ -181,8 +249,6 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
             s.layer, s.imbalance(), s.entropy(), 100.0 * s.utilization()
         );
     }
-    println!("--- metrics ---\n{}", ep.metrics.report());
-    Ok(())
 }
 
 fn argmax(row: &[f32]) -> i32 {

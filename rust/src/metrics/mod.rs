@@ -5,13 +5,16 @@
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
-use crate::util::stats::LatencyHistogram;
+use crate::util::stats::{LatencyHistogram, Summary};
 
 #[derive(Default)]
 struct Inner {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
     latencies: BTreeMap<String, LatencyHistogram>,
+    /// Exact-percentile summaries over dimensionless values (e.g. the
+    /// decode-utilization ratio: busy lanes per decode step).
+    values: BTreeMap<String, Summary>,
 }
 
 /// Thread-safe metrics registry.
@@ -50,6 +53,43 @@ impl Metrics {
         let out = f();
         self.observe(name, t.elapsed());
         out
+    }
+
+    /// Record a dimensionless sample into value summary `name` (exact
+    /// percentiles, unlike the log-bucketed latency histograms).
+    pub fn record_value(&self, name: &str, v: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.values.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn value_mean(&self, name: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .values
+            .get(name)
+            .map(|s| s.mean())
+            .unwrap_or(0.0)
+    }
+
+    pub fn value_percentile(&self, name: &str, q: f64) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .values
+            .get_mut(name)
+            .map(|s| s.percentile(q))
+            .unwrap_or(0.0)
+    }
+
+    pub fn value_count(&self, name: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .values
+            .get(name)
+            .map(|s| s.len())
+            .unwrap_or(0)
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -107,7 +147,7 @@ impl Metrics {
 
     /// Text report, one metric per line.
     pub fn report(&self) -> String {
-        let m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap();
         let mut out = String::new();
         for (k, v) in &m.counters {
             out.push_str(&format!("counter {k} {v}\n"));
@@ -117,6 +157,15 @@ impl Metrics {
         }
         for (k, h) in &m.latencies {
             out.push_str(&format!("latency {k} {}\n", h.summary_string()));
+        }
+        for (k, s) in m.values.iter_mut() {
+            out.push_str(&format!(
+                "summary {k} n={} mean={:.4} p50={:.4} max={:.4}\n",
+                s.len(),
+                s.mean(),
+                s.percentile(50.0),
+                s.max()
+            ));
         }
         out
     }
@@ -152,6 +201,22 @@ mod tests {
         assert_eq!(m.samples("missing"), 0);
         assert_eq!(m.sum_ns("decode"), 5_050_000); // exact, not bucketed
         assert_eq!(m.sum_ns("missing"), 0);
+    }
+
+    #[test]
+    fn value_summaries() {
+        let m = Metrics::new();
+        for i in 0..8 {
+            m.record_value("decode_utilization", i as f64 / 8.0);
+        }
+        assert_eq!(m.value_count("decode_utilization"), 8);
+        assert!((m.value_mean("decode_utilization") - 0.4375).abs() < 1e-9);
+        let p50 = m.value_percentile("decode_utilization", 50.0);
+        assert!((0.3..=0.6).contains(&p50), "p50 {p50}");
+        assert_eq!(m.value_count("missing"), 0);
+        assert_eq!(m.value_mean("missing"), 0.0);
+        let r = m.report();
+        assert!(r.contains("summary decode_utilization n=8"), "{r}");
     }
 
     #[test]

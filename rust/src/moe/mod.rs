@@ -26,12 +26,17 @@ impl ExpertLoadStats {
         }
     }
 
+    /// Record routed tokens.  Ids `>= n_experts` (the
+    /// [`crate::coordinator::gate::MASKED`] sentinel for dead lanes /
+    /// prefill padding) are skipped — only genuinely routed tokens count.
     pub fn record_assignments(&mut self, expert_ids: &[usize]) {
         for &e in expert_ids {
-            debug_assert!(e < self.n_experts);
+            if e >= self.n_experts {
+                continue;
+            }
             self.tokens_per_expert[e] += 1;
+            self.total_tokens += 1;
         }
-        self.total_tokens += expert_ids.len() as u64;
     }
 
     pub fn record_dropped(&mut self, n: u64) {
@@ -130,6 +135,14 @@ mod tests {
         assert!(skew.imbalance() > 2.9);
         assert!(skew.entropy() < 0.6);
         assert_eq!(skew.utilization(), 0.5);
+    }
+
+    #[test]
+    fn masked_assignments_are_skipped() {
+        let mut s = ExpertLoadStats::new(0, 4);
+        s.record_assignments(&[0, usize::MAX, 1, usize::MAX]);
+        assert_eq!(s.total_tokens, 2);
+        assert_eq!(s.tokens_per_expert, vec![1, 1, 0, 0]);
     }
 
     #[test]

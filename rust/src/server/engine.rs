@@ -1,17 +1,23 @@
-//! Monolithic serving engine: continuous decode batching on one device.
+//! Monolithic serving backend: single-device prefill/decode over the fused
+//! AOT programs (`prefill_b{B}` / `decode_b{B}`).
 //!
-//! Event loop (one `step()` per iteration, driven by the caller or
-//! `run_until_idle`):
+//! Since the continuous-batching refactor the event loop lives in the
+//! engine-agnostic [`crate::server::Scheduler`]; this type is the
+//! [`ForwardModel`] backend it drives:
 //!
-//! 1. Ask the [`BatchPolicy`] whether to admit waiting requests; if so, run
-//!    a `prefill_b{B}` at a compiled batch size, splice each request's KV
-//!    cache into a free decode lane, and emit its first token.
-//! 2. If any lane is live, run one `decode_b{B}` step over the whole group
-//!    (fixed compiled B; free lanes are padded), append tokens, retire
-//!    finished requests.
+//! * [`Engine::prefill`] runs a `prefill_b{B}` at a compiled batch size and
+//!   splices each request's KV cache into a free decode lane straight from
+//!   the batched outputs ([`KvCacheGroup::admit_from_batch`], zero-copy);
+//! * [`Engine::decode_step`] runs one `decode_b{B}` step over the whole
+//!   lane group (fixed compiled B; free lanes are padded) and keeps the
+//!   updated caches as literals between steps (the KV literal mirror —
+//!   `DSMOE_NO_CACHE_MIRROR` forces the pre-optimization host round trip
+//!   for the §Perf measurement);
+//! * [`Engine::release`] frees a retired request's lane.
 //!
-//! Tokens are sampled greedily (`temperature == 0`) or with temperature
-//! sampling; sequences end at `max_new_tokens` or EOS.
+//! Sampling, batching policy, and request bookkeeping live in the
+//! scheduler; construct one with
+//! `Scheduler::new(Engine::new(&manifest, serving.clone())?, serving)`.
 
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -19,35 +25,20 @@ use std::rc::Rc;
 use anyhow::{Context, Result};
 
 use crate::config::ServingConfig;
-use crate::coordinator::{
-    BatchPolicy, Decision, KvCacheGroup, Limits, Request, Response, Router,
-};
+use crate::coordinator::{KvCacheGroup, Request};
 use crate::metrics::Metrics;
 use crate::runtime::{Checkpoint, HostTensor, Manifest, Program, Runtime};
-use crate::tokenizer::EOS;
-use crate::util::rng::Rng;
-
-struct ActiveSeq {
-    request: Request,
-    generated: Vec<i32>,
-    last_token: i32,
-    first_token_at: std::time::Instant,
-}
+use crate::server::scheduler::{AdmittedLane, ForwardModel};
 
 pub struct Engine {
     rt: Runtime,
     cfg: crate::config::ModelConfig,
-    serving: ServingConfig,
     params: Vec<xla::Literal>,
     prefill_progs: HashMap<usize, Rc<Program>>, // by batch size
+    prefill_sizes: Vec<usize>,
     decode_prog: Rc<Program>,
-    pub router: Router,
-    policy: BatchPolicy,
     group: KvCacheGroup,
-    active: HashMap<usize, ActiveSeq>, // by lane
-    pub done: Vec<Response>,
     pub metrics: std::sync::Arc<Metrics>,
-    rng: Rng,
     /// Cached literal mirror of the KV cache; invalidated by lane splices.
     cache_lits: Option<(xla::Literal, xla::Literal)>,
 }
@@ -80,6 +71,7 @@ impl Engine {
         }
         anyhow::ensure!(!prefill_progs.is_empty(),
                         "model {} exports no prefill programs", cfg.name);
+        prefill_sizes.sort();
         let decode_key = format!("decode_b{}", serving.max_batch);
         let decode_prog = rt.load(
             arts.programs
@@ -87,12 +79,6 @@ impl Engine {
                 .with_context(|| format!("no {decode_key} program"))?,
         )?;
 
-        let router = Router::new(Limits {
-            max_seq: cfg.max_seq,
-            vocab_size: cfg.vocab_size,
-            default_max_new: serving.max_new_tokens,
-        });
-        let policy = BatchPolicy::new(prefill_sizes, serving.batch_timeout);
         let group = KvCacheGroup::new(
             cfg.n_layers,
             serving.max_batch,
@@ -103,98 +89,18 @@ impl Engine {
         Ok(Engine {
             rt,
             cfg,
-            serving,
             params: params?,
             prefill_progs,
+            prefill_sizes,
             decode_prog,
-            router,
-            policy,
             group,
-            active: HashMap::new(),
-            done: Vec::new(),
             metrics: std::sync::Arc::new(Metrics::new()),
-            rng: Rng::new(0xD5),
             cache_lits: None,
         })
     }
 
     pub fn model_config(&self) -> &crate::config::ModelConfig {
         &self.cfg
-    }
-
-    pub fn submit(&mut self, prompt: Vec<i32>, max_new: Option<usize>) -> Result<u64> {
-        self.metrics.inc("requests_submitted", 1);
-        self.router.submit(prompt, max_new)
-    }
-
-    /// One scheduler iteration.  Returns true if any work was done.
-    pub fn step(&mut self) -> Result<bool> {
-        let free = self.group.free_lanes().len();
-        let decision = self.policy.decide(
-            self.router.queue_len(),
-            free,
-            self.router.oldest_wait(),
-        );
-        let mut worked = false;
-        if let Decision::Prefill { compiled, take } = decision {
-            let reqs = self.router.pop_up_to(take);
-            let t = std::time::Instant::now();
-            self.do_prefill(compiled, reqs)?;
-            self.metrics.observe("prefill", t.elapsed());
-            worked = true;
-        }
-        if !self.group.is_idle() {
-            let t = std::time::Instant::now();
-            self.do_decode()?;
-            self.metrics.observe("decode_step", t.elapsed());
-            worked = true;
-        }
-        Ok(worked)
-    }
-
-    /// Drain the queue and all in-flight sequences.
-    pub fn run_until_idle(&mut self) -> Result<Vec<Response>> {
-        while self.router.queue_len() > 0 || !self.group.is_idle() {
-            // When only partial batches wait, sleep just until the oldest
-            // request's flush deadline (capped at one timeout) instead of
-            // a fixed full timeout — a request that has already waited
-            // most of the timeout should not eat another whole one of
-            // TTFT.  The floor avoids a busy spin when the deadline is
-            // due on the next decide().
-            if !self.step()? {
-                // time_to_flush is <= the policy timeout by construction.
-                let remaining = self
-                    .policy
-                    .time_to_flush(self.router.oldest_wait())
-                    .unwrap_or(self.serving.batch_timeout);
-                let floor = std::time::Duration::from_micros(50);
-                std::thread::sleep(remaining.max(floor));
-            }
-        }
-        Ok(std::mem::take(&mut self.done))
-    }
-
-    pub fn take_done(&mut self) -> Vec<Response> {
-        std::mem::take(&mut self.done)
-    }
-
-    fn sample(&mut self, logits: &[f32]) -> i32 {
-        if self.serving.temperature <= 0.0 {
-            let mut best = 0;
-            for (i, &v) in logits.iter().enumerate() {
-                if v > logits[best] {
-                    best = i;
-                }
-            }
-            return best as i32;
-        }
-        let t = self.serving.temperature;
-        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let weights: Vec<f64> = logits
-            .iter()
-            .map(|&v| (((v - max) / t) as f64).exp())
-            .collect();
-        self.rng.weighted(&weights) as i32
     }
 
     /// Materialize the literal cache mirror back into the host-side group
@@ -209,10 +115,53 @@ impl Engine {
         Ok(())
     }
 
-    fn do_prefill(&mut self, compiled: usize, reqs: Vec<Request>) -> Result<()> {
+    pub fn compiled_programs(&self) -> usize {
+        self.rt.cached_programs()
+    }
+}
+
+impl ForwardModel for Engine {
+    fn model_config(&self) -> &crate::config::ModelConfig {
+        &self.cfg
+    }
+
+    fn metrics(&self) -> std::sync::Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    fn set_metrics(&mut self, metrics: std::sync::Arc<Metrics>) {
+        self.metrics = metrics;
+    }
+
+    fn prefill_sizes(&self) -> Vec<usize> {
+        self.prefill_sizes.clone()
+    }
+
+    fn lane_count(&self) -> usize {
+        self.group.batch
+    }
+
+    fn free_lane_count(&self) -> usize {
+        self.group.free_lanes().len()
+    }
+
+    fn prefill(
+        &mut self,
+        compiled: usize,
+        reqs: &[Request],
+    ) -> Result<Vec<AdmittedLane>> {
+        anyhow::ensure!(
+            reqs.len() <= compiled,
+            "prefill: {} requests at compiled size {compiled}",
+            reqs.len()
+        );
         self.sync_cache_to_host()?;
         let smax = self.cfg.max_seq;
-        let prog = self.prefill_progs[&compiled].clone();
+        let prog = self
+            .prefill_progs
+            .get(&compiled)
+            .with_context(|| format!("no prefill_b{compiled} program"))?
+            .clone();
 
         // Pack prompts (right-padded) into [compiled, smax].
         let mut tokens = vec![0i32; compiled * smax];
@@ -238,45 +187,36 @@ impl Engine {
         // Lane splices invalidate the literal mirror once per prefill, not
         // per admitted lane (sync_cache_to_host has already drained it).
         self.cache_lits = None;
-        for (i, req) in reqs.into_iter().enumerate() {
+        let mut admitted = Vec::with_capacity(reqs.len());
+        for (i, req) in reqs.iter().enumerate() {
             let lane = free[i];
             let plen = req.prompt.len();
-            // First generated token comes from the prompt's last position.
+            // The first generated token comes from the prompt's last
+            // position; the scheduler samples it from this row.
             let row =
-                &logits_data[(i * smax + plen - 1) * v..(i * smax + plen) * v];
-            let first = self.sample(row);
+                logits_data[(i * smax + plen - 1) * v..(i * smax + plen) * v]
+                    .to_vec();
 
             // Splice this request's cache slice straight out of the batched
             // prefill outputs into the lane storage.
             self.group.admit_from_batch(
                 lane, req.id, plen, &kc_data, &vc_data, i, compiled,
             )?;
-            let now = std::time::Instant::now();
-            self.metrics.observe("ttft", now - req.arrival);
-            self.metrics.inc("prefills", 1);
-            self.active.insert(
-                lane,
-                ActiveSeq {
-                    request: req,
-                    generated: vec![first],
-                    last_token: first,
-                    first_token_at: now,
-                },
-            );
+            admitted.push(AdmittedLane { lane, logits: row });
         }
-        Ok(())
+        Ok(admitted)
     }
 
-    fn do_decode(&mut self) -> Result<()> {
+    fn decode_step(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
         let b = self.group.batch;
-        let mut tokens = vec![0i32; b];
-        for (&lane, seq) in &self.active {
-            tokens[lane] = seq.last_token;
-        }
-        let pos = self.group.positions();
+        anyhow::ensure!(tokens.len() == b && pos.len() == b, "lane shape");
 
-        let tok_lit = HostTensor::i32(&[b], tokens).to_literal()?;
-        let pos_lit = HostTensor::i32(&[b], pos).to_literal()?;
+        let tok_lit = HostTensor::i32(&[b], tokens.to_vec()).to_literal()?;
+        let pos_lit = HostTensor::i32(&[b], pos.to_vec()).to_literal()?;
         if self.cache_lits.is_none() {
             self.cache_lits =
                 Some((self.group.k.to_literal()?, self.group.v.to_literal()?));
@@ -292,7 +232,7 @@ impl Engine {
         let logits = HostTensor::from_literal(&outs[0])?; // [B, V]
         // Keep the updated caches as literals for the next decode step —
         // they are only materialized back to host tensors when a prefill
-        // needs to splice a lane (see do_prefill / sync_cache_to_host).
+        // needs to splice a lane (see prefill / sync_cache_to_host).
         // DSMOE_NO_CACHE_MIRROR forces the pre-optimization behaviour
         // (full literal->host->literal round trip per step) for the §Perf
         // before/after measurement in EXPERIMENTS.md.
@@ -307,52 +247,22 @@ impl Engine {
         } else {
             self.cache_lits = Some((k_new, v_new));
         }
-        self.metrics.inc("decode_steps", 1);
-        self.metrics.inc(
-            "decode_tokens",
-            self.active.len() as u64,
-        );
+
+        // Advance each busy lane's cache position for the token just
+        // written (the max_seq guard lives in KvCacheGroup::advance; the
+        // scheduler retires sequences before they can overflow).
+        for (lane, _, _) in self.group.busy_lanes() {
+            self.group.advance(lane)?;
+        }
 
         let v = self.cfg.vocab_size;
         let logits_data = logits.as_f32()?.to_vec();
-        let lanes: Vec<usize> = self.active.keys().copied().collect();
-        for lane in lanes {
-            // advance cache position for the token just written
-            self.group.advance(lane)?;
-            let row = &logits_data[lane * v..(lane + 1) * v];
-            let next = self.sample(row);
-            let seq = self.active.get_mut(&lane).unwrap();
-            seq.generated.push(next);
-            seq.last_token = next;
-            let finished = next == EOS
-                || seq.generated.len() >= seq.request.max_new_tokens
-                || seq.request.prompt.len() + seq.generated.len()
-                    >= self.cfg.max_seq;
-            if finished {
-                let seq = self.active.remove(&lane).unwrap();
-                self.group.release(lane);
-                let total = seq.request.arrival.elapsed();
-                self.metrics.observe("request_total", total);
-                self.metrics.inc("requests_completed", 1);
-                self.metrics
-                    .inc("tokens_generated", seq.generated.len() as u64);
-                self.done.push(Response {
-                    id: seq.request.id,
-                    prompt_len: seq.request.prompt.len(),
-                    tokens: seq.generated,
-                    ttft: seq.first_token_at - seq.request.arrival,
-                    total,
-                });
-            }
-        }
-        Ok(())
+        Ok((0..b)
+            .map(|lane| logits_data[lane * v..(lane + 1) * v].to_vec())
+            .collect())
     }
 
-    pub fn active_count(&self) -> usize {
-        self.active.len()
-    }
-
-    pub fn compiled_programs(&self) -> usize {
-        self.rt.cached_programs()
+    fn release(&mut self, lane: usize) {
+        self.group.release(lane);
     }
 }

@@ -45,6 +45,20 @@
 //! lane groups and are repartitioned on the host if the path toggles
 //! between forwards.
 //!
+//! ## Continuous batching (scheduler-backed mode)
+//!
+//! The engine also implements [`ForwardModel`], so the engine-agnostic
+//! [`crate::server::Scheduler`] can drive it with real request admission:
+//! an admission prefill runs at a compiled lane count (padding masked),
+//! its per-layer KV is spliced into free lanes of the decode groups
+//! (admissions alternate between the two pipeline lane groups to keep the
+//! microbatches balanced), decode steps run the normal full-lane-group
+//! forwards with retired/free lanes masked out of gate + dispatch (dead
+//! lanes send **no** expert traffic), and released lanes are reused by
+//! later admissions.  Live lanes stay bit-identical to the fixed-lane
+//! driver; the legacy mode (`forward_prefill`/`forward_decode` with every
+//! lane driven explicitly) is untouched and resets the lane state.
+//!
 //! ## Env toggles
 //!
 //! | variable            | effect                                         |
@@ -66,18 +80,19 @@
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::{AllToAllKind, ModelConfig};
 use crate::coordinator::alltoall::{self, Topology};
-use crate::coordinator::kv_cache::split_lanes;
-use crate::coordinator::{Placement, Routing};
+use crate::coordinator::kv_cache::{copy_lane, split_lanes};
+use crate::coordinator::{Placement, Request, Routing};
 use crate::fabric::{ExpertFfnBatch, Fabric, FfnBatchResult, WorkerPrograms};
 use crate::metrics::Metrics;
 use crate::moe::ExpertLoadStats;
 use crate::runtime::{
     Checkpoint, HostTensor, Manifest, Program, Runtime,
 };
+use crate::server::scheduler::{AdmittedLane, ForwardModel};
 
 pub struct EpEngine {
     rt: Runtime,
@@ -119,6 +134,16 @@ pub struct EpEngine {
     /// Tags of exchanges currently out on the fabric (at most two): the
     /// collector stashes replies for these instead of failing.
     open_tags: Vec<u64>,
+    /// Continuous-batching lane occupancy (scheduler-backed mode):
+    /// `lane_live[lane]` is true while a live request occupies the lane.
+    /// Dead lanes are masked out of gate + dispatch so they send no expert
+    /// traffic.  Empty in the legacy fixed-lane mode (no masking — every
+    /// lane is driven explicitly), which keeps that path bit-identical to
+    /// the pre-refactor engine.
+    lane_live: Vec<bool>,
+    /// Compiled lane counts at which a scheduler admission prefill can run
+    /// (every prefill-side program shape exists in the manifest).
+    prefill_sizes: Vec<usize>,
 }
 
 struct ManifestKeys {
@@ -142,6 +167,14 @@ struct LaneGroupCaches {
     lanes: usize,
     k: Vec<xla::Literal>,
     v: Vec<xla::Literal>,
+}
+
+/// Output of a scheduler admission prefill ([`EpEngine::prefill_lanes`]).
+struct PrefilledLanes {
+    /// Per layer: `[lanes, H, Smax, hd]` K/V caches for the compiled lanes.
+    kv: Vec<(xla::Literal, xla::Literal)>,
+    /// Last-position logits rows for the live lanes.
+    rows: Vec<Vec<f32>>,
 }
 
 /// What kind of forward the shared interleave scheduler
@@ -271,6 +304,23 @@ impl EpEngine {
         let half_shapes_ok = batch % 2 == 0
             && half_shapes_available(manifest, &cfg, batch / 2);
 
+        // Compiled lane counts a scheduler admission prefill can run at:
+        // the standard AOT ladder filtered by what this artifact set
+        // actually exports (older sets may only have the full batch).
+        let mut prefill_sizes: Vec<usize> = [1usize, 2, 4, 8, 16, 32]
+            .into_iter()
+            .chain([batch])
+            .filter(|&s| s <= batch)
+            .filter(|&s| prefill_shapes_available(manifest, &cfg, s))
+            .collect();
+        prefill_sizes.sort();
+        prefill_sizes.dedup();
+        if prefill_sizes.is_empty() {
+            // forward_prefill needs the full-batch shapes anyway; admission
+            // will surface the missing-program error on first use.
+            prefill_sizes.push(batch);
+        }
+
         Ok(EpEngine {
             rt,
             cfg,
@@ -294,6 +344,8 @@ impl EpEngine {
             scratch: [MoeScratch::default(), MoeScratch::default()],
             exchange_seq: 0,
             open_tags: Vec::new(),
+            lane_live: Vec::new(),
+            prefill_sizes,
         })
     }
 
@@ -374,6 +426,9 @@ impl EpEngine {
         // reply of theirs that straggles in must fail loudly, not sit in
         // the stash forever.
         self.open_tags.clear();
+        // A full fixed-lane prefill rebuilds every lane: back to legacy
+        // mode (no lane occupancy, no dead-lane masking).
+        self.lane_live.clear();
         let groups = self.lane_groups();
         let out = if groups.len() == 2 {
             self.prefill_pipelined(tokens, lens, &groups)?
@@ -416,7 +471,7 @@ impl EpEngine {
             let (h2, k, vv) = self.attn_prefill(layer, h, b)?;
             group.k.push(k);
             group.v.push(vv);
-            h = self.ffn_layer(layer, h2)?;
+            h = self.ffn_layer(layer, h2, None)?;
         }
         self.caches = vec![group];
 
@@ -555,7 +610,8 @@ impl EpEngine {
         let (h2, k, vv) = self.attn_prefill(layer, h, cache.lanes)?;
         cache.k.push(k);
         cache.v.push(vv);
-        self.moe_dispatch_in(layer, h2, slot, "pipeline_bubble")
+        // Legacy full prefill drives every lane: no mask.
+        self.moe_dispatch_in(layer, h2, slot, "pipeline_bubble", None)
     }
 
     /// One decode step over [B] tokens at per-lane positions.
@@ -603,9 +659,10 @@ impl EpEngine {
             ])?
             .remove(0);
 
+        let mask = self.decode_mask(0, b);
         for layer in 0..self.cfg.n_layers {
             h = self.attn_decode(layer, h, &pos_lit, 0)?;
-            h = self.ffn_layer(layer, h)?;
+            h = self.ffn_layer(layer, h, mask.as_deref())?;
         }
         // [B, 1, M]: feed the LM head straight from the literal (a reshape,
         // not a host round trip).
@@ -670,7 +727,33 @@ impl EpEngine {
         group: usize,
     ) -> Result<InflightMoe> {
         let h2 = self.attn_decode(layer, h, pos, group)?;
-        self.moe_dispatch_in(layer, h2, group, "pipeline_bubble")
+        let (lane0, lanes) =
+            (self.caches[group].lane0, self.caches[group].lanes);
+        let mask = self.decode_mask(lane0, lanes);
+        self.moe_dispatch_in(
+            layer,
+            h2,
+            group,
+            "pipeline_bubble",
+            mask.as_deref(),
+        )
+    }
+
+    /// Token mask for a decode microbatch covering lanes
+    /// `[lane0, lane0 + lanes)`: `None` in the legacy fixed-lane mode or
+    /// when every lane in range is live (no masking — the fast path stays
+    /// untouched), otherwise one liveness bit per lane (= per decode
+    /// token).
+    fn decode_mask(&self, lane0: usize, lanes: usize) -> Option<Vec<bool>> {
+        if self.lane_live.is_empty() {
+            return None;
+        }
+        let m = self.lane_live[lane0..lane0 + lanes].to_vec();
+        if m.iter().all(|&x| x) {
+            None
+        } else {
+            Some(m)
+        }
     }
 
     /// Rebuild the decode cache groups for a new lane partition (host-side
@@ -718,6 +801,167 @@ impl EpEngine {
             }
         }
         self.caches = new_groups;
+        Ok(())
+    }
+
+    /// Depth of the fabric's tag-keyed reply stash (bounded by the open
+    /// exchange count; must be zero between forwards).
+    pub fn fabric_stash_depth(&self) -> usize {
+        self.fabric.stash_depth()
+    }
+
+    /// Initialize continuous-batching lane state: all lanes free, decode
+    /// cache groups zero-filled at the current lane partition.  Re-entered
+    /// from legacy mode (after a fixed-lane `forward_prefill`) this resets
+    /// every lane.
+    fn ensure_lane_state(&mut self) -> Result<()> {
+        if !self.lane_live.is_empty() {
+            return Ok(());
+        }
+        self.lane_live = vec![false; self.batch];
+        let (hh, smax, hd) =
+            (self.cfg.n_heads, self.cfg.max_seq, self.cfg.head_dim());
+        let n_layers = self.cfg.n_layers;
+        let mut groups = Vec::new();
+        for (lane0, lanes) in self.lane_groups() {
+            let mut g = LaneGroupCaches {
+                lane0,
+                lanes,
+                k: Vec::with_capacity(n_layers),
+                v: Vec::with_capacity(n_layers),
+            };
+            for _ in 0..n_layers {
+                let shape = [lanes, hh, smax, hd];
+                g.k.push(HostTensor::zeros_f32(&shape).to_literal()?);
+                g.v.push(HostTensor::zeros_f32(&shape).to_literal()?);
+            }
+            groups.push(g);
+        }
+        self.caches = groups;
+        Ok(())
+    }
+
+    /// Choose `n` free lanes for admission, keeping the pipeline's lane
+    /// groups balanced: each pick goes to the group with the fewest busy
+    /// lanes among those with a free one, so the two microbatches carry
+    /// similar live load.
+    fn pick_free_lanes(&self, n: usize) -> Result<Vec<usize>> {
+        let groups: Vec<(usize, usize)> =
+            self.caches.iter().map(|c| (c.lane0, c.lanes)).collect();
+        let mut free: Vec<Vec<usize>> = groups
+            .iter()
+            .map(|&(l0, ln)| {
+                (l0..l0 + ln).filter(|&l| !self.lane_live[l]).collect()
+            })
+            .collect();
+        let mut busy: Vec<usize> = groups
+            .iter()
+            .map(|&(l0, ln)| {
+                (l0..l0 + ln).filter(|&l| self.lane_live[l]).count()
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let g = (0..groups.len())
+                .filter(|&g| !free[g].is_empty())
+                .min_by_key(|&g| busy[g])
+                .context("no free lane for admission")?;
+            out.push(free[g].remove(0));
+            busy[g] += 1;
+        }
+        Ok(out)
+    }
+
+    /// Standalone admission prefill over `lanes` compiled lanes (the first
+    /// `live` carry real prompts, the rest are padding): runs the
+    /// per-layer MoE path with the padding masked out of gate + dispatch,
+    /// and returns per-layer per-lane KV caches plus last-position logits
+    /// rows for the live lanes.  Per-lane outputs are bit-identical to a
+    /// full-batch forward over the same prompts (every program is
+    /// per-lane/per-row independent — the same property the three-way
+    /// parity tests pin).
+    fn prefill_lanes(
+        &mut self,
+        lanes: usize,
+        tokens: &[i32],
+        lens: &[usize],
+        live: usize,
+    ) -> Result<PrefilledLanes> {
+        let smax = self.cfg.max_seq;
+        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
+        anyhow::ensure!(tokens.len() == lanes * smax, "tokens shape");
+        anyhow::ensure!(lens.len() == lanes && live <= lanes, "lens shape");
+        self.open_tags.clear();
+        let t0 = std::time::Instant::now();
+        let embed = self.prog(&Manifest::key_embed(v, m, lanes, smax))?;
+        let tok = HostTensor::i32(&[lanes, smax], tokens.to_vec())
+            .to_literal()?;
+        let pos0 = HostTensor::i32(&[lanes], vec![0; lanes]).to_literal()?;
+        let mut h = embed
+            .run_literal_refs(&[
+                self.p("tok_emb"),
+                self.p("pos_emb"),
+                &tok,
+                &pos0,
+            ])?
+            .remove(0);
+        let mask: Option<Vec<bool>> = if live == lanes {
+            None
+        } else {
+            Some((0..lanes * smax).map(|i| i / smax < live).collect())
+        };
+        let mut kv = Vec::with_capacity(self.cfg.n_layers);
+        for layer in 0..self.cfg.n_layers {
+            let (h2, k, vv) = self.attn_prefill(layer, h, lanes)?;
+            kv.push((k, vv));
+            h = self.ffn_layer(layer, h2, mask.as_deref())?;
+        }
+        let mut rows = self.lm_head_last(&h, lens)?;
+        rows.truncate(live);
+        self.metrics.observe("forward_prefill", t0.elapsed());
+        Ok(PrefilledLanes { kv, rows })
+    }
+
+    /// Splice freshly prefilled lanes into the decode cache groups:
+    /// `admits[i]` maps source lane `i` of the admission prefill to a free
+    /// global lane.  One host round trip per (layer, touched group), not
+    /// per lane — still proportional to the whole group's cache, which is
+    /// acceptable at testbed scale because the admission prefill forward
+    /// dominates admission cost; a host-side cache mirror (like the
+    /// monolithic engine's `cache_lits`) would cut it to the admitted
+    /// lanes only (ROADMAP follow-up).
+    fn splice_admitted(
+        &mut self,
+        kv: &[(xla::Literal, xla::Literal)],
+        admits: &[usize],
+    ) -> Result<()> {
+        let (hh, smax, hd) =
+            (self.cfg.n_heads, self.cfg.max_seq, self.cfg.head_dim());
+        let lane_elems = hh * smax * hd;
+        for (layer, (k_lit, v_lit)) in kv.iter().enumerate() {
+            let src_k: Vec<f32> = k_lit.to_vec()?;
+            let src_v: Vec<f32> = v_lit.to_vec()?;
+            for g in self.caches.iter_mut() {
+                let in_group: Vec<(usize, usize)> = admits
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &l)| l >= g.lane0 && l < g.lane0 + g.lanes)
+                    .map(|(src, &l)| (src, l - g.lane0))
+                    .collect();
+                if in_group.is_empty() {
+                    continue;
+                }
+                let mut dst_k: Vec<f32> = g.k[layer].to_vec()?;
+                let mut dst_v: Vec<f32> = g.v[layer].to_vec()?;
+                for &(src, dst) in &in_group {
+                    copy_lane(&mut dst_k, dst, &src_k, src, lane_elems);
+                    copy_lane(&mut dst_v, dst, &src_v, src, lane_elems);
+                }
+                let shape = [g.lanes, hh, smax, hd];
+                g.k[layer] = HostTensor::f32(&shape, dst_k).to_literal()?;
+                g.v[layer] = HostTensor::f32(&shape, dst_v).to_literal()?;
+            }
+        }
         Ok(())
     }
 
@@ -782,12 +1026,20 @@ impl EpEngine {
 
     /// FFN sublayer on the per-layer path: split-phase dispatch followed
     /// immediately by finish (the PR-1 overlapped schedule), or the
-    /// serialized baseline under `DSMOE_SERIAL_MOE`.
-    fn ffn_layer(&mut self, layer: usize, h: xla::Literal) -> Result<xla::Literal> {
+    /// serialized baseline under `DSMOE_SERIAL_MOE`.  `mask` marks live
+    /// tokens (None = all live); dead tokens are excluded from gate
+    /// routing and expert dispatch.
+    fn ffn_layer(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+        mask: Option<&[bool]>,
+    ) -> Result<xla::Literal> {
         if self.serial_moe && self.cfg.experts_at(layer) > 0 {
-            return self.moe_layer_serial(layer, h);
+            return self.moe_layer_serial(layer, h, mask);
         }
-        let inflight = self.moe_dispatch(layer, h)?;
+        let inflight =
+            self.moe_dispatch_in(layer, h, 0, "expert_wait", mask)?;
         self.moe_finish(inflight)
     }
 
@@ -801,7 +1053,7 @@ impl EpEngine {
         layer: usize,
         h: xla::Literal,
     ) -> Result<InflightMoe> {
-        self.moe_dispatch_in(layer, h, 0, "expert_wait")
+        self.moe_dispatch_in(layer, h, 0, "expert_wait", None)
     }
 
     fn moe_dispatch_in(
@@ -810,6 +1062,7 @@ impl EpEngine {
         h: xla::Literal,
         slot: usize,
         wait_metric: &'static str,
+        mask: Option<&[bool]>,
     ) -> Result<InflightMoe> {
         let (m, f) = (self.cfg.d_model, self.cfg.d_ff);
         let pre = format!("layer{layer}.");
@@ -864,7 +1117,10 @@ impl EpEngine {
         let probs = HostTensor::from_literal(&outs[1])?; // [T, E]
         self.metrics.observe("gate", t0.elapsed());
 
-        let routing = Routing::top1(probs.as_f32()?, n_experts);
+        // Dead lanes (retired/free under continuous batching) are masked
+        // out of routing here, so they take no expert slot and send no
+        // expert traffic.
+        let routing = Routing::top1_masked(probs.as_f32()?, n_experts, mask);
         if let Some(i) = self.stats_idx[layer] {
             self.load_stats[i].record_assignments(routing.assignments());
         }
@@ -1053,6 +1309,7 @@ impl EpEngine {
         &mut self,
         layer: usize,
         h: xla::Literal,
+        mask: Option<&[bool]>,
     ) -> Result<xla::Literal> {
         let (m, f) = (self.cfg.d_model, self.cfg.d_ff);
         let pre = format!("layer{layer}.");
@@ -1076,7 +1333,7 @@ impl EpEngine {
         let probs = HostTensor::from_literal(&outs[1])?; // [T, E]
         self.metrics.observe("gate", t0.elapsed());
 
-        let routing = Routing::top1(probs.as_f32()?, n_experts);
+        let routing = Routing::top1_masked(probs.as_f32()?, n_experts, mask);
         if let Some(i) = self.stats_idx[layer] {
             self.load_stats[i].record_assignments(routing.assignments());
         }
@@ -1161,6 +1418,9 @@ impl EpEngine {
     ) -> alltoall::Plan {
         let mut bytes = vec![vec![0usize; ep]; ep];
         for (t, &e) in routing.expert.iter().enumerate() {
+            if e >= routing.n_experts {
+                continue; // masked token (dead lane): no exchange traffic
+            }
             let src = t % ep; // token's home shard
             let dst = e % ep; // expert's owner (round-robin placement)
             if src != dst {
@@ -1243,6 +1503,98 @@ impl EpEngine {
     }
 }
 
+/// Continuous batching over the expert-parallel engine: the scheduler
+/// admits requests via compiled-size admission prefills whose KV is
+/// spliced into free lanes of the per-microbatch decode groups (balanced
+/// across the two pipeline groups), decode steps run full-lane-group
+/// forwards with dead lanes masked out of gate + dispatch, and `release`
+/// frees a lane for the next admission.
+impl ForwardModel for EpEngine {
+    fn model_config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn metrics(&self) -> std::sync::Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    fn set_metrics(&mut self, metrics: std::sync::Arc<Metrics>) {
+        self.metrics = metrics;
+    }
+
+    fn prefill_sizes(&self) -> Vec<usize> {
+        self.prefill_sizes.clone()
+    }
+
+    fn lane_count(&self) -> usize {
+        self.batch
+    }
+
+    fn free_lane_count(&self) -> usize {
+        if self.lane_live.is_empty() {
+            self.batch
+        } else {
+            self.lane_live.iter().filter(|&&l| !l).count()
+        }
+    }
+
+    fn prefill(
+        &mut self,
+        compiled: usize,
+        reqs: &[Request],
+    ) -> Result<Vec<AdmittedLane>> {
+        anyhow::ensure!(
+            !reqs.is_empty() && reqs.len() <= compiled,
+            "admission prefill: {} requests at compiled size {compiled}",
+            reqs.len()
+        );
+        anyhow::ensure!(
+            self.prefill_sizes.contains(&compiled),
+            "no admission prefill shapes at lane count {compiled} \
+             (available: {:?})",
+            self.prefill_sizes
+        );
+        self.ensure_lane_state()?;
+        let lanes = self.pick_free_lanes(reqs.len())?;
+
+        let smax = self.cfg.max_seq;
+        let mut tokens = vec![0i32; compiled * smax];
+        let mut lens = vec![1usize; compiled]; // padding lanes: dummy len
+        for (i, r) in reqs.iter().enumerate() {
+            anyhow::ensure!(
+                r.prompt.len() <= smax,
+                "prompt length exceeds max_seq {smax}"
+            );
+            tokens[i * smax..i * smax + r.prompt.len()]
+                .copy_from_slice(&r.prompt);
+            lens[i] = r.prompt.len();
+        }
+        let prefilled =
+            self.prefill_lanes(compiled, &tokens, &lens, reqs.len())?;
+        self.splice_admitted(&prefilled.kv, &lanes)?;
+        let mut out = Vec::with_capacity(reqs.len());
+        for (&lane, logits) in lanes.iter().zip(prefilled.rows) {
+            self.lane_live[lane] = true;
+            out.push(AdmittedLane { lane, logits });
+        }
+        Ok(out)
+    }
+
+    fn decode_step(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.forward_decode(tokens, pos)
+    }
+
+    fn release(&mut self, lane: usize) {
+        if let Some(l) = self.lane_live.get_mut(lane) {
+            *l = false;
+        }
+    }
+}
+
 /// True if every AOT program the pipelined path needs at microbatch size
 /// `bh` exists in the manifest (prefill and decode shapes).  Evaluated
 /// once at engine construction — the manifest never changes afterwards.
@@ -1276,6 +1628,41 @@ fn half_shapes_available(
         if cfg.residual {
             keys.push(Manifest::key_residual_branch(m, f, t));
         }
+    }
+    keys.iter().all(|k| manifest.shared_program(k).is_ok())
+}
+
+/// True if every AOT program a scheduler admission prefill needs at lane
+/// count `lanes` exists in the manifest (prefill-side shapes only — decode
+/// always runs at the full lane group).  `gather_last` is not required:
+/// `lm_head_last` falls back to a host-side gather for artifact sets that
+/// predate it.
+fn prefill_shapes_available(
+    manifest: &Manifest,
+    cfg: &ModelConfig,
+    lanes: usize,
+) -> bool {
+    let (v, m, hh, f, smax) = (
+        cfg.vocab_size,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.d_ff,
+        cfg.max_seq,
+    );
+    let t = lanes * smax;
+    let mut keys = vec![
+        Manifest::key_embed(v, m, lanes, smax),
+        Manifest::key_attn_prefill(m, hh, lanes, smax),
+        Manifest::key_lm_head(v, m, lanes),
+    ];
+    for (_, e) in cfg.moe_layers() {
+        keys.push(Manifest::key_gate(m, e, t));
+    }
+    if cfg.experts_schedule.iter().any(|&e| e == 0) {
+        keys.push(Manifest::key_dense_ffn(m, f, t));
+    }
+    if cfg.residual {
+        keys.push(Manifest::key_residual_branch(m, f, t));
     }
     keys.iter().all(|k| manifest.shared_program(k).is_ok())
 }

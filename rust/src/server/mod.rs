@@ -1,21 +1,59 @@
-//! Serving engines.
+//! The serving stack: one continuous-batching scheduler, two backends.
 //!
-//! * [`engine::Engine`] — single-device serving over the monolithic AOT
-//!   programs (`prefill_b{B}` / `decode_b{B}`, fused Pallas kernels inside):
-//!   continuous decode batching with lane-level admission, the baseline the
-//!   paper's single-GPU numbers correspond to.
-//! * [`ep::EpEngine`] — the disaggregated expert-parallel engine: the leader
-//!   runs the dense backbone layer by layer via the shared AOT programs and
-//!   dispatches gathered expert blocks to fabric workers (§5's architecture:
-//!   gate → group tokens by expert → all-to-all → expert FFN → return &
-//!   combine).
+//! ```text
+//!      requests ──► Scheduler<M: ForwardModel>          (scheduler.rs)
+//!                   ├── Router        admission + FIFO
+//!                   ├── BatchPolicy   size-or-timeout batch formation
+//!                   ├── Sampler       greedy / seeded temperature
+//!                   └── lane + TTFT/retirement bookkeeping
+//!                         │  ForwardModel trait:
+//!                         │  prefill(compiled, reqs) -> admitted lanes
+//!                         │  decode_step(tokens, pos) -> logits
+//!                         │  release(lane)
+//!            ┌────────────┴────────────┐
+//!      Engine (engine.rs)        EpEngine (ep.rs)
+//!      monolithic single-device  disaggregated expert-parallel
+//!      fused prefill_b{B}/       leader drives the dense backbone,
+//!      decode_b{B} programs,     fabric workers run expert FFNs;
+//!      zero-copy lane splicing   split-phase MoE, microbatch
+//!      + KV literal mirror       pipelining, masked dead lanes
+//! ```
 //!
-//! Both engines produce identical logits for identical weights/input — the
-//! parity test in `rust/tests/integration_parity.rs` is the end-to-end
+//! * [`Scheduler`] — engine-agnostic continuous batching: admit → prefill
+//!   splice → decode → retire, the loop §5 of the paper treats as one
+//!   system.  Owns sampling and all request bookkeeping; metric names are
+//!   those of the pre-refactor engine plus `queue_depth` / `lanes_busy`
+//!   gauges and the `decode_utilization` summary.
+//! * [`engine::Engine`] — single-device backend over the monolithic AOT
+//!   programs (fused Pallas kernels inside): the baseline the paper's
+//!   single-GPU numbers correspond to.
+//! * [`ep::EpEngine`] — the disaggregated expert-parallel backend (§5's
+//!   architecture: gate → group tokens by expert → all-to-all → expert
+//!   FFN → return & combine), with split-phase MoE and cross-layer
+//!   microbatch pipelining.  Also usable standalone through its legacy
+//!   fixed-lane `forward_prefill` / `forward_decode` API.
+//!
+//! Both backends produce identical logits for identical weights/input —
+//! the parity tests in `rust/tests/integration_parity.rs` (including the
+//! scheduler-vs-fixed-lane token parity test) are the end-to-end
 //! correctness anchor of the whole stack.
+//!
+//! ## Env toggles (expert-parallel data path)
+//!
+//! | variable               | effect                                      |
+//! |------------------------|---------------------------------------------|
+//! | `DSMOE_SERIAL_MOE`     | serialized per-expert MoE path (pre-overlap |
+//! |                        | baseline); also disables the pipeline.      |
+//! | `DSMOE_NO_PIPELINE`    | per-layer overlapped path (no microbatch    |
+//! |                        | interleaving).                              |
+//! | `DSMOE_NO_CACHE_MIRROR`| monolithic engine: host round trip of the   |
+//! |                        | KV cache every decode step (pre-mirror      |
+//! |                        | baseline, §Perf).                           |
 
 pub mod engine;
 pub mod ep;
+pub mod scheduler;
 
 pub use engine::Engine;
 pub use ep::{EpEngine, InflightMoe};
+pub use scheduler::{ttft_percentile, AdmittedLane, ForwardModel, Scheduler};

@@ -5,5 +5,6 @@ pub mod args;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sampling;
 pub mod stats;
 pub mod table;

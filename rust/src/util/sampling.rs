@@ -1,0 +1,120 @@
+//! Token sampling shared by every serving backend.
+//!
+//! Both engines used to carry private copies of greedy/temperature
+//! sampling; the scheduler ([`crate::server::Scheduler`]) now owns the
+//! sampling decision and delegates the math here, so the monolithic and the
+//! expert-parallel paths are guaranteed to sample identically.
+//!
+//! * [`greedy`] — argmax with first-index tie-breaking (the convention the
+//!   parity tests pin: `>` comparison, so the lowest index among equal
+//!   maxima wins — identical to `util::stats::argmax`).
+//! * [`temperature`] — softmax sampling at temperature `t` over a
+//!   deterministic [`Rng`], computed in f64 with the max subtracted for
+//!   numerical stability.
+//! * [`Sampler`] — the stateful combination: temperature `<= 0` means
+//!   greedy, anything else draws from the tempered distribution using a
+//!   seedable RNG (`ServingConfig::seed`), so temperature runs are
+//!   reproducible-but-configurable.
+
+use crate::util::rng::Rng;
+
+/// Argmax with first-index tie-breaking.
+pub fn greedy(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sample from `softmax(logits / t)` using `rng`.  `t` must be positive;
+/// as `t -> 0` this converges to [`greedy`].
+pub fn temperature(logits: &[f32], t: f32, rng: &mut Rng) -> usize {
+    debug_assert!(t > 0.0);
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = logits
+        .iter()
+        .map(|&v| (((v - max) / t) as f64).exp())
+        .collect();
+    rng.weighted(&weights)
+}
+
+/// Stateful sampler: greedy when `temperature <= 0`, tempered softmax
+/// otherwise, with an explicit seed for reproducibility.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    temperature: f32,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(temperature: f32, seed: u64) -> Self {
+        Sampler { temperature, rng: Rng::new(seed) }
+    }
+
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        if self.temperature <= 0.0 {
+            greedy(logits) as i32
+        } else {
+            temperature(logits, self.temperature, &mut self.rng) as i32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_first_max_on_ties() {
+        assert_eq!(greedy(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(greedy(&[5.0, 5.0]), 0);
+        assert_eq!(greedy(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn temperature_limit_is_greedy() {
+        // At a vanishing temperature the tempered distribution puts all
+        // mass on the argmax, so every draw must agree with greedy.
+        let logits = [0.3f32, 2.0, -1.0, 1.9];
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            assert_eq!(temperature(&logits, 1e-4, &mut rng), greedy(&logits));
+        }
+    }
+
+    #[test]
+    fn temperature_distribution_sanity() {
+        // logits ln(1), ln(1), ln(8) at t=1: index 2 carries 80% of the
+        // mass and must dominate the draw counts.
+        let logits = [0.0f32, 0.0, 8f32.ln()];
+        let mut s = Sampler::new(1.0, 13);
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[s.sample(&logits) as usize] += 1;
+        }
+        assert!(counts[2] > counts[0] * 4, "{counts:?}");
+        assert!(counts[2] > counts[1] * 4, "{counts:?}");
+        assert!(counts[0] > 0 && counts[1] > 0, "{counts:?}");
+    }
+
+    #[test]
+    fn seeded_sampler_is_reproducible() {
+        let logits = [0.1f32, 0.9, 0.5, 0.2];
+        let draw = |seed: u64| -> Vec<i32> {
+            let mut s = Sampler::new(0.8, seed);
+            (0..50).map(|_| s.sample(&logits)).collect()
+        };
+        assert_eq!(draw(7), draw(7));
+        assert_ne!(draw(7), draw(8)); // astronomically unlikely to collide
+    }
+
+    #[test]
+    fn zero_temperature_sampler_is_greedy() {
+        let mut s = Sampler::new(0.0, 1);
+        assert_eq!(s.sample(&[1.0, 0.0, 2.0]), 2);
+        assert_eq!(s.sample(&[4.0, 4.0, 2.0]), 0);
+    }
+}

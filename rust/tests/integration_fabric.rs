@@ -350,6 +350,65 @@ fn concurrent_tagged_exchanges_collect_by_tag() {
     fabric.shutdown();
 }
 
+/// Bounded-stash behaviour (prerequisite for pipelining deeper than two
+/// microbatches): with `k` exchange generations in flight, the tag-keyed
+/// stash never grows beyond the open-tag count, hands each generation
+/// exactly its own replies, and drains fully once every generation is
+/// collected.  A stashed reply whose generation is no longer open fails
+/// loudly on the next collect — and is consumed, so one stale reply
+/// cannot wedge every later collect.
+#[test]
+fn stash_bounded_by_open_tags_and_drains() {
+    let Some(m) = manifest() else { return };
+    let fabric = Fabric::spawn(1, worker_programs(&m)).unwrap();
+    let (mdim, f) = (128usize, 512usize);
+    fabric.load_expert(0, 0, 0, diag_weights(mdim, f, 0.5, 2.0)).unwrap();
+    let block: Vec<f32> =
+        (0..3 * mdim).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+    let mk_batch = |tag: u64| ExpertFfnBatch {
+        layer: 0,
+        experts: vec![(0, 3)],
+        data: HostTensor::f32(&[3, mdim], block.clone()),
+        tag,
+    };
+
+    // Three generations in flight at once (deeper than the current
+    // two-microbatch pipeline ever goes).
+    assert_eq!(fabric.stash_depth(), 0);
+    for tag in [41u64, 42, 43] {
+        fabric.dispatch_ffn_batch(0, mk_batch(tag)).unwrap();
+    }
+    // Collect the *last* generation first: the single worker replies in
+    // dispatch order, so both earlier replies must be stashed — exactly
+    // the open-tag count, never more.
+    let r = fabric.collect_ffn_batches(1, 0, 43, &[41, 42]).unwrap();
+    assert_eq!(r[0].tag, 43);
+    assert_eq!(fabric.stash_depth(), 2);
+    let r = fabric.collect_ffn_batches(1, 0, 42, &[41]).unwrap();
+    assert_eq!(r[0].tag, 42);
+    assert_eq!(fabric.stash_depth(), 1);
+    let r = fabric.collect_ffn_batches(1, 0, 41, &[]).unwrap();
+    assert_eq!(r[0].tag, 41);
+    // Fully drained after the last collect (the moe_finish analogue).
+    assert_eq!(fabric.stash_depth(), 0);
+
+    // Loud failure at depth: park a reply for an open generation, then
+    // drop that generation from the open set — the stashed reply is now
+    // stale and the next collect must error, consuming it.
+    fabric.dispatch_ffn_batch(0, mk_batch(61)).unwrap();
+    fabric.dispatch_ffn_batch(0, mk_batch(62)).unwrap();
+    let r = fabric.collect_ffn_batches(1, 0, 62, &[61]).unwrap();
+    assert_eq!(r[0].tag, 62);
+    assert_eq!(fabric.stash_depth(), 1);
+    let err = fabric
+        .collect_ffn_batches(1, 0, 99, &[])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("stale"), "{err}");
+    assert_eq!(fabric.stash_depth(), 0, "stale entry must be consumed");
+    fabric.shutdown();
+}
+
 #[test]
 fn unloaded_expert_is_an_error() {
     let Some(m) = manifest() else { return };

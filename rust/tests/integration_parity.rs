@@ -4,10 +4,11 @@
 //! AOT program (fused Pallas kernels inside one XLA executable) for the
 //! same weights and inputs.
 
-use ds_moe::config::AllToAllKind;
+use ds_moe::config::{AllToAllKind, ServingConfig};
 use ds_moe::data::{Corpus, CorpusConfig};
 use ds_moe::runtime::{Checkpoint, HostTensor, Manifest, Runtime};
-use ds_moe::server::EpEngine;
+use ds_moe::server::{EpEngine, Scheduler};
+use ds_moe::tokenizer::EOS;
 use ds_moe::util::stats::argmax;
 
 fn manifest() -> Option<Manifest> {
@@ -259,6 +260,116 @@ fn bitwise_three_way(model: &str, workers: usize) {
     assert!(pipelined.metrics.samples("attn_overlap") > 0);
     assert!(pipelined.metrics.samples("pipeline_bubble") > 0);
     assert_eq!(pipelined.metrics.samples("expert_wait"), 0);
+    // The tag-keyed reply stash drains fully between forwards.
+    assert_eq!(pipelined.fabric_stash_depth(), 0);
+}
+
+/// Acceptance bar of the continuous-batching refactor: under greedy
+/// sampling, the scheduler-driven EP path must emit **token-identical**
+/// sequences to back-to-back `forward_prefill`/`forward_decode` over the
+/// same prompts — per-lane outputs are independent of lane placement,
+/// admission batching, and dead-lane masking.
+fn ep_scheduler_token_parity(model: &str, serial: bool, pipeline: bool) {
+    let Some(m) = manifest() else { return };
+    let batch = 8usize;
+    let workers = 4usize;
+    let cfg = m.model(model).unwrap().config.clone();
+    let smax = cfg.max_seq;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let plen = 8usize;
+    let max_new = 5usize;
+
+    // Manual fixed-lane driver: greedy continuation for max_new tokens.
+    let mut manual =
+        EpEngine::new(&m, model, workers, AllToAllKind::Hierarchical, batch)
+            .unwrap();
+    manual.set_serial_moe(serial);
+    manual.set_pipeline(pipeline);
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+    let rows = manual.forward_prefill(&tokens, &lens).unwrap();
+    let mut seqs: Vec<Vec<i32>> =
+        rows.iter().map(|r| vec![argmax(r) as i32]).collect();
+    let mut tok: Vec<i32> = seqs.iter().map(|s| s[0]).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    for _ in 1..max_new {
+        let rows = manual.forward_decode(&tok, &pos).unwrap();
+        tok = rows.iter().map(|r| argmax(r) as i32).collect();
+        for (s, &t) in seqs.iter_mut().zip(&tok) {
+            s.push(t);
+        }
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    // The scheduler retires a sequence at EOS (inclusive); truncate the
+    // manual sequences the same way.
+    for s in seqs.iter_mut() {
+        if let Some(i) = s.iter().position(|&t| t == EOS) {
+            s.truncate(i + 1);
+        }
+    }
+
+    // Scheduler-driven run over the same prompts (greedy: temperature 0).
+    let mut ep =
+        EpEngine::new(&m, model, workers, AllToAllKind::Hierarchical, batch)
+            .unwrap();
+    ep.set_serial_moe(serial);
+    ep.set_pipeline(pipeline);
+    let mut sched = Scheduler::new(
+        ep,
+        ServingConfig {
+            model: model.into(),
+            max_batch: batch,
+            max_new_tokens: max_new,
+            batch_timeout: std::time::Duration::from_millis(1),
+            ..Default::default()
+        },
+    );
+    let mut ids = Vec::new();
+    for b in 0..batch {
+        ids.push(sched.submit(corpus.prompt(b, plen), Some(max_new)).unwrap());
+    }
+    let mut responses = sched.run_until_idle().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), batch);
+    for (b, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, ids[b]);
+        assert_eq!(
+            r.tokens, seqs[b],
+            "{model} serial={serial} pipeline={pipeline}: request {b} \
+             scheduler tokens != fixed-lane tokens"
+        );
+    }
+    assert_eq!(sched.model.fabric_stash_depth(), 0);
+}
+
+#[test]
+fn scheduler_token_parity_serial() {
+    ep_scheduler_token_parity("moe-s-8", true, false);
+}
+
+#[test]
+fn scheduler_token_parity_overlap() {
+    ep_scheduler_token_parity("moe-s-8", false, false);
+}
+
+#[test]
+fn scheduler_token_parity_pipelined() {
+    ep_scheduler_token_parity("moe-s-8", false, true);
+}
+
+#[test]
+fn scheduler_token_parity_prmoe_pipelined() {
+    ep_scheduler_token_parity("prmoe-s", false, true);
 }
 
 #[test]

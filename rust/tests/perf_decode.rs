@@ -7,7 +7,7 @@
 use ds_moe::config::ServingConfig;
 use ds_moe::data::{Corpus, CorpusConfig};
 use ds_moe::runtime::Manifest;
-use ds_moe::server::Engine;
+use ds_moe::server::{Engine, Scheduler};
 
 fn run_decode_heavy(model: &str) -> (f64, f64) {
     let manifest = Manifest::load("artifacts").unwrap();
@@ -16,16 +16,16 @@ fn run_decode_heavy(model: &str) -> (f64, f64) {
         valid_seqs: 32,
         ..Default::default()
     });
-    let mut engine = Engine::new(
-        &manifest,
-        ServingConfig {
-            model: model.into(),
-            max_new_tokens: 24,
-            batch_timeout: std::time::Duration::from_millis(1),
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let serving = ServingConfig {
+        model: model.into(),
+        max_new_tokens: 24,
+        batch_timeout: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
+    let mut engine = Scheduler::new(
+        Engine::new(&manifest, serving.clone()).unwrap(),
+        serving,
+    );
     // warmup / compile
     engine.submit(corpus.prompt(0, 8), Some(2)).unwrap();
     engine.run_until_idle().unwrap();

@@ -7,6 +7,11 @@ cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
+# EP continuous-batching smoke: the scheduler-backed expert-parallel path
+# must admit/retire requests end to end (no-ops without artifacts/, like
+# every integration test).  Named explicitly so a filtered `cargo test`
+# invocation can never silently drop it from the gate.
+cargo test -q --test integration_serving ep_scheduler
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 
