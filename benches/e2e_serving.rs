@@ -21,6 +21,16 @@
 //! occupancy (busy lanes per decode step), and the exposed
 //! `pipeline_bubble` under load.
 //!
+//! Part 4 is the depth sweep: the microbatch pipeline ring at
+//! N ∈ {1, 2, 3, 4} (forward latencies + summed exposed wait per depth,
+//! from the per-depth `pipeline_bubble_d{N}` breakdowns).
+//!
+//! Part 5 is the admission-interleaving study: the same Poisson workload
+//! with prefill-behind-decode interleaving on vs the stop-the-world
+//! baseline — the acceptance bar is the interleaved summed exposed wait
+//! (`pipeline_bubble` + `prefill_stall` + `expert_wait`) landing strictly
+//! below the stop-the-world sum at equal token output.
+//!
 //! Everything is also emitted to `BENCH_e2e.json` at the repo root so the
 //! perf trajectory is tracked across PRs.
 
@@ -249,13 +259,219 @@ fn main() {
     }
     ct.note("arrival-driven admission through Scheduler<EpEngine>: \
              requests splice into free decode lanes (balanced across the \
-             two pipeline microbatch groups), dead lanes are masked out \
-             of expert dispatch; occupancy = mean busy-lane fraction per \
+             pipeline microbatch groups), dead lanes are masked out of \
+             expert dispatch; occupancy = mean busy-lane fraction per \
              decode step");
     ct.print();
     let _ = ct.save_csv("e2e_continuous_batching");
 
-    write_bench_json(&rows, &studies, &cb_rows);
+    // --- depth sweep: the pipeline ring at N in {1, 2, 3, 4} -------------
+    let mut depth_rows = Vec::new();
+    let mut dt = Table::new(
+        "Pipeline ring depth sweep (moe-s-8, fixed-lane forwards)",
+        &["requested N", "resolved", "prefill", "decode", "exposed wait",
+          "bubble/layer"],
+    );
+    for depth in [1usize, 2, 3, 4] {
+        let Some(row) = depth_study(&manifest, &corpus, "moe-s-8", 4, depth)
+        else {
+            continue;
+        };
+        dt.row(&[
+            row.requested.to_string(),
+            row.resolved.to_string(),
+            fmt_ns(row.prefill_ns as u64),
+            fmt_ns(row.decode_ns as u64),
+            fmt_ns(row.exposed_wait_ns),
+            fmt_ns(row.bubble_per_layer_ns as u64),
+        ]);
+        depth_rows.push(row);
+    }
+    dt.note("deeper rings hide more of the expert round trip behind the \
+             partner microbatches' attention+gate, at smaller per-program \
+             batch shapes; a requested depth whose shape ladder is \
+             missing falls back to 2, then 1 (resolved column)");
+    dt.print();
+    let _ = dt.save_csv("e2e_depth_sweep");
+
+    // --- admission interleaving: prefill-behind-decode vs stop-the-world -
+    let mut adm_rows = Vec::new();
+    let mut at = Table::new(
+        "Admission prefills: interleaved vs stop-the-world (Poisson)",
+        &["model", "mode", "tokens", "tok/s", "TTFT p50", "bubble",
+          "prefill stall", "exposed wait"],
+    );
+    for model in ["moe-s-8", "prmoe-s"] {
+        for interleave in [false, true] {
+            let Some(row) = admission_study(
+                &manifest, &corpus, model, 4, interleave,
+            ) else {
+                continue;
+            };
+            at.row(&[
+                row.model.clone(),
+                row.mode.to_string(),
+                row.tokens.to_string(),
+                f1(row.tok_per_s),
+                fmt_ns(row.ttft_p50_ns),
+                fmt_ns(row.bubble_ns),
+                fmt_ns(row.stall_ns),
+                fmt_ns(row.exposed_wait_ns),
+            ]);
+            adm_rows.push(row);
+        }
+    }
+    at.note("exposed wait = pipeline_bubble + prefill_stall + expert_wait \
+             sums; interleaved admissions run the prefill's layer \
+             programs behind the decode ring's in-flight exchanges \
+             instead of stalling every decode lane — the acceptance bar \
+             is a strictly smaller exposed-wait sum at equal token \
+             output");
+    at.print();
+    let _ = at.save_csv("e2e_admission_interleaving");
+
+    write_bench_json(&rows, &studies, &cb_rows, &depth_rows, &adm_rows);
+}
+
+struct DepthRow {
+    requested: usize,
+    resolved: usize,
+    prefill_ns: f64,
+    decode_ns: f64,
+    exposed_wait_ns: u64,
+    bubble_per_layer_ns: f64,
+}
+
+/// Fixed-lane forwards at one requested ring depth (steady state, warmup
+/// excluded) — the depth-sweep row.
+fn depth_study(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    model: &str,
+    workers: usize,
+    depth: usize,
+) -> Option<DepthRow> {
+    let batch = 8usize;
+    let mut ep = EpEngine::new(
+        manifest,
+        model,
+        workers,
+        AllToAllKind::Hierarchical,
+        batch,
+    )
+    .ok()?;
+    ep.set_serial_moe(false);
+    ep.set_pipeline(true);
+    ep.set_pipe_depth(depth);
+    let resolved = ep.microbatches();
+    let smax = ep.cfg.max_seq;
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+    let lens = vec![plen; batch];
+    let first = ep.forward_prefill(&tokens, &lens).ok()?;
+    let mut tok: Vec<i32> = first.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    ep.forward_decode(&tok, &pos).ok()?;
+    ep.metrics = std::sync::Arc::new(Metrics::new());
+    for _ in 0..2 {
+        ep.forward_prefill(&tokens, &lens).ok()?;
+    }
+    for _ in 0..6 {
+        let out = ep.forward_decode(&tok, &pos).ok()?;
+        tok = out.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    let bubbles = ep.metrics.samples("pipeline_bubble").max(1);
+    Some(DepthRow {
+        requested: depth,
+        resolved,
+        prefill_ns: ep.metrics.mean_ns("forward_prefill"),
+        decode_ns: ep.metrics.mean_ns("forward_decode"),
+        exposed_wait_ns: ep.metrics.sum_ns("expert_wait")
+            + ep.metrics.sum_ns("pipeline_bubble"),
+        bubble_per_layer_ns: ep.metrics.sum_ns("pipeline_bubble") as f64
+            / bubbles as f64,
+    })
+}
+
+struct AdmissionRow {
+    model: String,
+    mode: &'static str,
+    tokens: usize,
+    tok_per_s: f64,
+    ttft_p50_ns: u64,
+    bubble_ns: u64,
+    stall_ns: u64,
+    expert_wait_ns: u64,
+    exposed_wait_ns: u64,
+    interleaved_admissions: u64,
+}
+
+/// Poisson continuous batching with interleaved vs stop-the-world
+/// admission prefills — the summed-exposed-wait comparison.
+fn admission_study(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    model: &str,
+    workers: usize,
+    interleave: bool,
+) -> Option<AdmissionRow> {
+    let batch = 8usize;
+    let n_requests = 24usize;
+    let rate = 200.0;
+    let max_new = 6usize;
+    let mut ep = EpEngine::new(
+        manifest,
+        model,
+        workers,
+        AllToAllKind::Hierarchical,
+        batch,
+    )
+    .ok()?;
+    ep.set_serial_moe(false);
+    ep.set_pipeline(true);
+    ep.set_interleave(interleave);
+    let serving = ServingConfig {
+        model: model.into(),
+        workers,
+        max_batch: batch,
+        max_new_tokens: max_new,
+        batch_timeout: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(ep, serving);
+    for i in 0..batch {
+        sched.submit(corpus.prompt(i, 8), Some(2)).ok()?;
+    }
+    sched.run_until_idle().ok()?;
+    sched.reset_metrics();
+    let (responses, wall) = sched
+        .run_poisson(n_requests, rate, max_new, 37, |i| corpus.prompt(i, 8))
+        .ok()?;
+    let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let bubble = sched.metrics.sum_ns("pipeline_bubble");
+    let stall = sched.metrics.sum_ns("prefill_stall");
+    let wait = sched.metrics.sum_ns("expert_wait");
+    Some(AdmissionRow {
+        model: model.to_string(),
+        mode: if interleave { "interleaved" } else { "stop_world" },
+        tokens,
+        tok_per_s: tokens as f64 / wall,
+        ttft_p50_ns: ttft_percentile(&responses, 50),
+        bubble_ns: bubble,
+        stall_ns: stall,
+        expert_wait_ns: wait,
+        exposed_wait_ns: bubble + stall + wait,
+        interleaved_admissions: sched
+            .metrics
+            .counter("interleaved_admissions"),
+    })
 }
 
 struct CbRow {
@@ -446,12 +662,15 @@ fn pipeline_study(
 }
 
 /// Emit `BENCH_e2e.json` at the repo root: the serving sweep, the MoE
-/// pipeline study, and the continuous-batching study, so future PRs have
-/// a machine-readable perf baseline.
+/// pipeline study, the continuous-batching study, the ring-depth sweep,
+/// and the admission-interleaving study, so future PRs have a
+/// machine-readable perf baseline.
 fn write_bench_json(
     rows: &[ServingRow],
     studies: &[PipelineStudy],
     cb_rows: &[CbRow],
+    depth_rows: &[DepthRow],
+    adm_rows: &[AdmissionRow],
 ) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"e2e_serving\",\n  \"serving\": [\n");
@@ -539,6 +758,44 @@ fn write_bench_json(
             r.pipeline_bubble_ns,
             r.expert_wait_ns,
             if i + 1 == cb_rows.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ],\n  \"depth_sweep\": [\n");
+    for (i, r) in depth_rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"requested_depth\": {}, \"resolved_depth\": {}, \
+             \"prefill_ns\": {:.0}, \"decode_ns\": {:.0}, \
+             \"exposed_wait_ns\": {}, \"bubble_per_layer_ns\": {:.0}}}{}\n",
+            r.requested,
+            r.resolved,
+            r.prefill_ns,
+            r.decode_ns,
+            r.exposed_wait_ns,
+            r.bubble_per_layer_ns,
+            if i + 1 == depth_rows.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ],\n  \"admission_interleaving\": [\n");
+    for (i, r) in adm_rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"model\": \"{}\", \"mode\": \"{}\", \"tokens\": {}, \
+             \"tok_per_s\": {:.2}, \"ttft_p50_ns\": {}, \
+             \"pipeline_bubble_ns\": {}, \"prefill_stall_ns\": {}, \
+             \"expert_wait_ns\": {}, \"exposed_wait_ns\": {}, \
+             \"interleaved_admissions\": {}}}{}\n",
+            r.model,
+            r.mode,
+            r.tokens,
+            r.tok_per_s,
+            r.ttft_p50_ns,
+            r.bubble_ns,
+            r.stall_ns,
+            r.expert_wait_ns,
+            r.exposed_wait_ns,
+            r.interleaved_admissions,
+            if i + 1 == adm_rows.len() { "" } else { "," }
         );
     }
     s.push_str("  ]\n}\n");

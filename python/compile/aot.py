@@ -38,10 +38,19 @@ from . import configs, model
 
 # Batch sizes compiled for serving; the Rust batcher rounds up to one of
 # these.  Prefill sequence length is always cfg.max_seq (prompts padded).
-# Half-batch shapes (2 = half of 4, 4 = half of 8) double as microbatch
-# shapes for the EP engine's cross-layer pipeline.
 DECODE_BATCH_SIZES = (1, 2, 4, 8)
 PREFILL_BATCH_SIZES = (1, 2, 4, 8)
+# Extra microbatch sizes for the EP engine's depth-N pipeline ring: a batch
+# of B lanes split into N contiguous groups runs groups of ceil(B/N) and
+# floor(B/N) lanes (8 lanes at depth 3 -> groups of 3, 3, 2), so the
+# *shared* layer-granular ladders also carry these sizes.  3 is the only
+# size the base ladders miss for B <= 8, N <= 4; the monolithic
+# prefill_b{B}/decode_b{B} exports stay on the base ladder.
+PIPELINE_MICROBATCH_SIZES = (3,)
+SHARED_PREFILL_SIZES = tuple(
+    sorted(set(PREFILL_BATCH_SIZES) | set(PIPELINE_MICROBATCH_SIZES)))
+SHARED_DECODE_SIZES = tuple(
+    sorted(set(DECODE_BATCH_SIZES) | set(PIPELINE_MICROBATCH_SIZES)))
 # Expert-block capacities compiled for the disaggregated expert-FFN program;
 # the coordinator pads each expert's token block up to the next one.
 EXPERT_BLOCK_SIZES = (1, 4, 8, 16, 64, 256, 512)
@@ -262,7 +271,7 @@ class Exporter:
         """
         sh = self.manifest["shared"]
         for (V, M) in sorted(set(vocab_dims)):
-            for B in PREFILL_BATCH_SIZES:
+            for B in SHARED_PREFILL_SIZES:
                 key = f"embed_v{V}_m{M}_b{B}_s{smax}"
                 ins = [_spec((V, M), "f32", "tok_emb"),
                        _spec((smax, M), "f32", "pos_emb"),
@@ -273,7 +282,7 @@ class Exporter:
                     "shared/" + key,
                     lambda te, pe, t, p0: (model.prog_embed(te, pe, t, p0),),
                     ins, outs)
-            for B in DECODE_BATCH_SIZES:
+            for B in SHARED_DECODE_SIZES:
                 key = f"embed_v{V}_m{M}_b{B}_s1"
                 ins = [_spec((V, M), "f32", "tok_emb"),
                        _spec((smax, M), "f32", "pos_emb"),
@@ -296,7 +305,7 @@ class Exporter:
 
         for (M, H, F) in sorted(set(dims)):
             hd = M // H
-            for B in PREFILL_BATCH_SIZES:
+            for B in SHARED_PREFILL_SIZES:
                 key = f"attn_prefill_m{M}_h{H}_b{B}_s{smax}"
                 ins = ([_spec((B, smax, M), "f32", "h")]
                        + [_spec((M,), "f32", "ln_g"),
@@ -320,7 +329,7 @@ class Exporter:
                     "shared/" + key,
                     lambda h, lens: (model.prog_gather_last(h, lens),),
                     ins, outs)
-            for B in DECODE_BATCH_SIZES:
+            for B in SHARED_DECODE_SIZES:
                 key = f"attn_decode_m{M}_h{H}_b{B}_s{smax}"
                 ins = ([_spec((B, 1, M), "f32", "h")]
                        + [_spec((M,), "f32", "ln_g"),
@@ -337,8 +346,8 @@ class Exporter:
                     "shared/" + key,
                     functools.partial(model.prog_attn_decode, n_heads=H),
                     ins, outs)
-            for T in sorted({b for b in DECODE_BATCH_SIZES}
-                            | {b * smax for b in PREFILL_BATCH_SIZES}):
+            for T in sorted({b for b in SHARED_DECODE_SIZES}
+                            | {b * smax for b in SHARED_PREFILL_SIZES}):
                 key = f"dense_ffn_m{M}_f{F}_t{T}"
                 # operates on [B,S,M]; flat T tokens as [1, T, M]
                 ins = ([_spec((1, T, M), "f32", "h")]
@@ -355,8 +364,8 @@ class Exporter:
                     ins, outs)
 
         for (M, E) in sorted(set(gate_dims)):
-            for T in sorted({b for b in DECODE_BATCH_SIZES}
-                            | {b * smax for b in PREFILL_BATCH_SIZES}):
+            for T in sorted({b for b in SHARED_DECODE_SIZES}
+                            | {b * smax for b in SHARED_PREFILL_SIZES}):
                 key = f"gate_m{M}_e{E}_t{T}"
                 ins = [_spec((1, T, M), "f32", "h"),
                        _spec((M,), "f32", "ln_g"), _spec((M,), "f32", "ln_b"),
@@ -378,8 +387,8 @@ class Exporter:
                     lambda x, w1, b1, w2, b2:
                     (model.prog_expert_ffn(x, w1, b1, w2, b2),),
                     ins, outs)
-            for T in sorted({b for b in DECODE_BATCH_SIZES}
-                            | {b * smax for b in PREFILL_BATCH_SIZES}):
+            for T in sorted({b for b in SHARED_DECODE_SIZES}
+                            | {b * smax for b in SHARED_PREFILL_SIZES}):
                 key = f"residual_branch_m{M}_f{F}_t{T}"
                 ins = [_spec((T, M), "f32", "x"),
                        _spec((M, F), "f32", "w1"), _spec((F,), "f32", "b1"),

@@ -118,6 +118,12 @@ pub struct ServingConfig {
     pub max_new_tokens: usize,
     /// All-to-all schedule used by the expert-parallel path.
     pub alltoall: AllToAllKind,
+    /// Microbatch pipeline ring depth for the expert-parallel engine:
+    /// N in-flight tagged exchanges per forward.  Applied by
+    /// `Scheduler::new` through `ForwardModel::configure` (equivalently
+    /// `EpEngine::set_pipe_depth`); falls back 2 → 1 when the artifact
+    /// set lacks the group-sized program shapes.
+    pub pipe_depth: usize,
     /// Greedy (argmax) vs temperature sampling.
     pub temperature: f32,
     /// Seed for temperature sampling (`util::sampling::Sampler`), so
@@ -135,6 +141,13 @@ impl Default for ServingConfig {
             batch_timeout: std::time::Duration::from_millis(2),
             max_new_tokens: 16,
             alltoall: AllToAllKind::Hierarchical,
+            // Seeded from DSMOE_PIPE_DEPTH so the env toggle survives the
+            // scheduler path: on that path this config is the single
+            // source of truth (Scheduler::new applies it through
+            // ForwardModel::configure, overwriting any earlier
+            // set_pipe_depth), so pass a non-default depth here rather
+            // than on the engine.
+            pipe_depth: crate::util::env_usize("DSMOE_PIPE_DEPTH", 2),
             temperature: 0.0,
             seed: 0xD5, // the old Engine's hard-coded RNG seed
         }

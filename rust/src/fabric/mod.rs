@@ -18,14 +18,19 @@
 //!   packed [`FfnBatchResult`] — O(workers) messages per MoE layer instead
 //!   of O(experts).
 //!
-//! Batch collection is **tag-keyed** so the cross-layer pipeline can keep
-//! two exchange generations in flight at once: while
-//! [`Fabric::collect_ffn_batches`] (blocking) or
-//! [`Fabric::try_collect_ffn_batches`] (non-blocking drain) gathers one
-//! generation's replies, replies carrying the tag of another *open*
-//! generation are stashed and handed out when that generation is
+//! Batch collection is **tag-keyed** so the depth-N cross-layer pipeline
+//! ring (plus a staged admission prefill) can keep several exchange
+//! generations in flight at once: while [`Fabric::collect_ffn_batches`]
+//! (blocking) or [`Fabric::try_collect_ffn_batches`] (non-blocking drain)
+//! gathers one generation's replies, replies carrying the tag of another
+//! *open* generation are stashed and handed out when that generation is
 //! collected; a reply whose tag is neither collected nor open is stale and
-//! fails loudly — it is never silently combined.
+//! fails loudly — it is never silently combined.  The stash never grows
+//! past one coalesced reply per worker per open generation, whatever the
+//! open-generation count (the ring can legally run as deep as the lane
+//! count, plus one staged admission); `rust/tests/integration_fabric.rs`
+//! exercises the bound at four concurrent generations
+//! ([`Fabric::stash_depth`]).
 //!
 //! Links are bounded channels with byte accounting ([`Traffic`]): every
 //! payload that crosses a worker boundary is counted, which is what the
@@ -134,7 +139,8 @@ pub struct Fabric {
     peer_txs: Vec<Sender<Cmd>>,
     /// Replies of *other* still-open tagged exchanges received while
     /// collecting a given one (the leader is single-threaded; the stash
-    /// holds at most one generation's worth of replies).
+    /// holds at most one coalesced reply per worker per open generation —
+    /// the pipeline ring depth plus a staged admission bound it).
     stash: RefCell<Vec<FfnBatchResult>>,
 }
 
@@ -179,11 +185,12 @@ impl Fabric {
 
     /// Number of replies currently parked in the tag-keyed stash.  Bounded
     /// by the number of *open* exchange generations (at most one coalesced
-    /// reply per worker per open tag); every entry is handed out when its
-    /// generation is collected, so the stash drains to zero once no
-    /// exchange is in flight — `rust/tests/integration_fabric.rs` pins
-    /// this bound before the pipeline is allowed to go deeper than two
-    /// microbatches.
+    /// reply per worker per open tag — the bound is generic in the
+    /// generation count, which the pipeline ring can push as high as the
+    /// lane count plus a staged admission); every entry is handed out when
+    /// its generation is collected, so the stash drains to zero once no
+    /// exchange is in flight — `rust/tests/integration_fabric.rs`
+    /// exercises the bound at four concurrent generations.
     pub fn stash_depth(&self) -> usize {
         self.stash.borrow().len()
     }

@@ -133,6 +133,17 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         "no-pipeline", false,
         "disable microbatch interleaving (DSMOE_NO_PIPELINE)",
     );
+    // Flag default comes from DSMOE_PIPE_DEPTH (via ServingConfig) so the
+    // env toggle works without --pipe-depth.
+    let pipe_depth = args.get_usize(
+        "pipe-depth",
+        ServingConfig::default().pipe_depth,
+        "microbatch pipeline ring depth N (DSMOE_PIPE_DEPTH)",
+    );
+    let no_interleave = args.get_bool(
+        "no-interleave", false,
+        "stop-the-world admission prefills (DSMOE_NO_INTERLEAVE)",
+    );
     let legacy = args.get_bool(
         "legacy", false,
         "fixed-lane driver (no request admission; pre-scheduler behaviour)",
@@ -153,11 +164,20 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
     if no_pipeline {
         ep.set_pipeline(false);
     }
+    ep.set_pipe_depth(pipe_depth);
+    if no_interleave {
+        ep.set_interleave(false);
+    }
     println!(
         "ep-serve {model}: {workers} workers, batch {batch}, {a2a:?}, \
-         {} microbatch(es), {} mode",
+         {} microbatch(es) (depth {pipe_depth} requested), {} mode{}",
         ep.microbatches(),
-        if legacy { "fixed-lane" } else { "request-driven" }
+        if legacy { "fixed-lane" } else { "request-driven" },
+        if !legacy && ep.interleave() && !serial {
+            ", interleaved admission"
+        } else {
+            ""
+        }
     );
     if legacy {
         return ep_serve_fixed(ep, &corpus, batch, steps);
@@ -171,6 +191,7 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         max_batch: batch,
         max_new_tokens: max_new,
         alltoall: a2a,
+        pipe_depth,
         ..Default::default()
     };
     let mut sched = Scheduler::new(ep, serving);
@@ -190,10 +211,13 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
     );
     println!(
         "lane occupancy: {:.1}% mean over {} decode steps; \
-         exposed pipeline bubble {}",
+         exposed pipeline bubble {}, prefill stall {} \
+         ({} interleaved admissions)",
         100.0 * sched.metrics.value_mean("decode_utilization"),
         sched.metrics.counter("decode_steps"),
         fmt_ns(sched.metrics.sum_ns("pipeline_bubble")),
+        fmt_ns(sched.metrics.sum_ns("prefill_stall")),
+        sched.metrics.counter("interleaved_admissions"),
     );
     ep_report(&sched.model);
     println!("--- metrics ---\n{}", sched.metrics.report());

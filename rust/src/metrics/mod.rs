@@ -47,6 +47,20 @@ impl Metrics {
         self.observe_ns(name, d.as_nanos().min(u64::MAX as u128) as u64);
     }
 
+    /// Record `d` into histogram `name` **and** into its per-depth
+    /// breakdown `{name}_d{depth}`, so a single report attributes e.g.
+    /// `pipeline_bubble` / `attn_overlap` to the pipeline depth that
+    /// produced each sample (depth sweeps, `DSMOE_PIPE_DEPTH`).
+    pub fn observe_tagged(
+        &self,
+        name: &str,
+        depth: usize,
+        d: std::time::Duration,
+    ) {
+        self.observe(name, d);
+        self.observe(&format!("{name}_d{depth}"), d);
+    }
+
     /// Time a closure into histogram `name`.
     pub fn timed<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
         let t = std::time::Instant::now();
@@ -217,6 +231,20 @@ mod tests {
         assert_eq!(m.value_mean("missing"), 0.0);
         let r = m.report();
         assert!(r.contains("summary decode_utilization n=8"), "{r}");
+    }
+
+    #[test]
+    fn observe_tagged_records_base_and_depth() {
+        let m = Metrics::new();
+        let d = std::time::Duration::from_micros(5);
+        m.observe_tagged("pipeline_bubble", 3, d);
+        m.observe_tagged("pipeline_bubble", 3, d);
+        m.observe_tagged("pipeline_bubble", 4, d);
+        assert_eq!(m.samples("pipeline_bubble"), 3);
+        assert_eq!(m.samples("pipeline_bubble_d3"), 2);
+        assert_eq!(m.samples("pipeline_bubble_d4"), 1);
+        let r = m.report();
+        assert!(r.contains("latency pipeline_bubble_d3"), "{r}");
     }
 
     #[test]

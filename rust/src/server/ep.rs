@@ -28,22 +28,29 @@
 //!   5. **`combine`** — gate-scale and un-permute the packed expert
 //!      outputs, then add the residual branch and the residual stream.
 //!
-//! [`MoeScratch`] is double-buffered (one slot per pipeline microbatch), so
-//! two tagged exchanges can be in flight at once; a reply from any exchange
-//! that is neither being collected nor still open fails loudly (tag-keyed
-//! collection in [`crate::fabric::Fabric`]).
+//! [`MoeScratch`] is an N-slot pool (one slot per pipeline microbatch plus
+//! one for a staged admission prefill), so several tagged exchanges can be
+//! in flight at once; a reply from any exchange that is neither being
+//! collected nor still open fails loudly (tag-keyed collection in
+//! [`crate::fabric::Fabric`]).
 //!
-//! ## Microbatch-interleaved cross-layer pipelining
+//! ## Depth-N microbatch pipeline ring
 //!
-//! `forward_prefill`/`forward_decode` split the batch into two microbatches
-//! when the half-batch AOT shapes exist.  While microbatch A's expert
-//! blocks are out on the fabric for layer L, the leader runs microbatch B's
-//! attention + gate + dispatch for the same layer (timed as
-//! `attn_overlap`), finishes A, and immediately starts A's layer L+1
-//! behind B's exchange.  The only exposed wait is the pipeline fill/drain
-//! bubble (`pipeline_bubble`).  Decode KV caches live in per-microbatch
-//! lane groups and are repartitioned on the host if the path toggles
-//! between forwards.
+//! `forward_prefill`/`forward_decode` split the batch into
+//! `N = DSMOE_PIPE_DEPTH` (default 2, [`EpEngine::set_pipe_depth`])
+//! contiguous microbatch lane groups when the group-sized AOT shapes
+//! exist, and drive them through a rotating in-flight ring
+//! ([`EpEngine::run_pipeline`]): step `(layer, mb)` dispatches microbatch
+//! `mb`'s attention + gate + dispatch; once N exchanges are on the fabric
+//! the oldest — the same microbatch one layer earlier, by construction —
+//! is finished first.  Every start that runs while another exchange is
+//! pending lands in `attn_overlap`; the only exposed wait is the ring
+//! fill/drain bubble (`pipeline_bubble`, also broken down per depth as
+//! `pipeline_bubble_d{N}`).  Groups are as even as possible (8 lanes at
+//! depth 3 run as 3/3/2).  A requested depth whose shape ladder is missing
+//! from the artifact set falls back to depth 2, then 1.  Decode KV caches
+//! live in per-microbatch lane groups and are repartitioned on the host if
+//! the partition changes between forwards.
 //!
 //! ## Continuous batching (scheduler-backed mode)
 //!
@@ -51,33 +58,64 @@
 //! [`crate::server::Scheduler`] can drive it with real request admission:
 //! an admission prefill runs at a compiled lane count (padding masked),
 //! its per-layer KV is spliced into free lanes of the decode groups
-//! (admissions alternate between the two pipeline lane groups to keep the
-//! microbatches balanced), decode steps run the normal full-lane-group
-//! forwards with retired/free lanes masked out of gate + dispatch (dead
-//! lanes send **no** expert traffic), and released lanes are reused by
-//! later admissions.  Live lanes stay bit-identical to the fixed-lane
-//! driver; the legacy mode (`forward_prefill`/`forward_decode` with every
-//! lane driven explicitly) is untouched and resets the lane state.
+//! (admissions balance live load across the N pipeline lane groups),
+//! decode steps run the normal full-lane-group forwards with retired/free
+//! lanes masked out of gate + dispatch (dead lanes send **no** expert
+//! traffic), and released lanes are reused by later admissions.  Live
+//! lanes stay bit-identical to the fixed-lane driver; the legacy mode
+//! (`forward_prefill`/`forward_decode` with every lane driven explicitly)
+//! is untouched and resets the lane state.  Three scheduler-mode
+//! capabilities ride on top:
+//!
+//! * **Prefill-behind-decode interleaving** — `begin_prefill` stages an
+//!   admission; each decode-layer exchange the ring puts on the fabric
+//!   advances the staged prefill by one layer
+//!   ([`EpEngine::advance_admission`]), so admission compute hides behind
+//!   decode round trips instead of stopping the world.  The admission's
+//!   own exposed wait lands in `prefill_stall`; `finish_prefill` completes
+//!   whatever the gaps did not cover and splices the KV.
+//! * **Dynamic lane regrouping** — when retirement skews per-group live
+//!   occupancy by at least `DSMOE_REGROUP_SKEW` (default 2) lanes, live
+//!   lanes migrate into free slots of idler groups before the next decode
+//!   step (KV moved through the host mirrors; external lane ids are
+//!   preserved via an internal lane permutation, so the scheduler never
+//!   observes the move).  Counted in `lane_regroups` / `lane_moves`.
+//! * **Host-side KV mirrors** — each lane group keeps per-layer host
+//!   copies of its K/V caches (invalidated by decode writes, exactly like
+//!   the monolithic engine's `cache_lits`), so admission splices and
+//!   regroup moves copy only the touched lanes instead of round-tripping
+//!   the whole group's cache per layer.
 //!
 //! ## Env toggles
 //!
-//! | variable            | effect                                         |
-//! |---------------------|------------------------------------------------|
-//! | `DSMOE_SERIAL_MOE`  | serialized per-expert MoE path (pre-overlap    |
-//! |                     | baseline): gate → one message per expert →     |
-//! |                     | blocking collect → combine; also disables the  |
-//! |                     | pipeline ([`EpEngine::set_serial_moe`]).       |
-//! | `DSMOE_NO_PIPELINE` | per-layer overlapped path (the pre-pipeline    |
-//! |                     | behaviour): split-phase dispatch immediately   |
-//! |                     | followed by finish, full-batch shapes          |
-//! |                     | ([`EpEngine::set_pipeline`]).                  |
+//! | variable              | effect                                       |
+//! |-----------------------|----------------------------------------------|
+//! | `DSMOE_SERIAL_MOE`    | serialized per-expert MoE path (pre-overlap  |
+//! |                       | baseline): gate → one message per expert →   |
+//! |                       | blocking collect → combine; also disables    |
+//! |                       | the pipeline ([`EpEngine::set_serial_moe`]). |
+//! | `DSMOE_NO_PIPELINE`   | per-layer overlapped path (the pre-pipeline  |
+//! |                       | behaviour): split-phase dispatch immediately |
+//! |                       | followed by finish, full-batch shapes        |
+//! |                       | ([`EpEngine::set_pipeline`]).                |
+//! | `DSMOE_PIPE_DEPTH`    | microbatch ring depth N (default 2;          |
+//! |                       | [`EpEngine::set_pipe_depth`]).               |
+//! | `DSMOE_NO_INTERLEAVE` | stop-the-world admission prefills (the       |
+//! |                       | pre-interleaving scheduler behaviour;        |
+//! |                       | [`EpEngine::set_interleave`]).               |
+//! | `DSMOE_REGROUP_SKEW`  | live-lane skew (max − min per group) that    |
+//! |                       | triggers a regroup; default 2 — a skew of 1  |
+//! |                       | is unavoidable whenever live lanes don't     |
+//! |                       | divide evenly, so 2 is the smallest          |
+//! |                       | actionable imbalance.                        |
 //!
-//! All three paths — serial, overlapped, pipelined — produce
-//! **bit-identical** logits for prefill and decode (asserted in
-//! `integration_parity.rs`); `benches/e2e_serving.rs` compares their
-//! forward latencies and exposed waits into `BENCH_e2e.json`.
+//! All paths — serial, overlapped, pipelined at any depth — produce
+//! **bit-identical** logits for prefill and decode (asserted at depths 2,
+//! 3 and 4 in `integration_parity.rs`); `benches/e2e_serving.rs` compares
+//! their forward latencies, exposed waits, the depth sweep, and
+//! interleaved vs stop-the-world admission into `BENCH_e2e.json`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 
 use anyhow::{Context, Result};
@@ -93,6 +131,7 @@ use crate::runtime::{
     Checkpoint, HostTensor, Manifest, Program, Runtime,
 };
 use crate::server::scheduler::{AdmittedLane, ForwardModel};
+use crate::util::env_usize;
 
 pub struct EpEngine {
     rt: Runtime,
@@ -112,35 +151,58 @@ pub struct EpEngine {
     alltoall: AllToAllKind,
     /// Decode KV caches in per-microbatch lane groups; each group holds
     /// per-layer `[lanes, H, Smax, hd]` tensors (monolithic layout is
-    /// `[L, B, ...]`).  One group when the pipeline is off, two when on.
+    /// `[L, B, ...]`).  One group when the pipeline is off, N when on.
     caches: Vec<LaneGroupCaches>,
     batch: usize,
     /// `DSMOE_SERIAL_MOE`: run the old serialized per-expert MoE path
     /// instead of the overlapped/coalesced pipeline (for measurement).
     serial_moe: bool,
     /// `DSMOE_NO_PIPELINE` (inverted): microbatch-interleave forwards when
-    /// the half-batch program shapes are available.
+    /// the group-sized program shapes are available.
     pipeline: bool,
-    /// Computed once at construction: the manifest has every program the
-    /// pipelined path needs at `batch / 2` (false for odd batches).
-    half_shapes_ok: bool,
-    /// Double-buffered routing/combine scratch: one slot per pipeline
-    /// microbatch so two exchanges can be staged at once.
-    scratch: [MoeScratch; 2],
+    /// Requested microbatch ring depth (`DSMOE_PIPE_DEPTH`, default 2);
+    /// the resolved depth falls back 2 → 1 when shapes are missing.
+    pipe_depth: usize,
+    /// `depth_ok[d]`: the manifest has every program shape the d-group
+    /// lane partition needs (computed once at construction).
+    depth_ok: Vec<bool>,
+    /// Lane partition of the forward currently in flight (its group
+    /// count); keys the per-depth metric breakdowns.
+    active_depth: usize,
+    /// `DSMOE_NO_INTERLEAVE` (inverted): admission prefills run behind
+    /// in-flight decode exchanges instead of stopping the world.
+    interleave: bool,
+    /// Live-lane skew (max − min per group) that triggers a regroup
+    /// (`DSMOE_REGROUP_SKEW`, default 2).
+    regroup_skew: usize,
+    /// Routing/combine scratch pool: one slot per pipeline microbatch
+    /// (index = microbatch) plus a dedicated slot (index = `batch`) for a
+    /// staged admission prefill.
+    scratch: Vec<MoeScratch>,
     /// Monotonic exchange generation: stamped into every coalesced batch
     /// so stale replies of an aborted exchange (even at the same layer of
     /// a retried forward) can never be combined into a later one.
     exchange_seq: u64,
-    /// Tags of exchanges currently out on the fabric (at most two): the
-    /// collector stashes replies for these instead of failing.
+    /// Tags of exchanges currently out on the fabric (at most the ring
+    /// depth plus a staged admission): the collector stashes replies for
+    /// these instead of failing.
     open_tags: Vec<u64>,
     /// Continuous-batching lane occupancy (scheduler-backed mode):
-    /// `lane_live[lane]` is true while a live request occupies the lane.
-    /// Dead lanes are masked out of gate + dispatch so they send no expert
-    /// traffic.  Empty in the legacy fixed-lane mode (no masking — every
-    /// lane is driven explicitly), which keeps that path bit-identical to
-    /// the pre-refactor engine.
+    /// `lane_live[phys]` is true while a live request occupies the
+    /// physical lane.  Dead lanes are masked out of gate + dispatch so
+    /// they send no expert traffic.  Empty in the legacy fixed-lane mode
+    /// (no masking — every lane is driven explicitly), which keeps that
+    /// path bit-identical to the pre-refactor engine.
     lane_live: Vec<bool>,
+    /// Scheduler-visible lane id → physical lane slot.  Identity until a
+    /// regroup migrates live lanes between groups; external ids stay
+    /// stable for a request's whole lifetime.  Empty in legacy mode.
+    lane_phys: Vec<usize>,
+    /// Inverse of `lane_phys`: physical slot → external lane id.
+    lane_ext: Vec<usize>,
+    /// Admission prefill staged by `begin_prefill`, advanced layer by
+    /// layer behind in-flight decode exchanges.
+    pending_admission: Option<AdmissionState>,
     /// Compiled lane counts at which a scheduler admission prefill can run
     /// (every prefill-side program shape exists in the manifest).
     prefill_sizes: Vec<usize>,
@@ -167,14 +229,101 @@ struct LaneGroupCaches {
     lanes: usize,
     k: Vec<xla::Literal>,
     v: Vec<xla::Literal>,
+    /// Per-layer host mirrors of `k`/`v` (`None` = stale, repulled on
+    /// demand): admission splices and regroup moves write through these so
+    /// only the touched lanes are copied; decode writes invalidate the
+    /// touched layer (the monolithic engine's `cache_lits`, per group).
+    hk: Vec<Option<HostTensor>>,
+    hv: Vec<Option<HostTensor>>,
 }
 
-/// Output of a scheduler admission prefill ([`EpEngine::prefill_lanes`]).
-struct PrefilledLanes {
-    /// Per layer: `[lanes, H, Smax, hd]` K/V caches for the compiled lanes.
+impl LaneGroupCaches {
+    fn new(lane0: usize, lanes: usize, n_layers: usize) -> LaneGroupCaches {
+        LaneGroupCaches {
+            lane0,
+            lanes,
+            k: Vec::with_capacity(n_layers),
+            v: Vec::with_capacity(n_layers),
+            hk: Vec::with_capacity(n_layers),
+            hv: Vec::with_capacity(n_layers),
+        }
+    }
+
+    /// Append one layer's freshly computed caches (mirror starts stale).
+    fn push_kv(&mut self, k: xla::Literal, v: xla::Literal) {
+        self.k.push(k);
+        self.v.push(v);
+        self.hk.push(None);
+        self.hv.push(None);
+    }
+
+    /// Append one layer's caches from host tensors (mirror starts valid).
+    fn push_host(&mut self, k: HostTensor, v: HostTensor) -> Result<()> {
+        self.k.push(k.to_literal()?);
+        self.v.push(v.to_literal()?);
+        self.hk.push(Some(k));
+        self.hv.push(Some(v));
+        Ok(())
+    }
+
+    /// Host mirror of layer `layer`'s K cache, pulling from the literal
+    /// only when stale.
+    fn host_k(&mut self, layer: usize) -> Result<&mut HostTensor> {
+        if self.hk[layer].is_none() {
+            self.hk[layer] = Some(HostTensor::from_literal(&self.k[layer])?);
+        }
+        Ok(self.hk[layer].as_mut().unwrap())
+    }
+
+    fn host_v(&mut self, layer: usize) -> Result<&mut HostTensor> {
+        if self.hv[layer].is_none() {
+            self.hv[layer] = Some(HostTensor::from_literal(&self.v[layer])?);
+        }
+        Ok(self.hv[layer].as_mut().unwrap())
+    }
+
+    /// Rebuild layer `layer`'s literals from its (valid) host mirrors.
+    fn push_layer(&mut self, layer: usize) -> Result<()> {
+        if let Some(h) = &self.hk[layer] {
+            self.k[layer] = h.to_literal()?;
+        }
+        if let Some(h) = &self.hv[layer] {
+            self.v[layer] = h.to_literal()?;
+        }
+        Ok(())
+    }
+
+    /// Decode wrote layer `layer`'s caches: the host mirror is stale.
+    fn invalidate(&mut self, layer: usize) {
+        self.hk[layer] = None;
+        self.hv[layer] = None;
+    }
+}
+
+/// A staged admission prefill ([`EpEngine::stage_admission`]): advanced
+/// one layer at a time behind in-flight decode exchanges
+/// ([`EpEngine::advance_admission`]) and completed — LM head, KV splice,
+/// lane activation — by [`EpEngine::complete_admission`].
+struct AdmissionState {
+    /// Compiled lane count of the prefill programs.
+    compiled: usize,
+    /// Leading lanes that carry real prompts (the rest is padding).
+    live: usize,
+    /// Per compiled lane: prompt length (padding lanes: 1).
+    lens: Vec<usize>,
+    /// Free physical lanes the admitted requests will occupy.
+    lanes: Vec<usize>,
+    /// Padding mask over the `compiled * smax` prefill tokens.
+    mask: Option<Vec<bool>>,
+    /// Activation after the last completed layer.
+    h: Option<xla::Literal>,
+    /// Next layer to run.
+    layer: usize,
+    /// Per completed layer: `[compiled, H, Smax, hd]` K/V caches.
     kv: Vec<(xla::Literal, xla::Literal)>,
-    /// Last-position logits rows for the live lanes.
-    rows: Vec<Vec<f32>>,
+    /// Leader time spent on this admission across interleaved steps
+    /// (observed as `forward_prefill` at completion).
+    elapsed: std::time::Duration,
 }
 
 /// What kind of forward the shared interleave scheduler
@@ -224,8 +373,13 @@ struct PendingMoe {
     worker_experts: Vec<Vec<usize>>,
     results: Vec<FfnBatchResult>,
     /// Metric the exposed wait lands in: `expert_wait` on the per-layer
-    /// path, `pipeline_bubble` under the pipelined driver.
+    /// path, `pipeline_bubble` under the pipelined driver,
+    /// `prefill_stall` for a staged admission's layers.
     wait_metric: &'static str,
+    /// Ring depth to break the wait metric down by (`{metric}_d{N}`),
+    /// captured at dispatch time where the active partition is
+    /// authoritative; `None` = no per-depth breakdown.
+    depth_tag: Option<usize>,
 }
 
 impl InflightMoe {
@@ -301,13 +455,22 @@ impl EpEngine {
         for (i, s) in load_stats.iter().enumerate() {
             stats_idx[s.layer] = Some(i);
         }
-        let half_shapes_ok = batch % 2 == 0
-            && half_shapes_available(manifest, &cfg, batch / 2);
+        // Which microbatch ring depths this artifact set supports: depth d
+        // partitions the batch into d contiguous groups, and every group
+        // size needs its full prefill+decode program ladder.
+        let depth_ok: Vec<bool> = (0..=batch)
+            .map(|d| {
+                d >= 1
+                    && partition_lanes(batch, d).iter().all(|&(_, lanes)| {
+                        group_shapes_available(manifest, &cfg, lanes)
+                    })
+            })
+            .collect();
 
         // Compiled lane counts a scheduler admission prefill can run at:
         // the standard AOT ladder filtered by what this artifact set
         // actually exports (older sets may only have the full batch).
-        let mut prefill_sizes: Vec<usize> = [1usize, 2, 4, 8, 16, 32]
+        let mut prefill_sizes: Vec<usize> = [1usize, 2, 3, 4, 8, 16, 32]
             .into_iter()
             .chain([batch])
             .filter(|&s| s <= batch)
@@ -340,11 +503,19 @@ impl EpEngine {
                 .is_some_and(|v| v != "0"),
             pipeline: !std::env::var_os("DSMOE_NO_PIPELINE")
                 .is_some_and(|v| v != "0"),
-            half_shapes_ok,
-            scratch: [MoeScratch::default(), MoeScratch::default()],
+            pipe_depth: env_usize("DSMOE_PIPE_DEPTH", 2),
+            depth_ok,
+            active_depth: 1,
+            interleave: !std::env::var_os("DSMOE_NO_INTERLEAVE")
+                .is_some_and(|v| v != "0"),
+            regroup_skew: env_usize("DSMOE_REGROUP_SKEW", 2).max(1),
+            scratch: (0..=batch).map(|_| MoeScratch::default()).collect(),
             exchange_seq: 0,
             open_tags: Vec::new(),
             lane_live: Vec::new(),
+            lane_phys: Vec::new(),
+            lane_ext: Vec::new(),
+            pending_admission: None,
             prefill_sizes,
         })
     }
@@ -363,7 +534,7 @@ impl EpEngine {
 
     /// Enable/disable the microbatch-interleaved pipeline (defaults to the
     /// inverse of the `DSMOE_NO_PIPELINE` env toggle).  Even when enabled
-    /// the engine falls back to the per-layer path unless the half-batch
+    /// the engine falls back to the per-layer path unless the group-sized
     /// program shapes exist in the manifest.
     pub fn set_pipeline(&mut self, pipeline: bool) {
         self.pipeline = pipeline;
@@ -373,10 +544,80 @@ impl EpEngine {
         self.pipeline
     }
 
-    /// Number of microbatches the next forward will run with (2 when the
-    /// pipelined path is active, 1 otherwise).
+    /// Request a microbatch ring depth (defaults to `DSMOE_PIPE_DEPTH`,
+    /// default 2).  Clamped to the lane count; a depth whose program
+    /// shapes are missing from the artifact set falls back to 2, then 1
+    /// (see [`EpEngine::microbatches`] for the resolved value).
+    pub fn set_pipe_depth(&mut self, depth: usize) {
+        self.pipe_depth = depth;
+    }
+
+    pub fn pipe_depth(&self) -> usize {
+        self.pipe_depth
+    }
+
+    /// Enable/disable prefill-behind-decode admission interleaving
+    /// (defaults to the inverse of the `DSMOE_NO_INTERLEAVE` env toggle).
+    pub fn set_interleave(&mut self, interleave: bool) {
+        self.interleave = interleave;
+    }
+
+    pub fn interleave(&self) -> bool {
+        self.interleave
+    }
+
+    /// Live-lane skew (max − min across groups) that triggers a dynamic
+    /// regroup before a decode step; clamped to at least 1.
+    pub fn set_regroup_skew(&mut self, skew: usize) {
+        self.regroup_skew = skew.max(1);
+    }
+
+    /// Live lanes per decode lane group (scheduler-backed mode; empty
+    /// groups report 0 in legacy mode).
+    pub fn group_live_counts(&self) -> Vec<usize> {
+        self.caches
+            .iter()
+            .map(|c| {
+                (c.lane0..c.lane0 + c.lanes)
+                    .filter(|&l| {
+                        self.lane_live.get(l).copied().unwrap_or(false)
+                    })
+                    .count()
+            })
+            .collect()
+    }
+
+    /// True if this artifact set carries every program shape the d-group
+    /// lane partition needs.
+    pub fn depth_supported(&self, depth: usize) -> bool {
+        depth >= 1 && depth <= self.batch && self.depth_ok[depth]
+    }
+
+    /// Number of microbatches the next forward will run with: the
+    /// requested ring depth when the pipeline is active and its shapes
+    /// exist, else the fallback (2, then 1).
     pub fn microbatches(&self) -> usize {
-        self.lane_groups().len()
+        self.resolved_depth()
+    }
+
+    /// Resolve the requested ring depth against the toggles and the
+    /// artifact set: serial / no-pipeline force 1; otherwise the ladder is
+    /// requested depth → 2 → 1.
+    fn resolved_depth(&self) -> usize {
+        if self.serial_moe || !self.pipeline {
+            return 1;
+        }
+        let want = self.pipe_depth.clamp(1, self.batch.max(1));
+        if want <= 1 {
+            return 1;
+        }
+        if self.depth_ok[want] {
+            return want;
+        }
+        if want > 2 && self.batch >= 2 && self.depth_ok[2] {
+            return 2;
+        }
+        1
     }
 
     fn prog(&mut self, key: &str) -> Result<Rc<Program>> {
@@ -394,14 +635,10 @@ impl EpEngine {
     }
 
     /// Contiguous `(lane0, lanes)` microbatch groups for the next forward:
-    /// two halves when pipelining is on and every half-batch program shape
-    /// exists (precomputed at construction), else one full-batch group.
+    /// the resolved ring depth's partition (sizes as even as possible),
+    /// one full-batch group when the pipeline is off.
     fn lane_groups(&self) -> Vec<(usize, usize)> {
-        if !self.pipeline || self.serial_moe || !self.half_shapes_ok {
-            return vec![(0, self.batch)];
-        }
-        let half = self.batch / 2;
-        vec![(0, half), (half, half)]
+        partition_lanes(self.batch, self.resolved_depth())
     }
 
     /// Full prefill over padded prompts [B, smax]; returns last-position
@@ -421,16 +658,29 @@ impl EpEngine {
             lens.iter().all(|&l| l <= smax),
             "prompt length exceeds max_seq {smax}"
         );
+        // A staged admission holds requests whose KV is mid-flight;
+        // silently dropping it here would lose them.  The scheduler always
+        // finishes a staged admission within the same step, so this can
+        // only be an API misuse — fail loudly.
+        anyhow::ensure!(
+            self.pending_admission.is_none(),
+            "forward_prefill with a staged admission (finish_prefill first)"
+        );
         let t_fwd = std::time::Instant::now();
         // Exchanges of an aborted earlier forward are no longer open: any
         // reply of theirs that straggles in must fail loudly, not sit in
         // the stash forever.
         self.open_tags.clear();
         // A full fixed-lane prefill rebuilds every lane: back to legacy
-        // mode (no lane occupancy, no dead-lane masking).
+        // mode (no lane occupancy, no dead-lane masking, identity lane
+        // permutation).
         self.lane_live.clear();
+        self.lane_phys.clear();
+        self.lane_ext.clear();
         let groups = self.lane_groups();
-        let out = if groups.len() == 2 {
+        self.active_depth = groups.len();
+        self.metrics.gauge("pipe_depth", groups.len() as f64);
+        let out = if groups.len() > 1 {
             self.prefill_pipelined(tokens, lens, &groups)?
         } else {
             self.prefill_single(tokens, lens)?
@@ -461,16 +711,10 @@ impl EpEngine {
             ])?
             .remove(0);
 
-        let mut group = LaneGroupCaches {
-            lane0: 0,
-            lanes: b,
-            k: Vec::new(),
-            v: Vec::new(),
-        };
+        let mut group = LaneGroupCaches::new(0, b, self.cfg.n_layers);
         for layer in 0..self.cfg.n_layers {
             let (h2, k, vv) = self.attn_prefill(layer, h, b)?;
-            group.k.push(k);
-            group.v.push(vv);
+            group.push_kv(k, vv);
             h = self.ffn_layer(layer, h2, None)?;
         }
         self.caches = vec![group];
@@ -494,14 +738,10 @@ impl EpEngine {
 
         let mut cache_groups: Vec<LaneGroupCaches> = groups
             .iter()
-            .map(|&(lane0, lanes)| LaneGroupCaches {
-                lane0,
-                lanes,
-                k: Vec::with_capacity(n_layers),
-                v: Vec::with_capacity(n_layers),
-            })
+            .map(|&(lane0, lanes)| LaneGroupCaches::new(lane0, lanes, n_layers))
             .collect();
-        let mut hs: Vec<Option<xla::Literal>> = Vec::with_capacity(2);
+        let mut hs: Vec<Option<xla::Literal>> =
+            Vec::with_capacity(groups.len());
         for &(lane0, lanes) in groups {
             let embed = self.prog(&Manifest::key_embed(v, m, lanes, smax))?;
             let tok = HostTensor::i32(
@@ -533,51 +773,60 @@ impl EpEngine {
         Ok(rows)
     }
 
-    /// The microbatch-interleave scheduler shared by prefill and decode:
-    /// fill with microbatch 0's first layer, then per layer — start
-    /// microbatch 1 behind 0's exchange (timed as `attn_overlap` when an
-    /// exchange is actually pending), finish 0, start 0's next layer
-    /// behind 1's exchange, finish 1.  `hs` holds each microbatch's
-    /// activation and is left holding the final layer outputs.
+    /// The microbatch-interleave scheduler shared by prefill and decode: a
+    /// rotating ring of at most `hs.len()` in-flight layer exchanges.
+    /// Step `(layer, mb)` dispatches microbatch `mb`'s attention + gate +
+    /// dispatch; once the ring is full the oldest in-flight entry — the
+    /// same microbatch at the previous layer, by construction — is
+    /// finished first, so each microbatch's layers run in order while up
+    /// to N exchanges share the fabric.  Starts that run while another
+    /// exchange is pending land in `attn_overlap`; a staged admission
+    /// prefill advances one layer behind each freshly dispatched decode
+    /// exchange.  `hs` holds each microbatch's activation and is left
+    /// holding the final layer outputs.
     fn run_pipeline(
         &mut self,
         hs: &mut [Option<xla::Literal>],
         ctx: &mut PipeCtx<'_>,
     ) -> Result<()> {
         let n_layers = self.cfg.n_layers;
-        let mut inflight: [Option<InflightMoe>; 2] = [None, None];
-        // Pipeline fill: microbatch 0's first layer has nothing to hide
-        // behind.
-        let h0 = hs[0].take().unwrap();
-        inflight[0] = Some(self.start_layer(0, h0, 0, ctx)?);
+        let n_mb = hs.len();
+        let mut ring: VecDeque<(usize, InflightMoe)> =
+            VecDeque::with_capacity(n_mb);
         for layer in 0..n_layers {
-            // Microbatch 1's attention + gate + dispatch run while
-            // microbatch 0's exchange is on the fabric.
-            let t = std::time::Instant::now();
-            let h1 = hs[1].take().unwrap();
-            inflight[1] = Some(self.start_layer(layer, h1, 1, ctx)?);
-            if inflight[0].as_ref().is_some_and(InflightMoe::pending) {
-                self.metrics.observe("attn_overlap", t.elapsed());
-            }
-            if let Some(fl) = inflight[0].as_mut() {
-                self.poll_inflight(fl)?;
-            }
-            let done = inflight[0].take().unwrap();
-            hs[0] = Some(self.moe_finish(done)?);
-            if layer + 1 < n_layers {
-                // Microbatch 0's next layer hides behind 1's exchange.
+            for mb in 0..n_mb {
+                if ring.len() == n_mb {
+                    // The front is (mb, layer - 1): finishing it frees
+                    // exactly the microbatch this step starts.
+                    let (fmb, fl) = ring.pop_front().unwrap();
+                    debug_assert_eq!(fmb, mb);
+                    hs[fmb] = Some(self.moe_finish(fl)?);
+                }
                 let t = std::time::Instant::now();
-                let h0 = hs[0].take().unwrap();
-                inflight[0] = Some(self.start_layer(layer + 1, h0, 0, ctx)?);
-                if inflight[1].as_ref().is_some_and(InflightMoe::pending) {
-                    self.metrics.observe("attn_overlap", t.elapsed());
+                let h = hs[mb].take().unwrap();
+                let fl = self.start_layer(layer, h, mb, ctx)?;
+                if ring.iter().any(|(_, f)| f.pending()) {
+                    self.metrics.observe_tagged(
+                        "attn_overlap",
+                        self.active_depth,
+                        t.elapsed(),
+                    );
+                }
+                ring.push_back((mb, fl));
+                // Prefill-behind-decode: a staged admission advances one
+                // layer while this step's exchange is on the fabric.
+                if matches!(ctx, PipeCtx::Decode(_)) {
+                    self.advance_admission(1)?;
+                }
+                // Opportunistic drain: replies already arrived for the
+                // next entry to finish shorten its eventual bubble.
+                if let Some((_, f)) = ring.front_mut() {
+                    self.poll_inflight(f)?;
                 }
             }
-            if let Some(fl) = inflight[1].as_mut() {
-                self.poll_inflight(fl)?;
-            }
-            let done = inflight[1].take().unwrap();
-            hs[1] = Some(self.moe_finish(done)?);
+        }
+        while let Some((mb, fl)) = ring.pop_front() {
+            hs[mb] = Some(self.moe_finish(fl)?);
         }
         Ok(())
     }
@@ -608,10 +857,16 @@ impl EpEngine {
         slot: usize,
     ) -> Result<InflightMoe> {
         let (h2, k, vv) = self.attn_prefill(layer, h, cache.lanes)?;
-        cache.k.push(k);
-        cache.v.push(vv);
+        cache.push_kv(k, vv);
         // Legacy full prefill drives every lane: no mask.
-        self.moe_dispatch_in(layer, h2, slot, "pipeline_bubble", None)
+        self.moe_dispatch_in(
+            layer,
+            h2,
+            slot,
+            "pipeline_bubble",
+            Some(self.active_depth),
+            None,
+        )
     }
 
     /// One decode step over [B] tokens at per-lane positions.
@@ -627,10 +882,13 @@ impl EpEngine {
         // See forward_prefill: aborted exchanges are no longer open.
         self.open_tags.clear();
         let groups = self.lane_groups();
-        // A toggle between forwards (pipeline on/off) changes the lane
-        // partition; reshape the cache groups before decoding.
+        self.active_depth = groups.len();
+        self.metrics.gauge("pipe_depth", groups.len() as f64);
+        // A toggle between forwards (pipeline on/off, depth change)
+        // changes the lane partition; reshape the cache groups before
+        // decoding.
         self.repartition_caches(&groups)?;
-        let out = if groups.len() == 2 {
+        let out = if groups.len() > 1 {
             self.decode_pipelined(tokens, pos, &groups)?
         } else {
             self.decode_single(tokens, pos)?
@@ -681,8 +939,10 @@ impl EpEngine {
     ) -> Result<Vec<Vec<f32>>> {
         let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
 
-        let mut hs: Vec<Option<xla::Literal>> = Vec::with_capacity(2);
-        let mut pos_lits: Vec<xla::Literal> = Vec::with_capacity(2);
+        let mut hs: Vec<Option<xla::Literal>> =
+            Vec::with_capacity(groups.len());
+        let mut pos_lits: Vec<xla::Literal> =
+            Vec::with_capacity(groups.len());
         for &(lane0, lanes) in groups {
             let embed = self.prog(&Manifest::key_embed(v, m, lanes, 1))?;
             let tok = HostTensor::i32(
@@ -735,6 +995,7 @@ impl EpEngine {
             h2,
             group,
             "pipeline_bubble",
+            Some(self.active_depth),
             mask.as_deref(),
         )
     }
@@ -757,8 +1018,9 @@ impl EpEngine {
     }
 
     /// Rebuild the decode cache groups for a new lane partition (host-side
-    /// merge + split; only runs when the pipeline toggle changed between a
-    /// prefill and a decode).
+    /// merge + split; only runs when the pipeline toggle or ring depth
+    /// changed between forwards).  The rebuilt groups carry valid host
+    /// mirrors — the merge pulled everything to the host anyway.
     fn repartition_caches(&mut self, groups: &[(usize, usize)]) -> Result<()> {
         let current: Vec<(usize, usize)> =
             self.caches.iter().map(|c| (c.lane0, c.lanes)).collect();
@@ -771,12 +1033,7 @@ impl EpEngine {
         let n_layers = self.cfg.n_layers;
         let mut new_groups: Vec<LaneGroupCaches> = groups
             .iter()
-            .map(|&(lane0, lanes)| LaneGroupCaches {
-                lane0,
-                lanes,
-                k: Vec::with_capacity(n_layers),
-                v: Vec::with_capacity(n_layers),
-            })
+            .map(|&(lane0, lanes)| LaneGroupCaches::new(lane0, lanes, n_layers))
             .collect();
         for layer in 0..n_layers {
             // Lane-major cache layout: concatenating the groups' buffers
@@ -786,9 +1043,9 @@ impl EpEngine {
                 Vec::with_capacity(self.batch * lane_elems);
             let mut full_v: Vec<f32> =
                 Vec::with_capacity(self.batch * lane_elems);
-            for g in &self.caches {
-                full_k.extend(g.k[layer].to_vec::<f32>()?);
-                full_v.extend(g.v[layer].to_vec::<f32>()?);
+            for g in &mut self.caches {
+                full_k.extend_from_slice(g.host_k(layer)?.as_f32()?);
+                full_v.extend_from_slice(g.host_v(layer)?.as_f32()?);
             }
             let kparts = split_lanes(&full_k, lane_elems, groups);
             let vparts = split_lanes(&full_v, lane_elems, groups);
@@ -796,11 +1053,135 @@ impl EpEngine {
                 new_groups.iter_mut().zip(kparts).zip(vparts)
             {
                 let shape = [ng.lanes, hh, smax, hd];
-                ng.k.push(HostTensor::f32(&shape, kp).to_literal()?);
-                ng.v.push(HostTensor::f32(&shape, vp).to_literal()?);
+                ng.push_host(
+                    HostTensor::f32(&shape, kp),
+                    HostTensor::f32(&shape, vp),
+                )?;
             }
         }
         self.caches = new_groups;
+        Ok(())
+    }
+
+    /// Dynamic lane regrouping: when retirement has skewed per-group live
+    /// occupancy by at least `regroup_skew`, migrate live lanes from
+    /// surplus groups into free slots of deficit groups so every group
+    /// carries an (almost) even live load.  KV moves through the host
+    /// mirrors (only the moved lanes are copied; only destination groups
+    /// are re-uploaded); the scheduler's lane ids survive via the
+    /// external→physical lane permutation.  Never runs in legacy mode or
+    /// while an admission is staged (its target lanes are physical).
+    fn maybe_regroup(&mut self) -> Result<()> {
+        if self.lane_live.is_empty()
+            || self.pending_admission.is_some()
+            || self.caches.len() < 2
+        {
+            return Ok(());
+        }
+        let counts = self.group_live_counts();
+        let (min, max) = (
+            counts.iter().copied().min().unwrap_or(0),
+            counts.iter().copied().max().unwrap_or(0),
+        );
+        if max - min < self.regroup_skew {
+            return Ok(());
+        }
+        let groups: Vec<(usize, usize)> =
+            self.caches.iter().map(|c| (c.lane0, c.lanes)).collect();
+        let n_g = groups.len();
+        let mut live_in: Vec<Vec<usize>> = groups
+            .iter()
+            .map(|&(l0, ln)| {
+                (l0..l0 + ln).filter(|&l| self.lane_live[l]).collect()
+            })
+            .collect();
+        let mut free_in: Vec<Vec<usize>> = groups
+            .iter()
+            .map(|&(l0, ln)| {
+                (l0..l0 + ln).filter(|&l| !self.lane_live[l]).collect()
+            })
+            .collect();
+        let total_live: usize = counts.iter().sum();
+        // Balanced targets respecting group capacities: hand out the live
+        // lanes one at a time to the least-loaded group with room.
+        let mut target = vec![0usize; n_g];
+        for _ in 0..total_live {
+            let g = (0..n_g)
+                .filter(|&g| target[g] < groups[g].1)
+                .min_by_key(|&g| (target[g], g))
+                .expect("live lanes exceed lane count");
+            target[g] += 1;
+        }
+        let mut surplus: Vec<usize> = Vec::new();
+        for g in 0..n_g {
+            while live_in[g].len() > target[g] {
+                surplus.push(live_in[g].pop().unwrap());
+            }
+        }
+        // (src physical, dst physical) live-lane moves.
+        let mut moves: Vec<(usize, usize)> = Vec::new();
+        for g in 0..n_g {
+            while live_in[g].len() < target[g] {
+                let dst = free_in[g].remove(0);
+                let src = surplus.pop().expect("regroup accounting");
+                moves.push((src, dst));
+                live_in[g].push(dst);
+            }
+        }
+        if moves.is_empty() {
+            return Ok(());
+        }
+        let (hh, smax, hd) =
+            (self.cfg.n_heads, self.cfg.max_seq, self.cfg.head_dim());
+        let lane_elems = hh * smax * hd;
+        let group_of = |lane: usize| {
+            groups
+                .iter()
+                .position(|&(l0, ln)| lane >= l0 && lane < l0 + ln)
+                .expect("lane outside every group")
+        };
+        for layer in 0..self.cfg.n_layers {
+            for &(src, dst) in &moves {
+                let (sg, dg) = (group_of(src), group_of(dst));
+                let s_off = src - groups[sg].0;
+                let d_off = dst - groups[dg].0;
+                let tmp_k = {
+                    let hk = self.caches[sg].host_k(layer)?.as_f32()?;
+                    hk[s_off * lane_elems..(s_off + 1) * lane_elems].to_vec()
+                };
+                let tmp_v = {
+                    let hv = self.caches[sg].host_v(layer)?.as_f32()?;
+                    hv[s_off * lane_elems..(s_off + 1) * lane_elems].to_vec()
+                };
+                let dk = self.caches[dg].host_k(layer)?.as_f32_mut()?;
+                copy_lane(dk, d_off, &tmp_k, 0, lane_elems);
+                let dv = self.caches[dg].host_v(layer)?.as_f32_mut()?;
+                copy_lane(dv, d_off, &tmp_v, 0, lane_elems);
+            }
+        }
+        // Re-upload only the destination groups (sources are unchanged —
+        // their moved lanes are dead now and masked out of everything).
+        let mut touched: Vec<usize> =
+            moves.iter().map(|&(_, dst)| group_of(dst)).collect();
+        touched.sort_unstable();
+        touched.dedup();
+        for g in touched {
+            for layer in 0..self.cfg.n_layers {
+                self.caches[g].push_layer(layer)?;
+            }
+        }
+        // Swap the external bindings of each (src, dst) pair so the
+        // scheduler's lane ids keep resolving to the moved data.
+        for &(src, dst) in &moves {
+            let (src_ext, dst_ext) = (self.lane_ext[src], self.lane_ext[dst]);
+            self.lane_ext.swap(src, dst);
+            self.lane_phys[src_ext] = dst;
+            self.lane_phys[dst_ext] = src;
+            self.lane_live[dst] = true;
+            self.lane_live[src] = false;
+        }
+        self.metrics.inc("lane_regroups", 1);
+        self.metrics.inc("lane_moves", moves.len() as u64);
         Ok(())
     }
 
@@ -810,30 +1191,30 @@ impl EpEngine {
         self.fabric.stash_depth()
     }
 
-    /// Initialize continuous-batching lane state: all lanes free, decode
-    /// cache groups zero-filled at the current lane partition.  Re-entered
-    /// from legacy mode (after a fixed-lane `forward_prefill`) this resets
-    /// every lane.
+    /// Initialize continuous-batching lane state: all lanes free (identity
+    /// lane permutation), decode cache groups zero-filled at the current
+    /// lane partition with valid host mirrors (first-wave admissions
+    /// splice without a single device pull).  Re-entered from legacy mode
+    /// (after a fixed-lane `forward_prefill`) this resets every lane.
     fn ensure_lane_state(&mut self) -> Result<()> {
         if !self.lane_live.is_empty() {
             return Ok(());
         }
         self.lane_live = vec![false; self.batch];
+        self.lane_phys = (0..self.batch).collect();
+        self.lane_ext = (0..self.batch).collect();
         let (hh, smax, hd) =
             (self.cfg.n_heads, self.cfg.max_seq, self.cfg.head_dim());
         let n_layers = self.cfg.n_layers;
         let mut groups = Vec::new();
         for (lane0, lanes) in self.lane_groups() {
-            let mut g = LaneGroupCaches {
-                lane0,
-                lanes,
-                k: Vec::with_capacity(n_layers),
-                v: Vec::with_capacity(n_layers),
-            };
+            let mut g = LaneGroupCaches::new(lane0, lanes, n_layers);
             for _ in 0..n_layers {
                 let shape = [lanes, hh, smax, hd];
-                g.k.push(HostTensor::zeros_f32(&shape).to_literal()?);
-                g.v.push(HostTensor::zeros_f32(&shape).to_literal()?);
+                g.push_host(
+                    HostTensor::zeros_f32(&shape),
+                    HostTensor::zeros_f32(&shape),
+                )?;
             }
             groups.push(g);
         }
@@ -843,7 +1224,7 @@ impl EpEngine {
 
     /// Choose `n` free lanes for admission, keeping the pipeline's lane
     /// groups balanced: each pick goes to the group with the fewest busy
-    /// lanes among those with a free one, so the two microbatches carry
+    /// lanes among those with a free one, so the N microbatches carry
     /// similar live load.
     fn pick_free_lanes(&self, n: usize) -> Result<Vec<usize>> {
         let groups: Vec<(usize, usize)> =
@@ -872,32 +1253,59 @@ impl EpEngine {
         Ok(out)
     }
 
-    /// Standalone admission prefill over `lanes` compiled lanes (the first
-    /// `live` carry real prompts, the rest are padding): runs the
-    /// per-layer MoE path with the padding masked out of gate + dispatch,
-    /// and returns per-layer per-lane KV caches plus last-position logits
-    /// rows for the live lanes.  Per-lane outputs are bit-identical to a
-    /// full-batch forward over the same prompts (every program is
-    /// per-lane/per-row independent — the same property the three-way
+    /// Stage an admission prefill over `compiled` lanes (the first
+    /// `reqs.len()` carry real prompts, the rest are padding): validates,
+    /// picks balanced free lanes, and runs the embedding.  The per-layer
+    /// body runs through [`EpEngine::advance_admission`] — interleaved
+    /// behind decode exchanges or all at once from
+    /// [`EpEngine::complete_admission`].  Per-lane outputs are
+    /// bit-identical to a full-batch forward over the same prompts (every
+    /// program is per-lane/per-row independent — the same property the
     /// parity tests pin).
-    fn prefill_lanes(
+    fn stage_admission(
         &mut self,
-        lanes: usize,
-        tokens: &[i32],
-        lens: &[usize],
-        live: usize,
-    ) -> Result<PrefilledLanes> {
+        compiled: usize,
+        reqs: &[Request],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.pending_admission.is_none(),
+            "admission already staged"
+        );
+        anyhow::ensure!(
+            !reqs.is_empty() && reqs.len() <= compiled,
+            "admission prefill: {} requests at compiled size {compiled}",
+            reqs.len()
+        );
+        anyhow::ensure!(
+            self.prefill_sizes.contains(&compiled),
+            "no admission prefill shapes at lane count {compiled} \
+             (available: {:?})",
+            self.prefill_sizes
+        );
+        self.ensure_lane_state()?;
+        let lanes = self.pick_free_lanes(reqs.len())?;
         let smax = self.cfg.max_seq;
         let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
-        anyhow::ensure!(tokens.len() == lanes * smax, "tokens shape");
-        anyhow::ensure!(lens.len() == lanes && live <= lanes, "lens shape");
+        // No forward is in flight when an admission is staged: exchanges
+        // of an aborted earlier forward are no longer open.
         self.open_tags.clear();
         let t0 = std::time::Instant::now();
-        let embed = self.prog(&Manifest::key_embed(v, m, lanes, smax))?;
-        let tok = HostTensor::i32(&[lanes, smax], tokens.to_vec())
+        let mut tokens = vec![0i32; compiled * smax];
+        let mut lens = vec![1usize; compiled]; // padding lanes: dummy len
+        for (i, r) in reqs.iter().enumerate() {
+            anyhow::ensure!(
+                r.prompt.len() <= smax,
+                "prompt length exceeds max_seq {smax}"
+            );
+            tokens[i * smax..i * smax + r.prompt.len()]
+                .copy_from_slice(&r.prompt);
+            lens[i] = r.prompt.len();
+        }
+        let embed = self.prog(&Manifest::key_embed(v, m, compiled, smax))?;
+        let tok = HostTensor::i32(&[compiled, smax], tokens).to_literal()?;
+        let pos0 = HostTensor::i32(&[compiled], vec![0; compiled])
             .to_literal()?;
-        let pos0 = HostTensor::i32(&[lanes], vec![0; lanes]).to_literal()?;
-        let mut h = embed
+        let h = embed
             .run_literal_refs(&[
                 self.p("tok_emb"),
                 self.p("pos_emb"),
@@ -905,31 +1313,109 @@ impl EpEngine {
                 &pos0,
             ])?
             .remove(0);
-        let mask: Option<Vec<bool>> = if live == lanes {
+        let live = reqs.len();
+        let mask: Option<Vec<bool>> = if live == compiled {
             None
         } else {
-            Some((0..lanes * smax).map(|i| i / smax < live).collect())
+            Some((0..compiled * smax).map(|i| i / smax < live).collect())
         };
-        let mut kv = Vec::with_capacity(self.cfg.n_layers);
-        for layer in 0..self.cfg.n_layers {
-            let (h2, k, vv) = self.attn_prefill(layer, h, lanes)?;
-            kv.push((k, vv));
-            h = self.ffn_layer(layer, h2, mask.as_deref())?;
+        self.pending_admission = Some(AdmissionState {
+            compiled,
+            live,
+            lens,
+            lanes,
+            mask,
+            h: Some(h),
+            layer: 0,
+            kv: Vec::with_capacity(self.cfg.n_layers),
+            elapsed: t0.elapsed(),
+        });
+        Ok(())
+    }
+
+    /// Run up to `layers` staged-admission layer steps (attention +
+    /// split-phase MoE with the padding masked; the admission's exposed
+    /// expert wait lands in `prefill_stall`).  No-op without a staged
+    /// admission; re-entrancy safe — the state is taken for the duration,
+    /// so the admission's own MoE layers never recurse into further
+    /// advances.
+    fn advance_admission(&mut self, layers: usize) -> Result<()> {
+        let Some(mut st) = self.pending_admission.take() else {
+            return Ok(());
+        };
+        let t0 = std::time::Instant::now();
+        for _ in 0..layers {
+            if st.layer >= self.cfg.n_layers {
+                break;
+            }
+            self.admission_layer(&mut st)?;
         }
-        let mut rows = self.lm_head_last(&h, lens)?;
-        rows.truncate(live);
-        self.metrics.observe("forward_prefill", t0.elapsed());
-        Ok(PrefilledLanes { kv, rows })
+        st.elapsed += t0.elapsed();
+        self.pending_admission = Some(st);
+        Ok(())
+    }
+
+    /// One admission-prefill layer: attention, then dispatch + finish on
+    /// the dedicated admission scratch slot.  Replies of any concurrently
+    /// open decode exchange arriving during the `prefill_stall` wait are
+    /// stashed tag-keyed for their own collection.  Under
+    /// `DSMOE_SERIAL_MOE` the layer runs the serialized per-expert
+    /// baseline instead (as the pre-split admission path did), so the
+    /// serial toggle's traffic and wait measurements stay uncontaminated.
+    fn admission_layer(&mut self, st: &mut AdmissionState) -> Result<()> {
+        let layer = st.layer;
+        let h = st.h.take().expect("admission activation");
+        let (h2, k, vv) = self.attn_prefill(layer, h, st.compiled)?;
+        st.kv.push((k, vv));
+        let out = if self.serial_moe && self.cfg.experts_at(layer) > 0 {
+            self.moe_layer_serial(layer, h2, st.mask.as_deref())?
+        } else {
+            let slot = self.batch; // dedicated admission scratch slot
+            let inflight = self.moe_dispatch_in(
+                layer,
+                h2,
+                slot,
+                "prefill_stall",
+                None,
+                st.mask.as_deref(),
+            )?;
+            self.moe_finish(inflight)?
+        };
+        st.h = Some(out);
+        st.layer += 1;
+        Ok(())
+    }
+
+    /// Complete a staged admission: run whatever layers the decode gaps
+    /// did not cover, take the LM head, splice the KV into the chosen
+    /// lanes, and mark them live.  Returns the admitted lanes in request
+    /// order (external lane ids).
+    fn complete_admission(&mut self) -> Result<Vec<AdmittedLane>> {
+        self.advance_admission(self.cfg.n_layers)?;
+        let mut st = self
+            .pending_admission
+            .take()
+            .context("no admission staged")?;
+        let t0 = std::time::Instant::now();
+        let h = st.h.take().expect("admission activation");
+        let mut rows = self.lm_head_last(&h, &st.lens)?;
+        rows.truncate(st.live);
+        self.splice_admitted(&st.kv, &st.lanes)?;
+        self.metrics.observe("forward_prefill", st.elapsed + t0.elapsed());
+        let mut out = Vec::with_capacity(st.live);
+        for (&lane, logits) in st.lanes.iter().zip(rows) {
+            self.lane_live[lane] = true;
+            out.push(AdmittedLane { lane: self.lane_ext[lane], logits });
+        }
+        Ok(out)
     }
 
     /// Splice freshly prefilled lanes into the decode cache groups:
     /// `admits[i]` maps source lane `i` of the admission prefill to a free
-    /// global lane.  One host round trip per (layer, touched group), not
-    /// per lane — still proportional to the whole group's cache, which is
-    /// acceptable at testbed scale because the admission prefill forward
-    /// dominates admission cost; a host-side cache mirror (like the
-    /// monolithic engine's `cache_lits`) would cut it to the admitted
-    /// lanes only (ROADMAP follow-up).
+    /// physical lane.  Writes go through the per-group host mirrors, so
+    /// only the admitted lanes are copied host-side and a device pull
+    /// happens only when a decode step staled the touched layer since the
+    /// last splice.
     fn splice_admitted(
         &mut self,
         kv: &[(xla::Literal, xla::Literal)],
@@ -941,25 +1427,30 @@ impl EpEngine {
         for (layer, (k_lit, v_lit)) in kv.iter().enumerate() {
             let src_k: Vec<f32> = k_lit.to_vec()?;
             let src_v: Vec<f32> = v_lit.to_vec()?;
-            for g in self.caches.iter_mut() {
+            for g in &mut self.caches {
+                let (lane0, lanes) = (g.lane0, g.lanes);
                 let in_group: Vec<(usize, usize)> = admits
                     .iter()
                     .enumerate()
-                    .filter(|&(_, &l)| l >= g.lane0 && l < g.lane0 + g.lanes)
-                    .map(|(src, &l)| (src, l - g.lane0))
+                    .filter(|&(_, &l)| l >= lane0 && l < lane0 + lanes)
+                    .map(|(src, &l)| (src, l - lane0))
                     .collect();
                 if in_group.is_empty() {
                     continue;
                 }
-                let mut dst_k: Vec<f32> = g.k[layer].to_vec()?;
-                let mut dst_v: Vec<f32> = g.v[layer].to_vec()?;
-                for &(src, dst) in &in_group {
-                    copy_lane(&mut dst_k, dst, &src_k, src, lane_elems);
-                    copy_lane(&mut dst_v, dst, &src_v, src, lane_elems);
+                {
+                    let dst = g.host_k(layer)?.as_f32_mut()?;
+                    for &(src, d) in &in_group {
+                        copy_lane(dst, d, &src_k, src, lane_elems);
+                    }
                 }
-                let shape = [g.lanes, hh, smax, hd];
-                g.k[layer] = HostTensor::f32(&shape, dst_k).to_literal()?;
-                g.v[layer] = HostTensor::f32(&shape, dst_v).to_literal()?;
+                {
+                    let dst = g.host_v(layer)?.as_f32_mut()?;
+                    for &(src, d) in &in_group {
+                        copy_lane(dst, d, &src_v, src, lane_elems);
+                    }
+                }
+                g.push_layer(layer)?;
             }
         }
         Ok(())
@@ -1021,6 +1512,8 @@ impl EpEngine {
         let cache = &mut self.caches[group];
         cache.k[layer] = kc;
         cache.v[layer] = vc;
+        // The decode write staled this layer's host mirror.
+        cache.invalidate(layer);
         Ok(h2)
     }
 
@@ -1039,7 +1532,11 @@ impl EpEngine {
             return self.moe_layer_serial(layer, h, mask);
         }
         let inflight =
-            self.moe_dispatch_in(layer, h, 0, "expert_wait", mask)?;
+            self.moe_dispatch_in(layer, h, 0, "expert_wait", None, mask)?;
+        // Prefill-behind-decode on the per-layer overlapped path: a
+        // staged admission advances one layer while this exchange is on
+        // the fabric (no-op outside scheduler-backed decode).
+        self.advance_admission(1)?;
         self.moe_finish(inflight)
     }
 
@@ -1053,7 +1550,7 @@ impl EpEngine {
         layer: usize,
         h: xla::Literal,
     ) -> Result<InflightMoe> {
-        self.moe_dispatch_in(layer, h, 0, "expert_wait", None)
+        self.moe_dispatch_in(layer, h, 0, "expert_wait", None, None)
     }
 
     fn moe_dispatch_in(
@@ -1062,6 +1559,7 @@ impl EpEngine {
         h: xla::Literal,
         slot: usize,
         wait_metric: &'static str,
+        depth_tag: Option<usize>,
         mask: Option<&[bool]>,
     ) -> Result<InflightMoe> {
         let (m, f) = (self.cfg.d_model, self.cfg.d_ff);
@@ -1218,6 +1716,7 @@ impl EpEngine {
                 worker_experts,
                 results: Vec::new(),
                 wait_metric,
+                depth_tag,
             })),
         })
     }
@@ -1266,7 +1765,13 @@ impl EpEngine {
             )?);
         }
         self.open_tags.retain(|&t| t != p.tag);
-        self.metrics.observe(p.wait_metric, t3.elapsed());
+        if let Some(depth) = p.depth_tag {
+            // Per-depth breakdown: depth sweeps stay attributable from a
+            // single metrics report.
+            self.metrics.observe_tagged(p.wait_metric, depth, t3.elapsed());
+        } else {
+            self.metrics.observe(p.wait_metric, t3.elapsed());
+        }
 
         // Phase 5: combine — gate-scale, un-permute (scratch buffer reused
         // across layers), then add the residual branch and the residual
@@ -1514,6 +2019,10 @@ impl ForwardModel for EpEngine {
         &self.cfg
     }
 
+    fn configure(&mut self, serving: &crate::config::ServingConfig) {
+        self.set_pipe_depth(serving.pipe_depth);
+    }
+
     fn metrics(&self) -> std::sync::Arc<Metrics> {
         self.metrics.clone()
     }
@@ -1543,41 +2052,29 @@ impl ForwardModel for EpEngine {
         compiled: usize,
         reqs: &[Request],
     ) -> Result<Vec<AdmittedLane>> {
-        anyhow::ensure!(
-            !reqs.is_empty() && reqs.len() <= compiled,
-            "admission prefill: {} requests at compiled size {compiled}",
-            reqs.len()
-        );
-        anyhow::ensure!(
-            self.prefill_sizes.contains(&compiled),
-            "no admission prefill shapes at lane count {compiled} \
-             (available: {:?})",
-            self.prefill_sizes
-        );
-        self.ensure_lane_state()?;
-        let lanes = self.pick_free_lanes(reqs.len())?;
+        // Stop-the-world admission: stage and complete back to back (no
+        // decode step runs in between).
+        self.stage_admission(compiled, reqs)?;
+        self.complete_admission()
+    }
 
-        let smax = self.cfg.max_seq;
-        let mut tokens = vec![0i32; compiled * smax];
-        let mut lens = vec![1usize; compiled]; // padding lanes: dummy len
-        for (i, r) in reqs.iter().enumerate() {
-            anyhow::ensure!(
-                r.prompt.len() <= smax,
-                "prompt length exceeds max_seq {smax}"
-            );
-            tokens[i * smax..i * smax + r.prompt.len()]
-                .copy_from_slice(&r.prompt);
-            lens[i] = r.prompt.len();
+    fn begin_prefill(
+        &mut self,
+        compiled: usize,
+        reqs: &[Request],
+    ) -> Result<bool> {
+        if self.serial_moe || !self.interleave {
+            // The serialized path has no dispatch/finish gap to hide an
+            // admission in; DSMOE_NO_INTERLEAVE pins the stop-the-world
+            // baseline.
+            return Ok(false);
         }
-        let prefilled =
-            self.prefill_lanes(compiled, &tokens, &lens, reqs.len())?;
-        self.splice_admitted(&prefilled.kv, &lanes)?;
-        let mut out = Vec::with_capacity(reqs.len());
-        for (&lane, logits) in lanes.iter().zip(prefilled.rows) {
-            self.lane_live[lane] = true;
-            out.push(AdmittedLane { lane, logits });
-        }
-        Ok(out)
+        self.stage_admission(compiled, reqs)?;
+        Ok(true)
+    }
+
+    fn finish_prefill(&mut self) -> Result<Vec<AdmittedLane>> {
+        self.complete_admission()
     }
 
     fn decode_step(
@@ -1585,20 +2082,56 @@ impl ForwardModel for EpEngine {
         tokens: &[i32],
         pos: &[i32],
     ) -> Result<Vec<Vec<f32>>> {
-        self.forward_decode(tokens, pos)
+        let b = self.batch;
+        anyhow::ensure!(tokens.len() == b && pos.len() == b, "lane shape");
+        // Rebalance live lanes across the groups if retirement skewed the
+        // occupancy (before the forward, so this step already runs even).
+        self.maybe_regroup()?;
+        if self.lane_ext.iter().enumerate().all(|(p, &e)| p == e) {
+            return self.forward_decode(tokens, pos);
+        }
+        // A past regroup moved lanes: feed the forward in physical order
+        // and hand the rows back under the scheduler's external ids.
+        let tok: Vec<i32> =
+            self.lane_ext.iter().map(|&e| tokens[e]).collect();
+        let ps: Vec<i32> = self.lane_ext.iter().map(|&e| pos[e]).collect();
+        let rows = self.forward_decode(&tok, &ps)?;
+        let mut out = vec![Vec::new(); b];
+        for (p, row) in rows.into_iter().enumerate() {
+            out[self.lane_ext[p]] = row;
+        }
+        Ok(out)
     }
 
     fn release(&mut self, lane: usize) {
-        if let Some(l) = self.lane_live.get_mut(lane) {
+        let phys = self.lane_phys.get(lane).copied().unwrap_or(lane);
+        if let Some(l) = self.lane_live.get_mut(phys) {
             *l = false;
         }
     }
 }
 
-/// True if every AOT program the pipelined path needs at microbatch size
-/// `bh` exists in the manifest (prefill and decode shapes).  Evaluated
-/// once at engine construction — the manifest never changes afterwards.
-fn half_shapes_available(
+/// Split `batch` lanes into `depth` contiguous groups, sizes as even as
+/// possible (the first `batch % depth` groups carry one extra lane):
+/// 8 lanes at depth 3 partition as 3/3/2.  `depth` is clamped to
+/// `[1, batch]`.
+fn partition_lanes(batch: usize, depth: usize) -> Vec<(usize, usize)> {
+    let d = depth.clamp(1, batch.max(1));
+    let (base, extra) = (batch / d, batch % d);
+    let mut out = Vec::with_capacity(d);
+    let mut lane0 = 0;
+    for g in 0..d {
+        let lanes = base + usize::from(g < extra);
+        out.push((lane0, lanes));
+        lane0 += lanes;
+    }
+    out
+}
+
+/// True if every AOT program a pipeline microbatch of `bh` lanes needs
+/// exists in the manifest (prefill and decode shapes).  Evaluated once at
+/// engine construction — the manifest never changes afterwards.
+fn group_shapes_available(
     manifest: &Manifest,
     cfg: &ModelConfig,
     bh: usize,
@@ -1695,5 +2228,33 @@ mod tests {
         let e0 = slice_expert(&full3, 0, "w1").unwrap();
         assert_eq!(e0.shape, vec![2, 2]);
         assert_eq!(e0.as_f32().unwrap(), &[0., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn partition_lanes_even_and_uneven() {
+        assert_eq!(partition_lanes(8, 1), vec![(0, 8)]);
+        assert_eq!(partition_lanes(8, 2), vec![(0, 4), (4, 4)]);
+        assert_eq!(partition_lanes(8, 3), vec![(0, 3), (3, 3), (6, 2)]);
+        assert_eq!(
+            partition_lanes(8, 4),
+            vec![(0, 2), (2, 2), (4, 2), (6, 2)]
+        );
+        // Depth clamps to the lane count; zero depth means one group.
+        assert_eq!(partition_lanes(4, 9).len(), 4);
+        assert_eq!(partition_lanes(4, 0), vec![(0, 4)]);
+        // Every partition is contiguous and covers the batch exactly.
+        for b in 1..=9usize {
+            for d in 1..=b {
+                let p = partition_lanes(b, d);
+                assert_eq!(p.len(), d);
+                let mut next = 0;
+                for &(lane0, lanes) in &p {
+                    assert_eq!(lane0, next);
+                    assert!(lanes > 0);
+                    next += lanes;
+                }
+                assert_eq!(next, b);
+            }
+        }
     }
 }

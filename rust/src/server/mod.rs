@@ -23,20 +23,30 @@
 //!   splice → decode → retire, the loop §5 of the paper treats as one
 //!   system.  Owns sampling and all request bookkeeping; metric names are
 //!   those of the pre-refactor engine plus `queue_depth` / `lanes_busy`
-//!   gauges and the `decode_utilization` summary.
+//!   gauges and the `decode_utilization` summary.  Backends that
+//!   implement the split admission API (`begin_prefill`/`finish_prefill`)
+//!   get prefill-behind-decode interleaving: the admission's layer
+//!   programs run while the decode step's expert exchanges are on the
+//!   fabric, instead of stopping every decode lane
+//!   (`interleaved_admissions` counter; admission waits land in
+//!   `prefill_stall`).
 //! * [`engine::Engine`] — single-device backend over the monolithic AOT
 //!   programs (fused Pallas kernels inside): the baseline the paper's
 //!   single-GPU numbers correspond to.
 //! * [`ep::EpEngine`] — the disaggregated expert-parallel backend (§5's
 //!   architecture: gate → group tokens by expert → all-to-all → expert
-//!   FFN → return & combine), with split-phase MoE and cross-layer
-//!   microbatch pipelining.  Also usable standalone through its legacy
-//!   fixed-lane `forward_prefill` / `forward_decode` API.
+//!   FFN → return & combine), with split-phase MoE, a depth-N
+//!   cross-layer microbatch pipeline ring (`pipe_depth` groups of lanes,
+//!   N tagged exchanges in flight), dynamic live-lane regrouping under
+//!   skewed retirement, and per-group host KV mirrors.  Also usable
+//!   standalone through its legacy fixed-lane `forward_prefill` /
+//!   `forward_decode` API.
 //!
 //! Both backends produce identical logits for identical weights/input —
 //! the parity tests in `rust/tests/integration_parity.rs` (including the
-//! scheduler-vs-fixed-lane token parity test) are the end-to-end
-//! correctness anchor of the whole stack.
+//! scheduler-vs-fixed-lane token parity tests and the depth-3/4 three-way
+//! bitwise tests) are the end-to-end correctness anchor of the whole
+//! stack.
 //!
 //! ## Env toggles (expert-parallel data path)
 //!
@@ -46,9 +56,19 @@
 //! |                        | baseline); also disables the pipeline.      |
 //! | `DSMOE_NO_PIPELINE`    | per-layer overlapped path (no microbatch    |
 //! |                        | interleaving).                              |
+//! | `DSMOE_PIPE_DEPTH`     | microbatch pipeline ring depth N (default   |
+//! |                        | 2); unsupported depths fall back 2 → 1.     |
+//! | `DSMOE_NO_INTERLEAVE`  | stop-the-world admission prefills (disable  |
+//! |                        | prefill-behind-decode interleaving).        |
+//! | `DSMOE_REGROUP_SKEW`   | live-lane skew (max − min per group) that   |
+//! |                        | triggers a dynamic regroup (default 2: a    |
+//! |                        | skew of 1 is unavoidable whenever live      |
+//! |                        | lanes don't divide evenly across groups).   |
 //! | `DSMOE_NO_CACHE_MIRROR`| monolithic engine: host round trip of the   |
 //! |                        | KV cache every decode step (pre-mirror      |
-//! |                        | baseline, §Perf).                           |
+//! |                        | baseline, §Perf).  The EP engine's          |
+//! |                        | per-group mirrors have no toggle — splices  |
+//! |                        | and regroups always write through them.     |
 
 pub mod engine;
 pub mod ep;

@@ -14,7 +14,13 @@
 //!   lane inventory, `prefill(compiled, reqs) -> admitted lanes` (run a
 //!   prefill at a compiled batch shape and splice each request's KV into a
 //!   free lane), `decode_step(tokens, pos) -> logits` (one step over the
-//!   whole lane group; free lanes are padded), and `release(lane)`.
+//!   whole lane group; free lanes are padded), and `release(lane)`.  A
+//!   backend that can hide admission compute behind its decode forward
+//!   additionally implements the split admission API
+//!   (`begin_prefill`/`finish_prefill`): the scheduler stages the
+//!   admission, runs the decode step, and collects the admitted lanes
+//!   afterwards — prefill-behind-decode interleaving instead of a
+//!   stop-the-world prefill.
 //! * [`Scheduler`] — owns the [`Router`] (admission + FIFO), the
 //!   [`BatchPolicy`] (size-or-timeout batch formation), per-lane request
 //!   bookkeeping, sampling ([`crate::util::sampling::Sampler`], seeded by
@@ -60,6 +66,12 @@ pub trait ForwardModel {
     /// Architecture of the model being served (admission limits).
     fn model_config(&self) -> &ModelConfig;
 
+    /// Apply backend-relevant serving settings (called once by
+    /// [`Scheduler::new`] before any other use).  Default: nothing to
+    /// apply.  The EP engine takes its pipeline ring depth
+    /// (`ServingConfig::pipe_depth`) from here.
+    fn configure(&mut self, _serving: &ServingConfig) {}
+
     /// The backend's metrics registry; the scheduler records into the same
     /// one so a single report covers both layers.
     fn metrics(&self) -> Arc<Metrics>;
@@ -87,6 +99,29 @@ pub trait ForwardModel {
         compiled: usize,
         reqs: &[Request],
     ) -> Result<Vec<AdmittedLane>>;
+
+    /// Stage an admission prefill to run *behind* the next decode step
+    /// (prefill-behind-decode interleaving): a backend that can hide
+    /// admission compute inside its decode forward stores the staged
+    /// state and returns `Ok(true)`; the scheduler then runs one decode
+    /// step and collects the admission with
+    /// [`ForwardModel::finish_prefill`].  The default declines
+    /// (`Ok(false)`), in which case the scheduler falls back to the
+    /// stop-the-world [`ForwardModel::prefill`].
+    fn begin_prefill(
+        &mut self,
+        _compiled: usize,
+        _reqs: &[Request],
+    ) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Complete the admission staged by [`ForwardModel::begin_prefill`]
+    /// (called exactly once after it returned `Ok(true)`, with one decode
+    /// step in between).
+    fn finish_prefill(&mut self) -> Result<Vec<AdmittedLane>> {
+        anyhow::bail!("backend has no staged admission")
+    }
 
     /// One decode step over the whole lane group.  `tokens[lane]` /
     /// `pos[lane]` carry the last sampled token and its cache position for
@@ -124,7 +159,8 @@ pub struct Scheduler<M: ForwardModel> {
 }
 
 impl<M: ForwardModel> Scheduler<M> {
-    pub fn new(model: M, serving: ServingConfig) -> Scheduler<M> {
+    pub fn new(mut model: M, serving: ServingConfig) -> Scheduler<M> {
+        model.configure(&serving);
         let cfg = model.model_config();
         let router = Router::new(Limits {
             max_seq: cfg.max_seq,
@@ -162,6 +198,13 @@ impl<M: ForwardModel> Scheduler<M> {
     /// One scheduler iteration: admit a prefill batch if the policy says
     /// so, then run one decode step if any lane is live.  Returns true if
     /// any work was done.
+    ///
+    /// When lanes are decoding and the backend supports it, the admission
+    /// is *staged* ([`ForwardModel::begin_prefill`]) so its layer programs
+    /// run behind the decode step's in-flight expert exchanges, and
+    /// collected afterwards ([`ForwardModel::finish_prefill`]) — instead
+    /// of stopping every decode lane for the whole prefill.  The `prefill`
+    /// latency metric then covers only the exposed (non-hidden) tail.
     pub fn step(&mut self) -> Result<bool> {
         let free = self.model.free_lane_count();
         let decision = self.policy.decide(
@@ -170,31 +213,19 @@ impl<M: ForwardModel> Scheduler<M> {
             self.router.oldest_wait(),
         );
         let mut worked = false;
+        // Requests whose admission is staged behind this step's decode.
+        let mut staged: Option<Vec<Request>> = None;
         if let Decision::Prefill { compiled, take } = decision {
             let reqs = self.router.pop_up_to(take);
-            let t = std::time::Instant::now();
-            let admitted = self.model.prefill(compiled, &reqs)?;
-            self.metrics.observe("prefill", t.elapsed());
-            anyhow::ensure!(
-                admitted.len() == reqs.len(),
-                "backend admitted {} of {} requests",
-                admitted.len(),
-                reqs.len()
-            );
-            for (req, adm) in reqs.into_iter().zip(admitted) {
-                let first = self.sampler.sample(&adm.logits);
-                let now = std::time::Instant::now();
-                self.metrics.observe("ttft", now - req.arrival);
-                self.metrics.inc("prefills", 1);
-                self.active.insert(
-                    adm.lane,
-                    ActiveSeq {
-                        request: req,
-                        generated: vec![first],
-                        last_token: first,
-                        first_token_at: now,
-                    },
-                );
+            if !self.active.is_empty()
+                && self.model.begin_prefill(compiled, &reqs)?
+            {
+                staged = Some(reqs);
+            } else {
+                let t = std::time::Instant::now();
+                let admitted = self.model.prefill(compiled, &reqs)?;
+                self.metrics.observe("prefill", t.elapsed());
+                self.register_admitted(reqs, admitted)?;
             }
             worked = true;
         }
@@ -204,9 +235,46 @@ impl<M: ForwardModel> Scheduler<M> {
             self.metrics.observe("decode_step", t.elapsed());
             worked = true;
         }
+        if let Some(reqs) = staged {
+            let t = std::time::Instant::now();
+            let admitted = self.model.finish_prefill()?;
+            self.metrics.observe("prefill", t.elapsed());
+            self.metrics.inc("interleaved_admissions", 1);
+            self.register_admitted(reqs, admitted)?;
+        }
         self.metrics.gauge("queue_depth", self.router.queue_len() as f64);
         self.metrics.gauge("lanes_busy", self.active.len() as f64);
         Ok(worked)
+    }
+
+    /// Sample each admitted request's first token and activate its lane.
+    fn register_admitted(
+        &mut self,
+        reqs: Vec<Request>,
+        admitted: Vec<AdmittedLane>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            admitted.len() == reqs.len(),
+            "backend admitted {} of {} requests",
+            admitted.len(),
+            reqs.len()
+        );
+        for (req, adm) in reqs.into_iter().zip(admitted) {
+            let first = self.sampler.sample(&adm.logits);
+            let now = std::time::Instant::now();
+            self.metrics.observe("ttft", now - req.arrival);
+            self.metrics.inc("prefills", 1);
+            self.active.insert(
+                adm.lane,
+                ActiveSeq {
+                    request: req,
+                    generated: vec![first],
+                    last_token: first,
+                    first_token_at: now,
+                },
+            );
+        }
+        Ok(())
     }
 
     fn decode_once(&mut self) -> Result<()> {

@@ -8,3 +8,27 @@ pub mod rng;
 pub mod sampling;
 pub mod stats;
 pub mod table;
+
+/// Parse a usize env toggle with a default (unset or malformed →
+/// `default`).  The single parser behind `DSMOE_PIPE_DEPTH` /
+/// `DSMOE_REGROUP_SKEW` so every reader agrees on the semantics.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn env_usize_parses_with_default() {
+        std::env::remove_var("DSMOE_TEST_ENV_USIZE");
+        assert_eq!(super::env_usize("DSMOE_TEST_ENV_USIZE", 7), 7);
+        std::env::set_var("DSMOE_TEST_ENV_USIZE", "3");
+        assert_eq!(super::env_usize("DSMOE_TEST_ENV_USIZE", 7), 3);
+        std::env::set_var("DSMOE_TEST_ENV_USIZE", "bogus");
+        assert_eq!(super::env_usize("DSMOE_TEST_ENV_USIZE", 7), 7);
+        std::env::remove_var("DSMOE_TEST_ENV_USIZE");
+    }
+}

@@ -409,6 +409,50 @@ fn stash_bounded_by_open_tags_and_drains() {
     fabric.shutdown();
 }
 
+/// Stash bound at four concurrent exchange generations (the bound itself
+/// is generic in the open-tag count — the pipeline ring can legally go as
+/// deep as the lane count, plus a staged admission): collecting
+/// newest-first parks the earlier replies in the stash, whose depth never
+/// exceeds the open tag count at any point and drains to zero once all
+/// four are collected.
+#[test]
+fn stash_bounded_at_ring_depth_4() {
+    let Some(m) = manifest() else { return };
+    let fabric = Fabric::spawn(1, worker_programs(&m)).unwrap();
+    let (mdim, f) = (128usize, 512usize);
+    fabric.load_expert(0, 0, 0, diag_weights(mdim, f, 0.5, 2.0)).unwrap();
+    let block: Vec<f32> =
+        (0..3 * mdim).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+    let mk_batch = |tag: u64| ExpertFfnBatch {
+        layer: 0,
+        experts: vec![(0, 3)],
+        data: HostTensor::f32(&[3, mdim], block.clone()),
+        tag,
+    };
+
+    let tags = [81u64, 82, 83, 84];
+    for &tag in &tags {
+        fabric.dispatch_ffn_batch(0, mk_batch(tag)).unwrap();
+    }
+    // Collect newest-first: each collect parks every earlier (still-open)
+    // reply, so the stash peaks at open-tag count and shrinks by one per
+    // collected generation.
+    for (i, &tag) in tags.iter().enumerate().rev() {
+        let open: Vec<u64> = tags[..i].to_vec();
+        let r = fabric.collect_ffn_batches(1, 0, tag, &open).unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].tag, tag);
+        assert!(
+            fabric.stash_depth() <= open.len(),
+            "stash {} exceeds open tags {}",
+            fabric.stash_depth(),
+            open.len()
+        );
+    }
+    assert_eq!(fabric.stash_depth(), 0, "stash must drain at depth 4");
+    fabric.shutdown();
+}
+
 #[test]
 fn unloaded_expert_is_an_error() {
     let Some(m) = manifest() else { return };

@@ -196,12 +196,15 @@ fn bitwise_serial_vs_overlap(model: &str, workers: usize) {
 }
 
 /// The microbatch-interleaved pipeline must be **bit-identical** to both
-/// per-layer paths: the same tokens route to the same experts with the
-/// same slot order inside each microbatch, every program is per-lane /
-/// per-row independent, and the host-side combine runs in the same order —
-/// only the schedule (and the program batch dimension) differs.  Batch 8
-/// so the half-batch (b=4) program shapes exist in every artifact set.
-fn bitwise_three_way(model: &str, workers: usize) {
+/// per-layer paths at any ring depth: the same tokens route to the same
+/// experts with the same slot order inside each microbatch, every program
+/// is per-lane / per-row independent, and the host-side combine runs in
+/// the same order — only the schedule (and the program batch dimension)
+/// differs.  Batch 8, so depth 2 (b=4 shapes) exists in every artifact
+/// set; depths 3 (3/3/2 groups) and 4 need the depth-N shape ladders —
+/// older artifact sets must fall back gracefully (2, then 1) and stay
+/// bit-identical there.
+fn bitwise_three_way(model: &str, workers: usize, depth: usize) {
     let Some(m) = manifest() else { return };
     let batch = 8usize;
     let cfg = m.model(model).unwrap().config.clone();
@@ -230,12 +233,28 @@ fn bitwise_three_way(model: &str, workers: usize) {
     let mut serial = mk(true, false);
     let mut overlap = mk(false, false);
     let mut pipelined = mk(false, true);
+    pipelined.set_pipe_depth(depth);
     assert_eq!(overlap.microbatches(), 1);
-    assert_eq!(
-        pipelined.microbatches(),
-        2,
-        "{model}: pipelined path unavailable (missing half-batch programs?)"
-    );
+    let resolved = pipelined.microbatches();
+    if pipelined.depth_supported(depth) {
+        assert_eq!(
+            resolved, depth,
+            "{model}: depth-{depth} shapes exist but the ring resolved \
+             to {resolved}"
+        );
+    } else {
+        // Artifact set predates the depth-N shape ladders: the fallback
+        // ladder must land on 2 (or 1) and stay bit-identical there.
+        assert!(
+            resolved == 2 || resolved == 1,
+            "{model}: unsupported depth {depth} resolved to {resolved}, \
+             not a fallback depth"
+        );
+        eprintln!(
+            "  note: {model}: depth-{depth} shapes missing from this \
+             artifact set; testing the fallback (depth {resolved})"
+        );
+    }
 
     let rs = serial.forward_prefill(&tokens, &lens).unwrap();
     let ro = overlap.forward_prefill(&tokens, &lens).unwrap();
@@ -256,10 +275,18 @@ fn bitwise_three_way(model: &str, workers: usize) {
             *p += 1;
         }
     }
-    // The pipeline actually hid waits behind leader compute.
-    assert!(pipelined.metrics.samples("attn_overlap") > 0);
-    assert!(pipelined.metrics.samples("pipeline_bubble") > 0);
-    assert_eq!(pipelined.metrics.samples("expert_wait"), 0);
+    // The pipeline actually hid waits behind leader compute (when it
+    // engaged), and the per-depth metric breakdown is attributable.
+    if resolved > 1 {
+        assert!(pipelined.metrics.samples("attn_overlap") > 0);
+        assert!(pipelined.metrics.samples("pipeline_bubble") > 0);
+        assert_eq!(pipelined.metrics.samples("expert_wait"), 0);
+        let by_depth = format!("pipeline_bubble_d{resolved}");
+        assert!(
+            pipelined.metrics.samples(&by_depth) > 0,
+            "{model}: no {by_depth} samples"
+        );
+    }
     // The tag-keyed reply stash drains fully between forwards.
     assert_eq!(pipelined.fabric_stash_depth(), 0);
 }
@@ -269,7 +296,12 @@ fn bitwise_three_way(model: &str, workers: usize) {
 /// sequences to back-to-back `forward_prefill`/`forward_decode` over the
 /// same prompts — per-lane outputs are independent of lane placement,
 /// admission batching, and dead-lane masking.
-fn ep_scheduler_token_parity(model: &str, serial: bool, pipeline: bool) {
+fn ep_scheduler_token_parity(
+    model: &str,
+    serial: bool,
+    pipeline: bool,
+    depth: usize,
+) {
     let Some(m) = manifest() else { return };
     let batch = 8usize;
     let workers = 4usize;
@@ -289,6 +321,7 @@ fn ep_scheduler_token_parity(model: &str, serial: bool, pipeline: bool) {
             .unwrap();
     manual.set_serial_moe(serial);
     manual.set_pipeline(pipeline);
+    manual.set_pipe_depth(depth);
     let mut tokens = vec![0i32; batch * smax];
     let lens = vec![plen; batch];
     for b in 0..batch {
@@ -324,6 +357,9 @@ fn ep_scheduler_token_parity(model: &str, serial: bool, pipeline: bool) {
             .unwrap();
     ep.set_serial_moe(serial);
     ep.set_pipeline(pipeline);
+    // Scheduler::new applies ServingConfig::pipe_depth through
+    // ForwardModel::configure — the config field is the depth control on
+    // the scheduler path.
     let mut sched = Scheduler::new(
         ep,
         ServingConfig {
@@ -331,11 +367,28 @@ fn ep_scheduler_token_parity(model: &str, serial: bool, pipeline: bool) {
             max_batch: batch,
             max_new_tokens: max_new,
             batch_timeout: std::time::Duration::from_millis(1),
+            pipe_depth: depth,
             ..Default::default()
         },
     );
+    // Two submission waves: the second wave arrives while the first is
+    // mid-decode, so its admission runs through the interleaved
+    // (prefill-behind-decode) path on backends that support it — tokens
+    // must be identical either way.
     let mut ids = Vec::new();
-    for b in 0..batch {
+    for b in 0..batch / 2 {
+        ids.push(sched.submit(corpus.prompt(b, plen), Some(max_new)).unwrap());
+    }
+    // Step until the first wave's batch timeout flushes it into lanes.
+    for _ in 0..50 {
+        sched.step().unwrap();
+        if sched.active_count() > 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+    assert!(sched.active_count() > 0);
+    for b in batch / 2..batch {
         ids.push(sched.submit(corpus.prompt(b, plen), Some(max_new)).unwrap());
     }
     let mut responses = sched.run_until_idle().unwrap();
@@ -354,34 +407,90 @@ fn ep_scheduler_token_parity(model: &str, serial: bool, pipeline: bool) {
 
 #[test]
 fn scheduler_token_parity_serial() {
-    ep_scheduler_token_parity("moe-s-8", true, false);
+    ep_scheduler_token_parity("moe-s-8", true, false, 2);
 }
 
 #[test]
 fn scheduler_token_parity_overlap() {
-    ep_scheduler_token_parity("moe-s-8", false, false);
+    ep_scheduler_token_parity("moe-s-8", false, false, 2);
 }
 
 #[test]
 fn scheduler_token_parity_pipelined() {
-    ep_scheduler_token_parity("moe-s-8", false, true);
+    ep_scheduler_token_parity("moe-s-8", false, true, 2);
+}
+
+#[test]
+fn scheduler_token_parity_pipelined_depth3() {
+    // Depth 3 runs uneven (3/3/2) lane groups plus interleaved admission
+    // prefills behind the decode ring — tokens must still match the
+    // fixed-lane driver exactly.
+    ep_scheduler_token_parity("moe-s-8", false, true, 3);
+}
+
+#[test]
+fn scheduler_token_parity_pipelined_depth4() {
+    ep_scheduler_token_parity("moe-s-8", false, true, 4);
 }
 
 #[test]
 fn scheduler_token_parity_prmoe_pipelined() {
-    ep_scheduler_token_parity("prmoe-s", false, true);
+    ep_scheduler_token_parity("prmoe-s", false, true, 2);
 }
 
 #[test]
 fn pipelined_bitwise_identical_moe() {
-    bitwise_three_way("moe-s-8", 4);
+    bitwise_three_way("moe-s-8", 4, 2);
+}
+
+#[test]
+fn pipelined_bitwise_identical_moe_depth3() {
+    // 8 lanes at depth 3: uneven 3/3/2 microbatch groups, three tagged
+    // exchanges in flight.
+    bitwise_three_way("moe-s-8", 4, 3);
+}
+
+#[test]
+fn pipelined_bitwise_identical_moe_depth4() {
+    bitwise_three_way("moe-s-8", 4, 4);
 }
 
 #[test]
 fn pipelined_bitwise_identical_prmoe_residual() {
     // PR-MoE: the pipeline also crosses dense layers and the overlapped
     // residual branch.
-    bitwise_three_way("prmoe-s", 4);
+    bitwise_three_way("prmoe-s", 4, 2);
+}
+
+#[test]
+fn pipelined_bitwise_identical_prmoe_depth3() {
+    bitwise_three_way("prmoe-s", 4, 3);
+}
+
+#[test]
+fn pipe_depth_one_is_the_per_layer_path() {
+    // Depth 1 must behave exactly like the overlapped per-layer path: one
+    // microbatch, waits in expert_wait, no pipeline metrics.
+    let Some(m) = manifest() else { return };
+    let mut ep =
+        EpEngine::new(&m, "moe-s-8", 4, AllToAllKind::Hierarchical, 8)
+            .unwrap();
+    ep.set_pipe_depth(1);
+    assert_eq!(ep.microbatches(), 1);
+    let smax = ep.cfg.max_seq;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let mut tokens = vec![0i32; 8 * smax];
+    for b in 0..8 {
+        let p = corpus.prompt(b, 8);
+        tokens[b * smax..b * smax + 8].copy_from_slice(&p);
+    }
+    ep.forward_prefill(&tokens, &vec![8; 8]).unwrap();
+    assert!(ep.metrics.samples("expert_wait") > 0);
+    assert_eq!(ep.metrics.samples("pipeline_bubble"), 0);
 }
 
 #[test]

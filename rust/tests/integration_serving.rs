@@ -4,9 +4,11 @@
 //! artifacts.
 
 use ds_moe::config::{AllToAllKind, ServingConfig};
+use ds_moe::coordinator::Request;
 use ds_moe::data::{Corpus, CorpusConfig};
 use ds_moe::runtime::Manifest;
-use ds_moe::server::{Engine, EpEngine, Scheduler};
+use ds_moe::server::{Engine, EpEngine, ForwardModel, Scheduler};
+use ds_moe::util::stats::argmax;
 
 fn manifest() -> Option<Manifest> {
     let root = std::path::Path::new("artifacts");
@@ -211,6 +213,124 @@ fn ep_scheduler_continuous_batching_smoke() {
     assert_eq!(sched.model.fabric_stash_depth(), 0);
     // Occupancy metrics recorded (busy lanes per decode step).
     assert!(sched.metrics.value_count("decode_utilization") > 0);
+}
+
+/// Skewed-retirement regroup: drive the EP engine's `ForwardModel` API
+/// directly, retire every lane of one pipeline group, and check that the
+/// next decode step (a) rebalances live lanes across the groups, (b) keeps
+/// the surviving requests' logits **bit-identical** to an engine that
+/// never regroups (lane migration is invisible to the math), and (c)
+/// still sends no dead-lane expert traffic.
+#[test]
+fn ep_regroup_rebalances_skewed_retirement() {
+    let Some(m) = manifest() else { return };
+    let c = corpus();
+    let batch = 8usize;
+    let plen = 8usize;
+    let mk_engine = |regroup: bool| {
+        let mut ep = EpEngine::new(
+            &m,
+            "moe-s-8",
+            4,
+            AllToAllKind::Hierarchical,
+            batch,
+        )
+        .unwrap();
+        // Pin the depth and threshold explicitly so ambient
+        // DSMOE_PIPE_DEPTH / DSMOE_REGROUP_SKEW env vars cannot skew the
+        // hard-coded two-group expectations below.
+        ep.set_pipe_depth(2);
+        if regroup {
+            ep.set_regroup_skew(2);
+        } else {
+            // A skew threshold no retirement pattern can reach pins the
+            // no-regroup reference.
+            ep.set_regroup_skew(usize::MAX);
+        }
+        ep
+    };
+    let mk_reqs = || -> Vec<Request> {
+        (0..batch)
+            .map(|i| Request {
+                id: i as u64 + 1,
+                prompt: c.prompt(i, plen),
+                max_new_tokens: 8,
+                arrival: std::time::Instant::now(),
+            })
+            .collect()
+    };
+    let mut ep = mk_engine(true);
+    let mut reference = mk_engine(false);
+    if ep.microbatches() < 2 {
+        eprintln!("  note: pipeline unavailable; regroup test skipped");
+        return;
+    }
+    let admitted = ep.prefill(batch, &mk_reqs()).unwrap();
+    let admitted_ref = reference.prefill(batch, &mk_reqs()).unwrap();
+    assert_eq!(admitted.len(), batch);
+    // Balanced admission fills both groups evenly.
+    assert_eq!(ep.group_live_counts(), vec![4, 4]);
+
+    // Retire every lane of group 0 (external ids == physical before any
+    // regroup), skewing occupancy to 0 vs 4.
+    let mut live: Vec<usize> = Vec::new();
+    let mut tokens = vec![0i32; batch];
+    let mut pos = vec![0i32; batch];
+    for (adm, ar) in admitted.iter().zip(&admitted_ref) {
+        assert_eq!(adm.lane, ar.lane);
+        assert_eq!(adm.logits, ar.logits, "admission logits differ");
+        if adm.lane < batch / 2 {
+            ep.release(adm.lane);
+            reference.release(adm.lane);
+        } else {
+            live.push(adm.lane);
+            tokens[adm.lane] = argmax(&adm.logits) as i32;
+            pos[adm.lane] = plen as i32;
+        }
+    }
+    assert_eq!(ep.group_live_counts(), vec![0, 4]);
+
+    // Three decode steps: the first triggers the rebalance; all of them
+    // must match the never-regrouping engine bit-for-bit on live lanes.
+    for step in 0..3 {
+        let rows = ep.decode_step(&tokens, &pos).unwrap();
+        let rows_ref = reference.decode_step(&tokens, &pos).unwrap();
+        for &lane in &live {
+            assert_eq!(
+                rows[lane], rows_ref[lane],
+                "step {step}: lane {lane} diverged after regroup"
+            );
+            tokens[lane] = argmax(&rows[lane]) as i32;
+            pos[lane] += 1;
+        }
+    }
+    // Rebalanced: live load spread evenly across the groups...
+    let counts = ep.group_live_counts();
+    assert_eq!(counts.iter().sum::<usize>(), live.len());
+    let (min, max) = (
+        *counts.iter().min().unwrap(),
+        *counts.iter().max().unwrap(),
+    );
+    assert!(max - min <= 1, "still skewed after regroup: {counts:?}");
+    assert!(ep.metrics.counter("lane_regroups") >= 1);
+    // ...while the reference never moved a lane.
+    assert_eq!(reference.group_live_counts(), vec![0, 4]);
+    assert_eq!(reference.metrics.counter("lane_regroups"), 0);
+
+    // No dead-lane expert traffic after the migration: one more decode
+    // step adds exactly `live.len()` tokens per MoE layer.
+    let before: Vec<u64> =
+        ep.load_stats.iter().map(|s| s.total_tokens).collect();
+    ep.decode_step(&tokens, &pos).unwrap();
+    for (s, b) in ep.load_stats.iter().zip(before) {
+        assert_eq!(
+            s.total_tokens,
+            b + live.len() as u64,
+            "layer {}: dead lanes leaked into expert routing after \
+             regroup",
+            s.layer
+        );
+    }
 }
 
 /// Dead lanes must send no expert traffic: serve a single request on an

@@ -12,6 +12,11 @@ cargo test -q
 # every integration test).  Named explicitly so a filtered `cargo test`
 # invocation can never silently drop it from the gate.
 cargo test -q --test integration_serving ep_scheduler
+# Depth-N pipeline ring: depth-3 three-way bitwise parity (uneven 3/3/2
+# lane groups) and the skewed-retirement regroup test, named explicitly
+# for the same reason.
+cargo test -q --test integration_parity pipelined_bitwise_identical_moe_depth3
+cargo test -q --test integration_serving ep_regroup_rebalances_skewed_retirement
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 
