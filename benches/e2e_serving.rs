@@ -31,8 +31,19 @@
 //! (`pipeline_bubble` + `prefill_stall` + `expert_wait`) landing strictly
 //! below the stop-the-world sum at equal token output.
 //!
+//! Part 6 is the leader-parallel study: fixed-lane forwards at
+//! `leader_threads = 1` vs `leader_threads = pipe_depth` for each ring
+//! depth — the acceptance bar is a lower decode forward wall-clock with
+//! the shards on, with the removed serialization attributed via the
+//! `leader_par` (per-shard busy compute, which now runs concurrently)
+//! and `shard_idle` (per-shard exposed reply wait) timers.
+//!
 //! Everything is also emitted to `BENCH_e2e.json` at the repo root so the
 //! perf trajectory is tracked across PRs.
+//!
+//! `--smoke` runs a minimal subset (one model, a short arrival trace, the
+//! depth-2 leader-parallel pair) and still writes `BENCH_e2e.json` —
+//! cheap enough for `scripts/check.sh`, so every PR records a perf point.
 
 use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
@@ -121,11 +132,22 @@ impl PipelineStudy {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let Ok(manifest) = Manifest::load("artifacts") else {
         eprintln!("run `make artifacts` first");
         return;
     };
     let corpus = Corpus::generate(CorpusConfig::default());
+    if smoke {
+        println!("--smoke: minimal studies, full BENCH_e2e.json schema");
+    }
+
+    let variants: &[&str] = if smoke {
+        &["moe-s-8"]
+    } else {
+        &["dense-s", "dense-m", "dense-l", "moe-s-8", "prmoe-s", "mos-s"]
+    };
+    let loads: &[usize] = if smoke { &[8] } else { &[8, 24] };
 
     let mut rows = Vec::new();
     let mut t = Table::new(
@@ -133,9 +155,8 @@ fn main() {
         &["model", "params", "requests", "tok/s", "TTFT p50",
           "decode p50", "decode p99"],
     );
-    for model in ["dense-s", "dense-m", "dense-l", "moe-s-8", "prmoe-s",
-                  "mos-s"] {
-        for &n_requests in &[8usize, 24] {
+    for &model in variants {
+        for &n_requests in loads {
             let serving = ServingConfig {
                 model: model.into(),
                 max_new_tokens: 8,
@@ -195,7 +216,9 @@ fn main() {
         &["model", "path", "prefill", "decode", "moe layer", "exposed wait",
           "msgs/layer"],
     );
-    for (model, workers) in [("moe-s-8", 4usize), ("prmoe-s", 4)] {
+    let study_models: &[(&str, usize)] =
+        if smoke { &[] } else { &[("moe-s-8", 4usize), ("prmoe-s", 4)] };
+    for &(model, workers) in study_models {
         let Some(study) = pipeline_study(&manifest, &corpus, model, workers)
         else {
             continue;
@@ -237,10 +260,16 @@ fn main() {
         &["model", "path", "req", "tok/s", "TTFT p50", "TTFT p99",
           "occupancy %", "pipeline bubble"],
     );
-    for (model, workers) in [("moe-s-8", 4usize), ("prmoe-s", 4)] {
+    let cb_models: &[(&str, usize)] = if smoke {
+        &[("moe-s-8", 4usize)]
+    } else {
+        &[("moe-s-8", 4usize), ("prmoe-s", 4)]
+    };
+    let cb_requests = if smoke { 12 } else { 24 };
+    for &(model, workers) in cb_models {
         for pipelined in [false, true] {
             let Some(row) = continuous_batching_study(
-                &manifest, &corpus, model, workers, pipelined,
+                &manifest, &corpus, model, workers, pipelined, cb_requests,
             ) else {
                 continue;
             };
@@ -272,7 +301,8 @@ fn main() {
         &["requested N", "resolved", "prefill", "decode", "exposed wait",
           "bubble/layer"],
     );
-    for depth in [1usize, 2, 3, 4] {
+    let depths: &[usize] = if smoke { &[] } else { &[1, 2, 3, 4] };
+    for &depth in depths {
         let Some(row) = depth_study(&manifest, &corpus, "moe-s-8", 4, depth)
         else {
             continue;
@@ -301,7 +331,9 @@ fn main() {
         &["model", "mode", "tokens", "tok/s", "TTFT p50", "bubble",
           "prefill stall", "exposed wait"],
     );
-    for model in ["moe-s-8", "prmoe-s"] {
+    let adm_models: &[&str] =
+        if smoke { &[] } else { &["moe-s-8", "prmoe-s"] };
+    for &model in adm_models {
         for interleave in [false, true] {
             let Some(row) = admission_study(
                 &manifest, &corpus, model, 4, interleave,
@@ -330,7 +362,141 @@ fn main() {
     at.print();
     let _ = at.save_csv("e2e_admission_interleaving");
 
-    write_bench_json(&rows, &studies, &cb_rows, &depth_rows, &adm_rows);
+    // --- parallel leader shards: leader_threads 1 vs N per ring depth ----
+    let mut lp_rows = Vec::new();
+    let mut lt = Table::new(
+        "Parallel leader shards (moe-s-8, fixed-lane forwards)",
+        &["depth", "threads", "used", "prefill", "decode", "leader par",
+          "shard idle", "exposed wait"],
+    );
+    let lp_cfgs: &[(usize, usize)] = if smoke {
+        &[(2, 1), (2, 2)]
+    } else {
+        &[(2, 1), (2, 2), (3, 1), (3, 3), (4, 1), (4, 4)]
+    };
+    let (lp_prefills, lp_decodes) = if smoke { (1, 4) } else { (2, 8) };
+    for &(depth, threads) in lp_cfgs {
+        let Some(row) = leader_parallel_study(
+            &manifest, &corpus, "moe-s-8", 4, depth, threads, lp_prefills,
+            lp_decodes,
+        ) else {
+            continue;
+        };
+        lt.row(&[
+            row.depth.to_string(),
+            row.threads_requested.to_string(),
+            row.threads_used.to_string(),
+            fmt_ns(row.prefill_ns as u64),
+            fmt_ns(row.decode_ns as u64),
+            fmt_ns(row.leader_par_ns),
+            fmt_ns(row.shard_idle_ns),
+            fmt_ns(row.exposed_wait_ns),
+        ]);
+        lp_rows.push(row);
+    }
+    lt.note("threads = pipe_depth runs each microbatch group's dense \
+             backbone on its own runtime thread: decode wall-clock should \
+             land below the threads=1 row at the same depth.  leader_par \
+             sums the per-shard busy compute that now runs concurrently \
+             (it exceeds the forward wall-clock when parallelism is \
+             real); shard_idle is the per-shard exposed expert-reply \
+             wait — together they attribute the removed serialization");
+    lt.print();
+    let _ = lt.save_csv("e2e_leader_parallel");
+
+    write_bench_json(
+        &rows, &studies, &cb_rows, &depth_rows, &adm_rows, &lp_rows,
+    );
+}
+
+struct LeaderParRow {
+    model: String,
+    depth: usize,
+    threads_requested: usize,
+    /// `EpEngine::leader_shards()` — what the forward actually ran with.
+    threads_used: usize,
+    prefill_ns: f64,
+    decode_ns: f64,
+    /// Summed per-shard busy compute across the measured forwards.
+    leader_par_ns: u64,
+    /// Summed per-shard exposed expert-reply wait.
+    shard_idle_ns: u64,
+    /// Exposed wait whichever path produced it: `pipeline_bubble` +
+    /// `expert_wait` (single-threaded leader) + `shard_idle` (shards).
+    exposed_wait_ns: u64,
+    decode_steps: usize,
+}
+
+/// Fixed-lane forwards at one (ring depth, leader_threads) point, steady
+/// state (warmup excluded via a fresh metrics registry) — the
+/// leader-parallel study row.
+#[allow(clippy::too_many_arguments)]
+fn leader_parallel_study(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    model: &str,
+    workers: usize,
+    depth: usize,
+    threads: usize,
+    prefills: usize,
+    decodes: usize,
+) -> Option<LeaderParRow> {
+    let batch = 8usize;
+    let mut ep = EpEngine::new(
+        manifest,
+        model,
+        workers,
+        AllToAllKind::Hierarchical,
+        batch,
+    )
+    .ok()?;
+    ep.set_serial_moe(false);
+    ep.set_pipeline(true);
+    ep.set_pipe_depth(depth);
+    ep.set_leader_threads(threads);
+    if ep.microbatches() < 2 {
+        // No ring at this depth on this artifact set: the 1-vs-N
+        // comparison would be vacuous.
+        return None;
+    }
+    let smax = ep.cfg.max_seq;
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+    let lens = vec![plen; batch];
+    // Warmup compiles every program on the leader *and* on each shard.
+    let first = ep.forward_prefill(&tokens, &lens).ok()?;
+    let mut tok: Vec<i32> = first.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    ep.forward_decode(&tok, &pos).ok()?;
+    ep.metrics = std::sync::Arc::new(Metrics::new());
+    for _ in 0..prefills {
+        ep.forward_prefill(&tokens, &lens).ok()?;
+    }
+    for _ in 0..decodes {
+        let out = ep.forward_decode(&tok, &pos).ok()?;
+        tok = out.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    Some(LeaderParRow {
+        model: model.to_string(),
+        depth,
+        threads_requested: threads,
+        threads_used: ep.leader_shards(),
+        prefill_ns: ep.metrics.mean_ns("forward_prefill"),
+        decode_ns: ep.metrics.mean_ns("forward_decode"),
+        leader_par_ns: ep.metrics.sum_ns("leader_par"),
+        shard_idle_ns: ep.metrics.sum_ns("shard_idle"),
+        exposed_wait_ns: ep.metrics.sum_ns("pipeline_bubble")
+            + ep.metrics.sum_ns("expert_wait")
+            + ep.metrics.sum_ns("shard_idle"),
+        decode_steps: decodes,
+    })
 }
 
 struct DepthRow {
@@ -498,9 +664,9 @@ fn continuous_batching_study(
     model: &str,
     workers: usize,
     pipelined: bool,
+    n_requests: usize,
 ) -> Option<CbRow> {
     let batch = 8usize;
-    let n_requests = 24usize;
     let rate = 200.0; // req/s: enough to overlap admissions with decode
     let max_new = 6usize;
     let mut ep = EpEngine::new(
@@ -663,14 +829,15 @@ fn pipeline_study(
 
 /// Emit `BENCH_e2e.json` at the repo root: the serving sweep, the MoE
 /// pipeline study, the continuous-batching study, the ring-depth sweep,
-/// and the admission-interleaving study, so future PRs have a
-/// machine-readable perf baseline.
+/// the admission-interleaving study, and the leader-parallel study, so
+/// future PRs have a machine-readable perf baseline.
 fn write_bench_json(
     rows: &[ServingRow],
     studies: &[PipelineStudy],
     cb_rows: &[CbRow],
     depth_rows: &[DepthRow],
     adm_rows: &[AdmissionRow],
+    lp_rows: &[LeaderParRow],
 ) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"e2e_serving\",\n  \"serving\": [\n");
@@ -796,6 +963,28 @@ fn write_bench_json(
             r.exposed_wait_ns,
             r.interleaved_admissions,
             if i + 1 == adm_rows.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ],\n  \"leader_parallel\": [\n");
+    for (i, r) in lp_rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"model\": \"{}\", \"pipe_depth\": {}, \
+             \"leader_threads\": {}, \"leader_threads_used\": {}, \
+             \"prefill_ns\": {:.0}, \"decode_ns\": {:.0}, \
+             \"decode_steps\": {}, \"leader_par_ns\": {}, \
+             \"shard_idle_ns\": {}, \"exposed_wait_ns\": {}}}{}\n",
+            r.model,
+            r.depth,
+            r.threads_requested,
+            r.threads_used,
+            r.prefill_ns,
+            r.decode_ns,
+            r.decode_steps,
+            r.leader_par_ns,
+            r.shard_idle_ns,
+            r.exposed_wait_ns,
+            if i + 1 == lp_rows.len() { "" } else { "," }
         );
     }
     s.push_str("  ]\n}\n");

@@ -124,6 +124,13 @@ pub struct ServingConfig {
     /// `EpEngine::set_pipe_depth`); falls back 2 → 1 when the artifact
     /// set lacks the group-sized program shapes.
     pub pipe_depth: usize,
+    /// Leader shard threads for the expert-parallel engine: values >= 2
+    /// run each pipeline microbatch group's dense backbone on its own
+    /// OS thread + thread-bound runtime (`DSMOE_LEADER_THREADS`; applied
+    /// through `ForwardModel::configure`, equivalently
+    /// `EpEngine::set_leader_threads`).  1 (default) keeps the
+    /// single-threaded leader.
+    pub leader_threads: usize,
     /// Greedy (argmax) vs temperature sampling.
     pub temperature: f32,
     /// Seed for temperature sampling (`util::sampling::Sampler`), so
@@ -141,13 +148,17 @@ impl Default for ServingConfig {
             batch_timeout: std::time::Duration::from_millis(2),
             max_new_tokens: 16,
             alltoall: AllToAllKind::Hierarchical,
-            // Seeded from DSMOE_PIPE_DEPTH so the env toggle survives the
-            // scheduler path: on that path this config is the single
-            // source of truth (Scheduler::new applies it through
-            // ForwardModel::configure, overwriting any earlier
-            // set_pipe_depth), so pass a non-default depth here rather
-            // than on the engine.
-            pipe_depth: crate::util::env_usize("DSMOE_PIPE_DEPTH", 2),
+            // Seeded from DSMOE_PIPE_DEPTH / DSMOE_LEADER_THREADS so the
+            // env toggles survive the scheduler path: on that path this
+            // config is the single source of truth (Scheduler::new
+            // applies it through ForwardModel::configure, overwriting any
+            // earlier set_pipe_depth / set_leader_threads), so pass
+            // non-default values here rather than on the engine.
+            pipe_depth: crate::util::env_pos_usize("DSMOE_PIPE_DEPTH", 2),
+            leader_threads: crate::util::env_pos_usize(
+                "DSMOE_LEADER_THREADS",
+                1,
+            ),
             temperature: 0.0,
             seed: 0xD5, // the old Engine's hard-coded RNG seed
         }

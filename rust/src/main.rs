@@ -140,6 +140,12 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         ServingConfig::default().pipe_depth,
         "microbatch pipeline ring depth N (DSMOE_PIPE_DEPTH)",
     );
+    let leader_threads = args.get_usize(
+        "leader-threads",
+        ServingConfig::default().leader_threads,
+        "leader shard threads: >=2 = one thread per microbatch group \
+         (DSMOE_LEADER_THREADS)",
+    );
     let no_interleave = args.get_bool(
         "no-interleave", false,
         "stop-the-world admission prefills (DSMOE_NO_INTERLEAVE)",
@@ -165,13 +171,16 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         ep.set_pipeline(false);
     }
     ep.set_pipe_depth(pipe_depth);
+    ep.set_leader_threads(leader_threads);
     if no_interleave {
         ep.set_interleave(false);
     }
     println!(
         "ep-serve {model}: {workers} workers, batch {batch}, {a2a:?}, \
-         {} microbatch(es) (depth {pipe_depth} requested), {} mode{}",
+         {} microbatch(es) (depth {pipe_depth} requested), \
+         {} leader thread(s), {} mode{}",
         ep.microbatches(),
+        ep.leader_shards(),
         if legacy { "fixed-lane" } else { "request-driven" },
         if !legacy && ep.interleave() && !serial {
             ", interleaved admission"
@@ -192,6 +201,7 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         max_new_tokens: max_new,
         alltoall: a2a,
         pipe_depth,
+        leader_threads,
         ..Default::default()
     };
     let mut sched = Scheduler::new(ep, serving);

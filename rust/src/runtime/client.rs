@@ -9,11 +9,82 @@
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use super::artifact::{ProgramSpec, TensorSpec};
+use super::artifact::{Manifest, ProgramSpec, TensorSpec};
 use super::host_tensor::HostTensor;
+
+/// One artifact set, shareable across threads, from which the dense
+/// backbone can be materialized on **multiple** thread-bound [`Runtime`]s.
+///
+/// PJRT objects are thread-bound (`PjRtClient` is `Rc`-based), so a second
+/// runtime thread cannot borrow the leader's compiled programs or weight
+/// literals.  What *can* be shared is the source of both: the manifest
+/// (program specs → HLO files) and the checkpoint tensors (`Send`able
+/// [`HostTensor`]s behind an `Arc`).  Each thread that wants its own copy
+/// of the dense backbone clones a `SharedArtifacts`, creates its own
+/// `Runtime`, and calls [`SharedArtifacts::materialize_dense_params`] —
+/// the same artifact set feeds the single-threaded leader and every
+/// leader shard without duplicating the host-side weights.
+#[derive(Clone)]
+pub struct SharedArtifacts {
+    manifest: Manifest,
+    params: Arc<HashMap<String, HostTensor>>,
+}
+
+impl SharedArtifacts {
+    pub fn new(
+        manifest: Manifest,
+        params: HashMap<String, HostTensor>,
+    ) -> SharedArtifacts {
+        SharedArtifacts { manifest, params: Arc::new(params) }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The checkpoint tensors (host side, shared — never copied per
+    /// thread).
+    pub fn params(&self) -> &HashMap<String, HostTensor> {
+        &self.params
+    }
+
+    /// True if `name` is a stacked expert-FFN weight (`layerN.moe.w1` /
+    /// `b1` / `w2` / `b2`): those live sliced on the fabric workers, not
+    /// on any leader runtime.  The expert *gate* (`moe.gate`) and the
+    /// PR-MoE residual branch (`moe.res.*`) are dense leader-side
+    /// parameters and are kept.
+    pub fn is_expert_param(name: &str) -> bool {
+        name.ends_with(".moe.w1")
+            || name.ends_with(".moe.b1")
+            || name.ends_with(".moe.w2")
+            || name.ends_with(".moe.b2")
+    }
+
+    /// Materialize every dense (non-expert) checkpoint tensor as an
+    /// `xla::Literal` for the calling thread.  Literals are host memory,
+    /// but they are not `Send` — each runtime thread builds its own set
+    /// from the shared host tensors.
+    pub fn materialize_dense_params(
+        &self,
+    ) -> Result<HashMap<String, xla::Literal>> {
+        let mut out = HashMap::with_capacity(self.params.len());
+        for (name, t) in self.params.iter() {
+            if Self::is_expert_param(name) {
+                continue;
+            }
+            out.insert(
+                name.clone(),
+                t.to_literal()
+                    .with_context(|| format!("materializing param {name}"))?,
+            );
+        }
+        Ok(out)
+    }
+}
 
 /// Thread-local PJRT CPU runtime with a compiled-program cache.
 pub struct Runtime {
@@ -229,6 +300,49 @@ mod tests {
         let again = rt.load(spec).unwrap();
         assert!(Rc::ptr_eq(&prog, &again));
         assert_eq!(rt.cached_programs(), 1);
+    }
+
+    #[test]
+    fn expert_param_filter_keeps_dense_weights() {
+        // Stacked expert weights are worker-side; everything else —
+        // including the gate and the PR-MoE residual branch — is dense.
+        for expert in ["layer1.moe.w1", "layer3.moe.b1", "layer1.moe.w2",
+                       "layer7.moe.b2"] {
+            assert!(SharedArtifacts::is_expert_param(expert), "{expert}");
+        }
+        for dense in ["layer1.moe.gate", "layer1.moe.res.w1",
+                      "layer1.moe.res.b2", "layer0.mlp.w1", "tok_emb",
+                      "layer2.attn.wq", "lnf.g"] {
+            assert!(!SharedArtifacts::is_expert_param(dense), "{dense}");
+        }
+    }
+
+    #[test]
+    fn shared_artifacts_materialize_on_two_threads() {
+        let Some(m) = manifest() else { return };
+        let mut params = HashMap::new();
+        params.insert(
+            "tok_emb".to_string(),
+            HostTensor::f32(&[2, 2], vec![1., 2., 3., 4.]),
+        );
+        params.insert(
+            "layer0.moe.w1".to_string(),
+            HostTensor::zeros_f32(&[2, 2]),
+        );
+        let arts = SharedArtifacts::new(m, params);
+        let here = arts.materialize_dense_params().unwrap();
+        assert!(here.contains_key("tok_emb"));
+        assert!(!here.contains_key("layer0.moe.w1"));
+        // The same artifact set materializes independently on another
+        // thread (the leader-shard pattern).
+        let arts2 = arts.clone();
+        let ok = std::thread::spawn(move || {
+            let there = arts2.materialize_dense_params().unwrap();
+            there.len() == 1 && there.contains_key("tok_emb")
+        })
+        .join()
+        .unwrap();
+        assert!(ok);
     }
 
     #[test]

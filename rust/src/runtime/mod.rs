@@ -4,6 +4,9 @@
 //! * [`artifact::Manifest`] — parses `artifacts/manifest.json` (the ABI).
 //! * [`client::Runtime`] / [`client::Program`] — thread-local PJRT CPU
 //!   client with a compile cache; spec-validated execution.
+//! * [`client::SharedArtifacts`] — one manifest + checkpoint set,
+//!   shareable across threads, from which dense weights/programs are
+//!   materialized on multiple runtimes (leader + leader shards).
 //! * [`host_tensor::HostTensor`] — `Send` host tensors that cross threads.
 //! * [`checkpoint::Checkpoint`] — params.bin/meta.json I/O shared with the
 //!   Python side.
@@ -15,5 +18,5 @@ pub mod host_tensor;
 
 pub use artifact::{Manifest, ModelArtifacts, ProgramSpec, TensorSpec};
 pub use checkpoint::Checkpoint;
-pub use client::{Program, Runtime};
+pub use client::{Program, Runtime, SharedArtifacts};
 pub use host_tensor::{HostTensor, TensorData};

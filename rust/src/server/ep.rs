@@ -86,6 +86,32 @@
 //!   regroup moves copy only the touched lanes instead of round-tripping
 //!   the whole group's cache per layer.
 //!
+//! ## Parallel leader shards
+//!
+//! The ring hides leader compute behind fabric round trips, but the
+//! attention/gate/combine of different microbatches still serialize on
+//! the one leader thread.  `DSMOE_LEADER_THREADS >= 2`
+//! ([`EpEngine::set_leader_threads`] / `ServingConfig::leader_threads` /
+//! `--leader-threads`) removes that serialization: each microbatch
+//! group's **dense backbone runs on its own OS thread** with its own
+//! thread-bound runtime ([`crate::server::shard`] — the same pattern as
+//! the fabric workers), owning that group's KV caches and host mirrors.
+//! Microbatch B's attention+gate executes on shard 2 *concurrently* with
+//! microbatch A's attention on shard 1 while A's experts are on the
+//! fabric.  This engine stays the orchestrator: shards hand it prepared
+//! coalesced payloads, it tags them, puts them on the fabric, collects
+//! replies **oldest-exchange-first** (the ring's dispatch/finish order,
+//! over the same tag-keyed exchanges), and routes them back; a staged
+//! admission still advances one layer behind each freshly dispatched
+//! decode exchange.  Shard busy compute lands in `leader_par`, a shard's
+//! exposed reply wait in `shard_idle`, and the `leader_threads` gauge
+//! records the thread count each forward ran with.  Caches migrate
+//! automatically (host-side) when the thread count or partition toggles
+//! between forwards; with the default `leader_threads = 1` nothing
+//! changes.  The sharded schedule is bit-identical to the single-threaded
+//! leader: both execute the same [`crate::server::shard::Backbone`]
+//! methods over the same program shapes, per-lane/per-row independent.
+//!
 //! ## Env toggles
 //!
 //! | variable              | effect                                       |
@@ -99,7 +125,11 @@
 //! |                       | followed by finish, full-batch shapes        |
 //! |                       | ([`EpEngine::set_pipeline`]).                |
 //! | `DSMOE_PIPE_DEPTH`    | microbatch ring depth N (default 2;          |
-//! |                       | [`EpEngine::set_pipe_depth`]).               |
+//! |                       | [`EpEngine::set_pipe_depth`]; 0/negative/    |
+//! |                       | garbage warn and fall back to 2).            |
+//! | `DSMOE_LEADER_THREADS`| >= 2: one leader-shard thread per microbatch |
+//! |                       | group (default 1 = the single-threaded       |
+//! |                       | leader; [`EpEngine::set_leader_threads`]).   |
 //! | `DSMOE_NO_INTERLEAVE` | stop-the-world admission prefills (the       |
 //! |                       | pre-interleaving scheduler behaviour;        |
 //! |                       | [`EpEngine::set_interleave`]).               |
@@ -109,45 +139,50 @@
 //! |                       | divide evenly, so 2 is the smallest          |
 //! |                       | actionable imbalance.                        |
 //!
-//! All paths — serial, overlapped, pipelined at any depth — produce
-//! **bit-identical** logits for prefill and decode (asserted at depths 2,
-//! 3 and 4 in `integration_parity.rs`); `benches/e2e_serving.rs` compares
-//! their forward latencies, exposed waits, the depth sweep, and
-//! interleaved vs stop-the-world admission into `BENCH_e2e.json`.
+//! All paths — serial, overlapped, pipelined at any depth, single- or
+//! multi-threaded leader — produce **bit-identical** logits for prefill
+//! and decode (asserted at depths 2, 3 and 4, and for
+//! `leader_threads ∈ {1, N}`, in `integration_parity.rs`);
+//! `benches/e2e_serving.rs` compares their forward latencies, exposed
+//! waits, the depth sweep, interleaved vs stop-the-world admission, and
+//! the leader-parallel study into `BENCH_e2e.json`.
 
 use std::collections::{HashMap, VecDeque};
-use std::rc::Rc;
+use std::sync::mpsc::TryRecvError;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::config::{AllToAllKind, ModelConfig};
-use crate::coordinator::alltoall::{self, Topology};
 use crate::coordinator::kv_cache::{copy_lane, split_lanes};
 use crate::coordinator::{Placement, Request, Routing};
 use crate::fabric::{ExpertFfnBatch, Fabric, FfnBatchResult, WorkerPrograms};
 use crate::metrics::Metrics;
 use crate::moe::ExpertLoadStats;
-use crate::runtime::{
-    Checkpoint, HostTensor, Manifest, Program, Runtime,
-};
+use crate::runtime::{Checkpoint, HostTensor, Manifest, SharedArtifacts};
 use crate::server::scheduler::{AdmittedLane, ForwardModel};
-use crate::util::env_usize;
+use crate::server::shard::{
+    Backbone, LaneWrite, MoeScratch, PoolSpec, Prepared, PreparedMoe,
+    ShardCmd, ShardEvent, ShardPool,
+};
+use crate::util::env_pos_usize;
 
 pub struct EpEngine {
-    rt: Runtime,
+    /// The dense backbone bound to *this* thread (programs, dense weight
+    /// literals): the single-threaded leader's compute, and the shared
+    /// implementation every leader shard also runs.
+    bb: Backbone,
+    /// The thread-shareable artifact set leader shards materialize their
+    /// own backbones from.
+    arts: SharedArtifacts,
     pub cfg: ModelConfig,
-    params: HashMap<String, xla::Literal>,
-    #[allow(dead_code)] // retained for checkpoint hot-swap (future work)
-    params_host: HashMap<String, HostTensor>,
     placement: Placement,
     fabric: Fabric,
-    pub metrics: std::sync::Arc<Metrics>,
+    pub metrics: Arc<Metrics>,
     pub load_stats: Vec<ExpertLoadStats>,
     /// `stats_idx[layer]` = index into `load_stats` (None for dense
     /// layers): O(1) per-layer lookup instead of a linear scan.
     stats_idx: Vec<Option<usize>>,
-    manifest_keys: ManifestKeys,
-    progs: HashMap<String, Rc<Program>>,
     alltoall: AllToAllKind,
     /// Decode KV caches in per-microbatch lane groups; each group holds
     /// per-layer `[lanes, H, Smax, hd]` tensors (monolithic layout is
@@ -175,6 +210,20 @@ pub struct EpEngine {
     /// Live-lane skew (max − min per group) that triggers a regroup
     /// (`DSMOE_REGROUP_SKEW`, default 2).
     regroup_skew: usize,
+    /// Requested leader shard threads (`DSMOE_LEADER_THREADS`, default
+    /// 1): >= 2 runs each microbatch group's dense backbone on its own
+    /// thread-bound runtime.
+    leader_threads: usize,
+    /// The leader-shard pool (spawned lazily for the active partition;
+    /// threads joined on drop).
+    shards: Option<ShardPool>,
+    /// True while the decode KV cache groups live inside the shard pool
+    /// rather than in `caches`.
+    shard_caches: bool,
+    /// Test-only slow-shard injection, applied at the next pool spawn.
+    slow_shard: Option<(usize, std::time::Duration)>,
+    /// Shard completion order of the most recent sharded forward.
+    shard_completions: Vec<usize>,
     /// Routing/combine scratch pool: one slot per pipeline microbatch
     /// (index = microbatch) plus a dedicated slot (index = `batch`) for a
     /// staged admission prefill.
@@ -208,27 +257,14 @@ pub struct EpEngine {
     prefill_sizes: Vec<usize>,
 }
 
-struct ManifestKeys {
-    manifest: Manifest,
-}
-
-/// Routing pack/combine scratch reused across MoE layers (and forwards) so
-/// the hot path does not reallocate its staging buffers per layer.  The
-/// engine keeps one slot per pipeline microbatch (double buffering).
-#[derive(Default)]
-struct MoeScratch {
-    /// `[T * M]` combine accumulation buffer.
-    combine: Vec<f32>,
-    /// Per-worker expert lists for the current layer.
-    worker_experts: Vec<Vec<usize>>,
-}
-
 /// Decode KV caches for one contiguous lane group (a pipeline microbatch).
-struct LaneGroupCaches {
-    lane0: usize,
-    lanes: usize,
-    k: Vec<xla::Literal>,
-    v: Vec<xla::Literal>,
+/// Owned by the engine on the single-threaded paths, or by that group's
+/// leader shard when `leader_threads >= 2`.
+pub(crate) struct LaneGroupCaches {
+    pub(crate) lane0: usize,
+    pub(crate) lanes: usize,
+    pub(crate) k: Vec<xla::Literal>,
+    pub(crate) v: Vec<xla::Literal>,
     /// Per-layer host mirrors of `k`/`v` (`None` = stale, repulled on
     /// demand): admission splices and regroup moves write through these so
     /// only the touched lanes are copied; decode writes invalidate the
@@ -238,7 +274,11 @@ struct LaneGroupCaches {
 }
 
 impl LaneGroupCaches {
-    fn new(lane0: usize, lanes: usize, n_layers: usize) -> LaneGroupCaches {
+    pub(crate) fn new(
+        lane0: usize,
+        lanes: usize,
+        n_layers: usize,
+    ) -> LaneGroupCaches {
         LaneGroupCaches {
             lane0,
             lanes,
@@ -250,7 +290,7 @@ impl LaneGroupCaches {
     }
 
     /// Append one layer's freshly computed caches (mirror starts stale).
-    fn push_kv(&mut self, k: xla::Literal, v: xla::Literal) {
+    pub(crate) fn push_kv(&mut self, k: xla::Literal, v: xla::Literal) {
         self.k.push(k);
         self.v.push(v);
         self.hk.push(None);
@@ -258,7 +298,11 @@ impl LaneGroupCaches {
     }
 
     /// Append one layer's caches from host tensors (mirror starts valid).
-    fn push_host(&mut self, k: HostTensor, v: HostTensor) -> Result<()> {
+    pub(crate) fn push_host(
+        &mut self,
+        k: HostTensor,
+        v: HostTensor,
+    ) -> Result<()> {
         self.k.push(k.to_literal()?);
         self.v.push(v.to_literal()?);
         self.hk.push(Some(k));
@@ -268,14 +312,14 @@ impl LaneGroupCaches {
 
     /// Host mirror of layer `layer`'s K cache, pulling from the literal
     /// only when stale.
-    fn host_k(&mut self, layer: usize) -> Result<&mut HostTensor> {
+    pub(crate) fn host_k(&mut self, layer: usize) -> Result<&mut HostTensor> {
         if self.hk[layer].is_none() {
             self.hk[layer] = Some(HostTensor::from_literal(&self.k[layer])?);
         }
         Ok(self.hk[layer].as_mut().unwrap())
     }
 
-    fn host_v(&mut self, layer: usize) -> Result<&mut HostTensor> {
+    pub(crate) fn host_v(&mut self, layer: usize) -> Result<&mut HostTensor> {
         if self.hv[layer].is_none() {
             self.hv[layer] = Some(HostTensor::from_literal(&self.v[layer])?);
         }
@@ -283,7 +327,7 @@ impl LaneGroupCaches {
     }
 
     /// Rebuild layer `layer`'s literals from its (valid) host mirrors.
-    fn push_layer(&mut self, layer: usize) -> Result<()> {
+    pub(crate) fn push_layer(&mut self, layer: usize) -> Result<()> {
         if let Some(h) = &self.hk[layer] {
             self.k[layer] = h.to_literal()?;
         }
@@ -294,9 +338,24 @@ impl LaneGroupCaches {
     }
 
     /// Decode wrote layer `layer`'s caches: the host mirror is stale.
-    fn invalidate(&mut self, layer: usize) {
+    pub(crate) fn invalidate(&mut self, layer: usize) {
         self.hk[layer] = None;
         self.hv[layer] = None;
+    }
+
+    /// Move layer `layer`'s (validated) host mirrors out, leaving the
+    /// mirror stale — for cache migration, where this container is about
+    /// to be dropped anyway; avoids cloning the whole KV cache.
+    pub(crate) fn take_host(
+        &mut self,
+        layer: usize,
+    ) -> Result<(HostTensor, HostTensor)> {
+        self.host_k(layer)?;
+        self.host_v(layer)?;
+        Ok((
+            self.hk[layer].take().unwrap(),
+            self.hv[layer].take().unwrap(),
+        ))
     }
 }
 
@@ -401,16 +460,13 @@ impl EpEngine {
         alltoall: AllToAllKind,
         batch: usize,
     ) -> Result<EpEngine> {
-        let arts = manifest.model(model)?;
-        let cfg = arts.config.clone();
+        let model_arts = manifest.model(model)?;
+        let cfg = model_arts.config.clone();
         anyhow::ensure!(cfg.is_moe(), "EP engine needs an MoE model");
-        let rt = Runtime::cpu()?;
 
-        let ck = Checkpoint::load(&arts.checkpoint_dir)?;
-        let mut params = HashMap::new();
+        let ck = Checkpoint::load(&model_arts.checkpoint_dir)?;
         let mut params_host = HashMap::new();
         for (n, t) in ck.names.iter().zip(&ck.tensors) {
-            params.insert(n.clone(), t.to_literal()?);
             params_host.insert(n.clone(), t.clone());
         }
 
@@ -484,18 +540,28 @@ impl EpEngine {
             prefill_sizes.push(batch);
         }
 
+        // One thread-shareable artifact set feeds this thread's backbone
+        // and every leader shard's.
+        let arts = SharedArtifacts::new(manifest.clone(), params_host);
+        let metrics = Arc::new(Metrics::new());
+        let bb = Backbone::new(
+            arts.clone(),
+            cfg.clone(),
+            placement.clone(),
+            alltoall,
+            workers,
+            metrics.clone(),
+        )?;
+
         Ok(EpEngine {
-            rt,
+            bb,
+            arts,
             cfg,
-            params,
-            params_host,
             placement,
             fabric,
-            metrics: std::sync::Arc::new(Metrics::new()),
+            metrics,
             load_stats,
             stats_idx,
-            manifest_keys: ManifestKeys { manifest: manifest.clone() },
-            progs: HashMap::new(),
             alltoall,
             caches: Vec::new(),
             batch,
@@ -503,12 +569,17 @@ impl EpEngine {
                 .is_some_and(|v| v != "0"),
             pipeline: !std::env::var_os("DSMOE_NO_PIPELINE")
                 .is_some_and(|v| v != "0"),
-            pipe_depth: env_usize("DSMOE_PIPE_DEPTH", 2),
+            pipe_depth: env_pos_usize("DSMOE_PIPE_DEPTH", 2),
             depth_ok,
             active_depth: 1,
             interleave: !std::env::var_os("DSMOE_NO_INTERLEAVE")
                 .is_some_and(|v| v != "0"),
-            regroup_skew: env_usize("DSMOE_REGROUP_SKEW", 2).max(1),
+            regroup_skew: env_pos_usize("DSMOE_REGROUP_SKEW", 2),
+            leader_threads: env_pos_usize("DSMOE_LEADER_THREADS", 1),
+            shards: None,
+            shard_caches: false,
+            slow_shard: None,
+            shard_completions: Vec::new(),
             scratch: (0..=batch).map(|_| MoeScratch::default()).collect(),
             exchange_seq: 0,
             open_tags: Vec::new(),
@@ -572,19 +643,104 @@ impl EpEngine {
         self.regroup_skew = skew.max(1);
     }
 
+    /// Request leader shard threads (defaults to `DSMOE_LEADER_THREADS`,
+    /// default 1 — the single-threaded leader).  Any value >= 2 runs each
+    /// pipeline microbatch group's dense backbone on its own thread-bound
+    /// runtime ([`crate::server::shard`]); takes effect at the next
+    /// forward, with KV caches migrating automatically between the leader
+    /// and the shards.
+    pub fn set_leader_threads(&mut self, n: usize) {
+        self.leader_threads = n.max(1);
+    }
+
+    pub fn leader_threads(&self) -> usize {
+        self.leader_threads
+    }
+
+    /// Leader shard threads the next forward will actually run with: one
+    /// per microbatch group when sharding is enabled and the resolved
+    /// ring depth has at least two groups, else 1 (serial / no-pipeline /
+    /// depth-1 paths have a single microbatch stream — nothing to split).
+    pub fn leader_shards(&self) -> usize {
+        self.resolved_leader_threads()
+    }
+
+    fn resolved_leader_threads(&self) -> usize {
+        let groups = self.resolved_depth();
+        if self.leader_threads >= 2 && groups >= 2 {
+            groups
+        } else {
+            1
+        }
+    }
+
+    /// Shard completion order of the most recent sharded forward (test
+    /// observability for the slow-shard ordering invariant).
+    pub fn last_shard_completions(&self) -> &[usize] {
+        &self.shard_completions
+    }
+
+    /// Test hook: make shard `shard` sleep `delay` before every layer of
+    /// a sharded forward, forcing shard completion out of submission
+    /// order.  Applied when the pool (re)spawns — set it before the first
+    /// sharded forward.
+    #[doc(hidden)]
+    pub fn inject_slow_shard(
+        &mut self,
+        shard: usize,
+        delay: std::time::Duration,
+    ) {
+        self.slow_shard = Some((shard, delay));
+    }
+
     /// Live lanes per decode lane group (scheduler-backed mode; empty
-    /// groups report 0 in legacy mode).
+    /// groups report 0 in legacy mode), wherever the caches live.
     pub fn group_live_counts(&self) -> Vec<usize> {
-        self.caches
+        let groups = self.cache_groups();
+        self.live_counts_for(&groups)
+    }
+
+    fn live_counts_for(&self, groups: &[(usize, usize)]) -> Vec<usize> {
+        groups
             .iter()
-            .map(|c| {
-                (c.lane0..c.lane0 + c.lanes)
+            .map(|&(l0, ln)| {
+                (l0..l0 + ln)
                     .filter(|&l| {
                         self.lane_live.get(l).copied().unwrap_or(false)
                     })
                     .count()
             })
             .collect()
+    }
+
+    /// Current decode cache partition, wherever the caches live (the
+    /// engine's own groups, or the shard pool's).
+    fn cache_groups(&self) -> Vec<(usize, usize)> {
+        if self.shard_caches {
+            self.shards
+                .as_ref()
+                .map(|p| p.groups.clone())
+                .unwrap_or_default()
+        } else {
+            self.caches.iter().map(|c| (c.lane0, c.lanes)).collect()
+        }
+    }
+
+    /// The metrics registry is swappable (benches install a fresh one
+    /// between warmup and measurement, sometimes by assigning the public
+    /// field directly); propagate the current registry to the backbone
+    /// and any live shards so per-phase timers keep landing where the
+    /// caller reads them.
+    fn sync_metrics(&mut self) {
+        if !Arc::ptr_eq(&self.bb.metrics, &self.metrics) {
+            self.bb.metrics = self.metrics.clone();
+            if let Some(pool) = &self.shards {
+                for g in 0..pool.handles.len() {
+                    let _ = pool
+                        .send(g, ShardCmd::SetMetrics(self.metrics.clone()));
+                }
+            }
+        }
     }
 
     /// True if this artifact set carries every program shape the d-group
@@ -620,20 +776,6 @@ impl EpEngine {
         1
     }
 
-    fn prog(&mut self, key: &str) -> Result<Rc<Program>> {
-        if let Some(p) = self.progs.get(key) {
-            return Ok(p.clone());
-        }
-        let spec = self.manifest_keys.manifest.shared_program(key)?;
-        let p = self.rt.load(spec)?;
-        self.progs.insert(key.to_string(), p.clone());
-        Ok(p)
-    }
-
-    fn p(&self, name: &str) -> &xla::Literal {
-        &self.params[name]
-    }
-
     /// Contiguous `(lane0, lanes)` microbatch groups for the next forward:
     /// the resolved ring depth's partition (sizes as even as possible),
     /// one full-batch group when the pipeline is off.
@@ -666,6 +808,7 @@ impl EpEngine {
             self.pending_admission.is_none(),
             "forward_prefill with a staged admission (finish_prefill first)"
         );
+        self.sync_metrics();
         let t_fwd = std::time::Instant::now();
         // Exchanges of an aborted earlier forward are no longer open: any
         // reply of theirs that straggles in must fail loudly, not sit in
@@ -680,10 +823,20 @@ impl EpEngine {
         let groups = self.lane_groups();
         self.active_depth = groups.len();
         self.metrics.gauge("pipe_depth", groups.len() as f64);
-        let out = if groups.len() > 1 {
-            self.prefill_pipelined(tokens, lens, &groups)?
+        let threads = self.resolved_leader_threads();
+        self.metrics.gauge("leader_threads", threads as f64);
+        let out = if threads > 1 {
+            self.prefill_sharded(tokens, lens, &groups)?
         } else {
-            self.prefill_single(tokens, lens)?
+            // Lanes are rebuilt on the leader: whatever a pool still
+            // holds is stale, and its threads/runtimes/weight copies are
+            // dead weight on the single-threaded path — release it.
+            self.drop_shards();
+            if groups.len() > 1 {
+                self.prefill_pipelined(tokens, lens, &groups)?
+            } else {
+                self.prefill_single(tokens, lens)?
+            }
         };
         self.metrics.observe("forward_prefill", t_fwd.elapsed());
         Ok(out)
@@ -696,30 +849,18 @@ impl EpEngine {
         tokens: &[i32],
         lens: &[usize],
     ) -> Result<Vec<Vec<f32>>> {
-        let (b, smax) = (self.batch, self.cfg.max_seq);
-        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
-
-        let embed = self.prog(&Manifest::key_embed(v, m, b, smax))?;
-        let tok = HostTensor::i32(&[b, smax], tokens.to_vec()).to_literal()?;
-        let pos0 = HostTensor::i32(&[b], vec![0; b]).to_literal()?;
-        let mut h = embed
-            .run_literal_refs(&[
-                self.p("tok_emb"),
-                self.p("pos_emb"),
-                &tok,
-                &pos0,
-            ])?
-            .remove(0);
+        let b = self.batch;
+        let mut h = self.bb.embed_prefill(tokens, b)?;
 
         let mut group = LaneGroupCaches::new(0, b, self.cfg.n_layers);
         for layer in 0..self.cfg.n_layers {
-            let (h2, k, vv) = self.attn_prefill(layer, h, b)?;
+            let (h2, k, vv) = self.bb.attn_prefill(layer, h, b)?;
             group.push_kv(k, vv);
             h = self.ffn_layer(layer, h2, None)?;
         }
         self.caches = vec![group];
 
-        self.lm_head_last(&h, lens)
+        self.bb.lm_head_last(&h, lens)
     }
 
     /// Microbatch-interleaved prefill: while one microbatch's expert blocks
@@ -733,7 +874,6 @@ impl EpEngine {
         groups: &[(usize, usize)],
     ) -> Result<Vec<Vec<f32>>> {
         let smax = self.cfg.max_seq;
-        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
         let n_layers = self.cfg.n_layers;
 
         let mut cache_groups: Vec<LaneGroupCaches> = groups
@@ -743,23 +883,10 @@ impl EpEngine {
         let mut hs: Vec<Option<xla::Literal>> =
             Vec::with_capacity(groups.len());
         for &(lane0, lanes) in groups {
-            let embed = self.prog(&Manifest::key_embed(v, m, lanes, smax))?;
-            let tok = HostTensor::i32(
-                &[lanes, smax],
-                tokens[lane0 * smax..(lane0 + lanes) * smax].to_vec(),
-            )
-            .to_literal()?;
-            let pos0 = HostTensor::i32(&[lanes], vec![0; lanes]).to_literal()?;
-            hs.push(Some(
-                embed
-                    .run_literal_refs(&[
-                        self.p("tok_emb"),
-                        self.p("pos_emb"),
-                        &tok,
-                        &pos0,
-                    ])?
-                    .remove(0),
-            ));
+            hs.push(Some(self.bb.embed_prefill(
+                &tokens[lane0 * smax..(lane0 + lanes) * smax],
+                lanes,
+            )?));
         }
 
         self.run_pipeline(&mut hs, &mut PipeCtx::Prefill(&mut cache_groups))?;
@@ -768,9 +895,41 @@ impl EpEngine {
         let mut rows = Vec::with_capacity(self.batch);
         for (g, &(lane0, lanes)) in groups.iter().enumerate() {
             let h = hs[g].take().unwrap();
-            rows.extend(self.lm_head_last(&h, &lens[lane0..lane0 + lanes])?);
+            rows.extend(
+                self.bb.lm_head_last(&h, &lens[lane0..lane0 + lanes])?,
+            );
         }
         Ok(rows)
+    }
+
+    /// Legacy full prefill with the dense backbone sharded: one leader
+    /// shard per microbatch group runs embed → attention → gate → combine
+    /// for its lanes concurrently with the others, while this thread
+    /// orchestrates the tagged expert exchanges on the fabric
+    /// (oldest-exchange-first).  The shards end up owning the freshly
+    /// built KV cache groups.
+    fn prefill_sharded(
+        &mut self,
+        tokens: &[i32],
+        lens: &[usize],
+        groups: &[(usize, usize)],
+    ) -> Result<Vec<Vec<f32>>> {
+        let smax = self.cfg.max_seq;
+        // Lanes are rebuilt in the shards; local groups are stale.
+        self.caches = Vec::new();
+        self.shard_caches = false;
+        self.ensure_pool(groups)?;
+        let cmds: Vec<ShardCmd> = groups
+            .iter()
+            .map(|&(lane0, lanes)| ShardCmd::Prefill {
+                tokens: tokens[lane0 * smax..(lane0 + lanes) * smax]
+                    .to_vec(),
+                lens: lens[lane0..lane0 + lanes].to_vec(),
+            })
+            .collect();
+        let rows = self.drive_shards(cmds, false)?;
+        self.shard_caches = true;
+        Ok(rows.into_iter().flatten().collect())
     }
 
     /// The microbatch-interleave scheduler shared by prefill and decode: a
@@ -856,7 +1015,7 @@ impl EpEngine {
         cache: &mut LaneGroupCaches,
         slot: usize,
     ) -> Result<InflightMoe> {
-        let (h2, k, vv) = self.attn_prefill(layer, h, cache.lanes)?;
+        let (h2, k, vv) = self.bb.attn_prefill(layer, h, cache.lanes)?;
         cache.push_kv(k, vv);
         // Legacy full prefill drives every lane: no mask.
         self.moe_dispatch_in(
@@ -877,21 +1036,35 @@ impl EpEngine {
     ) -> Result<Vec<Vec<f32>>> {
         let b = self.batch;
         anyhow::ensure!(tokens.len() == b && pos.len() == b);
-        anyhow::ensure!(!self.caches.is_empty(), "decode before prefill");
+        anyhow::ensure!(
+            !self.caches.is_empty() || self.shard_caches,
+            "decode before prefill"
+        );
+        self.sync_metrics();
         let t_fwd = std::time::Instant::now();
         // See forward_prefill: aborted exchanges are no longer open.
         self.open_tags.clear();
         let groups = self.lane_groups();
         self.active_depth = groups.len();
         self.metrics.gauge("pipe_depth", groups.len() as f64);
-        // A toggle between forwards (pipeline on/off, depth change)
-        // changes the lane partition; reshape the cache groups before
-        // decoding.
-        self.repartition_caches(&groups)?;
-        let out = if groups.len() > 1 {
-            self.decode_pipelined(tokens, pos, &groups)?
+        let threads = self.resolved_leader_threads();
+        self.metrics.gauge("leader_threads", threads as f64);
+        // A toggle between forwards (pipeline on/off, depth change,
+        // leader threads on/off) changes the lane partition or the cache
+        // home; place the cache groups before decoding.
+        let out = if threads > 1 {
+            self.place_caches_in_shards(&groups)?;
+            self.decode_sharded(tokens, pos, &groups)?
         } else {
-            self.decode_single(tokens, pos)?
+            self.place_caches_local(&groups)?;
+            // No pool may outlive the switch to single-threaded decode
+            // (threads, runtimes, and dense-weight copies are per shard).
+            self.drop_shards();
+            if groups.len() > 1 {
+                self.decode_pipelined(tokens, pos, &groups)?
+            } else {
+                self.decode_single(tokens, pos)?
+            }
         };
         self.metrics.observe("forward_decode", t_fwd.elapsed());
         Ok(out)
@@ -903,19 +1076,10 @@ impl EpEngine {
         pos: &[i32],
     ) -> Result<Vec<Vec<f32>>> {
         let b = self.batch;
-        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
+        let m = self.cfg.d_model;
 
-        let embed = self.prog(&Manifest::key_embed(v, m, b, 1))?;
-        let tok = HostTensor::i32(&[b, 1], tokens.to_vec()).to_literal()?;
         let pos_lit = HostTensor::i32(&[b], pos.to_vec()).to_literal()?;
-        let mut h = embed
-            .run_literal_refs(&[
-                self.p("tok_emb"),
-                self.p("pos_emb"),
-                &tok,
-                &pos_lit,
-            ])?
-            .remove(0);
+        let mut h = self.bb.embed_decode(tokens, &pos_lit, b)?;
 
         let mask = self.decode_mask(0, b);
         for layer in 0..self.cfg.n_layers {
@@ -925,7 +1089,7 @@ impl EpEngine {
         // [B, 1, M]: feed the LM head straight from the literal (a reshape,
         // not a host round trip).
         let flat = h.reshape(&[b as i64, m as i64])?;
-        self.lm_head_rows(&flat, b)
+        self.bb.lm_head_rows(&flat, b)
     }
 
     /// Microbatch-interleaved decode step (same schedule as
@@ -937,32 +1101,21 @@ impl EpEngine {
         pos: &[i32],
         groups: &[(usize, usize)],
     ) -> Result<Vec<Vec<f32>>> {
-        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
+        let m = self.cfg.d_model;
 
         let mut hs: Vec<Option<xla::Literal>> =
             Vec::with_capacity(groups.len());
         let mut pos_lits: Vec<xla::Literal> =
             Vec::with_capacity(groups.len());
         for &(lane0, lanes) in groups {
-            let embed = self.prog(&Manifest::key_embed(v, m, lanes, 1))?;
-            let tok = HostTensor::i32(
-                &[lanes, 1],
-                tokens[lane0..lane0 + lanes].to_vec(),
-            )
-            .to_literal()?;
             let pos_lit =
                 HostTensor::i32(&[lanes], pos[lane0..lane0 + lanes].to_vec())
                     .to_literal()?;
-            hs.push(Some(
-                embed
-                    .run_literal_refs(&[
-                        self.p("tok_emb"),
-                        self.p("pos_emb"),
-                        &tok,
-                        &pos_lit,
-                    ])?
-                    .remove(0),
-            ));
+            hs.push(Some(self.bb.embed_decode(
+                &tokens[lane0..lane0 + lanes],
+                &pos_lit,
+                lanes,
+            )?));
             pos_lits.push(pos_lit);
         }
 
@@ -972,9 +1125,330 @@ impl EpEngine {
         for (g, &(_, lanes)) in groups.iter().enumerate() {
             let h = hs[g].take().unwrap();
             let flat = h.reshape(&[lanes as i64, m as i64])?;
-            rows.extend(self.lm_head_rows(&flat, lanes)?);
+            rows.extend(self.bb.lm_head_rows(&flat, lanes)?);
         }
         Ok(rows)
+    }
+
+    /// One decode step with the dense backbone sharded: each microbatch
+    /// group's embed → attention → gate → combine runs on its own shard
+    /// thread against its own KV caches, while this thread orchestrates
+    /// the expert exchanges (and advances any staged admission behind
+    /// them).
+    fn decode_sharded(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        groups: &[(usize, usize)],
+    ) -> Result<Vec<Vec<f32>>> {
+        let cmds: Vec<ShardCmd> = groups
+            .iter()
+            .map(|&(lane0, lanes)| ShardCmd::Decode {
+                tokens: tokens[lane0..lane0 + lanes].to_vec(),
+                pos: pos[lane0..lane0 + lanes].to_vec(),
+                mask: self.decode_mask(lane0, lanes),
+            })
+            .collect();
+        let rows = self.drive_shards(cmds, true)?;
+        Ok(rows.into_iter().flatten().collect())
+    }
+
+    /// Drive one sharded forward: send `cmds` (one per shard), then
+    /// service the shards' expert exchanges against the fabric until
+    /// every shard reports its rows.  Exchanges are tagged in dispatch
+    /// order and **completed oldest-first** — the ring's dispatch/finish
+    /// discipline — with the tag-keyed stash absorbing replies that
+    /// arrive while an older exchange is still open.  During a scheduler
+    /// decode, a staged admission advances one layer behind each freshly
+    /// dispatched exchange (prefill-behind-decode, as on the
+    /// single-threaded ring).
+    fn drive_shards(
+        &mut self,
+        cmds: Vec<ShardCmd>,
+        decode: bool,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let pool = self.shards.take().context("leader-shard pool missing")?;
+        match self.drive_shards_inner(&pool, cmds, decode) {
+            Ok(rows) => {
+                self.shards = Some(pool);
+                Ok(rows)
+            }
+            Err(e) => {
+                // A failed sharded forward leaves shards mid-layer:
+                // dropping the pool disconnects their channels (a shard
+                // blocked on expert replies errors out of its forward)
+                // and joins the threads.  The cache state goes with them.
+                drop(pool);
+                self.shard_caches = false;
+                Err(e)
+            }
+        }
+    }
+
+    fn drive_shards_inner(
+        &mut self,
+        pool: &ShardPool,
+        cmds: Vec<ShardCmd>,
+        decode: bool,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let n = pool.handles.len();
+        anyhow::ensure!(cmds.len() == n, "one command per shard");
+        for (g, cmd) in cmds.into_iter().enumerate() {
+            pool.send(g, cmd)?;
+        }
+        /// An exchange on the fabric whose replies a shard is waiting on.
+        struct OpenExchange {
+            shard: usize,
+            seq: u64,
+            layer: usize,
+            tag: u64,
+            outstanding: usize,
+            results: Vec<FfnBatchResult>,
+        }
+        let mut pending: VecDeque<OpenExchange> = VecDeque::new();
+        let mut rows: Vec<Option<Vec<Vec<f32>>>> =
+            (0..n).map(|_| None).collect();
+        self.shard_completions.clear();
+        let mut done = 0usize;
+        while done < n {
+            let mut progress = false;
+            // Drain shard events: dispatch prepared exchanges onto the
+            // fabric (tagging them here, in arrival order) and record
+            // finished shards.
+            loop {
+                match pool.events.try_recv() {
+                    Ok(ShardEvent::MoeDispatch {
+                        shard,
+                        seq,
+                        layer,
+                        batches,
+                        assignments,
+                    }) => {
+                        progress = true;
+                        if let Some(i) = self.stats_idx[layer] {
+                            self.load_stats[i]
+                                .record_assignments(&assignments);
+                        }
+                        self.exchange_seq += 1;
+                        let tag = self.exchange_seq;
+                        let mut outstanding = 0usize;
+                        for b in batches {
+                            self.fabric.dispatch_ffn_batch(
+                                b.worker,
+                                ExpertFfnBatch {
+                                    layer,
+                                    experts: b.experts,
+                                    data: b.data,
+                                    tag,
+                                },
+                            )?;
+                            outstanding += 1;
+                        }
+                        self.open_tags.push(tag);
+                        pending.push_back(OpenExchange {
+                            shard,
+                            seq,
+                            layer,
+                            tag,
+                            outstanding,
+                            results: Vec::new(),
+                        });
+                        if decode {
+                            // Prefill-behind-decode: a staged admission
+                            // advances one layer behind this exchange.
+                            self.advance_admission(1)?;
+                        }
+                    }
+                    Ok(ShardEvent::PrefillDone { shard, rows: r })
+                    | Ok(ShardEvent::DecodeDone { shard, rows: r }) => {
+                        progress = true;
+                        anyhow::ensure!(
+                            rows[shard].is_none(),
+                            "shard {shard} reported twice"
+                        );
+                        rows[shard] = Some(r);
+                        self.shard_completions.push(shard);
+                        done += 1;
+                    }
+                    Ok(ShardEvent::Err { shard, msg }) => {
+                        anyhow::bail!("leader shard {shard}: {msg}")
+                    }
+                    Ok(_) => anyhow::bail!(
+                        "unexpected shard event during a sharded forward"
+                    ),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        anyhow::bail!("leader shards disconnected")
+                    }
+                }
+            }
+            // Complete the OLDEST open exchange first (ring discipline);
+            // replies of younger open exchanges stay in the fabric's
+            // tag-keyed stash until their turn.
+            if let Some(front) = pending.front_mut() {
+                if front.outstanding > 0 {
+                    let got = self.fabric.try_collect_ffn_batches(
+                        front.layer,
+                        front.tag,
+                        &self.open_tags,
+                    )?;
+                    front.outstanding -= got.len();
+                    front.results.extend(got);
+                }
+                if front.outstanding == 0 {
+                    let ex = pending.pop_front().unwrap();
+                    self.open_tags.retain(|&t| t != ex.tag);
+                    progress = true;
+                    pool.send(
+                        ex.shard,
+                        ShardCmd::MoeReplies {
+                            seq: ex.seq,
+                            results: ex.results,
+                        },
+                    )?;
+                }
+            }
+            if !progress {
+                // Nothing arrived and the front exchange is still on the
+                // fabric: yield briefly rather than spinning.
+                std::thread::sleep(std::time::Duration::from_micros(20));
+            }
+        }
+        anyhow::ensure!(
+            pending.is_empty(),
+            "sharded forward finished with open exchanges"
+        );
+        if self.shard_completions.windows(2).any(|w| w[0] > w[1]) {
+            // Shards finished out of submission order (a slow shard was
+            // overtaken) — the oldest-first collection above is what kept
+            // the exchange discipline intact.
+            self.metrics.inc("shard_completions_ooo", 1);
+        }
+        Ok(rows
+            .into_iter()
+            .map(|r| r.expect("every shard reported"))
+            .collect())
+    }
+
+    /// Spawn (or reuse) the leader-shard pool for lane partition
+    /// `groups`.
+    fn ensure_pool(&mut self, groups: &[(usize, usize)]) -> Result<()> {
+        if let Some(pool) = &self.shards {
+            if pool.groups == groups {
+                return Ok(());
+            }
+        }
+        self.drop_shards();
+        self.shards = Some(ShardPool::spawn(PoolSpec {
+            groups: groups.to_vec(),
+            arts: self.arts.clone(),
+            cfg: self.cfg.clone(),
+            placement: self.placement.clone(),
+            alltoall: self.alltoall,
+            workers: self.fabric.n_workers(),
+            metrics: self.metrics.clone(),
+            slow_shard: self.slow_shard,
+        })?);
+        self.shard_caches = false;
+        Ok(())
+    }
+
+    /// Tear down the pool (joining its threads) without preserving its
+    /// caches — callers migrate first if they need them.
+    fn drop_shards(&mut self) {
+        if let Some(mut p) = self.shards.take() {
+            p.shutdown();
+        }
+        self.shard_caches = false;
+    }
+
+    /// Bring the decode cache groups onto the leader at partition
+    /// `groups`: migrate them out of the shard pool first if that is
+    /// where they live (host-side `TakeCaches` per shard), then
+    /// repartition if the lane partition changed.
+    fn place_caches_local(&mut self, groups: &[(usize, usize)]) -> Result<()> {
+        if self.shard_caches {
+            let pool =
+                self.shards.take().context("shard caches without a pool")?;
+            let r = self.take_caches_from(&pool);
+            self.shards = Some(pool);
+            self.caches = r?;
+            self.shard_caches = false;
+            // The pool's threads, runtimes, and dense-weight copies are
+            // dead weight while the leader runs single-threaded — release
+            // them (a later shard-mode forward respawns; when the caller
+            // is place_caches_in_shards this is a partition change, which
+            // needed a fresh pool anyway).
+            self.drop_shards();
+        }
+        self.repartition_caches(groups)
+    }
+
+    fn take_caches_from(
+        &mut self,
+        pool: &ShardPool,
+    ) -> Result<Vec<LaneGroupCaches>> {
+        let n_layers = self.cfg.n_layers;
+        let mut out = Vec::with_capacity(pool.groups.len());
+        for (g, &(lane0, lanes)) in pool.groups.iter().enumerate() {
+            pool.send(g, ShardCmd::TakeCaches)?;
+            let layers = pool.expect_caches(g)?;
+            let mut c = LaneGroupCaches::new(lane0, lanes, n_layers);
+            for (k, v) in layers {
+                c.push_host(k, v)?;
+            }
+            out.push(c);
+        }
+        Ok(out)
+    }
+
+    /// Hand the decode cache groups to the shard pool at partition
+    /// `groups`: a no-op when the pool already owns caches at this
+    /// partition; otherwise the caches are brought local (merging any
+    /// old home), repartitioned, and shipped per group through the host
+    /// mirrors.
+    fn place_caches_in_shards(
+        &mut self,
+        groups: &[(usize, usize)],
+    ) -> Result<()> {
+        if self.shard_caches {
+            if let Some(pool) = &self.shards {
+                if pool.groups == groups {
+                    return Ok(());
+                }
+            }
+        }
+        self.place_caches_local(groups)?;
+        anyhow::ensure!(!self.caches.is_empty(), "decode before prefill");
+        self.ensure_pool(groups)?;
+        let pool = self.shards.take().context("leader-shard pool missing")?;
+        let r = self.install_caches_into(&pool);
+        self.shards = Some(pool);
+        r?;
+        self.caches.clear();
+        self.shard_caches = true;
+        Ok(())
+    }
+
+    fn install_caches_into(&mut self, pool: &ShardPool) -> Result<()> {
+        let n_layers = self.cfg.n_layers;
+        anyhow::ensure!(
+            self.caches.len() == pool.groups.len(),
+            "cache groups do not match the shard partition"
+        );
+        for (g, cache) in self.caches.iter_mut().enumerate() {
+            let mut layers = Vec::with_capacity(n_layers);
+            for layer in 0..n_layers {
+                // Move the mirrors out instead of cloning: the local
+                // groups are cleared right after the install (an error
+                // path just leaves them with stale mirrors, which repull
+                // from the literals on next use).
+                layers.push(cache.take_host(layer)?);
+            }
+            pool.send(g, ShardCmd::InstallCaches { layers })?;
+            pool.expect_ack(g)?;
+        }
+        Ok(())
     }
 
     /// Attention + split-phase dispatch for one decode microbatch layer
@@ -1072,13 +1546,14 @@ impl EpEngine {
     /// external→physical lane permutation.  Never runs in legacy mode or
     /// while an admission is staged (its target lanes are physical).
     fn maybe_regroup(&mut self) -> Result<()> {
+        let groups = self.cache_groups();
         if self.lane_live.is_empty()
             || self.pending_admission.is_some()
-            || self.caches.len() < 2
+            || groups.len() < 2
         {
             return Ok(());
         }
-        let counts = self.group_live_counts();
+        let counts = self.live_counts_for(&groups);
         let (min, max) = (
             counts.iter().copied().min().unwrap_or(0),
             counts.iter().copied().max().unwrap_or(0),
@@ -1086,8 +1561,6 @@ impl EpEngine {
         if max - min < self.regroup_skew {
             return Ok(());
         }
-        let groups: Vec<(usize, usize)> =
-            self.caches.iter().map(|c| (c.lane0, c.lanes)).collect();
         let n_g = groups.len();
         let mut live_in: Vec<Vec<usize>> = groups
             .iter()
@@ -1131,6 +1604,35 @@ impl EpEngine {
         if moves.is_empty() {
             return Ok(());
         }
+        if self.shard_caches {
+            self.regroup_moves_shards(&moves, &groups)?;
+        } else {
+            self.regroup_moves_local(&moves, &groups)?;
+        }
+        // Swap the external bindings of each (src, dst) pair so the
+        // scheduler's lane ids keep resolving to the moved data.
+        for &(src, dst) in &moves {
+            let (src_ext, dst_ext) = (self.lane_ext[src], self.lane_ext[dst]);
+            self.lane_ext.swap(src, dst);
+            self.lane_phys[src_ext] = dst;
+            self.lane_phys[dst_ext] = src;
+            self.lane_live[dst] = true;
+            self.lane_live[src] = false;
+        }
+        self.metrics.inc("lane_regroups", 1);
+        self.metrics.inc("lane_moves", moves.len() as u64);
+        Ok(())
+    }
+
+    /// Regroup KV moves with engine-local cache groups: through the host
+    /// mirrors, re-uploading only the destination groups (sources are
+    /// unchanged — their moved lanes are dead now and masked out of
+    /// everything).
+    fn regroup_moves_local(
+        &mut self,
+        moves: &[(usize, usize)],
+        groups: &[(usize, usize)],
+    ) -> Result<()> {
         let (hh, smax, hd) =
             (self.cfg.n_heads, self.cfg.max_seq, self.cfg.head_dim());
         let lane_elems = hh * smax * hd;
@@ -1141,7 +1643,7 @@ impl EpEngine {
                 .expect("lane outside every group")
         };
         for layer in 0..self.cfg.n_layers {
-            for &(src, dst) in &moves {
+            for &(src, dst) in moves {
                 let (sg, dg) = (group_of(src), group_of(dst));
                 let s_off = src - groups[sg].0;
                 let d_off = dst - groups[dg].0;
@@ -1159,8 +1661,6 @@ impl EpEngine {
                 copy_lane(dv, d_off, &tmp_v, 0, lane_elems);
             }
         }
-        // Re-upload only the destination groups (sources are unchanged —
-        // their moved lanes are dead now and masked out of everything).
         let mut touched: Vec<usize> =
             moves.iter().map(|&(_, dst)| group_of(dst)).collect();
         touched.sort_unstable();
@@ -1170,18 +1670,76 @@ impl EpEngine {
                 self.caches[g].push_layer(layer)?;
             }
         }
-        // Swap the external bindings of each (src, dst) pair so the
-        // scheduler's lane ids keep resolving to the moved data.
-        for &(src, dst) in &moves {
-            let (src_ext, dst_ext) = (self.lane_ext[src], self.lane_ext[dst]);
-            self.lane_ext.swap(src, dst);
-            self.lane_phys[src_ext] = dst;
-            self.lane_phys[dst_ext] = src;
-            self.lane_live[dst] = true;
-            self.lane_live[src] = false;
+        Ok(())
+    }
+
+    /// Regroup KV moves when the caches live in the shard pool: read the
+    /// moved lanes out of their source shards, write them into the
+    /// destination shards (host mirrors + re-upload of touched layers
+    /// inside each shard) — the same data flow as the local path,
+    /// expressed over the `ReadLanes`/`WriteLanes` protocol.
+    fn regroup_moves_shards(
+        &mut self,
+        moves: &[(usize, usize)],
+        groups: &[(usize, usize)],
+    ) -> Result<()> {
+        let pool =
+            self.shards.take().context("shard caches without a pool")?;
+        let r = Self::regroup_moves_via(&pool, moves, groups, self.cfg.n_layers);
+        self.shards = Some(pool);
+        r
+    }
+
+    fn regroup_moves_via(
+        pool: &ShardPool,
+        moves: &[(usize, usize)],
+        groups: &[(usize, usize)],
+        n_layers: usize,
+    ) -> Result<()> {
+        let group_of = |lane: usize| {
+            groups
+                .iter()
+                .position(|&(l0, ln)| lane >= l0 && lane < l0 + ln)
+                .expect("lane outside every group")
+        };
+        // Pull every moved source lane (all layers) out of its shard.
+        let mut read_req: Vec<Vec<usize>> = vec![Vec::new(); groups.len()];
+        for &(src, _) in moves {
+            let sg = group_of(src);
+            read_req[sg].push(src - groups[sg].0);
         }
-        self.metrics.inc("lane_regroups", 1);
-        self.metrics.inc("lane_moves", moves.len() as u64);
+        let mut src_data: HashMap<(usize, usize), (Vec<f32>, Vec<f32>)> =
+            HashMap::new();
+        for (sg, lanes) in read_req.iter().enumerate() {
+            if lanes.is_empty() {
+                continue;
+            }
+            pool.send(sg, ShardCmd::ReadLanes { lanes: lanes.clone() })?;
+            for w in pool.expect_lanes(sg)? {
+                src_data
+                    .insert((groups[sg].0 + w.lane, w.layer), (w.k, w.v));
+            }
+        }
+        // Write them into the destination shards.
+        let mut writes: Vec<Vec<LaneWrite>> = vec![Vec::new(); groups.len()];
+        for &(src, dst) in moves {
+            let dg = group_of(dst);
+            let d_off = dst - groups[dg].0;
+            for layer in 0..n_layers {
+                let (k, v) = src_data
+                    .get(&(src, layer))
+                    .context("regroup read missing a lane")?
+                    .clone();
+                writes[dg].push(LaneWrite { layer, lane: d_off, k, v });
+            }
+        }
+        for (g, w) in writes.into_iter().enumerate() {
+            if w.is_empty() {
+                continue;
+            }
+            pool.send(g, ShardCmd::WriteLanes { writes: w })?;
+            pool.expect_ack(g)?;
+        }
         Ok(())
     }
 
@@ -1200,6 +1758,10 @@ impl EpEngine {
         if !self.lane_live.is_empty() {
             return Ok(());
         }
+        // Entering scheduler mode resets every lane: whatever a shard
+        // pool still holds is stale (the first sharded decode installs
+        // these fresh groups into it).
+        self.shard_caches = false;
         self.lane_live = vec![false; self.batch];
         self.lane_phys = (0..self.batch).collect();
         self.lane_ext = (0..self.batch).collect();
@@ -1227,8 +1789,7 @@ impl EpEngine {
     /// lanes among those with a free one, so the N microbatches carry
     /// similar live load.
     fn pick_free_lanes(&self, n: usize) -> Result<Vec<usize>> {
-        let groups: Vec<(usize, usize)> =
-            self.caches.iter().map(|c| (c.lane0, c.lanes)).collect();
+        let groups = self.cache_groups();
         let mut free: Vec<Vec<usize>> = groups
             .iter()
             .map(|&(l0, ln)| {
@@ -1282,10 +1843,10 @@ impl EpEngine {
              (available: {:?})",
             self.prefill_sizes
         );
+        self.sync_metrics();
         self.ensure_lane_state()?;
         let lanes = self.pick_free_lanes(reqs.len())?;
         let smax = self.cfg.max_seq;
-        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
         // No forward is in flight when an admission is staged: exchanges
         // of an aborted earlier forward are no longer open.
         self.open_tags.clear();
@@ -1301,18 +1862,7 @@ impl EpEngine {
                 .copy_from_slice(&r.prompt);
             lens[i] = r.prompt.len();
         }
-        let embed = self.prog(&Manifest::key_embed(v, m, compiled, smax))?;
-        let tok = HostTensor::i32(&[compiled, smax], tokens).to_literal()?;
-        let pos0 = HostTensor::i32(&[compiled], vec![0; compiled])
-            .to_literal()?;
-        let h = embed
-            .run_literal_refs(&[
-                self.p("tok_emb"),
-                self.p("pos_emb"),
-                &tok,
-                &pos0,
-            ])?
-            .remove(0);
+        let h = self.bb.embed_prefill(&tokens, compiled)?;
         let live = reqs.len();
         let mask: Option<Vec<bool>> = if live == compiled {
             None
@@ -1365,7 +1915,7 @@ impl EpEngine {
     fn admission_layer(&mut self, st: &mut AdmissionState) -> Result<()> {
         let layer = st.layer;
         let h = st.h.take().expect("admission activation");
-        let (h2, k, vv) = self.attn_prefill(layer, h, st.compiled)?;
+        let (h2, k, vv) = self.bb.attn_prefill(layer, h, st.compiled)?;
         st.kv.push((k, vv));
         let out = if self.serial_moe && self.cfg.experts_at(layer) > 0 {
             self.moe_layer_serial(layer, h2, st.mask.as_deref())?
@@ -1398,7 +1948,7 @@ impl EpEngine {
             .context("no admission staged")?;
         let t0 = std::time::Instant::now();
         let h = st.h.take().expect("admission activation");
-        let mut rows = self.lm_head_last(&h, &st.lens)?;
+        let mut rows = self.bb.lm_head_last(&h, &st.lens)?;
         rows.truncate(st.live);
         self.splice_admitted(&st.kv, &st.lanes)?;
         self.metrics.observe("forward_prefill", st.elapsed + t0.elapsed());
@@ -1421,6 +1971,13 @@ impl EpEngine {
         kv: &[(xla::Literal, xla::Literal)],
         admits: &[usize],
     ) -> Result<()> {
+        if self.shard_caches {
+            let pool =
+                self.shards.take().context("shard caches without a pool")?;
+            let r = Self::splice_admitted_via(&pool, kv, admits, &self.cfg);
+            self.shards = Some(pool);
+            return r;
+        }
         let (hh, smax, hd) =
             (self.cfg.n_heads, self.cfg.max_seq, self.cfg.head_dim());
         let lane_elems = hh * smax * hd;
@@ -1456,31 +2013,50 @@ impl EpEngine {
         Ok(())
     }
 
-    fn attn_prefill(
-        &mut self,
-        layer: usize,
-        h: xla::Literal,
-        lanes: usize,
-    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
-        let (m, hh, smax) =
-            (self.cfg.d_model, self.cfg.n_heads, self.cfg.max_seq);
-        let prog = self.prog(&Manifest::key_attn_prefill(m, hh, lanes, smax))?;
-        let pre = format!("layer{layer}.");
-        let mut outs = prog.run_literal_refs(&[
-            &h,
-            self.p(&format!("{pre}ln1.g")),
-            self.p(&format!("{pre}ln1.b")),
-            self.p(&format!("{pre}attn.wq")),
-            self.p(&format!("{pre}attn.wk")),
-            self.p(&format!("{pre}attn.wv")),
-            self.p(&format!("{pre}attn.wo")),
-        ])?;
-        let vv = outs.pop().unwrap();
-        let k = outs.pop().unwrap();
-        let h2 = outs.pop().unwrap();
-        Ok((h2, k, vv))
+    /// Admission splice when the caches live in the shard pool: the same
+    /// per-lane copies, expressed as `WriteLanes` batches per destination
+    /// shard.
+    fn splice_admitted_via(
+        pool: &ShardPool,
+        kv: &[(xla::Literal, xla::Literal)],
+        admits: &[usize],
+        cfg: &ModelConfig,
+    ) -> Result<()> {
+        let lane_elems = cfg.n_heads * cfg.max_seq * cfg.head_dim();
+        let mut writes: Vec<Vec<LaneWrite>> =
+            vec![Vec::new(); pool.groups.len()];
+        for (layer, (k_lit, v_lit)) in kv.iter().enumerate() {
+            let src_k: Vec<f32> = k_lit.to_vec()?;
+            let src_v: Vec<f32> = v_lit.to_vec()?;
+            for (src, &phys) in admits.iter().enumerate() {
+                let g = pool
+                    .groups
+                    .iter()
+                    .position(|&(l0, ln)| phys >= l0 && phys < l0 + ln)
+                    .context("admitted lane outside every shard group")?;
+                writes[g].push(LaneWrite {
+                    layer,
+                    lane: phys - pool.groups[g].0,
+                    k: src_k[src * lane_elems..(src + 1) * lane_elems]
+                        .to_vec(),
+                    v: src_v[src * lane_elems..(src + 1) * lane_elems]
+                        .to_vec(),
+                });
+            }
+        }
+        for (g, w) in writes.into_iter().enumerate() {
+            if w.is_empty() {
+                continue;
+            }
+            pool.send(g, ShardCmd::WriteLanes { writes: w })?;
+            pool.expect_ack(g)?;
+        }
+        Ok(())
     }
 
+    /// Decode attention over group `group`'s engine-local caches (the
+    /// compute lives in [`Backbone::attn_decode`], shared with the leader
+    /// shards).
     fn attn_decode(
         &mut self,
         layer: usize,
@@ -1488,27 +2064,18 @@ impl EpEngine {
         pos: &xla::Literal,
         group: usize,
     ) -> Result<xla::Literal> {
-        let (m, hh, smax) =
-            (self.cfg.d_model, self.cfg.n_heads, self.cfg.max_seq);
         let lanes = self.caches[group].lanes;
-        let prog = self.prog(&Manifest::key_attn_decode(m, hh, lanes, smax))?;
-        let pre = format!("layer{layer}.");
-        let cache = &self.caches[group];
-        let mut outs = prog.run_literal_refs(&[
-            &h,
-            self.p(&format!("{pre}ln1.g")),
-            self.p(&format!("{pre}ln1.b")),
-            self.p(&format!("{pre}attn.wq")),
-            self.p(&format!("{pre}attn.wk")),
-            self.p(&format!("{pre}attn.wv")),
-            self.p(&format!("{pre}attn.wo")),
-            &cache.k[layer],
-            &cache.v[layer],
-            pos,
-        ])?;
-        let vc = outs.pop().unwrap();
-        let kc = outs.pop().unwrap();
-        let h2 = outs.pop().unwrap();
+        let (h2, kc, vc) = {
+            let cache = &self.caches[group];
+            self.bb.attn_decode(
+                layer,
+                h,
+                pos,
+                lanes,
+                &cache.k[layer],
+                &cache.v[layer],
+            )?
+        };
         let cache = &mut self.caches[group];
         cache.k[layer] = kc;
         cache.v[layer] = vc;
@@ -1562,149 +2129,53 @@ impl EpEngine {
         depth_tag: Option<usize>,
         mask: Option<&[bool]>,
     ) -> Result<InflightMoe> {
-        let (m, f) = (self.cfg.d_model, self.cfg.d_ff);
-        let pre = format!("layer{layer}.");
-        let n_experts = self.cfg.experts_at(layer);
-        let t_layer = std::time::Instant::now();
-        let shape: Vec<usize> = h
-            .array_shape()?
-            .dims()
-            .iter()
-            .map(|&d| d as usize)
-            .collect();
-        let t_tokens: usize = shape.iter().product::<usize>() / m;
-
-        if n_experts == 0 {
-            let prog = self.prog(&Manifest::key_dense_ffn(m, f, t_tokens))?;
-            // dense_ffn operates on [1, T, M]: reshape at the literal level
-            // instead of a literal->host->literal round trip.
-            let orig_dims: Vec<i64> =
-                shape.iter().map(|&d| d as i64).collect();
-            let flat = h.reshape(&[1, t_tokens as i64, m as i64])?;
-            let out = prog
-                .run_literal_refs(&[
-                    &flat,
-                    self.p(&format!("{pre}ln2.g")),
-                    self.p(&format!("{pre}ln2.b")),
-                    self.p(&format!("{pre}mlp.w1")),
-                    self.p(&format!("{pre}mlp.b1")),
-                    self.p(&format!("{pre}mlp.w2")),
-                    self.p(&format!("{pre}mlp.b2")),
-                ])?
-                .remove(0);
-            return Ok(InflightMoe {
-                layer,
-                dispatch_elapsed: t_layer.elapsed(),
-                state: InflightState::Done(out.reshape(&orig_dims)?),
-            });
-        }
-
-        // Phase 1: gate.  [B,S,M] -> [1,T,M] is a literal reshape; only
-        // ln(h) and the router probabilities come back to the host (the
-        // routing tables need them).
-        let t0 = std::time::Instant::now();
-        let gate = self.prog(&Manifest::key_gate(m, n_experts, t_tokens))?;
-        let flat = h.reshape(&[1, t_tokens as i64, m as i64])?;
-        let outs = gate.run_literal_refs(&[
-            &flat,
-            self.p(&format!("{pre}ln2.g")),
-            self.p(&format!("{pre}ln2.b")),
-            self.p(&format!("{pre}moe.gate")),
-        ])?;
-        let ln_h = HostTensor::from_literal(&outs[0])?; // [T, M]
-        let probs = HostTensor::from_literal(&outs[1])?; // [T, E]
-        self.metrics.observe("gate", t0.elapsed());
-
-        // Dead lanes (retired/free under continuous batching) are masked
-        // out of routing here, so they take no expert slot and send no
-        // expert traffic.
-        let routing = Routing::top1_masked(probs.as_f32()?, n_experts, mask);
+        // Phases 1–3 (gate → coalesced pack → leader overlap) live in the
+        // backbone, shared verbatim with the leader shards; this engine
+        // owns what a shard cannot: the exchange tag and the fabric.
+        let prepared =
+            self.bb
+                .ffn_prepare(layer, h, mask, &mut self.scratch[slot])?;
+        let PreparedMoe {
+            shape,
+            routing,
+            batches,
+            residual,
+            out_data,
+            worker_experts,
+            dispatch_elapsed,
+            ..
+        } = match prepared {
+            Prepared::Dense { out, elapsed } => {
+                return Ok(InflightMoe {
+                    layer,
+                    dispatch_elapsed: elapsed,
+                    state: InflightState::Done(out),
+                });
+            }
+            Prepared::Moe(p) => *p,
+        };
         if let Some(i) = self.stats_idx[layer] {
             self.load_stats[i].record_assignments(routing.assignments());
         }
-
-        // Phase 2: coalesced dispatch — one tagged ExpertFfnBatch per
-        // owning worker (replica 0 group), all of its expert blocks packed
-        // into a single payload whose ownership moves into the channel.
-        let t1 = std::time::Instant::now();
-        let (ep_degree, owners): (usize, Vec<usize>) = {
-            let lp = self.placement.layer(layer).unwrap();
-            (lp.ep_degree, (0..n_experts).map(|e| lp.owner(e, 0)).collect())
-        };
-        let mut worker_experts =
-            std::mem::take(&mut self.scratch[slot].worker_experts);
-        for list in &mut worker_experts {
-            list.clear();
-        }
-        if worker_experts.len() < self.fabric.n_workers() {
-            worker_experts.resize(self.fabric.n_workers(), Vec::new());
-        }
-        for e in 0..n_experts {
-            if routing.counts[e] > 0 {
-                worker_experts[owners[e]].push(e);
-            }
-        }
-        let ln_flat = ln_h.as_f32()?;
         self.exchange_seq += 1;
         let exchange_tag = self.exchange_seq;
         let mut outstanding = 0usize;
-        for (w, experts) in worker_experts.iter().enumerate() {
-            if experts.is_empty() {
-                continue;
-            }
-            let total: usize =
-                experts.iter().map(|&e| routing.counts[e]).sum();
-            let mut data = Vec::new();
-            routing.pack_blocks(ln_flat, m, experts, &mut data);
+        for b in batches {
             self.fabric.dispatch_ffn_batch(
-                w,
+                b.worker,
                 ExpertFfnBatch {
                     layer,
-                    experts: experts
-                        .iter()
-                        .map(|&e| (e, routing.counts[e]))
-                        .collect(),
-                    data: HostTensor::f32(&[total, m], data),
+                    experts: b.experts,
+                    data: b.data,
                     tag: exchange_tag,
                 },
             )?;
             outstanding += 1;
         }
-        self.metrics.observe("dispatch", t1.elapsed());
-
-        // Phase 3: leader overlap — everything that does not depend on the
-        // expert outputs runs while the workers execute: all-to-all plan
-        // accounting, the PR-MoE fixed residual branch, and the combine
-        // buffer prep (pulling the residual stream to the host).
-        let t2 = std::time::Instant::now();
-        let plan = self.exchange_plan(&routing, ep_degree, m);
-        self.metrics.inc("alltoall_bytes", plan.volume() as u64);
-        self.metrics.inc("alltoall_hops", plan.hops() as u64);
-        let residual: Option<Vec<f32>> = if self.cfg.residual {
-            let rb =
-                self.prog(&Manifest::key_residual_branch(m, f, t_tokens))?;
-            let out = rb
-                .run_literal_refs(&[
-                    &outs[0], // ln(h) [T, M], no host round trip
-                    self.p(&format!("{pre}moe.res.w1")),
-                    self.p(&format!("{pre}moe.res.b1")),
-                    self.p(&format!("{pre}moe.res.w2")),
-                    self.p(&format!("{pre}moe.res.b2")),
-                ])?
-                .remove(0);
-            Some(out.to_vec::<f32>()?)
-        } else {
-            None
-        };
-        // Combine prep: the residual stream, pulled to the host once (the
-        // [1,T,M] reshape shares h's row-major element order).
-        let out_data: Vec<f32> = flat.to_vec()?;
-        self.metrics.observe("leader_overlap", t2.elapsed());
-
         self.open_tags.push(exchange_tag);
         Ok(InflightMoe {
             layer,
-            dispatch_elapsed: t_layer.elapsed(),
+            dispatch_elapsed,
             state: InflightState::Pending(Box::new(PendingMoe {
                 slot,
                 shape,
@@ -1750,7 +2221,6 @@ impl EpEngine {
             InflightState::Done(h) => return Ok(h),
             InflightState::Pending(p) => p,
         };
-        let m = self.cfg.d_model;
 
         // Phase 4: wait for the coalesced worker replies still in flight
         // (replies of the *other* open exchange get stashed, tag-keyed).
@@ -1773,31 +2243,21 @@ impl EpEngine {
             self.metrics.observe(p.wait_metric, t3.elapsed());
         }
 
-        // Phase 5: combine — gate-scale, un-permute (scratch buffer reused
-        // across layers), then add the residual branch and the residual
-        // stream in the same order as the serial path (bit-identical).
-        let t4 = std::time::Instant::now();
-        let mut combined = std::mem::take(&mut self.scratch[p.slot].combine);
-        {
-            let packs: Vec<(&[(usize, usize)], &[f32])> = results
-                .iter()
-                .map(|r| Ok((r.experts.as_slice(), r.data.as_f32()?)))
-                .collect::<Result<_>>()?;
-            p.routing.combine_packed(&packs, m, &mut combined)?;
-        }
-        if let Some(res) = &p.residual {
-            for (c, r) in combined.iter_mut().zip(res) {
-                *c += *r;
-            }
-        }
-        let mut out_data = p.out_data;
-        for (o, c) in out_data.iter_mut().zip(&combined) {
-            *o += *c;
-        }
-        let out = HostTensor::f32(&p.shape, out_data).to_literal()?;
-        self.scratch[p.slot].combine = combined;
+        // Phase 5: combine — in the backbone (scratch buffer reused
+        // across layers), same op order as the serial path
+        // (bit-identical).
+        let out = {
+            let slot_scratch = &mut self.scratch[p.slot];
+            self.bb.moe_combine(
+                &p.shape,
+                &p.routing,
+                p.residual.as_deref(),
+                p.out_data,
+                &results,
+                &mut slot_scratch.combine,
+            )?
+        };
         self.scratch[p.slot].worker_experts = p.worker_experts;
-        self.metrics.observe("combine", t4.elapsed());
         // Dispatch half + finish half: excludes whatever the pipeline
         // interleaved between the two (the per-layer path has no gap).
         self.metrics
@@ -1824,15 +2284,15 @@ impl EpEngine {
         let t0 = std::time::Instant::now();
         let h_host = HostTensor::from_literal(&h)?;
         let t_tokens = h_host.nelems() / m;
-        let gate = self.prog(&Manifest::key_gate(m, n_experts, t_tokens))?;
+        let gate = self.bb.prog(&Manifest::key_gate(m, n_experts, t_tokens))?;
         let shape = h_host.shape.clone();
         let flat = HostTensor::f32(&[1, t_tokens, m], h_host.as_f32()?.to_vec())
             .to_literal()?;
         let outs = gate.run_literal_refs(&[
             &flat,
-            self.p(&format!("{pre}ln2.g")),
-            self.p(&format!("{pre}ln2.b")),
-            self.p(&format!("{pre}moe.gate")),
+            self.bb.p(&format!("{pre}ln2.g")),
+            self.bb.p(&format!("{pre}ln2.b")),
+            self.bb.p(&format!("{pre}moe.gate")),
         ])?;
         let ln_h = HostTensor::from_literal(&outs[0])?; // [T, M]
         let probs = HostTensor::from_literal(&outs[1])?; // [T, E]
@@ -1845,7 +2305,7 @@ impl EpEngine {
 
         // Log the all-to-all schedule this exchange would use at scale.
         let lp = self.placement.layer(layer).unwrap();
-        let plan = self.exchange_plan(&routing, lp.ep_degree, m);
+        let plan = self.bb.exchange_plan(&routing, lp.ep_degree, m);
         self.metrics
             .inc("alltoall_bytes", plan.volume() as u64);
         self.metrics.inc("alltoall_hops", plan.hops() as u64);
@@ -1883,16 +2343,16 @@ impl EpEngine {
         // dense, non-expert computation).
         if self.cfg.residual {
             let rb =
-                self.prog(&Manifest::key_residual_branch(m, f, t_tokens))?;
+                self.bb.prog(&Manifest::key_residual_branch(m, f, t_tokens))?;
             let lnh_lit =
                 HostTensor::f32(&[t_tokens, m], ln_flat.to_vec()).to_literal()?;
             let out = rb
                 .run_literal_refs(&[
                     &lnh_lit,
-                    self.p(&format!("{pre}moe.res.w1")),
-                    self.p(&format!("{pre}moe.res.b1")),
-                    self.p(&format!("{pre}moe.res.w2")),
-                    self.p(&format!("{pre}moe.res.b2")),
+                    self.bb.p(&format!("{pre}moe.res.w1")),
+                    self.bb.p(&format!("{pre}moe.res.b1")),
+                    self.bb.p(&format!("{pre}moe.res.w2")),
+                    self.bb.p(&format!("{pre}moe.res.b2")),
                 ])?
                 .remove(0);
             let res = HostTensor::from_literal(&out)?;
@@ -1909,94 +2369,6 @@ impl EpEngine {
         let out = HostTensor::f32(&shape, out).to_literal()?;
         self.metrics.observe("moe_layer", t_layer.elapsed());
         Ok(out)
-    }
-
-    /// Build the all-to-all byte matrix this routing implies at EP degree
-    /// `ep` (tokens sharded round-robin over workers, as they would be when
-    /// each worker owns part of the batch) and plan it with the configured
-    /// schedule.
-    fn exchange_plan(
-        &self,
-        routing: &Routing,
-        ep: usize,
-        m: usize,
-    ) -> alltoall::Plan {
-        let mut bytes = vec![vec![0usize; ep]; ep];
-        for (t, &e) in routing.expert.iter().enumerate() {
-            if e >= routing.n_experts {
-                continue; // masked token (dead lane): no exchange traffic
-            }
-            let src = t % ep; // token's home shard
-            let dst = e % ep; // expert's owner (round-robin placement)
-            if src != dst {
-                bytes[src][dst] += m * 4;
-            }
-        }
-        let topo = Topology {
-            workers: ep,
-            node_size: ep.min(8),
-            ts_degree: 1,
-        };
-        alltoall::plan(self.alltoall, topo, &bytes)
-    }
-
-    /// LM head over each lane's last real position.  `h` is
-    /// `[lanes, smax, M]`; the last-position rows are gathered **at the
-    /// literal level** by the `gather_last_*` AOT program (one `[lanes, M]`
-    /// transfer instead of pulling the whole activation); artifact sets
-    /// predating that program fall back to a host-side gather.
-    fn lm_head_last(
-        &mut self,
-        h: &xla::Literal,
-        lens: &[usize],
-    ) -> Result<Vec<Vec<f32>>> {
-        let (m, smax) = (self.cfg.d_model, self.cfg.max_seq);
-        let lanes = lens.len();
-        let key = Manifest::key_gather_last(m, lanes, smax);
-        let last = if self.manifest_keys.manifest.shared_program(&key).is_ok()
-        {
-            let gather = self.prog(&key)?;
-            let lens_lit = HostTensor::i32(
-                &[lanes],
-                lens.iter().map(|&l| l as i32).collect(),
-            )
-            .to_literal()?;
-            gather.run_literal_refs(&[h, &lens_lit])?.remove(0)
-        } else {
-            let hd: Vec<f32> = h.to_vec()?;
-            let mut last = vec![0f32; lanes * m];
-            for lane in 0..lanes {
-                let p = lens[lane].max(1) - 1;
-                let off = (lane * smax + p) * m;
-                last[lane * m..(lane + 1) * m]
-                    .copy_from_slice(&hd[off..off + m]);
-            }
-            HostTensor::f32(&[lanes, m], last).to_literal()?
-        };
-        self.lm_head_rows(&last, lanes)
-    }
-
-    /// LM head over `[lanes, M]` hidden rows, fed straight from the
-    /// literal; returns one logits row per lane.
-    fn lm_head_rows(
-        &mut self,
-        h: &xla::Literal,
-        lanes: usize,
-    ) -> Result<Vec<Vec<f32>>> {
-        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
-        let prog = self.prog(&Manifest::key_lm_head(v, m, lanes))?;
-        let out = prog
-            .run_literal_refs(&[
-                h,
-                self.p("lnf.g"),
-                self.p("lnf.b"),
-                self.p("tok_emb"),
-            ])?
-            .remove(0);
-        let data: Vec<f32> = out.to_vec()?;
-        Ok((0..lanes)
-            .map(|lane| data[lane * v..(lane + 1) * v].to_vec())
-            .collect())
     }
 
     pub fn traffic(&self) -> &crate::fabric::Traffic {
@@ -2021,14 +2393,16 @@ impl ForwardModel for EpEngine {
 
     fn configure(&mut self, serving: &crate::config::ServingConfig) {
         self.set_pipe_depth(serving.pipe_depth);
+        self.set_leader_threads(serving.leader_threads);
     }
 
-    fn metrics(&self) -> std::sync::Arc<Metrics> {
+    fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
     }
 
-    fn set_metrics(&mut self, metrics: std::sync::Arc<Metrics>) {
+    fn set_metrics(&mut self, metrics: Arc<Metrics>) {
         self.metrics = metrics;
+        self.sync_metrics();
     }
 
     fn prefill_sizes(&self) -> Vec<usize> {

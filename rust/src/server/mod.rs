@@ -41,6 +41,14 @@
 //!   skewed retirement, and per-group host KV mirrors.  Also usable
 //!   standalone through its legacy fixed-lane `forward_prefill` /
 //!   `forward_decode` API.
+//! * `shard` (internal) — parallel leader shards: with
+//!   `leader_threads >= 2`, each pipeline microbatch group's dense
+//!   backbone (embed/attention/gate/combine, via the shared
+//!   `shard::Backbone` that the single-threaded leader also executes)
+//!   runs on its own OS thread with its own thread-bound runtime and its
+//!   group's KV caches, while the engine orchestrates the tagged expert
+//!   exchanges oldest-first — the §5 move of parallelizing the dense
+//!   parameters too, not just the experts.
 //!
 //! Both backends produce identical logits for identical weights/input —
 //! the parity tests in `rust/tests/integration_parity.rs` (including the
@@ -57,7 +65,12 @@
 //! | `DSMOE_NO_PIPELINE`    | per-layer overlapped path (no microbatch    |
 //! |                        | interleaving).                              |
 //! | `DSMOE_PIPE_DEPTH`     | microbatch pipeline ring depth N (default   |
-//! |                        | 2); unsupported depths fall back 2 → 1.     |
+//! |                        | 2); unsupported depths fall back 2 → 1;     |
+//! |                        | 0/negative/garbage warn and fall back to 2. |
+//! | `DSMOE_LEADER_THREADS` | >= 2: one leader-shard thread per           |
+//! |                        | microbatch group — dense backbones of       |
+//! |                        | different microbatches run concurrently     |
+//! |                        | (default 1 = single-threaded leader).       |
 //! | `DSMOE_NO_INTERLEAVE`  | stop-the-world admission prefills (disable  |
 //! |                        | prefill-behind-decode interleaving).        |
 //! | `DSMOE_REGROUP_SKEW`   | live-lane skew (max − min per group) that   |
@@ -73,6 +86,7 @@
 pub mod engine;
 pub mod ep;
 pub mod scheduler;
+pub(crate) mod shard;
 
 pub use engine::Engine;
 pub use ep::{EpEngine, InflightMoe};

@@ -1,0 +1,1118 @@
+//! Leader shards: the dense backbone on N runtime threads.
+//!
+//! DeepSpeed-MoE's inference design (§5) parallelizes the *dense* part of
+//! the model as well as the experts — the dense backbone is never a single
+//! serial thread of execution.  The depth-N pipeline ring (PR 4) hides
+//! leader compute behind fabric round trips, but attention/gate/combine of
+//! different microbatches still serialized on the one leader thread.  This
+//! module removes that serialization:
+//!
+//! * [`Backbone`] — every dense computation of the expert-parallel leader
+//!   (embedding, attention, gate + routing + coalesced pack, dense FFN,
+//!   PR-MoE residual branch, combine, LM head) bound to **one** runtime
+//!   thread.  The [`crate::server::EpEngine`] owns one for its own thread;
+//!   each leader shard owns another, materialized from the same
+//!   [`SharedArtifacts`].  Because the leader and the shards execute the
+//!   *same* `Backbone` methods on the same program shapes, the sharded
+//!   schedule is bit-identical to the single-threaded one by construction.
+//! * [`ShardPool`] — one OS thread per pipeline microbatch group (the
+//!   same pattern as the fabric workers: thread-bound `Runtime`, channel
+//!   protocol, joined on drop).  A shard owns its group's KV caches and
+//!   host mirrors; the engine talks to it through [`ShardCmd`] /
+//!   [`ShardEvent`] channels.  Expert exchanges stay centralized: a shard
+//!   *prepares* the coalesced per-worker payloads ([`PreparedBatch`]) and
+//!   hands them to the orchestrating engine, which owns the fabric, tags
+//!   the exchange, dispatches it, and routes the collected replies back —
+//!   preserving the ring's dispatch/finish order over tagged channels.
+//!
+//! Per-forward timers: `leader_par` (each shard's busy compute time — the
+//! work that now runs concurrently across shards) and `shard_idle` (each
+//! shard's exposed wait for expert replies).  With `leader_threads = 1`
+//! the engine never constructs a pool and nothing here runs.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{AllToAllKind, ModelConfig};
+use crate::coordinator::alltoall::{self, Topology};
+use crate::coordinator::gate::Routing;
+use crate::coordinator::kv_cache::copy_lane;
+use crate::coordinator::Placement;
+use crate::fabric::FfnBatchResult;
+use crate::metrics::Metrics;
+use crate::runtime::{
+    HostTensor, Manifest, Program, Runtime, SharedArtifacts,
+};
+
+use super::ep::LaneGroupCaches;
+
+/// Routing pack/combine scratch reused across MoE layers (and forwards) so
+/// the hot path does not reallocate its staging buffers per layer.  The
+/// engine keeps one slot per pipeline microbatch plus one for a staged
+/// admission; each leader shard keeps its own.
+#[derive(Default)]
+pub(crate) struct MoeScratch {
+    /// `[T * M]` combine accumulation buffer.
+    pub(crate) combine: Vec<f32>,
+    /// Per-worker expert lists for the current layer.
+    pub(crate) worker_experts: Vec<Vec<usize>>,
+}
+
+/// One worker's coalesced expert payload, prepared but not yet tagged or
+/// put on the fabric — the side that owns the fabric assigns the exchange
+/// tag and dispatches.
+pub(crate) struct PreparedBatch {
+    pub(crate) worker: usize,
+    /// `(expert id, row count)` in packed order.
+    pub(crate) experts: Vec<(usize, usize)>,
+    /// `[total_rows, M]` packed activation rows.
+    pub(crate) data: HostTensor,
+}
+
+/// Result of [`Backbone::ffn_prepare`]: a dense FFN that completed locally,
+/// or a fully prepared MoE exchange awaiting expert replies.
+pub(crate) enum Prepared {
+    Dense { out: xla::Literal, elapsed: std::time::Duration },
+    Moe(Box<PreparedMoe>),
+}
+
+/// Everything phase 5 (combine) needs once the expert replies arrive.
+/// (The layer index travels alongside, in the caller's own state — the
+/// engine's `InflightMoe` / the shard's loop variable.)
+pub(crate) struct PreparedMoe {
+    /// Original `h` dims, restored on combine.
+    pub(crate) shape: Vec<usize>,
+    pub(crate) routing: Routing,
+    /// Per-worker payloads; taken by the dispatching side.
+    pub(crate) batches: Vec<PreparedBatch>,
+    /// PR-MoE fixed-branch output, if the model has one.
+    pub(crate) residual: Option<Vec<f32>>,
+    /// Residual stream pulled to the host (combine accumulates into it).
+    pub(crate) out_data: Vec<f32>,
+    /// Taken from the caller's [`MoeScratch`], returned at combine.
+    pub(crate) worker_experts: Vec<Vec<usize>>,
+    /// Leader time spent in the dispatch half (gate → leader overlap).
+    pub(crate) dispatch_elapsed: std::time::Duration,
+}
+
+/// The dense backbone bound to one runtime thread: AOT programs compiled
+/// on this thread's PJRT client, dense weight literals materialized from
+/// the shared artifact set, and every dense computation of the
+/// expert-parallel leader as a method.  One instance per thread — the
+/// engine's own, plus one per leader shard.
+pub(crate) struct Backbone {
+    rt: Runtime,
+    pub(crate) cfg: ModelConfig,
+    arts: SharedArtifacts,
+    params: HashMap<String, xla::Literal>,
+    progs: HashMap<String, Rc<Program>>,
+    placement: Placement,
+    alltoall: AllToAllKind,
+    /// Fabric worker count (sizes the per-worker pack lists).
+    workers: usize,
+    pub(crate) metrics: Arc<Metrics>,
+}
+
+impl Backbone {
+    pub(crate) fn new(
+        arts: SharedArtifacts,
+        cfg: ModelConfig,
+        placement: Placement,
+        alltoall: AllToAllKind,
+        workers: usize,
+        metrics: Arc<Metrics>,
+    ) -> Result<Backbone> {
+        let rt = Runtime::cpu()?;
+        let params = arts.materialize_dense_params()?;
+        Ok(Backbone {
+            rt,
+            cfg,
+            arts,
+            params,
+            progs: HashMap::new(),
+            placement,
+            alltoall,
+            workers,
+            metrics,
+        })
+    }
+
+    pub(crate) fn prog(&mut self, key: &str) -> Result<Rc<Program>> {
+        if let Some(p) = self.progs.get(key) {
+            return Ok(p.clone());
+        }
+        let spec = self.arts.manifest().shared_program(key)?;
+        let p = self.rt.load(spec)?;
+        self.progs.insert(key.to_string(), p.clone());
+        Ok(p)
+    }
+
+    pub(crate) fn p(&self, name: &str) -> &xla::Literal {
+        &self.params[name]
+    }
+
+    /// Token+position embedding for a prefill microbatch `[lanes, smax]`.
+    pub(crate) fn embed_prefill(
+        &mut self,
+        tokens: &[i32],
+        lanes: usize,
+    ) -> Result<xla::Literal> {
+        let (v, m, smax) =
+            (self.cfg.vocab_size, self.cfg.d_model, self.cfg.max_seq);
+        let embed = self.prog(&Manifest::key_embed(v, m, lanes, smax))?;
+        let tok =
+            HostTensor::i32(&[lanes, smax], tokens.to_vec()).to_literal()?;
+        let pos0 = HostTensor::i32(&[lanes], vec![0; lanes]).to_literal()?;
+        Ok(embed
+            .run_literal_refs(&[
+                self.p("tok_emb"),
+                self.p("pos_emb"),
+                &tok,
+                &pos0,
+            ])?
+            .remove(0))
+    }
+
+    /// Token+position embedding for one decode step `[lanes, 1]` at
+    /// per-lane positions.
+    pub(crate) fn embed_decode(
+        &mut self,
+        tokens: &[i32],
+        pos: &xla::Literal,
+        lanes: usize,
+    ) -> Result<xla::Literal> {
+        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
+        let embed = self.prog(&Manifest::key_embed(v, m, lanes, 1))?;
+        let tok =
+            HostTensor::i32(&[lanes, 1], tokens.to_vec()).to_literal()?;
+        Ok(embed
+            .run_literal_refs(&[
+                self.p("tok_emb"),
+                self.p("pos_emb"),
+                &tok,
+                pos,
+            ])?
+            .remove(0))
+    }
+
+    pub(crate) fn attn_prefill(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+        lanes: usize,
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+        let (m, hh, smax) =
+            (self.cfg.d_model, self.cfg.n_heads, self.cfg.max_seq);
+        let prog =
+            self.prog(&Manifest::key_attn_prefill(m, hh, lanes, smax))?;
+        let pre = format!("layer{layer}.");
+        let mut outs = prog.run_literal_refs(&[
+            &h,
+            self.p(&format!("{pre}ln1.g")),
+            self.p(&format!("{pre}ln1.b")),
+            self.p(&format!("{pre}attn.wq")),
+            self.p(&format!("{pre}attn.wk")),
+            self.p(&format!("{pre}attn.wv")),
+            self.p(&format!("{pre}attn.wo")),
+        ])?;
+        let vv = outs.pop().unwrap();
+        let k = outs.pop().unwrap();
+        let h2 = outs.pop().unwrap();
+        Ok((h2, k, vv))
+    }
+
+    /// One decode-attention step; the caller owns the KV caches and
+    /// installs the returned updated literals.
+    pub(crate) fn attn_decode(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+        pos: &xla::Literal,
+        lanes: usize,
+        k: &xla::Literal,
+        v: &xla::Literal,
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+        let (m, hh, smax) =
+            (self.cfg.d_model, self.cfg.n_heads, self.cfg.max_seq);
+        let prog =
+            self.prog(&Manifest::key_attn_decode(m, hh, lanes, smax))?;
+        let pre = format!("layer{layer}.");
+        let mut outs = prog.run_literal_refs(&[
+            &h,
+            self.p(&format!("{pre}ln1.g")),
+            self.p(&format!("{pre}ln1.b")),
+            self.p(&format!("{pre}attn.wq")),
+            self.p(&format!("{pre}attn.wk")),
+            self.p(&format!("{pre}attn.wv")),
+            self.p(&format!("{pre}attn.wo")),
+            k,
+            v,
+            pos,
+        ])?;
+        let vc = outs.pop().unwrap();
+        let kc = outs.pop().unwrap();
+        let h2 = outs.pop().unwrap();
+        Ok((h2, kc, vc))
+    }
+
+    /// FFN sublayer, phases 1–3 of the split-phase MoE (gate → coalesced
+    /// per-worker pack → leader-overlap work), minus the fabric sends —
+    /// the caller owns tags and the fabric.  Dense FFN layers complete
+    /// here.  `mask` marks live tokens (None = all live); dead tokens are
+    /// excluded from gate routing and expert dispatch.  Load-stats
+    /// recording stays with the code that owns the stats (the engine or
+    /// the shard orchestrator), not here.
+    pub(crate) fn ffn_prepare(
+        &mut self,
+        layer: usize,
+        h: xla::Literal,
+        mask: Option<&[bool]>,
+        scratch: &mut MoeScratch,
+    ) -> Result<Prepared> {
+        let (m, f) = (self.cfg.d_model, self.cfg.d_ff);
+        let pre = format!("layer{layer}.");
+        let n_experts = self.cfg.experts_at(layer);
+        let t_layer = std::time::Instant::now();
+        let shape: Vec<usize> = h
+            .array_shape()?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        let t_tokens: usize = shape.iter().product::<usize>() / m;
+
+        if n_experts == 0 {
+            let prog = self.prog(&Manifest::key_dense_ffn(m, f, t_tokens))?;
+            // dense_ffn operates on [1, T, M]: reshape at the literal
+            // level instead of a literal->host->literal round trip.
+            let orig_dims: Vec<i64> =
+                shape.iter().map(|&d| d as i64).collect();
+            let flat = h.reshape(&[1, t_tokens as i64, m as i64])?;
+            let out = prog
+                .run_literal_refs(&[
+                    &flat,
+                    self.p(&format!("{pre}ln2.g")),
+                    self.p(&format!("{pre}ln2.b")),
+                    self.p(&format!("{pre}mlp.w1")),
+                    self.p(&format!("{pre}mlp.b1")),
+                    self.p(&format!("{pre}mlp.w2")),
+                    self.p(&format!("{pre}mlp.b2")),
+                ])?
+                .remove(0);
+            return Ok(Prepared::Dense {
+                out: out.reshape(&orig_dims)?,
+                elapsed: t_layer.elapsed(),
+            });
+        }
+
+        // Phase 1: gate.  [B,S,M] -> [1,T,M] is a literal reshape; only
+        // ln(h) and the router probabilities come back to the host (the
+        // routing tables need them).
+        let t0 = std::time::Instant::now();
+        let gate = self.prog(&Manifest::key_gate(m, n_experts, t_tokens))?;
+        let flat = h.reshape(&[1, t_tokens as i64, m as i64])?;
+        let outs = gate.run_literal_refs(&[
+            &flat,
+            self.p(&format!("{pre}ln2.g")),
+            self.p(&format!("{pre}ln2.b")),
+            self.p(&format!("{pre}moe.gate")),
+        ])?;
+        let ln_h = HostTensor::from_literal(&outs[0])?; // [T, M]
+        let probs = HostTensor::from_literal(&outs[1])?; // [T, E]
+        self.metrics.observe("gate", t0.elapsed());
+
+        // Dead lanes (retired/free under continuous batching) are masked
+        // out of routing here, so they take no expert slot and send no
+        // expert traffic.
+        let routing = Routing::top1_masked(probs.as_f32()?, n_experts, mask);
+
+        // Phase 2: coalesced pack — one payload per owning worker
+        // (replica 0 group), all of its expert blocks packed contiguous.
+        let t1 = std::time::Instant::now();
+        let (ep_degree, owners): (usize, Vec<usize>) = {
+            let lp = self.placement.layer(layer).unwrap();
+            (lp.ep_degree, (0..n_experts).map(|e| lp.owner(e, 0)).collect())
+        };
+        let mut worker_experts = std::mem::take(&mut scratch.worker_experts);
+        for list in &mut worker_experts {
+            list.clear();
+        }
+        if worker_experts.len() < self.workers {
+            worker_experts.resize(self.workers, Vec::new());
+        }
+        for e in 0..n_experts {
+            if routing.counts[e] > 0 {
+                worker_experts[owners[e]].push(e);
+            }
+        }
+        let ln_flat = ln_h.as_f32()?;
+        let mut batches = Vec::new();
+        for (w, experts) in worker_experts.iter().enumerate() {
+            if experts.is_empty() {
+                continue;
+            }
+            let total: usize =
+                experts.iter().map(|&e| routing.counts[e]).sum();
+            let mut data = Vec::new();
+            routing.pack_blocks(ln_flat, m, experts, &mut data);
+            batches.push(PreparedBatch {
+                worker: w,
+                experts: experts
+                    .iter()
+                    .map(|&e| (e, routing.counts[e]))
+                    .collect(),
+                data: HostTensor::f32(&[total, m], data),
+            });
+        }
+        self.metrics.observe("dispatch", t1.elapsed());
+
+        // Phase 3: leader overlap — everything that does not depend on
+        // the expert outputs: all-to-all plan accounting, the PR-MoE
+        // fixed residual branch, and the combine buffer prep.
+        let t2 = std::time::Instant::now();
+        let plan = self.exchange_plan(&routing, ep_degree, m);
+        self.metrics.inc("alltoall_bytes", plan.volume() as u64);
+        self.metrics.inc("alltoall_hops", plan.hops() as u64);
+        let residual: Option<Vec<f32>> = if self.cfg.residual {
+            let rb =
+                self.prog(&Manifest::key_residual_branch(m, f, t_tokens))?;
+            let out = rb
+                .run_literal_refs(&[
+                    &outs[0], // ln(h) [T, M], no host round trip
+                    self.p(&format!("{pre}moe.res.w1")),
+                    self.p(&format!("{pre}moe.res.b1")),
+                    self.p(&format!("{pre}moe.res.w2")),
+                    self.p(&format!("{pre}moe.res.b2")),
+                ])?
+                .remove(0);
+            Some(out.to_vec::<f32>()?)
+        } else {
+            None
+        };
+        // Combine prep: the residual stream, pulled to the host once (the
+        // [1,T,M] reshape shares h's row-major element order).
+        let out_data: Vec<f32> = flat.to_vec()?;
+        self.metrics.observe("leader_overlap", t2.elapsed());
+
+        Ok(Prepared::Moe(Box::new(PreparedMoe {
+            shape,
+            routing,
+            batches,
+            residual,
+            out_data,
+            worker_experts,
+            dispatch_elapsed: t_layer.elapsed(),
+        })))
+    }
+
+    /// Phase 5 of the split-phase MoE: combine the packed expert replies
+    /// (gate-scale, un-permute), then add the residual branch and the
+    /// residual stream — the same op order as the serial path, so every
+    /// schedule is bit-identical.
+    pub(crate) fn moe_combine(
+        &mut self,
+        shape: &[usize],
+        routing: &Routing,
+        residual: Option<&[f32]>,
+        mut out_data: Vec<f32>,
+        results: &[FfnBatchResult],
+        combine: &mut Vec<f32>,
+    ) -> Result<xla::Literal> {
+        let t4 = std::time::Instant::now();
+        {
+            let packs: Vec<(&[(usize, usize)], &[f32])> = results
+                .iter()
+                .map(|r| Ok((r.experts.as_slice(), r.data.as_f32()?)))
+                .collect::<Result<_>>()?;
+            routing.combine_packed(&packs, self.cfg.d_model, combine)?;
+        }
+        if let Some(res) = residual {
+            for (c, r) in combine.iter_mut().zip(res) {
+                *c += *r;
+            }
+        }
+        for (o, c) in out_data.iter_mut().zip(combine.iter()) {
+            *o += *c;
+        }
+        let out = HostTensor::f32(shape, out_data).to_literal()?;
+        self.metrics.observe("combine", t4.elapsed());
+        Ok(out)
+    }
+
+    /// Build the all-to-all byte matrix this routing implies at EP degree
+    /// `ep` (tokens sharded round-robin over workers, as they would be
+    /// when each worker owns part of the batch) and plan it with the
+    /// configured schedule.
+    pub(crate) fn exchange_plan(
+        &self,
+        routing: &Routing,
+        ep: usize,
+        m: usize,
+    ) -> alltoall::Plan {
+        let mut bytes = vec![vec![0usize; ep]; ep];
+        for (t, &e) in routing.expert.iter().enumerate() {
+            if e >= routing.n_experts {
+                continue; // masked token (dead lane): no exchange traffic
+            }
+            let src = t % ep; // token's home shard
+            let dst = e % ep; // expert's owner (round-robin placement)
+            if src != dst {
+                bytes[src][dst] += m * 4;
+            }
+        }
+        let topo = Topology {
+            workers: ep,
+            node_size: ep.min(8),
+            ts_degree: 1,
+        };
+        alltoall::plan(self.alltoall, topo, &bytes)
+    }
+
+    /// LM head over each lane's last real position.  `h` is
+    /// `[lanes, smax, M]`; the last-position rows are gathered **at the
+    /// literal level** by the `gather_last_*` AOT program; artifact sets
+    /// predating that program fall back to a host-side gather.
+    pub(crate) fn lm_head_last(
+        &mut self,
+        h: &xla::Literal,
+        lens: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        let (m, smax) = (self.cfg.d_model, self.cfg.max_seq);
+        let lanes = lens.len();
+        let key = Manifest::key_gather_last(m, lanes, smax);
+        let last = if self.arts.manifest().shared_program(&key).is_ok() {
+            let gather = self.prog(&key)?;
+            let lens_lit = HostTensor::i32(
+                &[lanes],
+                lens.iter().map(|&l| l as i32).collect(),
+            )
+            .to_literal()?;
+            gather.run_literal_refs(&[h, &lens_lit])?.remove(0)
+        } else {
+            let hd: Vec<f32> = h.to_vec()?;
+            let mut last = vec![0f32; lanes * m];
+            for lane in 0..lanes {
+                let p = lens[lane].max(1) - 1;
+                let off = (lane * smax + p) * m;
+                last[lane * m..(lane + 1) * m]
+                    .copy_from_slice(&hd[off..off + m]);
+            }
+            HostTensor::f32(&[lanes, m], last).to_literal()?
+        };
+        self.lm_head_rows(&last, lanes)
+    }
+
+    /// LM head over `[lanes, M]` hidden rows, fed straight from the
+    /// literal; returns one logits row per lane.
+    pub(crate) fn lm_head_rows(
+        &mut self,
+        h: &xla::Literal,
+        lanes: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (v, m) = (self.cfg.vocab_size, self.cfg.d_model);
+        let prog = self.prog(&Manifest::key_lm_head(v, m, lanes))?;
+        let out = prog
+            .run_literal_refs(&[
+                h,
+                self.p("lnf.g"),
+                self.p("lnf.b"),
+                self.p("tok_emb"),
+            ])?
+            .remove(0);
+        let data: Vec<f32> = out.to_vec()?;
+        Ok((0..lanes)
+            .map(|lane| data[lane * v..(lane + 1) * v].to_vec())
+            .collect())
+    }
+}
+
+/// One lane's per-layer KV data crossing the engine↔shard boundary
+/// (admission splices, regroup moves).
+pub(crate) struct LaneWrite {
+    pub(crate) layer: usize,
+    /// In-group lane offset.
+    pub(crate) lane: usize,
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+}
+
+/// Commands the engine sends to a leader shard.
+pub(crate) enum ShardCmd {
+    /// Full prefill over this shard's lane group; rebuilds its KV caches
+    /// and replies [`ShardEvent::PrefillDone`] with last-position logits.
+    Prefill { tokens: Vec<i32>, lens: Vec<usize> },
+    /// One decode step over the group's lanes; replies
+    /// [`ShardEvent::DecodeDone`].
+    Decode { tokens: Vec<i32>, pos: Vec<i32>, mask: Option<Vec<bool>> },
+    /// Collected expert replies for the exchange the shard is waiting on
+    /// (matched by the shard-local `seq`).
+    MoeReplies { seq: u64, results: Vec<FfnBatchResult> },
+    /// Pull per-layer host copies of the given in-group lanes
+    /// (→ [`ShardEvent::Lanes`]).
+    ReadLanes { lanes: Vec<usize> },
+    /// Write per-layer lane data through the host mirrors
+    /// (→ [`ShardEvent::Ack`]).
+    WriteLanes { writes: Vec<LaneWrite> },
+    /// Hand the whole cache group back as host tensors
+    /// (→ [`ShardEvent::Caches`]); the shard keeps nothing.
+    TakeCaches,
+    /// Install a cache group from host tensors (→ [`ShardEvent::Ack`]).
+    InstallCaches { layers: Vec<(HostTensor, HostTensor)> },
+    /// Swap the metrics registry (benches reset between warmup and the
+    /// measured run).
+    SetMetrics(Arc<Metrics>),
+    Shutdown,
+}
+
+/// Events a leader shard sends back on the shared orchestrator channel.
+pub(crate) enum ShardEvent {
+    /// The shard's next MoE exchange is prepared: the orchestrator tags
+    /// it, puts it on the fabric, and later answers with
+    /// [`ShardCmd::MoeReplies`].  `assignments` carries the routing's
+    /// per-token expert ids for the engine-side load stats.
+    MoeDispatch {
+        shard: usize,
+        seq: u64,
+        layer: usize,
+        batches: Vec<PreparedBatch>,
+        assignments: Vec<usize>,
+    },
+    PrefillDone { shard: usize, rows: Vec<Vec<f32>> },
+    DecodeDone { shard: usize, rows: Vec<Vec<f32>> },
+    Lanes { shard: usize, writes: Vec<LaneWrite> },
+    Caches { shard: usize, layers: Vec<(HostTensor, HostTensor)> },
+    Ack { shard: usize },
+    Err { shard: usize, msg: String },
+}
+
+pub(crate) struct ShardHandle {
+    /// `None` once shut down — dropping the sender is what unblocks a
+    /// shard that was interrupted mid-forward.
+    tx: Option<Sender<ShardCmd>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Everything a shard thread needs to build its own [`Backbone`].
+pub(crate) struct PoolSpec {
+    pub(crate) groups: Vec<(usize, usize)>,
+    pub(crate) arts: SharedArtifacts,
+    pub(crate) cfg: ModelConfig,
+    pub(crate) placement: Placement,
+    pub(crate) alltoall: AllToAllKind,
+    pub(crate) workers: usize,
+    pub(crate) metrics: Arc<Metrics>,
+    /// Test-only slow-shard injection: (shard index, per-layer delay).
+    pub(crate) slow_shard: Option<(usize, std::time::Duration)>,
+}
+
+/// One OS thread per pipeline microbatch group, each owning its own
+/// runtime-bound [`Backbone`] and its group's KV caches.  Threads are
+/// joined on [`ShardPool::shutdown`] / `Drop` — no leaked OS threads
+/// across engines or tests.
+pub(crate) struct ShardPool {
+    pub(crate) handles: Vec<ShardHandle>,
+    pub(crate) events: Receiver<ShardEvent>,
+    pub(crate) groups: Vec<(usize, usize)>,
+}
+
+impl ShardPool {
+    pub(crate) fn spawn(spec: PoolSpec) -> Result<ShardPool> {
+        anyhow::ensure!(!spec.groups.is_empty(), "empty shard partition");
+        let (event_tx, events) = channel::<ShardEvent>();
+        let mut handles = Vec::with_capacity(spec.groups.len());
+        for (idx, &(lane0, lanes)) in spec.groups.iter().enumerate() {
+            let (tx, rx) = channel::<ShardCmd>();
+            let event_tx = event_tx.clone();
+            let arts = spec.arts.clone();
+            let cfg = spec.cfg.clone();
+            let placement = spec.placement.clone();
+            let (alltoall, workers) = (spec.alltoall, spec.workers);
+            let metrics = spec.metrics.clone();
+            let slow = spec
+                .slow_shard
+                .and_then(|(s, d)| (s == idx).then_some(d));
+            let join = std::thread::Builder::new()
+                .name(format!("dsmoe-shard-{idx}"))
+                .spawn(move || {
+                    shard_main(
+                        idx, lane0, lanes, arts, cfg, placement, alltoall,
+                        workers, metrics, slow, rx, event_tx,
+                    )
+                })
+                .context("spawning leader shard")?;
+            handles.push(ShardHandle { tx: Some(tx), join: Some(join) });
+        }
+        Ok(ShardPool { handles, events, groups: spec.groups })
+    }
+
+    pub(crate) fn send(&self, shard: usize, cmd: ShardCmd) -> Result<()> {
+        self.handles[shard]
+            .tx
+            .as_ref()
+            .with_context(|| format!("leader shard {shard} shut down"))?
+            .send(cmd)
+            .map_err(|_| anyhow::anyhow!("leader shard {shard} gone"))
+    }
+
+    /// Await shard `shard`'s `Ack` (cache surgery is strictly
+    /// request/reply per shard, so nothing else can be in flight).
+    pub(crate) fn expect_ack(&self, shard: usize) -> Result<()> {
+        match self.events.recv() {
+            Ok(ShardEvent::Ack { shard: s }) if s == shard => Ok(()),
+            Ok(ShardEvent::Err { shard: s, msg }) => {
+                anyhow::bail!("leader shard {s}: {msg}")
+            }
+            Ok(_) => anyhow::bail!(
+                "unexpected shard event while awaiting ack from shard \
+                 {shard}"
+            ),
+            Err(_) => anyhow::bail!("leader shards disconnected"),
+        }
+    }
+
+    pub(crate) fn expect_lanes(
+        &self,
+        shard: usize,
+    ) -> Result<Vec<LaneWrite>> {
+        match self.events.recv() {
+            Ok(ShardEvent::Lanes { shard: s, writes }) if s == shard => {
+                Ok(writes)
+            }
+            Ok(ShardEvent::Err { shard: s, msg }) => {
+                anyhow::bail!("leader shard {s}: {msg}")
+            }
+            Ok(_) => anyhow::bail!(
+                "unexpected shard event while awaiting lanes from shard \
+                 {shard}"
+            ),
+            Err(_) => anyhow::bail!("leader shards disconnected"),
+        }
+    }
+
+    pub(crate) fn expect_caches(
+        &self,
+        shard: usize,
+    ) -> Result<Vec<(HostTensor, HostTensor)>> {
+        match self.events.recv() {
+            Ok(ShardEvent::Caches { shard: s, layers }) if s == shard => {
+                Ok(layers)
+            }
+            Ok(ShardEvent::Err { shard: s, msg }) => {
+                anyhow::bail!("leader shard {s}: {msg}")
+            }
+            Ok(_) => anyhow::bail!(
+                "unexpected shard event while awaiting caches from shard \
+                 {shard}"
+            ),
+            Err(_) => anyhow::bail!("leader shards disconnected"),
+        }
+    }
+
+    /// Close every shard's command channel and join the threads.  The
+    /// explicit `Shutdown` is the clean exit for idle shards; *dropping*
+    /// the senders is what unblocks a shard interrupted mid-forward (its
+    /// next `recv` disconnects instead of waiting forever), so the joins
+    /// below can never deadlock.
+    pub(crate) fn shutdown(&mut self) {
+        for h in &mut self.handles {
+            if let Some(tx) = h.tx.take() {
+                let _ = tx.send(ShardCmd::Shutdown);
+            }
+        }
+        for h in &mut self.handles {
+            if let Some(j) = h.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn shard_main(
+    idx: usize,
+    lane0: usize,
+    lanes: usize,
+    arts: SharedArtifacts,
+    cfg: ModelConfig,
+    placement: Placement,
+    alltoall: AllToAllKind,
+    workers: usize,
+    metrics: Arc<Metrics>,
+    slow: Option<std::time::Duration>,
+    rx: Receiver<ShardCmd>,
+    tx: Sender<ShardEvent>,
+) {
+    let n_layers = cfg.n_layers;
+    let lane_elems = cfg.n_heads * cfg.max_seq * cfg.head_dim();
+    let mut bb =
+        match Backbone::new(arts, cfg, placement, alltoall, workers, metrics)
+        {
+            Ok(b) => b,
+            Err(e) => {
+                let _ = tx.send(ShardEvent::Err {
+                    shard: idx,
+                    msg: format!("backbone init: {e:#}"),
+                });
+                return;
+            }
+        };
+    let mut caches: Option<LaneGroupCaches> = None;
+    let mut scratch = MoeScratch::default();
+    let mut seq = 0u64;
+
+    // Error handling: every fallible command reports through an Err event
+    // and the shard keeps serving — fatal decisions belong to the engine.
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            ShardCmd::Shutdown => break,
+            ShardCmd::SetMetrics(m) => bb.metrics = m,
+            ShardCmd::Prefill { tokens, lens } => {
+                let r = shard_prefill(
+                    &mut bb, idx, lane0, lanes, &tokens, &lens, &mut caches,
+                    &mut scratch, &rx, &tx, &mut seq, slow,
+                );
+                let _ = match r {
+                    Ok(rows) => {
+                        tx.send(ShardEvent::PrefillDone { shard: idx, rows })
+                    }
+                    Err(e) => tx.send(ShardEvent::Err {
+                        shard: idx,
+                        msg: format!("{e:#}"),
+                    }),
+                };
+            }
+            ShardCmd::Decode { tokens, pos, mask } => {
+                let r = shard_decode(
+                    &mut bb, idx, lanes, &tokens, &pos, mask.as_deref(),
+                    &mut caches, &mut scratch, &rx, &tx, &mut seq, slow,
+                );
+                let _ = match r {
+                    Ok(rows) => {
+                        tx.send(ShardEvent::DecodeDone { shard: idx, rows })
+                    }
+                    Err(e) => tx.send(ShardEvent::Err {
+                        shard: idx,
+                        msg: format!("{e:#}"),
+                    }),
+                };
+            }
+            ShardCmd::ReadLanes { lanes: which } => {
+                let r =
+                    read_lanes(&mut caches, &which, n_layers, lane_elems);
+                let _ = match r {
+                    Ok(writes) => {
+                        tx.send(ShardEvent::Lanes { shard: idx, writes })
+                    }
+                    Err(e) => tx.send(ShardEvent::Err {
+                        shard: idx,
+                        msg: format!("{e:#}"),
+                    }),
+                };
+            }
+            ShardCmd::WriteLanes { writes } => {
+                let r = write_lanes(&mut caches, &writes, lane_elems);
+                let _ = match r {
+                    Ok(()) => tx.send(ShardEvent::Ack { shard: idx }),
+                    Err(e) => tx.send(ShardEvent::Err {
+                        shard: idx,
+                        msg: format!("{e:#}"),
+                    }),
+                };
+            }
+            ShardCmd::TakeCaches => {
+                let r = take_caches(&mut caches, n_layers);
+                let _ = match r {
+                    Ok(layers) => {
+                        tx.send(ShardEvent::Caches { shard: idx, layers })
+                    }
+                    Err(e) => tx.send(ShardEvent::Err {
+                        shard: idx,
+                        msg: format!("{e:#}"),
+                    }),
+                };
+            }
+            ShardCmd::InstallCaches { layers } => {
+                let r = install_caches(
+                    &mut caches, lane0, lanes, n_layers, layers,
+                );
+                let _ = match r {
+                    Ok(()) => tx.send(ShardEvent::Ack { shard: idx }),
+                    Err(e) => tx.send(ShardEvent::Err {
+                        shard: idx,
+                        msg: format!("{e:#}"),
+                    }),
+                };
+            }
+            ShardCmd::MoeReplies { .. } => {
+                let _ = tx.send(ShardEvent::Err {
+                    shard: idx,
+                    msg: "expert replies with no exchange in flight"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Pull per-layer host copies of the given in-group lanes out of the
+/// shard's cache group (regroup source reads).
+fn read_lanes(
+    caches: &mut Option<LaneGroupCaches>,
+    which: &[usize],
+    n_layers: usize,
+    lane_elems: usize,
+) -> Result<Vec<LaneWrite>> {
+    let g = caches.as_mut().context("shard has no caches")?;
+    let mut out = Vec::with_capacity(n_layers * which.len());
+    for layer in 0..n_layers {
+        for &l in which {
+            let k = {
+                let hk = g.host_k(layer)?.as_f32()?;
+                hk[l * lane_elems..(l + 1) * lane_elems].to_vec()
+            };
+            let v = {
+                let hv = g.host_v(layer)?.as_f32()?;
+                hv[l * lane_elems..(l + 1) * lane_elems].to_vec()
+            };
+            out.push(LaneWrite { layer, lane: l, k, v });
+        }
+    }
+    Ok(out)
+}
+
+/// Write per-lane KV data through the host mirrors and re-upload the
+/// touched layers (admission splices, regroup destinations).
+fn write_lanes(
+    caches: &mut Option<LaneGroupCaches>,
+    writes: &[LaneWrite],
+    lane_elems: usize,
+) -> Result<()> {
+    let g = caches.as_mut().context("shard has no caches")?;
+    let mut touched: Vec<usize> = writes.iter().map(|w| w.layer).collect();
+    for w in writes {
+        let dk = g.host_k(w.layer)?.as_f32_mut()?;
+        copy_lane(dk, w.lane, &w.k, 0, lane_elems);
+        let dv = g.host_v(w.layer)?.as_f32_mut()?;
+        copy_lane(dv, w.lane, &w.v, 0, lane_elems);
+    }
+    touched.sort_unstable();
+    touched.dedup();
+    for layer in touched {
+        g.push_layer(layer)?;
+    }
+    Ok(())
+}
+
+/// Hand the whole cache group back as host tensors (cache migration to
+/// the leader); the shard keeps nothing.
+fn take_caches(
+    caches: &mut Option<LaneGroupCaches>,
+    n_layers: usize,
+) -> Result<Vec<(HostTensor, HostTensor)>> {
+    let mut g = caches.take().context("shard has no caches")?;
+    let mut layers = Vec::with_capacity(n_layers);
+    for layer in 0..n_layers {
+        // Move the mirrors out instead of cloning — `g` is dropped at
+        // the end of this call.
+        layers.push(g.take_host(layer)?);
+    }
+    Ok(layers)
+}
+
+/// Install a cache group from host tensors (cache migration from the
+/// leader).
+fn install_caches(
+    caches: &mut Option<LaneGroupCaches>,
+    lane0: usize,
+    lanes: usize,
+    n_layers: usize,
+    layers: Vec<(HostTensor, HostTensor)>,
+) -> Result<()> {
+    anyhow::ensure!(
+        layers.len() == n_layers,
+        "cache install: {} layers for a {n_layers}-layer model",
+        layers.len()
+    );
+    let mut g = LaneGroupCaches::new(lane0, lanes, n_layers);
+    for (k, v) in layers {
+        g.push_host(k, v)?;
+    }
+    *caches = Some(g);
+    Ok(())
+}
+
+/// FFN sublayer inside a shard: dense layers complete locally; MoE layers
+/// hand the prepared exchange to the orchestrator and block until the
+/// collected replies come back (that wait is the shard's exposed
+/// `shard_idle`).
+#[allow(clippy::too_many_arguments)]
+fn shard_ffn(
+    bb: &mut Backbone,
+    idx: usize,
+    layer: usize,
+    h: xla::Literal,
+    mask: Option<&[bool]>,
+    scratch: &mut MoeScratch,
+    rx: &Receiver<ShardCmd>,
+    tx: &Sender<ShardEvent>,
+    seq: &mut u64,
+    idle: &mut std::time::Duration,
+) -> Result<xla::Literal> {
+    match bb.ffn_prepare(layer, h, mask, scratch)? {
+        Prepared::Dense { out, .. } => Ok(out),
+        Prepared::Moe(p) => {
+            let PreparedMoe {
+                shape,
+                routing,
+                batches,
+                residual,
+                out_data,
+                worker_experts,
+                dispatch_elapsed,
+                ..
+            } = *p;
+            *seq += 1;
+            tx.send(ShardEvent::MoeDispatch {
+                shard: idx,
+                seq: *seq,
+                layer,
+                batches,
+                assignments: routing.assignments().to_vec(),
+            })
+            .map_err(|_| anyhow::anyhow!("orchestrator gone"))?;
+            let t = std::time::Instant::now();
+            let results = match rx.recv() {
+                Ok(ShardCmd::MoeReplies { seq: s, results }) => {
+                    anyhow::ensure!(
+                        s == *seq,
+                        "expert replies for exchange {s} while waiting on \
+                         {}",
+                        *seq
+                    );
+                    results
+                }
+                Ok(_) => anyhow::bail!(
+                    "unexpected shard command while awaiting expert replies"
+                ),
+                Err(_) => {
+                    anyhow::bail!("orchestrator channel closed mid-exchange")
+                }
+            };
+            let wait = t.elapsed();
+            *idle += wait;
+            bb.metrics.observe("shard_idle", wait);
+            let out = bb.moe_combine(
+                &shape,
+                &routing,
+                residual.as_deref(),
+                out_data,
+                &results,
+                &mut scratch.combine,
+            )?;
+            scratch.worker_experts = worker_experts;
+            bb.metrics.observe("moe_layer", dispatch_elapsed + wait);
+            Ok(out)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn shard_prefill(
+    bb: &mut Backbone,
+    idx: usize,
+    lane0: usize,
+    lanes: usize,
+    tokens: &[i32],
+    lens: &[usize],
+    caches: &mut Option<LaneGroupCaches>,
+    scratch: &mut MoeScratch,
+    rx: &Receiver<ShardCmd>,
+    tx: &Sender<ShardEvent>,
+    seq: &mut u64,
+    slow: Option<std::time::Duration>,
+) -> Result<Vec<Vec<f32>>> {
+    let t_task = std::time::Instant::now();
+    let mut idle = std::time::Duration::ZERO;
+    let n_layers = bb.cfg.n_layers;
+    let mut group = LaneGroupCaches::new(lane0, lanes, n_layers);
+    let mut h = bb.embed_prefill(tokens, lanes)?;
+    for layer in 0..n_layers {
+        if let Some(d) = slow {
+            std::thread::sleep(d);
+        }
+        let (h2, k, v) = bb.attn_prefill(layer, h, lanes)?;
+        group.push_kv(k, v);
+        // Legacy full prefill drives every lane: no mask.
+        h = shard_ffn(
+            bb, idx, layer, h2, None, scratch, rx, tx, seq, &mut idle,
+        )?;
+    }
+    let rows = bb.lm_head_last(&h, lens)?;
+    *caches = Some(group);
+    // Busy compute only: the concurrent-dense-backbone time this shard
+    // actually contributed (its waits are in shard_idle).
+    bb.metrics
+        .observe("leader_par", t_task.elapsed().saturating_sub(idle));
+    Ok(rows)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn shard_decode(
+    bb: &mut Backbone,
+    idx: usize,
+    lanes: usize,
+    tokens: &[i32],
+    pos: &[i32],
+    mask: Option<&[bool]>,
+    caches: &mut Option<LaneGroupCaches>,
+    scratch: &mut MoeScratch,
+    rx: &Receiver<ShardCmd>,
+    tx: &Sender<ShardEvent>,
+    seq: &mut u64,
+    slow: Option<std::time::Duration>,
+) -> Result<Vec<Vec<f32>>> {
+    let t_task = std::time::Instant::now();
+    let mut idle = std::time::Duration::ZERO;
+    let n_layers = bb.cfg.n_layers;
+    let m = bb.cfg.d_model;
+    let group = caches
+        .as_mut()
+        .context("decode before the shard's caches were installed")?;
+    let pos_lit = HostTensor::i32(&[lanes], pos.to_vec()).to_literal()?;
+    let mut h = bb.embed_decode(tokens, &pos_lit, lanes)?;
+    for layer in 0..n_layers {
+        if let Some(d) = slow {
+            std::thread::sleep(d);
+        }
+        let (h2, kc, vc) = bb.attn_decode(
+            layer,
+            h,
+            &pos_lit,
+            lanes,
+            &group.k[layer],
+            &group.v[layer],
+        )?;
+        group.k[layer] = kc;
+        group.v[layer] = vc;
+        // The decode write staled this layer's host mirror.
+        group.invalidate(layer);
+        h = shard_ffn(
+            bb, idx, layer, h2, mask, scratch, rx, tx, seq, &mut idle,
+        )?;
+    }
+    let flat = h.reshape(&[lanes as i64, m as i64])?;
+    let rows = bb.lm_head_rows(&flat, lanes)?;
+    bb.metrics
+        .observe("leader_par", t_task.elapsed().saturating_sub(idle));
+    Ok(rows)
+}

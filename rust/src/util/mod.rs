@@ -9,26 +9,62 @@ pub mod sampling;
 pub mod stats;
 pub mod table;
 
-/// Parse a usize env toggle with a default (unset or malformed →
-/// `default`).  The single parser behind `DSMOE_PIPE_DEPTH` /
-/// `DSMOE_REGROUP_SKEW` so every reader agrees on the semantics.
-pub fn env_usize(name: &str, default: usize) -> usize {
-    std::env::var(name)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+/// Parse a positive-integer env toggle with a defined fallback: unset →
+/// `default` (silently); set to `0`, a negative number, or garbage →
+/// warn on stderr (each time the variable is read) and fall back to
+/// `default`.  The single parser behind
+/// `DSMOE_PIPE_DEPTH` (fallback 2), `DSMOE_REGROUP_SKEW` (2) and
+/// `DSMOE_LEADER_THREADS` (1), so every reader agrees on the semantics —
+/// a depth of 0 is not "no pipeline", it is a typo.
+pub fn env_pos_usize(name: &str, default: usize) -> usize {
+    let Some(raw) = std::env::var_os(name) else {
+        return default;
+    };
+    let s = raw.to_string_lossy();
+    match s.trim().parse::<i64>() {
+        Ok(n) if n >= 1 => n as usize,
+        _ => {
+            eprintln!(
+                "[config] {name}={s:?} is not a positive integer; \
+                 falling back to {default}"
+            );
+            default
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::env_pos_usize;
+
+    // Each test uses its own variable name: `cargo test` runs tests in
+    // parallel and the process environment is shared.
+
     #[test]
-    fn env_usize_parses_with_default() {
-        std::env::remove_var("DSMOE_TEST_ENV_USIZE");
-        assert_eq!(super::env_usize("DSMOE_TEST_ENV_USIZE", 7), 7);
-        std::env::set_var("DSMOE_TEST_ENV_USIZE", "3");
-        assert_eq!(super::env_usize("DSMOE_TEST_ENV_USIZE", 7), 3);
-        std::env::set_var("DSMOE_TEST_ENV_USIZE", "bogus");
-        assert_eq!(super::env_usize("DSMOE_TEST_ENV_USIZE", 7), 7);
-        std::env::remove_var("DSMOE_TEST_ENV_USIZE");
+    fn env_pos_usize_unset_is_default() {
+        std::env::remove_var("DSMOE_TEST_ENV_POS_UNSET");
+        assert_eq!(env_pos_usize("DSMOE_TEST_ENV_POS_UNSET", 7), 7);
+    }
+
+    #[test]
+    fn env_pos_usize_parses_valid_values() {
+        std::env::set_var("DSMOE_TEST_ENV_POS_OK", "3");
+        assert_eq!(env_pos_usize("DSMOE_TEST_ENV_POS_OK", 7), 3);
+        std::env::set_var("DSMOE_TEST_ENV_POS_OK", " 5 "); // tolerate spaces
+        assert_eq!(env_pos_usize("DSMOE_TEST_ENV_POS_OK", 7), 5);
+        std::env::remove_var("DSMOE_TEST_ENV_POS_OK");
+    }
+
+    #[test]
+    fn env_pos_usize_zero_negative_garbage_fall_back() {
+        for bad in ["0", "-3", "bogus", "", "2.5"] {
+            std::env::set_var("DSMOE_TEST_ENV_POS_BAD", bad);
+            assert_eq!(
+                env_pos_usize("DSMOE_TEST_ENV_POS_BAD", 2),
+                2,
+                "value {bad:?} must fall back"
+            );
+        }
+        std::env::remove_var("DSMOE_TEST_ENV_POS_BAD");
     }
 }

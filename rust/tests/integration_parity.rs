@@ -301,6 +301,7 @@ fn ep_scheduler_token_parity(
     serial: bool,
     pipeline: bool,
     depth: usize,
+    leader_threads: usize,
 ) {
     let Some(m) = manifest() else { return };
     let batch = 8usize;
@@ -322,6 +323,9 @@ fn ep_scheduler_token_parity(
     manual.set_serial_moe(serial);
     manual.set_pipeline(pipeline);
     manual.set_pipe_depth(depth);
+    // The reference always runs the single-threaded leader (pinned, so an
+    // ambient DSMOE_LEADER_THREADS cannot collapse the comparison).
+    manual.set_leader_threads(1);
     let mut tokens = vec![0i32; batch * smax];
     let lens = vec![plen; batch];
     for b in 0..batch {
@@ -352,14 +356,17 @@ fn ep_scheduler_token_parity(
     }
 
     // Scheduler-driven run over the same prompts (greedy: temperature 0).
+    // The fixed-lane reference above always runs the single-threaded
+    // leader, so a `leader_threads > 1` scheduler run also pins
+    // sharded-vs-single parity under admission + retirement + regroup.
     let mut ep =
         EpEngine::new(&m, model, workers, AllToAllKind::Hierarchical, batch)
             .unwrap();
     ep.set_serial_moe(serial);
     ep.set_pipeline(pipeline);
-    // Scheduler::new applies ServingConfig::pipe_depth through
-    // ForwardModel::configure — the config field is the depth control on
-    // the scheduler path.
+    // Scheduler::new applies ServingConfig::pipe_depth and
+    // ::leader_threads through ForwardModel::configure — the config
+    // fields are the controls on the scheduler path.
     let mut sched = Scheduler::new(
         ep,
         ServingConfig {
@@ -368,6 +375,7 @@ fn ep_scheduler_token_parity(
             max_new_tokens: max_new,
             batch_timeout: std::time::Duration::from_millis(1),
             pipe_depth: depth,
+            leader_threads,
             ..Default::default()
         },
     );
@@ -407,17 +415,17 @@ fn ep_scheduler_token_parity(
 
 #[test]
 fn scheduler_token_parity_serial() {
-    ep_scheduler_token_parity("moe-s-8", true, false, 2);
+    ep_scheduler_token_parity("moe-s-8", true, false, 2, 1);
 }
 
 #[test]
 fn scheduler_token_parity_overlap() {
-    ep_scheduler_token_parity("moe-s-8", false, false, 2);
+    ep_scheduler_token_parity("moe-s-8", false, false, 2, 1);
 }
 
 #[test]
 fn scheduler_token_parity_pipelined() {
-    ep_scheduler_token_parity("moe-s-8", false, true, 2);
+    ep_scheduler_token_parity("moe-s-8", false, true, 2, 1);
 }
 
 #[test]
@@ -425,17 +433,32 @@ fn scheduler_token_parity_pipelined_depth3() {
     // Depth 3 runs uneven (3/3/2) lane groups plus interleaved admission
     // prefills behind the decode ring — tokens must still match the
     // fixed-lane driver exactly.
-    ep_scheduler_token_parity("moe-s-8", false, true, 3);
+    ep_scheduler_token_parity("moe-s-8", false, true, 3, 1);
 }
 
 #[test]
 fn scheduler_token_parity_pipelined_depth4() {
-    ep_scheduler_token_parity("moe-s-8", false, true, 4);
+    ep_scheduler_token_parity("moe-s-8", false, true, 4, 1);
 }
 
 #[test]
 fn scheduler_token_parity_prmoe_pipelined() {
-    ep_scheduler_token_parity("prmoe-s", false, true, 2);
+    ep_scheduler_token_parity("prmoe-s", false, true, 2, 1);
+}
+
+#[test]
+fn scheduler_token_parity_leader_shards() {
+    // Multi-threaded leader under the full scheduler loop: interleaved
+    // admissions behind sharded decode steps, retirement, dead-lane
+    // masking, and skew-triggered regrouping (through the shard cache
+    // protocol) — tokens must match the single-threaded fixed-lane
+    // driver exactly.
+    ep_scheduler_token_parity("moe-s-8", false, true, 2, 2);
+}
+
+#[test]
+fn scheduler_token_parity_leader_shards_depth3() {
+    ep_scheduler_token_parity("moe-s-8", false, true, 3, 3);
 }
 
 #[test]
@@ -465,6 +488,171 @@ fn pipelined_bitwise_identical_prmoe_residual() {
 #[test]
 fn pipelined_bitwise_identical_prmoe_depth3() {
     bitwise_three_way("prmoe-s", 4, 3);
+}
+
+/// Parallel leader shards must be **bit-identical** to the
+/// single-threaded leader at the same ring depth: both execute the same
+/// `Backbone` compute over the same per-group program shapes, and the
+/// orchestrator preserves the ring's dispatch/finish order over the
+/// tagged exchanges.  Also toggles `leader_threads` mid-decode in both
+/// directions, which forces the KV cache groups to migrate
+/// shards → leader → shards (host-side) without perturbing a single bit.
+fn bitwise_leader_shards(model: &str, workers: usize, depth: usize) {
+    let Some(m) = manifest() else { return };
+    let batch = 8usize;
+    let cfg = m.model(model).unwrap().config.clone();
+    let smax = cfg.max_seq;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+
+    let mk = |threads: usize| {
+        let mut e =
+            EpEngine::new(&m, model, workers, AllToAllKind::Hierarchical, batch)
+                .unwrap();
+        e.set_serial_moe(false);
+        e.set_pipeline(true);
+        e.set_pipe_depth(depth);
+        e.set_leader_threads(threads);
+        e
+    };
+    let mut single = mk(1);
+    let mut sharded = mk(depth);
+    if single.microbatches() < 2 {
+        eprintln!(
+            "  note: {model}: no ring at depth {depth} on this artifact \
+             set; leader-shard test skipped"
+        );
+        return;
+    }
+    assert_eq!(sharded.leader_shards(), sharded.microbatches());
+    assert_eq!(single.leader_shards(), 1);
+
+    let rs = single.forward_prefill(&tokens, &lens).unwrap();
+    let rp = sharded.forward_prefill(&tokens, &lens).unwrap();
+    assert_eq!(rp, rs, "{model}: sharded prefill != single-threaded");
+
+    let mut tok: Vec<i32> = rs.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    for step in 0..3 {
+        let ds = single.forward_decode(&tok, &pos).unwrap();
+        let dp = sharded.forward_decode(&tok, &pos).unwrap();
+        assert_eq!(dp, ds, "{model}: sharded decode step {step}");
+        tok = ds.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    // The shard timers are populated and the single-thread ring waits are
+    // not (the exposed wait moved into shard_idle).
+    assert!(sharded.metrics.samples("leader_par") > 0);
+    assert!(sharded.metrics.samples("shard_idle") > 0);
+    assert_eq!(sharded.metrics.samples("pipeline_bubble"), 0);
+    assert_eq!(sharded.metrics.samples("expert_wait"), 0);
+    assert!(single.metrics.samples("shard_idle") == 0);
+
+    // Threads off mid-decode: the shard-owned caches migrate back to the
+    // leader and the single-threaded ring continues bit-identically.
+    sharded.set_leader_threads(1);
+    for step in 0..2 {
+        let ds = single.forward_decode(&tok, &pos).unwrap();
+        let dp = sharded.forward_decode(&tok, &pos).unwrap();
+        assert_eq!(dp, ds, "{model}: post-migration decode step {step}");
+        tok = ds.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    assert!(sharded.metrics.samples("pipeline_bubble") > 0);
+
+    // And back on: leader-owned caches ship into a fresh shard pool.
+    sharded.set_leader_threads(depth);
+    let ds = single.forward_decode(&tok, &pos).unwrap();
+    let dp = sharded.forward_decode(&tok, &pos).unwrap();
+    assert_eq!(dp, ds, "{model}: re-sharded decode");
+
+    // The tag-keyed reply stash drains fully between forwards.
+    assert_eq!(sharded.fabric_stash_depth(), 0);
+}
+
+#[test]
+fn leader_shards_bitwise_identical_depth2() {
+    bitwise_leader_shards("moe-s-8", 4, 2);
+}
+
+#[test]
+fn leader_shards_bitwise_identical_depth3() {
+    // Uneven 3/3/2 groups: three shard threads, three program shapes.
+    bitwise_leader_shards("moe-s-8", 4, 3);
+}
+
+#[test]
+fn leader_shards_bitwise_identical_depth4() {
+    bitwise_leader_shards("moe-s-8", 4, 4);
+}
+
+#[test]
+fn leader_shards_bitwise_identical_prmoe() {
+    // PR-MoE: shards also run dense layers and the residual branch.
+    bitwise_leader_shards("prmoe-s", 4, 2);
+}
+
+#[test]
+fn leader_shards_inert_on_single_group_paths() {
+    // Serial and no-pipeline paths have one microbatch stream: a
+    // leader_threads request must resolve to 1 and change nothing.
+    let Some(m) = manifest() else { return };
+    let batch = 4usize;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let smax = m.model("moe-s-8").unwrap().config.max_seq;
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+    for (serial, pipeline) in [(true, false), (false, false)] {
+        let mk = |threads: usize| {
+            let mut e = EpEngine::new(
+                &m,
+                "moe-s-8",
+                2,
+                AllToAllKind::Hierarchical,
+                batch,
+            )
+            .unwrap();
+            e.set_serial_moe(serial);
+            e.set_pipeline(pipeline);
+            e.set_leader_threads(threads);
+            e
+        };
+        let mut reference = mk(1);
+        let mut threaded = mk(4);
+        assert_eq!(threaded.leader_shards(), 1);
+        let a = reference.forward_prefill(&tokens, &lens).unwrap();
+        let b = threaded.forward_prefill(&tokens, &lens).unwrap();
+        assert_eq!(a, b, "serial={serial} pipeline={pipeline}");
+        let tok: Vec<i32> = a.iter().map(|r| argmax(r) as i32).collect();
+        let pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+        let da = reference.forward_decode(&tok, &pos).unwrap();
+        let db = threaded.forward_decode(&tok, &pos).unwrap();
+        assert_eq!(da, db, "serial={serial} pipeline={pipeline} decode");
+        assert_eq!(threaded.metrics.samples("leader_par"), 0);
+    }
 }
 
 #[test]

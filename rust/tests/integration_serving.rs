@@ -220,9 +220,10 @@ fn ep_scheduler_continuous_batching_smoke() {
 /// next decode step (a) rebalances live lanes across the groups, (b) keeps
 /// the surviving requests' logits **bit-identical** to an engine that
 /// never regroups (lane migration is invisible to the math), and (c)
-/// still sends no dead-lane expert traffic.
-#[test]
-fn ep_regroup_rebalances_skewed_retirement() {
+/// still sends no dead-lane expert traffic.  With `leader_threads >= 2`
+/// the same invariants hold through the shard cache protocol (the lanes
+/// move between shard-owned groups via ReadLanes/WriteLanes).
+fn regroup_rebalances_skewed_retirement(leader_threads: usize) {
     let Some(m) = manifest() else { return };
     let c = corpus();
     let batch = 8usize;
@@ -240,6 +241,7 @@ fn ep_regroup_rebalances_skewed_retirement() {
         // DSMOE_PIPE_DEPTH / DSMOE_REGROUP_SKEW env vars cannot skew the
         // hard-coded two-group expectations below.
         ep.set_pipe_depth(2);
+        ep.set_leader_threads(leader_threads);
         if regroup {
             ep.set_regroup_skew(2);
         } else {
@@ -271,21 +273,36 @@ fn ep_regroup_rebalances_skewed_retirement() {
     // Balanced admission fills both groups evenly.
     assert_eq!(ep.group_live_counts(), vec![4, 4]);
 
-    // Retire every lane of group 0 (external ids == physical before any
-    // regroup), skewing occupancy to 0 vs 4.
-    let mut live: Vec<usize> = Vec::new();
     let mut tokens = vec![0i32; batch];
     let mut pos = vec![0i32; batch];
     for (adm, ar) in admitted.iter().zip(&admitted_ref) {
         assert_eq!(adm.lane, ar.lane);
         assert_eq!(adm.logits, ar.logits, "admission logits differ");
+        tokens[adm.lane] = argmax(&adm.logits) as i32;
+        pos[adm.lane] = plen as i32;
+    }
+    // One full-occupancy decode step first: under a multi-threaded
+    // leader this migrates the cache groups into the shard pool, so the
+    // regroup below exercises the shard-owned-cache path.
+    {
+        let rows = ep.decode_step(&tokens, &pos).unwrap();
+        let rows_ref = reference.decode_step(&tokens, &pos).unwrap();
+        for lane in 0..batch {
+            assert_eq!(rows[lane], rows_ref[lane], "pre-release decode");
+            tokens[lane] = argmax(&rows[lane]) as i32;
+            pos[lane] += 1;
+        }
+    }
+
+    // Retire every lane of group 0 (external ids == physical before any
+    // regroup), skewing occupancy to 0 vs 4.
+    let mut live: Vec<usize> = Vec::new();
+    for adm in &admitted {
         if adm.lane < batch / 2 {
             ep.release(adm.lane);
             reference.release(adm.lane);
         } else {
             live.push(adm.lane);
-            tokens[adm.lane] = argmax(&adm.logits) as i32;
-            pos[adm.lane] = plen as i32;
         }
     }
     assert_eq!(ep.group_live_counts(), vec![0, 4]);
@@ -330,6 +347,161 @@ fn ep_regroup_rebalances_skewed_retirement() {
              regroup",
             s.layer
         );
+    }
+}
+
+#[test]
+fn ep_regroup_rebalances_skewed_retirement() {
+    regroup_rebalances_skewed_retirement(1);
+}
+
+#[test]
+fn ep_regroup_rebalances_skewed_retirement_leader_shards() {
+    // The same regroup, with the cache groups owned by leader shards:
+    // the lane moves run over the ReadLanes/WriteLanes shard protocol.
+    regroup_rebalances_skewed_retirement(2);
+}
+
+/// Slow-shard injection: shard 0 sleeps before every layer, so it
+/// dispatches late and finishes last — shard completion leaves submission
+/// order — while the orchestrator still collects the tagged exchanges
+/// oldest-first and the logits stay bit-identical to the single-threaded
+/// leader.  One of the tier-1 tests `scripts/check.sh` runs by name.
+#[test]
+fn leader_shard_slow_shard_collects_oldest_first() {
+    let Some(m) = manifest() else { return };
+    let c = corpus();
+    let batch = 8usize;
+    let plen = 8usize;
+    let mk = |threads: usize| {
+        let mut ep = EpEngine::new(
+            &m,
+            "moe-s-8",
+            4,
+            AllToAllKind::Hierarchical,
+            batch,
+        )
+        .unwrap();
+        ep.set_serial_moe(false);
+        ep.set_pipeline(true);
+        ep.set_pipe_depth(2);
+        ep.set_leader_threads(threads);
+        ep
+    };
+    let mut single = mk(1);
+    let mut slow = mk(2);
+    if single.microbatches() < 2 {
+        eprintln!("  note: pipeline unavailable; slow-shard test skipped");
+        return;
+    }
+    // Shard 0 sleeps 2ms at every layer start: shard 1 overtakes it on
+    // every forward, deterministically.
+    slow.inject_slow_shard(0, std::time::Duration::from_millis(2));
+
+    let smax = single.cfg.max_seq;
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = c.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+    let rs = single.forward_prefill(&tokens, &lens).unwrap();
+    let rp = slow.forward_prefill(&tokens, &lens).unwrap();
+    assert_eq!(rp, rs, "slow-shard prefill diverged");
+
+    let mut tok: Vec<i32> = rs.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    for step in 0..2 {
+        let ds = single.forward_decode(&tok, &pos).unwrap();
+        let dp = slow.forward_decode(&tok, &pos).unwrap();
+        assert_eq!(dp, ds, "slow-shard decode step {step} diverged");
+        tok = ds.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    // Completion genuinely left submission order (shard 0 last)...
+    assert_eq!(
+        slow.last_shard_completions().to_vec(),
+        vec![1, 0],
+        "slow shard did not finish last"
+    );
+    assert!(
+        slow.metrics.counter("shard_completions_ooo") >= 1,
+        "out-of-order completion not observed"
+    );
+    // ...yet the exchange discipline held: no stale replies, no stash
+    // residue, bit-identical logits (asserted above).
+    assert_eq!(slow.fabric_stash_depth(), 0);
+}
+
+/// Fabric workers and leader shards are OS threads: dropping the engine
+/// must join them all — no `dsmoe-*` thread may outlive its engine
+/// (leaked threads accumulate across a test suite).  One of the tier-1
+/// tests `scripts/check.sh` runs by name.
+#[test]
+fn leader_shard_and_fabric_threads_join_on_drop() {
+    if !cfg!(target_os = "linux") {
+        return; // /proc-based thread enumeration
+    }
+    fn dsmoe_threads() -> usize {
+        let Ok(tasks) = std::fs::read_dir("/proc/self/task") else {
+            return 0;
+        };
+        tasks
+            .flatten()
+            .filter(|t| {
+                std::fs::read_to_string(t.path().join("comm"))
+                    .map(|c| c.trim_end().starts_with("dsmoe-"))
+                    .unwrap_or(false)
+            })
+            .count()
+    }
+    let Some(m) = manifest() else { return };
+    let c = corpus();
+    let before = dsmoe_threads();
+    {
+        let batch = 4usize;
+        let mut ep = EpEngine::new(
+            &m,
+            "moe-s-8",
+            2,
+            AllToAllKind::Hierarchical,
+            batch,
+        )
+        .unwrap();
+        ep.set_pipe_depth(2);
+        ep.set_leader_threads(2);
+        let smax = ep.cfg.max_seq;
+        let plen = 8usize;
+        let mut tokens = vec![0i32; batch * smax];
+        let lens = vec![plen; batch];
+        for b in 0..batch {
+            let p = c.prompt(b, plen);
+            tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+        }
+        // A forward spawns the shard pool (if the ring engaged): at
+        // minimum this engine's 2 fabric workers are alive now.
+        ep.forward_prefill(&tokens, &lens).unwrap();
+        assert!(dsmoe_threads() >= 2, "engine threads not running");
+        drop(ep);
+    }
+    // Drop joins synchronously, so *this* engine's threads are gone the
+    // moment it returns.  Other tests in this binary create their own
+    // engines concurrently, so poll until the count returns to the
+    // baseline instead of asserting an instant snapshot.
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(120);
+    loop {
+        let now = dsmoe_threads();
+        if now <= before {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "dsmoe threads leaked past engine drop: {now} > {before}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(100));
     }
 }
 

@@ -17,7 +17,16 @@ cargo test -q --test integration_serving ep_scheduler
 # for the same reason.
 cargo test -q --test integration_parity pipelined_bitwise_identical_moe_depth3
 cargo test -q --test integration_serving ep_regroup_rebalances_skewed_retirement
+# Parallel leader shards: sharded-vs-single bitwise parity, the slow-shard
+# oldest-first ordering invariant, and the thread-join-on-drop guard.
+cargo test -q --test integration_parity leader_shards_bitwise_identical
+cargo test -q --test integration_serving leader_shard
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
+
+# Bench smoke: a short arrival trace + the depth-2 leader-parallel pair
+# through the full stack; refreshes BENCH_e2e.json so every PR records a
+# perf point (no-ops without artifacts/, like the integration tests).
+cargo bench --bench e2e_serving -- --smoke
 
 echo "tier-1 gate: OK"
