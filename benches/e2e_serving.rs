@@ -38,12 +38,22 @@
 //! `leader_par` (per-shard busy compute, which now runs concurrently)
 //! and `shard_idle` (per-shard exposed reply wait) timers.
 //!
+//! Part 7 is the all-to-all schedule study: the same fixed-lane forwards
+//! under the flat dispatch (every worker exchanges directly with the
+//! leader) vs the §5.3 hierarchical schedule (one relay worker per node
+//! gathers its node-mates over intra-node peer links and answers with a
+//! single coalesced cross-node reply) — comparing forward latencies and
+//! the fabric's cross-node vs intra-node message/byte counters.  The
+//! paper's claim at testbed scale: cross-node messages per exchange drop
+//! from O(workers) to O(nodes), paid for with ~2x intra-node volume.
+//!
 //! Everything is also emitted to `BENCH_e2e.json` at the repo root so the
 //! perf trajectory is tracked across PRs.
 //!
 //! `--smoke` runs a minimal subset (one model, a short arrival trace, the
-//! depth-2 leader-parallel pair) and still writes `BENCH_e2e.json` —
-//! cheap enough for `scripts/check.sh`, so every PR records a perf point.
+//! depth-2 leader-parallel pair, the flat-vs-hierarchical all-to-all
+//! pair) and still writes `BENCH_e2e.json` — cheap enough for
+//! `scripts/check.sh`, so every PR records a perf point.
 
 use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
@@ -404,9 +414,143 @@ fn main() {
     lt.print();
     let _ = lt.save_csv("e2e_leader_parallel");
 
+    // --- all-to-all schedule: flat vs hierarchical dispatch --------------
+    let mut a2a_rows = Vec::new();
+    let mut at2 = Table::new(
+        "All-to-all schedule: flat vs hierarchical (live dispatch path)",
+        &["model", "schedule", "nodes", "prefill", "decode",
+          "cross msgs/xchg", "cross KiB", "intra msgs", "intra KiB"],
+    );
+    let a2a_models: &[(&str, usize)] = if smoke {
+        &[("moe-s-8", 4usize)]
+    } else {
+        &[("moe-s-8", 4usize), ("prmoe-s", 4)]
+    };
+    for &(model, workers) in a2a_models {
+        for hier in [false, true] {
+            let Some(row) =
+                alltoall_study(&manifest, &corpus, model, workers, hier)
+            else {
+                continue;
+            };
+            at2.row(&[
+                row.model.clone(),
+                row.schedule.to_string(),
+                (workers / row.node_size.max(1)).to_string(),
+                fmt_ns(row.prefill_ns as u64),
+                fmt_ns(row.decode_ns as u64),
+                f2(row.cross_msgs_per_exchange),
+                f1(row.cross_bytes as f64 / 1024.0),
+                row.intra_msgs.to_string(),
+                f1(row.intra_bytes as f64 / 1024.0),
+            ]);
+            a2a_rows.push(row);
+        }
+    }
+    at2.note("hierarchical routes each node's blocks through one relay \
+              worker: cross-node messages per exchange drop from \
+              2*workers to 2*nodes, paid for with intra-node relay hops \
+              (~2x the exchanged volume moves over intra-node links); \
+              outputs are bit-identical either way — the parity tests \
+              pin that");
+    at2.print();
+    let _ = at2.save_csv("e2e_alltoall");
+
     write_bench_json(
         &rows, &studies, &cb_rows, &depth_rows, &adm_rows, &lp_rows,
+        &a2a_rows,
     );
+}
+
+struct A2aRow {
+    model: String,
+    workers: usize,
+    schedule: &'static str,
+    node_size: usize,
+    prefill_ns: f64,
+    decode_ns: f64,
+    /// Leader<->worker messages over the measured forwards (both
+    /// directions), total and normalized per expert exchange.
+    cross_msgs: u64,
+    cross_msgs_per_exchange: f64,
+    cross_bytes: u64,
+    /// Relay<->node-mate hops (zero on the flat schedule).
+    intra_msgs: u64,
+    intra_bytes: u64,
+}
+
+/// Fixed-lane forwards under one all-to-all schedule (steady state,
+/// warmup excluded), reading the fabric's cross-/intra-node traffic
+/// deltas — the flat-vs-hierarchical comparison row.
+fn alltoall_study(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    model: &str,
+    workers: usize,
+    hier: bool,
+) -> Option<A2aRow> {
+    let batch = 8usize;
+    let mut ep = EpEngine::new(
+        manifest,
+        model,
+        workers,
+        AllToAllKind::Hierarchical,
+        batch,
+    )
+    .ok()?;
+    ep.set_serial_moe(false);
+    ep.set_pipeline(true);
+    // Two nodes of two workers — the smallest shape where the relay
+    // schedule differs from flat.
+    ep.set_node_size((workers / 2).max(1));
+    ep.set_a2a_hierarchical(hier);
+    let smax = ep.cfg.max_seq;
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+    let lens = vec![plen; batch];
+    let first = ep.forward_prefill(&tokens, &lens).ok()?;
+    let mut tok: Vec<i32> = first.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    ep.forward_decode(&tok, &pos).ok()?;
+    ep.metrics = std::sync::Arc::new(Metrics::new());
+    let t = ep.traffic();
+    let cross_m0 = t.cross_messages.load(Ordering::Relaxed);
+    let cross_b0 = t.cross_bytes.load(Ordering::Relaxed);
+    let intra_m0 = t.intra_messages.load(Ordering::Relaxed);
+    let intra_b0 = t.intra_bytes.load(Ordering::Relaxed);
+    for _ in 0..2 {
+        ep.forward_prefill(&tokens, &lens).ok()?;
+    }
+    for _ in 0..6 {
+        let out = ep.forward_decode(&tok, &pos).ok()?;
+        tok = out.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    // One expert exchange per `moe_layer` sample (one per microbatch per
+    // MoE layer), so this normalizes the cross-node count to the
+    // O(nodes)-vs-O(workers) per-exchange claim.
+    let exchanges = ep.metrics.samples("moe_layer").max(1);
+    let t = ep.traffic();
+    let cross_msgs = t.cross_messages.load(Ordering::Relaxed) - cross_m0;
+    Some(A2aRow {
+        model: model.to_string(),
+        workers,
+        schedule: if hier { "hierarchical" } else { "flat" },
+        node_size: ep.node_size(),
+        prefill_ns: ep.metrics.mean_ns("forward_prefill"),
+        decode_ns: ep.metrics.mean_ns("forward_decode"),
+        cross_msgs,
+        cross_msgs_per_exchange: cross_msgs as f64 / exchanges as f64,
+        cross_bytes: t.cross_bytes.load(Ordering::Relaxed) - cross_b0,
+        intra_msgs: t.intra_messages.load(Ordering::Relaxed) - intra_m0,
+        intra_bytes: t.intra_bytes.load(Ordering::Relaxed) - intra_b0,
+    })
 }
 
 struct LeaderParRow {
@@ -829,8 +973,10 @@ fn pipeline_study(
 
 /// Emit `BENCH_e2e.json` at the repo root: the serving sweep, the MoE
 /// pipeline study, the continuous-batching study, the ring-depth sweep,
-/// the admission-interleaving study, and the leader-parallel study, so
-/// future PRs have a machine-readable perf baseline.
+/// the admission-interleaving study, the leader-parallel study, and the
+/// all-to-all schedule study, so future PRs have a machine-readable perf
+/// baseline.
+#[allow(clippy::too_many_arguments)]
 fn write_bench_json(
     rows: &[ServingRow],
     studies: &[PipelineStudy],
@@ -838,6 +984,7 @@ fn write_bench_json(
     depth_rows: &[DepthRow],
     adm_rows: &[AdmissionRow],
     lp_rows: &[LeaderParRow],
+    a2a_rows: &[A2aRow],
 ) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"e2e_serving\",\n  \"serving\": [\n");
@@ -985,6 +1132,31 @@ fn write_bench_json(
             r.shard_idle_ns,
             r.exposed_wait_ns,
             if i + 1 == lp_rows.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ],\n  \"alltoall\": [\n");
+    for (i, r) in a2a_rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"model\": \"{}\", \"workers\": {}, \
+             \"schedule\": \"{}\", \"node_size\": {}, \"nodes\": {}, \
+             \"prefill_ns\": {:.0}, \"decode_ns\": {:.0}, \
+             \"cross_messages\": {}, \"cross_msgs_per_exchange\": {:.2}, \
+             \"cross_bytes\": {}, \"intra_messages\": {}, \
+             \"intra_bytes\": {}}}{}\n",
+            r.model,
+            r.workers,
+            r.schedule,
+            r.node_size,
+            r.workers / r.node_size.max(1),
+            r.prefill_ns,
+            r.decode_ns,
+            r.cross_msgs,
+            r.cross_msgs_per_exchange,
+            r.cross_bytes,
+            r.intra_msgs,
+            r.intra_bytes,
+            if i + 1 == a2a_rows.len() { "" } else { "," }
         );
     }
     s.push_str("  ]\n}\n");

@@ -53,7 +53,54 @@ pub struct Topology {
 
 impl Topology {
     pub fn flat(workers: usize) -> Self {
-        Topology { workers, node_size: workers.min(8).max(1), ts_degree: 1 }
+        Topology {
+            workers,
+            node_size: Self::node_size_from_env(workers),
+            ts_degree: 1,
+        }
+    }
+
+    /// The single source of the hierarchical node size, for the analytic
+    /// plans here, `Backbone::exchange_plan`'s accounting, and the fabric's
+    /// live hierarchical dispatch alike.  `DSMOE_NODE_SIZE` set to a
+    /// positive divisor of `workers` wins; unset derives the largest
+    /// divisor of `workers` not exceeding `min(workers, 8)` (the testbed
+    /// stand-in for an 8-GPU node, matching the old hard-coded default
+    /// whenever that divided the worker count); anything else — zero,
+    /// negative, garbage, larger than `workers`, or not dividing it —
+    /// warns on stderr and falls back to flat (node size 1), same contract
+    /// as `util::env_pos_usize`.
+    pub fn node_size_from_env(workers: usize) -> usize {
+        let raw = std::env::var("DSMOE_NODE_SIZE").ok();
+        Self::node_size_from(workers, raw.as_deref())
+    }
+
+    /// Env-free core of [`Topology::node_size_from_env`] (unit-testable
+    /// without racing on the shared process environment).
+    pub fn node_size_from(workers: usize, raw: Option<&str>) -> usize {
+        let workers = workers.max(1);
+        let default = || {
+            (1..=workers.min(8))
+                .rev()
+                .find(|g| workers % g == 0)
+                .unwrap_or(1)
+        };
+        let Some(s) = raw else { return default() };
+        match s.trim().parse::<i64>() {
+            Ok(g) if g >= 1 && (g as usize) <= workers
+                && workers % (g as usize) == 0 =>
+            {
+                g as usize
+            }
+            _ => {
+                eprintln!(
+                    "[config] DSMOE_NODE_SIZE={s:?} is not a positive \
+                     divisor of {workers} workers; falling back to flat \
+                     (node size 1)"
+                );
+                1
+            }
+        }
     }
 }
 
@@ -314,6 +361,37 @@ mod tests {
         let topo = Topology::flat(8);
         let p = plan(AllToAllKind::Naive, topo, &uniform_bytes(8, 0));
         assert!(p.messages.is_empty());
+    }
+
+    #[test]
+    fn node_size_default_is_largest_divisor_up_to_8() {
+        // Matches the old hard-coded `min(8)` wherever 8 divided the
+        // worker count…
+        assert_eq!(Topology::node_size_from(8, None), 8);
+        assert_eq!(Topology::node_size_from(16, None), 8);
+        assert_eq!(Topology::node_size_from(128, None), 8);
+        // …but never silently picks a non-dividing node size anymore.
+        assert_eq!(Topology::node_size_from(12, None), 6);
+        assert_eq!(Topology::node_size_from(7, None), 7);
+        assert_eq!(Topology::node_size_from(5, None), 5);
+        assert_eq!(Topology::node_size_from(9, None), 3);
+        assert_eq!(Topology::node_size_from(1, None), 1);
+    }
+
+    #[test]
+    fn node_size_env_override_validated() {
+        // Valid: positive divisor of the worker count.
+        assert_eq!(Topology::node_size_from(8, Some("2")), 2);
+        assert_eq!(Topology::node_size_from(8, Some(" 4 ")), 4);
+        assert_eq!(Topology::node_size_from(8, Some("8")), 8);
+        // Invalid or non-dividing: warn + fall back to flat (1).
+        for bad in ["0", "-2", "bogus", "", "2.5", "3", "16"] {
+            assert_eq!(
+                Topology::node_size_from(8, Some(bad)),
+                1,
+                "value {bad:?} must fall back to flat"
+            );
+        }
     }
 
     #[test]

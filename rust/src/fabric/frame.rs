@@ -1,0 +1,678 @@
+//! Length-prefixed frame codec for the worker protocol.
+//!
+//! The socket transport (and any future cross-process / cross-host fabric)
+//! carries every leader↔worker command and reply as one frame:
+//!
+//! ```text
+//! frame   := [u32 LE payload length][payload]
+//! payload := [u8 kind][body]
+//! tensor  := [u8 dtype (0=f32, 1=i32)][u8 ndim][u64 LE dims…][raw LE elems]
+//! experts := [u64 LE count][(u64 LE expert id, u64 LE rows)…]
+//! ```
+//!
+//! The offline build has no serde, so this is the whole wire format: every
+//! `Cmd` / [`Reply`] variant encodes, including the relay traffic of the
+//! hierarchical all-to-all, which is what makes "worker as a separate
+//! process" a process-launch detail rather than a protocol change.  The
+//! `gate::MASKED` sentinel (`usize::MAX`) round-trips as `u64::MAX`.
+//!
+//! Decoding is strict and loud: truncated headers, truncated bodies,
+//! unknown kinds, dtype/dimension garbage and trailing bytes are all hard
+//! errors — a corrupt frame must never be silently combined into a layer's
+//! routing (same discipline as the stale-tag handling in `fabric::Fabric`).
+
+use std::io::{Read, Write};
+
+use anyhow::{Context, Result};
+
+use super::{Cmd, ExpertFfnBatch, FfnBatchResult, Reply};
+use crate::runtime::{HostTensor, TensorData};
+
+/// Upper bound on a frame payload (1 GiB) — a corrupt length prefix must
+/// fail loudly instead of attempting an absurd allocation.
+const MAX_FRAME: usize = 1 << 30;
+
+const CMD_LOAD_EXPERT: u8 = 0;
+const CMD_EXPERT_FFN: u8 = 1;
+const CMD_EXPERT_FFN_BATCH: u8 = 2;
+const CMD_RELAY_FFN_BATCH: u8 = 3;
+const CMD_RELAYED_FFN_BATCH: u8 = 4;
+const CMD_RELAY_RESULT: u8 = 5;
+const CMD_DELIVER: u8 = 6;
+const CMD_FORWARD: u8 = 7;
+const CMD_SHUTDOWN: u8 = 8;
+
+const REPLY_LOADED: u8 = 16;
+const REPLY_FFN_DONE: u8 = 17;
+const REPLY_FFN_BATCH_DONE: u8 = 18;
+const REPLY_FFN_RELAY_DONE: u8 = 19;
+const REPLY_DELIVERED: u8 = 20;
+const REPLY_FORWARDED: u8 = 21;
+const REPLY_ERR: u8 = 22;
+
+// ---------------------------------------------------------------- writing
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(buf: &mut Vec<u8>, v: usize) {
+    put_u64(buf, v as u64);
+}
+
+fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    put_usize(buf, b.len());
+    buf.extend_from_slice(b);
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
+    buf.push(match t.data {
+        TensorData::F32(_) => 0,
+        TensorData::I32(_) => 1,
+    });
+    buf.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        put_usize(buf, d);
+    }
+    match &t.data {
+        TensorData::F32(v) => {
+            for x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        TensorData::I32(v) => {
+            for x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn put_experts(buf: &mut Vec<u8>, experts: &[(usize, usize)]) {
+    put_usize(buf, experts.len());
+    for &(e, c) in experts {
+        put_usize(buf, e);
+        put_usize(buf, c);
+    }
+}
+
+fn put_batch(buf: &mut Vec<u8>, b: &ExpertFfnBatch) {
+    put_usize(buf, b.layer);
+    put_u64(buf, b.tag);
+    put_experts(buf, &b.experts);
+    put_tensor(buf, &b.data);
+}
+
+fn put_result(buf: &mut Vec<u8>, r: &FfnBatchResult) {
+    put_usize(buf, r.layer);
+    put_u64(buf, r.tag);
+    put_experts(buf, &r.experts);
+    put_tensor(buf, &r.data);
+}
+
+/// Encode a command into a frame payload (kind byte + body).
+pub(super) fn encode_cmd(cmd: &Cmd) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match cmd {
+        Cmd::LoadExpert { layer, expert, weights } => {
+            buf.push(CMD_LOAD_EXPERT);
+            put_usize(&mut buf, *layer);
+            put_usize(&mut buf, *expert);
+            put_usize(&mut buf, weights.len());
+            for w in weights {
+                put_tensor(&mut buf, w);
+            }
+        }
+        Cmd::ExpertFfn { layer, expert, block, tag } => {
+            buf.push(CMD_EXPERT_FFN);
+            put_usize(&mut buf, *layer);
+            put_usize(&mut buf, *expert);
+            put_u64(&mut buf, *tag);
+            put_tensor(&mut buf, block);
+        }
+        Cmd::ExpertFfnBatch(b) => {
+            buf.push(CMD_EXPERT_FFN_BATCH);
+            put_batch(&mut buf, b);
+        }
+        Cmd::RelayFfnBatch { parts } => {
+            buf.push(CMD_RELAY_FFN_BATCH);
+            put_usize(&mut buf, parts.len());
+            for (dest, b) in parts {
+                put_usize(&mut buf, *dest);
+                put_batch(&mut buf, b);
+            }
+        }
+        Cmd::RelayedFfnBatch { batch, relay } => {
+            buf.push(CMD_RELAYED_FFN_BATCH);
+            put_usize(&mut buf, *relay);
+            put_batch(&mut buf, batch);
+        }
+        Cmd::RelayResult(r) => {
+            buf.push(CMD_RELAY_RESULT);
+            put_result(&mut buf, r);
+        }
+        Cmd::Deliver { from, payload, tag } => {
+            buf.push(CMD_DELIVER);
+            put_usize(&mut buf, *from);
+            put_u64(&mut buf, *tag);
+            put_bytes(&mut buf, payload);
+        }
+        Cmd::Forward { to, payload, tag } => {
+            buf.push(CMD_FORWARD);
+            put_usize(&mut buf, *to);
+            put_u64(&mut buf, *tag);
+            put_bytes(&mut buf, payload);
+        }
+        Cmd::Shutdown => buf.push(CMD_SHUTDOWN),
+    }
+    buf
+}
+
+/// Encode a reply into a frame payload (kind byte + body).
+pub(super) fn encode_reply(r: &Reply) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match r {
+        Reply::Loaded => buf.push(REPLY_LOADED),
+        Reply::FfnDone { layer, expert, out, tag } => {
+            buf.push(REPLY_FFN_DONE);
+            put_usize(&mut buf, *layer);
+            put_usize(&mut buf, *expert);
+            put_u64(&mut buf, *tag);
+            put_tensor(&mut buf, out);
+        }
+        Reply::FfnBatchDone(res) => {
+            buf.push(REPLY_FFN_BATCH_DONE);
+            put_result(&mut buf, res);
+        }
+        Reply::FfnRelayDone { layer, tag, parts } => {
+            buf.push(REPLY_FFN_RELAY_DONE);
+            put_usize(&mut buf, *layer);
+            put_u64(&mut buf, *tag);
+            put_usize(&mut buf, parts.len());
+            for p in parts {
+                put_result(&mut buf, p);
+            }
+        }
+        Reply::Delivered { worker, from, bytes, tag } => {
+            buf.push(REPLY_DELIVERED);
+            put_usize(&mut buf, *worker);
+            put_usize(&mut buf, *from);
+            put_usize(&mut buf, *bytes);
+            put_u64(&mut buf, *tag);
+        }
+        Reply::Forwarded => buf.push(REPLY_FORWARDED),
+        Reply::Err(e) => {
+            buf.push(REPLY_ERR);
+            put_bytes(&mut buf, e.as_bytes());
+        }
+    }
+    buf
+}
+
+// ---------------------------------------------------------------- reading
+
+/// Bounds-checked cursor over one frame payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.buf.len() - self.pos,
+            "truncated frame: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.usize()?;
+        anyhow::ensure!(n <= MAX_FRAME, "byte string length {n} out of range");
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn tensor(&mut self) -> Result<HostTensor> {
+        let dtype = self.u8()?;
+        let ndim = self.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(self.usize()?);
+        }
+        let nbytes = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .and_then(|n| n.checked_mul(4))
+            .context("tensor dims overflow")?;
+        let raw = self.take(nbytes)?;
+        let data = match dtype {
+            0 => TensorData::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            1 => TensorData::I32(
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            d => anyhow::bail!("unknown tensor dtype tag {d}"),
+        };
+        Ok(HostTensor { shape, data })
+    }
+
+    fn experts(&mut self) -> Result<Vec<(usize, usize)>> {
+        let n = self.usize()?;
+        anyhow::ensure!(n <= MAX_FRAME, "expert list length {n} out of range");
+        let mut v = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            let e = self.usize()?;
+            let c = self.usize()?;
+            v.push((e, c));
+        }
+        Ok(v)
+    }
+
+    fn batch(&mut self) -> Result<ExpertFfnBatch> {
+        let layer = self.usize()?;
+        let tag = self.u64()?;
+        let experts = self.experts()?;
+        let data = self.tensor()?;
+        Ok(ExpertFfnBatch { layer, experts, data, tag })
+    }
+
+    fn result(&mut self) -> Result<FfnBatchResult> {
+        let layer = self.usize()?;
+        let tag = self.u64()?;
+        let experts = self.experts()?;
+        let data = self.tensor()?;
+        Ok(FfnBatchResult { layer, experts, data, tag })
+    }
+
+    fn finish(self) -> Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "trailing bytes in frame: {} consumed, {} present",
+            self.pos,
+            self.buf.len()
+        );
+        Ok(())
+    }
+}
+
+/// Decode a command frame payload.
+pub(super) fn decode_cmd(payload: &[u8]) -> Result<Cmd> {
+    let mut c = Cur { buf: payload, pos: 0 };
+    let cmd = match c.u8().context("empty command frame")? {
+        CMD_LOAD_EXPERT => {
+            let layer = c.usize()?;
+            let expert = c.usize()?;
+            let n = c.usize()?;
+            anyhow::ensure!(n <= 64, "weight list length {n} out of range");
+            let mut weights = Vec::with_capacity(n);
+            for _ in 0..n {
+                weights.push(c.tensor()?);
+            }
+            Cmd::LoadExpert { layer, expert, weights }
+        }
+        CMD_EXPERT_FFN => {
+            let layer = c.usize()?;
+            let expert = c.usize()?;
+            let tag = c.u64()?;
+            let block = c.tensor()?;
+            Cmd::ExpertFfn { layer, expert, block, tag }
+        }
+        CMD_EXPERT_FFN_BATCH => Cmd::ExpertFfnBatch(c.batch()?),
+        CMD_RELAY_FFN_BATCH => {
+            let n = c.usize()?;
+            anyhow::ensure!(n <= MAX_FRAME, "relay part count {n} out of range");
+            let mut parts = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                let dest = c.usize()?;
+                parts.push((dest, c.batch()?));
+            }
+            Cmd::RelayFfnBatch { parts }
+        }
+        CMD_RELAYED_FFN_BATCH => {
+            let relay = c.usize()?;
+            let batch = c.batch()?;
+            Cmd::RelayedFfnBatch { batch, relay }
+        }
+        CMD_RELAY_RESULT => Cmd::RelayResult(c.result()?),
+        CMD_DELIVER => {
+            let from = c.usize()?;
+            let tag = c.u64()?;
+            let payload = c.bytes()?;
+            Cmd::Deliver { from, payload, tag }
+        }
+        CMD_FORWARD => {
+            let to = c.usize()?;
+            let tag = c.u64()?;
+            let payload = c.bytes()?;
+            Cmd::Forward { to, payload, tag }
+        }
+        CMD_SHUTDOWN => Cmd::Shutdown,
+        k => anyhow::bail!("unknown command frame kind {k}"),
+    };
+    c.finish()?;
+    Ok(cmd)
+}
+
+/// Decode a reply frame payload.
+pub(super) fn decode_reply(payload: &[u8]) -> Result<Reply> {
+    let mut c = Cur { buf: payload, pos: 0 };
+    let reply = match c.u8().context("empty reply frame")? {
+        REPLY_LOADED => Reply::Loaded,
+        REPLY_FFN_DONE => {
+            let layer = c.usize()?;
+            let expert = c.usize()?;
+            let tag = c.u64()?;
+            let out = c.tensor()?;
+            Reply::FfnDone { layer, expert, out, tag }
+        }
+        REPLY_FFN_BATCH_DONE => Reply::FfnBatchDone(c.result()?),
+        REPLY_FFN_RELAY_DONE => {
+            let layer = c.usize()?;
+            let tag = c.u64()?;
+            let n = c.usize()?;
+            anyhow::ensure!(n <= MAX_FRAME, "relay part count {n} out of range");
+            let mut parts = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                parts.push(c.result()?);
+            }
+            Reply::FfnRelayDone { layer, tag, parts }
+        }
+        REPLY_DELIVERED => {
+            let worker = c.usize()?;
+            let from = c.usize()?;
+            let bytes = c.usize()?;
+            let tag = c.u64()?;
+            Reply::Delivered { worker, from, bytes, tag }
+        }
+        REPLY_FORWARDED => Reply::Forwarded,
+        REPLY_ERR => {
+            let b = c.bytes()?;
+            Reply::Err(String::from_utf8_lossy(&b).into_owned())
+        }
+        k => anyhow::bail!("unknown reply frame kind {k}"),
+    };
+    c.finish()?;
+    Ok(reply)
+}
+
+// ----------------------------------------------------------------- stream
+
+/// Write one frame (length prefix + payload).
+pub(super) fn write_frame(mut w: impl Write, payload: &[u8]) -> Result<()> {
+    anyhow::ensure!(payload.len() <= MAX_FRAME, "frame too large");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame payload.  `Ok(None)` on clean EOF at a frame boundary;
+/// a partial header or body is a loud error, never a silent short frame.
+pub(super) fn read_frame(mut r: impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => anyhow::bail!("truncated frame header: {got}/4 bytes"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("reading frame header"),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    anyhow::ensure!(
+        len >= 1 && len <= MAX_FRAME,
+        "frame length {len} out of range"
+    );
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("truncated frame body ({len} bytes expected)"))?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::gate;
+    use crate::util::prop::{prop, Case};
+
+    fn rand_tensor(c: &mut Case, rows: usize, m: usize) -> HostTensor {
+        let data: Vec<f32> = (0..rows * m)
+            .map(|_| c.f64(-4.0, 4.0) as f32)
+            .collect();
+        HostTensor::f32(&[rows, m], data)
+    }
+
+    /// Random batch: a few expert blocks, some possibly zero-row, one id
+    /// possibly the `gate::MASKED` sentinel (`usize::MAX` must round-trip
+    /// through the u64 wire encoding).
+    fn rand_batch(c: &mut Case) -> ExpertFfnBatch {
+        let n_experts = c.usize(0, 4);
+        let m = c.usize(1, 6);
+        let mut experts = Vec::new();
+        let mut total = 0usize;
+        for i in 0..n_experts {
+            let count = c.usize(0, 5); // zero-row blocks included
+            let id = if i == 0 && c.bool() { gate::MASKED } else { i };
+            experts.push((id, count));
+            total += count;
+        }
+        ExpertFfnBatch {
+            layer: c.usize(0, 31),
+            experts,
+            data: rand_tensor(c, total, m),
+            tag: c.usize(0, 1_000_000) as u64,
+        }
+    }
+
+    fn batches_eq(a: &ExpertFfnBatch, b: &ExpertFfnBatch) -> bool {
+        a.layer == b.layer && a.tag == b.tag && a.experts == b.experts && a.data == b.data
+    }
+
+    fn results_eq(a: &FfnBatchResult, b: &FfnBatchResult) -> bool {
+        a.layer == b.layer && a.tag == b.tag && a.experts == b.experts && a.data == b.data
+    }
+
+    #[test]
+    fn batch_cmd_roundtrips() {
+        prop(120, |c| {
+            let batch = rand_batch(c);
+            let expect = ExpertFfnBatch {
+                layer: batch.layer,
+                experts: batch.experts.clone(),
+                data: batch.data.clone(),
+                tag: batch.tag,
+            };
+            let payload = encode_cmd(&Cmd::ExpertFfnBatch(batch));
+            let Cmd::ExpertFfnBatch(back) = decode_cmd(&payload)
+                .map_err(|e| format!("decode failed: {e:#}"))?
+            else {
+                return Err("decoded to a different command kind".into());
+            };
+            crate::prop_assert!(
+                batches_eq(&back, &expect),
+                "batch did not round-trip"
+            );
+            // Re-encode: a stable codec is its own fixed point.
+            let payload2 = encode_cmd(&Cmd::ExpertFfnBatch(back));
+            crate::prop_assert!(payload == payload2, "re-encode diverged");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_result_reply_roundtrips() {
+        prop(120, |c| {
+            let b = rand_batch(c);
+            let res = FfnBatchResult {
+                layer: b.layer,
+                experts: b.experts.clone(),
+                data: b.data.clone(),
+                tag: b.tag,
+            };
+            let expect = FfnBatchResult {
+                layer: res.layer,
+                experts: res.experts.clone(),
+                data: res.data.clone(),
+                tag: res.tag,
+            };
+            let payload = encode_reply(&Reply::FfnBatchDone(res));
+            let Reply::FfnBatchDone(back) = decode_reply(&payload)
+                .map_err(|e| format!("decode failed: {e:#}"))?
+            else {
+                return Err("decoded to a different reply kind".into());
+            };
+            crate::prop_assert!(
+                results_eq(&back, &expect),
+                "result did not round-trip"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relay_reply_roundtrips_with_masked_and_empty_blocks() {
+        prop(60, |c| {
+            let n_parts = c.usize(1, 4);
+            let tag = c.usize(0, 9999) as u64;
+            let layer = c.usize(0, 15);
+            let parts: Vec<FfnBatchResult> = (0..n_parts)
+                .map(|_| {
+                    let b = rand_batch(c);
+                    FfnBatchResult {
+                        layer,
+                        experts: b.experts,
+                        data: b.data,
+                        tag,
+                    }
+                })
+                .collect();
+            let expect: Vec<FfnBatchResult> = parts
+                .iter()
+                .map(|p| FfnBatchResult {
+                    layer: p.layer,
+                    experts: p.experts.clone(),
+                    data: p.data.clone(),
+                    tag: p.tag,
+                })
+                .collect();
+            let payload = encode_reply(&Reply::FfnRelayDone { layer, tag, parts });
+            let Reply::FfnRelayDone { layer: l2, tag: t2, parts: back } =
+                decode_reply(&payload).map_err(|e| format!("decode failed: {e:#}"))?
+            else {
+                return Err("decoded to a different reply kind".into());
+            };
+            crate::prop_assert!(l2 == layer && t2 == tag, "header mismatch");
+            crate::prop_assert!(back.len() == expect.len(), "part count mismatch");
+            for (a, b) in back.iter().zip(&expect) {
+                crate::prop_assert!(results_eq(a, b), "part did not round-trip");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn masked_sentinel_roundtrips_exactly() {
+        let batch = ExpertFfnBatch {
+            layer: 3,
+            experts: vec![(gate::MASKED, 0), (1, 2)],
+            data: HostTensor::f32(&[2, 2], vec![1., 2., 3., 4.]),
+            tag: 7,
+        };
+        let payload = encode_cmd(&Cmd::ExpertFfnBatch(batch));
+        let Cmd::ExpertFfnBatch(back) = decode_cmd(&payload).unwrap() else {
+            panic!("wrong kind");
+        };
+        assert_eq!(back.experts[0].0, gate::MASKED);
+        assert_eq!(back.experts[0].1, 0);
+    }
+
+    #[test]
+    fn truncated_frames_fail_loudly() {
+        let batch = ExpertFfnBatch {
+            layer: 1,
+            experts: vec![(0, 1), (2, 2)],
+            data: HostTensor::f32(&[3, 2], vec![1., 2., 3., 4., 5., 6.]),
+            tag: 42,
+        };
+        let payload = encode_cmd(&Cmd::ExpertFfnBatch(batch));
+        // Every proper prefix of the payload must fail to decode — never
+        // produce a silently shorter batch.
+        for cut in 0..payload.len() {
+            assert!(
+                decode_cmd(&payload[..cut]).is_err(),
+                "decode of {cut}/{} bytes must fail",
+                payload.len()
+            );
+        }
+        // Trailing garbage is equally loud.
+        let mut padded = payload.clone();
+        padded.push(0);
+        assert!(decode_cmd(&padded).is_err(), "trailing bytes must fail");
+
+        // Stream level: truncating anywhere inside the framed bytes is an
+        // error; an empty stream is a clean EOF (None), not an error.
+        let mut framed = Vec::new();
+        write_frame(&mut framed, &payload).unwrap();
+        assert!(matches!(
+            read_frame(&mut std::io::Cursor::new(&framed[..0])),
+            Ok(None)
+        ));
+        for cut in 1..framed.len() {
+            assert!(
+                read_frame(&mut std::io::Cursor::new(&framed[..cut])).is_err(),
+                "stream cut at {cut}/{} bytes must fail",
+                framed.len()
+            );
+        }
+        let full = read_frame(&mut std::io::Cursor::new(&framed[..]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(full, payload);
+    }
+
+    #[test]
+    fn i32_tensors_and_error_strings_roundtrip() {
+        let t = HostTensor::i32(&[2, 2], vec![-1, 2, -3, 4]);
+        let payload = encode_cmd(&Cmd::LoadExpert {
+            layer: 0,
+            expert: 5,
+            weights: vec![t.clone()],
+        });
+        let Cmd::LoadExpert { layer, expert, weights } =
+            decode_cmd(&payload).unwrap()
+        else {
+            panic!("wrong kind");
+        };
+        assert_eq!((layer, expert), (0, 5));
+        assert_eq!(weights[0], t);
+
+        let e = Reply::Err("worker 3 exploded: épique".to_string());
+        let Reply::Err(msg) = decode_reply(&encode_reply(&e)).unwrap() else {
+            panic!("wrong kind");
+        };
+        assert_eq!(msg, "worker 3 exploded: épique");
+    }
+}

@@ -6,17 +6,38 @@
 //! token blocks; workers run the AOT `expert_ffn_c{C}` program (padding each
 //! block up to the nearest compiled capacity) and send results back.
 //!
-//! Two dispatch granularities exist:
+//! The leader↔worker wire is a [`Transport`](transport::Transport) seam
+//! ([`TransportKind`], `DSMOE_TRANSPORT`): the default in-process channel
+//! transport moves commands as Rust values; the Unix-socket transport
+//! serializes every command and reply through the length-prefixed
+//! [`frame`] codec, so expert workers can run as separate processes without
+//! a protocol change.  Dispatch, collection, relay and traffic logic are
+//! transport-blind.
 //!
-//! * [`Fabric::dispatch_ffn`] — one channel message per expert block (the
-//!   original serialized path, kept for `DSMOE_SERIAL_MOE` measurement);
+//! Three dispatch granularities exist:
+//!
+//! * [`Fabric::dispatch_ffn`] — one message per expert block (the original
+//!   serialized path, kept for `DSMOE_SERIAL_MOE` measurement);
 //! * [`Fabric::dispatch_ffn_batch`] — one [`ExpertFfnBatch`] per worker per
 //!   layer carrying *all* of that worker's expert blocks packed into a
 //!   single contiguous payload (the paper's grouped all-to-all, §5.1).  The
 //!   worker slices each expert's rows out of the packed buffer, pads them
 //!   against the compiled capacity ladder, and replies with one equally
 //!   packed [`FfnBatchResult`] — O(workers) messages per MoE layer instead
-//!   of O(experts).
+//!   of O(experts);
+//! * [`Fabric::dispatch_exchange`] — a whole exchange generation at once,
+//!   routed by the fabric's [`A2aMode`].  `Flat` sends one batch message
+//!   per worker (bit- and counter-identical to calling
+//!   `dispatch_ffn_batch` in a loop).  `Hierarchical { node_size }` is the
+//!   paper's §5.3 schedule on the live data path: workers are grouped into
+//!   nodes of `node_size`, the leader sends each node's batches as **one**
+//!   cross-node message to the node's designated relay worker, the relay
+//!   forwards node-mates' batches over intra-node peer links, gathers their
+//!   results, and returns **one** coalesced cross-node reply — cutting
+//!   cross-node messages from O(workers) to O(nodes) in each direction per
+//!   MoE layer, at the cost of the extra intra-node hop (the paper's ~2x
+//!   volume trade-off).  [`Traffic`] counts intra-node and cross-node
+//!   bytes/messages separately so the trade-off is measured, not assumed.
 //!
 //! Batch collection is **tag-keyed** so the depth-N cross-layer pipeline
 //! ring (plus a staged admission prefill) can keep several exchange
@@ -25,12 +46,12 @@
 //! gathers one generation's replies, replies carrying the tag of another
 //! *open* generation are stashed and handed out when that generation is
 //! collected; a reply whose tag is neither collected nor open is stale and
-//! fails loudly — it is never silently combined.  The stash never grows
-//! past one coalesced reply per worker per open generation, whatever the
-//! open-generation count (the ring can legally run as deep as the lane
-//! count, plus one staged admission); `rust/tests/integration_fabric.rs`
-//! exercises the bound at four concurrent generations
-//! ([`Fabric::stash_depth`]).
+//! fails loudly — it is never silently combined.  The stash holds
+//! **coalesced** replies: one entry per worker (flat) or per relay node
+//! (hierarchical) per open generation, so a relay's multi-part reply never
+//! double-counts against the per-generation bound
+//! ([`Fabric::stash_depth`]); `rust/tests/integration_fabric.rs` exercises
+//! the bound at four concurrent generations and over relayed replies.
 //!
 //! Links are bounded channels with byte accounting ([`Traffic`]): every
 //! payload that crosses a worker boundary is counted, which is what the
@@ -39,18 +60,34 @@
 //! all-to-all schedules of `coordinator::alltoall` are executed for real —
 //! relayed messages and all — in `rust/tests/integration_fabric.rs`.
 
+mod frame;
+mod transport;
+
+pub use transport::TransportKind;
+
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::alltoall::Plan;
 use crate::runtime::{HostTensor, ProgramSpec, Runtime};
+use transport::{ChannelTransport, ReplySink, SocketTransport, Transport};
 
 /// Cumulative traffic counters (shared, lock-free).
+///
+/// `bytes_to_workers` / `bytes_from_workers` / `messages` are the original
+/// leader-edge counters (messages counts leader→worker sends).  The
+/// schedule-comparison counters split the same payload traffic by link
+/// class: `cross_*` is everything crossing the leader↔worker boundary (the
+/// network links of the hierarchical model — every flat hop, and the
+/// leader↔relay hops of the hierarchical schedule, both directions);
+/// `intra_*` is relay↔node-mate traffic over peer links (the extra volume
+/// the hierarchical schedule pays — the paper's predicted ~2x).  Workers
+/// update the intra counters themselves.
 #[derive(Debug, Default)]
 pub struct Traffic {
     pub bytes_to_workers: AtomicU64,
@@ -59,13 +96,24 @@ pub struct Traffic {
     /// Peer-to-peer bytes moved by `route` (all-to-all execution).
     pub p2p_bytes: AtomicU64,
     pub p2p_messages: AtomicU64,
+    /// Cross-node (leader↔worker) payload traffic, both directions.
+    pub cross_bytes: AtomicU64,
+    pub cross_messages: AtomicU64,
+    /// Intra-node (relay↔node-mate) traffic of the hierarchical schedule.
+    pub intra_bytes: AtomicU64,
+    pub intra_messages: AtomicU64,
 }
 
 impl Traffic {
+    /// Total bytes actually moved over any link (intra-node relay hops are
+    /// real transfers — the hierarchical schedule's volume cost shows up
+    /// here).  `cross_*` is excluded: it reclassifies the leader-edge
+    /// bytes already counted by `bytes_to/from_workers`.
     pub fn total_bytes(&self) -> u64 {
         self.bytes_to_workers.load(Ordering::Relaxed)
             + self.bytes_from_workers.load(Ordering::Relaxed)
             + self.p2p_bytes.load(Ordering::Relaxed)
+            + self.intra_bytes.load(Ordering::Relaxed)
     }
 }
 
@@ -95,7 +143,7 @@ pub struct FfnBatchResult {
     pub tag: u64,
 }
 
-/// Commands the leader sends to a worker.
+/// Commands the leader (or a peer worker) sends to a worker.
 enum Cmd {
     /// Install expert weights [w1, b1, w2, b2] for (layer, expert).
     LoadExpert { layer: usize, expert: usize, weights: Vec<HostTensor> },
@@ -103,6 +151,16 @@ enum Cmd {
     ExpertFfn { layer: usize, expert: usize, block: HostTensor, tag: u64 },
     /// Run every expert sub-block of a coalesced batch; reply FfnBatchDone.
     ExpertFfnBatch(ExpertFfnBatch),
+    /// Hierarchical dispatch: one cross-node message carrying a whole
+    /// node's batches.  The receiving relay runs its own part, forwards the
+    /// rest to node-mates (`RelayedFfnBatch`), gathers their results
+    /// (`RelayResult`) and answers with one coalesced `FfnRelayDone`.
+    RelayFfnBatch { parts: Vec<(usize, ExpertFfnBatch)> },
+    /// A node-mate's share of a relayed exchange (intra-node hop); the
+    /// result goes back to `relay`, not to the leader.
+    RelayedFfnBatch { batch: ExpertFfnBatch, relay: usize },
+    /// A node-mate's computed result returning to its relay (intra-node).
+    RelayResult(FfnBatchResult),
     /// Deliver a raw p2p payload (all-to-all execution path).
     Deliver { from: usize, payload: Vec<u8>, tag: u64 },
     /// Forward a payload to another worker (relay hop), then ack.
@@ -115,14 +173,12 @@ pub enum Reply {
     Loaded,
     FfnDone { layer: usize, expert: usize, out: HostTensor, tag: u64 },
     FfnBatchDone(FfnBatchResult),
+    /// A relay's coalesced reply: every node-mate's result (its own
+    /// included) for one exchange generation, in one cross-node message.
+    FfnRelayDone { layer: usize, tag: u64, parts: Vec<FfnBatchResult> },
     Delivered { worker: usize, from: usize, bytes: usize, tag: u64 },
     Forwarded,
     Err(String),
-}
-
-struct WorkerHandle {
-    tx: Sender<Cmd>,
-    join: Option<std::thread::JoinHandle<()>>,
 }
 
 /// Program specs a worker needs (expert_ffn ladder for one (M, F) shape).
@@ -132,65 +188,117 @@ pub struct WorkerPrograms {
     pub expert_ffn: Vec<(usize, ProgramSpec)>,
 }
 
+/// How [`Fabric::dispatch_exchange`] routes an exchange generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum A2aMode {
+    /// One message per worker, straight from the leader (default).
+    Flat,
+    /// §5.3 hierarchical schedule: one cross-node message per node of
+    /// `node_size` workers, intra-node distribution via the relay worker.
+    /// A node size of 1 (or less) degenerates to `Flat`.
+    Hierarchical { node_size: usize },
+}
+
+/// One coalesced stashed reply: a flat worker's single result or a relay's
+/// multi-part result, parked because its (open) generation is not the one
+/// being collected.  `stash_depth` counts these entries, so a relayed
+/// reply occupies exactly one slot however many parts it carries.
+struct StashEntry {
+    layer: usize,
+    tag: u64,
+    parts: Vec<FfnBatchResult>,
+}
+
 pub struct Fabric {
-    workers: Vec<WorkerHandle>,
-    reply_rx: Receiver<Reply>,
+    transport: Box<dyn Transport>,
+    n: usize,
     pub traffic: Arc<Traffic>,
     peer_txs: Vec<Sender<Cmd>>,
     /// Replies of *other* still-open tagged exchanges received while
     /// collecting a given one (the leader is single-threaded; the stash
-    /// holds at most one coalesced reply per worker per open generation —
-    /// the pipeline ring depth plus a staged admission bound it).
-    stash: RefCell<Vec<FfnBatchResult>>,
+    /// holds at most one coalesced reply per worker — or per relay node —
+    /// per open generation).
+    stash: RefCell<Vec<StashEntry>>,
+    a2a: A2aMode,
 }
 
 impl Fabric {
-    /// Spawn `n` workers, each compiling its own copies of the expert FFN
-    /// programs on first use.
+    /// Spawn `n` workers over the default channel transport.
     pub fn spawn(n: usize, programs: WorkerPrograms) -> Result<Fabric> {
+        Self::spawn_with(n, programs, TransportKind::Channel)
+    }
+
+    /// Spawn `n` workers over the given transport, each compiling its own
+    /// copies of the expert FFN programs on first use.
+    pub fn spawn_with(
+        n: usize,
+        programs: WorkerPrograms,
+        kind: TransportKind,
+    ) -> Result<Fabric> {
         assert!(n > 0);
         let traffic = Arc::new(Traffic::default());
-        let (reply_tx, reply_rx) = channel::<Reply>();
-        let mut txs = Vec::new();
-        let mut workers = Vec::new();
-        // Create all command channels first so workers can relay peer-to-peer.
-        let chans: Vec<(Sender<Cmd>, Receiver<Cmd>)> =
-            (0..n).map(|_| channel()).collect();
-        let peer_txs: Vec<Sender<Cmd>> =
-            chans.iter().map(|(tx, _)| tx.clone()).collect();
-        for (w, (tx, rx)) in chans.into_iter().enumerate() {
-            let reply_tx = reply_tx.clone();
-            let progs = programs.clone();
-            let peers = peer_txs.clone();
-            let traffic_w = traffic.clone();
-            let join = std::thread::Builder::new()
-                .name(format!("dsmoe-worker-{w}"))
-                .spawn(move || worker_main(w, rx, reply_tx, progs, peers, traffic_w))
-                .context("spawning worker")?;
-            txs.push(tx.clone());
-            workers.push(WorkerHandle { tx, join: Some(join) });
-        }
+        let (transport, peer_txs): (Box<dyn Transport>, Vec<Sender<Cmd>>) =
+            match kind {
+                TransportKind::Channel => {
+                    let (t, p) =
+                        ChannelTransport::spawn(n, programs, traffic.clone())?;
+                    (Box::new(t), p)
+                }
+                TransportKind::Socket => {
+                    let (t, p) =
+                        SocketTransport::spawn(n, programs, traffic.clone())?;
+                    (Box::new(t), p)
+                }
+            };
         Ok(Fabric {
-            workers,
-            reply_rx,
+            transport,
+            n,
             traffic,
             peer_txs,
             stash: RefCell::new(Vec::new()),
+            a2a: A2aMode::Flat,
         })
     }
 
     pub fn n_workers(&self) -> usize {
-        self.workers.len()
+        self.n
     }
 
-    /// Number of replies currently parked in the tag-keyed stash.  Bounded
-    /// by the number of *open* exchange generations (at most one coalesced
-    /// reply per worker per open tag — the bound is generic in the
-    /// generation count, which the pipeline ring can push as high as the
-    /// lane count plus a staged admission); every entry is handed out when
-    /// its generation is collected, so the stash drains to zero once no
-    /// exchange is in flight — `rust/tests/integration_fabric.rs`
-    /// exercises the bound at four concurrent generations.
+    /// How [`Fabric::dispatch_exchange`] currently routes exchanges.
+    pub fn a2a(&self) -> A2aMode {
+        self.a2a
+    }
+
+    /// Select the all-to-all routing for subsequent exchanges.  Hierarchical
+    /// node sizes that don't divide the worker count (or don't exceed 1)
+    /// fall back to flat with a warning — same contract as the
+    /// `DSMOE_NODE_SIZE` parser.
+    pub fn set_a2a(&mut self, mode: A2aMode) {
+        self.a2a = match mode {
+            A2aMode::Hierarchical { node_size }
+                if node_size <= 1 || self.n % node_size != 0 =>
+            {
+                if node_size > 1 {
+                    eprintln!(
+                        "[fabric] node size {node_size} does not divide \
+                         {} workers; falling back to flat dispatch",
+                        self.n
+                    );
+                }
+                A2aMode::Flat
+            }
+            m => m,
+        };
+    }
+
+    /// Number of coalesced replies currently parked in the tag-keyed stash.
+    /// Bounded by the number of *open* exchange generations (at most one
+    /// coalesced reply per worker — or per relay node under hierarchical
+    /// dispatch — per open tag; a relay's multi-part reply counts once);
+    /// every entry is handed out when its generation is collected, so the
+    /// stash drains to zero once no exchange is in flight —
+    /// `rust/tests/integration_fabric.rs` exercises the bound at four
+    /// concurrent generations and over relayed replies.
     pub fn stash_depth(&self) -> usize {
         self.stash.borrow().len()
     }
@@ -207,11 +315,9 @@ impl Fabric {
         self.traffic
             .bytes_to_workers
             .fetch_add(bytes as u64, Ordering::Relaxed);
-        self.workers[worker]
-            .tx
-            .send(Cmd::LoadExpert { layer, expert, weights })
-            .context("worker gone")?;
-        match self.reply_rx.recv()? {
+        self.transport
+            .send(worker, Cmd::LoadExpert { layer, expert, weights })?;
+        match self.transport.recv_reply()? {
             Reply::Loaded => Ok(()),
             Reply::Err(e) => anyhow::bail!("worker {worker}: {e}"),
             _ => anyhow::bail!("unexpected reply to LoadExpert"),
@@ -227,25 +333,27 @@ impl Fabric {
         block: HostTensor,
         tag: u64,
     ) -> Result<()> {
-        self.traffic
-            .bytes_to_workers
-            .fetch_add(block.byte_len() as u64, Ordering::Relaxed);
+        let bytes = block.byte_len() as u64;
+        self.traffic.bytes_to_workers.fetch_add(bytes, Ordering::Relaxed);
         self.traffic.messages.fetch_add(1, Ordering::Relaxed);
-        self.workers[worker]
-            .tx
-            .send(Cmd::ExpertFfn { layer, expert, block, tag })
-            .context("worker gone")
+        self.traffic.cross_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.traffic.cross_messages.fetch_add(1, Ordering::Relaxed);
+        self.transport
+            .send(worker, Cmd::ExpertFfn { layer, expert, block, tag })
     }
 
     /// Collect `n` FFN results (any order).
     pub fn collect_ffn(&self, n: usize) -> Result<Vec<(usize, usize, HostTensor, u64)>> {
         let mut out = Vec::with_capacity(n);
         while out.len() < n {
-            match self.reply_rx.recv()? {
+            match self.transport.recv_reply()? {
                 Reply::FfnDone { layer, expert, out: t, tag } => {
+                    let bytes = t.byte_len() as u64;
                     self.traffic
                         .bytes_from_workers
-                        .fetch_add(t.byte_len() as u64, Ordering::Relaxed);
+                        .fetch_add(bytes, Ordering::Relaxed);
+                    self.traffic.cross_bytes.fetch_add(bytes, Ordering::Relaxed);
+                    self.traffic.cross_messages.fetch_add(1, Ordering::Relaxed);
                     out.push((layer, expert, t, tag));
                 }
                 Reply::Err(e) => anyhow::bail!("worker error: {e}"),
@@ -256,21 +364,63 @@ impl Fabric {
     }
 
     /// Dispatch one worker's coalesced expert batch (non-blocking): a
-    /// single channel message — and a single worker wakeup — for all of
-    /// the worker's expert blocks at this layer.
+    /// single message — and a single worker wakeup — for all of the
+    /// worker's expert blocks at this layer.
     pub fn dispatch_ffn_batch(
         &self,
         worker: usize,
         batch: ExpertFfnBatch,
     ) -> Result<()> {
-        self.traffic
-            .bytes_to_workers
-            .fetch_add(batch.data.byte_len() as u64, Ordering::Relaxed);
+        let bytes = batch.data.byte_len() as u64;
+        self.traffic.bytes_to_workers.fetch_add(bytes, Ordering::Relaxed);
         self.traffic.messages.fetch_add(1, Ordering::Relaxed);
-        self.workers[worker]
-            .tx
-            .send(Cmd::ExpertFfnBatch(batch))
-            .context("worker gone")
+        self.traffic.cross_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.traffic.cross_messages.fetch_add(1, Ordering::Relaxed);
+        self.transport.send(worker, Cmd::ExpertFfnBatch(batch))
+    }
+
+    /// Dispatch one whole exchange generation (every worker's coalesced
+    /// batch for one MoE layer) routed by the fabric's [`A2aMode`].
+    /// Returns the number of per-worker results the exchange will produce —
+    /// the caller's `outstanding` count for
+    /// [`Fabric::collect_ffn_batches`], identical under both modes.
+    ///
+    /// Flat mode is exactly a [`Fabric::dispatch_ffn_batch`] loop.
+    /// Hierarchical mode sends one [`Cmd::RelayFfnBatch`] per node (to the
+    /// node's first worker, the designated relay): O(nodes) cross-node
+    /// messages instead of O(workers), with the relay fan-out/fan-in moving
+    /// the same payloads once more over intra-node links.
+    pub fn dispatch_exchange(
+        &self,
+        batches: Vec<(usize, ExpertFfnBatch)>,
+    ) -> Result<usize> {
+        let n_parts = batches.len();
+        let node_size = match self.a2a {
+            A2aMode::Hierarchical { node_size } if node_size > 1 => node_size,
+            _ => {
+                for (w, b) in batches {
+                    self.dispatch_ffn_batch(w, b)?;
+                }
+                return Ok(n_parts);
+            }
+        };
+        let mut by_node: BTreeMap<usize, Vec<(usize, ExpertFfnBatch)>> =
+            BTreeMap::new();
+        for (w, b) in batches {
+            anyhow::ensure!(w < self.n, "batch for worker {w} of {}", self.n);
+            by_node.entry(w / node_size).or_default().push((w, b));
+        }
+        for (node, parts) in by_node {
+            let relay = node * node_size;
+            let bytes: u64 =
+                parts.iter().map(|(_, b)| b.data.byte_len() as u64).sum();
+            self.traffic.bytes_to_workers.fetch_add(bytes, Ordering::Relaxed);
+            self.traffic.messages.fetch_add(1, Ordering::Relaxed);
+            self.traffic.cross_bytes.fetch_add(bytes, Ordering::Relaxed);
+            self.traffic.cross_messages.fetch_add(1, Ordering::Relaxed);
+            self.transport.send(relay, Cmd::RelayFfnBatch { parts })?;
+        }
+        Ok(n_parts)
     }
 
     /// Move stashed replies of exchange `tag` into `out` (checking their
@@ -288,76 +438,95 @@ impl Fabric {
         let mut i = 0;
         while i < stash.len() {
             if stash[i].tag == tag {
-                let r = stash.remove(i);
+                let e = stash.remove(i);
                 anyhow::ensure!(
-                    r.layer == layer,
+                    e.layer == layer,
                     "expert batch reply for layer {} carries tag {tag} of \
                      an exchange at layer {layer}",
-                    r.layer
+                    e.layer
                 );
-                out.push(r);
+                out.extend(e.parts);
             } else if open.contains(&stash[i].tag) {
                 i += 1;
             } else {
                 // Consume the stale entry before failing (mirrors the
                 // channel path, where the failing recv eats the reply) so
                 // one loud error doesn't wedge every later collect.
-                let r = stash.remove(i);
+                let e = stash.remove(i);
                 anyhow::bail!(
-                    "stale stashed expert batch reply: (layer {}, tag {}) \
-                     is neither collected (tag {tag}) nor open ({open:?})",
-                    r.layer,
-                    r.tag
+                    "stale stashed expert batch reply: (layer {}, tag {}, \
+                     {} part(s)) is neither collected (tag {tag}) nor open \
+                     ({open:?})",
+                    e.layer,
+                    e.tag,
+                    e.parts.len()
                 );
             }
         }
         Ok(())
     }
 
-    /// Route one received batch reply: the collected exchange's tag goes
-    /// to `out`, another open exchange's tag is stashed for its own
-    /// collection, anything else is stale and fails loudly.
-    fn accept_batch_reply(
+    /// Route one received coalesced reply (a flat worker's single result or
+    /// a relay's multi-part result): the collected exchange's tag goes to
+    /// `out`, another open exchange's tag is stashed as one entry for its
+    /// own collection, anything else is stale and fails loudly.
+    #[allow(clippy::too_many_arguments)]
+    fn accept_parts(
         &self,
-        r: FfnBatchResult,
+        rlayer: usize,
+        rtag: u64,
+        parts: Vec<FfnBatchResult>,
         layer: usize,
         tag: u64,
         open: &[u64],
         out: &mut Vec<FfnBatchResult>,
     ) -> Result<()> {
+        let bytes: u64 = parts.iter().map(|p| p.data.byte_len() as u64).sum();
         self.traffic
             .bytes_from_workers
-            .fetch_add(r.data.byte_len() as u64, Ordering::Relaxed);
-        if r.tag == tag {
+            .fetch_add(bytes, Ordering::Relaxed);
+        self.traffic.cross_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.traffic.cross_messages.fetch_add(1, Ordering::Relaxed);
+        for p in &parts {
             anyhow::ensure!(
-                r.layer == layer,
-                "expert batch reply for layer {} carries tag {tag} of an \
-                 exchange at layer {layer}",
-                r.layer
+                p.layer == rlayer && p.tag == rtag,
+                "relayed reply part (layer {}, tag {}) does not match its \
+                 envelope (layer {rlayer}, tag {rtag})",
+                p.layer,
+                p.tag
             );
-            out.push(r);
-        } else if open.contains(&r.tag) {
-            self.stash.borrow_mut().push(r);
+        }
+        if rtag == tag {
+            anyhow::ensure!(
+                rlayer == layer,
+                "expert batch reply for layer {rlayer} carries tag {tag} of \
+                 an exchange at layer {layer}"
+            );
+            out.extend(parts);
+        } else if open.contains(&rtag) {
+            self.stash
+                .borrow_mut()
+                .push(StashEntry { layer: rlayer, tag: rtag, parts });
         } else {
             anyhow::bail!(
-                "stale expert batch reply: got (layer {}, tag {}) while \
-                 collecting (layer {layer}, tag {tag}; open tags {open:?})",
-                r.layer,
-                r.tag
+                "stale expert batch reply: got (layer {rlayer}, tag {rtag}) \
+                 while collecting (layer {layer}, tag {tag}; open tags \
+                 {open:?})"
             );
         }
         Ok(())
     }
 
-    /// Collect `n` coalesced batch results for MoE layer `layer`, exchange
-    /// generation `tag` (any order), blocking until all `n` arrived.
-    /// `open` lists the tags of *other* exchanges still legitimately in
-    /// flight (the pipeline's partner microbatch): their replies are
-    /// stashed, tag-keyed, for their own collection.  A reply carrying any
-    /// other tag is a stale in-flight result from an aborted earlier
-    /// exchange — even one at the same layer of a retried forward — and
-    /// must be a loud error, never silently combined into the current
-    /// layer's routing.
+    /// Collect `n` per-worker batch results for MoE layer `layer`, exchange
+    /// generation `tag` (any order), blocking until all `n` arrived —
+    /// whether they come as flat per-worker replies or coalesced relay
+    /// replies carrying several workers' parts each.  `open` lists the tags
+    /// of *other* exchanges still legitimately in flight (the pipeline's
+    /// partner microbatches): their replies are stashed, tag-keyed, for
+    /// their own collection.  A reply carrying any other tag is a stale
+    /// in-flight result from an aborted earlier exchange — even one at the
+    /// same layer of a retried forward — and must be a loud error, never
+    /// silently combined into the current layer's routing.
     pub fn collect_ffn_batches(
         &self,
         n: usize,
@@ -368,9 +537,13 @@ impl Fabric {
         let mut out = Vec::with_capacity(n);
         self.take_stashed(layer, tag, open, &mut out)?;
         while out.len() < n {
-            match self.reply_rx.recv()? {
+            match self.transport.recv_reply()? {
                 Reply::FfnBatchDone(r) => {
-                    self.accept_batch_reply(r, layer, tag, open, &mut out)?;
+                    let (rl, rt) = (r.layer, r.tag);
+                    self.accept_parts(rl, rt, vec![r], layer, tag, open, &mut out)?;
+                }
+                Reply::FfnRelayDone { layer: rl, tag: rt, parts } => {
+                    self.accept_parts(rl, rt, parts, layer, tag, open, &mut out)?;
                 }
                 Reply::Err(e) => anyhow::bail!("worker error: {e}"),
                 _ => {}
@@ -381,7 +554,7 @@ impl Fabric {
 
     /// Non-blocking variant of [`Fabric::collect_ffn_batches`]: drain
     /// whatever replies of exchange `tag` have already arrived (stashed or
-    /// on the channel) and return immediately — possibly with an empty
+    /// on the wire) and return immediately — possibly with an empty
     /// result.  Same tag-keyed stash/stale semantics.
     pub fn try_collect_ffn_batches(
         &self,
@@ -391,17 +564,17 @@ impl Fabric {
     ) -> Result<Vec<FfnBatchResult>> {
         let mut out = Vec::new();
         self.take_stashed(layer, tag, open, &mut out)?;
-        loop {
-            match self.reply_rx.try_recv() {
-                Ok(Reply::FfnBatchDone(r)) => {
-                    self.accept_batch_reply(r, layer, tag, open, &mut out)?;
+        while let Some(reply) = self.transport.try_recv_reply()? {
+            match reply {
+                Reply::FfnBatchDone(r) => {
+                    let (rl, rt) = (r.layer, r.tag);
+                    self.accept_parts(rl, rt, vec![r], layer, tag, open, &mut out)?;
                 }
-                Ok(Reply::Err(e)) => anyhow::bail!("worker error: {e}"),
-                Ok(_) => {}
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => {
-                    anyhow::bail!("fabric workers disconnected")
+                Reply::FfnRelayDone { layer: rl, tag: rt, parts } => {
+                    self.accept_parts(rl, rt, parts, layer, tag, open, &mut out)?;
                 }
+                Reply::Err(e) => anyhow::bail!("worker error: {e}"),
+                _ => {}
             }
         }
         Ok(out)
@@ -444,7 +617,7 @@ impl Fabric {
             let mut acks = 0;
             let want = msgs.len() * 2;
             while acks < want {
-                match self.reply_rx.recv()? {
+                match self.transport.recv_reply()? {
                     Reply::Delivered { worker, from, bytes, .. } => {
                         delivered.push((worker, from, bytes));
                         acks += 1;
@@ -459,47 +632,72 @@ impl Fabric {
     }
 
     pub fn shutdown(mut self) {
-        for w in &self.workers {
-            let _ = w.tx.send(Cmd::Shutdown);
-        }
-        for w in &mut self.workers {
-            if let Some(j) = w.join.take() {
-                let _ = j.join();
-            }
-        }
+        self.transport.shutdown();
     }
 }
 
 impl Drop for Fabric {
     fn drop(&mut self) {
-        for w in &self.workers {
-            let _ = w.tx.send(Cmd::Shutdown);
-        }
-        for w in &mut self.workers {
-            if let Some(j) = w.join.take() {
-                let _ = j.join();
-            }
-        }
+        // Idempotent: also runs after an explicit `shutdown`.
+        self.transport.shutdown();
+    }
+}
+
+/// In-flight relay state on a relay worker: one entry per exchange
+/// generation being gathered, so the relay stays responsive to other tags
+/// and layers while node-mates compute.
+struct RelayPending {
+    layer: usize,
+    expected: usize,
+    parts: Vec<FfnBatchResult>,
+}
+
+/// Book one gathered part; when the node is complete, send the coalesced
+/// cross-node reply.  A part for an unknown tag is a protocol violation
+/// and fails loudly at the leader.
+fn relay_gather(
+    me: usize,
+    relays: &mut HashMap<u64, RelayPending>,
+    reply: &ReplySink,
+    part: FfnBatchResult,
+) {
+    let tag = part.tag;
+    let Some(p) = relays.get_mut(&tag) else {
+        reply.send(Reply::Err(format!(
+            "worker {me}: relay result for unknown tag {tag} (layer {})",
+            part.layer
+        )));
+        return;
+    };
+    p.parts.push(part);
+    if p.parts.len() == p.expected {
+        let p = relays.remove(&tag).unwrap();
+        reply.send(Reply::FfnRelayDone {
+            layer: p.layer,
+            tag,
+            parts: p.parts,
+        });
     }
 }
 
 fn worker_main(
     me: usize,
     rx: Receiver<Cmd>,
-    reply: Sender<Reply>,
+    reply: ReplySink,
     programs: WorkerPrograms,
     peers: Vec<Sender<Cmd>>,
-    _traffic: Arc<Traffic>,
+    traffic: Arc<Traffic>,
 ) {
     // Thread-local runtime; compile lazily on first use per block size.
     let runtime = match Runtime::cpu() {
         Ok(r) => r,
         Err(e) => {
-            let _ = reply.send(Reply::Err(format!("runtime init: {e:#}")));
+            reply.send(Reply::Err(format!("runtime init: {e:#}")));
             return;
         }
     };
     let mut experts: HashMap<(usize, usize), Vec<xla::Literal>> = HashMap::new();
+    let mut relays: HashMap<u64, RelayPending> = HashMap::new();
 
     while let Ok(cmd) = rx.recv() {
         match cmd {
@@ -510,10 +708,10 @@ fn worker_main(
                 match lits {
                     Ok(l) => {
                         experts.insert((layer, expert), l);
-                        let _ = reply.send(Reply::Loaded);
+                        reply.send(Reply::Loaded);
                     }
                     Err(e) => {
-                        let _ = reply.send(Reply::Err(format!("{e:#}")));
+                        reply.send(Reply::Err(format!("{e:#}")));
                     }
                 }
             }
@@ -523,15 +721,10 @@ fn worker_main(
                 );
                 match r {
                     Ok(out) => {
-                        let _ = reply.send(Reply::FfnDone {
-                            layer,
-                            expert,
-                            out,
-                            tag,
-                        });
+                        reply.send(Reply::FfnDone { layer, expert, out, tag });
                     }
                     Err(e) => {
-                        let _ = reply.send(Reply::Err(format!(
+                        reply.send(Reply::Err(format!(
                             "worker {me} ffn l{layer} e{expert}: {e:#}"
                         )));
                     }
@@ -541,7 +734,7 @@ fn worker_main(
                 match run_expert_ffn_batch(&runtime, &programs, &experts, &batch) {
                     Ok(data) => {
                         let ExpertFfnBatch { layer, experts: ex, tag, .. } = batch;
-                        let _ = reply.send(Reply::FfnBatchDone(FfnBatchResult {
+                        reply.send(Reply::FfnBatchDone(FfnBatchResult {
                             layer,
                             experts: ex,
                             data,
@@ -549,20 +742,99 @@ fn worker_main(
                         }));
                     }
                     Err(e) => {
-                        let _ = reply.send(Reply::Err(format!(
+                        reply.send(Reply::Err(format!(
                             "worker {me} ffn batch l{}: {e:#}",
                             batch.layer
                         )));
                     }
                 }
             }
+            Cmd::RelayFfnBatch { parts } => {
+                // This worker is the node's relay for one exchange: forward
+                // node-mates' batches first (so they compute concurrently),
+                // then run our own share, then gather.
+                let Some((_, first)) = parts.first() else {
+                    continue;
+                };
+                let (layer, tag) = (first.layer, first.tag);
+                relays.insert(
+                    tag,
+                    RelayPending {
+                        layer,
+                        expected: parts.len(),
+                        parts: Vec::new(),
+                    },
+                );
+                let mut own = Vec::new();
+                for (dest, batch) in parts {
+                    if dest == me {
+                        own.push(batch);
+                    } else {
+                        traffic.intra_bytes.fetch_add(
+                            batch.data.byte_len() as u64,
+                            Ordering::Relaxed,
+                        );
+                        traffic.intra_messages.fetch_add(1, Ordering::Relaxed);
+                        let _ = peers[dest]
+                            .send(Cmd::RelayedFfnBatch { batch, relay: me });
+                    }
+                }
+                for batch in own {
+                    match run_expert_ffn_batch(
+                        &runtime, &programs, &experts, &batch,
+                    ) {
+                        Ok(data) => {
+                            let ExpertFfnBatch { layer, experts: ex, tag, .. } =
+                                batch;
+                            relay_gather(
+                                me,
+                                &mut relays,
+                                &reply,
+                                FfnBatchResult { layer, experts: ex, data, tag },
+                            );
+                        }
+                        Err(e) => {
+                            reply.send(Reply::Err(format!(
+                                "worker {me} relay ffn batch l{}: {e:#}",
+                                batch.layer
+                            )));
+                        }
+                    }
+                }
+            }
+            Cmd::RelayedFfnBatch { batch, relay } => {
+                // Our share of a relayed exchange: compute, send the result
+                // back over the intra-node link — never to the leader.
+                match run_expert_ffn_batch(&runtime, &programs, &experts, &batch)
+                {
+                    Ok(data) => {
+                        let ExpertFfnBatch { layer, experts: ex, tag, .. } = batch;
+                        let r = FfnBatchResult { layer, experts: ex, data, tag };
+                        traffic.intra_bytes.fetch_add(
+                            r.data.byte_len() as u64,
+                            Ordering::Relaxed,
+                        );
+                        traffic.intra_messages.fetch_add(1, Ordering::Relaxed);
+                        let _ = peers[relay].send(Cmd::RelayResult(r));
+                    }
+                    Err(e) => {
+                        reply.send(Reply::Err(format!(
+                            "worker {me} relayed ffn batch l{}: {e:#}",
+                            batch.layer
+                        )));
+                    }
+                }
+            }
+            Cmd::RelayResult(r) => {
+                relay_gather(me, &mut relays, &reply, r);
+            }
             Cmd::Forward { to, payload, tag } => {
                 // Relay hop: push to the destination peer, ack the leader.
                 let _ = peers[to].send(Cmd::Deliver { from: me, payload, tag });
-                let _ = reply.send(Reply::Forwarded);
+                reply.send(Reply::Forwarded);
             }
             Cmd::Deliver { from, payload, tag } => {
-                let _ = reply.send(Reply::Delivered {
+                reply.send(Reply::Delivered {
                     worker: me,
                     from,
                     bytes: payload.len(),

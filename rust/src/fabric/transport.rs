@@ -1,0 +1,335 @@
+//! Leader↔worker transports: the worker protocol behind a seam.
+//!
+//! [`Fabric`](super::Fabric) speaks to its workers exclusively through the
+//! [`Transport`] trait — send a `Cmd`, receive a [`Reply`] — so the wire is
+//! swappable without touching dispatch, relay, stash or traffic logic:
+//!
+//! * [`ChannelTransport`] (default): the original in-process bounded-channel
+//!   fast path.  Commands and replies move as Rust values, zero
+//!   serialization — one `mpsc` sender per worker, one shared reply channel.
+//! * [`SocketTransport`]: every leader↔worker command and reply crosses a
+//!   `UnixStream` as a length-prefixed [`frame`](super::frame) — the full
+//!   worker protocol is serialized, so running workers as separate
+//!   *processes* (or hosts) is a process-launch detail, not a protocol
+//!   change.  Workers still run as threads here; per worker there is an
+//!   ingress thread (socket → the worker's command channel) and a
+//!   leader-side reader thread (socket → the shared reply channel), so the
+//!   worker main loop and the leader collection loops are transport-blind.
+//!
+//! Worker↔worker peer links (hierarchical relay traffic, `route`) remain
+//! in-process channels in both transports: they model the NVLink-class
+//! intra-node links of §5.3, and the frame codec already covers the peer
+//! commands for a future socket-per-peer-pair fabric.
+
+use std::io::BufReader;
+use std::os::unix::net::UnixStream;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::{frame, worker_main, Cmd, Reply, Traffic, WorkerPrograms};
+
+/// Which wire the leader↔worker protocol runs over (`DSMOE_TRANSPORT`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process bounded channels (default fast path).
+    Channel,
+    /// Unix-domain sockets carrying length-prefixed serialized frames.
+    Socket,
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "channel" => Ok(TransportKind::Channel),
+            "socket" => Ok(TransportKind::Socket),
+            other => Err(format!(
+                "unknown transport {other:?} (expected channel|socket)"
+            )),
+        }
+    }
+}
+
+impl TransportKind {
+    /// Read `DSMOE_TRANSPORT`: unset → `Channel` (silently); anything that
+    /// is not `channel`/`socket` warns on stderr and falls back to
+    /// `Channel` (same contract as `util::env_pos_usize`).
+    pub fn from_env() -> Self {
+        let Some(raw) = std::env::var_os("DSMOE_TRANSPORT") else {
+            return TransportKind::Channel;
+        };
+        let s = raw.to_string_lossy();
+        s.parse().unwrap_or_else(|e| {
+            eprintln!("[config] DSMOE_TRANSPORT={s:?}: {e}; falling back to channel");
+            TransportKind::Channel
+        })
+    }
+}
+
+/// The leader's view of the wire: post a command to a worker, take the next
+/// reply (any worker).  Implementations own the worker threads and join
+/// them on `shutdown` (idempotent — also called from `Fabric::drop`).
+pub(super) trait Transport: Send {
+    fn send(&self, worker: usize, cmd: Cmd) -> Result<()>;
+    fn recv_reply(&self) -> Result<Reply>;
+    fn try_recv_reply(&self) -> Result<Option<Reply>>;
+    fn shutdown(&mut self);
+}
+
+fn recv_shared(rx: &Receiver<Reply>) -> Result<Reply> {
+    rx.recv().context("fabric workers disconnected")
+}
+
+fn try_recv_shared(rx: &Receiver<Reply>) -> Result<Option<Reply>> {
+    match rx.try_recv() {
+        Ok(r) => Ok(Some(r)),
+        Err(TryRecvError::Empty) => Ok(None),
+        Err(TryRecvError::Disconnected) => {
+            anyhow::bail!("fabric workers disconnected")
+        }
+    }
+}
+
+/// Where a worker sends its replies: a channel in the default transport, an
+/// encoded frame on its socket in the socket transport.  Send errors are
+/// dropped like the original channel path (the leader notices a dead worker
+/// through its own receive side).
+pub(super) enum ReplySink {
+    Channel(Sender<Reply>),
+    Socket(UnixStream),
+}
+
+impl ReplySink {
+    pub(super) fn send(&self, r: Reply) {
+        match self {
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            ReplySink::Socket(s) => {
+                let _ = frame::write_frame(s, &frame::encode_reply(&r));
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- channel wire
+
+/// The original in-process transport: one command channel per worker, one
+/// shared reply channel.  Zero serialization.
+pub(super) struct ChannelTransport {
+    txs: Vec<Sender<Cmd>>,
+    reply_rx: Receiver<Reply>,
+    joins: Vec<Option<JoinHandle<()>>>,
+}
+
+impl ChannelTransport {
+    /// Spawn `n` worker threads; returns the transport plus the per-worker
+    /// command senders that double as the peer-to-peer links.
+    pub(super) fn spawn(
+        n: usize,
+        programs: WorkerPrograms,
+        traffic: Arc<Traffic>,
+    ) -> Result<(Self, Vec<Sender<Cmd>>)> {
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let chans: Vec<(Sender<Cmd>, Receiver<Cmd>)> =
+            (0..n).map(|_| channel()).collect();
+        let peer_txs: Vec<Sender<Cmd>> =
+            chans.iter().map(|(tx, _)| tx.clone()).collect();
+        let mut txs = Vec::new();
+        let mut joins = Vec::new();
+        for (w, (tx, rx)) in chans.into_iter().enumerate() {
+            let sink = ReplySink::Channel(reply_tx.clone());
+            let progs = programs.clone();
+            let peers = peer_txs.clone();
+            let traffic_w = traffic.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("dsmoe-worker-{w}"))
+                .spawn(move || worker_main(w, rx, sink, progs, peers, traffic_w))
+                .context("spawning worker")?;
+            txs.push(tx);
+            joins.push(Some(join));
+        }
+        Ok((ChannelTransport { txs, reply_rx, joins }, peer_txs))
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&self, worker: usize, cmd: Cmd) -> Result<()> {
+        self.txs[worker].send(cmd).context("worker gone")
+    }
+
+    fn recv_reply(&self) -> Result<Reply> {
+        recv_shared(&self.reply_rx)
+    }
+
+    fn try_recv_reply(&self) -> Result<Option<Reply>> {
+        try_recv_shared(&self.reply_rx)
+    }
+
+    fn shutdown(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for j in &mut self.joins {
+            if let Some(j) = j.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ socket wire
+
+/// Unix-domain-socket transport: the leader writes command frames to each
+/// worker's socket; per worker, an ingress thread decodes them into the
+/// worker's command channel (where peer messages also arrive) and a
+/// leader-side reader thread decodes reply frames into the shared reply
+/// channel.
+pub(super) struct SocketTransport {
+    leader: Vec<UnixStream>,
+    reply_rx: Receiver<Reply>,
+    joins: Vec<Option<JoinHandle<()>>>,
+}
+
+impl SocketTransport {
+    pub(super) fn spawn(
+        n: usize,
+        programs: WorkerPrograms,
+        traffic: Arc<Traffic>,
+    ) -> Result<(Self, Vec<Sender<Cmd>>)> {
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let chans: Vec<(Sender<Cmd>, Receiver<Cmd>)> =
+            (0..n).map(|_| channel()).collect();
+        let peer_txs: Vec<Sender<Cmd>> =
+            chans.iter().map(|(tx, _)| tx.clone()).collect();
+        let mut leader = Vec::new();
+        let mut joins = Vec::new();
+        for (w, (cmd_tx, cmd_rx)) in chans.into_iter().enumerate() {
+            let (leader_end, worker_end) =
+                UnixStream::pair().context("socketpair")?;
+            // Worker thread: same main loop as the channel transport, but
+            // replies leave as frames on its end of the socket.
+            let sink = ReplySink::Socket(
+                worker_end.try_clone().context("cloning worker socket")?,
+            );
+            let progs = programs.clone();
+            let peers = peer_txs.clone();
+            let traffic_w = traffic.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("dsmoe-worker-{w}"))
+                .spawn(move || {
+                    worker_main(w, cmd_rx, sink, progs, peers, traffic_w)
+                })
+                .context("spawning worker")?;
+            joins.push(Some(join));
+            // Ingress: command frames off the socket into the channel the
+            // worker (and its peers) already read from.
+            let join = std::thread::Builder::new()
+                .name(format!("dsmoe-wio-{w}"))
+                .spawn(move || ingress_loop(w, worker_end, cmd_tx))
+                .context("spawning worker ingress")?;
+            joins.push(Some(join));
+            // Leader-side reader: reply frames into the shared channel.
+            let reader = leader_end.try_clone().context("cloning leader socket")?;
+            let rtx = reply_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("dsmoe-lrx-{w}"))
+                .spawn(move || reader_loop(w, reader, rtx))
+                .context("spawning reply reader")?;
+            joins.push(Some(join));
+            leader.push(leader_end);
+        }
+        Ok((SocketTransport { leader, reply_rx, joins }, peer_txs))
+    }
+}
+
+/// Worker-side: socket → command channel.  Exits on leader EOF or after
+/// forwarding `Shutdown`; a corrupt frame shuts the worker down loudly.
+fn ingress_loop(w: usize, sock: UnixStream, tx: Sender<Cmd>) {
+    let mut r = BufReader::new(sock);
+    loop {
+        match frame::read_frame(&mut r) {
+            Ok(None) => break,
+            Ok(Some(payload)) => match frame::decode_cmd(&payload) {
+                Ok(cmd) => {
+                    let stop = matches!(cmd, Cmd::Shutdown);
+                    if tx.send(cmd).is_err() || stop {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[fabric] worker {w} ingress: bad frame: {e:#}");
+                    let _ = tx.send(Cmd::Shutdown);
+                    break;
+                }
+            },
+            Err(e) => {
+                eprintln!("[fabric] worker {w} ingress: {e:#}");
+                let _ = tx.send(Cmd::Shutdown);
+                break;
+            }
+        }
+    }
+}
+
+/// Leader-side: socket → shared reply channel.  A broken reply stream is
+/// surfaced as a `Reply::Err` so blocking collects fail loudly instead of
+/// hanging.
+fn reader_loop(w: usize, sock: UnixStream, tx: Sender<Reply>) {
+    let mut r = BufReader::new(sock);
+    loop {
+        match frame::read_frame(&mut r) {
+            Ok(None) => break,
+            Ok(Some(payload)) => match frame::decode_reply(&payload) {
+                Ok(reply) => {
+                    if tx.send(reply).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(Reply::Err(format!(
+                        "worker {w}: bad reply frame: {e:#}"
+                    )));
+                    break;
+                }
+            },
+            Err(e) => {
+                let _ = tx.send(Reply::Err(format!(
+                    "worker {w}: reply stream: {e:#}"
+                )));
+                break;
+            }
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send(&self, worker: usize, cmd: Cmd) -> Result<()> {
+        frame::write_frame(&self.leader[worker], &frame::encode_cmd(&cmd))
+            .context("worker gone")
+    }
+
+    fn recv_reply(&self) -> Result<Reply> {
+        recv_shared(&self.reply_rx)
+    }
+
+    fn try_recv_reply(&self) -> Result<Option<Reply>> {
+        try_recv_shared(&self.reply_rx)
+    }
+
+    fn shutdown(&mut self) {
+        for s in &self.leader {
+            let _ = frame::write_frame(s, &frame::encode_cmd(&Cmd::Shutdown));
+        }
+        // Shutdown frames make each ingress forward + exit and each worker
+        // break; the worker dropping its socket end EOFs the reader.
+        for j in &mut self.joins {
+            if let Some(j) = j.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}

@@ -13,6 +13,7 @@ use anyhow::{Context, Result};
 
 use ds_moe::config::{AllToAllKind, ServingConfig};
 use ds_moe::data::{Corpus, CorpusConfig, EvalSuite};
+use ds_moe::fabric::TransportKind;
 use ds_moe::runtime::Manifest;
 use ds_moe::server::{ttft_percentile, Engine, EpEngine, Scheduler};
 use ds_moe::simulator;
@@ -150,6 +151,19 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         "no-interleave", false,
         "stop-the-world admission prefills (DSMOE_NO_INTERLEAVE)",
     );
+    let live_a2a = args.get(
+        "a2a", "",
+        "live dispatch schedule: flat|hierarchical (default: DSMOE_A2A)",
+    );
+    let node_size = args.get_usize(
+        "node-size", 0,
+        "workers per node for hierarchical dispatch \
+         (0 = DSMOE_NODE_SIZE / derived)",
+    );
+    let transport = args.get(
+        "transport", "",
+        "fabric wire: channel|socket (default: DSMOE_TRANSPORT)",
+    );
     let legacy = args.get_bool(
         "legacy", false,
         "fixed-lane driver (no request admission; pre-scheduler behaviour)",
@@ -163,7 +177,25 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         return Ok(());
     }
     let corpus = corpus(&mut args);
-    let mut ep = EpEngine::new(&m, &model, workers, a2a, batch)?;
+    let transport: TransportKind = if transport.is_empty() {
+        TransportKind::from_env()
+    } else {
+        transport.parse().map_err(anyhow::Error::msg)?
+    };
+    let mut ep = EpEngine::new_with_transport(
+        &m, &model, workers, a2a, batch, transport,
+    )?;
+    if node_size > 0 {
+        ep.set_node_size(node_size);
+    }
+    match live_a2a.as_str() {
+        "" => {} // keep the DSMOE_A2A-derived setting
+        "flat" => ep.set_a2a_hierarchical(false),
+        "hierarchical" | "hier" => ep.set_a2a_hierarchical(true),
+        other => anyhow::bail!(
+            "--a2a expects flat|hierarchical, got {other:?}"
+        ),
+    }
     if serial {
         ep.set_serial_moe(true);
     }
@@ -274,9 +306,24 @@ fn ep_serve_fixed(
 }
 
 fn ep_report(ep: &EpEngine) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let t = ep.traffic();
     println!("traffic: {} bytes total, {} expert messages",
-             ep.traffic().total_bytes(),
-             ep.traffic().messages.load(std::sync::atomic::Ordering::Relaxed));
+             t.total_bytes(),
+             t.messages.load(Relaxed));
+    println!(
+        "         cross-node {} bytes / {} msgs, \
+         intra-node {} bytes / {} msgs ({})",
+        t.cross_bytes.load(Relaxed),
+        t.cross_messages.load(Relaxed),
+        t.intra_bytes.load(Relaxed),
+        t.intra_messages.load(Relaxed),
+        if ep.a2a_hierarchical() {
+            format!("hierarchical a2a, node size {}", ep.node_size())
+        } else {
+            "flat a2a".to_string()
+        }
+    );
     for s in &ep.load_stats {
         println!(
             "layer {}: imbalance {:.2} entropy {:.2} utilization {:.0}%",

@@ -138,6 +138,21 @@
 //! |                       | is unavoidable whenever live lanes don't     |
 //! |                       | divide evenly, so 2 is the smallest          |
 //! |                       | actionable imbalance.                        |
+//! | `DSMOE_A2A`           | `hierarchical` routes the live expert        |
+//! |                       | exchange through the two-stage relay         |
+//! |                       | schedule (intra-node gather at a relay       |
+//! |                       | worker, then one cross-node message per      |
+//! |                       | node); `flat`/unset keeps one message per    |
+//! |                       | worker ([`EpEngine::set_a2a_hierarchical`]). |
+//! | `DSMOE_NODE_SIZE`     | workers per node for the hierarchical        |
+//! |                       | schedule (shared `Topology` parser: must be  |
+//! |                       | a positive divisor of the worker count, else |
+//! |                       | warn + flat; [`EpEngine::set_node_size`]).   |
+//! | `DSMOE_TRANSPORT`     | fabric wire for leader↔worker traffic:       |
+//! |                       | `channel` (default, in-process bounded       |
+//! |                       | channels) or `socket` (Unix-domain sockets   |
+//! |                       | carrying length-prefixed serialized frames;  |
+//! |                       | [`EpEngine::new_with_transport`]).           |
 //!
 //! All paths — serial, overlapped, pipelined at any depth, single- or
 //! multi-threaded leader — produce **bit-identical** logits for prefill
@@ -156,7 +171,10 @@ use anyhow::{Context, Result};
 use crate::config::{AllToAllKind, ModelConfig};
 use crate::coordinator::kv_cache::{copy_lane, split_lanes};
 use crate::coordinator::{Placement, Request, Routing};
-use crate::fabric::{ExpertFfnBatch, Fabric, FfnBatchResult, WorkerPrograms};
+use crate::fabric::{
+    A2aMode, ExpertFfnBatch, Fabric, FfnBatchResult, TransportKind,
+    WorkerPrograms,
+};
 use crate::metrics::Metrics;
 use crate::moe::ExpertLoadStats;
 use crate::runtime::{Checkpoint, HostTensor, Manifest, SharedArtifacts};
@@ -184,6 +202,11 @@ pub struct EpEngine {
     /// layers): O(1) per-layer lookup instead of a linear scan.
     stats_idx: Vec<Option<usize>>,
     alltoall: AllToAllKind,
+    /// Workers per node for the live hierarchical dispatch
+    /// (`DSMOE_NODE_SIZE` via the shared `Topology::node_size_from_env`
+    /// parser); applied to the fabric whenever hierarchical routing is
+    /// (re)enabled.
+    node_size: usize,
     /// Decode KV caches in per-microbatch lane groups; each group holds
     /// per-layer `[lanes, H, Smax, hd]` tensors (monolithic layout is
     /// `[L, B, ...]`).  One group when the pipeline is off, N when on.
@@ -452,6 +475,28 @@ impl InflightMoe {
     }
 }
 
+/// Parse `DSMOE_A2A` into "hierarchical live dispatch?".  Unset or
+/// `flat` keeps the flat per-worker schedule; `hierarchical` (or the
+/// short form `hier`) enables the §5.3 two-stage relay schedule.  Any
+/// other value warns and falls back to flat so a typo can never
+/// silently change the dispatch path.
+fn a2a_hier_from_env() -> bool {
+    match std::env::var("DSMOE_A2A") {
+        Ok(v) => match v.trim() {
+            "hierarchical" | "hier" => true,
+            "flat" | "" => false,
+            other => {
+                eprintln!(
+                    "[config] DSMOE_A2A={other:?} is not \"flat\" or \
+                     \"hierarchical\"; falling back to flat dispatch"
+                );
+                false
+            }
+        },
+        Err(_) => false,
+    }
+}
+
 impl EpEngine {
     pub fn new(
         manifest: &Manifest,
@@ -459,6 +504,28 @@ impl EpEngine {
         workers: usize,
         alltoall: AllToAllKind,
         batch: usize,
+    ) -> Result<EpEngine> {
+        Self::new_with_transport(
+            manifest,
+            model,
+            workers,
+            alltoall,
+            batch,
+            TransportKind::from_env(),
+        )
+    }
+
+    /// [`EpEngine::new`] with an explicit fabric transport (the transport
+    /// is fixed at worker spawn time; `new` reads `DSMOE_TRANSPORT`).
+    /// Exposed so tests and benches can compare channel vs. socket fabrics
+    /// in one process without racing on the environment.
+    pub fn new_with_transport(
+        manifest: &Manifest,
+        model: &str,
+        workers: usize,
+        alltoall: AllToAllKind,
+        batch: usize,
+        transport: TransportKind,
     ) -> Result<EpEngine> {
         let model_arts = manifest.model(model)?;
         let cfg = model_arts.config.clone();
@@ -485,7 +552,19 @@ impl EpEngine {
         anyhow::ensure!(!ladder.is_empty(), "no expert_ffn programs for m{m} f{f}");
 
         let placement = Placement::for_model(&cfg, workers);
-        let fabric = Fabric::spawn(workers, WorkerPrograms { expert_ffn: ladder })?;
+        let mut fabric = Fabric::spawn_with(
+            workers,
+            WorkerPrograms { expert_ffn: ladder },
+            transport,
+        )?;
+        // Live-dispatch all-to-all routing: flat by default, the §5.3
+        // hierarchical schedule behind `DSMOE_A2A=hierarchical`, node size
+        // from the single shared `DSMOE_NODE_SIZE` parser.
+        let node_size =
+            crate::coordinator::alltoall::Topology::node_size_from_env(workers);
+        if a2a_hier_from_env() {
+            fabric.set_a2a(A2aMode::Hierarchical { node_size });
+        }
 
         // Ship expert weights to their owners.
         for w in 0..workers {
@@ -563,6 +642,7 @@ impl EpEngine {
             load_stats,
             stats_idx,
             alltoall,
+            node_size,
             caches: Vec::new(),
             batch,
             serial_moe: std::env::var_os("DSMOE_SERIAL_MOE")
@@ -601,6 +681,42 @@ impl EpEngine {
 
     pub fn serial_moe(&self) -> bool {
         self.serial_moe
+    }
+
+    /// Route the live expert exchange through the hierarchical (two-stage
+    /// relay) all-to-all schedule instead of the flat per-worker one.
+    /// Defaults to the `DSMOE_A2A` env toggle; exposed programmatically so
+    /// parity tests and benches can compare both schedules in one process
+    /// without racing on the environment.  The node size applied is the
+    /// engine's current [`EpEngine::node_size`].
+    pub fn set_a2a_hierarchical(&mut self, hier: bool) {
+        if hier {
+            let node_size = self.node_size;
+            self.fabric.set_a2a(A2aMode::Hierarchical { node_size });
+        } else {
+            self.fabric.set_a2a(A2aMode::Flat);
+        }
+    }
+
+    pub fn a2a_hierarchical(&self) -> bool {
+        matches!(self.fabric.a2a(), A2aMode::Hierarchical { .. })
+    }
+
+    /// Override the workers-per-node grouping used by the hierarchical
+    /// schedule (defaults to `DSMOE_NODE_SIZE` via the shared
+    /// `Topology::node_size_from_env` parser).  Re-applies immediately if
+    /// hierarchical routing is already active; the fabric itself still
+    /// falls back to flat when the value does not divide the worker count.
+    pub fn set_node_size(&mut self, node_size: usize) {
+        self.node_size = node_size.max(1);
+        if self.a2a_hierarchical() {
+            let node_size = self.node_size;
+            self.fabric.set_a2a(A2aMode::Hierarchical { node_size });
+        }
+    }
+
+    pub fn node_size(&self) -> usize {
+        self.node_size
     }
 
     /// Enable/disable the microbatch-interleaved pipeline (defaults to the
@@ -1231,19 +1347,22 @@ impl EpEngine {
                         }
                         self.exchange_seq += 1;
                         let tag = self.exchange_seq;
-                        let mut outstanding = 0usize;
-                        for b in batches {
-                            self.fabric.dispatch_ffn_batch(
-                                b.worker,
-                                ExpertFfnBatch {
-                                    layer,
-                                    experts: b.experts,
-                                    data: b.data,
-                                    tag,
-                                },
-                            )?;
-                            outstanding += 1;
-                        }
+                        let batches: Vec<(usize, ExpertFfnBatch)> = batches
+                            .into_iter()
+                            .map(|b| {
+                                (
+                                    b.worker,
+                                    ExpertFfnBatch {
+                                        layer,
+                                        experts: b.experts,
+                                        data: b.data,
+                                        tag,
+                                    },
+                                )
+                            })
+                            .collect();
+                        let outstanding =
+                            self.fabric.dispatch_exchange(batches)?;
                         self.open_tags.push(tag);
                         pending.push_back(OpenExchange {
                             shard,
@@ -2159,19 +2278,21 @@ impl EpEngine {
         }
         self.exchange_seq += 1;
         let exchange_tag = self.exchange_seq;
-        let mut outstanding = 0usize;
-        for b in batches {
-            self.fabric.dispatch_ffn_batch(
-                b.worker,
-                ExpertFfnBatch {
-                    layer,
-                    experts: b.experts,
-                    data: b.data,
-                    tag: exchange_tag,
-                },
-            )?;
-            outstanding += 1;
-        }
+        let batches: Vec<(usize, ExpertFfnBatch)> = batches
+            .into_iter()
+            .map(|b| {
+                (
+                    b.worker,
+                    ExpertFfnBatch {
+                        layer,
+                        experts: b.experts,
+                        data: b.data,
+                        tag: exchange_tag,
+                    },
+                )
+            })
+            .collect();
+        let outstanding = self.fabric.dispatch_exchange(batches)?;
         self.open_tags.push(exchange_tag);
         Ok(InflightMoe {
             layer,

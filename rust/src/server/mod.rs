@@ -82,6 +82,19 @@
 //! |                        | baseline, §Perf).  The EP engine's          |
 //! |                        | per-group mirrors have no toggle — splices  |
 //! |                        | and regroups always write through them.     |
+//! | `DSMOE_A2A`            | `hierarchical`: route the live expert       |
+//! |                        | exchange through the §5.3 two-stage relay   |
+//! |                        | schedule — O(nodes) cross-node messages per |
+//! |                        | direction per MoE layer instead of          |
+//! |                        | O(workers) (default `flat`; bit-identical). |
+//! | `DSMOE_NODE_SIZE`      | workers per node for hierarchical dispatch  |
+//! |                        | and plan accounting; must be a positive     |
+//! |                        | divisor of the worker count (else warn +    |
+//! |                        | flat).  Unset: largest divisor ≤ 8.         |
+//! | `DSMOE_TRANSPORT`      | leader↔worker wire: `channel` (in-process,  |
+//! |                        | default) or `socket` (Unix sockets with     |
+//! |                        | length-prefixed serialized frames — the     |
+//! |                        | separate-process worker protocol).          |
 
 pub mod engine;
 pub mod ep;

@@ -114,6 +114,10 @@ pub(crate) struct Backbone {
     alltoall: AllToAllKind,
     /// Fabric worker count (sizes the per-worker pack lists).
     workers: usize,
+    /// Hierarchical node size for plan accounting, derived once per thread
+    /// by the single shared parser (`Topology::node_size_from_env`) —
+    /// never a hard-coded 8.
+    node_size: usize,
     pub(crate) metrics: Arc<Metrics>,
 }
 
@@ -128,6 +132,7 @@ impl Backbone {
     ) -> Result<Backbone> {
         let rt = Runtime::cpu()?;
         let params = arts.materialize_dense_params()?;
+        let node_size = Topology::node_size_from_env(workers);
         Ok(Backbone {
             rt,
             cfg,
@@ -137,6 +142,7 @@ impl Backbone {
             placement,
             alltoall,
             workers,
+            node_size,
             metrics,
         })
     }
@@ -466,7 +472,7 @@ impl Backbone {
         }
         let topo = Topology {
             workers: ep,
-            node_size: ep.min(8),
+            node_size: self.node_size.min(ep).max(1),
             ts_degree: 1,
         };
         alltoall::plan(self.alltoall, topo, &bytes)

@@ -7,7 +7,9 @@ use std::sync::atomic::Ordering;
 
 use ds_moe::config::AllToAllKind;
 use ds_moe::coordinator::alltoall::{plan, uniform_bytes, Topology};
-use ds_moe::fabric::{ExpertFfnBatch, Fabric, WorkerPrograms};
+use ds_moe::fabric::{
+    A2aMode, ExpertFfnBatch, Fabric, TransportKind, WorkerPrograms,
+};
 use ds_moe::runtime::{HostTensor, Manifest};
 use ds_moe::server::EpEngine;
 
@@ -450,6 +452,222 @@ fn stash_bounded_at_ring_depth_4() {
         );
     }
     assert_eq!(fabric.stash_depth(), 0, "stash must drain at depth 4");
+    fabric.shutdown();
+}
+
+/// One whole exchange generation dispatched three ways — flat over
+/// channels (the reference), hierarchical over channels, hierarchical
+/// over the socket transport — must produce bitwise-identical expert
+/// outputs, while the hierarchical schedule sends O(nodes) cross-node
+/// messages per direction instead of O(workers) and pays the §5.3
+/// intra-node relay volume (measured, not assumed).
+#[test]
+fn hierarchical_and_socket_exchanges_match_flat_bitwise() {
+    let Some(m) = manifest() else { return };
+    let (mdim, f) = (128usize, 512usize);
+    let workers = 4usize;
+    let node_size = 2usize;
+    let counts = [3usize, 5, 2, 4];
+    let scales = [(0.5, 2.0), (0.25, 4.0), (1.0, 1.0), (0.75, 3.0)];
+    let blocks: Vec<Vec<f32>> = counts
+        .iter()
+        .enumerate()
+        .map(|(w, &c)| {
+            (0..c * mdim)
+                .map(|i| ((i % 11) as f32 - 5.0) * 0.125 + w as f32 * 0.01)
+                .collect()
+        })
+        .collect();
+    let load = |fabric: &Fabric| {
+        for w in 0..workers {
+            fabric
+                .load_expert(
+                    w,
+                    0,
+                    w,
+                    diag_weights(mdim, f, scales[w].0, scales[w].1),
+                )
+                .unwrap();
+        }
+    };
+    let mk_batches = |tag: u64| -> Vec<(usize, ExpertFfnBatch)> {
+        (0..workers)
+            .map(|w| {
+                (
+                    w,
+                    ExpertFfnBatch {
+                        layer: 0,
+                        experts: vec![(w, counts[w])],
+                        data: HostTensor::f32(
+                            &[counts[w], mdim],
+                            blocks[w].clone(),
+                        ),
+                        tag,
+                    },
+                )
+            })
+            .collect()
+    };
+    // Run one exchange, return per-expert outputs plus the observed
+    // (cross msgs, intra msgs, intra bytes) deltas.
+    let run = |fabric: &Fabric, tag: u64| -> (Vec<Vec<f32>>, u64, u64, u64) {
+        let c0 = fabric.traffic.cross_messages.load(Ordering::Relaxed);
+        let i0 = fabric.traffic.intra_messages.load(Ordering::Relaxed);
+        let b0 = fabric.traffic.intra_bytes.load(Ordering::Relaxed);
+        let outstanding = fabric.dispatch_exchange(mk_batches(tag)).unwrap();
+        assert_eq!(outstanding, workers, "one part per worker either way");
+        let results =
+            fabric.collect_ffn_batches(outstanding, 0, tag, &[]).unwrap();
+        assert_eq!(results.len(), workers);
+        let mut out = vec![Vec::new(); workers];
+        for r in &results {
+            assert_eq!((r.layer, r.tag), (0, tag));
+            assert_eq!(r.experts.len(), 1);
+            let (e, c) = r.experts[0];
+            assert_eq!(c, counts[e]);
+            out[e] = r.data.as_f32().unwrap().to_vec();
+        }
+        (
+            out,
+            fabric.traffic.cross_messages.load(Ordering::Relaxed) - c0,
+            fabric.traffic.intra_messages.load(Ordering::Relaxed) - i0,
+            fabric.traffic.intra_bytes.load(Ordering::Relaxed) - b0,
+        )
+    };
+
+    // Flat over channels: the reference.
+    let fabric = Fabric::spawn(workers, worker_programs(&m)).unwrap();
+    load(&fabric);
+    let (want, cross, intra, _) = run(&fabric, 5);
+    assert_eq!(cross, 2 * workers as u64, "flat: one msg per worker per direction");
+    assert_eq!(intra, 0, "flat dispatch uses no intra-node links");
+    fabric.shutdown();
+
+    for kind in [TransportKind::Channel, TransportKind::Socket] {
+        let mut fabric =
+            Fabric::spawn_with(workers, worker_programs(&m), kind).unwrap();
+        fabric.set_a2a(A2aMode::Hierarchical { node_size });
+        assert_eq!(fabric.a2a(), A2aMode::Hierarchical { node_size });
+        load(&fabric);
+        let (got, cross, intra, intra_b) = run(&fabric, 6);
+        let nodes = (workers / node_size) as u64;
+        assert_eq!(
+            cross,
+            2 * nodes,
+            "{kind:?}: hierarchical sends O(nodes) cross-node msgs"
+        );
+        // Each relay forwards node_size-1 batches out and gathers as many
+        // results back over intra-node links.
+        assert_eq!(intra, 2 * nodes * (node_size as u64 - 1), "{kind:?}");
+        assert!(intra_b > 0, "{kind:?}: relay volume must be counted");
+        for e in 0..workers {
+            assert_eq!(
+                got[e], want[e],
+                "{kind:?}: expert {e} output differs from flat dispatch"
+            );
+        }
+        fabric.shutdown();
+    }
+}
+
+/// A node size that does not divide the worker count falls back to flat
+/// dispatch (same contract as the `DSMOE_NODE_SIZE` parser) instead of
+/// silently mis-grouping workers.
+#[test]
+fn non_dividing_node_size_falls_back_to_flat() {
+    let Some(m) = manifest() else { return };
+    let mut fabric = Fabric::spawn(3, worker_programs(&m)).unwrap();
+    fabric.set_a2a(A2aMode::Hierarchical { node_size: 2 });
+    assert_eq!(fabric.a2a(), A2aMode::Flat);
+    fabric.set_a2a(A2aMode::Hierarchical { node_size: 1 });
+    assert_eq!(fabric.a2a(), A2aMode::Flat, "node size 1 degenerates to flat");
+    fabric.shutdown();
+}
+
+/// Satellite of the stash bound: a relay's coalesced reply carrying one
+/// part per node worker must occupy exactly **one** stash slot — the
+/// per-generation bound counts coalesced replies, not parts — and a
+/// relayed reply whose generation is neither collected nor open still
+/// fails loudly.
+#[test]
+fn relayed_reply_counts_once_in_stash_bound() {
+    let Some(m) = manifest() else { return };
+    let (mdim, f) = (128usize, 512usize);
+    let workers = 2usize; // one node of two workers; worker 0 is the relay
+    let mut fabric = Fabric::spawn(workers, worker_programs(&m)).unwrap();
+    fabric.set_a2a(A2aMode::Hierarchical { node_size: 2 });
+    fabric.load_expert(0, 0, 0, diag_weights(mdim, f, 0.5, 2.0)).unwrap();
+    fabric.load_expert(1, 0, 1, diag_weights(mdim, f, 0.25, 4.0)).unwrap();
+    let mk_batches = |tag: u64| -> Vec<(usize, ExpertFfnBatch)> {
+        (0..workers)
+            .map(|w| {
+                let c = 3 + w;
+                (
+                    w,
+                    ExpertFfnBatch {
+                        layer: 0,
+                        experts: vec![(w, c)],
+                        data: HostTensor::f32(
+                            &[c, mdim],
+                            (0..c * mdim)
+                                .map(|i| ((i % 13) as f32 - 6.0) * 0.1)
+                                .collect(),
+                        ),
+                        tag,
+                    },
+                )
+            })
+            .collect()
+    };
+
+    // Two generations in flight.  The single relay completes them in
+    // dispatch order, so collecting the *second* first forces the first
+    // generation's coalesced reply through the stash.
+    assert_eq!(fabric.dispatch_exchange(mk_batches(71)).unwrap(), 2);
+    assert_eq!(fabric.dispatch_exchange(mk_batches(72)).unwrap(), 2);
+    let r = fabric.collect_ffn_batches(2, 0, 72, &[71]).unwrap();
+    assert_eq!(r.len(), 2);
+    assert!(r.iter().all(|p| p.tag == 72));
+    assert_eq!(
+        fabric.stash_depth(),
+        1,
+        "a relay reply with 2 parts must count once, not per part"
+    );
+    let r = fabric.collect_ffn_batches(2, 0, 71, &[]).unwrap();
+    assert_eq!(r.len(), 2, "both parts come out of the one stash entry");
+    assert!(r.iter().all(|p| p.tag == 71));
+    assert_eq!(fabric.stash_depth(), 0, "stash drains after the collect");
+
+    // Stale relayed reply: its generation is neither collected nor open —
+    // loud error, and the reply is consumed rather than wedging later
+    // collects.
+    assert_eq!(fabric.dispatch_exchange(mk_batches(73)).unwrap(), 2);
+    let err = fabric
+        .collect_ffn_batches(1, 0, 99, &[])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("stale"), "{err}");
+    assert_eq!(fabric.stash_depth(), 0);
+    fabric.shutdown();
+}
+
+/// Worker errors must stay loud across the socket transport: an error
+/// reply serialized through the frame codec still fails the collect with
+/// the worker's message.
+#[test]
+fn socket_transport_errors_stay_loud() {
+    let Some(m) = manifest() else { return };
+    let fabric = Fabric::spawn_with(
+        1,
+        worker_programs(&m),
+        TransportKind::Socket,
+    )
+    .unwrap();
+    fabric
+        .dispatch_ffn(0, 0, 0, HostTensor::zeros_f32(&[1, 128]), 0)
+        .unwrap();
+    let err = fabric.collect_ffn(1).unwrap_err().to_string();
+    assert!(err.contains("not loaded"), "{err}");
     fabric.shutdown();
 }
 

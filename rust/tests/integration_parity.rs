@@ -6,6 +6,7 @@
 
 use ds_moe::config::{AllToAllKind, ServingConfig};
 use ds_moe::data::{Corpus, CorpusConfig};
+use ds_moe::fabric::TransportKind;
 use ds_moe::runtime::{Checkpoint, HostTensor, Manifest, Runtime};
 use ds_moe::server::{EpEngine, Scheduler};
 use ds_moe::tokenizer::EOS;
@@ -582,6 +583,124 @@ fn bitwise_leader_shards(model: &str, workers: usize, depth: usize) {
 
     // The tag-keyed reply stash drains fully between forwards.
     assert_eq!(sharded.fabric_stash_depth(), 0);
+}
+
+/// The live hierarchical all-to-all and the socket transport are pure
+/// schedule/wire changes: flat dispatch over channels (the reference),
+/// hierarchical dispatch over channels, and hierarchical dispatch over
+/// the socket transport must produce **bit-identical** logits for
+/// prefill and decode — the same expert blocks reach the same experts
+/// and the combine is slot-ordered, so neither the relay fan-out/fan-in
+/// nor frame serialization may perturb a single bit.  Run under the
+/// depth-N pipeline ring so relayed replies also cross the tag-keyed
+/// stash.  The hierarchical runs must actually take the relay path
+/// (cross-node messages strictly fewer, intra-node traffic non-zero).
+fn bitwise_a2a_and_transport(model: &str, workers: usize, depth: usize) {
+    let Some(m) = manifest() else { return };
+    let batch = 8usize;
+    let node_size = 2usize;
+    assert_eq!(workers % node_size, 0);
+    let cfg = m.model(model).unwrap().config.clone();
+    let smax = cfg.max_seq;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+
+    let mk = |hier: bool, transport: TransportKind| {
+        let mut e = EpEngine::new_with_transport(
+            &m,
+            model,
+            workers,
+            AllToAllKind::Hierarchical,
+            batch,
+            transport,
+        )
+        .unwrap();
+        e.set_serial_moe(false);
+        e.set_pipeline(true);
+        e.set_pipe_depth(depth);
+        // Programmatic toggles (not env) so parallel test binaries never
+        // race on DSMOE_A2A / DSMOE_NODE_SIZE / DSMOE_TRANSPORT.
+        e.set_node_size(node_size);
+        e.set_a2a_hierarchical(hier);
+        assert_eq!(e.a2a_hierarchical(), hier);
+        e
+    };
+    let mut flat = mk(false, TransportKind::Channel);
+    let mut hier = mk(true, TransportKind::Channel);
+    let mut hier_sock = mk(true, TransportKind::Socket);
+
+    let rf = flat.forward_prefill(&tokens, &lens).unwrap();
+    let rh = hier.forward_prefill(&tokens, &lens).unwrap();
+    let rs = hier_sock.forward_prefill(&tokens, &lens).unwrap();
+    assert_eq!(rh, rf, "{model}: hierarchical prefill != flat");
+    assert_eq!(rs, rf, "{model}: hierarchical/socket prefill != flat");
+
+    let mut tok: Vec<i32> = rf.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    for step in 0..3 {
+        let df = flat.forward_decode(&tok, &pos).unwrap();
+        let dh = hier.forward_decode(&tok, &pos).unwrap();
+        let ds = hier_sock.forward_decode(&tok, &pos).unwrap();
+        assert_eq!(dh, df, "{model}: hierarchical decode step {step}");
+        assert_eq!(ds, df, "{model}: hierarchical/socket decode step {step}");
+        tok = df.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+
+    // The schedules actually diverged on the wire: same workload, fewer
+    // cross-node messages hierarchically (O(nodes) vs O(workers) per
+    // direction per MoE layer) and non-zero intra-node relay traffic —
+    // the flat path must show none.
+    use std::sync::atomic::Ordering::Relaxed;
+    let cross_flat = flat.traffic().cross_messages.load(Relaxed);
+    for (name, e) in [("channel", &hier), ("socket", &hier_sock)] {
+        let t = e.traffic();
+        let cross = t.cross_messages.load(Relaxed);
+        assert!(
+            cross < cross_flat,
+            "{model}/{name}: hierarchical sent {cross} cross-node msgs, \
+             flat sent {cross_flat}"
+        );
+        assert!(t.intra_messages.load(Relaxed) > 0, "{model}/{name}");
+        assert!(t.intra_bytes.load(Relaxed) > 0, "{model}/{name}");
+    }
+    assert_eq!(flat.traffic().intra_messages.load(Relaxed), 0);
+
+    // The tag-keyed reply stash drains fully between forwards on all
+    // three engines (relayed replies included).
+    assert_eq!(flat.fabric_stash_depth(), 0);
+    assert_eq!(hier.fabric_stash_depth(), 0);
+    assert_eq!(hier_sock.fabric_stash_depth(), 0);
+}
+
+#[test]
+fn a2a_transport_bitwise_identical_depth2() {
+    bitwise_a2a_and_transport("moe-s-8", 4, 2);
+}
+
+#[test]
+fn a2a_transport_bitwise_identical_depth3() {
+    // Depth 3: uneven 3/3/2 microbatch groups, three tagged exchanges in
+    // flight — relayed coalesced replies cross the stash under pressure.
+    bitwise_a2a_and_transport("moe-s-8", 4, 3);
+}
+
+#[test]
+fn a2a_transport_bitwise_identical_prmoe() {
+    // PR-MoE: relays also serve the residual branch's expert exchanges.
+    bitwise_a2a_and_transport("prmoe-s", 4, 2);
 }
 
 #[test]

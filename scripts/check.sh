@@ -21,12 +21,21 @@ cargo test -q --test integration_serving ep_regroup_rebalances_skewed_retirement
 # oldest-first ordering invariant, and the thread-join-on-drop guard.
 cargo test -q --test integration_parity leader_shards_bitwise_identical
 cargo test -q --test integration_serving leader_shard
+# Hierarchical all-to-all + transport seam: the three-way bitwise parity
+# runs (flat/channel, hier/channel, hier/socket), the fabric-level
+# exchange parity with cross-/intra-node counter accounting, the
+# coalesced-relay-reply stash bound, and loud socket-transport errors.
+cargo test -q --test integration_parity a2a_transport_bitwise_identical
+cargo test -q --test integration_fabric hierarchical_and_socket_exchanges_match_flat_bitwise
+cargo test -q --test integration_fabric relayed_reply_counts_once_in_stash_bound
+cargo test -q --test integration_fabric socket_transport_errors_stay_loud
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 
-# Bench smoke: a short arrival trace + the depth-2 leader-parallel pair
-# through the full stack; refreshes BENCH_e2e.json so every PR records a
-# perf point (no-ops without artifacts/, like the integration tests).
+# Bench smoke: a short arrival trace, the depth-2 leader-parallel pair,
+# and the flat-vs-hierarchical all-to-all pair through the full stack;
+# refreshes BENCH_e2e.json so every PR records a perf point (no-ops
+# without artifacts/, like the integration tests).
 cargo bench --bench e2e_serving -- --smoke
 
 echo "tier-1 gate: OK"
