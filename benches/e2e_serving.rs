@@ -47,13 +47,22 @@
 //! paper's claim at testbed scale: cross-node messages per exchange drop
 //! from O(workers) to O(nodes), paid for with ~2x intra-node volume.
 //!
+//! Part 8 is the hot-expert replication study: every live token pinned to
+//! expert 0 (the deterministic worst-case skew), swept over replication
+//! R ∈ {1, 2, 4} — R=1 is today's static placement, R>1 forces the hot
+//! expert onto R workers through the same fabric weight-ship the online
+//! migrations use and splits its token block contiguously across them.
+//! The acceptance bar is R=2 landing below R=1 on decode p99 latency or
+//! on the summed `expert_wait`.
+//!
 //! Everything is also emitted to `BENCH_e2e.json` at the repo root so the
 //! perf trajectory is tracked across PRs.
 //!
 //! `--smoke` runs a minimal subset (one model, a short arrival trace, the
 //! depth-2 leader-parallel pair, the flat-vs-hierarchical all-to-all
-//! pair) and still writes `BENCH_e2e.json` — cheap enough for
-//! `scripts/check.sh`, so every PR records a perf point.
+//! pair, the R ∈ {1, 2} replication pair) and still writes
+//! `BENCH_e2e.json` — cheap enough for `scripts/check.sh`, so every PR
+//! records a perf point.
 
 use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
@@ -456,10 +465,140 @@ fn main() {
     at2.print();
     let _ = at2.save_csv("e2e_alltoall");
 
+    // --- hot-expert replication: skewed routing, R in {1, 2, 4} ----------
+    let mut he_rows = Vec::new();
+    let mut ht = Table::new(
+        "Hot-expert replication (every token pinned to expert 0)",
+        &["model", "R", "applied", "prefill", "decode", "decode p99",
+          "expert wait", "straggler wait"],
+    );
+    let he_replicas: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    for &r in he_replicas {
+        let Some(row) = hot_expert_study(&manifest, &corpus, "moe-s-8", 4, r)
+        else {
+            continue;
+        };
+        ht.row(&[
+            row.model.clone(),
+            row.replicas.to_string(),
+            row.replicas_applied.to_string(),
+            fmt_ns(row.prefill_ns as u64),
+            fmt_ns(row.decode_ns as u64),
+            fmt_ns(row.decode_p99_ns),
+            fmt_ns(row.expert_wait_ns),
+            fmt_ns(row.hot_worker_wait_ns),
+        ]);
+        he_rows.push(row);
+    }
+    ht.note("the route pin sends every live token to expert 0 — the \
+             worst-case skew the EWMA rebalancer reacts to in production.  \
+             R=1 is today's static single-owner placement; R>1 splits the \
+             hot block contiguously across the replicas shipped via \
+             fabric expert loads (bit-identical results per token).  The \
+             acceptance bar is R=2 landing below R=1 on decode p99 or on \
+             the summed expert_wait");
+    ht.print();
+    let _ = ht.save_csv("e2e_hot_expert");
+
     write_bench_json(
         &rows, &studies, &cb_rows, &depth_rows, &adm_rows, &lp_rows,
-        &a2a_rows,
+        &a2a_rows, &he_rows,
     );
+}
+
+struct HotExpertRow {
+    model: String,
+    workers: usize,
+    /// Requested replication for the pinned-hot expert.
+    replicas: usize,
+    /// What the placement actually holds after `force_replicas` (capped
+    /// by the worker count).
+    replicas_applied: usize,
+    /// Fabric weight ships performed to reach that replication.
+    migrations: u64,
+    prefill_ns: f64,
+    decode_ns: f64,
+    decode_p99_ns: u64,
+    expert_wait_ns: u64,
+    /// Straggler share of the wait: time from the first worker's reply
+    /// to the last (zero when one worker serves the whole exchange).
+    hot_worker_wait_ns: u64,
+}
+
+/// Fixed-lane forwards with every live token routed to expert 0 (the
+/// deterministic worst-case hot-expert workload) at one replication
+/// level, steady state — the replication-study row.  R=1 keeps
+/// replication off entirely (the static production path); R>1 forces the
+/// hot expert onto R workers through the same fabric weight-ship the
+/// online migrations use, with the EWMA rebalancer parked so the forced
+/// R is what gets measured.
+fn hot_expert_study(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    model: &str,
+    workers: usize,
+    replicas: usize,
+) -> Option<HotExpertRow> {
+    let batch = 8usize;
+    let mut ep = EpEngine::new(
+        manifest,
+        model,
+        workers,
+        AllToAllKind::Hierarchical,
+        batch,
+    )
+    .ok()?;
+    ep.set_serial_moe(false);
+    ep.set_pipeline(true);
+    ep.set_route_pin(Some(0));
+    if replicas > 1 {
+        ep.set_replicate_hot(true).ok()?;
+        ep.set_rebalance_skew(f64::INFINITY);
+        ep.force_replicas(0, replicas).ok()?;
+    }
+    let migrations = ep.metrics.counter("expert_migrations");
+    let replicas_applied = ep
+        .placement()
+        .layers
+        .values()
+        .map(|lp| lp.replication(0))
+        .max()
+        .unwrap_or(1);
+    let smax = ep.cfg.max_seq;
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+    let lens = vec![plen; batch];
+    let first = ep.forward_prefill(&tokens, &lens).ok()?;
+    let mut tok: Vec<i32> = first.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    ep.forward_decode(&tok, &pos).ok()?;
+    ep.metrics = std::sync::Arc::new(Metrics::new());
+    for _ in 0..2 {
+        ep.forward_prefill(&tokens, &lens).ok()?;
+    }
+    for _ in 0..8 {
+        let out = ep.forward_decode(&tok, &pos).ok()?;
+        tok = out.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    Some(HotExpertRow {
+        model: model.to_string(),
+        workers,
+        replicas,
+        replicas_applied,
+        migrations,
+        prefill_ns: ep.metrics.mean_ns("forward_prefill"),
+        decode_ns: ep.metrics.mean_ns("forward_decode"),
+        decode_p99_ns: ep.metrics.percentile_ns("forward_decode", 99.0),
+        expert_wait_ns: ep.metrics.sum_ns("expert_wait"),
+        hot_worker_wait_ns: ep.metrics.sum_ns("hot_worker_wait"),
+    })
 }
 
 struct A2aRow {
@@ -973,9 +1112,9 @@ fn pipeline_study(
 
 /// Emit `BENCH_e2e.json` at the repo root: the serving sweep, the MoE
 /// pipeline study, the continuous-batching study, the ring-depth sweep,
-/// the admission-interleaving study, the leader-parallel study, and the
-/// all-to-all schedule study, so future PRs have a machine-readable perf
-/// baseline.
+/// the admission-interleaving study, the leader-parallel study, the
+/// all-to-all schedule study, and the hot-expert replication study, so
+/// future PRs have a machine-readable perf baseline.
 #[allow(clippy::too_many_arguments)]
 fn write_bench_json(
     rows: &[ServingRow],
@@ -985,6 +1124,7 @@ fn write_bench_json(
     adm_rows: &[AdmissionRow],
     lp_rows: &[LeaderParRow],
     a2a_rows: &[A2aRow],
+    he_rows: &[HotExpertRow],
 ) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"e2e_serving\",\n  \"serving\": [\n");
@@ -1157,6 +1297,28 @@ fn write_bench_json(
             r.intra_msgs,
             r.intra_bytes,
             if i + 1 == a2a_rows.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ],\n  \"hot_expert\": [\n");
+    for (i, r) in he_rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"model\": \"{}\", \"workers\": {}, \"replicas\": {}, \
+             \"replicas_applied\": {}, \"migrations\": {}, \
+             \"prefill_ns\": {:.0}, \"decode_ns\": {:.0}, \
+             \"decode_p99_ns\": {}, \"expert_wait_ns\": {}, \
+             \"hot_worker_wait_ns\": {}}}{}\n",
+            r.model,
+            r.workers,
+            r.replicas,
+            r.replicas_applied,
+            r.migrations,
+            r.prefill_ns,
+            r.decode_ns,
+            r.decode_p99_ns,
+            r.expert_wait_ns,
+            r.hot_worker_wait_ns,
+            if i + 1 == he_rows.len() { "" } else { "," }
         );
     }
     s.push_str("  ]\n}\n");

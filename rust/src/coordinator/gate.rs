@@ -78,6 +78,42 @@ impl Routing {
         Routing { n_experts, expert, prob, slot, counts }
     }
 
+    /// [`Routing::top1_masked`] with the argmax overridden: every live
+    /// token routes to expert `pin`, scaled by its own gate probability
+    /// for that expert — a deterministic worst-case hot-expert workload
+    /// for the replication study (the forward stays self-consistent:
+    /// pack, FFN, and combine all agree on the pinned assignment).
+    pub fn pinned_masked(
+        probs: &[f32],
+        n_experts: usize,
+        mask: Option<&[bool]>,
+        pin: usize,
+    ) -> Routing {
+        assert!(pin < n_experts, "pinned expert out of range");
+        assert_eq!(probs.len() % n_experts, 0);
+        let t = probs.len() / n_experts;
+        if let Some(mask) = mask {
+            assert_eq!(t, mask.len(), "mask length != token count");
+        }
+        let mut expert = Vec::with_capacity(t);
+        let mut prob = Vec::with_capacity(t);
+        let mut slot = Vec::with_capacity(t);
+        let mut counts = vec![0usize; n_experts];
+        for tok in 0..t {
+            if mask.is_some_and(|m| !m[tok]) {
+                expert.push(MASKED);
+                prob.push(0.0);
+                slot.push(0);
+                continue;
+            }
+            expert.push(pin);
+            prob.push(probs[tok * n_experts + pin]);
+            slot.push(counts[pin]);
+            counts[pin] += 1;
+        }
+        Routing { n_experts, expert, prob, slot, counts }
+    }
+
     pub fn n_tokens(&self) -> usize {
         self.expert.len()
     }
@@ -154,46 +190,95 @@ impl Routing {
         }
     }
 
-    /// Inverse of [`Routing::pack_blocks`] over coalesced worker replies:
+    /// Pack slot **segments** of several experts' blocks back to back into
+    /// `out` — the replica-aware generalization of [`Routing::pack_blocks`].
+    /// Each `(expert, slot0, rows)` segment carries the tokens of `expert`
+    /// whose slot lies in `[slot0, slot0 + rows)`, placed at
+    /// `base + (slot - slot0)` within the segment.  A full-block segment
+    /// `(e, 0, counts[e])` packs exactly what [`Routing::pack_blocks`]
+    /// packs for `e`; hot-expert replication splits a block into
+    /// contiguous slot ranges, one per replica worker.  `out` is cleared
+    /// and resized, so callers can reuse one buffer across layers.
+    pub fn pack_segments(
+        &self,
+        ln_h: &[f32],
+        m: usize,
+        segs: &[(usize, usize, usize)],
+        out: &mut Vec<f32>,
+    ) {
+        let total: usize = segs.iter().map(|&(_, _, rows)| rows).sum();
+        out.clear();
+        out.resize(total * m, 0.0);
+        // Per-expert slot windows: (slot_lo, slot_end, packed row base).
+        let mut windows: Vec<Vec<(usize, usize, usize)>> =
+            vec![Vec::new(); self.n_experts];
+        let mut acc = 0usize;
+        for &(e, slot0, rows) in segs {
+            windows[e].push((slot0, slot0 + rows, acc));
+            acc += rows;
+        }
+        for (t, &te) in self.expert.iter().enumerate() {
+            if te == MASKED || windows[te].is_empty() {
+                continue;
+            }
+            let s = self.slot[t];
+            for &(lo, hi, base) in &windows[te] {
+                if s >= lo && s < hi {
+                    let row = base + (s - lo);
+                    out[row * m..(row + 1) * m]
+                        .copy_from_slice(&ln_h[t * m..(t + 1) * m]);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`Routing::pack_segments`] over coalesced worker replies:
     /// gate-scale each token's expert output and write it back in original
     /// token order (bitwise-identical to [`Routing::combine`] over the
-    /// equivalent per-expert blocks).  `packs` are
-    /// `(experts-with-counts, packed rows)` pairs as returned by the
-    /// workers; `out` is cleared and resized to `[T * m]`.  Every routed
-    /// expert must appear in exactly one pack — a missing one means a lost
-    /// or truncated worker reply, which is an error, never a silent zero
-    /// contribution.
+    /// equivalent per-expert blocks — replica outputs are the same weights
+    /// applied to the same rows).  `packs` are
+    /// `(segments, packed rows)` pairs as returned by the workers, each
+    /// segment a `(expert, slot0, rows)` slot range; `out` is cleared and
+    /// resized to `[T * m]`.  Every routed `(expert, slot)` must be covered
+    /// by exactly one segment — a missing one means a lost or truncated
+    /// worker reply, which is an error, never a silent zero contribution.
     pub fn combine_packed(
         &self,
-        packs: &[(&[(usize, usize)], &[f32])],
+        packs: &[(&[(usize, usize, usize)], &[f32])],
         m: usize,
         out: &mut Vec<f32>,
     ) -> anyhow::Result<()> {
         let t = self.n_tokens();
         out.clear();
         out.resize(t * m, 0.0);
-        // (pack index, row base) of each expert's block across all packs.
-        let mut loc = vec![(usize::MAX, 0usize); self.n_experts];
-        for (pi, (experts, _)) in packs.iter().enumerate() {
+        // Per-expert reply segments: (slot_lo, slot_end, pack idx, base).
+        let mut windows: Vec<Vec<(usize, usize, usize, usize)>> =
+            vec![Vec::new(); self.n_experts];
+        for (pi, (segs, _)) in packs.iter().enumerate() {
             let mut acc = 0usize;
-            for &(e, count) in experts.iter() {
-                loc[e] = (pi, acc);
-                acc += count;
+            for &(e, slot0, rows) in segs.iter() {
+                windows[e].push((slot0, slot0 + rows, pi, acc));
+                acc += rows;
             }
         }
         for tok in 0..t {
-            if self.expert[tok] == MASKED {
+            let e = self.expert[tok];
+            if e == MASKED {
                 continue; // dead lane: stays zero in the combine buffer
             }
-            let (pi, b) = loc[self.expert[tok]];
-            anyhow::ensure!(
-                pi != usize::MAX,
-                "expert {} has routed tokens but no block in any worker \
-                 reply",
-                self.expert[tok]
-            );
+            let s = self.slot[tok];
+            let seg = windows[e]
+                .iter()
+                .find(|&&(lo, hi, _, _)| s >= lo && s < hi);
+            let Some(&(lo, _, pi, base)) = seg else {
+                anyhow::bail!(
+                    "expert {e} slot {s} has a routed token but no \
+                     covering block in any worker reply"
+                );
+            };
             let rows = packs[pi].1;
-            let row = b + self.slot[tok];
+            let row = base + (s - lo);
             let p = self.prob[tok];
             for (o, &x) in out[tok * m..(tok + 1) * m]
                 .iter_mut()
@@ -307,11 +392,11 @@ mod tests {
         for g in &groups {
             let mut buf = Vec::new();
             r.pack_blocks(&ln_h, m, g, &mut buf);
-            let counts: Vec<(usize, usize)> =
-                g.iter().map(|&e| (e, r.counts[e])).collect();
+            let counts: Vec<(usize, usize, usize)> =
+                g.iter().map(|&e| (e, 0, r.counts[e])).collect();
             packs_data.push((counts, buf));
         }
-        let packs: Vec<(&[(usize, usize)], &[f32])> = packs_data
+        let packs: Vec<(&[(usize, usize, usize)], &[f32])> = packs_data
             .iter()
             .map(|(c, d)| (c.as_slice(), d.as_slice()))
             .collect();
@@ -324,11 +409,82 @@ mod tests {
 
         // A pack set missing a routed expert is a loud error, not a
         // silent zero contribution.
-        let partial: Vec<(&[(usize, usize)], &[f32])> =
+        let partial: Vec<(&[(usize, usize, usize)], &[f32])> =
             packs[..1].to_vec();
         if r.counts[1] > 0 {
             assert!(r.combine_packed(&partial, m, &mut out).is_err());
         }
+    }
+
+    #[test]
+    fn pack_segments_full_blocks_match_pack_blocks() {
+        let t_toks = 20;
+        let m = 4;
+        let probs = softmax_rows(t_toks, 5, 13);
+        let r = Routing::top1(&probs, 5);
+        let mut rng = Rng::new(17);
+        let ln_h: Vec<f32> =
+            (0..t_toks * m).map(|_| rng.gauss() as f32).collect();
+        let mut a = Vec::new();
+        r.pack_blocks(&ln_h, m, &[1, 3], &mut a);
+        let segs = [(1usize, 0usize, r.counts[1]), (3, 0, r.counts[3])];
+        let mut b = Vec::new();
+        r.pack_segments(&ln_h, m, &segs, &mut b);
+        assert_eq!(a, b, "full-range segments must equal pack_blocks");
+    }
+
+    #[test]
+    fn replica_split_pack_and_combine_roundtrip() {
+        // Split the hottest expert's block across two "replica workers":
+        // identity experts mean each packed reply equals its request, and
+        // the segment combine must reassemble the exact per-expert
+        // combine bit for bit.
+        let t_toks = 32;
+        let m = 4;
+        let n_e = 4;
+        let probs = softmax_rows(t_toks, n_e, 23);
+        let r = Routing::top1(&probs, n_e);
+        let hot = (0..n_e).max_by_key(|&e| r.counts[e]).unwrap();
+        let c = r.counts[hot];
+        assert!(c >= 2, "seed must route >=2 tokens to the hot expert");
+        let lo_rows = c.div_ceil(2);
+        // Worker A: first half of the hot expert + every other expert's
+        // full block; worker B: second half of the hot expert.
+        let mut segs_a: Vec<(usize, usize, usize)> = Vec::new();
+        for e in 0..n_e {
+            if e == hot {
+                segs_a.push((e, 0, lo_rows));
+            } else if r.counts[e] > 0 {
+                segs_a.push((e, 0, r.counts[e]));
+            }
+        }
+        let segs_b = vec![(hot, lo_rows, c - lo_rows)];
+        let mut rng = Rng::new(41);
+        let ln_h: Vec<f32> =
+            (0..t_toks * m).map(|_| rng.gauss() as f32).collect();
+        let mut buf_a = Vec::new();
+        let mut buf_b = Vec::new();
+        r.pack_segments(&ln_h, m, &segs_a, &mut buf_a);
+        r.pack_segments(&ln_h, m, &segs_b, &mut buf_b);
+        // The two segment packs carry every routed row exactly once.
+        assert_eq!(
+            (buf_a.len() + buf_b.len()) / m,
+            r.counts.iter().sum::<usize>()
+        );
+        let packs: Vec<(&[(usize, usize, usize)], &[f32])> = vec![
+            (segs_a.as_slice(), buf_a.as_slice()),
+            (segs_b.as_slice(), buf_b.as_slice()),
+        ];
+        let mut out = Vec::new();
+        r.combine_packed(&packs, m, &mut out).unwrap();
+        let blocks: Vec<Vec<f32>> =
+            (0..n_e).map(|e| r.expert_block(&ln_h, m, e)).collect();
+        assert_eq!(out, r.combine(&blocks, m), "replica split not bitwise");
+
+        // Dropping the second replica's reply leaves hot-expert slots
+        // uncovered: loud error, never a silent zero.
+        let partial = vec![(segs_a.as_slice(), buf_a.as_slice())];
+        assert!(r.combine_packed(&partial, m, &mut out).is_err());
     }
 
     #[test]
@@ -358,9 +514,9 @@ mod tests {
         let mut buf = Vec::new();
         r.pack_blocks(&ln_h, m, &experts, &mut buf);
         assert_eq!(buf.len(), (t_toks / 2) * m, "only live rows packed");
-        let counts: Vec<(usize, usize)> =
-            experts.iter().map(|&e| (e, r.counts[e])).collect();
-        let packs: Vec<(&[(usize, usize)], &[f32])> =
+        let counts: Vec<(usize, usize, usize)> =
+            experts.iter().map(|&e| (e, 0, r.counts[e])).collect();
+        let packs: Vec<(&[(usize, usize, usize)], &[f32])> =
             vec![(counts.as_slice(), buf.as_slice())];
         let mut out = Vec::new();
         r.combine_packed(&packs, m, &mut out).unwrap();

@@ -6,6 +6,8 @@
 //!   table that drives token grouping (§5.4's kernel, mirrored at the
 //!   coordinator where blocks cross worker boundaries).
 //! * [`placement`] — multi-expert/multi-data expert placement (§4.1.3).
+//! * [`rebalance`] — load-aware hot-expert replication/migration policy
+//!   driven by the EWMA expert-load histograms.
 //! * [`alltoall`] — naive / hierarchical / parallelism-coordinated token
 //!   exchange schedules (§5.3, Figs 8–9).
 //! * [`kv_cache`] — lane-granular KV caches for continuous decode batching.
@@ -15,6 +17,7 @@ pub mod batcher;
 pub mod gate;
 pub mod kv_cache;
 pub mod placement;
+pub mod rebalance;
 pub mod router;
 
 pub use alltoall::{plan, Plan, Topology};
@@ -22,4 +25,5 @@ pub use batcher::{BatchPolicy, Decision};
 pub use gate::Routing;
 pub use kv_cache::KvCacheGroup;
 pub use placement::{LayerPlacement, Placement};
+pub use rebalance::Rebalancer;
 pub use router::{Limits, Request, Response, Router};

@@ -52,9 +52,68 @@ impl LayerPlacement {
         LayerPlacement { layer, n_experts, ep_degree, dp_degree, experts_of }
     }
 
-    /// Worker that owns expert `e` for replica group `replica`.
+    /// Worker that owns expert `e` for replica group `replica`, derived
+    /// from `experts_of` (not the round-robin arithmetic) so it stays
+    /// correct for non-uniform placements after hot-expert replication.
+    /// The round-robin home slot wins when it still hosts the expert, so
+    /// a balanced placement answers exactly what the old arithmetic did.
     pub fn owner(&self, e: usize, replica: usize) -> usize {
-        (replica % self.dp_degree) * self.ep_degree + e % self.ep_degree
+        let r = replica % self.dp_degree;
+        let lo = r * self.ep_degree;
+        let hi = ((r + 1) * self.ep_degree).min(self.experts_of.len());
+        let home = lo + e % self.ep_degree;
+        if home < hi && self.experts_of[home].contains(&e) {
+            return home;
+        }
+        (lo..hi)
+            .find(|&w| self.experts_of[w].contains(&e))
+            .unwrap_or(home)
+    }
+
+    /// Every worker currently hosting expert `e`, ascending — the set the
+    /// gate may split a hot expert's token block across.  A balanced
+    /// placement answers the per-group owners; replication appends more.
+    pub fn replicas_of(&self, e: usize) -> Vec<usize> {
+        (0..self.experts_of.len())
+            .filter(|&w| self.experts_of[w].contains(&e))
+            .collect()
+    }
+
+    /// Replication factor of expert `e` (1 on a balanced placement with
+    /// dp_degree 1; dp-group copies count too — they hold the same
+    /// weights and serve the same dispatch splits).
+    pub fn replication(&self, e: usize) -> usize {
+        self.replicas_of(e).len()
+    }
+
+    /// Highest replication factor across this layer's experts — the
+    /// `expert_replicas` gauge.
+    pub fn max_replication(&self) -> usize {
+        (0..self.n_experts).map(|e| self.replication(e)).max().unwrap_or(0)
+    }
+
+    /// Host expert `e` on worker `w` too (weights must be shipped by the
+    /// caller).  Returns false if `w` already hosts it.
+    pub fn add_replica(&mut self, e: usize, w: usize) -> bool {
+        assert!(e < self.n_experts && w < self.experts_of.len());
+        if self.experts_of[w].contains(&e) {
+            return false;
+        }
+        self.experts_of[w].push(e);
+        self.experts_of[w].sort_unstable();
+        true
+    }
+
+    /// Stop hosting expert `e` on worker `w`.  Refuses (returns false) if
+    /// `w` is the expert's last host — an expert must always live
+    /// somewhere.  Stale weights left on `w` are harmless.
+    pub fn remove_replica(&mut self, e: usize, w: usize) -> bool {
+        assert!(e < self.n_experts && w < self.experts_of.len());
+        if !self.experts_of[w].contains(&e) || self.replication(e) <= 1 {
+            return false;
+        }
+        self.experts_of[w].retain(|&x| x != e);
+        true
     }
 
     /// Max experts hosted by any single worker (the §4.1.3 balance metric).
@@ -62,11 +121,15 @@ impl LayerPlacement {
         self.experts_of.iter().map(|v| v.len()).max().unwrap_or(0)
     }
 
+    /// Min experts over workers that host anything, derived from
+    /// `experts_of` (the old version only inspected replica group 0 and
+    /// was wrong for replicated placements).  Workers left empty by a
+    /// `workers % ep_degree` remainder don't drag the minimum to zero.
     pub fn min_experts_per_worker(&self) -> usize {
         self.experts_of
             .iter()
-            .take(self.ep_degree) // replica 0 group
             .map(|v| v.len())
+            .filter(|&n| n > 0)
             .min()
             .unwrap_or(0)
     }
@@ -91,6 +154,10 @@ impl Placement {
 
     pub fn layer(&self, i: usize) -> Option<&LayerPlacement> {
         self.layers.get(&i)
+    }
+
+    pub fn layer_mut(&mut self, i: usize) -> Option<&mut LayerPlacement> {
+        self.layers.get_mut(&i)
     }
 
     /// All (layer, expert) pairs assigned to worker `w` — what the engine
@@ -175,6 +242,83 @@ mod tests {
             let diff = lp.max_experts_per_worker() as i64
                 - lp.min_experts_per_worker() as i64;
             crate::prop_assert!(diff <= 1, "imbalance {diff} (e={e}, w={w})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_replicated_placement_coherent() {
+        // Random add/remove-replica sequences under the rebalancer's own
+        // constraint (home-slot workers are never de-replicated): every
+        // expert always has a host, `owner(e, 0)` always answers a
+        // hosting worker, replica lists stay sorted/deduped, and the
+        // derived accessors stay mutually consistent.
+        prop(150, |c| {
+            let e = c.usize(1, 32);
+            let w = c.usize(1, 32);
+            let mut lp = LayerPlacement::balanced(0, e, w);
+            let ops = c.usize(0, 40);
+            for _ in 0..ops {
+                let ex = c.usize(0, e - 1);
+                let wk = c.usize(0, w - 1);
+                let hosted = lp.experts_of[wk].contains(&ex);
+                let before = lp.replication(ex);
+                if c.bool() {
+                    let added = lp.add_replica(ex, wk);
+                    crate::prop_assert!(added != hosted);
+                    crate::prop_assert!(
+                        lp.replication(ex) == before + usize::from(added)
+                    );
+                } else {
+                    if wk % lp.ep_degree == ex % lp.ep_degree {
+                        // A home-slot worker: the policy never removes
+                        // these (owner(e, r) falls back to them).
+                        continue;
+                    }
+                    let removed = lp.remove_replica(ex, wk);
+                    crate::prop_assert!(removed == (hosted && before > 1));
+                    crate::prop_assert!(
+                        lp.replication(ex) == before - usize::from(removed)
+                    );
+                }
+            }
+            for ex in 0..e {
+                let reps = lp.replicas_of(ex);
+                crate::prop_assert!(
+                    !reps.is_empty(),
+                    "expert {ex} lost its last host (e={e}, w={w})"
+                );
+                crate::prop_assert!(
+                    reps.windows(2).all(|p| p[0] < p[1]),
+                    "replicas_of({ex}) not strictly ascending: {reps:?}"
+                );
+                crate::prop_assert!(lp.replication(ex) == reps.len());
+                let o = lp.owner(ex, 0);
+                crate::prop_assert!(
+                    lp.experts_of[o].contains(&ex),
+                    "owner({ex}, 0) = {o} does not host it (e={e}, w={w})"
+                );
+                if lp.replication(ex) == 1 {
+                    crate::prop_assert!(
+                        !lp.remove_replica(ex, reps[0]),
+                        "removed expert {ex}'s last host"
+                    );
+                }
+            }
+            for (wk, list) in lp.experts_of.iter().enumerate() {
+                crate::prop_assert!(
+                    list.windows(2).all(|p| p[0] < p[1]),
+                    "experts_of[{wk}] not sorted/deduped: {list:?}"
+                );
+            }
+            crate::prop_assert!(
+                lp.max_replication()
+                    == (0..e).map(|x| lp.replication(x)).max().unwrap()
+            );
+            crate::prop_assert!(
+                lp.min_experts_per_worker() <= lp.max_experts_per_worker()
+            );
+            crate::prop_assert!(lp.min_experts_per_worker() > 0);
             Ok(())
         });
     }

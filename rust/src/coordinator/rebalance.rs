@@ -1,0 +1,190 @@
+//! Online load-aware expert rebalancing: the measurement→placement
+//! control loop.
+//!
+//! The paper's placement (§4.1.3) is balanced by *expert count*, but real
+//! routing is skewed by *token count* — one hot expert serializes its
+//! worker while the rest idle, and the whole pipeline ring waits on the
+//! slowest exchange ("Who Says Elephants Can't Run" reports replicating
+//! hot experts and rebalancing placement from observed load as the
+//! production fix).  This module is the pure policy half of that loop: it
+//! reads the per-layer EWMA load histogram
+//! ([`crate::moe::ExpertLoadStats::recent_histogram`]) and proposes
+//! placement [`Action`]s; the engine applies them between forwards —
+//! shipping weights over the existing `fabric.load_expert` path and
+//! bumping the placement epoch only at exchange boundaries, so no
+//! in-flight tagged exchange ever observes a torn placement.
+//!
+//! The policy is deliberately incremental: at most one replication per
+//! layer per call (weight shipping is the expensive step), plus any
+//! number of de-replications of cooled experts (those are free — dropping
+//! a host just stops splitting tokens to it; stale weights are harmless).
+
+use crate::coordinator::placement::LayerPlacement;
+
+/// One placement change proposed by [`Rebalancer::plan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Host `expert` on worker `to` as well (caller ships the weights).
+    Replicate { layer: usize, expert: usize, to: usize },
+    /// Stop hosting `expert` on worker `from` (no weight movement).
+    Dereplicate { layer: usize, expert: usize, from: usize },
+}
+
+/// Load-aware replication policy.  Stateless between calls — all memory
+/// lives in the EWMA histogram and the placement itself.
+#[derive(Debug, Clone, Copy)]
+pub struct Rebalancer {
+    /// Recent max/mean skew ratio that triggers replication
+    /// (`DSMOE_REBALANCE_SKEW`; 1.0 is perfectly balanced).
+    pub skew_threshold: f64,
+    /// Replication ceiling per expert (`DSMOE_MAX_REPLICAS`).
+    pub max_replicas: usize,
+}
+
+impl Rebalancer {
+    /// Recent per-worker load under the split-dispatch model: each hosted
+    /// expert contributes its EWMA load divided by its replication (the
+    /// gate splits a replicated expert's block evenly across hosts).
+    fn worker_load(lp: &LayerPlacement, recent: &[f64], w: usize) -> f64 {
+        lp.experts_of[w]
+            .iter()
+            .map(|&e| recent[e] / lp.replication(e) as f64)
+            .sum()
+    }
+
+    /// The workers a balanced placement gives expert `e` (one per replica
+    /// group) — the copies migration must never remove.
+    fn home_set(lp: &LayerPlacement, e: usize) -> Vec<usize> {
+        (0..lp.dp_degree).map(|r| r * lp.ep_degree + e % lp.ep_degree).collect()
+    }
+
+    /// Propose placement changes for one layer from its recent load view.
+    /// Replicates the hottest expert onto the least-loaded non-hosting
+    /// worker when skew crosses the threshold; de-replicates extra copies
+    /// of experts that have cooled to (or below) the mean.
+    pub fn plan(&self, lp: &LayerPlacement, recent: &[f64]) -> Vec<Action> {
+        assert_eq!(recent.len(), lp.n_experts);
+        let workers = lp.experts_of.len();
+        let mean = recent.iter().sum::<f64>() / lp.n_experts as f64;
+        if mean <= 0.0 {
+            return Vec::new();
+        }
+        let mut actions = Vec::new();
+
+        // Cool-down first: extra replicas (beyond the balanced home set)
+        // of experts at or below the mean stop earning their dispatch
+        // split — release them so the host's capacity goes back to its
+        // own experts.
+        for e in 0..lp.n_experts {
+            if recent[e] > mean {
+                continue;
+            }
+            let homes = Self::home_set(lp, e);
+            for w in lp.replicas_of(e) {
+                if !homes.contains(&w) {
+                    actions.push(Action::Dereplicate {
+                        layer: lp.layer,
+                        expert: e,
+                        from: w,
+                    });
+                }
+            }
+        }
+
+        // Heat-up: one replication per call, hottest expert first.
+        let hot = (0..lp.n_experts)
+            .max_by(|&a, &b| recent[a].total_cmp(&recent[b]))
+            .unwrap();
+        let skew = recent[hot] / mean;
+        if skew >= self.skew_threshold
+            && lp.replication(hot) < self.max_replicas
+        {
+            let target = (0..workers)
+                .filter(|&w| !lp.experts_of[w].contains(&hot))
+                .min_by(|&a, &b| {
+                    Self::worker_load(lp, recent, a)
+                        .total_cmp(&Self::worker_load(lp, recent, b))
+                });
+            if let Some(to) = target {
+                actions.push(Action::Replicate {
+                    layer: lp.layer,
+                    expert: hot,
+                    to,
+                });
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> Rebalancer {
+        Rebalancer { skew_threshold: 2.0, max_replicas: 4 }
+    }
+
+    #[test]
+    fn balanced_load_plans_nothing() {
+        let lp = LayerPlacement::balanced(0, 4, 4);
+        let acts = policy().plan(&lp, &[1.0, 1.0, 1.0, 1.0]);
+        assert!(acts.is_empty(), "{acts:?}");
+    }
+
+    #[test]
+    fn zero_load_plans_nothing() {
+        let lp = LayerPlacement::balanced(0, 4, 4);
+        assert!(policy().plan(&lp, &[0.0; 4]).is_empty());
+    }
+
+    #[test]
+    fn hot_expert_replicates_onto_least_loaded_worker() {
+        let lp = LayerPlacement::balanced(0, 4, 4);
+        // Expert 0 is hot (skew 8/ (11/4) ≈ 2.9); worker 2 is coolest.
+        let recent = [8.0, 1.0, 0.5, 1.5];
+        let acts = policy().plan(&lp, &recent);
+        assert_eq!(
+            acts,
+            vec![Action::Replicate { layer: 0, expert: 0, to: 2 }]
+        );
+    }
+
+    #[test]
+    fn below_threshold_does_not_replicate() {
+        let lp = LayerPlacement::balanced(0, 4, 4);
+        // max/mean = 1.6 < 2.0
+        assert!(policy().plan(&lp, &[2.0, 1.0, 1.0, 1.0]).is_empty());
+    }
+
+    #[test]
+    fn replication_respects_the_ceiling() {
+        let mut lp = LayerPlacement::balanced(0, 4, 4);
+        assert!(lp.add_replica(0, 1));
+        let p = Rebalancer { skew_threshold: 2.0, max_replicas: 2 };
+        // Expert 0 is still hottest but already at the ceiling.
+        assert!(p.plan(&lp, &[8.0, 1.0, 0.5, 1.5]).is_empty());
+    }
+
+    #[test]
+    fn cooled_extra_replica_is_released_but_homes_are_kept() {
+        let mut lp = LayerPlacement::balanced(0, 4, 8); // dp=2: homes at w and w+4
+        assert!(lp.add_replica(0, 1)); // extra replica from an earlier hot phase
+        // Expert 0 cooled to the mean: the extra copy goes, both balanced
+        // homes (workers 0 and 4) stay.
+        let acts = policy().plan(&lp, &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(
+            acts,
+            vec![Action::Dereplicate { layer: 0, expert: 0, from: 1 }]
+        );
+    }
+
+    #[test]
+    fn hot_expert_keeps_its_extra_replica() {
+        let mut lp = LayerPlacement::balanced(0, 4, 4);
+        assert!(lp.add_replica(0, 1));
+        let p = Rebalancer { skew_threshold: 2.0, max_replicas: 2 };
+        // Still hot: no dereplicate, and the ceiling blocks growth.
+        assert!(p.plan(&lp, &[8.0, 1.0, 0.5, 1.5]).is_empty());
+    }
+}

@@ -7,7 +7,7 @@
 //! frame   := [u32 LE payload length][payload]
 //! payload := [u8 kind][body]
 //! tensor  := [u8 dtype (0=f32, 1=i32)][u8 ndim][u64 LE dims…][raw LE elems]
-//! experts := [u64 LE count][(u64 LE expert id, u64 LE rows)…]
+//! experts := [u64 LE count][(u64 LE expert id, u64 LE first slot, u64 LE rows)…]
 //! ```
 //!
 //! The offline build has no serde, so this is the whole wire format: every
@@ -88,10 +88,11 @@ fn put_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
     }
 }
 
-fn put_experts(buf: &mut Vec<u8>, experts: &[(usize, usize)]) {
+fn put_experts(buf: &mut Vec<u8>, experts: &[(usize, usize, usize)]) {
     put_usize(buf, experts.len());
-    for &(e, c) in experts {
+    for &(e, s, c) in experts {
         put_usize(buf, e);
+        put_usize(buf, s);
         put_usize(buf, c);
     }
 }
@@ -277,14 +278,15 @@ impl<'a> Cur<'a> {
         Ok(HostTensor { shape, data })
     }
 
-    fn experts(&mut self) -> Result<Vec<(usize, usize)>> {
+    fn experts(&mut self) -> Result<Vec<(usize, usize, usize)>> {
         let n = self.usize()?;
         anyhow::ensure!(n <= MAX_FRAME, "expert list length {n} out of range");
         let mut v = Vec::with_capacity(n.min(1024));
         for _ in 0..n {
             let e = self.usize()?;
+            let s = self.usize()?;
             let c = self.usize()?;
-            v.push((e, c));
+            v.push((e, s, c));
         }
         Ok(v)
     }
@@ -476,7 +478,8 @@ mod tests {
         for i in 0..n_experts {
             let count = c.usize(0, 5); // zero-row blocks included
             let id = if i == 0 && c.bool() { gate::MASKED } else { i };
-            experts.push((id, count));
+            let slot0 = c.usize(0, 7); // replica splits carry nonzero origins
+            experts.push((id, slot0, count));
             total += count;
         }
         ExpertFfnBatch {
@@ -597,7 +600,7 @@ mod tests {
     fn masked_sentinel_roundtrips_exactly() {
         let batch = ExpertFfnBatch {
             layer: 3,
-            experts: vec![(gate::MASKED, 0), (1, 2)],
+            experts: vec![(gate::MASKED, 0, 0), (1, 3, 2)],
             data: HostTensor::f32(&[2, 2], vec![1., 2., 3., 4.]),
             tag: 7,
         };
@@ -606,14 +609,15 @@ mod tests {
             panic!("wrong kind");
         };
         assert_eq!(back.experts[0].0, gate::MASKED);
-        assert_eq!(back.experts[0].1, 0);
+        assert_eq!(back.experts[0].2, 0);
+        assert_eq!(back.experts[1], (1, 3, 2));
     }
 
     #[test]
     fn truncated_frames_fail_loudly() {
         let batch = ExpertFfnBatch {
             layer: 1,
-            experts: vec![(0, 1), (2, 2)],
+            experts: vec![(0, 0, 1), (2, 1, 2)],
             data: HostTensor::f32(&[3, 2], vec![1., 2., 3., 4., 5., 6.]),
             tag: 42,
         };

@@ -124,10 +124,15 @@ impl Traffic {
 #[derive(Debug)]
 pub struct ExpertFfnBatch {
     pub layer: usize,
-    /// `(expert id, row count)` in the order the blocks are packed in
-    /// `data`.  The worker slices/pads each block internally against its
-    /// compiled capacity ladder.
-    pub experts: Vec<(usize, usize)>,
+    /// `(expert id, first slot, row count)` in the order the blocks are
+    /// packed in `data`.  The slot origin lets hot-expert replication
+    /// split one expert's token block across replicas: each replica's
+    /// batch names the contiguous slot window it carries, so the combine
+    /// path can place every reply row without knowing which worker sent
+    /// it.  Unreplicated dispatch always uses slot 0.  The worker
+    /// slices/pads each block internally against its compiled capacity
+    /// ladder.
+    pub experts: Vec<(usize, usize, usize)>,
     /// `[total_rows, M]` activation rows, expert blocks concatenated.
     pub data: HostTensor,
     pub tag: u64,
@@ -138,7 +143,8 @@ pub struct ExpertFfnBatch {
 #[derive(Debug)]
 pub struct FfnBatchResult {
     pub layer: usize,
-    pub experts: Vec<(usize, usize)>,
+    /// Echoed verbatim from the request: `(expert id, first slot, rows)`.
+    pub experts: Vec<(usize, usize, usize)>,
     pub data: HostTensor,
     pub tag: u64,
 }
@@ -872,7 +878,7 @@ fn run_expert_ffn_batch(
 ) -> Result<HostTensor> {
     anyhow::ensure!(batch.data.shape.len() == 2, "batch data must be [rows, M]");
     let (total, m) = (batch.data.shape[0], batch.data.shape[1]);
-    let declared: usize = batch.experts.iter().map(|&(_, c)| c).sum();
+    let declared: usize = batch.experts.iter().map(|&(_, _, c)| c).sum();
     anyhow::ensure!(
         declared == total,
         "batch declares {declared} rows but payload has {total}"
@@ -880,7 +886,7 @@ fn run_expert_ffn_batch(
     let flat = batch.data.as_f32()?;
     let mut out = vec![0f32; total * m];
     let mut off = 0usize;
-    for &(e, count) in &batch.experts {
+    for &(e, _slot0, count) in &batch.experts {
         let rows = &flat[off * m..(off + count) * m];
         let y = run_expert_rows(
             runtime, programs, experts, batch.layer, e, rows, count, m,

@@ -326,8 +326,13 @@ fn ep_report(ep: &EpEngine) {
     );
     for s in &ep.load_stats {
         println!(
-            "layer {}: imbalance {:.2} entropy {:.2} utilization {:.0}%",
-            s.layer, s.imbalance(), s.entropy(), 100.0 * s.utilization()
+            "layer {}: imbalance {:.2} recent skew {:.2} entropy {:.2} \
+             utilization {:.0}%",
+            s.layer,
+            s.imbalance(),
+            s.recent_skew(),
+            s.entropy(),
+            100.0 * s.utilization()
         );
     }
 }

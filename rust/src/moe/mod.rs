@@ -2,6 +2,12 @@
 //! metrics used by the coordinator's placement decisions and surfaced by the
 //! serving metrics endpoint.
 
+/// EWMA smoothing factor for the recent-load view: each recorded exchange
+/// contributes 25%, so the window is roughly the last ~4 exchanges — fast
+/// enough to catch a routing shift within a few decode steps, slow enough
+/// not to flap on one skewed microbatch.
+pub const EWMA_ALPHA: f64 = 0.25;
+
 /// Per-layer expert load tracker.
 #[derive(Debug, Clone)]
 pub struct ExpertLoadStats {
@@ -13,6 +19,13 @@ pub struct ExpertLoadStats {
     /// inference uses worst-case capacity and never drops).
     pub dropped: u64,
     pub total_tokens: u64,
+    /// EWMA of per-*exchange* token counts — the recent-load view the
+    /// rebalance policy reads (cumulative counts never forget, so a
+    /// routing shift would be invisible to them).  Seeded with the first
+    /// exchange's histogram so early readings aren't biased toward zero.
+    ewma: Vec<f64>,
+    /// Exchanges recorded (0 ⇒ the EWMA is unseeded).
+    exchanges: u64,
 }
 
 impl ExpertLoadStats {
@@ -23,20 +36,52 @@ impl ExpertLoadStats {
             tokens_per_expert: vec![0; n_experts],
             dropped: 0,
             total_tokens: 0,
+            ewma: vec![0.0; n_experts],
+            exchanges: 0,
         }
     }
 
-    /// Record routed tokens.  Ids `>= n_experts` (the
+    /// Record one exchange's routed tokens.  Ids `>= n_experts` (the
     /// [`crate::coordinator::gate::MASKED`] sentinel for dead lanes /
     /// prefill padding) are skipped — only genuinely routed tokens count.
+    /// Each call is one EWMA sample.
     pub fn record_assignments(&mut self, expert_ids: &[usize]) {
+        let mut hist = vec![0u64; self.n_experts];
         for &e in expert_ids {
             if e >= self.n_experts {
                 continue;
             }
+            hist[e] += 1;
             self.tokens_per_expert[e] += 1;
             self.total_tokens += 1;
         }
+        if self.exchanges == 0 {
+            for (w, &h) in self.ewma.iter_mut().zip(&hist) {
+                *w = h as f64;
+            }
+        } else {
+            for (w, &h) in self.ewma.iter_mut().zip(&hist) {
+                *w += EWMA_ALPHA * (h as f64 - *w);
+            }
+        }
+        self.exchanges += 1;
+    }
+
+    /// The windowed per-expert load: an EWMA over recent exchanges, in
+    /// tokens-per-exchange units.  All zeros until the first exchange.
+    pub fn recent_histogram(&self) -> &[f64] {
+        &self.ewma
+    }
+
+    /// Recent max/mean skew ratio (1.0 = balanced, like
+    /// [`ExpertLoadStats::imbalance`] but over the EWMA window) — the
+    /// quantity `DSMOE_REBALANCE_SKEW` thresholds.
+    pub fn recent_skew(&self) -> f64 {
+        let mean = self.ewma.iter().sum::<f64>() / self.n_experts as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        self.ewma.iter().cloned().fold(0.0, f64::max) / mean
     }
 
     pub fn record_dropped(&mut self, n: u64) {
@@ -135,6 +180,35 @@ mod tests {
         assert!(skew.imbalance() > 2.9);
         assert!(skew.entropy() < 0.6);
         assert_eq!(skew.utilization(), 0.5);
+    }
+
+    #[test]
+    fn ewma_tracks_recent_exchanges_not_history() {
+        let mut s = ExpertLoadStats::new(0, 4);
+        // First exchange seeds the window directly.
+        s.record_assignments(&[0, 0, 0, 1]);
+        assert_eq!(s.recent_histogram(), &[3.0, 1.0, 0.0, 0.0]);
+        assert!(s.recent_skew() > 2.9);
+        // Routing shifts to uniform: the EWMA converges there while the
+        // cumulative imbalance stays stuck above 1 forever.
+        for _ in 0..64 {
+            s.record_assignments(&[0, 1, 2, 3]);
+        }
+        assert!((s.recent_skew() - 1.0).abs() < 1e-3, "{}", s.recent_skew());
+        assert!(s.imbalance() > 1.0);
+        for &w in s.recent_histogram() {
+            assert!((w - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn ewma_skips_masked_and_starts_neutral() {
+        let s = ExpertLoadStats::new(0, 4);
+        assert_eq!(s.recent_skew(), 1.0); // unseeded window is neutral
+        let mut s = ExpertLoadStats::new(0, 2);
+        s.record_assignments(&[usize::MAX, 1, usize::MAX]);
+        assert_eq!(s.recent_histogram(), &[0.0, 1.0]);
+        assert_eq!(s.recent_skew(), 2.0);
     }
 
     #[test]

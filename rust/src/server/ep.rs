@@ -153,6 +153,20 @@
 //! |                       | channels) or `socket` (Unix-domain sockets   |
 //! |                       | carrying length-prefixed serialized frames;  |
 //! |                       | [`EpEngine::new_with_transport`]).           |
+//! | `DSMOE_REPLICATE_HOT` | split a replicated expert's token block      |
+//! |                       | across its hosting workers and run the       |
+//! |                       | between-forwards load-aware rebalancer;      |
+//! |                       | unset/`0` (default) keeps the static single- |
+//! |                       | owner placement bit-identically              |
+//! |                       | ([`EpEngine::set_replicate_hot`]).           |
+//! | `DSMOE_REBALANCE_SKEW`| recent (EWMA) max/mean expert-load skew at   |
+//! |                       | which the rebalancer replicates the hottest  |
+//! |                       | expert (default 2.0; only read when          |
+//! |                       | replication is on;                           |
+//! |                       | [`EpEngine::set_rebalance_skew`]).           |
+//! | `DSMOE_MAX_REPLICAS`  | per-expert replication ceiling for the       |
+//! |                       | rebalancer (default: the worker count;       |
+//! |                       | [`EpEngine::set_max_replicas`]).             |
 //!
 //! All paths — serial, overlapped, pipelined at any depth, single- or
 //! multi-threaded leader — produce **bit-identical** logits for prefill
@@ -170,7 +184,8 @@ use anyhow::{Context, Result};
 
 use crate::config::{AllToAllKind, ModelConfig};
 use crate::coordinator::kv_cache::{copy_lane, split_lanes};
-use crate::coordinator::{Placement, Request, Routing};
+use crate::coordinator::rebalance::Action;
+use crate::coordinator::{Placement, Rebalancer, Request, Routing};
 use crate::fabric::{
     A2aMode, ExpertFfnBatch, Fabric, FfnBatchResult, TransportKind,
     WorkerPrograms,
@@ -183,7 +198,7 @@ use crate::server::shard::{
     Backbone, LaneWrite, MoeScratch, PoolSpec, Prepared, PreparedMoe,
     ShardCmd, ShardEvent, ShardPool,
 };
-use crate::util::env_pos_usize;
+use crate::util::{env_pos_f64, env_pos_usize};
 
 pub struct EpEngine {
     /// The dense backbone bound to *this* thread (programs, dense weight
@@ -233,6 +248,17 @@ pub struct EpEngine {
     /// Live-lane skew (max − min per group) that triggers a regroup
     /// (`DSMOE_REGROUP_SKEW`, default 2).
     regroup_skew: usize,
+    /// `DSMOE_REPLICATE_HOT`: hot-expert replication on the dispatch path
+    /// plus the between-forwards load-aware rebalancer.  Off (default)
+    /// preserves the static single-owner placement bit-identically.
+    replicate_hot: bool,
+    /// Recent max/mean expert-load skew at which the rebalancer
+    /// replicates the hottest expert (`DSMOE_REBALANCE_SKEW`, default
+    /// 2.0, clamped to >= 1).
+    rebalance_skew: f64,
+    /// Per-expert replication ceiling (`DSMOE_MAX_REPLICAS`, default:
+    /// the worker count — replicas live on distinct workers).
+    max_replicas: usize,
     /// Requested leader shard threads (`DSMOE_LEADER_THREADS`, default
     /// 1): >= 2 runs each microbatch group's dense backbone on its own
     /// thread-bound runtime.
@@ -452,7 +478,7 @@ struct PendingMoe {
     /// Residual stream pulled to the host (combine accumulates into it).
     out_data: Vec<f32>,
     /// Taken from the slot's [`MoeScratch`], returned at finish.
-    worker_experts: Vec<Vec<usize>>,
+    worker_experts: Vec<Vec<(usize, usize, usize)>>,
     results: Vec<FfnBatchResult>,
     /// Metric the exposed wait lands in: `expert_wait` on the per-layer
     /// path, `pipeline_bubble` under the pipelined driver,
@@ -623,7 +649,9 @@ impl EpEngine {
         // and every leader shard's.
         let arts = SharedArtifacts::new(manifest.clone(), params_host);
         let metrics = Arc::new(Metrics::new());
-        let bb = Backbone::new(
+        let replicate_hot = std::env::var_os("DSMOE_REPLICATE_HOT")
+            .is_some_and(|v| v != "0");
+        let mut bb = Backbone::new(
             arts.clone(),
             cfg.clone(),
             placement.clone(),
@@ -631,6 +659,7 @@ impl EpEngine {
             workers,
             metrics.clone(),
         )?;
+        bb.replicate_hot = replicate_hot;
 
         Ok(EpEngine {
             bb,
@@ -655,6 +684,10 @@ impl EpEngine {
             interleave: !std::env::var_os("DSMOE_NO_INTERLEAVE")
                 .is_some_and(|v| v != "0"),
             regroup_skew: env_pos_usize("DSMOE_REGROUP_SKEW", 2),
+            replicate_hot,
+            rebalance_skew: env_pos_f64("DSMOE_REBALANCE_SKEW", 2.0)
+                .max(1.0),
+            max_replicas: env_pos_usize("DSMOE_MAX_REPLICAS", workers),
             leader_threads: env_pos_usize("DSMOE_LEADER_THREADS", 1),
             shards: None,
             shard_caches: false,
@@ -757,6 +790,194 @@ impl EpEngine {
     /// regroup before a decode step; clamped to at least 1.
     pub fn set_regroup_skew(&mut self, skew: usize) {
         self.regroup_skew = skew.max(1);
+    }
+
+    /// Enable/disable hot-expert replication on the live dispatch path
+    /// (defaults to the `DSMOE_REPLICATE_HOT` env toggle).  On, the gate
+    /// splits a replicated expert's token block contiguously across its
+    /// hosting workers and the between-forwards rebalancer watches the
+    /// EWMA load histograms; off preserves the static single-owner pack
+    /// byte-for-byte.  Applied at the next forward — placement epochs
+    /// only ever move between forwards.
+    pub fn set_replicate_hot(&mut self, on: bool) -> Result<()> {
+        self.replicate_hot = on;
+        self.apply_placement()
+    }
+
+    pub fn replicate_hot(&self) -> bool {
+        self.replicate_hot
+    }
+
+    /// Recent max/mean expert-load skew at which the rebalancer
+    /// replicates the hottest expert (defaults to
+    /// `DSMOE_REBALANCE_SKEW`, default 2.0); clamped to at least 1.0
+    /// (1.0 = replicate on any imbalance at all).
+    pub fn set_rebalance_skew(&mut self, skew: f64) {
+        self.rebalance_skew = skew.max(1.0);
+    }
+
+    pub fn rebalance_skew(&self) -> f64 {
+        self.rebalance_skew
+    }
+
+    /// Per-expert replication ceiling for the rebalancer (defaults to
+    /// `DSMOE_MAX_REPLICAS`, default: the worker count); clamped to at
+    /// least 1.
+    pub fn set_max_replicas(&mut self, r: usize) {
+        self.max_replicas = r.max(1);
+    }
+
+    pub fn max_replicas(&self) -> usize {
+        self.max_replicas
+    }
+
+    /// Bench/test hook: route every live token to `expert` (scaled by
+    /// that expert's own gate probability) instead of the gate's argmax —
+    /// a deterministic worst-case hot-expert workload for the
+    /// replication study.  `None` restores real routing.  Applies to the
+    /// leader's backbone (the serial and single-threaded paths); leader
+    /// shards keep real routing.
+    pub fn set_route_pin(&mut self, expert: Option<usize>) {
+        self.bb.force_expert = expert;
+    }
+
+    /// Deterministic migration hook for studies and tests: replicate
+    /// expert `expert` of every MoE layer onto the least-expert-loaded
+    /// non-hosting workers until it has `r` hosts, shipping weights over
+    /// the fabric exactly like an online migration, then bump the
+    /// placement epoch.  Call only between forwards.
+    pub fn force_replicas(&mut self, expert: usize, r: usize) -> Result<()> {
+        let layers: Vec<usize> =
+            self.placement.layers.keys().copied().collect();
+        let mut ships: Vec<(usize, usize)> = Vec::new();
+        for layer in layers {
+            let lp = self.placement.layer_mut(layer).unwrap();
+            if expert >= lp.n_experts {
+                continue;
+            }
+            let cap = r.min(lp.experts_of.len());
+            while lp.replication(expert) < cap {
+                let to = (0..lp.experts_of.len())
+                    .filter(|&w| !lp.experts_of[w].contains(&expert))
+                    .min_by_key(|&w| (lp.experts_of[w].len(), w))
+                    .context("no worker left to replicate onto")?;
+                assert!(lp.add_replica(expert, to));
+                ships.push((layer, to));
+            }
+            let max_r = lp.max_replication();
+            self.metrics
+                .gauge(&format!("expert_replicas_l{layer}"), max_r as f64);
+        }
+        for (layer, to) in ships {
+            self.ship_expert(layer, expert, to)?;
+            self.metrics.inc("expert_migrations", 1);
+        }
+        self.apply_placement()
+    }
+
+    /// Ship one expert's weights to a worker over the fabric's blocking
+    /// load path (the worker acks before any later exchange can reach
+    /// it), sliced from the shared host-side checkpoint exactly as at
+    /// engine construction.
+    fn ship_expert(&mut self, layer: usize, e: usize, w: usize) -> Result<()> {
+        let weights = {
+            let params = self.arts.params();
+            ["w1", "b1", "w2", "b2"]
+                .iter()
+                .map(|part| {
+                    let full = params
+                        .get(&format!("layer{layer}.moe.{part}"))
+                        .with_context(|| {
+                            format!("missing layer{layer}.moe.{part}")
+                        })?;
+                    slice_expert(full, e, part)
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        self.fabric.load_expert(w, layer, e, weights)
+    }
+
+    /// Propagate the current placement epoch to every placement reader —
+    /// this engine's backbone and any live leader-shard pool.  Called
+    /// only between forwards (no open tagged exchanges), so no in-flight
+    /// exchange ever observes a torn placement.
+    fn apply_placement(&mut self) -> Result<()> {
+        debug_assert!(self.open_tags.is_empty());
+        self.bb.placement = self.placement.clone();
+        self.bb.replicate_hot = self.replicate_hot;
+        if let Some(pool) = &self.shards {
+            for g in 0..pool.handles.len() {
+                pool.send(
+                    g,
+                    ShardCmd::SetPlacement {
+                        placement: self.placement.clone(),
+                        replicate_hot: self.replicate_hot,
+                    },
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The migration half of hot-expert replication: after a forward
+    /// completes (all exchanges collected), read each MoE layer's EWMA
+    /// load histogram, let the [`Rebalancer`] propose placement changes,
+    /// ship weights for new replicas over `fabric.load_expert`, and bump
+    /// the placement epoch before the next forward dispatches.  No-op
+    /// unless `DSMOE_REPLICATE_HOT` is on.
+    fn maybe_rebalance(&mut self) -> Result<()> {
+        if !self.replicate_hot {
+            return Ok(());
+        }
+        let policy = Rebalancer {
+            skew_threshold: self.rebalance_skew,
+            max_replicas: self.max_replicas.min(self.fabric.n_workers()),
+        };
+        let plans: Vec<(usize, Vec<Action>)> = self
+            .load_stats
+            .iter()
+            .filter_map(|s| {
+                let lp = self.placement.layer(s.layer)?;
+                let acts = policy.plan(lp, s.recent_histogram());
+                (!acts.is_empty()).then_some((s.layer, acts))
+            })
+            .collect();
+        let mut events = 0u64;
+        for (layer, acts) in plans {
+            let mut applied = false;
+            for a in acts {
+                match a {
+                    Action::Replicate { expert, to, .. } => {
+                        let lp = self.placement.layer_mut(layer).unwrap();
+                        if lp.add_replica(expert, to) {
+                            self.ship_expert(layer, expert, to)?;
+                            self.metrics.inc("expert_migrations", 1);
+                            applied = true;
+                        }
+                    }
+                    Action::Dereplicate { expert, from, .. } => {
+                        let lp = self.placement.layer_mut(layer).unwrap();
+                        // Dropping a host just stops splitting tokens to
+                        // it; its stale weights are harmless.
+                        applied |= lp.remove_replica(expert, from);
+                    }
+                }
+            }
+            if applied {
+                events += 1;
+                let max_r =
+                    self.placement.layer(layer).unwrap().max_replication();
+                self.metrics.gauge(
+                    &format!("expert_replicas_l{layer}"),
+                    max_r as f64,
+                );
+            }
+        }
+        if events > 0 {
+            self.metrics.inc("rebalance_events", events);
+            self.apply_placement()?;
+        }
+        Ok(())
     }
 
     /// Request leader shard threads (defaults to `DSMOE_LEADER_THREADS`,
@@ -955,6 +1176,9 @@ impl EpEngine {
             }
         };
         self.metrics.observe("forward_prefill", t_fwd.elapsed());
+        // Between-forwards rebalance window: every exchange of this
+        // forward is collected, so a placement epoch bump is safe.
+        self.maybe_rebalance()?;
         Ok(out)
     }
 
@@ -1183,6 +1407,8 @@ impl EpEngine {
             }
         };
         self.metrics.observe("forward_decode", t_fwd.elapsed());
+        // Between-forwards rebalance window (see forward_prefill).
+        self.maybe_rebalance()?;
         Ok(out)
     }
 
@@ -1467,6 +1693,7 @@ impl EpEngine {
             workers: self.fabric.n_workers(),
             metrics: self.metrics.clone(),
             slow_shard: self.slow_shard,
+            replicate_hot: self.replicate_hot,
         })?);
         self.shard_caches = false;
         Ok(())
@@ -2347,7 +2574,33 @@ impl EpEngine {
         // (replies of the *other* open exchange get stashed, tag-keyed).
         let t3 = std::time::Instant::now();
         let mut results = p.results;
-        if p.outstanding > 0 {
+        if p.outstanding > 1 {
+            // More than one worker still owes a reply: time the straggler
+            // tail (first remaining reply → last) separately, so the
+            // replication study can see whether splitting a hot expert's
+            // block actually shrank the slowest-worker wait.  The first
+            // collect may return several parts at once (stash drain,
+            // coalesced relay replies), so the remainder is counted from
+            // what actually arrived.
+            let first = self.fabric.collect_ffn_batches(
+                1,
+                layer,
+                p.tag,
+                &self.open_tags,
+            )?;
+            let got = first.len();
+            results.extend(first);
+            let t_straggle = std::time::Instant::now();
+            if got < p.outstanding {
+                results.extend(self.fabric.collect_ffn_batches(
+                    p.outstanding - got,
+                    layer,
+                    p.tag,
+                    &self.open_tags,
+                )?);
+            }
+            self.metrics.observe("hot_worker_wait", t_straggle.elapsed());
+        } else if p.outstanding > 0 {
             results.extend(self.fabric.collect_ffn_batches(
                 p.outstanding,
                 layer,
@@ -2419,14 +2672,19 @@ impl EpEngine {
         let probs = HostTensor::from_literal(&outs[1])?; // [T, E]
         self.metrics.observe("gate", t0.elapsed());
 
-        let routing = Routing::top1_masked(probs.as_f32()?, n_experts, mask);
+        let routing = match self.bb.force_expert {
+            Some(pin) if pin < n_experts => {
+                Routing::pinned_masked(probs.as_f32()?, n_experts, mask, pin)
+            }
+            _ => Routing::top1_masked(probs.as_f32()?, n_experts, mask),
+        };
         if let Some(i) = self.stats_idx[layer] {
             self.load_stats[i].record_assignments(routing.assignments());
         }
 
         // Log the all-to-all schedule this exchange would use at scale.
         let lp = self.placement.layer(layer).unwrap();
-        let plan = self.bb.exchange_plan(&routing, lp.ep_degree, m);
+        let plan = self.bb.exchange_plan(&routing, lp, m);
         self.metrics
             .inc("alltoall_bytes", plan.volume() as u64);
         self.metrics.inc("alltoall_hops", plan.hops() as u64);

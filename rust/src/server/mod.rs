@@ -95,6 +95,17 @@
 //! |                        | default) or `socket` (Unix sockets with     |
 //! |                        | length-prefixed serialized frames — the     |
 //! |                        | separate-process worker protocol).          |
+//! | `DSMOE_REPLICATE_HOT`  | split a replicated expert's token block     |
+//! |                        | across its replicas and run the online      |
+//! |                        | load-aware rebalancer between forwards      |
+//! |                        | (default off: static placement, bit-        |
+//! |                        | identical to the pre-replication path).     |
+//! | `DSMOE_REBALANCE_SKEW` | EWMA max/mean expert-load skew above which  |
+//! |                        | the rebalancer replicates the hottest       |
+//! |                        | expert / de-replicates cooled ones          |
+//! |                        | (default 2.0; clamped to >= 1).             |
+//! | `DSMOE_MAX_REPLICAS`   | ceiling on per-expert replication under the |
+//! |                        | rebalancer (default: worker count).         |
 
 pub mod engine;
 pub mod ep;

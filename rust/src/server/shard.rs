@@ -41,7 +41,7 @@ use crate::config::{AllToAllKind, ModelConfig};
 use crate::coordinator::alltoall::{self, Topology};
 use crate::coordinator::gate::Routing;
 use crate::coordinator::kv_cache::copy_lane;
-use crate::coordinator::Placement;
+use crate::coordinator::{LayerPlacement, Placement};
 use crate::fabric::FfnBatchResult;
 use crate::metrics::Metrics;
 use crate::runtime::{
@@ -58,8 +58,10 @@ use super::ep::LaneGroupCaches;
 pub(crate) struct MoeScratch {
     /// `[T * M]` combine accumulation buffer.
     pub(crate) combine: Vec<f32>,
-    /// Per-worker expert lists for the current layer.
-    pub(crate) worker_experts: Vec<Vec<usize>>,
+    /// Per-worker `(expert, first slot, rows)` segment lists for the
+    /// current layer (one full-block segment per expert when hot-expert
+    /// replication is off).
+    pub(crate) worker_experts: Vec<Vec<(usize, usize, usize)>>,
 }
 
 /// One worker's coalesced expert payload, prepared but not yet tagged or
@@ -67,8 +69,10 @@ pub(crate) struct MoeScratch {
 /// tag and dispatches.
 pub(crate) struct PreparedBatch {
     pub(crate) worker: usize,
-    /// `(expert id, row count)` in packed order.
-    pub(crate) experts: Vec<(usize, usize)>,
+    /// `(expert id, first slot, row count)` in packed order.  The slot
+    /// origin is nonzero only when hot-expert replication split this
+    /// expert's block across workers.
+    pub(crate) experts: Vec<(usize, usize, usize)>,
     /// `[total_rows, M]` packed activation rows.
     pub(crate) data: HostTensor,
 }
@@ -94,7 +98,7 @@ pub(crate) struct PreparedMoe {
     /// Residual stream pulled to the host (combine accumulates into it).
     pub(crate) out_data: Vec<f32>,
     /// Taken from the caller's [`MoeScratch`], returned at combine.
-    pub(crate) worker_experts: Vec<Vec<usize>>,
+    pub(crate) worker_experts: Vec<Vec<(usize, usize, usize)>>,
     /// Leader time spent in the dispatch half (gate → leader overlap).
     pub(crate) dispatch_elapsed: std::time::Duration,
 }
@@ -110,7 +114,18 @@ pub(crate) struct Backbone {
     arts: SharedArtifacts,
     params: HashMap<String, xla::Literal>,
     progs: HashMap<String, Rc<Program>>,
-    placement: Placement,
+    /// Current expert placement epoch.  Mutated only between forwards
+    /// (engine setter / [`ShardCmd::SetPlacement`]), never mid-exchange.
+    pub(crate) placement: Placement,
+    /// `DSMOE_REPLICATE_HOT`: split a replicated expert's token block
+    /// across its hosting workers instead of sending it all to replica
+    /// group 0's owner.  Off ⇒ the pack is byte-identical to the static
+    /// single-owner path.
+    pub(crate) replicate_hot: bool,
+    /// Bench/test hook ([`crate::server::EpEngine::set_route_pin`]):
+    /// route every live token to this expert instead of the gate's
+    /// argmax — a deterministic worst-case hot-expert workload.
+    pub(crate) force_expert: Option<usize>,
     alltoall: AllToAllKind,
     /// Fabric worker count (sizes the per-worker pack lists).
     workers: usize,
@@ -140,6 +155,8 @@ impl Backbone {
             params,
             progs: HashMap::new(),
             placement,
+            replicate_hot: false,
+            force_expert: None,
             alltoall,
             workers,
             node_size,
@@ -334,15 +351,22 @@ impl Backbone {
         // Dead lanes (retired/free under continuous batching) are masked
         // out of routing here, so they take no expert slot and send no
         // expert traffic.
-        let routing = Routing::top1_masked(probs.as_f32()?, n_experts, mask);
-
-        // Phase 2: coalesced pack — one payload per owning worker
-        // (replica 0 group), all of its expert blocks packed contiguous.
-        let t1 = std::time::Instant::now();
-        let (ep_degree, owners): (usize, Vec<usize>) = {
-            let lp = self.placement.layer(layer).unwrap();
-            (lp.ep_degree, (0..n_experts).map(|e| lp.owner(e, 0)).collect())
+        let routing = match self.force_expert {
+            Some(pin) if pin < n_experts => {
+                Routing::pinned_masked(probs.as_f32()?, n_experts, mask, pin)
+            }
+            _ => Routing::top1_masked(probs.as_f32()?, n_experts, mask),
         };
+
+        // Phase 2: coalesced pack — one payload per hosting worker.
+        // Without replication every expert is one full block on its
+        // replica-0 owner (slot origin 0 — byte-identical to the static
+        // path).  With `replicate_hot` a replicated expert's block is
+        // split contiguously across every hosting worker (ceil/floor so
+        // replicas differ by at most one row); replicas hold identical
+        // weights, so the per-token results are bitwise-equal however
+        // the block is split.
+        let t1 = std::time::Instant::now();
         let mut worker_experts = std::mem::take(&mut scratch.worker_experts);
         for list in &mut worker_experts {
             list.clear();
@@ -350,27 +374,43 @@ impl Backbone {
         if worker_experts.len() < self.workers {
             worker_experts.resize(self.workers, Vec::new());
         }
-        for e in 0..n_experts {
-            if routing.counts[e] > 0 {
-                worker_experts[owners[e]].push(e);
+        {
+            let lp = self.placement.layer(layer).unwrap();
+            for e in 0..n_experts {
+                let c = routing.counts[e];
+                if c == 0 {
+                    continue;
+                }
+                if self.replicate_hot {
+                    let replicas = lp.replicas_of(e);
+                    let r = replicas.len();
+                    let (base, rem) = (c / r, c % r);
+                    let mut slot0 = 0usize;
+                    for (i, &w) in replicas.iter().enumerate() {
+                        let rows = base + usize::from(i < rem);
+                        if rows == 0 {
+                            continue;
+                        }
+                        worker_experts[w].push((e, slot0, rows));
+                        slot0 += rows;
+                    }
+                } else {
+                    worker_experts[lp.owner(e, 0)].push((e, 0, c));
+                }
             }
         }
         let ln_flat = ln_h.as_f32()?;
         let mut batches = Vec::new();
-        for (w, experts) in worker_experts.iter().enumerate() {
-            if experts.is_empty() {
+        for (w, segs) in worker_experts.iter().enumerate() {
+            if segs.is_empty() {
                 continue;
             }
-            let total: usize =
-                experts.iter().map(|&e| routing.counts[e]).sum();
+            let total: usize = segs.iter().map(|&(_, _, r)| r).sum();
             let mut data = Vec::new();
-            routing.pack_blocks(ln_flat, m, experts, &mut data);
+            routing.pack_segments(ln_flat, m, segs, &mut data);
             batches.push(PreparedBatch {
                 worker: w,
-                experts: experts
-                    .iter()
-                    .map(|&e| (e, routing.counts[e]))
-                    .collect(),
+                experts: segs.clone(),
                 data: HostTensor::f32(&[total, m], data),
             });
         }
@@ -380,7 +420,10 @@ impl Backbone {
         // the expert outputs: all-to-all plan accounting, the PR-MoE
         // fixed residual branch, and the combine buffer prep.
         let t2 = std::time::Instant::now();
-        let plan = self.exchange_plan(&routing, ep_degree, m);
+        let plan = {
+            let lp = self.placement.layer(layer).unwrap();
+            self.exchange_plan(&routing, lp, m)
+        };
         self.metrics.inc("alltoall_bytes", plan.volume() as u64);
         self.metrics.inc("alltoall_hops", plan.hops() as u64);
         let residual: Option<Vec<f32>> = if self.cfg.residual {
@@ -430,7 +473,7 @@ impl Backbone {
     ) -> Result<xla::Literal> {
         let t4 = std::time::Instant::now();
         {
-            let packs: Vec<(&[(usize, usize)], &[f32])> = results
+            let packs: Vec<(&[(usize, usize, usize)], &[f32])> = results
                 .iter()
                 .map(|r| Ok((r.experts.as_slice(), r.data.as_f32()?)))
                 .collect::<Result<_>>()?;
@@ -449,23 +492,28 @@ impl Backbone {
         Ok(out)
     }
 
-    /// Build the all-to-all byte matrix this routing implies at EP degree
-    /// `ep` (tokens sharded round-robin over workers, as they would be
-    /// when each worker owns part of the batch) and plan it with the
-    /// configured schedule.
+    /// Build the all-to-all byte matrix this routing implies at the
+    /// layer's EP degree (tokens sharded round-robin over workers, as
+    /// they would be when each worker owns part of the batch) and plan it
+    /// with the configured schedule.  The destination is derived from the
+    /// placement — not `e % ep` — so migrated/replicated layouts are
+    /// accounted where the tokens actually go.
     pub(crate) fn exchange_plan(
         &self,
         routing: &Routing,
-        ep: usize,
+        lp: &LayerPlacement,
         m: usize,
     ) -> alltoall::Plan {
+        let ep = lp.ep_degree;
+        let owners: Vec<usize> =
+            (0..routing.n_experts).map(|e| lp.owner(e, 0) % ep).collect();
         let mut bytes = vec![vec![0usize; ep]; ep];
         for (t, &e) in routing.expert.iter().enumerate() {
             if e >= routing.n_experts {
                 continue; // masked token (dead lane): no exchange traffic
             }
             let src = t % ep; // token's home shard
-            let dst = e % ep; // expert's owner (round-robin placement)
+            let dst = owners[e]; // expert's host, placement-derived
             if src != dst {
                 bytes[src][dst] += m * 4;
             }
@@ -571,6 +619,11 @@ pub(crate) enum ShardCmd {
     /// Swap the metrics registry (benches reset between warmup and the
     /// measured run).
     SetMetrics(Arc<Metrics>),
+    /// Install a new placement epoch (hot-expert replication / migration).
+    /// Sent only between forwards — channel ordering guarantees it applies
+    /// before the next Prefill/Decode, so no in-flight exchange ever sees
+    /// a torn placement.
+    SetPlacement { placement: Placement, replicate_hot: bool },
     Shutdown,
 }
 
@@ -608,6 +661,7 @@ pub(crate) struct PoolSpec {
     pub(crate) arts: SharedArtifacts,
     pub(crate) cfg: ModelConfig,
     pub(crate) placement: Placement,
+    pub(crate) replicate_hot: bool,
     pub(crate) alltoall: AllToAllKind,
     pub(crate) workers: usize,
     pub(crate) metrics: Arc<Metrics>,
@@ -636,6 +690,7 @@ impl ShardPool {
             let arts = spec.arts.clone();
             let cfg = spec.cfg.clone();
             let placement = spec.placement.clone();
+            let replicate_hot = spec.replicate_hot;
             let (alltoall, workers) = (spec.alltoall, spec.workers);
             let metrics = spec.metrics.clone();
             let slow = spec
@@ -645,8 +700,9 @@ impl ShardPool {
                 .name(format!("dsmoe-shard-{idx}"))
                 .spawn(move || {
                     shard_main(
-                        idx, lane0, lanes, arts, cfg, placement, alltoall,
-                        workers, metrics, slow, rx, event_tx,
+                        idx, lane0, lanes, arts, cfg, placement,
+                        replicate_hot, alltoall, workers, metrics, slow, rx,
+                        event_tx,
                     )
                 })
                 .context("spawning leader shard")?;
@@ -751,6 +807,7 @@ fn shard_main(
     arts: SharedArtifacts,
     cfg: ModelConfig,
     placement: Placement,
+    replicate_hot: bool,
     alltoall: AllToAllKind,
     workers: usize,
     metrics: Arc<Metrics>,
@@ -772,6 +829,7 @@ fn shard_main(
                 return;
             }
         };
+    bb.replicate_hot = replicate_hot;
     let mut caches: Option<LaneGroupCaches> = None;
     let mut scratch = MoeScratch::default();
     let mut seq = 0u64;
@@ -782,6 +840,10 @@ fn shard_main(
         match cmd {
             ShardCmd::Shutdown => break,
             ShardCmd::SetMetrics(m) => bb.metrics = m,
+            ShardCmd::SetPlacement { placement, replicate_hot } => {
+                bb.placement = placement;
+                bb.replicate_hot = replicate_hot;
+            }
             ShardCmd::Prefill { tokens, lens } => {
                 let r = shard_prefill(
                     &mut bb, idx, lane0, lanes, &tokens, &lens, &mut caches,

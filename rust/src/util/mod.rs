@@ -33,9 +33,30 @@ pub fn env_pos_usize(name: &str, default: usize) -> usize {
     }
 }
 
+/// Float sibling of [`env_pos_usize`] for ratio-valued knobs
+/// (`DSMOE_REBALANCE_SKEW`): unset → `default` (silently); set to a
+/// non-finite, non-positive, or unparsable value → warn on stderr and
+/// fall back to `default`.
+pub fn env_pos_f64(name: &str, default: f64) -> f64 {
+    let Some(raw) = std::env::var_os(name) else {
+        return default;
+    };
+    let s = raw.to_string_lossy();
+    match s.trim().parse::<f64>() {
+        Ok(v) if v.is_finite() && v > 0.0 => v,
+        _ => {
+            eprintln!(
+                "[config] {name}={s:?} is not a positive number; \
+                 falling back to {default}"
+            );
+            default
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    use super::env_pos_usize;
+    use super::{env_pos_f64, env_pos_usize};
 
     // Each test uses its own variable name: `cargo test` runs tests in
     // parallel and the process environment is shared.
@@ -66,5 +87,22 @@ mod tests {
             );
         }
         std::env::remove_var("DSMOE_TEST_ENV_POS_BAD");
+    }
+
+    #[test]
+    fn env_pos_f64_parses_and_falls_back() {
+        std::env::remove_var("DSMOE_TEST_ENV_F64_UNSET");
+        assert_eq!(env_pos_f64("DSMOE_TEST_ENV_F64_UNSET", 2.0), 2.0);
+        std::env::set_var("DSMOE_TEST_ENV_F64", "1.5");
+        assert_eq!(env_pos_f64("DSMOE_TEST_ENV_F64", 2.0), 1.5);
+        for bad in ["0", "-1.5", "nan", "inf", "bogus", ""] {
+            std::env::set_var("DSMOE_TEST_ENV_F64", bad);
+            assert_eq!(
+                env_pos_f64("DSMOE_TEST_ENV_F64", 2.0),
+                2.0,
+                "value {bad:?} must fall back"
+            );
+        }
+        std::env::remove_var("DSMOE_TEST_ENV_F64");
     }
 }

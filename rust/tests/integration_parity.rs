@@ -844,6 +844,189 @@ fn parity_mos_student() {
     parity_for("mos-s", 2, AllToAllKind::Naive);
 }
 
+/// Hot-expert replication must be **bit-identical** to the static
+/// single-owner placement: replicas hold byte-identical weights (shipped
+/// over the same fabric load path the construction uses) and the
+/// contiguous ceil/floor split plus the slot-covering combine reassemble
+/// every token's row from whichever replica computed it — so splitting a
+/// hot expert's block across R workers may not perturb a single bit, on
+/// the flat schedule, the hierarchical relay schedule, and the socket
+/// transport alike.
+fn bitwise_replicated_placement(model: &str, workers: usize, depth: usize) {
+    let Some(m) = manifest() else { return };
+    let batch = 8usize;
+    let node_size = 2usize;
+    assert_eq!(workers % node_size, 0);
+    let cfg = m.model(model).unwrap().config.clone();
+    let smax = cfg.max_seq;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+
+    let mk = |replicate: bool, hier: bool, transport: TransportKind| {
+        let mut e = EpEngine::new_with_transport(
+            &m,
+            model,
+            workers,
+            AllToAllKind::Hierarchical,
+            batch,
+            transport,
+        )
+        .unwrap();
+        e.set_serial_moe(false);
+        e.set_pipeline(true);
+        e.set_pipe_depth(depth);
+        e.set_node_size(node_size);
+        e.set_a2a_hierarchical(hier);
+        if replicate {
+            e.set_replicate_hot(true).unwrap();
+            // Park the online rebalancer: this test pins the forced
+            // placement, the EWMA policy has its own unit tests.
+            e.set_rebalance_skew(f64::INFINITY);
+            e.force_replicas(0, 2).unwrap();
+            assert!(
+                e.placement()
+                    .layers
+                    .values()
+                    .all(|lp| lp.replication(0) == 2.min(lp.experts_of.len())),
+                "{model}: forced replication not applied"
+            );
+            assert!(e.metrics.counter("expert_migrations") > 0);
+        }
+        e
+    };
+    let mut base = mk(false, false, TransportKind::Channel);
+    let mut flat = mk(true, false, TransportKind::Channel);
+    let mut hier = mk(true, true, TransportKind::Channel);
+    let mut hier_sock = mk(true, true, TransportKind::Socket);
+
+    let rb = base.forward_prefill(&tokens, &lens).unwrap();
+    let rf = flat.forward_prefill(&tokens, &lens).unwrap();
+    let rh = hier.forward_prefill(&tokens, &lens).unwrap();
+    let rs = hier_sock.forward_prefill(&tokens, &lens).unwrap();
+    assert_eq!(rf, rb, "{model}: replicated flat prefill != static");
+    assert_eq!(rh, rb, "{model}: replicated hierarchical prefill != static");
+    assert_eq!(rs, rb, "{model}: replicated socket prefill != static");
+
+    let mut tok: Vec<i32> = rb.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    for step in 0..3 {
+        let db = base.forward_decode(&tok, &pos).unwrap();
+        let df = flat.forward_decode(&tok, &pos).unwrap();
+        let dh = hier.forward_decode(&tok, &pos).unwrap();
+        let ds = hier_sock.forward_decode(&tok, &pos).unwrap();
+        assert_eq!(df, db, "{model}: replicated flat decode step {step}");
+        assert_eq!(dh, db, "{model}: replicated hier decode step {step}");
+        assert_eq!(ds, db, "{model}: replicated socket decode step {step}");
+        tok = db.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    for e in [&base, &flat, &hier, &hier_sock] {
+        assert_eq!(e.fabric_stash_depth(), 0);
+    }
+}
+
+#[test]
+fn replicated_placement_bitwise_identical() {
+    bitwise_replicated_placement("moe-s-8", 4, 2);
+}
+
+#[test]
+fn replicated_placement_bitwise_identical_prmoe() {
+    // PR-MoE: replication composes with pyramid per-layer expert counts
+    // and the residual branch.
+    bitwise_replicated_placement("prmoe-s", 4, 2);
+}
+
+#[test]
+fn migration_mid_run_bitwise_identical() {
+    // An online migration between forwards — replicate expert 0 onto a
+    // second worker (real weight ship over the fabric), bump the
+    // placement epoch, keep decoding — must not perturb a single bit vs
+    // an untouched engine, and flipping replication back off mid-run
+    // (epoch bump back to single-owner packs, replicas left in place)
+    // must not either.  No tagged exchange ever crosses an epoch: the
+    // stash is empty at every boundary.
+    let Some(m) = manifest() else { return };
+    let model = "moe-s-8";
+    let batch = 8usize;
+    let workers = 4usize;
+    let cfg = m.model(model).unwrap().config.clone();
+    let smax = cfg.max_seq;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+
+    let mk = || {
+        let mut e =
+            EpEngine::new(&m, model, workers, AllToAllKind::Hierarchical, batch)
+                .unwrap();
+        e.set_serial_moe(false);
+        e.set_pipeline(true);
+        e.set_pipe_depth(2);
+        e
+    };
+    let mut steady = mk();
+    let mut migrating = mk();
+
+    let ra = steady.forward_prefill(&tokens, &lens).unwrap();
+    let rb = migrating.forward_prefill(&tokens, &lens).unwrap();
+    assert_eq!(rb, ra);
+    let mut tok: Vec<i32> = ra.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    let mut decode_both = |steady: &mut EpEngine,
+                           migrating: &mut EpEngine,
+                           steps: usize,
+                           what: &str| {
+        for step in 0..steps {
+            let da = steady.forward_decode(&tok, &pos).unwrap();
+            let db = migrating.forward_decode(&tok, &pos).unwrap();
+            assert_eq!(db, da, "{what}: decode step {step}");
+            tok = da.iter().map(|r| argmax(r) as i32).collect();
+            for p in &mut pos {
+                *p += 1;
+            }
+        }
+    };
+    decode_both(&mut steady, &mut migrating, 2, "pre-migration");
+
+    // The migration: between forwards, with the stash drained.
+    assert_eq!(migrating.fabric_stash_depth(), 0);
+    migrating.set_replicate_hot(true).unwrap();
+    migrating.set_rebalance_skew(f64::INFINITY);
+    migrating.force_replicas(0, 2).unwrap();
+    assert!(migrating.metrics.counter("expert_migrations") > 0);
+    decode_both(&mut steady, &mut migrating, 2, "post-migration");
+
+    // Epoch back to single-owner packs (replicas stay resident but every
+    // block returns to its replica-0 home).
+    migrating.set_replicate_hot(false).unwrap();
+    decode_both(&mut steady, &mut migrating, 2, "post-revert");
+
+    assert_eq!(steady.fabric_stash_depth(), 0);
+    assert_eq!(migrating.fabric_stash_depth(), 0);
+}
+
 #[test]
 fn expert_load_stats_populated() {
     let Some(m) = manifest() else { return };

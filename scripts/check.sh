@@ -29,6 +29,12 @@ cargo test -q --test integration_parity a2a_transport_bitwise_identical
 cargo test -q --test integration_fabric hierarchical_and_socket_exchanges_match_flat_bitwise
 cargo test -q --test integration_fabric relayed_reply_counts_once_in_stash_bound
 cargo test -q --test integration_fabric socket_transport_errors_stay_loud
+# Hot-expert replication + online migration: replicated placements must be
+# bitwise-identical to the static single-owner packs on every schedule and
+# transport, and a mid-run weight-ship + placement-epoch flip (both
+# directions) must not perturb a bit or leave a stale tagged reply behind.
+cargo test -q --test integration_parity replicated_placement_bitwise_identical
+cargo test -q --test integration_parity migration_mid_run_bitwise_identical
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 
