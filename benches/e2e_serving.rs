@@ -55,22 +55,33 @@
 //! The acceptance bar is R=2 landing below R=1 on decode p99 latency or
 //! on the summed `expert_wait`.
 //!
+//! Part 9 is the compressed-data-path study: the same fixed-lane trace
+//! served at {f32 everywhere, bf16 experts + f16 wire, int8 experts +
+//! f16 wire} — decode p50/p99, the summed exposed expert wait,
+//! dispatch/combine activation bytes split by wire dtype, the bytes of
+//! one full expert-weight (re)ship at each ladder dtype, and measured
+//! eval perplexity via the suite's NLL scorer.  The acceptance bars:
+//! f16 wire moves ≥ 1.9x fewer dispatch/combine bytes than f32 over the
+//! identical trace, the int8 ladder ships ≥ 3x smaller expert-weight
+//! payloads, and the perplexity delta is reported rather than assumed.
+//!
 //! Everything is also emitted to `BENCH_e2e.json` at the repo root so the
 //! perf trajectory is tracked across PRs.
 //!
 //! `--smoke` runs a minimal subset (one model, a short arrival trace, the
 //! depth-2 leader-parallel pair, the flat-vs-hierarchical all-to-all
-//! pair, the R ∈ {1, 2} replication pair) and still writes
-//! `BENCH_e2e.json` — cheap enough for `scripts/check.sh`, so every PR
-//! records a perf point.
+//! pair, the R ∈ {1, 2} replication pair, the f32-vs-int8+f16
+//! compression pair) and still writes `BENCH_e2e.json` — cheap enough
+//! for `scripts/check.sh`, so every PR records a perf point.
 
+use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
 
 use ds_moe::config::{AllToAllKind, ServingConfig};
-use ds_moe::data::{Corpus, CorpusConfig};
+use ds_moe::data::{Corpus, CorpusConfig, EvalSuite};
 use ds_moe::metrics::Metrics;
-use ds_moe::runtime::Manifest;
+use ds_moe::runtime::{Dtype, Manifest};
 use ds_moe::server::{ttft_percentile, Engine, EpEngine, Scheduler};
 use ds_moe::util::stats::{argmax, fmt_ns};
 use ds_moe::util::table::{f1, f2, Table};
@@ -500,9 +511,61 @@ fn main() {
     ht.print();
     let _ = ht.save_csv("e2e_hot_expert");
 
+    // --- compressed data path: weight ladder + wire activations ----------
+    let mut cmp_rows = Vec::new();
+    let mut ct = Table::new(
+        "Compressed expert data path (moe-s-8, fixed-lane forwards)",
+        &["mode", "prefill", "decode", "decode p99", "expert wait",
+          "a2a KiB", "weights KiB", "wt ratio", "ppl"],
+    );
+    let cmp_modes: &[(&str, Dtype, Dtype)] = if smoke {
+        &[
+            ("f32", Dtype::F32, Dtype::F32),
+            ("int8+f16", Dtype::I8, Dtype::F16),
+        ]
+    } else {
+        &[
+            ("f32", Dtype::F32, Dtype::F32),
+            ("bf16+f16", Dtype::BF16, Dtype::F16),
+            ("int8+f16", Dtype::I8, Dtype::F16),
+        ]
+    };
+    let cmp_eval = if smoke { 8 } else { 32 };
+    for &(mode, ed, wd) in cmp_modes {
+        let Some(row) = compression_study(
+            &manifest, &corpus, "moe-s-8", 4, mode, ed, wd, cmp_eval,
+        ) else {
+            continue;
+        };
+        ct.row(&[
+            row.mode.to_string(),
+            fmt_ns(row.prefill_ns as u64),
+            fmt_ns(row.decode_ns as u64),
+            fmt_ns(row.decode_p99_ns),
+            fmt_ns(row.exposed_wait_ns),
+            f1(row.activation_bytes as f64 / 1024.0),
+            f1(row.weight_ship_bytes as f64 / 1024.0),
+            f2(row.weight_ship_bytes_f32 as f64
+                / row.weight_ship_bytes.max(1) as f64),
+            format!("{:.3}", row.perplexity),
+        ]);
+        cmp_rows.push(row);
+    }
+    ct.note("the same trace served at each point of the compression \
+             ladder: weights dequantize once at install (compute stays \
+             f32), activations narrow at the dispatch seam and widen at \
+             combine.  a2a KiB sums dispatch+combine activation bytes \
+             over the measured forwards (f16 wire should land ≥ 1.9x \
+             below the f32 row); weights KiB is one full expert-weight \
+             reship at the ladder dtype (int8 ≥ 3x below f32); ppl is \
+             measured on the eval suite, so the precision cost is a \
+             number, not a guess");
+    ct.print();
+    let _ = ct.save_csv("e2e_compression");
+
     write_bench_json(
         &rows, &studies, &cb_rows, &depth_rows, &adm_rows, &lp_rows,
-        &a2a_rows, &he_rows,
+        &a2a_rows, &he_rows, &cmp_rows,
     );
 }
 
@@ -598,6 +661,179 @@ fn hot_expert_study(
         decode_p99_ns: ep.metrics.percentile_ns("forward_decode", 99.0),
         expert_wait_ns: ep.metrics.sum_ns("expert_wait"),
         hot_worker_wait_ns: ep.metrics.sum_ns("hot_worker_wait"),
+    })
+}
+
+struct CompressionRow {
+    model: String,
+    workers: usize,
+    /// Human label for the ladder point ("f32", "bf16+f16", "int8+f16").
+    mode: &'static str,
+    expert_dtype: Dtype,
+    wire_dtype: Dtype,
+    prefill_ns: f64,
+    decode_ns: f64,
+    decode_p50_ns: u64,
+    decode_p99_ns: u64,
+    /// Summed `expert_wait` + `pipeline_bubble` over the measured run.
+    exposed_wait_ns: u64,
+    /// Dispatch/combine activation bytes over the measured forwards,
+    /// split by the dtype they crossed the fabric as (tag-indexed).
+    dispatch_bytes: [u64; Dtype::N],
+    combine_bytes: [u64; Dtype::N],
+    /// Total activation bytes (dispatch + combine, all dtypes).
+    activation_bytes: u64,
+    /// Bytes of one full expert-weight reship at the mode's ladder dtype
+    /// and at f32 — the startup-shipping / migration payload sizes.
+    weight_ship_bytes: u64,
+    weight_ship_bytes_f32: u64,
+    eval_items: usize,
+    perplexity: f64,
+}
+
+/// Fixed-lane forwards at one point of the compression ladder, steady
+/// state: expert weights shipped as `expert_dtype` (dequantized once at
+/// install), dispatch/combine activations carried as `wire_dtype`.
+/// Weight-payload bytes are measured by reshipping every placed expert
+/// through the live fabric and reading the `bytes_to_workers` delta —
+/// the same path startup shipping and hot-expert migration use — and
+/// quality is measured, not assumed: the eval suite's NLL scorer runs
+/// through the engine at the active compression point.
+#[allow(clippy::too_many_arguments)]
+fn compression_study(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    model: &str,
+    workers: usize,
+    mode: &'static str,
+    expert_dtype: Dtype,
+    wire_dtype: Dtype,
+    n_eval: usize,
+) -> Option<CompressionRow> {
+    let batch = 8usize;
+    let mut ep = EpEngine::new(
+        manifest,
+        model,
+        workers,
+        AllToAllKind::Hierarchical,
+        batch,
+    )
+    .ok()?;
+    ep.set_serial_moe(false);
+    ep.set_pipeline(true);
+
+    // One full reship at f32 (flip away and back so the set is not a
+    // no-op), then one at the mode's ladder dtype: the deltas are the
+    // exact weight payloads for the identical expert set.
+    ep.set_expert_dtype(Dtype::BF16).ok()?;
+    let b0 = ep.traffic().bytes_to_workers.load(Ordering::Relaxed);
+    ep.set_expert_dtype(Dtype::F32).ok()?;
+    let weight_ship_bytes_f32 =
+        ep.traffic().bytes_to_workers.load(Ordering::Relaxed) - b0;
+    let weight_ship_bytes = if expert_dtype == Dtype::F32 {
+        weight_ship_bytes_f32
+    } else {
+        let b0 = ep.traffic().bytes_to_workers.load(Ordering::Relaxed);
+        ep.set_expert_dtype(expert_dtype).ok()?;
+        ep.traffic().bytes_to_workers.load(Ordering::Relaxed) - b0
+    };
+    ep.set_wire_dtype(wire_dtype).ok()?;
+
+    let smax = ep.cfg.max_seq;
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+    let lens = vec![plen; batch];
+    let first = ep.forward_prefill(&tokens, &lens).ok()?;
+    let mut tok: Vec<i32> = first.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    ep.forward_decode(&tok, &pos).ok()?;
+    ep.metrics = std::sync::Arc::new(Metrics::new());
+    let mut disp0 = [0u64; Dtype::N];
+    let mut comb0 = [0u64; Dtype::N];
+    for d in Dtype::ALL {
+        disp0[d.tag() as usize] = ep.traffic().dispatch_bytes(d);
+        comb0[d.tag() as usize] = ep.traffic().combine_bytes(d);
+    }
+    for _ in 0..2 {
+        ep.forward_prefill(&tokens, &lens).ok()?;
+    }
+    for _ in 0..8 {
+        let out = ep.forward_decode(&tok, &pos).ok()?;
+        tok = out.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    let mut dispatch_bytes = [0u64; Dtype::N];
+    let mut combine_bytes = [0u64; Dtype::N];
+    for d in Dtype::ALL {
+        let i = d.tag() as usize;
+        dispatch_bytes[i] = ep.traffic().dispatch_bytes(d) - disp0[i];
+        combine_bytes[i] = ep.traffic().combine_bytes(d) - comb0[i];
+    }
+    let activation_bytes = dispatch_bytes.iter().sum::<u64>()
+        + combine_bytes.iter().sum::<u64>();
+    let prefill_ns = ep.metrics.mean_ns("forward_prefill");
+    let decode_ns = ep.metrics.mean_ns("forward_decode");
+    let decode_p50_ns = ep.metrics.percentile_ns("forward_decode", 50.0);
+    let decode_p99_ns = ep.metrics.percentile_ns("forward_decode", 99.0);
+    let exposed_wait_ns =
+        ep.metrics.sum_ns("expert_wait") + ep.metrics.sum_ns("pipeline_bubble");
+
+    // Measured quality at this compression point: run the eval prompts
+    // through the engine in lane-sized batches, then let the suite's NLL
+    // scorer turn the last-position logits into perplexity.
+    let mut suite = EvalSuite::from_corpus(corpus, plen);
+    let cap = (n_eval / suite.tasks.len().max(1)).max(1);
+    for t in &mut suite.tasks {
+        t.items.truncate(cap);
+    }
+    let items: Vec<(Vec<i32>, i32)> = suite
+        .tasks
+        .iter()
+        .flat_map(|t| t.items.iter().cloned())
+        .collect();
+    let mut logits_by_prompt: HashMap<Vec<i32>, Vec<f32>> = HashMap::new();
+    for chunk in items.chunks(batch) {
+        let mut toks = vec![0i32; batch * smax];
+        for b in 0..batch {
+            let p = &chunk[b.min(chunk.len() - 1)].0;
+            toks[b * smax..b * smax + plen].copy_from_slice(p);
+        }
+        let out = ep.forward_prefill(&toks, &lens).ok()?;
+        for (b, (p, _)) in chunk.iter().enumerate() {
+            logits_by_prompt.insert(p.clone(), out[b].clone());
+        }
+    }
+    let vocab = corpus.config.vocab_size;
+    let (_, perplexity) = suite.score_nll(|p| {
+        logits_by_prompt
+            .get(p)
+            .cloned()
+            .unwrap_or_else(|| vec![0.0; vocab])
+    });
+    Some(CompressionRow {
+        model: model.to_string(),
+        workers,
+        mode,
+        expert_dtype,
+        wire_dtype,
+        prefill_ns,
+        decode_ns,
+        decode_p50_ns,
+        decode_p99_ns,
+        exposed_wait_ns,
+        dispatch_bytes,
+        combine_bytes,
+        activation_bytes,
+        weight_ship_bytes,
+        weight_ship_bytes_f32,
+        eval_items: suite.total_items(),
+        perplexity,
     })
 }
 
@@ -1113,8 +1349,9 @@ fn pipeline_study(
 /// Emit `BENCH_e2e.json` at the repo root: the serving sweep, the MoE
 /// pipeline study, the continuous-batching study, the ring-depth sweep,
 /// the admission-interleaving study, the leader-parallel study, the
-/// all-to-all schedule study, and the hot-expert replication study, so
-/// future PRs have a machine-readable perf baseline.
+/// all-to-all schedule study, the hot-expert replication study, and the
+/// compressed-data-path study, so future PRs have a machine-readable
+/// perf baseline.
 #[allow(clippy::too_many_arguments)]
 fn write_bench_json(
     rows: &[ServingRow],
@@ -1125,6 +1362,7 @@ fn write_bench_json(
     lp_rows: &[LeaderParRow],
     a2a_rows: &[A2aRow],
     he_rows: &[HotExpertRow],
+    cmp_rows: &[CompressionRow],
 ) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"e2e_serving\",\n  \"serving\": [\n");
@@ -1319,6 +1557,70 @@ fn write_bench_json(
             r.expert_wait_ns,
             r.hot_worker_wait_ns,
             if i + 1 == he_rows.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ],\n  \"compression\": [\n");
+    // Ratios are vs the all-f32 row of the same sweep, so the ≥ 1.9x
+    // wire and ≥ 3x weight acceptance bars are directly readable.
+    let cmp_base = cmp_rows
+        .iter()
+        .find(|r| r.expert_dtype == Dtype::F32 && r.wire_dtype == Dtype::F32);
+    for (i, r) in cmp_rows.iter().enumerate() {
+        let by_dtype = |v: &[u64; Dtype::N]| -> String {
+            let mut o = String::from("{");
+            let mut first = true;
+            for d in Dtype::ALL {
+                let b = v[d.tag() as usize];
+                if b == 0 {
+                    continue;
+                }
+                if !first {
+                    o.push_str(", ");
+                }
+                let _ = write!(o, "\"{}\": {}", d.name(), b);
+                first = false;
+            }
+            o.push('}');
+            o
+        };
+        let act_ratio = match cmp_base {
+            Some(b) if r.activation_bytes > 0 => {
+                b.activation_bytes as f64 / r.activation_bytes as f64
+            }
+            _ => 1.0,
+        };
+        let _ = write!(
+            s,
+            "    {{\"model\": \"{}\", \"workers\": {}, \"mode\": \"{}\", \
+             \"expert_dtype\": \"{}\", \"wire_dtype\": \"{}\", \
+             \"prefill_ns\": {:.0}, \"decode_ns\": {:.0}, \
+             \"decode_p50_ns\": {}, \"decode_p99_ns\": {}, \
+             \"exposed_wait_ns\": {}, \"dispatch_bytes\": {}, \
+             \"combine_bytes\": {}, \"activation_bytes\": {}, \
+             \"activation_ratio_vs_f32\": {:.2}, \
+             \"weight_ship_bytes\": {}, \"weight_ship_bytes_f32\": {}, \
+             \"weight_ship_ratio\": {:.2}, \"eval_items\": {}, \
+             \"perplexity\": {:.4}}}{}\n",
+            r.model,
+            r.workers,
+            r.mode,
+            r.expert_dtype.name(),
+            r.wire_dtype.name(),
+            r.prefill_ns,
+            r.decode_ns,
+            r.decode_p50_ns,
+            r.decode_p99_ns,
+            r.exposed_wait_ns,
+            by_dtype(&r.dispatch_bytes),
+            by_dtype(&r.combine_bytes),
+            r.activation_bytes,
+            act_ratio,
+            r.weight_ship_bytes,
+            r.weight_ship_bytes_f32,
+            r.weight_ship_bytes_f32 as f64 / r.weight_ship_bytes.max(1) as f64,
+            r.eval_items,
+            r.perplexity,
+            if i + 1 == cmp_rows.len() { "" } else { "," }
         );
     }
     s.push_str("  ]\n}\n");

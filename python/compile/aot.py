@@ -15,8 +15,12 @@ under ``artifacts/``:
   reads, updates and re-writes.
 * ``manifest.json`` — machine-readable index of all of the above: program
   file paths, positional input/output specs (name, shape, dtype), model
-  configs and parameter layouts.  This file is the ABI between the Python
-  build path and the Rust runtime.
+  configs and parameter layouts, plus (schema v2) a ``sha256`` digest per
+  program file that the Rust loader verifies before compiling, and a
+  ``capabilities`` block declaring which expert-weight ladder dtypes and
+  activation wire dtypes the serving stack may enable against these
+  artifacts.  This file is the ABI between the Python build path and the
+  Rust runtime.
 
 Python runs ONCE; after this, the Rust binary is self-contained.
 """
@@ -25,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import functools
+import hashlib
 import json
 import os
 from typing import Callable, List, Sequence, Tuple
@@ -84,11 +89,26 @@ def _sds(shape, dtype=jnp.float32):
 
 _DT = {"f32": jnp.float32, "i32": jnp.int32}
 
+# Manifest ABI version.  v2 adds per-program sha256 digests and the
+# capabilities block; the Rust loader accepts <= its own SCHEMA_VERSION
+# (rust/src/runtime/artifact.rs) and treats absent as v1.
+MANIFEST_SCHEMA_VERSION = 2
+# Dtypes the serving stack may enable against these artifacts.  Programs
+# stay f32 throughout — expert weights dequantize once at install and
+# wire activations widen before compute — so every ladder the Rust side
+# implements is safe to declare here.
+CAPABILITIES = {
+    "expert_dtypes": ["f32", "bf16", "i8"],
+    "wire_dtypes": ["f32", "f16", "bf16"],
+}
+
 
 class Exporter:
     def __init__(self, out_dir: str):
         self.out_dir = out_dir
-        self.manifest = {"models": {}, "shared": {}}
+        self.manifest = {"schema_version": MANIFEST_SCHEMA_VERSION,
+                         "capabilities": CAPABILITIES,
+                         "models": {}, "shared": {}}
 
     def export_program(self, rel_name: str, fn: Callable,
                        inputs: List[dict], outputs: List[dict]) -> dict:
@@ -100,8 +120,9 @@ class Exporter:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         with open(path, "w") as f:
             f.write(text)
-        entry = {"file": rel_name + ".hlo.txt", "inputs": inputs,
-                 "outputs": outputs}
+        entry = {"file": rel_name + ".hlo.txt",
+                 "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                 "inputs": inputs, "outputs": outputs}
         print(f"  wrote {rel_name}: {len(inputs)} in / {len(outputs)} out, "
               f"{len(text) // 1024} KiB")
         return entry

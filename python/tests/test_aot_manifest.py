@@ -1,6 +1,7 @@
 """Manifest/ABI consistency: the exported artifacts must describe exactly
 what the Rust side will load.  Skipped when `make artifacts` has not run."""
 
+import hashlib
 import json
 import os
 
@@ -93,6 +94,39 @@ def test_serve_program_shapes(manifest):
             assert pos["shape"] == [b]
             logits = dec["outputs"][0]
             assert logits["shape"] == [b, cfg["vocab_size"]]
+
+
+def test_manifest_schema_v2(manifest):
+    """Schema v2: version stamp + the dtype capability block the serving
+    stack gates its compression toggles on."""
+    assert manifest["schema_version"] == aot.MANIFEST_SCHEMA_VERSION
+    caps = manifest["capabilities"]
+    # f32 must always be declared — it is the default everything falls
+    # back to; the compressed ladders ride along.
+    assert "f32" in caps["expert_dtypes"]
+    assert "f32" in caps["wire_dtypes"]
+    assert set(caps["expert_dtypes"]) >= {"bf16", "i8"}
+    assert set(caps["wire_dtypes"]) >= {"f16", "bf16"}
+
+
+def _iter_programs(manifest):
+    for entry in manifest["models"].values():
+        yield from entry["programs"].values()
+    yield from manifest["shared"].values()
+
+
+def test_every_program_has_matching_sha256(manifest):
+    """Each entry's sha256 matches the bytes on disk — the integrity
+    check the Rust loader performs before compiling a program."""
+    count = 0
+    for prog in _iter_programs(manifest):
+        digest = prog["sha256"]
+        assert len(digest) == 64 and int(digest, 16) >= 0
+        with open(os.path.join(ART, prog["file"]), "rb") as f:
+            assert hashlib.sha256(f.read()).hexdigest() == digest, \
+                prog["file"]
+        count += 1
+    assert count > 100
 
 
 def test_hlo_files_are_text(manifest):

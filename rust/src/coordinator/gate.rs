@@ -12,6 +12,7 @@
 //! to the kernel through the end-to-end logits comparison.
 
 use crate::moe;
+use crate::runtime::{Dtype, HostTensor};
 
 /// Sentinel expert id for a token masked out of routing (a dead decode
 /// lane or prefill padding): it gets no expert, no slot, and no dispatch —
@@ -290,6 +291,59 @@ impl Routing {
         Ok(())
     }
 
+    /// [`Routing::pack_segments`] straight into a dispatch payload in the
+    /// requested wire dtype (`DSMOE_WIRE_DTYPE`).  `Dtype::F32` wraps the
+    /// exact `pack_segments` rows — same bits, no conversion — so the
+    /// default wire stays bitwise identical to the uncompressed path;
+    /// f16/bf16 narrow the packed rows once here, at the dispatch seam,
+    /// halving the payload that crosses the fabric.
+    pub fn pack_segments_wire(
+        &self,
+        ln_h: &[f32],
+        m: usize,
+        segs: &[(usize, usize, usize)],
+        wire: Dtype,
+    ) -> anyhow::Result<HostTensor> {
+        let mut buf = Vec::new();
+        self.pack_segments(ln_h, m, segs, &mut buf);
+        let total = buf.len() / m;
+        let t = HostTensor::f32(&[total, m], buf);
+        if wire == Dtype::F32 { Ok(t) } else { t.convert(wire) }
+    }
+
+    /// [`Routing::combine_packed`] over worker replies that may travel in a
+    /// compressed wire dtype: f16/bf16 packs are widened to f32 once, f32
+    /// packs are borrowed as-is — so with the wire toggle off this is the
+    /// same arithmetic on the same bits as `combine_packed`.
+    pub fn combine_packed_wire(
+        &self,
+        packs: &[(&[(usize, usize, usize)], &HostTensor)],
+        m: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let mut widened: Vec<Option<Vec<f32>>> = Vec::with_capacity(packs.len());
+        for (_, t) in packs {
+            widened.push(match t.dtype() {
+                Dtype::F32 => None,
+                _ => Some(t.to_f32_vec()?),
+            });
+        }
+        let borrowed: Vec<(&[(usize, usize, usize)], &[f32])> = packs
+            .iter()
+            .zip(&widened)
+            .map(|((segs, t), w)| {
+                Ok((
+                    *segs,
+                    match w {
+                        Some(v) => v.as_slice(),
+                        None => t.as_f32()?,
+                    },
+                ))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        self.combine_packed(&borrowed, m, out)
+    }
+
     /// Tokens per expert as expert ids (for load stats).
     pub fn assignments(&self) -> &[usize] {
         &self.expert
@@ -540,6 +594,48 @@ mod tests {
         assert_eq!(ra.expert, full.expert);
         assert_eq!(ra.slot, full.slot);
         assert_eq!(ra.counts, full.counts);
+    }
+
+    #[test]
+    fn wire_pack_and_combine_f32_is_bitwise_f16_is_close() {
+        let t_toks = 24;
+        let m = 8;
+        let n_e = 4;
+        let probs = softmax_rows(t_toks, n_e, 29);
+        let r = Routing::top1(&probs, n_e);
+        let mut rng = Rng::new(43);
+        let ln_h: Vec<f32> =
+            (0..t_toks * m).map(|_| rng.gauss() as f32).collect();
+        let segs: Vec<(usize, usize, usize)> =
+            (0..n_e).map(|e| (e, 0, r.counts[e])).collect();
+        let mut plain = Vec::new();
+        r.pack_segments(&ln_h, m, &segs, &mut plain);
+
+        // f32 wire: same bits in, same bits out.
+        let p32 = r.pack_segments_wire(&ln_h, m, &segs, Dtype::F32).unwrap();
+        assert_eq!(p32.dtype(), Dtype::F32);
+        assert_eq!(p32.as_f32().unwrap(), plain.as_slice());
+        let mut out32 = Vec::new();
+        r.combine_packed_wire(&[(segs.as_slice(), &p32)], m, &mut out32)
+            .unwrap();
+        let mut want = Vec::new();
+        r.combine_packed(&[(segs.as_slice(), plain.as_slice())], m, &mut want)
+            .unwrap();
+        assert_eq!(out32, want, "f32 wire must be bitwise identical");
+
+        // f16 wire: half the payload bytes, combine within f16 tolerance.
+        let p16 = r.pack_segments_wire(&ln_h, m, &segs, Dtype::F16).unwrap();
+        assert_eq!(p16.dtype(), Dtype::F16);
+        assert_eq!(p16.byte_len() * 2, p32.byte_len());
+        let mut out16 = Vec::new();
+        r.combine_packed_wire(&[(segs.as_slice(), &p16)], m, &mut out16)
+            .unwrap();
+        for (a, b) in out16.iter().zip(&want) {
+            assert!(
+                (a - b).abs() <= 1e-3_f32.max(b.abs() * 1e-3),
+                "f16 wire combine diverged: {a} vs {b}"
+            );
+        }
     }
 
     #[test]

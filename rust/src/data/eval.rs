@@ -76,9 +76,60 @@ impl EvalSuite {
         (per_task, mean)
     }
 
+    /// Score a logits-based predictor: `logits(prompt)` returns the full
+    /// next-token distribution (pre-softmax) and the suite accumulates the
+    /// gold token's negative log-likelihood.  Returns per-task perplexity
+    /// plus the overall perplexity (exp of the mean NLL over every item) —
+    /// the quality metric the compression study reports, sensitive to
+    /// precision loss that top-1 accuracy can hide.
+    pub fn score_nll<F: FnMut(&[i32]) -> Vec<f32>>(
+        &self,
+        mut logits: F,
+    ) -> (Vec<(String, f64)>, f64) {
+        let mut per_task = Vec::new();
+        let (mut total_nll, mut total_n) = (0.0f64, 0usize);
+        for t in &self.tasks {
+            if t.items.is_empty() {
+                continue;
+            }
+            let mut nll = 0.0f64;
+            for (p, gold) in &t.items {
+                let row = logits(p);
+                nll += gold_nll(&row, *gold as usize);
+            }
+            total_nll += nll;
+            total_n += t.items.len();
+            per_task.push((
+                t.name.clone(),
+                (nll / t.items.len() as f64).exp(),
+            ));
+        }
+        let ppl = if total_n == 0 {
+            1.0
+        } else {
+            (total_nll / total_n as f64).exp()
+        };
+        (per_task, ppl)
+    }
+
     pub fn total_items(&self) -> usize {
         self.tasks.iter().map(|t| t.items.len()).sum()
     }
+}
+
+/// Negative log-likelihood of token `gold` under `logits` (numerically
+/// stable log-softmax in f64: max-shift, then log-sum-exp).
+fn gold_nll(logits: &[f32], gold: usize) -> f64 {
+    let max = logits.iter().fold(f64::NEG_INFINITY, |m, &v| {
+        m.max(v as f64)
+    });
+    let lse: f64 = logits
+        .iter()
+        .map(|&v| ((v as f64) - max).exp())
+        .sum::<f64>()
+        .ln()
+        + max;
+    lse - logits[gold] as f64
 }
 
 #[cfg(test)]
@@ -122,6 +173,35 @@ mod tests {
         });
         assert!(mean > 0.99, "mean {mean}");
         assert!(per_task.iter().all(|(_, a)| *a > 0.99));
+    }
+
+    #[test]
+    fn nll_scorer_ranks_sharp_above_uniform() {
+        let c = tiny_corpus();
+        let s = EvalSuite::from_corpus(&c, 8);
+        let v = c.config.vocab_size;
+        // A predictor that puts high logit mass on the gold token beats a
+        // uniform one, and uniform perplexity equals the vocab size.
+        let (_, ppl_uniform) = s.score_nll(|_| vec![0.0; v]);
+        assert!(
+            (ppl_uniform - v as f64).abs() < 1e-6,
+            "uniform ppl {ppl_uniform} vs vocab {v}"
+        );
+        let (per_task, ppl_sharp) = s.score_nll(|prompt| {
+            let gold = c
+                .valid
+                .iter()
+                .find(|seq| &seq[..8] == prompt)
+                .map(|seq| seq[8])
+                .unwrap_or(0);
+            let mut row = vec![0.0f32; v];
+            row[gold as usize] = 10.0;
+            row
+        });
+        assert!(ppl_sharp < 2.0, "sharp ppl {ppl_sharp}");
+        assert!(ppl_sharp < ppl_uniform);
+        assert_eq!(per_task.len(), s.tasks.len());
+        assert!(per_task.iter().all(|(_, p)| *p >= 1.0));
     }
 
     #[test]

@@ -6,9 +6,15 @@
 //! ```text
 //! frame   := [u32 LE payload length][payload]
 //! payload := [u8 kind][body]
-//! tensor  := [u8 dtype (0=f32, 1=i32)][u8 ndim][u64 LE dims…][raw LE elems]
+//! tensor  := [u8 dtype tag][u8 ndim][u64 LE dims…][raw LE elems]
 //! experts := [u64 LE count][(u64 LE expert id, u64 LE first slot, u64 LE rows)…]
 //! ```
+//!
+//! The tensor dtype tag is [`Dtype::tag`] — one shared table for encode,
+//! decode and the tests (0=f32, 1=i32, 2=f16, 3=bf16, 4=i8), with
+//! per-dtype element widths ([`Dtype::elem_bytes`]), so the compressed
+//! wire dtypes of the expert data path (`DSMOE_WIRE_DTYPE`,
+//! `DSMOE_EXPERT_DTYPE`) serialize through the same strict codec as f32.
 //!
 //! The offline build has no serde, so this is the whole wire format: every
 //! `Cmd` / [`Reply`] variant encodes, including the relay traffic of the
@@ -26,7 +32,7 @@ use std::io::{Read, Write};
 use anyhow::{Context, Result};
 
 use super::{Cmd, ExpertFfnBatch, FfnBatchResult, Reply};
-use crate::runtime::{HostTensor, TensorData};
+use crate::runtime::{Dtype, HostTensor, TensorData};
 
 /// Upper bound on a frame payload (1 GiB) — a corrupt length prefix must
 /// fail loudly instead of attempting an absurd allocation.
@@ -66,10 +72,7 @@ fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
 }
 
 fn put_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
-    buf.push(match t.data {
-        TensorData::F32(_) => 0,
-        TensorData::I32(_) => 1,
-    });
+    buf.push(t.dtype().tag());
     buf.push(t.shape.len() as u8);
     for &d in &t.shape {
         put_usize(buf, d);
@@ -83,6 +86,16 @@ fn put_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
         TensorData::I32(v) => {
             for x in v {
                 buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        TensorData::F16(v) | TensorData::BF16(v) => {
+            for x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        TensorData::I8(v) => {
+            for x in v {
+                buf.push(*x as u8);
             }
         }
     }
@@ -250,7 +263,9 @@ impl<'a> Cur<'a> {
     }
 
     fn tensor(&mut self) -> Result<HostTensor> {
-        let dtype = self.u8()?;
+        let tag = self.u8()?;
+        let dtype = Dtype::from_tag(tag)
+            .with_context(|| format!("unknown tensor dtype tag {tag}"))?;
         let ndim = self.u8()? as usize;
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
@@ -259,21 +274,33 @@ impl<'a> Cur<'a> {
         let nbytes = shape
             .iter()
             .try_fold(1usize, |a, &d| a.checked_mul(d))
-            .and_then(|n| n.checked_mul(4))
+            .and_then(|n| n.checked_mul(dtype.elem_bytes()))
             .context("tensor dims overflow")?;
         let raw = self.take(nbytes)?;
         let data = match dtype {
-            0 => TensorData::F32(
+            Dtype::F32 => TensorData::F32(
                 raw.chunks_exact(4)
                     .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                     .collect(),
             ),
-            1 => TensorData::I32(
+            Dtype::I32 => TensorData::I32(
                 raw.chunks_exact(4)
                     .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
                     .collect(),
             ),
-            d => anyhow::bail!("unknown tensor dtype tag {d}"),
+            Dtype::F16 => TensorData::F16(
+                raw.chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            Dtype::BF16 => TensorData::BF16(
+                raw.chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            Dtype::I8 => {
+                TensorData::I8(raw.iter().map(|&b| b as i8).collect())
+            }
         };
         Ok(HostTensor { shape, data })
     }
@@ -460,11 +487,15 @@ mod tests {
     use crate::coordinator::gate;
     use crate::util::prop::{prop, Case};
 
+    /// Random activation tensor in a random **wire** dtype (f32 plus the
+    /// compressed f16/bf16 payload formats of `DSMOE_WIRE_DTYPE`).
     fn rand_tensor(c: &mut Case, rows: usize, m: usize) -> HostTensor {
         let data: Vec<f32> = (0..rows * m)
             .map(|_| c.f64(-4.0, 4.0) as f32)
             .collect();
-        HostTensor::f32(&[rows, m], data)
+        let t = HostTensor::f32(&[rows, m], data);
+        let wire = *c.choose(&[Dtype::F32, Dtype::F16, Dtype::BF16]);
+        t.convert(wire).unwrap()
     }
 
     /// Random batch: a few expert blocks, some possibly zero-row, one id
@@ -615,46 +646,125 @@ mod tests {
 
     #[test]
     fn truncated_frames_fail_loudly() {
+        // Same truncation discipline for every wire dtype the batch path
+        // can carry: a compressed payload must never decode shorter.
+        let f32_data = HostTensor::f32(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        for data in [
+            f32_data.clone(),
+            f32_data.convert(Dtype::F16).unwrap(),
+            f32_data.convert(Dtype::BF16).unwrap(),
+        ] {
+            let batch = ExpertFfnBatch {
+                layer: 1,
+                experts: vec![(0, 0, 1), (2, 1, 2)],
+                data,
+                tag: 42,
+            };
+            let payload = encode_cmd(&Cmd::ExpertFfnBatch(batch));
+            // Every proper prefix of the payload must fail to decode —
+            // never produce a silently shorter batch.
+            for cut in 0..payload.len() {
+                assert!(
+                    decode_cmd(&payload[..cut]).is_err(),
+                    "decode of {cut}/{} bytes must fail",
+                    payload.len()
+                );
+            }
+            // Trailing garbage is equally loud.
+            let mut padded = payload.clone();
+            padded.push(0);
+            assert!(decode_cmd(&padded).is_err(), "trailing bytes must fail");
+
+            // Stream level: truncating anywhere inside the framed bytes is
+            // an error; an empty stream is a clean EOF (None), not an error.
+            let mut framed = Vec::new();
+            write_frame(&mut framed, &payload).unwrap();
+            assert!(matches!(
+                read_frame(&mut std::io::Cursor::new(&framed[..0])),
+                Ok(None)
+            ));
+            for cut in 1..framed.len() {
+                assert!(
+                    read_frame(&mut std::io::Cursor::new(&framed[..cut]))
+                        .is_err(),
+                    "stream cut at {cut}/{} bytes must fail",
+                    framed.len()
+                );
+            }
+            let full = read_frame(&mut std::io::Cursor::new(&framed[..]))
+                .unwrap()
+                .unwrap();
+            assert_eq!(full, payload);
+        }
+    }
+
+    #[test]
+    fn garbage_dtype_tag_fails_loudly() {
         let batch = ExpertFfnBatch {
-            layer: 1,
-            experts: vec![(0, 0, 1), (2, 1, 2)],
-            data: HostTensor::f32(&[3, 2], vec![1., 2., 3., 4., 5., 6.]),
-            tag: 42,
+            layer: 0,
+            experts: vec![(1, 0, 2)],
+            data: HostTensor::f32(&[2, 2], vec![1., 2., 3., 4.]),
+            tag: 9,
         };
         let payload = encode_cmd(&Cmd::ExpertFfnBatch(batch));
-        // Every proper prefix of the payload must fail to decode — never
-        // produce a silently shorter batch.
-        for cut in 0..payload.len() {
+        // The tensor dtype tag sits right after the fixed-width header:
+        // kind(1) + layer(8) + tag(8) + expert count(8) + one 3×u64 segment.
+        let tag_pos = 1 + 8 + 8 + 8 + 24;
+        assert_eq!(payload[tag_pos], Dtype::F32.tag(), "tag position drifted");
+        for bad in [Dtype::N as u8, 7, 99, 255] {
+            let mut corrupt = payload.clone();
+            corrupt[tag_pos] = bad;
+            let err = decode_cmd(&corrupt).unwrap_err().to_string();
             assert!(
-                decode_cmd(&payload[..cut]).is_err(),
-                "decode of {cut}/{} bytes must fail",
-                payload.len()
+                format!("{err:#}").contains("dtype tag"),
+                "tag {bad}: {err}"
             );
         }
-        // Trailing garbage is equally loud.
-        let mut padded = payload.clone();
-        padded.push(0);
-        assert!(decode_cmd(&padded).is_err(), "trailing bytes must fail");
+        // Every in-table tag decodes the header (it may still fail on
+        // length, but never on the tag itself).
+        for d in Dtype::ALL {
+            let mut relabeled = payload.clone();
+            relabeled[tag_pos] = d.tag();
+            if let Err(e) = decode_cmd(&relabeled) {
+                assert!(
+                    !format!("{e:#}").contains("dtype tag"),
+                    "valid tag {d} rejected: {e:#}"
+                );
+            }
+        }
+    }
 
-        // Stream level: truncating anywhere inside the framed bytes is an
-        // error; an empty stream is a clean EOF (None), not an error.
-        let mut framed = Vec::new();
-        write_frame(&mut framed, &payload).unwrap();
-        assert!(matches!(
-            read_frame(&mut std::io::Cursor::new(&framed[..0])),
-            Ok(None)
-        ));
-        for cut in 1..framed.len() {
-            assert!(
-                read_frame(&mut std::io::Cursor::new(&framed[..cut])).is_err(),
-                "stream cut at {cut}/{} bytes must fail",
-                framed.len()
-            );
-        }
-        let full = read_frame(&mut std::io::Cursor::new(&framed[..]))
-            .unwrap()
-            .unwrap();
-        assert_eq!(full, payload);
+    #[test]
+    fn compressed_weight_ship_roundtrips() {
+        // The int8 weight-ladder ship layout: quantized matrix + its f32
+        // per-column scales, plus bf16/f16 tensors, all in one LoadExpert.
+        let w = HostTensor::f32(&[2, 3], vec![4.0, -1.0, 0.5, -4.0, 2.0, 0.25]);
+        let (q, s) = w.quantize_i8_per_col().unwrap();
+        let weights = vec![
+            q.clone(),
+            s.clone(),
+            w.convert(Dtype::BF16).unwrap(),
+            w.convert(Dtype::F16).unwrap(),
+        ];
+        let payload = encode_cmd(&Cmd::LoadExpert {
+            layer: 3,
+            expert: 1,
+            weights: weights.clone(),
+        });
+        let Cmd::LoadExpert { layer, expert, weights: back } =
+            decode_cmd(&payload).unwrap()
+        else {
+            panic!("wrong kind");
+        };
+        assert_eq!((layer, expert), (3, 1));
+        assert_eq!(back, weights);
+        // Fixed point: re-encoding the decoded command is byte-identical.
+        let again = encode_cmd(&Cmd::LoadExpert {
+            layer,
+            expert,
+            weights: back,
+        });
+        assert_eq!(again, payload);
     }
 
     #[test]

@@ -74,7 +74,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::coordinator::alltoall::Plan;
-use crate::runtime::{HostTensor, ProgramSpec, Runtime};
+use crate::runtime::{Dtype, HostTensor, ProgramSpec, Runtime};
 use transport::{ChannelTransport, ReplySink, SocketTransport, Transport};
 
 /// Cumulative traffic counters (shared, lock-free).
@@ -102,6 +102,14 @@ pub struct Traffic {
     /// Intra-node (relay↔node-mate) traffic of the hierarchical schedule.
     pub intra_bytes: AtomicU64,
     pub intra_messages: AtomicU64,
+    /// Dispatch-direction (leader→worker) activation payload bytes split by
+    /// wire dtype, indexed by [`Dtype::tag`].  A reclassification of bytes
+    /// already in `bytes_to_workers` — it shows how much of the dispatch
+    /// volume travelled compressed (`DSMOE_WIRE_DTYPE`).
+    pub dispatch_bytes_by_dtype: [AtomicU64; Dtype::N],
+    /// Combine-direction (worker→leader) activation payload bytes split by
+    /// wire dtype (reclassifies part of `bytes_from_workers`).
+    pub combine_bytes_by_dtype: [AtomicU64; Dtype::N],
 }
 
 impl Traffic {
@@ -114,6 +122,28 @@ impl Traffic {
             + self.bytes_from_workers.load(Ordering::Relaxed)
             + self.p2p_bytes.load(Ordering::Relaxed)
             + self.intra_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Book one dispatch-direction activation payload under its wire dtype.
+    pub fn count_dispatch(&self, dtype: Dtype, bytes: u64) {
+        self.dispatch_bytes_by_dtype[dtype.tag() as usize]
+            .fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Book one combine-direction activation payload under its wire dtype.
+    pub fn count_combine(&self, dtype: Dtype, bytes: u64) {
+        self.combine_bytes_by_dtype[dtype.tag() as usize]
+            .fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Dispatch-direction activation bytes carried as `dtype` so far.
+    pub fn dispatch_bytes(&self, dtype: Dtype) -> u64 {
+        self.dispatch_bytes_by_dtype[dtype.tag() as usize].load(Ordering::Relaxed)
+    }
+
+    /// Combine-direction activation bytes carried as `dtype` so far.
+    pub fn combine_bytes(&self, dtype: Dtype) -> u64 {
+        self.combine_bytes_by_dtype[dtype.tag() as usize].load(Ordering::Relaxed)
     }
 }
 
@@ -344,6 +374,7 @@ impl Fabric {
         self.traffic.messages.fetch_add(1, Ordering::Relaxed);
         self.traffic.cross_bytes.fetch_add(bytes, Ordering::Relaxed);
         self.traffic.cross_messages.fetch_add(1, Ordering::Relaxed);
+        self.traffic.count_dispatch(block.dtype(), bytes);
         self.transport
             .send(worker, Cmd::ExpertFfn { layer, expert, block, tag })
     }
@@ -360,6 +391,7 @@ impl Fabric {
                         .fetch_add(bytes, Ordering::Relaxed);
                     self.traffic.cross_bytes.fetch_add(bytes, Ordering::Relaxed);
                     self.traffic.cross_messages.fetch_add(1, Ordering::Relaxed);
+                    self.traffic.count_combine(t.dtype(), bytes);
                     out.push((layer, expert, t, tag));
                 }
                 Reply::Err(e) => anyhow::bail!("worker error: {e}"),
@@ -382,6 +414,7 @@ impl Fabric {
         self.traffic.messages.fetch_add(1, Ordering::Relaxed);
         self.traffic.cross_bytes.fetch_add(bytes, Ordering::Relaxed);
         self.traffic.cross_messages.fetch_add(1, Ordering::Relaxed);
+        self.traffic.count_dispatch(batch.data.dtype(), bytes);
         self.transport.send(worker, Cmd::ExpertFfnBatch(batch))
     }
 
@@ -424,6 +457,10 @@ impl Fabric {
             self.traffic.messages.fetch_add(1, Ordering::Relaxed);
             self.traffic.cross_bytes.fetch_add(bytes, Ordering::Relaxed);
             self.traffic.cross_messages.fetch_add(1, Ordering::Relaxed);
+            for (_, b) in &parts {
+                self.traffic
+                    .count_dispatch(b.data.dtype(), b.data.byte_len() as u64);
+            }
             self.transport.send(relay, Cmd::RelayFfnBatch { parts })?;
         }
         Ok(n_parts)
@@ -493,6 +530,9 @@ impl Fabric {
             .fetch_add(bytes, Ordering::Relaxed);
         self.traffic.cross_bytes.fetch_add(bytes, Ordering::Relaxed);
         self.traffic.cross_messages.fetch_add(1, Ordering::Relaxed);
+        for p in &parts {
+            self.traffic.count_combine(p.data.dtype(), p.data.byte_len() as u64);
+        }
         for p in &parts {
             anyhow::ensure!(
                 p.layer == rlayer && p.tag == rtag,
@@ -709,15 +749,15 @@ fn worker_main(
         match cmd {
             Cmd::Shutdown => break,
             Cmd::LoadExpert { layer, expert, weights } => {
-                let lits: Result<Vec<_>> =
-                    weights.iter().map(|t| t.to_literal()).collect();
-                match lits {
+                match install_weights(&weights) {
                     Ok(l) => {
                         experts.insert((layer, expert), l);
                         reply.send(Reply::Loaded);
                     }
                     Err(e) => {
-                        reply.send(Reply::Err(format!("{e:#}")));
+                        reply.send(Reply::Err(format!(
+                            "worker {me} install (l{layer}, e{expert}): {e:#}"
+                        )));
                     }
                 }
             }
@@ -851,6 +891,47 @@ fn worker_main(
     }
 }
 
+/// Materialize shipped expert weights as f32 PJRT literals, dequantizing or
+/// widening compressed tensors **once** at install time — the hot FFN path
+/// always runs the stock f32 programs (`DSMOE_EXPERT_DTYPE` shrinks the
+/// ship payload, not the compute).  Ship-order layout:
+///
+/// * f32 tensors pass through unchanged;
+/// * f16/bf16 tensors are widened to f32;
+/// * an i8 tensor is a per-output-channel quantized matrix and **consumes
+///   the next tensor** in the ship order as its `[cols]` f32 scale vector
+///   (so int8 ships as `[w1_q, w1_scales, b1, w2_q, w2_scales, b2]`).
+fn install_weights(weights: &[HostTensor]) -> Result<Vec<xla::Literal>> {
+    let mut lits = Vec::with_capacity(weights.len());
+    let mut i = 0;
+    while i < weights.len() {
+        let t = &weights[i];
+        match t.dtype() {
+            Dtype::F32 => lits.push(t.to_literal()?),
+            Dtype::F16 | Dtype::BF16 => {
+                lits.push(t.convert(Dtype::F32)?.to_literal()?);
+            }
+            Dtype::I8 => {
+                let scales = weights.get(i + 1).with_context(|| {
+                    format!(
+                        "i8 weight at ship position {i} has no following \
+                         per-column scale tensor"
+                    )
+                })?;
+                let deq = HostTensor::dequantize_i8_per_col(t, scales)?;
+                lits.push(deq.to_literal()?);
+                i += 1; // the scale tensor is consumed, not installed
+            }
+            Dtype::I32 => {
+                anyhow::bail!("i32 tensor at ship position {i} is not a \
+                               shippable expert weight dtype")
+            }
+        }
+        i += 1;
+    }
+    Ok(lits)
+}
+
 fn run_expert_ffn(
     runtime: &Runtime,
     programs: &WorkerPrograms,
@@ -869,7 +950,11 @@ fn run_expert_ffn(
 }
 
 /// Run every expert sub-block of a coalesced batch; returns the output rows
-/// packed in the same order/layout as the request payload.
+/// packed in the same order/layout as the request payload.  A compressed
+/// (f16/bf16) payload is widened to f32 once on arrival, the experts run in
+/// f32, and the reply travels back in the **request's** wire dtype — so
+/// `DSMOE_WIRE_DTYPE` compresses both directions symmetrically while the
+/// f32 path stays byte-for-byte what it always was.
 fn run_expert_ffn_batch(
     runtime: &Runtime,
     programs: &WorkerPrograms,
@@ -883,7 +968,18 @@ fn run_expert_ffn_batch(
         declared == total,
         "batch declares {declared} rows but payload has {total}"
     );
-    let flat = batch.data.as_f32()?;
+    let wire = batch.data.dtype();
+    let widened;
+    let flat: &[f32] = match wire {
+        Dtype::F32 => batch.data.as_f32()?,
+        Dtype::F16 | Dtype::BF16 => {
+            widened = batch.data.to_f32_vec()?;
+            &widened
+        }
+        other => anyhow::bail!(
+            "expert batch payload has non-activation wire dtype {other}"
+        ),
+    };
     let mut out = vec![0f32; total * m];
     let mut off = 0usize;
     for &(e, _slot0, count) in &batch.experts {
@@ -894,7 +990,12 @@ fn run_expert_ffn_batch(
         out[off * m..(off + count) * m].copy_from_slice(&y);
         off += count;
     }
-    Ok(HostTensor::f32(&[total, m], out))
+    let out = HostTensor::f32(&[total, m], out);
+    if wire == Dtype::F32 {
+        Ok(out) // no convert: the default path moves, never clones
+    } else {
+        out.convert(wire)
+    }
 }
 
 /// Pad `rows` (`[count, m]`, unpadded) to the smallest compiled capacity,

@@ -14,7 +14,7 @@ use anyhow::{Context, Result};
 use ds_moe::config::{AllToAllKind, ServingConfig};
 use ds_moe::data::{Corpus, CorpusConfig, EvalSuite};
 use ds_moe::fabric::TransportKind;
-use ds_moe::runtime::Manifest;
+use ds_moe::runtime::{Dtype, Manifest};
 use ds_moe::server::{ttft_percentile, Engine, EpEngine, Scheduler};
 use ds_moe::simulator;
 use ds_moe::training::{Distiller, KdMode, LrSchedule, Trainer};
@@ -164,6 +164,14 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         "transport", "",
         "fabric wire: channel|socket (default: DSMOE_TRANSPORT)",
     );
+    let expert_dtype = args.get(
+        "expert-dtype", "",
+        "expert weight ladder: f32|bf16|i8 (default: DSMOE_EXPERT_DTYPE)",
+    );
+    let wire_dtype = args.get(
+        "wire-dtype", "",
+        "activation wire dtype: f32|f16|bf16 (default: DSMOE_WIRE_DTYPE)",
+    );
     let legacy = args.get_bool(
         "legacy", false,
         "fixed-lane driver (no request admission; pre-scheduler behaviour)",
@@ -206,6 +214,16 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
     ep.set_leader_threads(leader_threads);
     if no_interleave {
         ep.set_interleave(false);
+    }
+    if !expert_dtype.is_empty() {
+        let d = Dtype::parse(&expert_dtype)
+            .with_context(|| format!("--expert-dtype {expert_dtype:?}"))?;
+        ep.set_expert_dtype(d)?;
+    }
+    if !wire_dtype.is_empty() {
+        let d = Dtype::parse(&wire_dtype)
+            .with_context(|| format!("--wire-dtype {wire_dtype:?}"))?;
+        ep.set_wire_dtype(d)?;
     }
     println!(
         "ep-serve {model}: {workers} workers, batch {batch}, {a2a:?}, \
@@ -311,6 +329,21 @@ fn ep_report(ep: &EpEngine) {
     println!("traffic: {} bytes total, {} expert messages",
              t.total_bytes(),
              t.messages.load(Relaxed));
+    println!(
+        "compression: expert weights {} on the wire, activations {}",
+        ep.expert_dtype(),
+        ep.wire_dtype()
+    );
+    for d in Dtype::ALL {
+        let (disp, comb) = (t.dispatch_bytes(d), t.combine_bytes(d));
+        if disp > 0 || comb > 0 {
+            println!(
+                "         {} payloads: dispatch {disp} bytes, \
+                 combine {comb} bytes",
+                d.name()
+            );
+        }
+    }
     println!(
         "         cross-node {} bytes / {} msgs, \
          intra-node {} bytes / {} msgs ({})",

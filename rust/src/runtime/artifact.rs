@@ -2,6 +2,13 @@
 //! runtime.  `artifacts/manifest.json` (written by `python/compile/aot.py`)
 //! describes every AOT program — file path, positional input/output specs —
 //! plus per-model configs, parameter layouts and checkpoint locations.
+//!
+//! Since schema v2 the manifest is self-describing and self-checking: a
+//! `schema_version` field (absent → v1), a per-program `sha256` digest the
+//! runtime verifies before compiling (stale artifacts fail loudly naming
+//! the entry), and a `capabilities` block declaring which expert-weight
+//! and wire dtypes the artifact set supports — engines query the manifest
+//! instead of probing program keys.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -10,6 +17,11 @@ use anyhow::{Context, Result};
 
 use crate::config::ModelConfig;
 use crate::util::json::Json;
+
+/// Newest manifest schema this runtime understands.  `aot.py` writes the
+/// same number; a manifest from a *newer* toolchain fails loudly at load
+/// instead of being half-understood.
+pub const SCHEMA_VERSION: usize = 2;
 
 /// One tensor slot of a program signature.
 #[derive(Debug, Clone, PartialEq)]
@@ -50,6 +62,9 @@ pub struct ProgramSpec {
     pub file: PathBuf,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
+    /// Hex SHA-256 of the HLO text file, recorded by `aot.py` (schema v2).
+    /// `None` for v1 manifests — integrity is then unchecked, as before.
+    pub sha256: Option<String>,
 }
 
 impl ProgramSpec {
@@ -69,7 +84,62 @@ impl ProgramSpec {
             ),
             inputs: specs("inputs")?,
             outputs: specs("outputs")?,
+            sha256: j.get("sha256").and_then(|v| v.as_str()).map(str::to_string),
         })
+    }
+}
+
+/// Dtype capability flags of an artifact set (manifest `capabilities`,
+/// schema v2).  A v1 manifest — no block — defaults to f32-only, so the
+/// compression toggles refuse to run against artifacts that predate them
+/// instead of guessing.
+#[derive(Debug, Clone)]
+pub struct Capabilities {
+    /// Expert-weight ship dtypes the checkpoint/manifest supports
+    /// (`DSMOE_EXPERT_DTYPE` candidates), e.g. `["f32", "bf16", "i8"]`.
+    pub expert_dtypes: Vec<String>,
+    /// Activation wire dtypes (`DSMOE_WIRE_DTYPE` candidates), e.g.
+    /// `["f32", "f16", "bf16"]`.
+    pub wire_dtypes: Vec<String>,
+}
+
+impl Default for Capabilities {
+    fn default() -> Self {
+        Capabilities {
+            expert_dtypes: vec!["f32".to_string()],
+            wire_dtypes: vec!["f32".to_string()],
+        }
+    }
+}
+
+impl Capabilities {
+    fn from_json(j: &Json) -> Result<Self> {
+        let names = |field: &str| -> Result<Vec<String>> {
+            j.req(field)?
+                .as_arr()
+                .with_context(|| format!("capabilities.{field} must be an array"))?
+                .iter()
+                .map(|v| {
+                    Ok(v.as_str()
+                        .with_context(|| {
+                            format!("capabilities.{field} entries must be strings")
+                        })?
+                        .to_string())
+                })
+                .collect()
+        };
+        Ok(Capabilities {
+            expert_dtypes: names("expert_dtypes")?,
+            wire_dtypes: names("wire_dtypes")?,
+        })
+    }
+
+    pub fn supports_expert_dtype(&self, name: &str) -> bool {
+        self.expert_dtypes.iter().any(|d| d == name)
+    }
+
+    pub fn supports_wire_dtype(&self, name: &str) -> bool {
+        self.wire_dtypes.iter().any(|d| d == name)
     }
 }
 
@@ -96,6 +166,10 @@ pub struct ModelArtifacts {
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub root: PathBuf,
+    /// Declared manifest schema (absent field → 1).
+    pub schema_version: usize,
+    /// Dtype capabilities (f32-only for v1 manifests).
+    pub capabilities: Capabilities,
     pub models: BTreeMap<String, ModelArtifacts>,
     pub shared: BTreeMap<String, ProgramSpec>,
 }
@@ -108,6 +182,24 @@ impl Manifest {
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
         let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let schema_version = match j.get("schema_version") {
+            None => 1, // pre-versioning manifests
+            Some(v) => v
+                .as_usize()
+                .context("schema_version must be a non-negative integer")?,
+        };
+        anyhow::ensure!(
+            schema_version <= SCHEMA_VERSION,
+            "manifest {path:?} declares schema_version {schema_version} but \
+             this runtime understands at most {SCHEMA_VERSION} — the \
+             artifacts were built by a newer toolchain; rebuild them or \
+             update the runtime"
+        );
+        let capabilities = match j.get("capabilities") {
+            Some(c) => Capabilities::from_json(c).context("capabilities")?,
+            None => Capabilities::default(),
+        };
 
         let mut models = BTreeMap::new();
         for (name, m) in j.req("models")?.as_obj().context("models")? {
@@ -162,7 +254,7 @@ impl Manifest {
             );
         }
 
-        Ok(Manifest { root, models, shared })
+        Ok(Manifest { root, schema_version, capabilities, models, shared })
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
@@ -262,6 +354,99 @@ mod tests {
         );
         assert_eq!(Manifest::key_expert_ffn(128, 512, 16),
                    "expert_ffn_m128_f512_c16");
+    }
+
+    #[test]
+    fn program_spec_parses_optional_sha256() {
+        let with = Json::parse(
+            r#"{"file": "p.hlo", "inputs": [], "outputs": [],
+                "sha256": "abc123"}"#,
+        )
+        .unwrap();
+        let p = ProgramSpec::from_json("k", Path::new("/a"), &with).unwrap();
+        assert_eq!(p.sha256.as_deref(), Some("abc123"));
+        assert_eq!(p.file, Path::new("/a/p.hlo"));
+
+        let without =
+            Json::parse(r#"{"file": "p.hlo", "inputs": [], "outputs": []}"#)
+                .unwrap();
+        let p = ProgramSpec::from_json("k", Path::new("/a"), &without).unwrap();
+        assert_eq!(p.sha256, None);
+    }
+
+    #[test]
+    fn capabilities_default_is_f32_only() {
+        let c = Capabilities::default();
+        assert!(c.supports_expert_dtype("f32"));
+        assert!(c.supports_wire_dtype("f32"));
+        for compressed in ["bf16", "int8", "f16"] {
+            assert!(!c.supports_expert_dtype(compressed), "{compressed}");
+            assert!(!c.supports_wire_dtype(compressed), "{compressed}");
+        }
+    }
+
+    #[test]
+    fn capabilities_parse_and_guard() {
+        let j = Json::parse(
+            r#"{"expert_dtypes": ["f32", "bf16", "int8"],
+                "wire_dtypes": ["f32", "f16", "bf16"]}"#,
+        )
+        .unwrap();
+        let c = Capabilities::from_json(&j).unwrap();
+        assert!(c.supports_expert_dtype("int8"));
+        assert!(c.supports_wire_dtype("f16"));
+        assert!(!c.supports_expert_dtype("f16"));
+
+        let bad = Json::parse(r#"{"expert_dtypes": [1], "wire_dtypes": []}"#)
+            .unwrap();
+        assert!(Capabilities::from_json(&bad).is_err());
+    }
+
+    /// Write a throwaway manifest.json and load it.
+    fn load_snippet(name: &str, body: &str) -> Result<Manifest> {
+        let dir = std::env::temp_dir().join(format!(
+            "dsmoe_manifest_test_{name}_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        let r = Manifest::load(&dir);
+        let _ = std::fs::remove_dir_all(&dir);
+        r
+    }
+
+    #[test]
+    fn newer_schema_version_fails_loudly() {
+        let err = load_snippet(
+            "future",
+            r#"{"schema_version": 99, "models": {}, "shared": {}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("schema_version 99"), "{err}");
+        assert!(err.contains("rebuild"), "{err}");
+    }
+
+    #[test]
+    fn v1_and_v2_manifests_both_load() {
+        // v1: no schema_version, no capabilities → defaults.
+        let m =
+            load_snippet("v1", r#"{"models": {}, "shared": {}}"#).unwrap();
+        assert_eq!(m.schema_version, 1);
+        assert!(!m.capabilities.supports_expert_dtype("int8"));
+
+        // v2: declared version + capabilities.
+        let m = load_snippet(
+            "v2",
+            r#"{"schema_version": 2,
+                "capabilities": {"expert_dtypes": ["f32", "int8"],
+                                 "wire_dtypes": ["f32", "f16"]},
+                "models": {}, "shared": {}}"#,
+        )
+        .unwrap();
+        assert_eq!(m.schema_version, 2);
+        assert!(m.capabilities.supports_expert_dtype("int8"));
+        assert!(m.capabilities.supports_wire_dtype("f16"));
     }
 
     #[test]

@@ -46,6 +46,18 @@ impl Checkpoint {
         for p in meta.req("params")?.as_arr().context("params")? {
             let name = p.req("name")?.as_str().context("name")?.to_string();
             let shape = p.req("shape")?.usize_vec()?;
+            // The .bin layout is f32-only; a narrower on-disk dtype would
+            // silently misread as garbage floats, so reject it by name.
+            // (Compression happens at expert *ship* time, not on disk.)
+            let dtype = p.req("dtype")?.as_str().context("dtype")?;
+            if dtype != "f32" {
+                bail!(
+                    "param {name}: checkpoint dtype {dtype:?} is not \
+                     supported — params.bin is an f32 stream; quantized \
+                     expert dtypes are produced at ship time from the f32 \
+                     master weights (DSMOE_EXPERT_DTYPE)"
+                );
+            }
             let offset = p.req("offset")?.as_usize().context("offset")?;
             let nelems = p.req("nelems")?.as_usize().context("nelems")?;
             if shape.iter().product::<usize>() != nelems {
@@ -174,6 +186,31 @@ mod tests {
         std::fs::write(dir.join("params.bin"), [0u8; 4]).unwrap();
         let err = Checkpoint::load(&dir).unwrap_err().to_string();
         assert!(err.contains("bytes"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_f32_checkpoint_dtype_rejected() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsmoe-ckpt-dtype-{}",
+            std::process::id()
+        ));
+        let ck = Checkpoint {
+            model: "t".into(),
+            step: 0,
+            names: vec!["a".into()],
+            tensors: vec![HostTensor::f32(&[2], vec![1., 2.])],
+        };
+        ck.save(&dir).unwrap();
+        let meta = std::fs::read_to_string(dir.join("meta.json")).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            meta.replace("\"dtype\":\"f32\"", "\"dtype\":\"i8\""),
+        )
+        .unwrap();
+        let err = Checkpoint::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("param a"), "{err}");
+        assert!(err.contains("\"i8\""), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

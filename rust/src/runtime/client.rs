@@ -101,9 +101,29 @@ impl Runtime {
     }
 
     /// Compile (or fetch from cache) the program described by `spec`.
+    ///
+    /// When the manifest records a `sha256` for the entry (schema v2), the
+    /// artifact file is re-hashed before compiling — once per process, the
+    /// compile cache covers later loads — so a stale or corrupted artifact
+    /// fails loudly naming the entry instead of miscompiling.
     pub fn load(&self, spec: &ProgramSpec) -> Result<Rc<Program>> {
         if let Some(p) = self.cache.borrow().get(&spec.key) {
             return Ok(p.clone());
+        }
+        if let Some(want) = &spec.sha256 {
+            let bytes = std::fs::read(&spec.file).with_context(|| {
+                format!("reading artifact {:?} of {}", spec.file, spec.key)
+            })?;
+            let got = crate::util::sha256::hex_digest(&bytes);
+            anyhow::ensure!(
+                got == *want,
+                "artifact integrity check failed for manifest entry \
+                 {:?}: {:?} hashes to sha256 {got} but the manifest \
+                 records {want} — the file is stale or corrupted; rebuild \
+                 the artifacts (`make artifacts`)",
+                spec.key,
+                spec.file
+            );
         }
         let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
@@ -149,7 +169,7 @@ impl Program {
     }
 
     fn check_input(&self, i: usize, spec: &TensorSpec, t: &HostTensor) -> Result<()> {
-        if t.shape != spec.shape || t.dtype() != spec.dtype {
+        if t.shape != spec.shape || t.dtype().name() != spec.dtype {
             bail!(
                 "program {}: input {} ({}) expects {:?} {} but got {:?} {}",
                 self.spec.key, i, spec.name, spec.shape, spec.dtype,
@@ -300,6 +320,23 @@ mod tests {
         let again = rt.load(spec).unwrap();
         assert!(Rc::ptr_eq(&prog, &again));
         assert_eq!(rt.cached_programs(), 1);
+    }
+
+    #[test]
+    fn stale_artifact_sha_fails_loudly() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mut spec =
+            m.shared_program("expert_ffn_m128_f512_c1").unwrap().clone();
+        spec.key = "tampered_expert_ffn".into(); // miss the compile cache
+        spec.sha256 = Some("0".repeat(64));
+        let err = rt.load(&spec).unwrap_err().to_string();
+        assert!(err.contains("integrity"), "{err}");
+        assert!(err.contains("tampered_expert_ffn"), "{err}");
+        // A correct digest loads fine.
+        let bytes = std::fs::read(&spec.file).unwrap();
+        spec.sha256 = Some(crate::util::sha256::hex_digest(&bytes));
+        rt.load(&spec).unwrap();
     }
 
     #[test]

@@ -4,14 +4,192 @@
 //! that crosses a channel — activations moving through the all-to-all
 //! fabric, checkpoint params, batches — travels as a `HostTensor` and is
 //! converted to an `xla::Literal` at the owning thread's edge.
+//!
+//! Besides the compute dtypes (`f32`, `i32`) a `HostTensor` can carry the
+//! compressed **wire/storage** dtypes of the expert data path: `f16`/`bf16`
+//! activations (`DSMOE_WIRE_DTYPE`) and `bf16`/`i8` expert weights
+//! (`DSMOE_EXPERT_DTYPE`).  Compressed tensors never reach a PJRT literal
+//! directly — workers widen (or dequantize, for `i8` + per-column scales)
+//! to f32 at the thread edge, so the AOT programs stay f32 end to end.
 
 use anyhow::{bail, Result};
 
-/// Supported element types (mirrors the dtypes the manifest emits).
+/// The shared element-type table of the whole data path: `HostTensor`
+/// payloads, the frame codec's on-wire tags ([`Dtype::tag`] /
+/// [`Dtype::from_tag`] — encode, decode and the codec tests all use this
+/// one table, so a new dtype cannot silently skew between them), byte
+/// accounting ([`Dtype::elem_bytes`]) and the manifest capability strings
+/// ([`Dtype::name`] / [`Dtype::parse`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    I32,
+    F16,
+    BF16,
+    I8,
+}
+
+impl Dtype {
+    /// Number of dtypes (bound for per-dtype counter arrays).
+    pub const N: usize = 5;
+
+    /// Every dtype, indexed by its wire tag.
+    pub const ALL: [Dtype; Dtype::N] =
+        [Dtype::F32, Dtype::I32, Dtype::F16, Dtype::BF16, Dtype::I8];
+
+    /// Frame-codec wire tag (stable ABI: 0=f32, 1=i32, 2=f16, 3=bf16, 4=i8).
+    pub fn tag(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::I32 => 1,
+            Dtype::F16 => 2,
+            Dtype::BF16 => 3,
+            Dtype::I8 => 4,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<Dtype> {
+        Dtype::ALL.get(tag as usize).copied()
+    }
+
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::F16 | Dtype::BF16 => 2,
+            Dtype::I8 => 1,
+        }
+    }
+
+    /// Manifest / env-toggle spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+            Dtype::F16 => "f16",
+            Dtype::BF16 => "bf16",
+            Dtype::I8 => "i8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dtype> {
+        Dtype::ALL.into_iter().find(|d| d.name() == s.trim())
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------- f16/bf16 bits
+//
+// Manual bit conversions (the offline build has no `half` crate).  Both
+// directions round-to-nearest-even; NaNs stay NaNs, overflow saturates to
+// infinity (IEEE 754 default behaviour).
+
+/// f32 → IEEE 754 binary16, round-to-nearest-even (subnormals included).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN; force a mantissa bit so a NaN cannot collapse to inf.
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflows even the smallest subnormal
+        }
+        // Subnormal: shift the 24-bit significand (implicit 1) into the
+        // 10-bit field, rounding to nearest even on the dropped bits.
+        let m = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rem = m & ((1u32 << shift) - 1);
+        let mut v = (m >> shift) as u16;
+        if rem > half || (rem == half && (v & 1) == 1) {
+            v += 1; // may carry into exp=1: that bit pattern is correct
+        }
+        return sign | v;
+    }
+    let mut e = e as u32;
+    let mut m = man >> 13;
+    let rem = man & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+        m += 1;
+        if m == 0x400 {
+            m = 0;
+            e += 1;
+            if e >= 0x1F {
+                return sign | 0x7C00;
+            }
+        }
+    }
+    sign | ((e as u16) << 10) | (m as u16)
+}
+
+/// IEEE 754 binary16 → f32 (exact).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: normalize into an f32 with a real exponent.
+            let mut e = 113u32; // 127 - 14
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3FF) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16, round-to-nearest-even.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep the sign, force a quiet mantissa bit.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// bfloat16 → f32 (exact: bf16 is the f32 high half).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Supported element types (mirrors the dtypes the manifest emits plus the
+/// compressed wire/storage formats of the expert data path).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    /// IEEE binary16 bit patterns (wire format for dispatch/combine rows).
+    F16(Vec<u16>),
+    /// bfloat16 bit patterns (weight-ladder / wire format).
+    BF16(Vec<u16>),
+    /// Symmetric per-output-channel quantized weights; the f32 column
+    /// scales travel as a separate tensor (see
+    /// [`HostTensor::quantize_i8_per_col`]).
+    I8(Vec<i8>),
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -32,6 +210,21 @@ impl HostTensor {
         HostTensor { shape: shape.to_vec(), data: TensorData::I32(data) }
     }
 
+    pub fn f16(shape: &[usize], data: Vec<u16>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: TensorData::F16(data) }
+    }
+
+    pub fn bf16(shape: &[usize], data: Vec<u16>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: TensorData::BF16(data) }
+    }
+
+    pub fn i8(shape: &[usize], data: Vec<i8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: TensorData::I8(data) }
+    }
+
     pub fn zeros_f32(shape: &[usize]) -> Self {
         Self::f32(shape, vec![0.0; shape.iter().product()])
     }
@@ -48,14 +241,20 @@ impl HostTensor {
         self.shape.iter().product()
     }
 
+    /// Payload bytes as counted by the traffic accounting — dtype-aware,
+    /// so compressed dispatch/combine and weight-ship payloads report
+    /// their true wire size.
     pub fn byte_len(&self) -> usize {
-        self.nelems() * 4
+        self.nelems() * self.dtype().elem_bytes()
     }
 
-    pub fn dtype(&self) -> &'static str {
+    pub fn dtype(&self) -> Dtype {
         match self.data {
-            TensorData::F32(_) => "f32",
-            TensorData::I32(_) => "i32",
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+            TensorData::F16(_) => Dtype::F16,
+            TensorData::BF16(_) => Dtype::BF16,
+            TensorData::I8(_) => Dtype::I8,
         }
     }
 
@@ -78,6 +277,113 @@ impl HostTensor {
             TensorData::I32(v) => Ok(v),
             _ => bail!("tensor is {} not i32", self.dtype()),
         }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            TensorData::I8(v) => Ok(v),
+            _ => bail!("tensor is {} not i8", self.dtype()),
+        }
+    }
+
+    /// Convert between the float dtypes (`f32` ⇄ `f16`/`bf16`; identity
+    /// conversions are a clone).  Narrowing rounds to nearest even;
+    /// widening is exact.  `i32`/`i8` do not convert here — `i8` needs its
+    /// scale tensor ([`HostTensor::dequantize_i8_per_col`]).
+    pub fn convert(&self, to: Dtype) -> Result<HostTensor> {
+        let from = self.dtype();
+        if from == to {
+            return Ok(self.clone());
+        }
+        let data = match (&self.data, to) {
+            (TensorData::F32(v), Dtype::F16) => {
+                TensorData::F16(v.iter().map(|&x| f32_to_f16(x)).collect())
+            }
+            (TensorData::F32(v), Dtype::BF16) => {
+                TensorData::BF16(v.iter().map(|&x| f32_to_bf16(x)).collect())
+            }
+            (TensorData::F16(v), Dtype::F32) => {
+                TensorData::F32(v.iter().map(|&h| f16_to_f32(h)).collect())
+            }
+            (TensorData::BF16(v), Dtype::F32) => {
+                TensorData::F32(v.iter().map(|&b| bf16_to_f32(b)).collect())
+            }
+            _ => bail!("no conversion {from} -> {to}"),
+        };
+        Ok(HostTensor { shape: self.shape.clone(), data })
+    }
+
+    /// Float payload widened to f32 (`f32` clones; `f16`/`bf16` widen
+    /// exactly).  Integer dtypes are an error.
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v.clone()),
+            TensorData::F16(v) => Ok(v.iter().map(|&h| f16_to_f32(h)).collect()),
+            TensorData::BF16(v) => {
+                Ok(v.iter().map(|&b| bf16_to_f32(b)).collect())
+            }
+            _ => bail!("tensor is {}, not a float dtype", self.dtype()),
+        }
+    }
+
+    /// Symmetric per-output-channel int8 quantization of a 2-D `[rows,
+    /// cols]` f32 matrix: each **column** (the output channel of `x @ W`)
+    /// gets scale `max_abs(col) / 127`; values quantize to
+    /// `round(x / scale)` clamped to ±127 (the symmetric range — −128 is
+    /// never emitted).  Returns the `[rows, cols]` i8 tensor plus the
+    /// `[cols]` f32 scale vector.  An all-zero column gets scale 1.0.
+    pub fn quantize_i8_per_col(&self) -> Result<(HostTensor, HostTensor)> {
+        let d = self.as_f32()?;
+        anyhow::ensure!(
+            self.shape.len() == 2,
+            "per-channel quantization needs a 2-D matrix, got {:?}",
+            self.shape
+        );
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        let mut maxabs = vec![0f32; cols];
+        for r in 0..rows {
+            for (c, m) in maxabs.iter_mut().enumerate() {
+                *m = m.max(d[r * cols + c].abs());
+            }
+        }
+        let scales: Vec<f32> = maxabs
+            .iter()
+            .map(|&m| if m > 0.0 { m / 127.0 } else { 1.0 })
+            .collect();
+        let mut q = vec![0i8; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = (d[r * cols + c] / scales[c]).round();
+                q[r * cols + c] = v.clamp(-127.0, 127.0) as i8;
+            }
+        }
+        Ok((
+            HostTensor::i8(&self.shape, q),
+            HostTensor::f32(&[cols], scales),
+        ))
+    }
+
+    /// Inverse of [`HostTensor::quantize_i8_per_col`]: widen a `[rows,
+    /// cols]` i8 tensor back to f32 using the `[cols]` per-column scales.
+    pub fn dequantize_i8_per_col(
+        q: &HostTensor,
+        scales: &HostTensor,
+    ) -> Result<HostTensor> {
+        let qd = q.as_i8()?;
+        let s = scales.as_f32()?;
+        anyhow::ensure!(
+            q.shape.len() == 2 && scales.shape == [q.shape[1]],
+            "dequantize: weights {:?} need [cols] scales, got {:?}",
+            q.shape,
+            scales.shape
+        );
+        let cols = q.shape[1];
+        let data: Vec<f32> = qd
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v as f32 * s[i % cols])
+            .collect();
+        Ok(HostTensor::f32(&q.shape, data))
     }
 
     /// Row-major offset of a multi-index.
@@ -109,6 +415,9 @@ impl HostTensor {
 
     // -- Literal conversion (thread-edge) ------------------------------------
 
+    /// Compressed dtypes (`f16`/`bf16`/`i8`) are wire/storage formats and
+    /// never cross the literal edge — workers widen or dequantize to f32
+    /// first, keeping the AOT programs f32 end to end.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -126,6 +435,11 @@ impl HostTensor {
                     xla::Literal::vec1(v).reshape(&dims)?
                 }
             }
+            _ => bail!(
+                "cannot materialize a {} tensor as a literal — widen or \
+                 dequantize to f32 first",
+                self.dtype()
+            ),
         };
         Ok(lit)
     }
@@ -168,6 +482,157 @@ mod tests {
         let t = HostTensor::i32(&[2], vec![1, 2]);
         assert!(t.as_f32().is_err());
         assert_eq!(t.as_i32().unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn dtype_table_is_consistent() {
+        for (i, d) in Dtype::ALL.into_iter().enumerate() {
+            assert_eq!(d.tag() as usize, i);
+            assert_eq!(Dtype::from_tag(d.tag()), Some(d));
+            assert_eq!(Dtype::parse(d.name()), Some(d));
+        }
+        assert_eq!(Dtype::from_tag(Dtype::N as u8), None);
+        assert_eq!(Dtype::parse("f64"), None);
+        assert_eq!(Dtype::F16.elem_bytes(), 2);
+        assert_eq!(Dtype::I8.elem_bytes(), 1);
+    }
+
+    #[test]
+    fn byte_len_is_dtype_aware() {
+        assert_eq!(HostTensor::zeros_f32(&[3, 4]).byte_len(), 48);
+        assert_eq!(HostTensor::f16(&[3, 4], vec![0; 12]).byte_len(), 24);
+        assert_eq!(HostTensor::bf16(&[3, 4], vec![0; 12]).byte_len(), 24);
+        assert_eq!(HostTensor::i8(&[3, 4], vec![0; 12]).byte_len(), 12);
+    }
+
+    #[test]
+    fn f16_roundtrip_exact_cases() {
+        // Values exactly representable in binary16 round-trip bit-exactly.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0,
+                  1.5, 0.099975586, 6.1035156e-5, 5.9604645e-8] {
+            let h = f32_to_f16(v);
+            assert_eq!(f16_to_f32(h), v, "{v} did not round-trip");
+        }
+        // Infinities and NaN.
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)),
+                   f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // Overflow saturates to inf; tiny values flush to (signed) zero.
+        assert_eq!(f16_to_f32(f32_to_f16(1e9)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1e-9)).to_bits(),
+                   (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16
+        // (1 + 2^-10): ties to even → 1.0.
+        let tie = 1.0 + (2f32).powi(-11);
+        assert_eq!(f16_to_f32(f32_to_f16(tie)), 1.0);
+        // Just above the tie rounds up.
+        let up = 1.0 + (2f32).powi(-11) + (2f32).powi(-20);
+        assert_eq!(f16_to_f32(f32_to_f16(up)), 1.0 + (2f32).powi(-10));
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        // Relative error of a single f16 round trip is ≤ 2^-11 for
+        // normal-range values.
+        let mut x = 1e-3f32;
+        while x < 1e4 {
+            for v in [x, -x] {
+                let r = f16_to_f32(f32_to_f16(v));
+                assert!(
+                    ((r - v) / v).abs() <= 4.9e-4,
+                    "{v} -> {r}"
+                );
+            }
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_and_rounding() {
+        for v in [0.0f32, -0.0, 1.0, -2.5, 0.75, -0.015625] {
+            let b = f32_to_bf16(v);
+            assert_eq!(bf16_to_f32(b), v, "{v} did not round-trip");
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        // RNE at the bf16 precision boundary: 1 + 2^-9 is halfway between
+        // 1.0 and 1 + 2^-8 (last mantissa bit even) → 1.0.
+        let tie = 1.0 + (2f32).powi(-9);
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie)), 1.0);
+        // bf16 widening is exact: relative error of one round trip ≤ 2^-8.
+        for v in [3.14159f32, -1234.5, 7.7e-12] {
+            let r = bf16_to_f32(f32_to_bf16(v));
+            assert!(((r - v) / v).abs() <= 3.92e-3, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn convert_roundtrips_and_guards() {
+        let t = HostTensor::f32(&[2, 2], vec![1.0, -2.5, 0.25, 3.0]);
+        for d in [Dtype::F16, Dtype::BF16] {
+            let c = t.convert(d).unwrap();
+            assert_eq!(c.dtype(), d);
+            // These values are exactly representable in both formats.
+            assert_eq!(c.convert(Dtype::F32).unwrap(), t);
+            assert_eq!(c.to_f32_vec().unwrap(), t.as_f32().unwrap());
+        }
+        assert_eq!(t.convert(Dtype::F32).unwrap(), t);
+        assert!(t.convert(Dtype::I8).is_err());
+        assert!(HostTensor::i32(&[1], vec![1]).to_f32_vec().is_err());
+    }
+
+    #[test]
+    fn i8_per_col_quantization_roundtrip() {
+        // Columns with very different ranges: per-column scales keep the
+        // relative error bounded in each.
+        let t = HostTensor::f32(
+            &[3, 2],
+            vec![100.0, 0.001, -50.0, -0.0005, 25.0, 0.00075],
+        );
+        let (q, s) = t.quantize_i8_per_col().unwrap();
+        assert_eq!(q.dtype(), Dtype::I8);
+        assert_eq!(s.shape, vec![2]);
+        let back = HostTensor::dequantize_i8_per_col(&q, &s).unwrap();
+        let orig = t.as_f32().unwrap();
+        let deq = back.as_f32().unwrap();
+        for (a, b) in orig.iter().zip(deq) {
+            // Symmetric int8: |err| <= scale/2 = max_abs(col)/254.
+            assert!((a - b).abs() <= a.abs().max(1e-12) / 127.0 + 1e-12,
+                    "{a} vs {b}");
+        }
+        // Extremes hit ±127 exactly.
+        assert_eq!(q.as_i8().unwrap()[0], 127);
+        // All-zero columns quantize to zeros with scale 1.
+        let z = HostTensor::zeros_f32(&[2, 3]);
+        let (qz, sz) = z.quantize_i8_per_col().unwrap();
+        assert!(qz.as_i8().unwrap().iter().all(|&v| v == 0));
+        assert!(sz.as_f32().unwrap().iter().all(|&v| v == 1.0));
+        let bz = HostTensor::dequantize_i8_per_col(&qz, &sz).unwrap();
+        assert_eq!(bz, z);
+        // Shape guards are loud.
+        assert!(HostTensor::zeros_f32(&[4]).quantize_i8_per_col().is_err());
+        assert!(HostTensor::dequantize_i8_per_col(
+            &qz,
+            &HostTensor::zeros_f32(&[7])
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn compressed_tensors_refuse_literals() {
+        for t in [
+            HostTensor::f16(&[2], vec![0, 0]),
+            HostTensor::bf16(&[2], vec![0, 0]),
+            HostTensor::i8(&[2], vec![0, 0]),
+        ] {
+            let err = t.to_literal().unwrap_err().to_string();
+            assert!(err.contains("literal"), "{err}");
+        }
     }
 
     #[test]

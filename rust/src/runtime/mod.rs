@@ -16,7 +16,10 @@ pub mod checkpoint;
 pub mod client;
 pub mod host_tensor;
 
-pub use artifact::{Manifest, ModelArtifacts, ProgramSpec, TensorSpec};
+pub use artifact::{
+    Capabilities, Manifest, ModelArtifacts, ProgramSpec, TensorSpec,
+    SCHEMA_VERSION,
+};
 pub use checkpoint::Checkpoint;
 pub use client::{Program, Runtime, SharedArtifacts};
-pub use host_tensor::{HostTensor, TensorData};
+pub use host_tensor::{Dtype, HostTensor, TensorData};

@@ -167,6 +167,22 @@
 //! | `DSMOE_MAX_REPLICAS`  | per-expert replication ceiling for the       |
 //! |                       | rebalancer (default: the worker count;       |
 //! |                       | [`EpEngine::set_max_replicas`]).             |
+//! | `DSMOE_EXPERT_DTYPE`  | expert-FFN weight ladder shipped to the      |
+//! |                       | workers: `f32` (default), `bf16`, or         |
+//! |                       | `int8`/`i8` (per-output-channel scales).     |
+//! |                       | Workers dequantize once at install time and  |
+//! |                       | compute in f32; shrinks both the startup     |
+//! |                       | ship and every migration payload.  Gated on  |
+//! |                       | the manifest's capability flags              |
+//! |                       | ([`EpEngine::set_expert_dtype`]).            |
+//! | `DSMOE_WIRE_DTYPE`    | dispatch/combine activation payload dtype on |
+//! |                       | the fabric: `f32` (default, bitwise          |
+//! |                       | identical) or `f16`/`bf16` — halves the      |
+//! |                       | per-layer all-to-all bytes under both the    |
+//! |                       | flat and hierarchical schedules; workers     |
+//! |                       | widen, compute f32, and reply in the wire    |
+//! |                       | dtype ([`EpEngine::set_wire_dtype`]).  The   |
+//! |                       | serialized baseline stays f32 either way.    |
 //!
 //! All paths — serial, overlapped, pipelined at any depth, single- or
 //! multi-threaded leader — produce **bit-identical** logits for prefill
@@ -192,7 +208,9 @@ use crate::fabric::{
 };
 use crate::metrics::Metrics;
 use crate::moe::ExpertLoadStats;
-use crate::runtime::{Checkpoint, HostTensor, Manifest, SharedArtifacts};
+use crate::runtime::{
+    Checkpoint, Dtype, HostTensor, Manifest, SharedArtifacts,
+};
 use crate::server::scheduler::{AdmittedLane, ForwardModel};
 use crate::server::shard::{
     Backbone, LaneWrite, MoeScratch, PoolSpec, Prepared, PreparedMoe,
@@ -259,6 +277,15 @@ pub struct EpEngine {
     /// Per-expert replication ceiling (`DSMOE_MAX_REPLICAS`, default:
     /// the worker count — replicas live on distinct workers).
     max_replicas: usize,
+    /// Expert-FFN weight ladder shipped to the workers
+    /// (`DSMOE_EXPERT_DTYPE`, default f32 — the uncompressed baseline).
+    /// Workers dequantize to f32 once at install, so the AOT expert
+    /// programs are dtype-agnostic; only the ship payload shrinks.
+    expert_dtype: Dtype,
+    /// Dispatch/combine activation payload dtype on the fabric
+    /// (`DSMOE_WIRE_DTYPE`, default f32 — that path is pure moves, so the
+    /// default stays bitwise identical to the uncompressed engine).
+    wire_dtype: Dtype,
     /// Requested leader shard threads (`DSMOE_LEADER_THREADS`, default
     /// 1): >= 2 runs each microbatch group's dense backbone on its own
     /// thread-bound runtime.
@@ -506,6 +533,34 @@ impl InflightMoe {
 /// short form `hier`) enables the §5.3 two-stage relay schedule.  Any
 /// other value warns and falls back to flat so a typo can never
 /// silently change the dispatch path.
+/// Parse a dtype env toggle (`DSMOE_EXPERT_DTYPE` / `DSMOE_WIRE_DTYPE`).
+/// Unset/empty keeps the f32 default; `int8` is accepted as an alias for
+/// `i8`; anything else outside `allowed` warns and falls back to f32, so
+/// a typo can never silently change the data path.
+fn dtype_from_env(var: &str, allowed: &[Dtype]) -> Dtype {
+    let Ok(v) = std::env::var(var) else { return Dtype::F32 };
+    let s = v.trim();
+    if s.is_empty() {
+        return Dtype::F32;
+    }
+    let parsed = match s {
+        "int8" => Some(Dtype::I8),
+        _ => Dtype::parse(s),
+    };
+    match parsed {
+        Some(d) if allowed.contains(&d) => d,
+        _ => {
+            let names: Vec<&str> =
+                allowed.iter().map(|d| d.name()).collect();
+            eprintln!(
+                "[config] {var}={s:?} is not one of {names:?}; \
+                 falling back to f32"
+            );
+            Dtype::F32
+        }
+    }
+}
+
 fn a2a_hier_from_env() -> bool {
     match std::env::var("DSMOE_A2A") {
         Ok(v) => match v.trim() {
@@ -592,7 +647,42 @@ impl EpEngine {
             fabric.set_a2a(A2aMode::Hierarchical { node_size });
         }
 
-        // Ship expert weights to their owners.
+        // Compressed data-path toggles, gated on what this artifact set
+        // declares it supports (v1 manifests default to f32-only): an
+        // unsupported request warns and keeps the f32 baseline rather
+        // than serving a mode the artifact build never promised.
+        let mut expert_dtype = dtype_from_env(
+            "DSMOE_EXPERT_DTYPE",
+            &[Dtype::F32, Dtype::BF16, Dtype::I8],
+        );
+        if !manifest.capabilities.supports_expert_dtype(expert_dtype.name())
+        {
+            eprintln!(
+                "[config] DSMOE_EXPERT_DTYPE={} is not in this artifact \
+                 set's expert_dtypes capabilities {:?}; falling back to \
+                 f32 (rebuild the artifacts with a schema-v2 aot.py)",
+                expert_dtype.name(),
+                manifest.capabilities.expert_dtypes,
+            );
+            expert_dtype = Dtype::F32;
+        }
+        let mut wire_dtype = dtype_from_env(
+            "DSMOE_WIRE_DTYPE",
+            &[Dtype::F32, Dtype::F16, Dtype::BF16],
+        );
+        if !manifest.capabilities.supports_wire_dtype(wire_dtype.name()) {
+            eprintln!(
+                "[config] DSMOE_WIRE_DTYPE={} is not in this artifact \
+                 set's wire_dtypes capabilities {:?}; falling back to \
+                 f32 (rebuild the artifacts with a schema-v2 aot.py)",
+                wire_dtype.name(),
+                manifest.capabilities.wire_dtypes,
+            );
+            wire_dtype = Dtype::F32;
+        }
+
+        // Ship expert weights to their owners, encoded in the expert
+        // ladder dtype (workers dequantize once at install).
         for w in 0..workers {
             for (layer, e) in placement.worker_manifest(w) {
                 let weights = ["w1", "b1", "w2", "b2"]
@@ -603,6 +693,8 @@ impl EpEngine {
                         Ok(slice_expert(full, e, part)?)
                     })
                     .collect::<Result<Vec<_>>>()?;
+                let weights =
+                    encode_expert_weights(weights, expert_dtype)?;
                 fabric.load_expert(w, layer, e, weights)?;
             }
         }
@@ -660,6 +752,7 @@ impl EpEngine {
             metrics.clone(),
         )?;
         bb.replicate_hot = replicate_hot;
+        bb.wire_dtype = wire_dtype;
 
         Ok(EpEngine {
             bb,
@@ -688,6 +781,8 @@ impl EpEngine {
             rebalance_skew: env_pos_f64("DSMOE_REBALANCE_SKEW", 2.0)
                 .max(1.0),
             max_replicas: env_pos_usize("DSMOE_MAX_REPLICAS", workers),
+            expert_dtype,
+            wire_dtype,
             leader_threads: env_pos_usize("DSMOE_LEADER_THREADS", 1),
             shards: None,
             shard_caches: false,
@@ -831,6 +926,65 @@ impl EpEngine {
         self.max_replicas
     }
 
+    /// Select the expert-FFN weight ladder shipped to the workers
+    /// (defaults to `DSMOE_EXPERT_DTYPE`): `f32` (the uncompressed
+    /// baseline), `bf16`, or `i8` (per-output-channel scales).  Changing
+    /// the dtype re-ships every placed expert — including replicas — over
+    /// the fabric's blocking load path, so call only between forwards.
+    /// Workers dequantize to f32 at install; the AOT expert programs are
+    /// untouched.  Exposed programmatically so benches and parity tests
+    /// can sweep the ladder in one process without racing on the
+    /// environment (no capability gate here — the env path gates on the
+    /// manifest's capability flags).
+    pub fn set_expert_dtype(&mut self, dtype: Dtype) -> Result<()> {
+        anyhow::ensure!(
+            matches!(dtype, Dtype::F32 | Dtype::BF16 | Dtype::I8),
+            "{dtype} is not an expert weight ladder dtype (f32/bf16/i8)"
+        );
+        if dtype == self.expert_dtype {
+            return Ok(());
+        }
+        self.expert_dtype = dtype;
+        debug_assert!(self.open_tags.is_empty());
+        for w in 0..self.fabric.n_workers() {
+            for (layer, e) in self.placement.worker_manifest(w) {
+                self.ship_expert(layer, e, w)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn expert_dtype(&self) -> Dtype {
+        self.expert_dtype
+    }
+
+    /// Select the dispatch/combine activation payload dtype on the fabric
+    /// (defaults to `DSMOE_WIRE_DTYPE`): `f32` (the default — that path
+    /// is pure moves, bitwise identical), `f16`, or `bf16`.  Applied to
+    /// this engine's backbone and pushed to any live leader shards; call
+    /// only between forwards (like every placement-epoch toggle), so no
+    /// in-flight exchange ever mixes wire dtypes.  The serialized
+    /// baseline (`DSMOE_SERIAL_MOE`) stays f32 either way.
+    pub fn set_wire_dtype(&mut self, dtype: Dtype) -> Result<()> {
+        anyhow::ensure!(
+            matches!(dtype, Dtype::F32 | Dtype::F16 | Dtype::BF16),
+            "{dtype} is not an activation wire dtype (f32/f16/bf16)"
+        );
+        debug_assert!(self.open_tags.is_empty());
+        self.wire_dtype = dtype;
+        self.bb.wire_dtype = dtype;
+        if let Some(pool) = &self.shards {
+            for g in 0..pool.handles.len() {
+                pool.send(g, ShardCmd::SetWireDtype(dtype))?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn wire_dtype(&self) -> Dtype {
+        self.wire_dtype
+    }
+
     /// Bench/test hook: route every live token to `expert` (scaled by
     /// that expert's own gate probability) instead of the gate's argmax —
     /// a deterministic worst-case hot-expert workload for the
@@ -878,7 +1032,9 @@ impl EpEngine {
     /// Ship one expert's weights to a worker over the fabric's blocking
     /// load path (the worker acks before any later exchange can reach
     /// it), sliced from the shared host-side checkpoint exactly as at
-    /// engine construction.
+    /// engine construction and encoded in the active expert ladder dtype
+    /// — a bf16 migration payload is half the f32 one, int8 about a
+    /// quarter.
     fn ship_expert(&mut self, layer: usize, e: usize, w: usize) -> Result<()> {
         let weights = {
             let params = self.arts.params();
@@ -894,6 +1050,7 @@ impl EpEngine {
                 })
                 .collect::<Result<Vec<_>>>()?
         };
+        let weights = encode_expert_weights(weights, self.expert_dtype)?;
         self.fabric.load_expert(w, layer, e, weights)
     }
 
@@ -1694,6 +1851,7 @@ impl EpEngine {
             metrics: self.metrics.clone(),
             slow_shard: self.slow_shard,
             replicate_hot: self.replicate_hot,
+            wire_dtype: self.wire_dtype,
         })?);
         self.shard_caches = false;
         Ok(())
@@ -2953,6 +3111,48 @@ fn prefill_shapes_available(
     keys.iter().all(|k| manifest.shared_program(k).is_ok())
 }
 
+/// Encode one expert's f32 `[w1, b1, w2, b2]` ship list in the ladder
+/// dtype.  `f32` passes through untouched (the baseline ships the exact
+/// master weights); `bf16`/`f16` narrow the two matrices and keep the
+/// biases f32 (they are a rounding-error-prone accumulator target and a
+/// negligible fraction of the bytes); `i8` quantizes the matrices
+/// per output channel, interleaving each quantized matrix with its scale
+/// vector — `[w1_q, w1_scales, b1, w2_q, w2_scales, b2]` — which is the
+/// layout the worker's install path consumes (an i8 tensor always eats
+/// the next tensor as its scales).
+fn encode_expert_weights(
+    weights: Vec<HostTensor>,
+    dtype: Dtype,
+) -> Result<Vec<HostTensor>> {
+    anyhow::ensure!(weights.len() == 4, "expert ship list is [w1,b1,w2,b2]");
+    match dtype {
+        Dtype::F32 => Ok(weights),
+        Dtype::BF16 | Dtype::F16 => {
+            let mut out = Vec::with_capacity(4);
+            for (i, t) in weights.into_iter().enumerate() {
+                // Matrices sit at positions 0 and 2; biases stay f32.
+                out.push(if i % 2 == 0 { t.convert(dtype)? } else { t });
+            }
+            Ok(out)
+        }
+        Dtype::I8 => {
+            let mut it = weights.into_iter();
+            let (w1, b1, w2, b2) = (
+                it.next().unwrap(),
+                it.next().unwrap(),
+                it.next().unwrap(),
+                it.next().unwrap(),
+            );
+            let (w1_q, w1_s) = w1.quantize_i8_per_col()?;
+            let (w2_q, w2_s) = w2.quantize_i8_per_col()?;
+            Ok(vec![w1_q, w1_s, b1, w2_q, w2_s, b2])
+        }
+        Dtype::I32 => {
+            anyhow::bail!("i32 is not an expert weight ladder dtype")
+        }
+    }
+}
+
 /// Slice expert `e`'s weights out of the stacked parameter tensors
 /// (`moe.w1 [E, M, F]` → `[M, F]`, biases `[E, F]` → `[F]`, …).
 fn slice_expert(full: &HostTensor, e: usize, _part: &str) -> Result<HostTensor> {
@@ -2981,6 +3181,57 @@ mod tests {
         let e0 = slice_expert(&full3, 0, "w1").unwrap();
         assert_eq!(e0.shape, vec![2, 2]);
         assert_eq!(e0.as_f32().unwrap(), &[0., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn encode_expert_weights_ladder() {
+        let mk = || {
+            vec![
+                HostTensor::f32(&[2, 3], vec![1., -2., 3., 0.5, 4., -6.]),
+                HostTensor::f32(&[3], vec![0.1, 0.2, 0.3]),
+                HostTensor::f32(&[3, 2], vec![1., 2., 3., 4., 5., 6.]),
+                HostTensor::f32(&[2], vec![-0.1, -0.2]),
+            ]
+        };
+        let f32_bytes: usize = mk().iter().map(|t| t.byte_len()).sum();
+
+        // f32 passes through byte-for-byte.
+        let base = encode_expert_weights(mk(), Dtype::F32).unwrap();
+        assert_eq!(base, mk());
+
+        // bf16: matrices halve, biases stay f32.
+        let bf = encode_expert_weights(mk(), Dtype::BF16).unwrap();
+        assert_eq!(bf.len(), 4);
+        assert_eq!(bf[0].dtype(), Dtype::BF16);
+        assert_eq!(bf[1].dtype(), Dtype::F32);
+        assert_eq!(bf[2].dtype(), Dtype::BF16);
+        assert_eq!(bf[3].dtype(), Dtype::F32);
+        let bf_bytes: usize = bf.iter().map(|t| t.byte_len()).sum();
+        // The two 6-element matrices halve (2 * 12 bytes saved).
+        assert_eq!(bf_bytes, f32_bytes - 24);
+
+        // i8: [w1_q, w1_scales, b1, w2_q, w2_scales, b2], and the
+        // interleaved layout round-trips through the install-side
+        // dequantizer to near the master weights.
+        let q = encode_expert_weights(mk(), Dtype::I8).unwrap();
+        assert_eq!(q.len(), 6);
+        assert_eq!(q[0].dtype(), Dtype::I8);
+        assert_eq!(q[1].dtype(), Dtype::F32);
+        assert_eq!(q[2].dtype(), Dtype::F32);
+        assert_eq!(q[3].dtype(), Dtype::I8);
+        assert_eq!(q[4].dtype(), Dtype::F32);
+        assert_eq!(q[5].dtype(), Dtype::F32);
+        let w1 = HostTensor::dequantize_i8_per_col(&q[0], &q[1]).unwrap();
+        for (a, b) in w1
+            .as_f32()
+            .unwrap()
+            .iter()
+            .zip(mk()[0].as_f32().unwrap())
+        {
+            assert!((a - b).abs() <= 6.0 / 127.0, "{a} vs {b}");
+        }
+
+        assert!(encode_expert_weights(mk(), Dtype::I32).is_err());
     }
 
     #[test]

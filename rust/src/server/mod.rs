@@ -106,6 +106,20 @@
 //! |                        | (default 2.0; clamped to >= 1).             |
 //! | `DSMOE_MAX_REPLICAS`   | ceiling on per-expert replication under the |
 //! |                        | rebalancer (default: worker count).         |
+//! | `DSMOE_EXPERT_DTYPE`   | expert-FFN weight ladder shipped to the     |
+//! |                        | workers: `f32` (default), `bf16`, or        |
+//! |                        | `int8`/`i8` with per-output-channel scales  |
+//! |                        | — workers dequantize once at install and    |
+//! |                        | compute in f32.  Shrinks startup shipping   |
+//! |                        | and migration payloads ~2x / ~3.5x.  Gated  |
+//! |                        | on the manifest's capability flags.         |
+//! | `DSMOE_WIRE_DTYPE`     | dispatch/combine activation payloads on the |
+//! |                        | fabric: `f32` (default, bitwise identical)  |
+//! |                        | or `f16`/`bf16` — halves per-layer          |
+//! |                        | all-to-all bytes under flat and             |
+//! |                        | hierarchical schedules; replies come back   |
+//! |                        | in the wire dtype and are widened at        |
+//! |                        | combine.  Gated on the capability flags.    |
 
 pub mod engine;
 pub mod ep;

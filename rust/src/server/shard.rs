@@ -45,7 +45,7 @@ use crate::coordinator::{LayerPlacement, Placement};
 use crate::fabric::FfnBatchResult;
 use crate::metrics::Metrics;
 use crate::runtime::{
-    HostTensor, Manifest, Program, Runtime, SharedArtifacts,
+    Dtype, HostTensor, Manifest, Program, Runtime, SharedArtifacts,
 };
 
 use super::ep::LaneGroupCaches;
@@ -126,6 +126,10 @@ pub(crate) struct Backbone {
     /// route every live token to this expert instead of the gate's
     /// argmax — a deterministic worst-case hot-expert workload.
     pub(crate) force_expert: Option<usize>,
+    /// `DSMOE_WIRE_DTYPE`: activation dtype of dispatch payloads (replies
+    /// come back in the same dtype).  `Dtype::F32` (default) keeps the
+    /// pack/combine path bitwise identical to the uncompressed engine.
+    pub(crate) wire_dtype: Dtype,
     alltoall: AllToAllKind,
     /// Fabric worker count (sizes the per-worker pack lists).
     workers: usize,
@@ -157,6 +161,7 @@ impl Backbone {
             placement,
             replicate_hot: false,
             force_expert: None,
+            wire_dtype: Dtype::F32,
             alltoall,
             workers,
             node_size,
@@ -405,13 +410,15 @@ impl Backbone {
             if segs.is_empty() {
                 continue;
             }
-            let total: usize = segs.iter().map(|&(_, _, r)| r).sum();
-            let mut data = Vec::new();
-            routing.pack_segments(ln_flat, m, segs, &mut data);
+            // Packed straight into the wire dtype: f32 (default) is the
+            // exact pack_segments rows; f16/bf16 narrow once here and the
+            // worker replies in kind.
+            let data =
+                routing.pack_segments_wire(ln_flat, m, segs, self.wire_dtype)?;
             batches.push(PreparedBatch {
                 worker: w,
                 experts: segs.clone(),
-                data: HostTensor::f32(&[total, m], data),
+                data,
             });
         }
         self.metrics.observe("dispatch", t1.elapsed());
@@ -473,11 +480,13 @@ impl Backbone {
     ) -> Result<xla::Literal> {
         let t4 = std::time::Instant::now();
         {
-            let packs: Vec<(&[(usize, usize, usize)], &[f32])> = results
+            // Wire-aware combine: f32 replies are borrowed (bitwise path),
+            // f16/bf16 replies are widened once.
+            let packs: Vec<(&[(usize, usize, usize)], &HostTensor)> = results
                 .iter()
-                .map(|r| Ok((r.experts.as_slice(), r.data.as_f32()?)))
-                .collect::<Result<_>>()?;
-            routing.combine_packed(&packs, self.cfg.d_model, combine)?;
+                .map(|r| (r.experts.as_slice(), &r.data))
+                .collect();
+            routing.combine_packed_wire(&packs, self.cfg.d_model, combine)?;
         }
         if let Some(res) = residual {
             for (c, r) in combine.iter_mut().zip(res) {
@@ -624,6 +633,10 @@ pub(crate) enum ShardCmd {
     /// before the next Prefill/Decode, so no in-flight exchange ever sees
     /// a torn placement.
     SetPlacement { placement: Placement, replicate_hot: bool },
+    /// Switch the activation wire dtype (`DSMOE_WIRE_DTYPE`).  Sent only
+    /// between forwards, like `SetPlacement` — no in-flight exchange ever
+    /// mixes wire dtypes.
+    SetWireDtype(Dtype),
     Shutdown,
 }
 
@@ -662,6 +675,7 @@ pub(crate) struct PoolSpec {
     pub(crate) cfg: ModelConfig,
     pub(crate) placement: Placement,
     pub(crate) replicate_hot: bool,
+    pub(crate) wire_dtype: Dtype,
     pub(crate) alltoall: AllToAllKind,
     pub(crate) workers: usize,
     pub(crate) metrics: Arc<Metrics>,
@@ -691,6 +705,7 @@ impl ShardPool {
             let cfg = spec.cfg.clone();
             let placement = spec.placement.clone();
             let replicate_hot = spec.replicate_hot;
+            let wire_dtype = spec.wire_dtype;
             let (alltoall, workers) = (spec.alltoall, spec.workers);
             let metrics = spec.metrics.clone();
             let slow = spec
@@ -701,8 +716,8 @@ impl ShardPool {
                 .spawn(move || {
                     shard_main(
                         idx, lane0, lanes, arts, cfg, placement,
-                        replicate_hot, alltoall, workers, metrics, slow, rx,
-                        event_tx,
+                        replicate_hot, wire_dtype, alltoall, workers, metrics,
+                        slow, rx, event_tx,
                     )
                 })
                 .context("spawning leader shard")?;
@@ -808,6 +823,7 @@ fn shard_main(
     cfg: ModelConfig,
     placement: Placement,
     replicate_hot: bool,
+    wire_dtype: Dtype,
     alltoall: AllToAllKind,
     workers: usize,
     metrics: Arc<Metrics>,
@@ -830,6 +846,7 @@ fn shard_main(
             }
         };
     bb.replicate_hot = replicate_hot;
+    bb.wire_dtype = wire_dtype;
     let mut caches: Option<LaneGroupCaches> = None;
     let mut scratch = MoeScratch::default();
     let mut seq = 0u64;
@@ -844,6 +861,7 @@ fn shard_main(
                 bb.placement = placement;
                 bb.replicate_hot = replicate_hot;
             }
+            ShardCmd::SetWireDtype(d) => bb.wire_dtype = d,
             ShardCmd::Prefill { tokens, lens } => {
                 let r = shard_prefill(
                     &mut bb, idx, lane0, lanes, &tokens, &lens, &mut caches,

@@ -6,6 +6,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod sampling;
+pub mod sha256;
 pub mod stats;
 pub mod table;
 

@@ -7,7 +7,7 @@
 use ds_moe::config::{AllToAllKind, ServingConfig};
 use ds_moe::data::{Corpus, CorpusConfig};
 use ds_moe::fabric::TransportKind;
-use ds_moe::runtime::{Checkpoint, HostTensor, Manifest, Runtime};
+use ds_moe::runtime::{Checkpoint, Dtype, HostTensor, Manifest, Runtime};
 use ds_moe::server::{EpEngine, Scheduler};
 use ds_moe::tokenizer::EOS;
 use ds_moe::util::stats::argmax;
@@ -1052,4 +1052,294 @@ fn expert_load_stats_populated() {
         assert!(s.utilization() > 0.0);
     }
     assert!(ep.traffic().total_bytes() > 0);
+}
+
+/// Tolerance-based row comparison for the compressed data path: every
+/// element of `a` must land within `max_abs + max_rel * |b|` of the f32
+/// reference `b`, and be finite.  Reports the worst offender on failure.
+fn assert_close(
+    a: &[Vec<f32>],
+    b: &[Vec<f32>],
+    max_abs: f32,
+    max_rel: f32,
+    what: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{what}: row count");
+    for (lane, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{what}: lane {lane} width");
+        let (mut worst, mut at) = (0f32, 0usize);
+        for (i, (x, y)) in ra.iter().zip(rb).enumerate() {
+            assert!(
+                x.is_finite(),
+                "{what}: lane {lane} element {i} is {x}"
+            );
+            let excess = (x - y).abs() - (max_abs + max_rel * y.abs());
+            if excess > worst {
+                worst = excess;
+                at = i;
+            }
+        }
+        assert!(
+            worst <= 0.0,
+            "{what}: lane {lane} element {at}: {} vs reference {} \
+             exceeds max_abs {max_abs} + max_rel {max_rel} by {worst}",
+            ra[at],
+            rb[at],
+        );
+    }
+}
+
+/// The compressed data path is deliberately NOT bitwise — its contract
+/// is tolerance parity against the all-f32 reference on the same trace.
+/// Both engines are fed the reference's greedy tokens every step so
+/// precision drift never compounds through diverging inputs; the
+/// `assert_ne!` pins that the toggle actually changed the numerics
+/// (an inert toggle would pass any tolerance).
+#[allow(clippy::too_many_arguments)]
+fn compressed_parity(
+    model: &str,
+    workers: usize,
+    expert_dtype: Dtype,
+    wire_dtype: Dtype,
+    hier: bool,
+    transport: TransportKind,
+    max_abs: f32,
+    max_rel: f32,
+) {
+    let Some(m) = manifest() else { return };
+    let batch = 8usize;
+    let node_size = 2usize;
+    assert_eq!(workers % node_size, 0);
+    let cfg = m.model(model).unwrap().config.clone();
+    let smax = cfg.max_seq;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+
+    let mk = |transport: TransportKind| {
+        let mut e = EpEngine::new_with_transport(
+            &m,
+            model,
+            workers,
+            AllToAllKind::Hierarchical,
+            batch,
+            transport,
+        )
+        .unwrap();
+        e.set_serial_moe(false);
+        e.set_pipeline(true);
+        e.set_node_size(node_size);
+        e.set_a2a_hierarchical(hier);
+        e
+    };
+    let mut reference = mk(TransportKind::Channel);
+    let mut compressed = mk(transport);
+    compressed.set_expert_dtype(expert_dtype).unwrap();
+    compressed.set_wire_dtype(wire_dtype).unwrap();
+    assert_eq!(compressed.expert_dtype(), expert_dtype);
+    assert_eq!(compressed.wire_dtype(), wire_dtype);
+
+    let what = format!(
+        "{model} experts={expert_dtype} wire={wire_dtype} prefill"
+    );
+    let rr = reference.forward_prefill(&tokens, &lens).unwrap();
+    let rc = compressed.forward_prefill(&tokens, &lens).unwrap();
+    assert_ne!(rc, rr, "{what}: compression toggle is inert");
+    assert_close(&rc, &rr, max_abs, max_rel, &what);
+
+    let mut tok: Vec<i32> = rr.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    for step in 0..3 {
+        let dr = reference.forward_decode(&tok, &pos).unwrap();
+        let dc = compressed.forward_decode(&tok, &pos).unwrap();
+        assert_close(
+            &dc,
+            &dr,
+            max_abs,
+            max_rel,
+            &format!(
+                "{model} experts={expert_dtype} wire={wire_dtype} \
+                 decode step {step}"
+            ),
+        );
+        tok = dr.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
+    assert_eq!(reference.fabric_stash_depth(), 0);
+    assert_eq!(compressed.fabric_stash_depth(), 0);
+}
+
+#[test]
+fn bf16_experts_close_to_f32_flat_channel() {
+    compressed_parity(
+        "moe-s-8",
+        4,
+        Dtype::BF16,
+        Dtype::F32,
+        false,
+        TransportKind::Channel,
+        0.3,
+        0.08,
+    );
+}
+
+#[test]
+fn int8_experts_close_to_f32_hier_socket() {
+    // The quantized ladder crosses the serialized frame codec and the
+    // relay schedule: i8 payloads + their f32 scale rows survive both.
+    compressed_parity(
+        "moe-s-8",
+        4,
+        Dtype::I8,
+        Dtype::F32,
+        true,
+        TransportKind::Socket,
+        0.6,
+        0.12,
+    );
+}
+
+#[test]
+fn f16_wire_close_to_f32_flat_channel() {
+    compressed_parity(
+        "moe-s-8",
+        4,
+        Dtype::F32,
+        Dtype::F16,
+        false,
+        TransportKind::Channel,
+        0.15,
+        0.05,
+    );
+}
+
+#[test]
+fn f16_wire_close_to_f32_hier_socket() {
+    // Relayed coalesced replies carry f16 tensors over the socket frame
+    // codec — the narrow dtype must survive gather/scatter re-slicing.
+    compressed_parity(
+        "moe-s-8",
+        4,
+        Dtype::F32,
+        Dtype::F16,
+        true,
+        TransportKind::Socket,
+        0.15,
+        0.05,
+    );
+}
+
+#[test]
+fn int8_experts_f16_wire_close_to_f32_hier() {
+    // The full compression ladder at once — the serving configuration
+    // the e2e bench measures.
+    compressed_parity(
+        "moe-s-8",
+        4,
+        Dtype::I8,
+        Dtype::F16,
+        true,
+        TransportKind::Channel,
+        0.7,
+        0.15,
+    );
+}
+
+#[test]
+fn int8_experts_prmoe_close_to_f32() {
+    // The residual-expert branch dequantizes through the same install
+    // path.
+    compressed_parity(
+        "prmoe-s",
+        4,
+        Dtype::I8,
+        Dtype::F32,
+        false,
+        TransportKind::Channel,
+        0.6,
+        0.12,
+    );
+}
+
+/// PR 7 composition: a hot expert forced onto two replicas with int8
+/// weights + f16 wire must be bitwise identical to the single-owner run
+/// at the same compression point — every replica installs the same
+/// dequantized ladder, so splitting the token block across them cannot
+/// change a single bit.
+#[test]
+fn int8_replicated_expert_is_replica_consistent() {
+    let Some(m) = manifest() else { return };
+    let model = "moe-s-8";
+    let (workers, batch) = (4usize, 8usize);
+    let cfg = m.model(model).unwrap().config.clone();
+    let smax = cfg.max_seq;
+    let corpus = Corpus::generate(CorpusConfig {
+        train_seqs: 8,
+        valid_seqs: 16,
+        ..Default::default()
+    });
+    let plen = 8usize;
+    let mut tokens = vec![0i32; batch * smax];
+    let lens = vec![plen; batch];
+    for b in 0..batch {
+        let p = corpus.prompt(b, plen);
+        tokens[b * smax..b * smax + plen].copy_from_slice(&p);
+    }
+
+    let mk = |replicate: bool| {
+        let mut e = EpEngine::new_with_transport(
+            &m,
+            model,
+            workers,
+            AllToAllKind::Hierarchical,
+            batch,
+            TransportKind::Channel,
+        )
+        .unwrap();
+        e.set_serial_moe(false);
+        e.set_pipeline(true);
+        e.set_node_size(2);
+        e.set_a2a_hierarchical(true);
+        e.set_expert_dtype(Dtype::I8).unwrap();
+        e.set_wire_dtype(Dtype::F16).unwrap();
+        if replicate {
+            e.set_replicate_hot(true).unwrap();
+            e.set_rebalance_skew(f64::INFINITY);
+            // The replica ships ride the compressed ladder too.
+            e.force_replicas(0, 2).unwrap();
+        }
+        e
+    };
+    let mut single = mk(false);
+    let mut replicated = mk(true);
+
+    let rs = single.forward_prefill(&tokens, &lens).unwrap();
+    let rr = replicated.forward_prefill(&tokens, &lens).unwrap();
+    assert_eq!(rr, rs, "{model}: int8 replicated prefill != single-owner");
+
+    let mut tok: Vec<i32> = rs.iter().map(|r| argmax(r) as i32).collect();
+    let mut pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+    for step in 0..3 {
+        let ds = single.forward_decode(&tok, &pos).unwrap();
+        let dr = replicated.forward_decode(&tok, &pos).unwrap();
+        assert_eq!(
+            dr, ds,
+            "{model}: int8 replicated decode step {step} != single-owner"
+        );
+        tok = ds.iter().map(|r| argmax(r) as i32).collect();
+        for p in &mut pos {
+            *p += 1;
+        }
+    }
 }

@@ -35,13 +35,24 @@ cargo test -q --test integration_fabric socket_transport_errors_stay_loud
 # directions) must not perturb a bit or leave a stale tagged reply behind.
 cargo test -q --test integration_parity replicated_placement_bitwise_identical
 cargo test -q --test integration_parity migration_mid_run_bitwise_identical
+# Compressed expert data path: the frame codec must round-trip every
+# dtype tag (f16/bf16/i8 included) and reject truncated/garbage frames;
+# the bf16/int8 weight ladders and the f16 activation wire must hold
+# tolerance parity against the all-f32 reference across flat/channel and
+# hier/socket, and compose bitwise with PR 7's replicated placements.
+cargo test -q --lib fabric::frame::
+cargo test -q --test integration_parity bf16_experts_close_to_f32
+cargo test -q --test integration_parity int8_experts
+cargo test -q --test integration_parity f16_wire_close_to_f32
+cargo test -q --test integration_parity int8_replicated_expert_is_replica_consistent
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 
 # Bench smoke: a short arrival trace, the depth-2 leader-parallel pair,
-# and the flat-vs-hierarchical all-to-all pair through the full stack;
-# refreshes BENCH_e2e.json so every PR records a perf point (no-ops
-# without artifacts/, like the integration tests).
+# the flat-vs-hierarchical all-to-all pair, and one compressed serving
+# point (int8 experts + f16 wire) next to the f32 baseline through the
+# full stack; refreshes BENCH_e2e.json so every PR records a perf point
+# (no-ops without artifacts/, like the integration tests).
 cargo bench --bench e2e_serving -- --smoke
 
 echo "tier-1 gate: OK"
