@@ -65,24 +65,38 @@
 //! identical trace, the int8 ladder ships ≥ 3x smaller expert-weight
 //! payloads, and the perplexity delta is reported rather than assumed.
 //!
+//! Part 10 is the SLO-serving study: a heavy-tailed bursty multi-tenant
+//! trace (lognormal prompt lengths, Markov-modulated Poisson arrivals,
+//! interactive vs batch tiers) served twice — once FIFO (every request
+//! tier 0, no chunking, unbounded queue) and once SLO-aware (priority
+//! tiers + preemption, chunked prefill, bounded queues with shedding) —
+//! with per-tier TTFT/TPOT percentiles keyed by the trace's *intended*
+//! tier in both modes.  The acceptance bar is the SLO mode's interactive
+//! TTFT p99 landing below the FIFO run's on the identical trace.
+//!
 //! Everything is also emitted to `BENCH_e2e.json` at the repo root so the
 //! perf trajectory is tracked across PRs.
 //!
 //! `--smoke` runs a minimal subset (one model, a short arrival trace, the
 //! depth-2 leader-parallel pair, the flat-vs-hierarchical all-to-all
 //! pair, the R ∈ {1, 2} replication pair, the f32-vs-int8+f16
-//! compression pair) and still writes `BENCH_e2e.json` — cheap enough
-//! for `scripts/check.sh`, so every PR records a perf point.
+//! compression pair, a short bursty FIFO-vs-SLO pair) and still writes
+//! `BENCH_e2e.json` — cheap enough for `scripts/check.sh`, so every PR
+//! records a perf point.
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
 
-use ds_moe::config::{AllToAllKind, ServingConfig};
+use ds_moe::config::{AllToAllKind, ServingConfig, ShedPolicy};
+use ds_moe::coordinator::{Response, Submission};
 use ds_moe::data::{Corpus, CorpusConfig, EvalSuite};
 use ds_moe::metrics::Metrics;
 use ds_moe::runtime::{Dtype, Manifest};
-use ds_moe::server::{ttft_percentile, Engine, EpEngine, Scheduler};
+use ds_moe::server::{
+    tpot_percentile, ttft_percentile, Engine, EpEngine, Scheduler,
+};
+use ds_moe::util::rng::Rng;
 use ds_moe::util::stats::{argmax, fmt_ns};
 use ds_moe::util::table::{f1, f2, Table};
 
@@ -563,10 +577,263 @@ fn main() {
     ct.print();
     let _ = ct.save_csv("e2e_compression");
 
+    // --- SLO serving: FIFO vs chunked prefill + priority + backpressure --
+    let mut slo_rows = Vec::new();
+    let mut slt = Table::new(
+        "SLO serving: bursty multi-tenant trace, FIFO vs SLO-aware",
+        &["model", "mode", "tier", "done", "TTFT p50", "TTFT p99",
+          "TPOT p50", "TPOT p99", "shed", "preempted", "ddl miss"],
+    );
+    let slo_requests = if smoke { 12 } else { 48 };
+    for slo in [false, true] {
+        let Some(row) = slo_serving_study(
+            &manifest, &corpus, "moe-s-8", 4, slo_requests, slo,
+        ) else {
+            continue;
+        };
+        for ts in &row.tiers {
+            slt.row(&[
+                row.model.clone(),
+                row.mode.to_string(),
+                ts.tier.to_string(),
+                ts.done.to_string(),
+                fmt_ns(ts.ttft_p50_ns),
+                fmt_ns(ts.ttft_p99_ns),
+                fmt_ns(ts.tpot_p50_ns),
+                fmt_ns(ts.tpot_p99_ns),
+                ts.shed.to_string(),
+                ts.preempted.to_string(),
+                ts.deadline_misses.to_string(),
+            ]);
+        }
+        slo_rows.push(row);
+    }
+    slt.note("the identical trace served twice: FIFO strips tiers, \
+              deadlines, chunking and queue bounds; the SLO run admits \
+              interactive (tier 1) requests ahead of batch traffic \
+              (preempting the longest-running batch decode when the lanes \
+              are full), spreads big-prompt admissions across decode \
+              steps (DSMOE_PREFILL_CHUNK), and sheds what a bounded tier \
+              queue cannot hold.  Tier columns are keyed by the trace's \
+              intended tier in both modes, so rows compare directly — \
+              the bar is a lower interactive TTFT p99 in SLO mode");
+    slt.print();
+    let _ = slt.save_csv("e2e_slo_serving");
+    let fifo = slo_rows.iter().find(|r| r.mode == "fifo");
+    let slo = slo_rows.iter().find(|r| r.mode == "slo");
+    if let (Some(f), Some(s)) = (fifo, slo) {
+        let f1t = f.tiers.iter().find(|t| t.tier == 1);
+        let s1t = s.tiers.iter().find(|t| t.tier == 1);
+        if let (Some(f1t), Some(s1t)) = (f1t, s1t) {
+            println!(
+                "  interactive TTFT p99: FIFO {} vs SLO {} ({}; {} \
+                 preemptions, {} chunked admissions, {} shed)",
+                fmt_ns(f1t.ttft_p99_ns),
+                fmt_ns(s1t.ttft_p99_ns),
+                if s1t.ttft_p99_ns < f1t.ttft_p99_ns {
+                    "improved"
+                } else {
+                    "NOT improved"
+                },
+                s.preemptions,
+                s.chunked_admissions,
+                s.shed,
+            );
+        }
+    }
+
     write_bench_json(
         &rows, &studies, &cb_rows, &depth_rows, &adm_rows, &lp_rows,
-        &a2a_rows, &he_rows, &cmp_rows,
+        &a2a_rows, &he_rows, &cmp_rows, &slo_rows,
     );
+}
+
+/// One synthetic multi-tenant request: arrival offset (seconds from trace
+/// start), heavy-tailed prompt length, priority tier, optional TTFT
+/// deadline.
+struct TraceReq {
+    at: f64,
+    prompt_len: usize,
+    max_new: usize,
+    tier: u8,
+    deadline: Option<std::time::Duration>,
+}
+
+/// Heavy-tailed bursty multi-tenant trace: arrivals follow a two-state
+/// Markov-modulated Poisson process (bursts arrive 5x faster and persist
+/// for a geometric number of arrivals), prompt lengths are lognormal
+/// (interactive tenants short, batch tenants long-tailed, clamped to the
+/// model's sequence budget), and requests alternate between an
+/// interactive tenant class (tier 1, short outputs, a TTFT deadline) and
+/// a batch class (tier 0, long prompts + outputs, no deadline).
+fn bursty_trace(n: usize, seed: u64, base_rate: f64) -> Vec<TraceReq> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut burst = false;
+    (0..n)
+        .map(|i| {
+            let rate = if burst { base_rate * 5.0 } else { base_rate };
+            t += rng.exponential(rate);
+            // Geometric sojourns: bursts last ~4 arrivals, calm ~8.
+            if rng.bool(if burst { 0.25 } else { 0.125 }) {
+                burst = !burst;
+            }
+            let interactive = i % 2 == 0;
+            let (mu, sigma) =
+                if interactive { (1.6, 0.3) } else { (2.3, 0.5) };
+            let plen = (mu + sigma * rng.gauss()).exp().round() as usize;
+            TraceReq {
+                at: t,
+                prompt_len: plen.clamp(4, 24),
+                max_new: if interactive { 4 } else { 8 },
+                tier: u8::from(interactive),
+                deadline: interactive
+                    .then(|| std::time::Duration::from_millis(60)),
+            }
+        })
+        .collect()
+}
+
+struct SloTierStats {
+    tier: u8,
+    done: usize,
+    shed: u64,
+    preempted: u64,
+    deadline_misses: u64,
+    ttft_p50_ns: u64,
+    ttft_p99_ns: u64,
+    tpot_p50_ns: u64,
+    tpot_p99_ns: u64,
+}
+
+struct SloRow {
+    model: String,
+    workers: usize,
+    mode: &'static str,
+    requests: usize,
+    completed: usize,
+    shed: u64,
+    preemptions: u64,
+    resumed: u64,
+    chunked_admissions: u64,
+    tok_per_s: f64,
+    tiers: Vec<SloTierStats>,
+}
+
+/// Serve one bursty multi-tenant trace through `Scheduler<EpEngine>` —
+/// FIFO (`slo == false`: every request tier 0, no chunking, unbounded
+/// queues) or SLO-aware (tiers + deadlines as generated, chunked prefill,
+/// bounded queues).  Both modes replay the identical trace (same seed,
+/// same submission order), and the per-tier stats are keyed by the
+/// trace's *intended* tier either way, so the two rows compare directly.
+fn slo_serving_study(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    model: &str,
+    workers: usize,
+    n_requests: usize,
+    slo: bool,
+) -> Option<SloRow> {
+    let batch = 8usize;
+    let trace = bursty_trace(n_requests, 23, 150.0);
+    let mut ep = EpEngine::new(
+        manifest,
+        model,
+        workers,
+        AllToAllKind::Hierarchical,
+        batch,
+    )
+    .ok()?;
+    ep.set_serial_moe(false);
+    ep.set_pipeline(true);
+    let serving = ServingConfig {
+        model: model.into(),
+        workers,
+        max_batch: batch,
+        max_new_tokens: 8,
+        batch_timeout: std::time::Duration::from_millis(1),
+        prefill_chunk: if slo { 16 } else { 0 },
+        queue_cap: if slo { 2 * batch } else { 0 },
+        shed_policy: ShedPolicy::Reject,
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(ep, serving);
+
+    // Warmup: compile every admission-prefill and decode shape, then
+    // measure steady state only.
+    for i in 0..batch {
+        sched.submit(corpus.prompt(i, 8), Some(2)).ok()?;
+    }
+    sched.run_until_idle().ok()?;
+    sched.reset_metrics();
+
+    // Open-loop replay; record each admitted id's intended tier so the
+    // FIFO run's responses can still be grouped per tier.
+    let mut id_tier: HashMap<u64, u8> = HashMap::new();
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    while submitted < trace.len()
+        || sched.active_count() > 0
+        || sched.queue_len() > 0
+        || sched.admission_in_flight()
+    {
+        let now = t0.elapsed().as_secs_f64();
+        while submitted < trace.len() && trace[submitted].at <= now {
+            let r = &trace[submitted];
+            let prompt = corpus.prompt(submitted, r.prompt_len);
+            let (tier, deadline) =
+                if slo { (r.tier, r.deadline) } else { (0, None) };
+            if let Submission::Queued(id) = sched
+                .submit_tiered(prompt, Some(r.max_new), tier, deadline)
+                .ok()?
+            {
+                id_tier.insert(id, r.tier);
+            }
+            submitted += 1;
+        }
+        if !sched.step().ok()? {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let responses = sched.take_done();
+    let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+
+    let m = &sched.metrics;
+    let tiers = [0u8, 1u8]
+        .iter()
+        .map(|&t| {
+            let rs: Vec<Response> = responses
+                .iter()
+                .filter(|r| id_tier.get(&r.id) == Some(&t))
+                .cloned()
+                .collect();
+            SloTierStats {
+                tier: t,
+                done: rs.len(),
+                shed: m.counter(&format!("shed_t{t}")),
+                preempted: m.counter(&format!("preempted_t{t}")),
+                deadline_misses: m.counter(&format!("deadline_miss_t{t}")),
+                ttft_p50_ns: ttft_percentile(&rs, 50),
+                ttft_p99_ns: ttft_percentile(&rs, 99),
+                tpot_p50_ns: tpot_percentile(&rs, 50),
+                tpot_p99_ns: tpot_percentile(&rs, 99),
+            }
+        })
+        .collect();
+    Some(SloRow {
+        model: model.to_string(),
+        workers,
+        mode: if slo { "slo" } else { "fifo" },
+        requests: n_requests,
+        completed: responses.len(),
+        shed: m.counter("requests_shed"),
+        preemptions: m.counter("preemptions"),
+        resumed: m.counter("resumed"),
+        chunked_admissions: m.counter("chunked_admissions"),
+        tok_per_s: tokens as f64 / wall,
+        tiers,
+    })
 }
 
 struct HotExpertRow {
@@ -1349,9 +1616,9 @@ fn pipeline_study(
 /// Emit `BENCH_e2e.json` at the repo root: the serving sweep, the MoE
 /// pipeline study, the continuous-batching study, the ring-depth sweep,
 /// the admission-interleaving study, the leader-parallel study, the
-/// all-to-all schedule study, the hot-expert replication study, and the
-/// compressed-data-path study, so future PRs have a machine-readable
-/// perf baseline.
+/// all-to-all schedule study, the hot-expert replication study, the
+/// compressed-data-path study, and the SLO-serving study, so future PRs
+/// have a machine-readable perf baseline.
 #[allow(clippy::too_many_arguments)]
 fn write_bench_json(
     rows: &[ServingRow],
@@ -1363,6 +1630,7 @@ fn write_bench_json(
     a2a_rows: &[A2aRow],
     he_rows: &[HotExpertRow],
     cmp_rows: &[CompressionRow],
+    slo_rows: &[SloRow],
 ) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"e2e_serving\",\n  \"serving\": [\n");
@@ -1621,6 +1889,49 @@ fn write_bench_json(
             r.eval_items,
             r.perplexity,
             if i + 1 == cmp_rows.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ],\n  \"slo_serving\": [\n");
+    for (i, r) in slo_rows.iter().enumerate() {
+        let mut tiers = String::new();
+        for (j, ts) in r.tiers.iter().enumerate() {
+            let _ = write!(
+                tiers,
+                "{{\"tier\": {}, \"done\": {}, \"shed\": {}, \
+                 \"preempted\": {}, \"deadline_misses\": {}, \
+                 \"ttft_p50_ns\": {}, \"ttft_p99_ns\": {}, \
+                 \"tpot_p50_ns\": {}, \"tpot_p99_ns\": {}}}{}",
+                ts.tier,
+                ts.done,
+                ts.shed,
+                ts.preempted,
+                ts.deadline_misses,
+                ts.ttft_p50_ns,
+                ts.ttft_p99_ns,
+                ts.tpot_p50_ns,
+                ts.tpot_p99_ns,
+                if j + 1 == r.tiers.len() { "" } else { ", " }
+            );
+        }
+        let _ = write!(
+            s,
+            "    {{\"model\": \"{}\", \"workers\": {}, \"mode\": \"{}\", \
+             \"requests\": {}, \"completed\": {}, \"shed\": {}, \
+             \"preemptions\": {}, \"resumed\": {}, \
+             \"chunked_admissions\": {}, \"tok_per_s\": {:.2}, \
+             \"tiers\": [{}]}}{}\n",
+            r.model,
+            r.workers,
+            r.mode,
+            r.requests,
+            r.completed,
+            r.shed,
+            r.preemptions,
+            r.resumed,
+            r.chunked_admissions,
+            r.tok_per_s,
+            tiers,
+            if i + 1 == slo_rows.len() { "" } else { "," }
         );
     }
     s.push_str("  ]\n}\n");

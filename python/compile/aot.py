@@ -19,8 +19,11 @@ under ``artifacts/``:
   program file that the Rust loader verifies before compiling, and a
   ``capabilities`` block declaring which expert-weight ladder dtypes and
   activation wire dtypes the serving stack may enable against these
-  artifacts.  This file is the ABI between the Python build path and the
-  Rust runtime.
+  artifacts, and a ``provenance`` block (``compiler_config_sha256`` over
+  the canonicalized registry/ladders/capabilities, ``source_digest`` over
+  the sorted compiler sources) that records which compiler at which
+  configuration produced the artifacts.  This file is the ABI between the
+  Python build path and the Rust runtime.
 
 Python runs ONCE; after this, the Rust binary is self-contained.
 """
@@ -103,11 +106,67 @@ CAPABILITIES = {
 }
 
 
+def compiler_config_sha256() -> str:
+    """Digest of the compiler configuration that shapes the artifacts.
+
+    Covers the model registry (every variant's full config), the
+    batch/capacity shape ladders, the training geometry, and the
+    capability flags — everything that changes what gets compiled without
+    being a source edit.  Deterministic: canonical JSON, sorted keys.
+    Two artifact sets with equal stamps were compiled under the same
+    configuration.
+    """
+    import dataclasses
+
+    payload = {
+        "schema_version": MANIFEST_SCHEMA_VERSION,
+        "capabilities": CAPABILITIES,
+        "decode_batch_sizes": list(DECODE_BATCH_SIZES),
+        "prefill_batch_sizes": list(PREFILL_BATCH_SIZES),
+        "pipeline_microbatch_sizes": list(PIPELINE_MICROBATCH_SIZES),
+        "expert_block_sizes": list(EXPERT_BLOCK_SIZES),
+        "train_geometry": [TRAIN_BATCH, TRAIN_SEQ, EVAL_BATCH],
+        "registry": {
+            name: dataclasses.asdict(configs.get(name))
+            for name in configs.REGISTRY
+        },
+    }
+    text = json.dumps(payload, sort_keys=True, default=str)
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def source_digest() -> str:
+    """SHA-256 over the compiler's own sources.
+
+    Walks every ``.py`` under ``python/compile/`` (including the kernels
+    subpackage) in sorted relative-path order, hashing path and contents,
+    so a manifest records exactly which compiler produced it.
+    """
+    root = os.path.dirname(os.path.abspath(__file__))
+    paths = []
+    for dirpath, _, files in os.walk(root):
+        paths.extend(
+            os.path.join(dirpath, fn) for fn in files if fn.endswith(".py"))
+    h = hashlib.sha256()
+    for p in sorted(paths, key=lambda p: os.path.relpath(p, root)):
+        h.update(os.path.relpath(p, root).encode())
+        h.update(b"\0")
+        with open(p, "rb") as f:
+            h.update(f.read())
+        h.update(b"\0")
+    return h.hexdigest()
+
+
 class Exporter:
     def __init__(self, out_dir: str):
         self.out_dir = out_dir
         self.manifest = {"schema_version": MANIFEST_SCHEMA_VERSION,
                          "capabilities": CAPABILITIES,
+                         "provenance": {
+                             "compiler_config_sha256":
+                                 compiler_config_sha256(),
+                             "source_digest": source_digest(),
+                         },
                          "models": {}, "shared": {}}
 
     def export_program(self, rel_name: str, fn: Callable,

@@ -131,6 +131,20 @@ pub struct ServingConfig {
     /// `EpEngine::set_leader_threads`).  1 (default) keeps the
     /// single-threaded leader.
     pub leader_threads: usize,
+    /// Chunked-prefill token budget (`DSMOE_PREFILL_CHUNK`): a staged
+    /// admission advances at most this many prompt tokens' worth of layer
+    /// work behind each decode step and stays staged across steps until
+    /// done, so a giant prompt can't stall decode lanes for its whole
+    /// prefill.  0 (default) = off: the admission completes after one
+    /// decode step, exactly the pre-chunking behavior.
+    pub prefill_chunk: usize,
+    /// Per-tier inbound queue capacity (`DSMOE_QUEUE_CAP`): submissions
+    /// beyond it hit `shed_policy`.  0 (default) = unbounded, the
+    /// pre-backpressure behavior.
+    pub queue_cap: usize,
+    /// What to do with a submission to a full tier queue
+    /// (`DSMOE_SHED_POLICY`).
+    pub shed_policy: ShedPolicy,
     /// Greedy (argmax) vs temperature sampling.
     pub temperature: f32,
     /// Seed for temperature sampling (`util::sampling::Sampler`), so
@@ -159,9 +173,60 @@ impl Default for ServingConfig {
                 "DSMOE_LEADER_THREADS",
                 1,
             ),
+            prefill_chunk: crate::util::env_usize_off(
+                "DSMOE_PREFILL_CHUNK",
+                0,
+            ),
+            queue_cap: crate::util::env_usize_off("DSMOE_QUEUE_CAP", 0),
+            shed_policy: ShedPolicy::from_env(),
             temperature: 0.0,
             seed: 0xD5, // the old Engine's hard-coded RNG seed
         }
+    }
+}
+
+/// Backpressure policy for a full tier queue (`DSMOE_SHED_POLICY`): how
+/// the router responds when `ServingConfig::queue_cap` is hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedPolicy {
+    /// Shed the *new* submission (load shedding at the front door).
+    #[default]
+    Reject,
+    /// Admit the new submission and shed the oldest queued request of the
+    /// same tier (the one most likely past its deadline anyway).
+    DropOldest,
+}
+
+impl ShedPolicy {
+    /// Parse `DSMOE_SHED_POLICY`: unset → `Reject`; garbage → warn on
+    /// stderr and fall back to `Reject` (same contract as the numeric
+    /// env parsers in `util`).
+    pub fn from_env() -> Self {
+        let Some(raw) = std::env::var_os("DSMOE_SHED_POLICY") else {
+            return ShedPolicy::Reject;
+        };
+        let s = raw.to_string_lossy();
+        match s.trim().parse() {
+            Ok(p) => p,
+            Err(_) => {
+                eprintln!(
+                    "[config] DSMOE_SHED_POLICY={s:?} is not \
+                     reject|drop-oldest; falling back to reject"
+                );
+                ShedPolicy::Reject
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for ShedPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "reject" => ShedPolicy::Reject,
+            "drop-oldest" | "drop_oldest" => ShedPolicy::DropOldest,
+            _ => anyhow::bail!("unknown shed policy {s:?}"),
+        })
     }
 }
 

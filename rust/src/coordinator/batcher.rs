@@ -69,6 +69,22 @@ impl BatchPolicy {
         free_lanes: usize,
         oldest_wait: Option<Duration>,
     ) -> Decision {
+        self.decide_urgent(waiting, free_lanes, oldest_wait, false)
+    }
+
+    /// [`BatchPolicy::decide`] with an urgency override: when `urgent`
+    /// (an above-tier-0 request is waiting), a partial batch flushes
+    /// immediately instead of accumulating until the timeout — an
+    /// interactive-tier request never idles behind the batching clock.
+    /// `urgent == false` is byte-for-byte the classic size-or-timeout
+    /// policy.
+    pub fn decide_urgent(
+        &self,
+        waiting: usize,
+        free_lanes: usize,
+        oldest_wait: Option<Duration>,
+        urgent: bool,
+    ) -> Decision {
         if waiting == 0 || free_lanes == 0 {
             return Decision::Wait;
         }
@@ -79,12 +95,12 @@ impl BatchPolicy {
         if waiting >= full {
             return Decision::Prefill { compiled: full, take: full };
         }
-        match oldest_wait {
-            Some(w) if w >= self.timeout => {
-                let take = waiting.min(cap);
-                Decision::Prefill { compiled: self.round_up(take).min(cap), take }
-            }
-            _ => Decision::Wait,
+        let timed_out = matches!(oldest_wait, Some(w) if w >= self.timeout);
+        if timed_out || urgent {
+            let take = waiting.min(cap);
+            Decision::Prefill { compiled: self.round_up(take).min(cap), take }
+        } else {
+            Decision::Wait
         }
     }
 }
@@ -196,6 +212,21 @@ mod tests {
             p.decide(2, 8, Some(Duration::from_millis(2))),
             Decision::Prefill { compiled: 4, take: 2 }
         );
+    }
+
+    #[test]
+    fn urgent_flushes_partial_batch_before_timeout() {
+        let p = policy(); // timeout = 2ms
+        // Classic policy waits; the urgency override flushes now.
+        let young = Some(Duration::from_micros(100));
+        assert_eq!(p.decide_urgent(2, 8, young, false), Decision::Wait);
+        assert_eq!(
+            p.decide_urgent(2, 8, young, true),
+            Decision::Prefill { compiled: 4, take: 2 }
+        );
+        // Urgency cannot conjure lanes or requests.
+        assert_eq!(p.decide_urgent(0, 8, None, true), Decision::Wait);
+        assert_eq!(p.decide_urgent(5, 0, young, true), Decision::Wait);
     }
 
     #[test]

@@ -26,4 +26,4 @@ pub use gate::Routing;
 pub use kv_cache::KvCacheGroup;
 pub use placement::{LayerPlacement, Placement};
 pub use rebalance::Rebalancer;
-pub use router::{Limits, Request, Response, Router};
+pub use router::{Limits, Request, Response, Router, Submission};

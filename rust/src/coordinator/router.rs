@@ -1,16 +1,26 @@
-//! Request router: admission control and the inbound queue.
+//! Request router: admission control and the inbound queues.
 //!
 //! The serving stack's front door — validates requests against model
-//! limits, assigns ids, timestamps arrivals, and exposes the FIFO the
+//! limits, assigns ids, timestamps arrivals, and exposes the queues the
 //! batcher drains.  Owned by the engine-agnostic `server::Scheduler`, one
 //! instance per serving stack regardless of backend.  (The cross-GPU
 //! "routing" of tokens to experts is `gate.rs`/`alltoall.rs`; this module
 //! routes *requests*.)
+//!
+//! PR 9 makes the front door SLO-aware: one FIFO per priority *tier*
+//! (higher tier = more urgent; tier 0 is batch/background), drained
+//! highest-tier-first, plus a bounded-queue backpressure policy
+//! ([`crate::config::ShedPolicy`]) so a burst from one tenant sheds load
+//! instead of growing an unbounded backlog.  All of it is inert by
+//! default: `submit` enqueues at tier 0 with no cap, which is exactly the
+//! old single-FIFO behavior.
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+use crate::config::ShedPolicy;
 
 /// An admitted generation request.
 #[derive(Debug, Clone)]
@@ -19,6 +29,11 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub arrival: Instant,
+    /// Priority tier: 0 = batch/background, higher = more urgent.
+    pub tier: u8,
+    /// Optional TTFT deadline relative to `arrival` (reporting only —
+    /// the scheduler counts misses per tier, it never drops late work).
+    pub deadline: Option<Duration>,
 }
 
 /// Completed generation.
@@ -31,6 +46,8 @@ pub struct Response {
     pub ttft: std::time::Duration,
     /// Time from arrival to completion.
     pub total: std::time::Duration,
+    /// Priority tier the request was submitted at.
+    pub tier: u8,
 }
 
 /// Admission limits (derived from the model + serving config).
@@ -41,27 +58,78 @@ pub struct Limits {
     pub default_max_new: usize,
 }
 
+/// Outcome of a valid submission under backpressure: either enqueued
+/// (with the assigned id) or shed at the front door.  Invalid requests
+/// (bad prompt / limits) still surface as `Err` — shedding is a load
+/// decision, not a validation failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Submission {
+    Queued(u64),
+    Shed,
+}
+
 #[derive(Debug)]
 pub struct Router {
     limits: Limits,
     next_id: u64,
-    queue: VecDeque<Request>,
+    /// One FIFO per tier, indexed by tier, grown on demand.
+    queues: Vec<VecDeque<Request>>,
+    /// Per-tier cap (0 = unbounded, the default).
+    queue_cap: usize,
+    shed_policy: ShedPolicy,
     pub admitted: u64,
     pub rejected: u64,
+    /// Valid submissions turned away (or displaced) by backpressure.
+    pub shed: u64,
 }
 
 impl Router {
     pub fn new(limits: Limits) -> Self {
-        Router { limits, next_id: 1, queue: VecDeque::new(), admitted: 0,
-                 rejected: 0 }
+        Router {
+            limits,
+            next_id: 1,
+            queues: vec![VecDeque::new()],
+            queue_cap: 0,
+            shed_policy: ShedPolicy::Reject,
+            admitted: 0,
+            rejected: 0,
+            shed: 0,
+        }
     }
 
-    /// Validate + enqueue.  Returns the assigned request id.
+    /// Enable bounded per-tier queues (`DSMOE_QUEUE_CAP` > 0) with the
+    /// given overflow policy.  `cap == 0` keeps queues unbounded.
+    pub fn set_backpressure(&mut self, cap: usize, policy: ShedPolicy) {
+        self.queue_cap = cap;
+        self.shed_policy = policy;
+    }
+
+    /// Validate + enqueue at tier 0 with no deadline — the legacy FIFO
+    /// front door.  Returns the assigned request id; backpressure shed
+    /// surfaces as an error here (callers that want to distinguish shed
+    /// from invalid use [`Router::submit_tiered`]).
     pub fn submit(
         &mut self,
         prompt: Vec<i32>,
         max_new_tokens: Option<usize>,
     ) -> Result<u64> {
+        match self.submit_tiered(prompt, max_new_tokens, 0, None)? {
+            Submission::Queued(id) => Ok(id),
+            Submission::Shed => bail!("request shed: tier 0 queue full"),
+        }
+    }
+
+    /// Validate + enqueue at an explicit tier with an optional TTFT
+    /// deadline.  `Err` means the request itself was invalid;
+    /// `Ok(Submission::Shed)` means it was valid but turned away (or, under
+    /// `DropOldest`, enqueued by displacing the tier's oldest waiter).
+    pub fn submit_tiered(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new_tokens: Option<usize>,
+        tier: u8,
+        deadline: Option<Duration>,
+    ) -> Result<Submission> {
         let max_new = max_new_tokens.unwrap_or(self.limits.default_max_new);
         if prompt.is_empty() {
             self.rejected += 1;
@@ -81,35 +149,93 @@ impl Router {
             self.rejected += 1;
             bail!("token {bad} outside vocab {}", self.limits.vocab_size);
         }
+        let ti = tier as usize;
+        if self.queues.len() <= ti {
+            self.queues.resize_with(ti + 1, VecDeque::new);
+        }
+        if self.queue_cap > 0 && self.queues[ti].len() >= self.queue_cap {
+            match self.shed_policy {
+                ShedPolicy::Reject => {
+                    self.shed += 1;
+                    return Ok(Submission::Shed);
+                }
+                ShedPolicy::DropOldest => {
+                    // Displace the stalest same-tier waiter; the new
+                    // arrival takes its slot below.
+                    self.queues[ti].pop_front();
+                    self.shed += 1;
+                }
+            }
+        }
         let id = self.next_id;
         self.next_id += 1;
         self.admitted += 1;
-        self.queue.push_back(Request {
+        self.queues[ti].push_back(Request {
             id,
             prompt,
             max_new_tokens: max_new,
             arrival: Instant::now(),
+            tier,
+            deadline,
         });
-        Ok(id)
+        Ok(Submission::Queued(id))
+    }
+
+    /// Put a preempted request back at the *head* of its tier's queue so
+    /// it is the next admission from that tier.  Bypasses validation and
+    /// the queue cap: the request was already admitted once and its
+    /// partial work (generated prefix folded into `prompt`) must not be
+    /// shed.
+    pub fn requeue_front(&mut self, req: Request) {
+        let ti = req.tier as usize;
+        if self.queues.len() <= ti {
+            self.queues.resize_with(ti + 1, VecDeque::new);
+        }
+        self.queues[ti].push_front(req);
     }
 
     pub fn queue_len(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    /// Waiting count for one tier (0 for tiers never submitted to).
+    pub fn queue_len_tier(&self, tier: u8) -> usize {
+        self.queues.get(tier as usize).map_or(0, VecDeque::len)
+    }
+
+    /// Highest tier with at least one waiter.
+    pub fn highest_waiting_tier(&self) -> Option<u8> {
+        (0..self.queues.len())
+            .rev()
+            .find(|&t| !self.queues[t].is_empty())
+            .map(|t| t as u8)
     }
 
     pub fn pop(&mut self) -> Option<Request> {
-        self.queue.pop_front()
+        let t = self.highest_waiting_tier()? as usize;
+        self.queues[t].pop_front()
     }
 
-    /// Pop up to `n` requests (batch formation).
+    /// Pop up to `n` requests (batch formation): highest tier first,
+    /// FIFO within a tier.
     pub fn pop_up_to(&mut self, n: usize) -> Vec<Request> {
-        let take = n.min(self.queue.len());
-        self.queue.drain(..take).collect()
+        let mut out = Vec::with_capacity(n.min(self.queue_len()));
+        while out.len() < n {
+            match self.pop() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
     }
 
-    /// Age of the oldest waiting request (drives batching timeout).
+    /// Age of the oldest waiting request across all tiers (drives the
+    /// batching timeout).
     pub fn oldest_wait(&self) -> Option<std::time::Duration> {
-        self.queue.front().map(|r| r.arrival.elapsed())
+        self.queues
+            .iter()
+            .filter_map(|q| q.front().map(|r| r.arrival.elapsed()))
+            .max()
     }
 }
 
@@ -165,5 +291,93 @@ mod tests {
         r.submit(vec![1], None).unwrap();
         std::thread::sleep(std::time::Duration::from_millis(2));
         assert!(r.oldest_wait().unwrap().as_micros() >= 2000);
+    }
+
+    #[test]
+    fn higher_tier_drains_first_fifo_within() {
+        let mut r = Router::new(limits());
+        let a = match r.submit_tiered(vec![1], None, 0, None).unwrap() {
+            Submission::Queued(id) => id,
+            Submission::Shed => panic!("shed"),
+        };
+        let b = match r.submit_tiered(vec![2], None, 1, None).unwrap() {
+            Submission::Queued(id) => id,
+            Submission::Shed => panic!("shed"),
+        };
+        let c = match r.submit_tiered(vec![3], None, 1, None).unwrap() {
+            Submission::Queued(id) => id,
+            Submission::Shed => panic!("shed"),
+        };
+        assert_eq!(r.highest_waiting_tier(), Some(1));
+        assert_eq!(r.queue_len_tier(1), 2);
+        // Tier 1 drains first (FIFO within), then tier 0.
+        assert_eq!(r.pop().unwrap().id, b);
+        assert_eq!(r.pop().unwrap().id, c);
+        assert_eq!(r.pop().unwrap().id, a);
+        assert!(r.highest_waiting_tier().is_none());
+    }
+
+    #[test]
+    fn reject_policy_sheds_new_arrival() {
+        let mut r = Router::new(limits());
+        r.set_backpressure(2, ShedPolicy::Reject);
+        for t in 0..2 {
+            assert!(matches!(
+                r.submit_tiered(vec![10 + t], None, 0, None).unwrap(),
+                Submission::Queued(_)
+            ));
+        }
+        // Queue full: the third valid submission is shed, not an error.
+        assert_eq!(
+            r.submit_tiered(vec![12], None, 0, None).unwrap(),
+            Submission::Shed
+        );
+        assert_eq!(r.shed, 1);
+        assert_eq!(r.queue_len(), 2);
+        // Another tier has its own headroom.
+        assert!(matches!(
+            r.submit_tiered(vec![13], None, 1, None).unwrap(),
+            Submission::Queued(_)
+        ));
+        // Accounting: every valid submission is either queued or shed.
+        assert_eq!(r.admitted + r.shed, 4);
+        // And the legacy front door surfaces shed as an error.
+        r.submit(vec![14], None).unwrap();
+        assert!(r.submit(vec![15], None).is_err());
+    }
+
+    #[test]
+    fn drop_oldest_policy_displaces_head() {
+        let mut r = Router::new(limits());
+        r.set_backpressure(2, ShedPolicy::DropOldest);
+        r.submit_tiered(vec![1], None, 0, None).unwrap();
+        r.submit_tiered(vec![2], None, 0, None).unwrap();
+        // Full: the oldest waiter (prompt [1]) is displaced, the new
+        // arrival is queued.
+        let s = r.submit_tiered(vec![3], None, 0, None).unwrap();
+        assert!(matches!(s, Submission::Queued(_)));
+        assert_eq!(r.shed, 1);
+        assert_eq!(r.queue_len(), 2);
+        assert_eq!(r.pop().unwrap().prompt, vec![2]);
+        assert_eq!(r.pop().unwrap().prompt, vec![3]);
+    }
+
+    #[test]
+    fn requeue_front_is_next_out_and_ignores_cap() {
+        let mut r = Router::new(limits());
+        r.set_backpressure(1, ShedPolicy::Reject);
+        r.submit_tiered(vec![1], None, 0, None).unwrap();
+        let preempted = Request {
+            id: 99,
+            prompt: vec![7, 8],
+            max_new_tokens: 4,
+            arrival: Instant::now(),
+            tier: 0,
+            deadline: None,
+        };
+        r.requeue_front(preempted);
+        assert_eq!(r.queue_len(), 2); // cap bypassed
+        assert_eq!(r.pop().unwrap().id, 99); // head of its tier
+        assert_eq!(r.pop().unwrap().prompt, vec![1]);
     }
 }

@@ -11,11 +11,14 @@
 
 use anyhow::{Context, Result};
 
-use ds_moe::config::{AllToAllKind, ServingConfig};
+use ds_moe::config::{AllToAllKind, ServingConfig, ShedPolicy};
+use ds_moe::coordinator::Response;
 use ds_moe::data::{Corpus, CorpusConfig, EvalSuite};
 use ds_moe::fabric::TransportKind;
 use ds_moe::runtime::{Dtype, Manifest};
-use ds_moe::server::{ttft_percentile, Engine, EpEngine, Scheduler};
+use ds_moe::server::{
+    tpot_percentile, ttft_percentile, Engine, EpEngine, Scheduler,
+};
 use ds_moe::simulator;
 use ds_moe::training::{Distiller, KdMode, LrSchedule, Trainer};
 use ds_moe::util::args::Args;
@@ -180,6 +183,28 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         args.get_usize("requests", 16, "requests (request-driven mode)");
     let rate = args.get_f64("rate", 100.0, "Poisson arrival rate, req/s");
     let max_new = args.get_usize("max-new", 8, "tokens per request");
+    // SLO-aware serving toggles (all default-off; flag defaults come from
+    // the env-seeded ServingConfig so the env toggles work bare).
+    let prefill_chunk = args.get_usize(
+        "prefill-chunk",
+        ServingConfig::default().prefill_chunk,
+        "chunked prefill: prompt-token budget an admission may advance per \
+         decode step, 0 = off (DSMOE_PREFILL_CHUNK)",
+    );
+    let queue_cap = args.get_usize(
+        "queue-cap",
+        ServingConfig::default().queue_cap,
+        "bounded per-tier admission queues, 0 = unbounded (DSMOE_QUEUE_CAP)",
+    );
+    let shed_policy = args.get(
+        "shed-policy", "",
+        "full-queue shedding: reject|drop-oldest (default: DSMOE_SHED_POLICY)",
+    );
+    let tiers = args.get_usize(
+        "tiers", 1,
+        "priority tiers: request i gets tier i % tiers (tier 0 = batch, \
+         higher = interactive, preempts); 1 = single-tier FIFO",
+    );
     if args.has("help") {
         eprint!("{}", args.usage("ds-moe ep-serve"));
         return Ok(());
@@ -244,6 +269,11 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
 
     // Request-driven continuous batching: Poisson-ish open-loop arrivals
     // through the engine-agnostic scheduler.
+    let shed_policy: ShedPolicy = if shed_policy.is_empty() {
+        ShedPolicy::from_env()
+    } else {
+        shed_policy.parse()?
+    };
     let serving = ServingConfig {
         model: model.clone(),
         workers,
@@ -252,23 +282,34 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         alltoall: a2a,
         pipe_depth,
         leader_threads,
+        prefill_chunk,
+        queue_cap,
+        shed_policy,
         ..Default::default()
     };
     let mut sched = Scheduler::new(ep, serving);
     let plen = 8usize;
-    let (responses, wall) = sched
-        .run_poisson(n_requests, rate, max_new, 7, |i| {
+    let (responses, wall) = if tiers > 1 {
+        run_poisson_tiered(&mut sched, n_requests, rate, max_new, tiers, |i| {
             corpus.prompt(i, plen)
-        })?;
+        })?
+    } else {
+        sched.run_poisson(n_requests, rate, max_new, 7, |i| {
+            corpus.prompt(i, plen)
+        })?
+    };
     let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
     println!(
         "{} responses / {tokens} tokens in {wall:.3}s ({:.1} tok/s), \
-         TTFT p50 {} p99 {}",
+         TTFT p50 {} p99 {}, TPOT p50 {} p99 {}",
         responses.len(),
         tokens as f64 / wall,
         fmt_ns(ttft_percentile(&responses, 50)),
         fmt_ns(ttft_percentile(&responses, 99)),
+        fmt_ns(tpot_percentile(&responses, 50)),
+        fmt_ns(tpot_percentile(&responses, 99)),
     );
+    tier_report(&sched.metrics, &responses);
     println!(
         "lane occupancy: {:.1}% mean over {} decode steps; \
          exposed pipeline bubble {}, prefill stall {} \
@@ -282,6 +323,89 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
     ep_report(&sched.model);
     println!("--- metrics ---\n{}", sched.metrics.report());
     Ok(())
+}
+
+/// `Scheduler::run_poisson` with tiered submission: request `i` gets tier
+/// `i % tiers`, so a `--tiers 2` run interleaves batch (tier 0) and
+/// interactive (tier 1) traffic on the same arrival process.  Shed
+/// requests (bounded queues) simply never produce a response.
+fn run_poisson_tiered<M, F>(
+    sched: &mut Scheduler<M>,
+    n: usize,
+    rate: f64,
+    max_new: usize,
+    tiers: usize,
+    mut prompt: F,
+) -> Result<(Vec<Response>, f64)>
+where
+    M: ds_moe::server::ForwardModel,
+    F: FnMut(usize) -> Vec<i32>,
+{
+    let mut rng = ds_moe::util::rng::Rng::new(7);
+    let mut arrivals = Vec::with_capacity(n);
+    let mut t_acc = 0.0;
+    for _ in 0..n {
+        t_acc += rng.exponential(rate);
+        arrivals.push(t_acc);
+    }
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    while submitted < n
+        || sched.active_count() > 0
+        || sched.queue_len() > 0
+        || sched.admission_in_flight()
+    {
+        let now = t0.elapsed().as_secs_f64();
+        while submitted < n && arrivals[submitted] <= now {
+            let tier = (submitted % tiers) as u8;
+            sched.submit_tiered(prompt(submitted), Some(max_new), tier,
+                                None)?;
+            submitted += 1;
+        }
+        if !sched.step()? {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+    Ok((sched.take_done(), t0.elapsed().as_secs_f64()))
+}
+
+/// Per-tier TTFT/TPOT/shed/preemption breakdown; silent for plain
+/// single-tier FIFO runs with nothing shed or preempted.
+fn tier_report(metrics: &ds_moe::metrics::Metrics, responses: &[Response]) {
+    let mut tiers: Vec<u8> = responses.iter().map(|r| r.tier).collect();
+    tiers.sort_unstable();
+    tiers.dedup();
+    let shed = metrics.counter("requests_shed");
+    let preempted = metrics.counter("preemptions");
+    if tiers.len() <= 1 && shed == 0 && preempted == 0 {
+        return;
+    }
+    for t in tiers {
+        let rs: Vec<Response> = responses
+            .iter()
+            .filter(|r| r.tier == t)
+            .cloned()
+            .collect();
+        println!(
+            "  tier {t}: {} done, TTFT p50 {} p99 {}, TPOT p50 {} p99 {}, \
+             shed {}, preempted {}, deadline misses {}",
+            rs.len(),
+            fmt_ns(ttft_percentile(&rs, 50)),
+            fmt_ns(ttft_percentile(&rs, 99)),
+            fmt_ns(tpot_percentile(&rs, 50)),
+            fmt_ns(tpot_percentile(&rs, 99)),
+            metrics.counter(&format!("shed_t{t}")),
+            metrics.counter(&format!("preempted_t{t}")),
+            metrics.counter(&format!("deadline_miss_t{t}")),
+        );
+    }
+    if shed + preempted > 0 {
+        println!(
+            "  backpressure: {shed} shed; {preempted} preemptions, \
+             {} resumed",
+            metrics.counter("resumed"),
+        );
+    }
 }
 
 /// The legacy fixed-lane driver: one full-batch prefill, then `steps`
@@ -471,8 +595,10 @@ fn cmd_eval(mut args: Args) -> Result<()> {
 }
 
 fn cmd_simulate(mut args: Args) -> Result<()> {
-    let what = args.get("figure", "fig10",
-                        "fig10|fig11|fig12|fig13|fig14|fig15|table3");
+    let what = args.get(
+        "figure", "fig10",
+        "fig10|fig11|fig12|fig13|fig14|fig15|table3|calibrated",
+    );
     if args.has("help") {
         eprint!("{}", args.usage("ds-moe simulate"));
         return Ok(());

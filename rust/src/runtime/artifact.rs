@@ -143,6 +143,45 @@ impl Capabilities {
     }
 }
 
+/// Build provenance stamped into the manifest by `aot.py` (schema v2):
+/// a digest of the compiler configuration (model registry, shape
+/// ladders, capability flags) and a digest of the compiler sources
+/// themselves.  When the block is present, both fields are verified to
+/// be well-formed SHA-256 hex on load — a truncated or hand-edited stamp
+/// fails loudly instead of silently comparing unequal forever.  Older
+/// manifests without the block load fine (`provenance: None`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Provenance {
+    /// SHA-256 over the canonicalized compiler configuration.
+    pub compiler_config_sha256: String,
+    /// SHA-256 over the sorted `python/compile/*.py` sources.
+    pub source_digest: String,
+}
+
+impl Provenance {
+    fn from_json(j: &Json) -> Result<Self> {
+        let hex = |field: &str| -> Result<String> {
+            let v = j
+                .req(field)?
+                .as_str()
+                .with_context(|| {
+                    format!("provenance.{field} must be a string")
+                })?
+                .to_string();
+            anyhow::ensure!(
+                v.len() == 64 && v.bytes().all(|b| b.is_ascii_hexdigit()),
+                "provenance.{field} must be 64 hex chars (SHA-256), \
+                 got {v:?}"
+            );
+            Ok(v.to_ascii_lowercase())
+        };
+        Ok(Provenance {
+            compiler_config_sha256: hex("compiler_config_sha256")?,
+            source_digest: hex("source_digest")?,
+        })
+    }
+}
+
 /// Parameter layout entry (checkpoint ABI).
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
@@ -170,6 +209,8 @@ pub struct Manifest {
     pub schema_version: usize,
     /// Dtype capabilities (f32-only for v1 manifests).
     pub capabilities: Capabilities,
+    /// Compiler provenance stamp (absent in pre-stamp manifests).
+    pub provenance: Option<Provenance>,
     pub models: BTreeMap<String, ModelArtifacts>,
     pub shared: BTreeMap<String, ProgramSpec>,
 }
@@ -199,6 +240,10 @@ impl Manifest {
         let capabilities = match j.get("capabilities") {
             Some(c) => Capabilities::from_json(c).context("capabilities")?,
             None => Capabilities::default(),
+        };
+        let provenance = match j.get("provenance") {
+            Some(p) => Some(Provenance::from_json(p).context("provenance")?),
+            None => None,
         };
 
         let mut models = BTreeMap::new();
@@ -254,7 +299,14 @@ impl Manifest {
             );
         }
 
-        Ok(Manifest { root, schema_version, capabilities, models, shared })
+        Ok(Manifest {
+            root,
+            schema_version,
+            capabilities,
+            provenance,
+            models,
+            shared,
+        })
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
@@ -447,6 +499,74 @@ mod tests {
         assert_eq!(m.schema_version, 2);
         assert!(m.capabilities.supports_expert_dtype("int8"));
         assert!(m.capabilities.supports_wire_dtype("f16"));
+    }
+
+    #[test]
+    fn provenance_parses_and_normalizes() {
+        let good = "a".repeat(64);
+        let m = load_snippet(
+            "prov",
+            &format!(
+                r#"{{"schema_version": 2,
+                    "provenance": {{
+                      "compiler_config_sha256": "{}",
+                      "source_digest": "{}"}},
+                    "models": {{}}, "shared": {{}}}}"#,
+                good,
+                good.to_uppercase(),
+            ),
+        )
+        .unwrap();
+        let p = m.provenance.unwrap();
+        assert_eq!(p.compiler_config_sha256, good);
+        // hex is case-normalized so stamps compare reliably
+        assert_eq!(p.source_digest, good);
+
+        // absent block: fine, None
+        let m = load_snippet(
+            "prov_none",
+            r#"{"schema_version": 2, "models": {}, "shared": {}}"#,
+        )
+        .unwrap();
+        assert!(m.provenance.is_none());
+    }
+
+    #[test]
+    fn malformed_provenance_fails_loudly() {
+        // truncated digest
+        let err = load_snippet(
+            "prov_short",
+            r#"{"schema_version": 2,
+                "provenance": {"compiler_config_sha256": "abc123",
+                               "source_digest": "abc123"},
+                "models": {}, "shared": {}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("64 hex"), "{err:#}");
+
+        // non-hex characters at the right length
+        let bad = "z".repeat(64);
+        let err = load_snippet(
+            "prov_nonhex",
+            &format!(
+                r#"{{"schema_version": 2,
+                    "provenance": {{"compiler_config_sha256": "{bad}",
+                                   "source_digest": "{bad}"}},
+                    "models": {{}}, "shared": {{}}}}"#,
+            ),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("64 hex"), "{err:#}");
+
+        // missing field
+        let err = load_snippet(
+            "prov_missing",
+            r#"{"schema_version": 2,
+                "provenance": {"compiler_config_sha256": "00"},
+                "models": {}, "shared": {}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("provenance"), "{err:#}");
     }
 
     #[test]

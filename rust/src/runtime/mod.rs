@@ -17,8 +17,8 @@ pub mod client;
 pub mod host_tensor;
 
 pub use artifact::{
-    Capabilities, Manifest, ModelArtifacts, ProgramSpec, TensorSpec,
-    SCHEMA_VERSION,
+    Capabilities, Manifest, ModelArtifacts, ProgramSpec, Provenance,
+    TensorSpec, SCHEMA_VERSION,
 };
 pub use checkpoint::Checkpoint;
 pub use client::{Program, Runtime, SharedArtifacts};

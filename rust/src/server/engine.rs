@@ -125,6 +125,20 @@ impl ForwardModel for Engine {
         &self.cfg
     }
 
+    fn configure(&mut self, serving: &crate::config::ServingConfig) {
+        // The monolithic engine's prefill is one fused program — there is
+        // no per-layer seam to chunk an admission across, so a requested
+        // chunk budget cannot apply here (the scheduler's default
+        // stop-the-world path stays in effect, which is also what an
+        // unset budget means).
+        if serving.prefill_chunk > 0 {
+            eprintln!(
+                "[serve] DSMOE_PREFILL_CHUNK has no effect on the \
+                 monolithic engine (fused prefill program)"
+            );
+        }
+    }
+
     fn metrics(&self) -> std::sync::Arc<Metrics> {
         self.metrics.clone()
     }

@@ -183,6 +183,20 @@
 //! |                       | widen, compute f32, and reply in the wire    |
 //! |                       | dtype ([`EpEngine::set_wire_dtype`]).  The   |
 //! |                       | serialized baseline stays f32 either way.    |
+//! | `DSMOE_PREFILL_CHUNK` | chunked prefill: prompt-token budget a       |
+//! |                       | staged admission may advance per decode step |
+//! |                       | (`ceil(budget / live prompt tokens)` layers  |
+//! |                       | per step, at least 1), so a huge prompt's    |
+//! |                       | admission spreads over several decode steps. |
+//! |                       | Default 0 = off — the admission completes    |
+//! |                       | behind one decode step, the pre-chunking     |
+//! |                       | behavior ([`EpEngine::set_prefill_chunk`]).  |
+//! | `DSMOE_QUEUE_CAP`     | scheduler front door: bounded per-tier       |
+//! |                       | admission queues (0 = unbounded, default).   |
+//! |                       | Enforced by the router, not this engine.     |
+//! | `DSMOE_SHED_POLICY`   | `reject` (default) sheds the overflowing new |
+//! |                       | arrival; `drop-oldest` sheds the tier's      |
+//! |                       | stalest waiter instead.  Router-level.       |
 //!
 //! All paths — serial, overlapped, pipelined at any depth, single- or
 //! multi-threaded leader — produce **bit-identical** logits for prefill
@@ -263,6 +277,19 @@ pub struct EpEngine {
     /// `DSMOE_NO_INTERLEAVE` (inverted): admission prefills run behind
     /// in-flight decode exchanges instead of stopping the world.
     interleave: bool,
+    /// `DSMOE_PREFILL_CHUNK`: prompt-token budget a staged admission may
+    /// advance per decode step (0 = off: the admission completes behind a
+    /// single decode step, the pre-chunking behavior).  With a budget, a
+    /// large admission spreads across as many decode steps as it needs —
+    /// `ceil(budget / live prompt tokens)` layers per step — so one giant
+    /// prompt no longer monopolizes the lane group's step time.
+    prefill_chunk: usize,
+    /// Hidden-advance budget for the decode step in flight: how many more
+    /// admission layers the prefill-behind-decode sites may run this step
+    /// (`usize::MAX` when chunking is off — never throttle).  Reset by
+    /// `decode_step`; `complete_admission` is exempt (it drains whatever
+    /// remains).
+    admission_allowance: usize,
     /// Live-lane skew (max − min per group) that triggers a regroup
     /// (`DSMOE_REGROUP_SKEW`, default 2).
     regroup_skew: usize,
@@ -776,6 +803,11 @@ impl EpEngine {
             active_depth: 1,
             interleave: !std::env::var_os("DSMOE_NO_INTERLEAVE")
                 .is_some_and(|v| v != "0"),
+            prefill_chunk: crate::util::env_usize_off(
+                "DSMOE_PREFILL_CHUNK",
+                0,
+            ),
+            admission_allowance: usize::MAX,
             regroup_skew: env_pos_usize("DSMOE_REGROUP_SKEW", 2),
             replicate_hot,
             rebalance_skew: env_pos_f64("DSMOE_REBALANCE_SKEW", 2.0)
@@ -879,6 +911,20 @@ impl EpEngine {
 
     pub fn interleave(&self) -> bool {
         self.interleave
+    }
+
+    /// Prompt-token budget a staged admission may advance per decode step
+    /// (defaults to `DSMOE_PREFILL_CHUNK`; 0 = off — the admission
+    /// completes behind a single decode step).  Chunking needs the
+    /// interleaved admission seam, so it has no effect when
+    /// `DSMOE_NO_INTERLEAVE` / `DSMOE_SERIAL_MOE` force the
+    /// stop-the-world path.
+    pub fn set_prefill_chunk(&mut self, tokens: usize) {
+        self.prefill_chunk = tokens;
+    }
+
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
     }
 
     /// Live-lane skew (max − min across groups) that triggers a dynamic
@@ -1470,9 +1516,10 @@ impl EpEngine {
                 }
                 ring.push_back((mb, fl));
                 // Prefill-behind-decode: a staged admission advances one
-                // layer while this step's exchange is on the fabric.
+                // layer while this step's exchange is on the fabric
+                // (throttled by the chunked-prefill budget, if any).
                 if matches!(ctx, PipeCtx::Decode(_)) {
-                    self.advance_admission(1)?;
+                    self.advance_admission_hidden()?;
                 }
                 // Opportunistic drain: replies already arrived for the
                 // next entry to finish shorten its eventual bubble.
@@ -1757,8 +1804,9 @@ impl EpEngine {
                         });
                         if decode {
                             // Prefill-behind-decode: a staged admission
-                            // advances one layer behind this exchange.
-                            self.advance_admission(1)?;
+                            // advances one layer behind this exchange
+                            // (throttled by the chunk budget, if any).
+                            self.advance_admission_hidden()?;
                         }
                     }
                     Ok(ShardEvent::PrefillDone { shard, rows: r })
@@ -2409,6 +2457,40 @@ impl EpEngine {
         Ok(())
     }
 
+    /// [`EpEngine::advance_admission`] as called from the
+    /// prefill-behind-decode sites, throttled by the chunked-prefill
+    /// budget: with `DSMOE_PREFILL_CHUNK` off the allowance is
+    /// `usize::MAX` and this is exactly `advance_admission(1)`; with a
+    /// budget, each decode step spends at most its allowance
+    /// ([`EpEngine::admission_allowance_layers`]) and the admission
+    /// spills into later steps.
+    fn advance_admission_hidden(&mut self) -> Result<()> {
+        if self.admission_allowance == 0 {
+            return Ok(());
+        }
+        if self.admission_allowance != usize::MAX {
+            self.admission_allowance -= 1;
+        }
+        self.advance_admission(1)
+    }
+
+    /// Admission layers one decode step may hide under the chunk budget:
+    /// `ceil(prefill_chunk / live prompt tokens)`, at least 1 so every
+    /// step makes progress even when one prompt exceeds the budget.
+    /// `usize::MAX` (no throttle) when chunking is off or nothing is
+    /// staged.
+    fn admission_allowance_layers(&self) -> usize {
+        if self.prefill_chunk == 0 {
+            return usize::MAX;
+        }
+        let Some(st) = &self.pending_admission else {
+            return usize::MAX;
+        };
+        let live_tokens: usize =
+            st.lens[..st.live].iter().sum::<usize>().max(1);
+        self.prefill_chunk.div_ceil(live_tokens).max(1)
+    }
+
     /// One admission-prefill layer: attention, then dispatch + finish on
     /// the dedicated admission scratch slot.  Replies of any concurrently
     /// open decode exchange arriving during the `prefill_stall` wait are
@@ -2606,8 +2688,9 @@ impl EpEngine {
             self.moe_dispatch_in(layer, h, 0, "expert_wait", None, mask)?;
         // Prefill-behind-decode on the per-layer overlapped path: a
         // staged admission advances one layer while this exchange is on
-        // the fabric (no-op outside scheduler-backed decode).
-        self.advance_admission(1)?;
+        // the fabric (no-op outside scheduler-backed decode; throttled by
+        // the chunked-prefill budget, if any).
+        self.advance_admission_hidden()?;
         self.moe_finish(inflight)
     }
 
@@ -2931,6 +3014,7 @@ impl ForwardModel for EpEngine {
     fn configure(&mut self, serving: &crate::config::ServingConfig) {
         self.set_pipe_depth(serving.pipe_depth);
         self.set_leader_threads(serving.leader_threads);
+        self.set_prefill_chunk(serving.prefill_chunk);
     }
 
     fn metrics(&self) -> Arc<Metrics> {
@@ -2988,6 +3072,24 @@ impl ForwardModel for EpEngine {
         self.complete_admission()
     }
 
+    fn prefill_pending(&self) -> bool {
+        // Only chunked admissions report pending work: without a budget
+        // the staged admission completes behind the single interleaved
+        // decode step, exactly the pre-chunking contract.
+        self.prefill_chunk > 0
+            && self
+                .pending_admission
+                .as_ref()
+                .is_some_and(|st| st.layer < self.cfg.n_layers)
+    }
+
+    fn advance_prefill(&mut self) -> Result<()> {
+        // One chunk directly — no decode forward to hide it behind
+        // (every lane idle), so the budget is the step.
+        let layers = self.admission_allowance_layers();
+        self.advance_admission(layers.min(self.cfg.n_layers))
+    }
+
     fn decode_step(
         &mut self,
         tokens: &[i32],
@@ -2995,6 +3097,9 @@ impl ForwardModel for EpEngine {
     ) -> Result<Vec<Vec<f32>>> {
         let b = self.batch;
         anyhow::ensure!(tokens.len() == b && pos.len() == b, "lane shape");
+        // Fresh hidden-advance budget for this step's chunked admission
+        // (usize::MAX — no throttle — when chunking is off).
+        self.admission_allowance = self.admission_allowance_layers();
         // Rebalance live lanes across the groups if retirement skewed the
         // occupancy (before the forward, so this step already runs even).
         self.maybe_regroup()?;

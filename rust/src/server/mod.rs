@@ -120,6 +120,22 @@
 //! |                        | hierarchical schedules; replies come back   |
 //! |                        | in the wire dtype and are widened at        |
 //! |                        | combine.  Gated on the capability flags.    |
+//! | `DSMOE_PREFILL_CHUNK`  | prompt-token budget a staged admission may  |
+//! |                        | advance per decode step (chunked prefill):  |
+//! |                        | a large prompt's admission spreads across   |
+//! |                        | several decode steps instead of stalling    |
+//! |                        | the lanes for its whole prefill.  Default 0 |
+//! |                        | = off (admission completes behind a single  |
+//! |                        | decode step).  EP engine only — the         |
+//! |                        | monolithic fused prefill has no layer seam. |
+//! | `DSMOE_QUEUE_CAP`      | bounded per-tier admission queues: a valid  |
+//! |                        | submission to a full tier queue is *shed*   |
+//! |                        | (backpressure), counted per tier.  Default  |
+//! |                        | 0 = unbounded (no shedding).                |
+//! | `DSMOE_SHED_POLICY`    | what a full tier queue sheds: `reject` (the |
+//! |                        | new arrival, default) or `drop-oldest` (the |
+//! |                        | tier's stalest waiter — the new arrival     |
+//! |                        | takes its slot).                            |
 
 pub mod engine;
 pub mod ep;
@@ -128,4 +144,6 @@ pub(crate) mod shard;
 
 pub use engine::Engine;
 pub use ep::{EpEngine, InflightMoe};
-pub use scheduler::{ttft_percentile, AdmittedLane, ForwardModel, Scheduler};
+pub use scheduler::{
+    tpot_percentile, ttft_percentile, AdmittedLane, ForwardModel, Scheduler,
+};

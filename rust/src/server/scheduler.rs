@@ -33,6 +33,30 @@
 //! the backend's own registry, so existing dashboards and benches keep
 //! working; the scheduler adds `queue_depth` / `lanes_busy` gauges and a
 //! `decode_utilization` summary (busy lanes per decode step).
+//!
+//! # SLO-aware serving (PR 9, all default-off)
+//!
+//! * **Chunked prefill** (`ServingConfig::prefill_chunk` /
+//!   `DSMOE_PREFILL_CHUNK`): when the backend reports a staged admission
+//!   still pending after a decode step ([`ForwardModel::prefill_pending`]),
+//!   the scheduler parks the admission and keeps draining it one
+//!   token-budget chunk per step — behind further decode steps, or
+//!   directly ([`ForwardModel::advance_prefill`]) when every lane is idle
+//!   — so a 2k-token prompt no longer stalls decode lanes for its whole
+//!   prefill.
+//! * **Priority tiers + preemption**: [`Scheduler::submit_tiered`] places
+//!   a request at a priority tier (0 = batch); the router drains highest
+//!   tier first and an above-tier-0 waiter flushes partial batches
+//!   immediately (`BatchPolicy::decide_urgent`).  Under lane pressure the
+//!   longest-running lowest-tier decode is preempted: its lane released,
+//!   its generated prefix folded into the prompt, and the request
+//!   re-queued at the head of its tier — on re-admission the re-prefill
+//!   reconstructs the KV cache and the continuation is token-identical.
+//! * **Backpressure** (`ServingConfig::queue_cap` / `DSMOE_QUEUE_CAP`,
+//!   `DSMOE_SHED_POLICY`): bounded per-tier queues; valid submissions
+//!   that cannot queue are *shed* (`Submission::Shed`), counted per tier
+//!   (`shed_t{tier}`), so under the `Reject` policy
+//!   `queued + shed == submitted` holds exactly.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -41,7 +65,7 @@ use anyhow::Result;
 
 use crate::config::{ModelConfig, ServingConfig};
 use crate::coordinator::{
-    BatchPolicy, Decision, Limits, Request, Response, Router,
+    BatchPolicy, Decision, Limits, Request, Response, Router, Submission,
 };
 use crate::metrics::Metrics;
 use crate::tokenizer::EOS;
@@ -117,10 +141,32 @@ pub trait ForwardModel {
     }
 
     /// Complete the admission staged by [`ForwardModel::begin_prefill`]
-    /// (called exactly once after it returned `Ok(true)`, with one decode
-    /// step in between).
+    /// (called exactly once after it returned `Ok(true)`, once
+    /// [`ForwardModel::prefill_pending`] reports no remaining work — for
+    /// an unchunked backend that is after the single decode step in
+    /// between).
     fn finish_prefill(&mut self) -> Result<Vec<AdmittedLane>> {
         anyhow::bail!("backend has no staged admission")
+    }
+
+    /// True while a staged admission still has layer programs to run
+    /// (chunked prefill, `DSMOE_PREFILL_CHUNK`): the scheduler keeps
+    /// stepping the admission — behind further decode steps, or via
+    /// [`ForwardModel::advance_prefill`] when no lane is decoding — and
+    /// only calls [`ForwardModel::finish_prefill`] once this returns
+    /// false.  Backends without chunked admissions complete the staged
+    /// prefill behind the single interleaved decode step and never report
+    /// pending work.
+    fn prefill_pending(&self) -> bool {
+        false
+    }
+
+    /// Advance a pending chunked admission by one chunk *without* a
+    /// decode step (used when every decode lane is idle, so there is no
+    /// forward pass to hide the chunk behind).  Default: nothing is ever
+    /// pending, no-op.
+    fn advance_prefill(&mut self) -> Result<()> {
+        Ok(())
     }
 
     /// One decode step over the whole lane group.  `tokens[lane]` /
@@ -140,8 +186,21 @@ pub trait ForwardModel {
 
 struct ActiveSeq {
     request: Request,
+    /// Original prompt length.  Equals `request.prompt.len()` — kept
+    /// separately because a preempted request is briefly re-queued with
+    /// its generated prefix folded into the prompt, and position / length
+    /// bookkeeping must always use the original.
+    prompt_len: usize,
     generated: Vec<i32>,
     last_token: i32,
+    first_token_at: std::time::Instant,
+}
+
+/// Decode progress stashed when a lane is preempted, restored when the
+/// re-queued request is re-admitted (keyed by request id).
+struct ResumeState {
+    prompt_len: usize,
+    generated: Vec<i32>,
     first_token_at: std::time::Instant,
 }
 
@@ -152,6 +211,11 @@ pub struct Scheduler<M: ForwardModel> {
     policy: BatchPolicy,
     serving: ServingConfig,
     active: HashMap<usize, ActiveSeq>, // by lane
+    /// Requests whose chunked admission is mid-flight in the backend
+    /// (staged, not yet collectable) — see `step_chunked`.
+    chunked: Option<Vec<Request>>,
+    /// Preempted-lane progress awaiting re-admission, by request id.
+    resumes: HashMap<u64, ResumeState>,
     pub done: Vec<Response>,
     pub metrics: Arc<Metrics>,
     sampler: Sampler,
@@ -162,11 +226,12 @@ impl<M: ForwardModel> Scheduler<M> {
     pub fn new(mut model: M, serving: ServingConfig) -> Scheduler<M> {
         model.configure(&serving);
         let cfg = model.model_config();
-        let router = Router::new(Limits {
+        let mut router = Router::new(Limits {
             max_seq: cfg.max_seq,
             vocab_size: cfg.vocab_size,
             default_max_new: serving.max_new_tokens,
         });
+        router.set_backpressure(serving.queue_cap, serving.shed_policy);
         let max_seq = cfg.max_seq;
         let policy =
             BatchPolicy::new(model.prefill_sizes(), serving.batch_timeout);
@@ -178,6 +243,8 @@ impl<M: ForwardModel> Scheduler<M> {
             policy,
             serving,
             active: HashMap::new(),
+            chunked: None,
+            resumes: HashMap::new(),
             done: Vec::new(),
             metrics,
             sampler,
@@ -185,14 +252,46 @@ impl<M: ForwardModel> Scheduler<M> {
         }
     }
 
-    /// Validate + enqueue a request; returns its id.
+    /// Validate + enqueue a request at tier 0; returns its id.
+    /// Backpressure shed surfaces as an error here — callers that need to
+    /// distinguish shed from invalid use [`Scheduler::submit_tiered`].
     pub fn submit(
         &mut self,
         prompt: Vec<i32>,
         max_new: Option<usize>,
     ) -> Result<u64> {
+        match self.submit_tiered(prompt, max_new, 0, None)? {
+            Submission::Queued(id) => Ok(id),
+            Submission::Shed => anyhow::bail!("request shed: queue full"),
+        }
+    }
+
+    /// Validate + enqueue a request at a priority tier (0 = batch, higher
+    /// = more urgent) with an optional TTFT deadline.  `Err` = invalid
+    /// request; `Ok(Submission::Shed)` = valid but turned away by
+    /// backpressure (`ServingConfig::queue_cap`).
+    pub fn submit_tiered(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: Option<usize>,
+        tier: u8,
+        deadline: Option<std::time::Duration>,
+    ) -> Result<Submission> {
         self.metrics.inc("requests_submitted", 1);
-        self.router.submit(prompt, max_new)
+        let shed_before = self.router.shed;
+        let sub = self.router.submit_tiered(prompt, max_new, tier, deadline)?;
+        // Count sheds off the router's counter, not the Submission:
+        // under `DropOldest` a Queued outcome still displaced (shed) the
+        // tier's oldest waiter.
+        let shed = self.router.shed - shed_before;
+        if shed > 0 {
+            self.metrics.inc("requests_shed", shed);
+            self.metrics.inc(&format!("shed_t{tier}"), shed);
+        }
+        if matches!(sub, Submission::Queued(_)) {
+            self.metrics.inc(&format!("queued_t{tier}"), 1);
+        }
+        Ok(sub)
     }
 
     /// One scheduler iteration: admit a prefill batch if the policy says
@@ -206,17 +305,35 @@ impl<M: ForwardModel> Scheduler<M> {
     /// of stopping every decode lane for the whole prefill.  The `prefill`
     /// latency metric then covers only the exposed (non-hidden) tail.
     pub fn step(&mut self) -> Result<bool> {
+        if self.chunked.is_some() {
+            return self.step_chunked();
+        }
+        self.maybe_preempt();
         let free = self.model.free_lane_count();
-        let decision = self.policy.decide(
+        // An above-tier-0 waiter flushes partial batches immediately —
+        // interactive requests never idle behind the batching clock.
+        let urgent = self.router.highest_waiting_tier().unwrap_or(0) > 0;
+        let decision = self.policy.decide_urgent(
             self.router.queue_len(),
             free,
             self.router.oldest_wait(),
+            urgent,
         );
         let mut worked = false;
         // Requests whose admission is staged behind this step's decode.
         let mut staged: Option<Vec<Request>> = None;
         if let Decision::Prefill { compiled, take } = decision {
             let reqs = self.router.pop_up_to(take);
+            for req in &reqs {
+                // Queue wait per tier (fresh submissions only: a resumed
+                // request's arrival is its original submission time).
+                if !self.resumes.contains_key(&req.id) {
+                    self.metrics.observe(
+                        &format!("queue_wait_t{}", req.tier),
+                        req.arrival.elapsed(),
+                    );
+                }
+            }
             if !self.active.is_empty()
                 && self.model.begin_prefill(compiled, &reqs)?
             {
@@ -236,6 +353,41 @@ impl<M: ForwardModel> Scheduler<M> {
             worked = true;
         }
         if let Some(reqs) = staged {
+            if self.model.prefill_pending() {
+                // Chunked prefill: the staged admission ran only a
+                // token-budget slice behind this decode step.  Park it;
+                // subsequent steps keep draining it (`step_chunked`).
+                self.metrics.inc("chunked_admissions", 1);
+                self.chunked = Some(reqs);
+            } else {
+                let t = std::time::Instant::now();
+                let admitted = self.model.finish_prefill()?;
+                self.metrics.observe("prefill", t.elapsed());
+                self.metrics.inc("interleaved_admissions", 1);
+                self.register_admitted(reqs, admitted)?;
+            }
+        }
+        self.metrics.gauge("queue_depth", self.router.queue_len() as f64);
+        self.metrics.gauge("lanes_busy", self.active.len() as f64);
+        Ok(worked)
+    }
+
+    /// One scheduler iteration while a chunked admission is mid-flight:
+    /// run a decode step (the backend advances the admission by one chunk
+    /// behind it) — or advance the admission directly when every lane is
+    /// idle — then collect the admitted lanes once the backend reports no
+    /// remaining prefill work.  New admissions hold off until the
+    /// in-flight one lands (its staged lane assignments must stay valid).
+    fn step_chunked(&mut self) -> Result<bool> {
+        if self.active.is_empty() {
+            self.model.advance_prefill()?;
+        } else {
+            let t = std::time::Instant::now();
+            self.decode_once()?;
+            self.metrics.observe("decode_step", t.elapsed());
+        }
+        if !self.model.prefill_pending() {
+            let reqs = self.chunked.take().expect("chunked admission state");
             let t = std::time::Instant::now();
             let admitted = self.model.finish_prefill()?;
             self.metrics.observe("prefill", t.elapsed());
@@ -244,7 +396,56 @@ impl<M: ForwardModel> Scheduler<M> {
         }
         self.metrics.gauge("queue_depth", self.router.queue_len() as f64);
         self.metrics.gauge("lanes_busy", self.active.len() as f64);
-        Ok(worked)
+        Ok(true)
+    }
+
+    /// Under lane pressure with an above-tier waiter, evict one decode
+    /// lane: lowest tier first, longest-running within the tier (most
+    /// generated tokens — it has the most slack to its deadline and the
+    /// most opportunity to be re-admitted later).  The evicted request is
+    /// re-queued at the *head* of its tier with its generated prefix
+    /// folded into the prompt: re-prefilling that puts the KV cache back
+    /// exactly where the lane left off, so the continuation is
+    /// token-identical and no work is lost.  Inert by construction when
+    /// every request is tier 0.
+    fn maybe_preempt(&mut self) {
+        if self.active.is_empty() || self.model.free_lane_count() > 0 {
+            return;
+        }
+        let top = self.router.highest_waiting_tier().unwrap_or(0);
+        if top == 0 {
+            return;
+        }
+        let victim = self
+            .active
+            .iter()
+            .filter(|(_, seq)| seq.request.tier < top)
+            .min_by_key(|(lane, seq)| {
+                (
+                    seq.request.tier,
+                    std::cmp::Reverse(seq.generated.len()),
+                    **lane,
+                )
+            })
+            .map(|(&lane, _)| lane);
+        let Some(lane) = victim else { return };
+        let seq = self.active.remove(&lane).unwrap();
+        self.model.release(lane);
+        self.metrics.inc("preemptions", 1);
+        self.metrics
+            .inc(&format!("preempted_t{}", seq.request.tier), 1);
+        let mut req = seq.request;
+        req.prompt.truncate(seq.prompt_len);
+        req.prompt.extend_from_slice(&seq.generated);
+        self.resumes.insert(
+            req.id,
+            ResumeState {
+                prompt_len: seq.prompt_len,
+                generated: seq.generated,
+                first_token_at: seq.first_token_at,
+            },
+        );
+        self.router.requeue_front(req);
     }
 
     /// Sample each admitted request's first token and activate its lane.
@@ -262,19 +463,79 @@ impl<M: ForwardModel> Scheduler<M> {
         for (req, adm) in reqs.into_iter().zip(admitted) {
             let first = self.sampler.sample(&adm.logits);
             let now = std::time::Instant::now();
-            self.metrics.observe("ttft", now - req.arrival);
             self.metrics.inc("prefills", 1);
-            self.active.insert(
-                adm.lane,
-                ActiveSeq {
-                    request: req,
-                    generated: vec![first],
-                    last_token: first,
-                    first_token_at: now,
-                },
-            );
+            if let Some(rs) = self.resumes.remove(&req.id) {
+                // Re-admission after preemption: the generated prefix was
+                // folded into the re-queued prompt, so the admission
+                // logits sit exactly where the evicted lane would have
+                // decoded next — `first` is the continuation token.
+                let mut req = req;
+                req.prompt.truncate(rs.prompt_len);
+                let mut generated = rs.generated;
+                generated.push(first);
+                self.metrics.inc("resumed", 1);
+                self.active.insert(
+                    adm.lane,
+                    ActiveSeq {
+                        prompt_len: rs.prompt_len,
+                        request: req,
+                        generated,
+                        last_token: first,
+                        first_token_at: rs.first_token_at,
+                    },
+                );
+                // The resumed sample may already complete the request
+                // (EOS / max_new / max_seq) — retire now, exactly as the
+                // evicted lane's next decode step would have.
+                self.maybe_retire(adm.lane);
+            } else {
+                let ttft = now - req.arrival;
+                self.metrics.observe("ttft", ttft);
+                self.metrics.observe(&format!("ttft_t{}", req.tier), ttft);
+                if matches!(req.deadline, Some(d) if ttft > d) {
+                    self.metrics.inc("deadline_misses", 1);
+                    self.metrics
+                        .inc(&format!("deadline_miss_t{}", req.tier), 1);
+                }
+                self.active.insert(
+                    adm.lane,
+                    ActiveSeq {
+                        prompt_len: req.prompt.len(),
+                        request: req,
+                        generated: vec![first],
+                        last_token: first,
+                        first_token_at: now,
+                    },
+                );
+            }
         }
         Ok(())
+    }
+
+    /// Retire the lane if its sequence just hit a completion condition
+    /// (EOS, max_new, max_seq): free the lane and emit the [`Response`].
+    fn maybe_retire(&mut self, lane: usize) {
+        let Some(seq) = self.active.get(&lane) else { return };
+        let finished = seq.last_token == EOS
+            || seq.generated.len() >= seq.request.max_new_tokens
+            || seq.prompt_len + seq.generated.len() >= self.max_seq;
+        if !finished {
+            return;
+        }
+        let seq = self.active.remove(&lane).unwrap();
+        self.model.release(lane);
+        let total = seq.request.arrival.elapsed();
+        self.metrics.observe("request_total", total);
+        self.metrics.inc("requests_completed", 1);
+        self.metrics.inc("tokens_generated", seq.generated.len() as u64);
+        self.done.push(Response {
+            id: seq.request.id,
+            prompt_len: seq.prompt_len,
+            tokens: seq.generated,
+            ttft: seq.first_token_at - seq.request.arrival,
+            total,
+            tier: seq.request.tier,
+        });
     }
 
     fn decode_once(&mut self) -> Result<()> {
@@ -285,8 +546,7 @@ impl<M: ForwardModel> Scheduler<M> {
             tokens[lane] = seq.last_token;
             // Cache position of the token being decoded: prompt plus all
             // generated tokens except the one the step will produce.
-            pos[lane] =
-                (seq.request.prompt.len() + seq.generated.len() - 1) as i32;
+            pos[lane] = (seq.prompt_len + seq.generated.len() - 1) as i32;
         }
         let busy = self.active.len();
         self.metrics
@@ -307,33 +567,23 @@ impl<M: ForwardModel> Scheduler<M> {
             let seq = self.active.get_mut(&lane).unwrap();
             seq.generated.push(next);
             seq.last_token = next;
-            let finished = next == EOS
-                || seq.generated.len() >= seq.request.max_new_tokens
-                || seq.request.prompt.len() + seq.generated.len()
-                    >= self.max_seq;
-            if finished {
-                let seq = self.active.remove(&lane).unwrap();
-                self.model.release(lane);
-                let total = seq.request.arrival.elapsed();
-                self.metrics.observe("request_total", total);
-                self.metrics.inc("requests_completed", 1);
-                self.metrics
-                    .inc("tokens_generated", seq.generated.len() as u64);
-                self.done.push(Response {
-                    id: seq.request.id,
-                    prompt_len: seq.request.prompt.len(),
-                    tokens: seq.generated,
-                    ttft: seq.first_token_at - seq.request.arrival,
-                    total,
-                });
-            }
+            self.maybe_retire(lane);
         }
         Ok(())
     }
 
+    /// True while a chunked admission is mid-flight in the backend (its
+    /// requests are neither queued nor active yet).
+    pub fn admission_in_flight(&self) -> bool {
+        self.chunked.is_some()
+    }
+
     /// Drain the queue and all in-flight sequences.
     pub fn run_until_idle(&mut self) -> Result<Vec<Response>> {
-        while self.router.queue_len() > 0 || !self.active.is_empty() {
+        while self.router.queue_len() > 0
+            || !self.active.is_empty()
+            || self.admission_in_flight()
+        {
             // When only partial batches wait, sleep just until the oldest
             // request's flush deadline (capped at one timeout) instead of
             // a fixed full timeout; the floor avoids a busy spin when the
@@ -395,7 +645,10 @@ impl<M: ForwardModel> Scheduler<M> {
         }
         let t0 = std::time::Instant::now();
         let mut submitted = 0usize;
-        while submitted < n || self.active_count() > 0 || self.queue_len() > 0
+        while submitted < n
+            || self.active_count() > 0
+            || self.queue_len() > 0
+            || self.admission_in_flight()
         {
             let now = t0.elapsed().as_secs_f64();
             while submitted < n && arrivals[submitted] <= now {
@@ -420,6 +673,27 @@ pub fn ttft_percentile(responses: &[Response], q: usize) -> u64 {
         0
     } else {
         ttfts[(ttfts.len() - 1) * q / 100]
+    }
+}
+
+/// Nearest-rank TPOT (time-per-output-token) percentile (`q` in 0..=100)
+/// over completed responses, in ns/token: each response contributes its
+/// post-first-token decode time divided by its decode-token count.
+/// Single-token responses have no decode phase and are skipped; 0 when no
+/// response qualifies.
+pub fn tpot_percentile(responses: &[Response], q: usize) -> u64 {
+    let mut tpots: Vec<u64> = responses
+        .iter()
+        .filter(|r| r.tokens.len() > 1)
+        .map(|r| {
+            (r.total - r.ttft).as_nanos() as u64 / (r.tokens.len() as u64 - 1)
+        })
+        .collect();
+    tpots.sort_unstable();
+    if tpots.is_empty() {
+        0
+    } else {
+        tpots[(tpots.len() - 1) * q / 100]
     }
 }
 
@@ -654,5 +928,132 @@ mod tests {
         // first token + the EOS that retired it
         assert_eq!(r[0].tokens.len(), 2);
         assert_eq!(*r[0].tokens.last().unwrap(), EOS);
+    }
+
+    #[test]
+    fn tier1_preempts_and_victim_resumes_to_full_length() {
+        let mut s = Scheduler::new(
+            MockModel::new(2),
+            ServingConfig {
+                max_new_tokens: 8,
+                batch_timeout: std::time::Duration::ZERO,
+                ..Default::default()
+            },
+        );
+        s.submit(vec![1], Some(8)).unwrap();
+        s.submit(vec![2], Some(8)).unwrap();
+        for _ in 0..3 {
+            s.step().unwrap();
+        }
+        assert_eq!(s.active_count(), 2);
+        // A tier-1 arrival under full lanes evicts one tier-0 decode.
+        let sub = s.submit_tiered(vec![3], Some(4), 1, None).unwrap();
+        assert!(matches!(sub, Submission::Queued(_)));
+        s.step().unwrap();
+        assert_eq!(s.metrics.counter("preemptions"), 1);
+        assert_eq!(s.metrics.counter("preempted_t0"), 1);
+        let responses = s.run_until_idle().unwrap();
+        assert_eq!(responses.len(), 3);
+        // The victim resumed and still produced its full token budget;
+        // nobody's work was lost or duplicated.
+        assert_eq!(s.metrics.counter("resumed"), 1);
+        for r in &responses {
+            let want = if r.tier == 1 { 4 } else { 8 };
+            assert_eq!(r.tokens.len(), want, "request {} length", r.id);
+        }
+        assert_eq!(s.model.free_lane_count(), 2);
+        // TTFT was measured once per request, at first admission only.
+        assert_eq!(s.metrics.samples("ttft"), 3);
+    }
+
+    #[test]
+    fn resumed_request_at_budget_retires_immediately() {
+        // One lane: a tier-0 request is evicted after 3 of its 4 tokens;
+        // the resume sample is its 4th and must retire it at
+        // re-admission, not after a stray extra decode step.
+        let mut s = Scheduler::new(
+            MockModel::new(1),
+            ServingConfig {
+                max_new_tokens: 4,
+                batch_timeout: std::time::Duration::ZERO,
+                ..Default::default()
+            },
+        );
+        let a = s.submit(vec![1], Some(4)).unwrap();
+        s.step().unwrap(); // admit + decode: 2 generated
+        s.step().unwrap(); // 3 generated
+        let sub = s.submit_tiered(vec![2], Some(4), 1, None).unwrap();
+        assert!(matches!(sub, Submission::Queued(_)));
+        let responses = s.run_until_idle().unwrap();
+        assert_eq!(s.metrics.counter("preemptions"), 1);
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            assert_eq!(r.tokens.len(), 4, "request {} length", r.id);
+            if r.id == a {
+                assert_eq!(r.prompt_len, 1, "original prompt_len reported");
+            }
+        }
+    }
+
+    #[test]
+    fn backpressure_sheds_and_accounts() {
+        let mut s = Scheduler::new(
+            MockModel::new(1),
+            ServingConfig {
+                max_new_tokens: 4,
+                batch_timeout: std::time::Duration::ZERO,
+                queue_cap: 2,
+                ..Default::default()
+            },
+        );
+        // No steps yet: the third valid submission overflows cap 2.
+        assert!(matches!(
+            s.submit_tiered(vec![1], Some(4), 0, None).unwrap(),
+            Submission::Queued(_)
+        ));
+        assert!(matches!(
+            s.submit_tiered(vec![2], Some(4), 0, None).unwrap(),
+            Submission::Queued(_)
+        ));
+        assert_eq!(
+            s.submit_tiered(vec![3], Some(4), 0, None).unwrap(),
+            Submission::Shed
+        );
+        assert_eq!(s.metrics.counter("requests_submitted"), 3);
+        assert_eq!(s.metrics.counter("queued_t0"), 2);
+        assert_eq!(s.metrics.counter("shed_t0"), 1);
+        // Reject policy: queued + shed == submitted, exactly.
+        assert_eq!(
+            s.metrics.counter("queued_t0") + s.metrics.counter("shed_t0"),
+            s.metrics.counter("requests_submitted")
+        );
+        let responses = s.run_until_idle().unwrap();
+        assert_eq!(responses.len(), 2);
+        assert_eq!(s.metrics.counter("requests_completed"), 2);
+    }
+
+    #[test]
+    fn tpot_percentile_skips_single_token_responses() {
+        use std::time::Duration;
+        let mk = |ttft_ms: u64, total_ms: u64, n_tokens: usize| Response {
+            id: 1,
+            prompt_len: 1,
+            tokens: vec![0; n_tokens],
+            ttft: Duration::from_millis(ttft_ms),
+            total: Duration::from_millis(total_ms),
+            tier: 0,
+        };
+        assert_eq!(tpot_percentile(&[], 50), 0);
+        // Single-token responses have no decode phase.
+        assert_eq!(tpot_percentile(&[mk(5, 5, 1)], 50), 0);
+        // 9ms decode over 3 decode tokens = 3ms/token.
+        let r = mk(1, 10, 4);
+        assert_eq!(tpot_percentile(&[r.clone()], 50), 3_000_000);
+        // Mixed: percentiles rank the per-response TPOTs.
+        let fast = mk(1, 4, 4); // 1ms/token
+        let slow = mk(1, 31, 4); // 10ms/token
+        let both = [fast, slow, mk(5, 5, 1)];
+        assert_eq!(tpot_percentile(&both, 0), 1_000_000);
+        assert_eq!(tpot_percentile(&both, 100), 10_000_000);
     }
 }

@@ -30,8 +30,9 @@ pub fn run_named(name: &str) -> anyhow::Result<()> {
         "fig14" => scenarios::fig14(),
         "fig15" => scenarios::fig15(),
         "table3" => scenarios::table3(),
+        "calibrated" => scenarios::calibrated(),
         other => anyhow::bail!(
-            "unknown scenario {other:?} (fig10..fig15, table3)"
+            "unknown scenario {other:?} (fig10..fig15, table3, calibrated)"
         ),
     };
     t.print();

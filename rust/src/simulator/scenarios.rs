@@ -241,6 +241,118 @@ pub fn table3() -> Table {
     t
 }
 
+/// Measured serving calibration loaded from `BENCH_e2e.json`'s
+/// `slo_serving` section (written by `benches/e2e_serving.rs`): the
+/// per-output-token decode latency this machine actually measured,
+/// used to re-anchor the simulator's absolute latency scale so the
+/// fleet-size extrapolations start from a measurement instead of the
+/// built-in device constants.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Measured per-output-token decode latency, seconds.
+    pub tpot_s: f64,
+    /// Which bench row supplied it (mode + tier), for the table note.
+    pub source: String,
+}
+
+impl Calibration {
+    /// Read the bench JSON at `path`.  `None` — the graceful fallback to
+    /// the built-in device model — when the file, the `slo_serving`
+    /// section, or a nonzero TPOT sample is absent.
+    pub fn load(path: &str) -> Option<Calibration> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let j = crate::util::json::Json::parse(&text).ok()?;
+        Self::from_json(&j)
+    }
+
+    /// Pick the calibration point out of a parsed `BENCH_e2e.json`:
+    /// prefer the SLO-mode interactive tier's TPOT p50 (the
+    /// latency-critical number), then any nonzero tier of any mode.
+    pub fn from_json(j: &crate::util::json::Json) -> Option<Calibration> {
+        let rows = j.get("slo_serving")?.as_arr()?;
+        let mut best: Option<(u32, f64, String)> = None;
+        for row in rows {
+            let mode = row.get("mode").and_then(|m| m.as_str())?;
+            for tier in row.get("tiers")?.as_arr()? {
+                let t = tier.get("tier").and_then(|t| t.as_usize())?;
+                let ns = tier.get("tpot_p50_ns").and_then(|n| n.as_f64())?;
+                if ns <= 0.0 {
+                    continue;
+                }
+                let pref = match (mode, t) {
+                    ("slo", 1) => 0,
+                    ("slo", _) => 1,
+                    (_, 1) => 2,
+                    _ => 3,
+                };
+                let better = match &best {
+                    Some((p, _, _)) => pref < *p,
+                    None => true,
+                };
+                if better {
+                    best = Some((
+                        pref,
+                        ns * 1e-9,
+                        format!("{mode} mode, tier {t}, TPOT p50"),
+                    ));
+                }
+            }
+        }
+        best.map(|(_, tpot_s, source)| Calibration { tpot_s, source })
+    }
+}
+
+/// Calibrated serving extrapolation: the fig10 scaling sweep with its
+/// absolute per-token latency re-anchored to this machine's measured
+/// TPOT ([`Calibration::load`]).  The device model supplies the scaling
+/// *shape* (who stalls, who scales); the measurement supplies the
+/// absolute scale.  Without a bench file the table degrades to the
+/// uncalibrated model with a note saying so.
+pub fn calibrated() -> Table {
+    calibrated_from(Calibration::load("BENCH_e2e.json"))
+}
+
+pub fn calibrated_from(cal: Option<Calibration>) -> Table {
+    let m = paper::by_name("1.3B+MoE-128").unwrap();
+    let mut t = Table::new(
+        "Calibrated extrapolation — 52B MoE decode, 8..64 GPUs",
+        &["GPUs", "modeled ms", "calibrated ms", "tok/s/GPU"],
+    );
+    // Anchor point: the model's smallest DeepSpeed configuration vs the
+    // measured per-output-token latency.
+    let anchor_lay = Layout { n_gpus: 8, tp: 1, ep: 8, expert_slice: 1 };
+    let anchor_ms =
+        lat_ms(&m, Variant::Standard, Stack::DeepSpeed, 8, anchor_lay);
+    let scale = cal
+        .as_ref()
+        .map(|c| c.tpot_s * 1e3 / anchor_ms)
+        .filter(|s| s.is_finite() && *s > 0.0);
+    for n in [8, 16, 32, 64] {
+        let lay = Layout { n_gpus: n, tp: 1, ep: n, expert_slice: 1 };
+        let ds = lat_ms(&m, Variant::Standard, Stack::DeepSpeed, n, lay);
+        let cal_ms = scale.map_or(ds, |s| ds * s);
+        t.row(&[
+            n.to_string(),
+            f2(ds),
+            f2(cal_ms),
+            f1(thr_per_gpu(cal_ms)),
+        ]);
+    }
+    match &cal {
+        Some(c) => t.note(&format!(
+            "anchored to measured TPOT {:.3} ms ({}) from BENCH_e2e.json's \
+             slo_serving section; model shape x measured scale",
+            c.tpot_s * 1e3,
+            c.source,
+        )),
+        None => t.note(
+            "no usable BENCH_e2e.json slo_serving section — uncalibrated \
+             built-in device model (run the e2e bench to calibrate)",
+        ),
+    };
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +365,58 @@ mod tests {
             let s = t.render();
             assert!(s.contains("=="));
         }
+    }
+
+    #[test]
+    fn calibration_prefers_slo_interactive_tier() {
+        let j = crate::util::json::Json::parse(
+            r#"{"slo_serving": [
+                 {"mode": "fifo", "tiers": [
+                   {"tier": 0, "tpot_p50_ns": 4000000},
+                   {"tier": 1, "tpot_p50_ns": 3000000}]},
+                 {"mode": "slo", "tiers": [
+                   {"tier": 0, "tpot_p50_ns": 2500000},
+                   {"tier": 1, "tpot_p50_ns": 2000000}]}]}"#,
+        )
+        .unwrap();
+        let c = Calibration::from_json(&j).unwrap();
+        assert!((c.tpot_s - 2e-3).abs() < 1e-12, "tpot {}", c.tpot_s);
+        assert!(c.source.contains("slo mode, tier 1"), "{}", c.source);
+    }
+
+    #[test]
+    fn calibration_falls_back_across_modes_and_skips_zero() {
+        // The slo rows report zero TPOT (e.g. single-token responses):
+        // fall back to the fifo interactive tier rather than a zero scale.
+        let j = crate::util::json::Json::parse(
+            r#"{"slo_serving": [
+                 {"mode": "slo", "tiers": [
+                   {"tier": 1, "tpot_p50_ns": 0}]},
+                 {"mode": "fifo", "tiers": [
+                   {"tier": 1, "tpot_p50_ns": 5000000}]}]}"#,
+        )
+        .unwrap();
+        let c = Calibration::from_json(&j).unwrap();
+        assert!((c.tpot_s - 5e-3).abs() < 1e-12);
+        // Absent section / empty file: graceful None.
+        let empty = crate::util::json::Json::parse("{}").unwrap();
+        assert!(Calibration::from_json(&empty).is_none());
+    }
+
+    #[test]
+    fn calibrated_renders_with_and_without_measurement() {
+        let plain = calibrated_from(None);
+        assert_eq!(plain.rows.len(), 4);
+        assert!(plain.render().contains("uncalibrated"));
+        // With a measurement the calibrated column is anchored: the 8-GPU
+        // row's calibrated latency equals the measured TPOT.
+        let cal = Calibration {
+            tpot_s: 2e-3,
+            source: "slo mode, tier 1, TPOT p50".into(),
+        };
+        let t = calibrated_from(Some(cal));
+        let ms: f64 = t.rows[0][2].parse().unwrap();
+        assert!((ms - 2.0).abs() < 0.05, "anchor row {ms} ms");
     }
 
     #[test]

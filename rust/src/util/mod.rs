@@ -34,6 +34,27 @@ pub fn env_pos_usize(name: &str, default: usize) -> usize {
     }
 }
 
+/// Sibling of [`env_pos_usize`] for knobs where zero is a *valid* "off"
+/// setting rather than a typo (`DSMOE_PREFILL_CHUNK`, `DSMOE_QUEUE_CAP`):
+/// unset → `default` (silently); an explicit `0` → 0 (feature off);
+/// negative or garbage → warn on stderr and fall back to `default`.
+pub fn env_usize_off(name: &str, default: usize) -> usize {
+    let Some(raw) = std::env::var_os(name) else {
+        return default;
+    };
+    let s = raw.to_string_lossy();
+    match s.trim().parse::<i64>() {
+        Ok(n) if n >= 0 => n as usize,
+        _ => {
+            eprintln!(
+                "[config] {name}={s:?} is not a non-negative integer; \
+                 falling back to {default}"
+            );
+            default
+        }
+    }
+}
+
 /// Float sibling of [`env_pos_usize`] for ratio-valued knobs
 /// (`DSMOE_REBALANCE_SKEW`): unset → `default` (silently); set to a
 /// non-finite, non-positive, or unparsable value → warn on stderr and
@@ -88,6 +109,25 @@ mod tests {
             );
         }
         std::env::remove_var("DSMOE_TEST_ENV_POS_BAD");
+    }
+
+    #[test]
+    fn env_usize_off_zero_is_valid_off() {
+        std::env::remove_var("DSMOE_TEST_ENV_OFF_UNSET");
+        assert_eq!(super::env_usize_off("DSMOE_TEST_ENV_OFF_UNSET", 0), 0);
+        std::env::set_var("DSMOE_TEST_ENV_OFF", "0");
+        assert_eq!(super::env_usize_off("DSMOE_TEST_ENV_OFF", 5), 0);
+        std::env::set_var("DSMOE_TEST_ENV_OFF", "64");
+        assert_eq!(super::env_usize_off("DSMOE_TEST_ENV_OFF", 0), 64);
+        for bad in ["-3", "bogus", "", "2.5"] {
+            std::env::set_var("DSMOE_TEST_ENV_OFF", bad);
+            assert_eq!(
+                super::env_usize_off("DSMOE_TEST_ENV_OFF", 7),
+                7,
+                "value {bad:?} must fall back"
+            );
+        }
+        std::env::remove_var("DSMOE_TEST_ENV_OFF");
     }
 
     #[test]

@@ -258,6 +258,8 @@ fn regroup_rebalances_skewed_retirement(leader_threads: usize) {
                 prompt: c.prompt(i, plen),
                 max_new_tokens: 8,
                 arrival: std::time::Instant::now(),
+                tier: 0,
+                deadline: None,
             })
             .collect()
     };
@@ -503,6 +505,74 @@ fn leader_shard_and_fabric_threads_join_on_drop() {
         );
         std::thread::sleep(std::time::Duration::from_millis(100));
     }
+}
+
+/// Chunked prefill over the expert-parallel engine is a pure latency
+/// optimization: the same request mix produces byte-identical token
+/// streams with `prefill_chunk` on and off.  Two long-running requests
+/// keep lanes decoding while a late wave arrives, so the late admissions
+/// ride the staged path — with a tiny chunk budget they stay parked
+/// across several decode steps (`chunked_admissions`), with the budget
+/// off they complete behind a single step, and either way the math must
+/// not change.  One of the tests `scripts/check.sh` runs by name.
+#[test]
+fn ep_chunked_prefill_token_parity() {
+    let Some(m) = manifest() else { return };
+    let c = corpus();
+    let batch = 8usize;
+    let run = |chunk: usize| {
+        let mut ep = EpEngine::new(
+            &m,
+            "moe-s-8",
+            4,
+            AllToAllKind::Hierarchical,
+            batch,
+        )
+        .unwrap();
+        // Pin the staged-admission path on: ambient DSMOE_SERIAL_MOE /
+        // DSMOE_NO_INTERLEAVE env vars would silently force the
+        // stop-the-world admissions this test exists to compare against.
+        ep.set_serial_moe(false);
+        ep.set_interleave(true);
+        let mut sched = Scheduler::new(
+            ep,
+            ServingConfig {
+                model: "moe-s-8".into(),
+                max_batch: batch,
+                max_new_tokens: 5,
+                batch_timeout: std::time::Duration::ZERO,
+                prefill_chunk: chunk,
+                ..Default::default()
+            },
+        );
+        // Two long-runners hold their lanes through the late wave's
+        // admission (staggered budgets → staggered retirement).
+        let mut ids = vec![
+            sched.submit(c.prompt(0, 8), Some(12)).unwrap(),
+            sched.submit(c.prompt(1, 8), Some(10)).unwrap(),
+        ];
+        for _ in 0..2 {
+            sched.step().unwrap();
+        }
+        assert_eq!(sched.active_count(), 2);
+        for i in 2..6 {
+            ids.push(sched.submit(c.prompt(i, 8), Some(4)).unwrap());
+        }
+        let responses = sched.run_until_idle().unwrap();
+        assert_eq!(responses.len(), ids.len());
+        let chunked = sched.metrics.counter("chunked_admissions");
+        let mut toks: Vec<(u64, Vec<i32>)> =
+            responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+        toks.sort();
+        (toks, chunked)
+    };
+    let (off, chunked_off) = run(0);
+    // A 4-token budget against 8-token prompts: every staged admission
+    // needs multiple decode steps to drain.
+    let (on, chunked_on) = run(4);
+    assert_eq!(chunked_off, 0, "budget off must not take the chunked path");
+    assert!(chunked_on >= 1, "budget on never took the chunked path");
+    assert_eq!(off, on, "chunked prefill changed the generated tokens");
 }
 
 /// Dead lanes must send no expert traffic: serve a single request on an

@@ -1,0 +1,385 @@
+//! SLO-serving invariants on the continuous-batching scheduler, run
+//! against an artifact-free in-memory backend:
+//!
+//! * chunked prefill is a pure latency optimization — per-request token
+//!   streams are identical with chunking on and off;
+//! * preemption round-trips — an evicted request resumes and produces
+//!   exactly the token stream an undisturbed run would have;
+//! * backpressure accounting closes — every submission is either queued
+//!   or shed, per tier, under both shed policies.
+//!
+//! The scheduler's inline tests cover the same seams at unit scale; these
+//! run through the public crate API (`ds_moe::server::{ForwardModel,
+//! Scheduler}`) exactly as an external backend would, including the
+//! staged `begin_prefill` / `advance_prefill` / `finish_prefill` chunk
+//! protocol that the inline mock does not implement.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+use ds_moe::config::{ModelConfig, ServingConfig, ShedPolicy};
+use ds_moe::coordinator::Request;
+use ds_moe::coordinator::Submission;
+use ds_moe::metrics::Metrics;
+use ds_moe::server::{AdmittedLane, ForwardModel, Scheduler};
+use ds_moe::tokenizer::EOS;
+
+/// Prompt-aware deterministic backend: the first token is a function of
+/// the *last prompt token* and every decode step increments (mod vocab,
+/// skipping EOS).  A request's full token stream therefore depends only
+/// on its prompt — any lane mix-up, lost chunk, or resume drift shows up
+/// as a token mismatch rather than passing by coincidence.
+///
+/// Implements the staged-admission protocol: with a non-zero
+/// `prefill_chunk` (picked up from [`ServingConfig`] via `configure`),
+/// `begin_prefill` stages the batch and reports
+/// `ceil(total_prompt_tokens / chunk)` pending chunks, each decode step
+/// or `advance_prefill` call drains one, and `finish_prefill` assigns
+/// lanes once drained.
+struct ChunkMock {
+    cfg: ModelConfig,
+    metrics: Arc<Metrics>,
+    lanes: Vec<Option<u64>>,
+    /// Chunked-prefill token budget; 0 = staged admission declined.
+    chunk: usize,
+    staged: Option<Vec<Request>>,
+    pending_chunks: usize,
+}
+
+fn next_tok(t: i32, vocab: i32) -> i32 {
+    let n = (t + 1).rem_euclid(vocab);
+    if n == EOS {
+        (n + 1).rem_euclid(vocab)
+    } else {
+        n
+    }
+}
+
+impl ChunkMock {
+    fn new(lanes: usize) -> Self {
+        ChunkMock {
+            cfg: ModelConfig {
+                name: "chunk-mock".into(),
+                vocab_size: 32,
+                n_layers: 2,
+                d_model: 8,
+                n_heads: 2,
+                d_ff: 16,
+                max_seq: 64,
+                experts_schedule: vec![0, 0],
+                residual: false,
+                top2: false,
+                capacity_factor: 1.0,
+                moe_loss_coef: 0.0,
+                teacher: None,
+                kd_alpha: 1.0,
+                num_params: 0,
+            },
+            metrics: Arc::new(Metrics::new()),
+            lanes: vec![None; lanes],
+            chunk: 0,
+            staged: None,
+            pending_chunks: 0,
+        }
+    }
+
+    fn one_hot(&self, tok: i32) -> Vec<f32> {
+        let mut row = vec![0f32; self.cfg.vocab_size];
+        row[tok as usize] = 1.0;
+        row
+    }
+
+    fn admit(&mut self, reqs: &[Request]) -> Result<Vec<AdmittedLane>> {
+        let vocab = self.cfg.vocab_size as i32;
+        let mut out = Vec::new();
+        for req in reqs {
+            let lane = self
+                .lanes
+                .iter()
+                .position(|l| l.is_none())
+                .expect("no free lane");
+            self.lanes[lane] = Some(req.id);
+            let last = *req.prompt.last().expect("non-empty prompt");
+            out.push(AdmittedLane {
+                lane,
+                logits: self.one_hot(next_tok(last, vocab)),
+            });
+        }
+        Ok(out)
+    }
+}
+
+impl ForwardModel for ChunkMock {
+    fn model_config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+    fn configure(&mut self, serving: &ServingConfig) {
+        self.chunk = serving.prefill_chunk;
+    }
+    fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+    fn set_metrics(&mut self, metrics: Arc<Metrics>) {
+        self.metrics = metrics;
+    }
+    fn prefill_sizes(&self) -> Vec<usize> {
+        vec![1, 2, 4]
+    }
+    fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+    fn free_lane_count(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_none()).count()
+    }
+    fn prefill(
+        &mut self,
+        compiled: usize,
+        reqs: &[Request],
+    ) -> Result<Vec<AdmittedLane>> {
+        anyhow::ensure!(reqs.len() <= compiled);
+        self.admit(reqs)
+    }
+    fn begin_prefill(
+        &mut self,
+        compiled: usize,
+        reqs: &[Request],
+    ) -> Result<bool> {
+        if self.chunk == 0 {
+            return Ok(false);
+        }
+        anyhow::ensure!(reqs.len() <= compiled);
+        anyhow::ensure!(self.staged.is_none(), "admission already staged");
+        let total: usize = reqs.iter().map(|r| r.prompt.len()).sum();
+        self.pending_chunks = total.div_ceil(self.chunk);
+        self.staged = Some(reqs.to_vec());
+        Ok(true)
+    }
+    fn finish_prefill(&mut self) -> Result<Vec<AdmittedLane>> {
+        anyhow::ensure!(self.pending_chunks == 0, "chunks still pending");
+        let reqs = self
+            .staged
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("no staged admission"))?;
+        self.admit(&reqs)
+    }
+    fn prefill_pending(&self) -> bool {
+        self.staged.is_some() && self.pending_chunks > 0
+    }
+    fn advance_prefill(&mut self) -> Result<()> {
+        anyhow::ensure!(self.staged.is_some(), "no staged admission");
+        self.pending_chunks = self.pending_chunks.saturating_sub(1);
+        Ok(())
+    }
+    fn decode_step(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(tokens.len() == self.lanes.len());
+        anyhow::ensure!(pos.len() == self.lanes.len());
+        // A staged admission advances one chunk behind each decode step.
+        if self.staged.is_some() {
+            self.pending_chunks = self.pending_chunks.saturating_sub(1);
+        }
+        let vocab = self.cfg.vocab_size as i32;
+        Ok((0..self.lanes.len())
+            .map(|lane| self.one_hot(next_tok(tokens[lane], vocab)))
+            .collect())
+    }
+    fn release(&mut self, lane: usize) {
+        self.lanes[lane] = None;
+    }
+}
+
+fn serving(prefill_chunk: usize) -> ServingConfig {
+    ServingConfig {
+        max_new_tokens: 6,
+        batch_timeout: std::time::Duration::ZERO,
+        prefill_chunk,
+        ..Default::default()
+    }
+}
+
+/// One lane mid-decode, then a burst of admissions that must ride the
+/// staged (and, when `chunk > 0`, chunked) path.  Returns tokens by id.
+fn run_burst(chunk: usize) -> (HashMap<u64, Vec<i32>>, Scheduler<ChunkMock>) {
+    let mut s = Scheduler::new(ChunkMock::new(4), serving(chunk));
+    s.submit(vec![5, 6, 7], Some(6)).unwrap();
+    for _ in 0..2 {
+        s.step().unwrap();
+    }
+    assert_eq!(s.active_count(), 1);
+    // Distinct prompts: a lane mix-up would cross token streams.
+    s.submit(vec![9, 10], Some(6)).unwrap();
+    s.submit(vec![20, 21, 22, 23], Some(6)).unwrap();
+    s.submit(vec![13], Some(6)).unwrap();
+    let responses = s.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 4);
+    let by_id = responses.into_iter().map(|r| (r.id, r.tokens)).collect();
+    (by_id, s)
+}
+
+#[test]
+fn chunked_prefill_token_parity() {
+    let (off, s_off) = run_burst(0);
+    // Budget of 3 over a 2..=4-token-per-prompt burst: multi-chunk
+    // admissions, exercising both the behind-decode and idle-lane
+    // (`advance_prefill`) drain paths.
+    let (on, s_on) = run_burst(3);
+    assert_eq!(off.len(), on.len());
+    for (id, toks) in &off {
+        assert_eq!(on.get(id), Some(toks), "request {id} token stream");
+    }
+    assert_eq!(s_off.metrics.counter("chunked_admissions"), 0);
+    assert!(
+        s_on.metrics.counter("chunked_admissions") >= 1,
+        "burst admissions must have taken the chunked path"
+    );
+    // Nothing left staged in either backend.
+    assert!(!s_off.model.prefill_pending());
+    assert!(!s_on.model.prefill_pending());
+    assert_eq!(s_on.model.free_lane_count(), 4);
+}
+
+#[test]
+fn preemption_round_trip_resumes_identical_continuation() {
+    // Reference: the victim runs start-to-finish undisturbed.
+    let mut r = Scheduler::new(ChunkMock::new(1), serving(0));
+    let ref_id = r.submit(vec![9, 10], Some(6)).unwrap();
+    let reference = r.run_until_idle().unwrap();
+    assert_eq!(reference.len(), 1);
+    assert_eq!(reference[0].id, ref_id);
+    let want = reference[0].tokens.clone();
+    assert_eq!(want.len(), 6);
+
+    // Same prompt on a single lane, evicted mid-decode by a tier-1
+    // arrival, then resumed.
+    let mut s = Scheduler::new(ChunkMock::new(1), serving(0));
+    let victim = s.submit(vec![9, 10], Some(6)).unwrap();
+    for _ in 0..3 {
+        s.step().unwrap();
+    }
+    assert_eq!(s.active_count(), 1);
+    let sub = s.submit_tiered(vec![4], Some(2), 1, None).unwrap();
+    assert!(matches!(sub, Submission::Queued(_)));
+    let responses = s.run_until_idle().unwrap();
+    assert_eq!(s.metrics.counter("preemptions"), 1);
+    assert_eq!(s.metrics.counter("preempted_t0"), 1);
+    assert_eq!(s.metrics.counter("resumed"), 1);
+    assert_eq!(responses.len(), 2);
+    let got = responses.iter().find(|r| r.id == victim).unwrap();
+    // The continuation is token-identical: no lost, duplicated, or
+    // diverged tokens across the evict/re-prefill/resume round trip.
+    assert_eq!(got.tokens, want);
+    assert_eq!(got.prompt_len, 2, "original prompt_len reported");
+}
+
+#[test]
+fn preemption_round_trip_under_chunked_prefill() {
+    // Same round trip with chunking on and a second lane kept busy, so
+    // the victim's re-admission (generated prefix folded into the
+    // prompt, several tokens over the 2-token budget) rides the chunked
+    // protocol behind the other lane's decode steps.
+    let mut r = Scheduler::new(ChunkMock::new(1), serving(0));
+    let ref_id = r.submit(vec![17, 18, 19], Some(6)).unwrap();
+    let reference = r.run_until_idle().unwrap();
+    let want = reference[0].tokens.clone();
+    assert_eq!(reference[0].id, ref_id);
+
+    let mut s = Scheduler::new(ChunkMock::new(2), serving(2));
+    let victim = s.submit(vec![17, 18, 19], Some(6)).unwrap();
+    for _ in 0..2 {
+        s.step().unwrap();
+    }
+    // A long-running companion keeps its lane decoding throughout, so
+    // every later admission goes through begin/finish_prefill.
+    s.submit(vec![25], Some(12)).unwrap();
+    s.step().unwrap();
+    assert_eq!(s.active_count(), 2);
+    // The victim has the most generated tokens → it is the one evicted.
+    s.submit_tiered(vec![4], Some(2), 1, None).unwrap();
+    let responses = s.run_until_idle().unwrap();
+    assert_eq!(s.metrics.counter("preemptions"), 1);
+    assert_eq!(s.metrics.counter("resumed"), 1);
+    assert!(
+        s.metrics.counter("chunked_admissions") >= 1,
+        "the folded-prompt re-admission must exceed the chunk budget"
+    );
+    assert_eq!(responses.len(), 3);
+    let got = responses.iter().find(|r| r.id == victim).unwrap();
+    assert_eq!(got.tokens, want);
+    assert_eq!(got.prompt_len, 3, "original prompt_len reported");
+}
+
+#[test]
+fn backpressure_accounting_reject() {
+    let mut s = Scheduler::new(
+        ChunkMock::new(1),
+        ServingConfig {
+            max_new_tokens: 4,
+            batch_timeout: std::time::Duration::ZERO,
+            queue_cap: 2,
+            shed_policy: ShedPolicy::Reject,
+            ..Default::default()
+        },
+    );
+    // Six valid submissions across two tiers, no steps in between: each
+    // tier's queue caps at 2, the overflow is shed at the door.
+    let mut queued = [0u64; 2];
+    let mut shed = [0u64; 2];
+    for i in 0..6u8 {
+        let tier = i % 2;
+        let sub = s
+            .submit_tiered(vec![3 + i as i32], Some(4), tier, None)
+            .unwrap();
+        match sub {
+            Submission::Queued(_) => queued[tier as usize] += 1,
+            Submission::Shed => shed[tier as usize] += 1,
+        }
+    }
+    for t in 0..2 {
+        assert_eq!(queued[t], 2, "tier {t} queued");
+        assert_eq!(shed[t], 1, "tier {t} shed");
+        assert_eq!(s.metrics.counter(&format!("queued_t{t}")), queued[t]);
+        assert_eq!(s.metrics.counter(&format!("shed_t{t}")), shed[t]);
+        // The books close per tier: queued + shed == submitted.
+        assert_eq!(queued[t] + shed[t], 3);
+    }
+    assert_eq!(s.metrics.counter("requests_submitted"), 6);
+    assert_eq!(s.metrics.counter("requests_shed"), 2);
+    // Everything queued completes; nothing shed resurfaces.
+    let responses = s.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 4);
+    assert_eq!(s.metrics.counter("requests_completed"), 4);
+}
+
+#[test]
+fn backpressure_accounting_drop_oldest() {
+    let mut s = Scheduler::new(
+        ChunkMock::new(1),
+        ServingConfig {
+            max_new_tokens: 4,
+            batch_timeout: std::time::Duration::ZERO,
+            queue_cap: 1,
+            shed_policy: ShedPolicy::DropOldest,
+            ..Default::default()
+        },
+    );
+    // Under DropOldest every submission is admitted (Queued) but each
+    // overflow displaces — sheds — the tier's oldest waiter.
+    for i in 0..3 {
+        let sub = s.submit_tiered(vec![5 + i], Some(4), 0, None).unwrap();
+        assert!(matches!(sub, Submission::Queued(_)), "submission {i}");
+    }
+    assert_eq!(s.metrics.counter("requests_submitted"), 3);
+    assert_eq!(s.metrics.counter("queued_t0"), 3);
+    assert_eq!(s.metrics.counter("shed_t0"), 2);
+    assert_eq!(s.metrics.counter("requests_shed"), 2);
+    // queued - shed survivors actually run.
+    let responses = s.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 1);
+    // The survivor is the *newest* submission (prompt token 7 → first
+    // generated token 8).
+    assert_eq!(responses[0].tokens[0], 8);
+}

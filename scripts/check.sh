@@ -45,13 +45,20 @@ cargo test -q --test integration_parity bf16_experts_close_to_f32
 cargo test -q --test integration_parity int8_experts
 cargo test -q --test integration_parity f16_wire_close_to_f32
 cargo test -q --test integration_parity int8_replicated_expert_is_replica_consistent
+# SLO-aware serving: chunked prefill must be token-parity neutral (mock
+# and EP backends), preemption must round-trip to an identical
+# continuation, and backpressure accounting must close (queued + shed ==
+# submitted) under both shed policies.
+cargo test -q --test integration_slo
+cargo test -q --test integration_serving ep_chunked_prefill_token_parity
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 
 # Bench smoke: a short arrival trace, the depth-2 leader-parallel pair,
-# the flat-vs-hierarchical all-to-all pair, and one compressed serving
-# point (int8 experts + f16 wire) next to the f32 baseline through the
-# full stack; refreshes BENCH_e2e.json so every PR records a perf point
+# the flat-vs-hierarchical all-to-all pair, one compressed serving point
+# (int8 experts + f16 wire) next to the f32 baseline, and a short bursty
+# FIFO-vs-SLO multi-tenant pair (per-tier TTFT/TPOT) through the full
+# stack; refreshes BENCH_e2e.json so every PR records a perf point
 # (no-ops without artifacts/, like the integration tests).
 cargo bench --bench e2e_serving -- --smoke
 
