@@ -74,13 +74,24 @@
 //! tier in both modes.  The acceptance bar is the SLO mode's interactive
 //! TTFT p99 landing below the FIFO run's on the identical trace.
 //!
+//! Part 11 is the fault-tolerance study: the same bursty two-tier trace
+//! served with `DSMOE_FAULT_TOLERANCE` semantics on, once unfaulted and
+//! once with a deterministic `FaultPlan` killing one worker mid-trace.
+//! Recovery is fully internal (deadline → probe → failover → retry /
+//! scheduler requeue), so the killed run must still complete every
+//! request; the pair reads as the availability cost of a worker death —
+//! per-tier TTFT/TPOT percentiles with and without the failover, plus
+//! worker-death / failover / retry / requeue counters and the summed
+//! recovery time.
+//!
 //! Everything is also emitted to `BENCH_e2e.json` at the repo root so the
 //! perf trajectory is tracked across PRs.
 //!
 //! `--smoke` runs a minimal subset (one model, a short arrival trace, the
 //! depth-2 leader-parallel pair, the flat-vs-hierarchical all-to-all
 //! pair, the R ∈ {1, 2} replication pair, the f32-vs-int8+f16
-//! compression pair, a short bursty FIFO-vs-SLO pair) and still writes
+//! compression pair, a short bursty FIFO-vs-SLO pair, an
+//! unfailed-vs-one-kill fault-tolerance pair) and still writes
 //! `BENCH_e2e.json` — cheap enough for `scripts/check.sh`, so every PR
 //! records a perf point.
 
@@ -91,6 +102,7 @@ use std::sync::atomic::Ordering;
 use ds_moe::config::{AllToAllKind, ServingConfig, ShedPolicy};
 use ds_moe::coordinator::{Response, Submission};
 use ds_moe::data::{Corpus, CorpusConfig, EvalSuite};
+use ds_moe::fabric::FaultPlan;
 use ds_moe::metrics::Metrics;
 use ds_moe::runtime::{Dtype, Manifest};
 use ds_moe::server::{
@@ -642,9 +654,69 @@ fn main() {
         }
     }
 
+    // --- Fault tolerance: one worker killed mid-trace, recovery cost ----
+    let mut ft_rows = Vec::new();
+    let mut ftt = Table::new(
+        "Fault tolerance: unfailed vs one worker killed mid-trace",
+        &["model", "mode", "tier", "done", "TTFT p50", "TTFT p99",
+          "TPOT p50", "TPOT p99"],
+    );
+    let ft_requests = if smoke { 12 } else { 32 };
+    for kill in [false, true] {
+        let Some(row) = fault_tolerance_study(
+            &manifest, &corpus, "moe-s-8", 4, ft_requests, kill,
+        ) else {
+            continue;
+        };
+        for ts in &row.tiers {
+            ftt.row(&[
+                row.model.clone(),
+                row.mode.to_string(),
+                ts.tier.to_string(),
+                ts.done.to_string(),
+                fmt_ns(ts.ttft_p50_ns),
+                fmt_ns(ts.ttft_p99_ns),
+                fmt_ns(ts.tpot_p50_ns),
+                fmt_ns(ts.tpot_p99_ns),
+            ]);
+        }
+        ft_rows.push(row);
+    }
+    ftt.note("the identical bursty two-tier trace served twice with fault \
+              tolerance on: the kill run installs a deterministic \
+              FaultPlan that crashes worker 1 mid-trace, so the leader \
+              hits its exchange deadline, probes, fails the worker over \
+              (re-homing its experts onto survivors) and re-executes or \
+              re-queues the interrupted work.  Every request must still \
+              complete — integration_faults.rs asserts the outputs are \
+              token-identical — so the pair reads as availability cost, \
+              not correctness");
+    ftt.print();
+    let _ = ftt.save_csv("e2e_fault_tolerance");
+    let ft_base = ft_rows.iter().find(|r| r.mode == "baseline");
+    let ft_kill = ft_rows.iter().find(|r| r.mode == "kill");
+    if let (Some(b), Some(k)) = (ft_base, ft_kill) {
+        println!(
+            "  killed run: {}/{} completed — {} worker death(s), \
+             {} failover(s), {} engine retries, {} exchange timeouts, \
+             {} requests requeued; recovery {} total; \
+             TTFT p99 {} vs {} unfailed",
+            k.completed,
+            k.requests,
+            k.worker_deaths,
+            k.failovers,
+            k.ft_retries,
+            k.exchange_timeouts,
+            k.fault_requeues,
+            fmt_ns(k.recovery_ns),
+            fmt_ns(k.ttft_p99_ns),
+            fmt_ns(b.ttft_p99_ns),
+        );
+    }
+
     write_bench_json(
         &rows, &studies, &cb_rows, &depth_rows, &adm_rows, &lp_rows,
-        &a2a_rows, &he_rows, &cmp_rows, &slo_rows,
+        &a2a_rows, &he_rows, &cmp_rows, &slo_rows, &ft_rows,
     );
 }
 
@@ -832,6 +904,148 @@ fn slo_serving_study(
         resumed: m.counter("resumed"),
         chunked_admissions: m.counter("chunked_admissions"),
         tok_per_s: tokens as f64 / wall,
+        tiers,
+    })
+}
+
+struct FtRow {
+    model: String,
+    workers: usize,
+    mode: &'static str, // "baseline" | "kill"
+    requests: usize,
+    completed: usize,
+    worker_deaths: u64,
+    failovers: u64,
+    ft_retries: u64,
+    exchange_timeouts: u64,
+    fault_requeues: u64,
+    degraded_steps: u64,
+    recovery_ns: u64,
+    tok_per_s: f64,
+    ttft_p99_ns: u64,
+    tiers: Vec<SloTierStats>,
+}
+
+/// Part 11 — the bursty two-tier trace through `Scheduler<EpEngine>` with
+/// fault tolerance on: `kill == false` is the unfailed reference,
+/// `kill == true` installs a [`FaultPlan`] that crashes worker 1 at its
+/// 24th expert-batch dispatch (a few forwards into the replay, lanes
+/// full).  The deadline → probe → failover → retry/requeue machinery is
+/// internal, so both runs must complete every request; the delta is the
+/// availability cost of one worker death.  Tight deadline/probe knobs
+/// keep the measured recovery window small enough for `--smoke`.
+fn fault_tolerance_study(
+    manifest: &Manifest,
+    corpus: &Corpus,
+    model: &str,
+    workers: usize,
+    n_requests: usize,
+    kill: bool,
+) -> Option<FtRow> {
+    let batch = 8usize;
+    let trace = bursty_trace(n_requests, 29, 150.0);
+    let mut ep = EpEngine::new(
+        manifest,
+        model,
+        workers,
+        AllToAllKind::Hierarchical,
+        batch,
+    )
+    .ok()?;
+    ep.set_serial_moe(false);
+    ep.set_pipeline(true);
+    ep.set_fault_tolerance(true);
+    ep.set_exchange_timeout(std::time::Duration::from_millis(500));
+    ep.set_probe_params(std::time::Duration::from_millis(200), 1, 2);
+    let serving = ServingConfig {
+        model: model.into(),
+        workers,
+        max_batch: batch,
+        max_new_tokens: 8,
+        batch_timeout: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(ep, serving);
+
+    // Warmup compiles every admission/decode shape; the plan is installed
+    // after it so the dispatch countdown starts at the measured replay.
+    for i in 0..batch {
+        sched.submit(corpus.prompt(i, 8), Some(2)).ok()?;
+    }
+    sched.run_until_idle().ok()?;
+    sched.reset_metrics();
+    if kill {
+        sched.model.set_fault_plan(FaultPlan {
+            kill: Some((1, 24)),
+            ..Default::default()
+        });
+    }
+
+    let mut id_tier: HashMap<u64, u8> = HashMap::new();
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    while submitted < trace.len()
+        || sched.active_count() > 0
+        || sched.queue_len() > 0
+        || sched.admission_in_flight()
+    {
+        let now = t0.elapsed().as_secs_f64();
+        while submitted < trace.len() && trace[submitted].at <= now {
+            let r = &trace[submitted];
+            let prompt = corpus.prompt(submitted, r.prompt_len);
+            if let Submission::Queued(id) = sched
+                .submit_tiered(prompt, Some(r.max_new), r.tier, None)
+                .ok()?
+            {
+                id_tier.insert(id, r.tier);
+            }
+            submitted += 1;
+        }
+        if !sched.step().ok()? {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let responses = sched.take_done();
+    let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+
+    let m = &sched.metrics;
+    let tiers = [0u8, 1u8]
+        .iter()
+        .map(|&t| {
+            let rs: Vec<Response> = responses
+                .iter()
+                .filter(|r| id_tier.get(&r.id) == Some(&t))
+                .cloned()
+                .collect();
+            SloTierStats {
+                tier: t,
+                done: rs.len(),
+                shed: m.counter(&format!("shed_t{t}")),
+                preempted: m.counter(&format!("preempted_t{t}")),
+                deadline_misses: m.counter(&format!("deadline_miss_t{t}")),
+                ttft_p50_ns: ttft_percentile(&rs, 50),
+                ttft_p99_ns: ttft_percentile(&rs, 99),
+                tpot_p50_ns: tpot_percentile(&rs, 50),
+                tpot_p99_ns: tpot_percentile(&rs, 99),
+            }
+        })
+        .collect();
+    Some(FtRow {
+        model: model.to_string(),
+        workers,
+        mode: if kill { "kill" } else { "baseline" },
+        requests: n_requests,
+        completed: responses.len(),
+        worker_deaths: m.counter("worker_deaths"),
+        failovers: m.counter("failovers"),
+        ft_retries: m.counter("ft_retries"),
+        exchange_timeouts: m.counter("exchange_timeouts"),
+        fault_requeues: m.counter("fault_requeues"),
+        degraded_steps: m.counter("degraded_steps"),
+        recovery_ns: m.sum_ns("ft_recovery"),
+        tok_per_s: tokens as f64 / wall,
+        ttft_p99_ns: ttft_percentile(&responses, 99),
         tiers,
     })
 }
@@ -1631,6 +1845,7 @@ fn write_bench_json(
     he_rows: &[HotExpertRow],
     cmp_rows: &[CompressionRow],
     slo_rows: &[SloRow],
+    ft_rows: &[FtRow],
 ) {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"e2e_serving\",\n  \"serving\": [\n");
@@ -1932,6 +2147,51 @@ fn write_bench_json(
             r.tok_per_s,
             tiers,
             if i + 1 == slo_rows.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ],\n  \"fault_tolerance\": [\n");
+    for (i, r) in ft_rows.iter().enumerate() {
+        let mut tiers = String::new();
+        for (j, ts) in r.tiers.iter().enumerate() {
+            let _ = write!(
+                tiers,
+                "{{\"tier\": {}, \"done\": {}, \
+                 \"ttft_p50_ns\": {}, \"ttft_p99_ns\": {}, \
+                 \"tpot_p50_ns\": {}, \"tpot_p99_ns\": {}}}{}",
+                ts.tier,
+                ts.done,
+                ts.ttft_p50_ns,
+                ts.ttft_p99_ns,
+                ts.tpot_p50_ns,
+                ts.tpot_p99_ns,
+                if j + 1 == r.tiers.len() { "" } else { ", " }
+            );
+        }
+        let _ = write!(
+            s,
+            "    {{\"model\": \"{}\", \"workers\": {}, \"mode\": \"{}\", \
+             \"requests\": {}, \"completed\": {}, \
+             \"worker_deaths\": {}, \"failovers\": {}, \
+             \"ft_retries\": {}, \"exchange_timeouts\": {}, \
+             \"fault_requeues\": {}, \"degraded_steps\": {}, \
+             \"recovery_ns\": {}, \"tok_per_s\": {:.2}, \
+             \"ttft_p99_ns\": {}, \"tiers\": [{}]}}{}\n",
+            r.model,
+            r.workers,
+            r.mode,
+            r.requests,
+            r.completed,
+            r.worker_deaths,
+            r.failovers,
+            r.ft_retries,
+            r.exchange_timeouts,
+            r.fault_requeues,
+            r.degraded_steps,
+            r.recovery_ns,
+            r.tok_per_s,
+            r.ttft_p99_ns,
+            tiers,
+            if i + 1 == ft_rows.len() { "" } else { "," }
         );
     }
     s.push_str("  ]\n}\n");

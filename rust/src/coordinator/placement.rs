@@ -116,6 +116,33 @@ impl LayerPlacement {
         true
     }
 
+    /// Experts whose *only* host is worker `w` (ascending) — the set that
+    /// must be re-shipped elsewhere before `w` can be evicted on failover.
+    /// Experts with a surviving replica (dp-group copy or hot-expert
+    /// replica) need nothing: the copies already hold identical bytes.
+    pub fn sole_hosted(&self, w: usize) -> Vec<usize> {
+        self.experts_of[w]
+            .iter()
+            .copied()
+            .filter(|&e| self.replication(e) == 1)
+            .collect()
+    }
+
+    /// Remove worker `w` from this layer entirely (failover: the worker is
+    /// dead).  The caller must first re-home every `sole_hosted` expert —
+    /// asserted here, because silently losing an expert's last copy would
+    /// turn later dispatches into unloaded-expert errors far from the
+    /// cause.
+    pub fn evict_worker(&mut self, w: usize) {
+        assert!(
+            self.sole_hosted(w).is_empty(),
+            "evicting worker {w} would orphan experts {:?} at layer {}",
+            self.sole_hosted(w),
+            self.layer
+        );
+        self.experts_of[w].clear();
+    }
+
     /// Max experts hosted by any single worker (the §4.1.3 balance metric).
     pub fn max_experts_per_worker(&self) -> usize {
         self.experts_of.iter().map(|v| v.len()).max().unwrap_or(0)
@@ -158,6 +185,15 @@ impl Placement {
 
     pub fn layer_mut(&mut self, i: usize) -> Option<&mut LayerPlacement> {
         self.layers.get_mut(&i)
+    }
+
+    /// Evict worker `w` from every layer (failover).  Same contract as
+    /// [`LayerPlacement::evict_worker`]: each layer's sole-hosted experts
+    /// must already have been re-homed.
+    pub fn evict_worker(&mut self, w: usize) {
+        for lp in self.layers.values_mut() {
+            lp.evict_worker(w);
+        }
     }
 
     /// All (layer, expert) pairs assigned to worker `w` — what the engine
@@ -321,6 +357,50 @@ mod tests {
             crate::prop_assert!(lp.min_experts_per_worker() > 0);
             Ok(())
         });
+    }
+
+    #[test]
+    fn property_evict_worker_preserves_every_expert() {
+        // Failover invariant: after re-homing a victim's sole-hosted
+        // experts onto survivors and evicting it, every expert still has
+        // at least one host and the victim hosts nothing.
+        prop(150, |c| {
+            let e = c.usize(1, 32);
+            let w = c.usize(2, 16);
+            let mut lp = LayerPlacement::balanced(0, e, w);
+            let victim = c.usize(0, w - 1);
+            for ex in lp.sole_hosted(victim) {
+                let target = (0..w)
+                    .filter(|&x| x != victim)
+                    .min_by_key(|&x| (lp.experts_of[x].len(), x))
+                    .unwrap();
+                lp.add_replica(ex, target);
+            }
+            lp.evict_worker(victim);
+            crate::prop_assert!(
+                lp.experts_of[victim].is_empty(),
+                "victim {victim} still hosts experts"
+            );
+            for ex in 0..e {
+                let reps = lp.replicas_of(ex);
+                crate::prop_assert!(
+                    !reps.is_empty() && !reps.contains(&victim),
+                    "expert {ex} hosts {reps:?} after evicting {victim} \
+                     (e={e}, w={w})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn evict_refuses_to_orphan_sole_hosted_experts() {
+        let mut lp = LayerPlacement::balanced(0, 4, 4); // 1 expert each
+        assert_eq!(lp.sole_hosted(2), vec![2]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || lp.evict_worker(2),
+        ));
+        assert!(r.is_err(), "evicting a sole host must assert");
     }
 
     #[test]

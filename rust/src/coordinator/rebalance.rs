@@ -115,6 +115,54 @@ impl Rebalancer {
         }
         actions
     }
+
+    /// Failover plan for one layer when worker `victim` is declared dead:
+    /// the replications needed before the victim can be evicted.  Dispatch
+    /// derives each expert's destination from `owner(e, 0)`, which only
+    /// searches replica group 0 (workers `0..ep_degree`) — so every expert
+    /// the victim hosted must keep a *live group-0* host, not merely any
+    /// surviving copy.  Targets are the least-loaded live group-0 workers
+    /// (lowest index breaks ties), with planned additions counted so a
+    /// multi-expert failover spreads instead of piling onto one survivor.
+    /// `dead[w]` marks previously-declared-dead workers to skip as
+    /// targets; the victim itself need not be marked yet.
+    pub fn plan_failover(
+        lp: &LayerPlacement,
+        victim: usize,
+        dead: &[bool],
+    ) -> Vec<Action> {
+        let workers = lp.experts_of.len();
+        let group0 = lp.ep_degree.min(workers);
+        let live =
+            |w: usize| w != victim && !dead.get(w).copied().unwrap_or(false);
+        let mut load: Vec<usize> =
+            lp.experts_of.iter().map(|v| v.len()).collect();
+        let mut planned: Vec<Vec<usize>> = vec![Vec::new(); workers];
+        let mut actions = Vec::new();
+        for &e in &lp.experts_of[victim] {
+            let hosted = |w: usize| {
+                lp.experts_of[w].contains(&e) || planned[w].contains(&e)
+            };
+            if (0..group0).any(|w| live(w) && hosted(w)) {
+                continue;
+            }
+            // Prefer a group-0 target (dispatchable); fall back to any
+            // live worker so the expert's bytes at least survive.
+            let to = (0..group0)
+                .filter(|&w| live(w) && !hosted(w))
+                .min_by_key(|&w| (load[w], w))
+                .or_else(|| {
+                    (0..workers)
+                        .filter(|&w| live(w) && !hosted(w))
+                        .min_by_key(|&w| (load[w], w))
+                });
+            let Some(to) = to else { continue };
+            planned[to].push(e);
+            load[to] += 1;
+            actions.push(Action::Replicate { layer: lp.layer, expert: e, to });
+        }
+        actions
+    }
 }
 
 #[cfg(test)]
@@ -186,5 +234,66 @@ mod tests {
         let p = Rebalancer { skew_threshold: 2.0, max_replicas: 2 };
         // Still hot: no dereplicate, and the ceiling blocks growth.
         assert!(p.plan(&lp, &[8.0, 1.0, 0.5, 1.5]).is_empty());
+    }
+
+    #[test]
+    fn failover_rehomes_each_lost_expert_onto_a_survivor() {
+        // 8 experts over 4 workers (2 each); killing worker 1 must
+        // replicate both of its experts onto distinct least-loaded
+        // survivors (spread, not pile-up).
+        let lp = LayerPlacement::balanced(0, 8, 4);
+        let acts = Rebalancer::plan_failover(&lp, 1, &[false; 4]);
+        assert_eq!(acts.len(), lp.experts_of[1].len());
+        let mut targets: Vec<usize> = acts
+            .iter()
+            .map(|a| match *a {
+                Action::Replicate { expert, to, .. } => {
+                    assert!(lp.experts_of[1].contains(&expert));
+                    assert_ne!(to, 1);
+                    to
+                }
+                ref other => panic!("unexpected action {other:?}"),
+            })
+            .collect();
+        targets.sort_unstable();
+        targets.dedup();
+        assert_eq!(targets.len(), acts.len(), "targets piled up");
+    }
+
+    #[test]
+    fn failover_skips_experts_with_a_live_group0_copy() {
+        let mut lp = LayerPlacement::balanced(0, 4, 4);
+        assert!(lp.add_replica(1, 0)); // expert 1 already hosted on worker 0
+        let acts = Rebalancer::plan_failover(&lp, 1, &[false; 4]);
+        assert!(acts.is_empty(), "{acts:?}");
+    }
+
+    #[test]
+    fn failover_rehomes_into_group0_even_with_a_dp_copy() {
+        // dp=2: worker 5 holds the same experts as worker 1, but dispatch
+        // only consults replica group 0 (workers 0..4) — the plan must
+        // still create a group-0 copy, targeting the emptiest live
+        // group-0 worker.
+        let lp = LayerPlacement::balanced(0, 4, 8);
+        let acts = Rebalancer::plan_failover(&lp, 1, &[false; 8]);
+        assert_eq!(acts.len(), 1);
+        let Action::Replicate { expert, to, .. } = acts[0] else {
+            panic!("unexpected action {:?}", acts[0]);
+        };
+        assert_eq!(expert, 1);
+        assert!(to < 4 && to != 1, "target {to} outside live group 0");
+    }
+
+    #[test]
+    fn failover_skips_already_dead_targets() {
+        let lp = LayerPlacement::balanced(0, 4, 4);
+        let mut dead = [false; 4];
+        dead[0] = true;
+        let acts = Rebalancer::plan_failover(&lp, 1, &dead);
+        assert_eq!(acts.len(), 1);
+        let Action::Replicate { to, .. } = acts[0] else {
+            panic!("unexpected action {:?}", acts[0]);
+        };
+        assert!(to != 0 && to != 1, "targeted a dead worker: {to}");
     }
 }

@@ -47,6 +47,7 @@ const CMD_RELAY_RESULT: u8 = 5;
 const CMD_DELIVER: u8 = 6;
 const CMD_FORWARD: u8 = 7;
 const CMD_SHUTDOWN: u8 = 8;
+const CMD_PING: u8 = 9;
 
 const REPLY_LOADED: u8 = 16;
 const REPLY_FFN_DONE: u8 = 17;
@@ -55,6 +56,7 @@ const REPLY_FFN_RELAY_DONE: u8 = 19;
 const REPLY_DELIVERED: u8 = 20;
 const REPLY_FORWARDED: u8 = 21;
 const REPLY_ERR: u8 = 22;
+const REPLY_PONG: u8 = 23;
 
 // ---------------------------------------------------------------- writing
 
@@ -178,6 +180,10 @@ pub(super) fn encode_cmd(cmd: &Cmd) -> Vec<u8> {
             put_bytes(&mut buf, payload);
         }
         Cmd::Shutdown => buf.push(CMD_SHUTDOWN),
+        Cmd::Ping { seq } => {
+            buf.push(CMD_PING);
+            put_u64(&mut buf, *seq);
+        }
     }
     buf
 }
@@ -218,6 +224,11 @@ pub(super) fn encode_reply(r: &Reply) -> Vec<u8> {
         Reply::Err(e) => {
             buf.push(REPLY_ERR);
             put_bytes(&mut buf, e.as_bytes());
+        }
+        Reply::Pong { worker, seq } => {
+            buf.push(REPLY_PONG);
+            put_usize(&mut buf, *worker);
+            put_u64(&mut buf, *seq);
         }
     }
     buf
@@ -397,6 +408,10 @@ pub(super) fn decode_cmd(payload: &[u8]) -> Result<Cmd> {
             Cmd::Forward { to, payload, tag }
         }
         CMD_SHUTDOWN => Cmd::Shutdown,
+        CMD_PING => {
+            let seq = c.u64()?;
+            Cmd::Ping { seq }
+        }
         k => anyhow::bail!("unknown command frame kind {k}"),
     };
     c.finish()?;
@@ -438,6 +453,11 @@ pub(super) fn decode_reply(payload: &[u8]) -> Result<Reply> {
         REPLY_ERR => {
             let b = c.bytes()?;
             Reply::Err(String::from_utf8_lossy(&b).into_owned())
+        }
+        REPLY_PONG => {
+            let worker = c.usize()?;
+            let seq = c.u64()?;
+            Reply::Pong { worker, seq }
         }
         k => anyhow::bail!("unknown reply frame kind {k}"),
     };
@@ -765,6 +785,105 @@ mod tests {
             weights: back,
         });
         assert_eq!(again, payload);
+    }
+
+    #[test]
+    fn ping_pong_roundtrip_and_truncations_fail_loudly() {
+        prop(120, |c| {
+            let seq = c.usize(0, 1_000_000) as u64;
+            let worker = c.usize(0, 63);
+
+            // Ping command round-trips and is its own re-encode fixed point.
+            let payload = encode_cmd(&Cmd::Ping { seq });
+            let Cmd::Ping { seq: s2 } = decode_cmd(&payload)
+                .map_err(|e| format!("ping decode failed: {e:#}"))?
+            else {
+                return Err("ping decoded to a different command kind".into());
+            };
+            crate::prop_assert!(s2 == seq, "ping seq did not round-trip");
+            crate::prop_assert!(
+                payload == encode_cmd(&Cmd::Ping { seq: s2 }),
+                "ping re-encode diverged"
+            );
+            // Every proper prefix fails loudly; trailing bytes fail loudly.
+            for cut in 0..payload.len() {
+                crate::prop_assert!(
+                    decode_cmd(&payload[..cut]).is_err(),
+                    "truncated ping must fail"
+                );
+            }
+            let mut padded = payload.clone();
+            padded.push(0);
+            crate::prop_assert!(
+                decode_cmd(&padded).is_err(),
+                "ping trailing bytes must fail"
+            );
+
+            // Pong reply: same discipline.
+            let payload = encode_reply(&Reply::Pong { worker, seq });
+            let Reply::Pong { worker: w2, seq: s2 } = decode_reply(&payload)
+                .map_err(|e| format!("pong decode failed: {e:#}"))?
+            else {
+                return Err("pong decoded to a different reply kind".into());
+            };
+            crate::prop_assert!(
+                (w2, s2) == (worker, seq),
+                "pong did not round-trip"
+            );
+            for cut in 0..payload.len() {
+                crate::prop_assert!(
+                    decode_reply(&payload[..cut]).is_err(),
+                    "truncated pong must fail"
+                );
+            }
+            let mut padded = payload.clone();
+            padded.push(0);
+            crate::prop_assert!(
+                decode_reply(&padded).is_err(),
+                "pong trailing bytes must fail"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bit_flipped_health_and_result_frames_never_panic() {
+        // Fuzz-style: single-bit corruption anywhere in a Ping/Pong or
+        // FfnBatchResult payload must either decode to *some* valid frame
+        // (the flip hit a don't-care bit of an id) or fail loudly — it
+        // must never panic or hang.  The kind byte flips reach every other
+        // frame kind's decoder with a garbage body, which is exactly the
+        // hostile input a half-dead worker could produce.
+        prop(40, |c| {
+            let b = rand_batch(c);
+            let res = FfnBatchResult {
+                layer: b.layer,
+                experts: b.experts,
+                data: b.data,
+                tag: b.tag,
+            };
+            let payloads = [
+                encode_cmd(&Cmd::Ping { seq: c.usize(0, 9999) as u64 }),
+                encode_reply(&Reply::Pong {
+                    worker: c.usize(0, 7),
+                    seq: c.usize(0, 9999) as u64,
+                }),
+                encode_reply(&Reply::FfnBatchDone(res)),
+            ];
+            for payload in &payloads {
+                for byte in 0..payload.len() {
+                    for bit in 0..8 {
+                        let mut corrupt = payload.clone();
+                        corrupt[byte] ^= 1 << bit;
+                        // Either Ok (benign flip) or Err (loud) — the point
+                        // is that this call returns instead of panicking.
+                        let _ = decode_cmd(&corrupt);
+                        let _ = decode_reply(&corrupt);
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

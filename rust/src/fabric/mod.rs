@@ -63,19 +63,82 @@
 mod frame;
 mod transport;
 
-pub use transport::TransportKind;
+pub use transport::{FaultPlan, TransportKind};
 
-use std::cell::RefCell;
-use std::collections::{BTreeMap, HashMap};
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::alltoall::Plan;
 use crate::runtime::{Dtype, HostTensor, ProgramSpec, Runtime};
-use transport::{ChannelTransport, ReplySink, SocketTransport, Transport};
+use transport::{
+    ChannelTransport, FaultTransport, ReplySink, SocketTransport, Transport,
+};
+
+/// Marker error for *recoverable* fabric failures — an exchange deadline
+/// elapsing or a worker error surfacing while a deadline is armed
+/// (`DSMOE_FAULT_TOLERANCE`).  The EP engine's retry path recognizes it
+/// anywhere in an `anyhow` chain via [`is_fault`] and runs the probe /
+/// failover machinery; without fault tolerance this type is never
+/// constructed and every error stays as loud and fatal as before.
+#[derive(Debug)]
+pub struct FabricFault(pub String);
+
+impl std::fmt::Display for FabricFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "fabric fault: {}", self.0)
+    }
+}
+
+impl std::error::Error for FabricFault {}
+
+/// True if `e` carries a [`FabricFault`] anywhere in its context chain.
+pub fn is_fault(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.downcast_ref::<FabricFault>().is_some())
+}
+
+/// Per-worker liveness classification of the health state machine:
+/// healthy → suspect (missed probe) → dead (`dead_after` consecutive
+/// misses), with suspect → healthy recovery after `recover_after` clean
+/// probes.  Dead is terminal — a declared-dead worker is failed over and
+/// never probed again.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerState {
+    Healthy,
+    Suspect,
+    Dead,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct WorkerHealth {
+    state: WorkerState,
+    /// Consecutive missed probes (reset by any pong).
+    misses: u32,
+    /// Consecutive clean probes while suspect (reset by any miss).
+    clean: u32,
+}
+
+impl WorkerHealth {
+    fn new() -> Self {
+        WorkerHealth { state: WorkerState::Healthy, misses: 0, clean: 0 }
+    }
+}
+
+/// Outcome of one [`Fabric::probe_workers`] sweep.
+#[derive(Debug, Default)]
+pub struct ProbeReport {
+    /// Workers that crossed the dead threshold *this* sweep (the failover
+    /// trigger; already-dead workers are not probed and never reappear).
+    pub newly_dead: Vec<usize>,
+    /// Workers currently suspect (missed at least one recent probe but not
+    /// yet declared dead) — the "hung, maybe recovering" class.
+    pub suspects: Vec<usize>,
+}
 
 /// Cumulative traffic counters (shared, lock-free).
 ///
@@ -202,6 +265,9 @@ enum Cmd {
     /// Forward a payload to another worker (relay hop), then ack.
     Forward { to: usize, payload: Vec<u8>, tag: u64 },
     Shutdown,
+    /// Liveness probe: a healthy worker answers `Pong` immediately, a hung
+    /// one answers late or never — which is the whole diagnostic.
+    Ping { seq: u64 },
 }
 
 /// Replies from workers to the leader.
@@ -215,6 +281,9 @@ pub enum Reply {
     Delivered { worker: usize, from: usize, bytes: usize, tag: u64 },
     Forwarded,
     Err(String),
+    /// Answer to [`Cmd::Ping`], echoing the probe sequence number so stale
+    /// pongs from an earlier sweep are never miscounted.
+    Pong { worker: usize, seq: u64 },
 }
 
 /// Program specs a worker needs (expert_ffn ladder for one (M, F) shape).
@@ -256,6 +325,21 @@ pub struct Fabric {
     /// per open generation).
     stash: RefCell<Vec<StashEntry>>,
     a2a: A2aMode,
+    /// Deadline armed on every blocking reply wait (`None` = the original
+    /// infallible waits, byte-identical).  Elapsing surfaces a
+    /// [`FabricFault`] instead of hanging forever on a dead worker.
+    deadline: Option<Duration>,
+    /// Tags of aborted exchange generations: their straggler replies (late
+    /// arrivals, stash leftovers) are silently discarded instead of
+    /// failing the next collect as stale — the failover path's drain.
+    aborted: RefCell<HashSet<u64>>,
+    /// Workers declared dead by failover: excluded from relay selection
+    /// and from probe sweeps.  Terminal.
+    dead: RefCell<Vec<bool>>,
+    /// Health state machine per worker, advanced by probe sweeps.
+    health: RefCell<Vec<WorkerHealth>>,
+    /// Probe sequence counter (stale-pong rejection).
+    ping_seq: Cell<u64>,
 }
 
 impl Fabric {
@@ -293,6 +377,11 @@ impl Fabric {
             peer_txs,
             stash: RefCell::new(Vec::new()),
             a2a: A2aMode::Flat,
+            deadline: None,
+            aborted: RefCell::new(HashSet::new()),
+            dead: RefCell::new(vec![false; n]),
+            health: RefCell::new(vec![WorkerHealth::new(); n]),
+            ping_seq: Cell::new(0),
         })
     }
 
@@ -327,6 +416,193 @@ impl Fabric {
         };
     }
 
+    /// Arm (or disarm) the blocking-wait deadline.  `None` restores the
+    /// original infallible waits.
+    pub fn set_exchange_deadline(&mut self, d: Option<Duration>) {
+        self.deadline = d;
+    }
+
+    pub fn exchange_deadline(&self) -> Option<Duration> {
+        self.deadline
+    }
+
+    /// Wrap the live transport in a [`FaultTransport`] executing `plan`
+    /// (test/bench chaos hook).  Installs over whichever transport and a2a
+    /// mode are active, so channel/socket and flat/hierarchical are all
+    /// faulted identically.
+    pub fn install_fault_plan(&mut self, plan: FaultPlan) {
+        let inner = std::mem::replace(
+            &mut self.transport,
+            Box::new(transport::NullTransport),
+        );
+        self.transport = Box::new(FaultTransport::new(inner, plan));
+    }
+
+    /// Declare a worker dead: excluded from relay selection and probe
+    /// sweeps from now on.  Terminal — the failover path re-homes its
+    /// experts and never speaks to it again.
+    pub fn mark_dead(&self, worker: usize) {
+        self.dead.borrow_mut()[worker] = true;
+        self.health.borrow_mut()[worker].state = WorkerState::Dead;
+    }
+
+    pub fn is_dead(&self, worker: usize) -> bool {
+        self.dead.borrow()[worker]
+    }
+
+    /// Workers declared dead so far (ascending).
+    pub fn dead_workers(&self) -> Vec<usize> {
+        self.dead
+            .borrow()
+            .iter()
+            .enumerate()
+            .filter_map(|(w, &d)| d.then_some(w))
+            .collect()
+    }
+
+    /// Abort exchange generations: their tags join the discard set, their
+    /// stashed replies are dropped, and whatever already sits in the reply
+    /// channel is drained non-blocking.  After this the fabric is quiescent
+    /// from the leader's point of view — late straggler replies carrying an
+    /// aborted tag are silently discarded on arrival instead of failing a
+    /// later collect as stale.  Partial results are *discarded, never
+    /// combined*: the interrupted forward re-executes from scratch.
+    pub fn abort_open_exchanges(&self, tags: &[u64]) {
+        let mut aborted = self.aborted.borrow_mut();
+        aborted.extend(tags.iter().copied());
+        self.stash.borrow_mut().retain(|e| !aborted.contains(&e.tag));
+        drop(aborted);
+        // Drain the channel: everything in flight belongs to the aborted
+        // world (the engine aborts *all* open generations at once).
+        while let Ok(Some(_)) = self.transport.try_recv_reply() {}
+    }
+
+    /// One liveness sweep: ping every not-yet-dead worker, wait up to
+    /// `timeout` for the pongs, and advance the per-worker health state
+    /// machine (healthy → suspect after a miss, suspect → dead after
+    /// `dead_after` consecutive misses, suspect → healthy after
+    /// `recover_after` consecutive clean probes).  A worker whose command
+    /// channel is already closed is declared dead immediately — a closed
+    /// wire cannot recover.  Batch replies arriving during the sweep are
+    /// discarded if aborted (straggler drain) and otherwise ignored.
+    pub fn probe_workers(
+        &self,
+        timeout: Duration,
+        dead_after: u32,
+        recover_after: u32,
+    ) -> Result<ProbeReport> {
+        let seq = self.ping_seq.get() + 1;
+        self.ping_seq.set(seq);
+        let mut awaiting = vec![false; self.n];
+        let mut responded = vec![false; self.n];
+        let mut closed = vec![false; self.n];
+        for w in 0..self.n {
+            if self.dead.borrow()[w] {
+                continue;
+            }
+            match self.transport.send(w, Cmd::Ping { seq }) {
+                Ok(()) => awaiting[w] = true,
+                Err(_) => closed[w] = true,
+            }
+        }
+        let start = Instant::now();
+        let mut outstanding =
+            awaiting.iter().filter(|&&a| a).count();
+        while outstanding > 0 {
+            let Some(remaining) = timeout.checked_sub(start.elapsed())
+            else {
+                break;
+            };
+            let Some(reply) =
+                self.transport.recv_reply_deadline(remaining)?
+            else {
+                break;
+            };
+            match reply {
+                Reply::Pong { worker, seq: s }
+                    if s == seq
+                        && worker < self.n
+                        && awaiting[worker]
+                        && !responded[worker] =>
+                {
+                    responded[worker] = true;
+                    outstanding -= 1;
+                }
+                // Stale pongs, aborted-exchange stragglers and worker
+                // errors carry no liveness signal for *this* sweep.
+                _ => {}
+            }
+        }
+        let mut report = ProbeReport::default();
+        let mut health = self.health.borrow_mut();
+        for w in 0..self.n {
+            if self.dead.borrow()[w] {
+                continue;
+            }
+            let h = &mut health[w];
+            if closed[w] {
+                h.state = WorkerState::Dead;
+                report.newly_dead.push(w);
+            } else if responded[w] {
+                h.misses = 0;
+                if h.state == WorkerState::Suspect {
+                    h.clean += 1;
+                    if h.clean >= recover_after {
+                        h.state = WorkerState::Healthy;
+                        h.clean = 0;
+                    }
+                }
+            } else {
+                h.misses += 1;
+                h.clean = 0;
+                if h.misses >= dead_after {
+                    h.state = WorkerState::Dead;
+                    report.newly_dead.push(w);
+                } else {
+                    h.state = WorkerState::Suspect;
+                }
+            }
+            if h.state == WorkerState::Suspect {
+                report.suspects.push(w);
+            }
+        }
+        Ok(report)
+    }
+
+    /// Current health classification of one worker.
+    pub fn worker_state(&self, worker: usize) -> WorkerState {
+        self.health.borrow()[worker].state
+    }
+
+    /// Blocking reply wait honoring the armed deadline: without one this
+    /// is exactly `recv_reply` (the original hang-forever semantics); with
+    /// one, elapsing surfaces a recoverable [`FabricFault`].
+    fn recv_reply_guarded(&self) -> Result<Reply> {
+        match self.deadline {
+            None => self.transport.recv_reply(),
+            Some(d) => match self.transport.recv_reply_deadline(d)? {
+                Some(r) => Ok(r),
+                None => Err(anyhow::Error::new(FabricFault(format!(
+                    "exchange deadline ({d:?}) elapsed with replies \
+                     outstanding"
+                )))),
+            },
+        }
+    }
+
+    /// A worker error is fatal on the infallible path, but with a deadline
+    /// armed it becomes a recoverable [`FabricFault`] (e.g. a garbled
+    /// reply frame surfaces as `Reply::Err` from the socket reader — the
+    /// retry path re-executes the exchange instead of crashing the
+    /// server).
+    fn worker_error(&self, e: String) -> anyhow::Error {
+        if self.deadline.is_some() {
+            anyhow::Error::new(FabricFault(format!("worker error: {e}")))
+        } else {
+            anyhow::anyhow!("worker error: {e}")
+        }
+    }
+
     /// Number of coalesced replies currently parked in the tag-keyed stash.
     /// Bounded by the number of *open* exchange generations (at most one
     /// coalesced reply per worker — or per relay node under hierarchical
@@ -353,10 +629,20 @@ impl Fabric {
             .fetch_add(bytes as u64, Ordering::Relaxed);
         self.transport
             .send(worker, Cmd::LoadExpert { layer, expert, weights })?;
-        match self.transport.recv_reply()? {
-            Reply::Loaded => Ok(()),
-            Reply::Err(e) => anyhow::bail!("worker {worker}: {e}"),
-            _ => anyhow::bail!("unexpected reply to LoadExpert"),
+        loop {
+            match self.recv_reply_guarded()? {
+                Reply::Loaded => return Ok(()),
+                Reply::Err(e) => anyhow::bail!("worker {worker}: {e}"),
+                // Aborted-exchange stragglers and stale pongs can land
+                // between a failover's drain and this blocking ship —
+                // discard them; anything else is a protocol violation.
+                Reply::FfnBatchDone(r)
+                    if self.aborted.borrow().contains(&r.tag) => {}
+                Reply::FfnRelayDone { tag, .. }
+                    if self.aborted.borrow().contains(&tag) => {}
+                Reply::Pong { .. } => {}
+                _ => anyhow::bail!("unexpected reply to LoadExpert"),
+            }
         }
     }
 
@@ -383,7 +669,7 @@ impl Fabric {
     pub fn collect_ffn(&self, n: usize) -> Result<Vec<(usize, usize, HostTensor, u64)>> {
         let mut out = Vec::with_capacity(n);
         while out.len() < n {
-            match self.transport.recv_reply()? {
+            match self.recv_reply_guarded()? {
                 Reply::FfnDone { layer, expert, out: t, tag } => {
                     let bytes = t.byte_len() as u64;
                     self.traffic
@@ -394,7 +680,7 @@ impl Fabric {
                     self.traffic.count_combine(t.dtype(), bytes);
                     out.push((layer, expert, t, tag));
                 }
-                Reply::Err(e) => anyhow::bail!("worker error: {e}"),
+                Reply::Err(e) => return Err(self.worker_error(e)),
                 _ => {}
             }
         }
@@ -450,7 +736,16 @@ impl Fabric {
             by_node.entry(w / node_size).or_default().push((w, b));
         }
         for (node, parts) in by_node {
-            let relay = node * node_size;
+            // The node's first *live* worker relays (the plain first worker
+            // when nobody has died — the default path is unchanged); a
+            // failed-over relay's duties move to its next node-mate.
+            let dead = self.dead.borrow();
+            let relay = (node * node_size..(node + 1) * node_size)
+                .find(|&w| !dead[w])
+                .with_context(|| {
+                    format!("every worker in node {node} is dead")
+                })?;
+            drop(dead);
             let bytes: u64 =
                 parts.iter().map(|(_, b)| b.data.byte_len() as u64).sum();
             self.traffic.bytes_to_workers.fetch_add(bytes, Ordering::Relaxed);
@@ -491,6 +786,10 @@ impl Fabric {
                 out.extend(e.parts);
             } else if open.contains(&stash[i].tag) {
                 i += 1;
+            } else if self.aborted.borrow().contains(&stash[i].tag) {
+                // A straggler of an aborted exchange that slipped into the
+                // stash after the failover drain: discard, never combine.
+                stash.remove(i);
             } else {
                 // Consume the stale entry before failing (mirrors the
                 // channel path, where the failing recv eats the reply) so
@@ -542,7 +841,10 @@ impl Fabric {
                 p.tag
             );
         }
-        if rtag == tag {
+        if self.aborted.borrow().contains(&rtag) {
+            // Late straggler of an aborted exchange (its worker finished
+            // after the failover drain): discard, never combine.
+        } else if rtag == tag {
             anyhow::ensure!(
                 rlayer == layer,
                 "expert batch reply for layer {rlayer} carries tag {tag} of \
@@ -583,7 +885,7 @@ impl Fabric {
         let mut out = Vec::with_capacity(n);
         self.take_stashed(layer, tag, open, &mut out)?;
         while out.len() < n {
-            match self.transport.recv_reply()? {
+            match self.recv_reply_guarded()? {
                 Reply::FfnBatchDone(r) => {
                     let (rl, rt) = (r.layer, r.tag);
                     self.accept_parts(rl, rt, vec![r], layer, tag, open, &mut out)?;
@@ -591,7 +893,7 @@ impl Fabric {
                 Reply::FfnRelayDone { layer: rl, tag: rt, parts } => {
                     self.accept_parts(rl, rt, parts, layer, tag, open, &mut out)?;
                 }
-                Reply::Err(e) => anyhow::bail!("worker error: {e}"),
+                Reply::Err(e) => return Err(self.worker_error(e)),
                 _ => {}
             }
         }
@@ -619,7 +921,7 @@ impl Fabric {
                 Reply::FfnRelayDone { layer: rl, tag: rt, parts } => {
                     self.accept_parts(rl, rt, parts, layer, tag, open, &mut out)?;
                 }
-                Reply::Err(e) => anyhow::bail!("worker error: {e}"),
+                Reply::Err(e) => return Err(self.worker_error(e)),
                 _ => {}
             }
         }
@@ -886,6 +1188,11 @@ fn worker_main(
                     bytes: payload.len(),
                     tag,
                 });
+            }
+            Cmd::Ping { seq } => {
+                // Liveness probe: a worker that reaches its command loop is
+                // alive by definition — answer immediately.
+                reply.send(Reply::Pong { worker: me, seq });
             }
         }
     }

@@ -23,9 +23,13 @@
 
 use std::io::BufReader;
 use std::os::unix::net::UnixStream;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{
+    channel, Receiver, RecvTimeoutError, Sender, TryRecvError,
+};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -76,11 +80,31 @@ pub(super) trait Transport: Send {
     fn send(&self, worker: usize, cmd: Cmd) -> Result<()>;
     fn recv_reply(&self) -> Result<Reply>;
     fn try_recv_reply(&self) -> Result<Option<Reply>>;
+    /// Blocking receive with a deadline: `Ok(None)` when `d` elapses with
+    /// no reply (the fault-tolerance detection signal —
+    /// `DSMOE_EXCHANGE_TIMEOUT_MS`), `Err` only when every worker is gone.
+    /// Both transports funnel replies through one shared channel (the
+    /// socket reader threads decouple the stream read from the leader's
+    /// wait), so `recv_timeout` on it *is* the socket read deadline.
+    fn recv_reply_deadline(&self, d: Duration) -> Result<Option<Reply>>;
     fn shutdown(&mut self);
 }
 
 fn recv_shared(rx: &Receiver<Reply>) -> Result<Reply> {
     rx.recv().context("fabric workers disconnected")
+}
+
+fn recv_shared_deadline(
+    rx: &Receiver<Reply>,
+    d: Duration,
+) -> Result<Option<Reply>> {
+    match rx.recv_timeout(d) {
+        Ok(r) => Ok(Some(r)),
+        Err(RecvTimeoutError::Timeout) => Ok(None),
+        Err(RecvTimeoutError::Disconnected) => {
+            anyhow::bail!("fabric workers disconnected")
+        }
+    }
 }
 
 fn try_recv_shared(rx: &Receiver<Reply>) -> Result<Option<Reply>> {
@@ -167,6 +191,10 @@ impl Transport for ChannelTransport {
 
     fn try_recv_reply(&self) -> Result<Option<Reply>> {
         try_recv_shared(&self.reply_rx)
+    }
+
+    fn recv_reply_deadline(&self, d: Duration) -> Result<Option<Reply>> {
+        recv_shared_deadline(&self.reply_rx, d)
     }
 
     fn shutdown(&mut self) {
@@ -320,16 +348,243 @@ impl Transport for SocketTransport {
         try_recv_shared(&self.reply_rx)
     }
 
+    fn recv_reply_deadline(&self, d: Duration) -> Result<Option<Reply>> {
+        recv_shared_deadline(&self.reply_rx, d)
+    }
+
     fn shutdown(&mut self) {
         for s in &self.leader {
             let _ = frame::write_frame(s, &frame::encode_cmd(&Cmd::Shutdown));
         }
         // Shutdown frames make each ingress forward + exit and each worker
         // break; the worker dropping its socket end EOFs the reader.
+        // Then hard-close both socket directions: queued frames (the
+        // Shutdown just written) still drain to a live worker, but a dead
+        // or hung worker's ingress/reader threads — blocked mid-read —
+        // error out instead of pinning the join forever (bounded-wait
+        // shutdown; clones share the descriptor, so this reaches them).
+        for s in &self.leader {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
         for j in &mut self.joins {
             if let Some(j) = j.take() {
                 let _ = j.join();
             }
         }
+    }
+}
+
+// -------------------------------------------------------- fault injection
+
+/// Deterministic chaos plan for tests and the `fault_tolerance` bench
+/// study (installed via `Fabric::install_fault_plan`, wrapping whichever
+/// real transport is active).  All counters are 1-based and count only the
+/// expert-exchange traffic (batch dispatches / batch replies), so a plan
+/// is stable against unrelated frames (loads, pings, route traffic).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Kill worker `.0` at its `.1`-th expert-batch dispatch: the command
+    /// is replaced by a `Shutdown` (the worker exits mid-exchange, never
+    /// replying) and every later send to it is black-holed — exactly what
+    /// a crashed process looks like from the leader.
+    pub kill: Option<(usize, u64)>,
+    /// Hold each of the first `.1` batch replies back by `.0` (a hung /
+    /// GC-pausing worker: replies arrive, just late).
+    pub delay: Option<(std::time::Duration, u64)>,
+    /// Drop the `.1`-th batch reply on the floor (a lost frame).
+    pub drop_reply: Option<u64>,
+    /// Replace the `.1`-th batch reply with a decode-failure `Reply::Err`
+    /// — the leader-visible effect of a garbled reply frame (the socket
+    /// reader surfaces codec errors exactly this way).
+    pub garble_reply: Option<u64>,
+}
+
+/// Placeholder transport used only while swapping the real transport out of a
+/// `Fabric` (e.g. to wrap it in a [`FaultTransport`]).  Every operation fails
+/// loudly; it must never be observable outside the swap.
+pub(super) struct NullTransport;
+
+impl Transport for NullTransport {
+    fn send(&self, _worker: usize, _cmd: Cmd) -> Result<()> {
+        anyhow::bail!("fabric transport replaced")
+    }
+
+    fn recv_reply(&self) -> Result<Reply> {
+        anyhow::bail!("fabric transport replaced")
+    }
+
+    fn try_recv_reply(&self) -> Result<Option<Reply>> {
+        anyhow::bail!("fabric transport replaced")
+    }
+
+    fn recv_reply_deadline(&self, _d: Duration) -> Result<Option<Reply>> {
+        anyhow::bail!("fabric transport replaced")
+    }
+
+    fn shutdown(&mut self) {}
+}
+
+/// [`Transport`] wrapper that executes a [`FaultPlan`].  Lives between the
+/// `Fabric` and the real wire so both transports (and both a2a modes) are
+/// faulted identically.
+pub(super) struct FaultTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    /// Expert-batch dispatches sent toward the kill victim so far.
+    dispatches: AtomicU64,
+    /// Batch replies seen so far (drop/garble/delay index base).
+    replies: AtomicU64,
+    killed: AtomicBool,
+    /// Replies parked by `delay`, with their release instants.
+    held: Mutex<Vec<(Instant, Reply)>>,
+}
+
+impl FaultTransport {
+    pub(super) fn new(inner: Box<dyn Transport>, plan: FaultPlan) -> Self {
+        FaultTransport {
+            inner,
+            plan,
+            dispatches: AtomicU64::new(0),
+            replies: AtomicU64::new(0),
+            killed: AtomicBool::new(false),
+            held: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Apply drop/garble/delay to one received reply.  `None` means the
+    /// reply was consumed (dropped, or parked for later release).
+    fn filter(&self, r: Reply) -> Option<Reply> {
+        if !matches!(r, Reply::FfnBatchDone(_) | Reply::FfnRelayDone { .. })
+        {
+            return Some(r);
+        }
+        let n = self.replies.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.plan.drop_reply == Some(n) {
+            return None;
+        }
+        if self.plan.garble_reply == Some(n) {
+            return Some(Reply::Err(
+                "injected: garbled reply frame".to_string(),
+            ));
+        }
+        if let Some((dur, upto)) = self.plan.delay {
+            if n <= upto {
+                self.held
+                    .lock()
+                    .unwrap()
+                    .push((Instant::now() + dur, r));
+                return None;
+            }
+        }
+        Some(r)
+    }
+
+    /// Pop a held reply whose release instant has passed.
+    fn pop_ready_held(&self) -> Option<Reply> {
+        let mut held = self.held.lock().unwrap();
+        let now = Instant::now();
+        let i = held.iter().position(|(at, _)| *at <= now)?;
+        Some(held.remove(i).1)
+    }
+
+    /// Earliest release instant among held replies, if any.
+    fn next_held_release(&self) -> Option<Instant> {
+        self.held.lock().unwrap().iter().map(|(at, _)| *at).min()
+    }
+}
+
+impl Transport for FaultTransport {
+    fn send(&self, worker: usize, cmd: Cmd) -> Result<()> {
+        if let Some((victim, at)) = self.plan.kill {
+            if worker == victim {
+                if self.killed.load(Ordering::Relaxed) {
+                    // A crashed worker hears nothing; the send itself
+                    // "succeeds" from the leader's point of view (the
+                    // frame vanishes into a dead socket's buffers).
+                    return Ok(());
+                }
+                if matches!(
+                    cmd,
+                    Cmd::ExpertFfnBatch(_)
+                        | Cmd::RelayFfnBatch { .. }
+                        | Cmd::RelayedFfnBatch { .. }
+                ) {
+                    let n =
+                        self.dispatches.fetch_add(1, Ordering::Relaxed) + 1;
+                    if n >= at {
+                        self.killed.store(true, Ordering::Relaxed);
+                        // The victim dies *instead of* computing this
+                        // batch: its reply never comes.
+                        return self.inner.send(worker, Cmd::Shutdown);
+                    }
+                }
+            }
+        }
+        self.inner.send(worker, cmd)
+    }
+
+    fn recv_reply(&self) -> Result<Reply> {
+        loop {
+            if let Some(r) = self.pop_ready_held() {
+                return Ok(r);
+            }
+            match self.next_held_release() {
+                Some(at) => {
+                    // Wait for the wire, but only until the next held
+                    // reply matures (whichever comes first).
+                    let wait = at
+                        .saturating_duration_since(Instant::now())
+                        .max(Duration::from_micros(1));
+                    if let Some(r) = self.inner.recv_reply_deadline(wait)? {
+                        if let Some(r) = self.filter(r) {
+                            return Ok(r);
+                        }
+                    }
+                }
+                None => {
+                    let r = self.inner.recv_reply()?;
+                    if let Some(r) = self.filter(r) {
+                        return Ok(r);
+                    }
+                }
+            }
+        }
+    }
+
+    fn try_recv_reply(&self) -> Result<Option<Reply>> {
+        while let Some(r) = self.inner.try_recv_reply()? {
+            if let Some(r) = self.filter(r) {
+                return Ok(Some(r));
+            }
+        }
+        Ok(self.pop_ready_held())
+    }
+
+    fn recv_reply_deadline(&self, d: Duration) -> Result<Option<Reply>> {
+        let start = Instant::now();
+        loop {
+            if let Some(r) = self.pop_ready_held() {
+                return Ok(Some(r));
+            }
+            let Some(remaining) = d.checked_sub(start.elapsed()) else {
+                return Ok(None);
+            };
+            let wait = match self.next_held_release() {
+                Some(at) => at
+                    .saturating_duration_since(Instant::now())
+                    .min(remaining)
+                    .max(Duration::from_micros(1)),
+                None => remaining,
+            };
+            if let Some(r) = self.inner.recv_reply_deadline(wait)? {
+                if let Some(r) = self.filter(r) {
+                    return Ok(Some(r));
+                }
+            }
+        }
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown();
     }
 }

@@ -205,6 +205,11 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         "priority tiers: request i gets tier i % tiers (tier 0 = batch, \
          higher = interactive, preempts); 1 = single-tier FIFO",
     );
+    let fault_tolerance = args.get_bool(
+        "fault-tolerance", false,
+        "survive worker death/hangs: exchange deadlines, probe sweeps, \
+         live expert failover (DSMOE_FAULT_TOLERANCE)",
+    );
     if args.has("help") {
         eprint!("{}", args.usage("ds-moe ep-serve"));
         return Ok(());
@@ -249,6 +254,9 @@ fn cmd_ep_serve(mut args: Args) -> Result<()> {
         let d = Dtype::parse(&wire_dtype)
             .with_context(|| format!("--wire-dtype {wire_dtype:?}"))?;
         ep.set_wire_dtype(d)?;
+    }
+    if fault_tolerance {
+        ep.set_fault_tolerance(true);
     }
     println!(
         "ep-serve {model}: {workers} workers, batch {batch}, {a2a:?}, \
@@ -490,6 +498,19 @@ fn ep_report(ep: &EpEngine) {
             s.recent_skew(),
             s.entropy(),
             100.0 * s.utilization()
+        );
+    }
+    if ep.fault_tolerance() {
+        let degraded = ep.metrics.counter("degraded_steps") > 0;
+        println!(
+            "fault tolerance: on, degraded: {degraded} — \
+             {} worker deaths, {} failovers, {} engine retries, \
+             {} exchange timeouts, {} requests requeued",
+            ep.metrics.counter("worker_deaths"),
+            ep.metrics.counter("failovers"),
+            ep.metrics.counter("ft_retries"),
+            ep.metrics.counter("exchange_timeouts"),
+            ep.metrics.counter("fault_requeues"),
         );
     }
 }

@@ -197,6 +197,28 @@
 //! | `DSMOE_SHED_POLICY`   | `reject` (default) sheds the overflowing new |
 //! |                       | arrival; `drop-oldest` sheds the tier's      |
 //! |                       | stalest waiter instead.  Router-level.       |
+//! | `DSMOE_FAULT_TOLERANCE`| survive worker death/hangs: blocking expert |
+//! |                       | collects get a deadline, a miss triggers a   |
+//! |                       | probe sweep + failover (experts re-homed     |
+//! |                       | onto survivors, placement epoch bumped) and  |
+//! |                       | the forward re-executes bit-identically.     |
+//! |                       | Unset/`0` (default) keeps the infallible     |
+//! |                       | path byte-identical                          |
+//! |                       | ([`EpEngine::set_fault_tolerance`]).         |
+//! | `DSMOE_EXCHANGE_TIMEOUT_MS`| deadline on blocking expert-exchange    |
+//! |                       | waits when fault tolerance is on (default    |
+//! |                       | 30000; [`EpEngine::set_exchange_timeout`]).  |
+//! | `DSMOE_FT_PROBE_TIMEOUT_MS`| per-sweep pong wait of the worker       |
+//! |                       | health probe (default 1000;                  |
+//! |                       | [`EpEngine::set_probe_params`]).             |
+//! | `DSMOE_FT_DEAD_AFTER` | consecutive missed probes before a worker is |
+//! |                       | declared dead (default 2; a closed wire is   |
+//! |                       | dead immediately).                           |
+//! | `DSMOE_FT_RECOVER_AFTER`| clean probes before a suspect worker is    |
+//! |                       | healthy again (default 2).                   |
+//! | `DSMOE_FT_RETRIES`    | forward re-executions per fabric fault       |
+//! |                       | before the error propagates to the scheduler |
+//! |                       | fold (default 3; [`EpEngine::set_ft_retries`]).|
 //!
 //! All paths — serial, overlapped, pipelined at any depth, single- or
 //! multi-threaded leader — produce **bit-identical** logits for prefill
@@ -358,6 +380,26 @@ pub struct EpEngine {
     /// Compiled lane counts at which a scheduler admission prefill can run
     /// (every prefill-side program shape exists in the manifest).
     prefill_sizes: Vec<usize>,
+    /// `DSMOE_FAULT_TOLERANCE`: exchange deadlines + probe sweeps +
+    /// worker failover + forward retries.  Off (default) keeps the
+    /// infallible dispatch path byte-identical.
+    fault_tolerance: bool,
+    /// Deadline on blocking expert-exchange waits while fault tolerance
+    /// is on (`DSMOE_EXCHANGE_TIMEOUT_MS`, default 30s).
+    exchange_timeout: std::time::Duration,
+    /// Pong wait of one worker-health probe sweep
+    /// (`DSMOE_FT_PROBE_TIMEOUT_MS`, default 1s).
+    probe_timeout: std::time::Duration,
+    /// Consecutive missed probes before a worker is declared dead
+    /// (`DSMOE_FT_DEAD_AFTER`, default 2).
+    ft_dead_after: u32,
+    /// Clean probes before a suspect worker is healthy again
+    /// (`DSMOE_FT_RECOVER_AFTER`, default 2).
+    ft_recover_after: u32,
+    /// Forward re-executions per fabric fault before the error escapes to
+    /// the scheduler's fold-and-requeue seam (`DSMOE_FT_RETRIES`,
+    /// default 3).
+    ft_retries: usize,
 }
 
 /// Decode KV caches for one contiguous lane group (a pipeline microbatch).
@@ -726,6 +768,18 @@ impl EpEngine {
             }
         }
 
+        // Fault tolerance (armed only after the startup weight ship: a
+        // worker dying during construction is a hard error — there is
+        // nothing to fail over to yet).
+        let fault_tolerance = std::env::var_os("DSMOE_FAULT_TOLERANCE")
+            .is_some_and(|v| v != "0");
+        let exchange_timeout = std::time::Duration::from_millis(
+            env_pos_usize("DSMOE_EXCHANGE_TIMEOUT_MS", 30_000) as u64,
+        );
+        if fault_tolerance {
+            fabric.set_exchange_deadline(Some(exchange_timeout));
+        }
+
         let load_stats: Vec<ExpertLoadStats> = cfg
             .moe_layers()
             .into_iter()
@@ -828,6 +882,15 @@ impl EpEngine {
             lane_ext: Vec::new(),
             pending_admission: None,
             prefill_sizes,
+            fault_tolerance,
+            exchange_timeout,
+            probe_timeout: std::time::Duration::from_millis(
+                env_pos_usize("DSMOE_FT_PROBE_TIMEOUT_MS", 1000) as u64,
+            ),
+            ft_dead_after: env_pos_usize("DSMOE_FT_DEAD_AFTER", 2) as u32,
+            ft_recover_after: env_pos_usize("DSMOE_FT_RECOVER_AFTER", 2)
+                as u32,
+            ft_retries: env_pos_usize("DSMOE_FT_RETRIES", 3),
         })
     }
 
@@ -1041,6 +1104,63 @@ impl EpEngine {
         self.bb.force_expert = expert;
     }
 
+    /// Toggle fault tolerance programmatically (defaults to
+    /// `DSMOE_FAULT_TOLERANCE`; tests and benches set it here so runs
+    /// never race on the environment).  On: blocking expert collects get
+    /// the exchange deadline and faults take the probe → failover →
+    /// retry path.  Off: the deadline is disarmed and every wait is the
+    /// original infallible block — byte-identical to the pre-FT engine.
+    pub fn set_fault_tolerance(&mut self, on: bool) {
+        self.fault_tolerance = on;
+        self.fabric
+            .set_exchange_deadline(on.then_some(self.exchange_timeout));
+    }
+
+    pub fn fault_tolerance(&self) -> bool {
+        self.fault_tolerance
+    }
+
+    /// Deadline on blocking expert-exchange waits
+    /// (`DSMOE_EXCHANGE_TIMEOUT_MS`); re-arms the fabric when fault
+    /// tolerance is on.
+    pub fn set_exchange_timeout(&mut self, d: std::time::Duration) {
+        self.exchange_timeout = d;
+        if self.fault_tolerance {
+            self.fabric.set_exchange_deadline(Some(d));
+        }
+    }
+
+    /// Worker-health probe knobs (`DSMOE_FT_PROBE_TIMEOUT_MS`,
+    /// `DSMOE_FT_DEAD_AFTER`, `DSMOE_FT_RECOVER_AFTER`).
+    pub fn set_probe_params(
+        &mut self,
+        timeout: std::time::Duration,
+        dead_after: u32,
+        recover_after: u32,
+    ) {
+        self.probe_timeout = timeout;
+        self.ft_dead_after = dead_after.max(1);
+        self.ft_recover_after = recover_after.max(1);
+    }
+
+    /// Forward re-executions per fabric fault before the error escapes to
+    /// the scheduler (`DSMOE_FT_RETRIES`; 0 = always escalate).
+    pub fn set_ft_retries(&mut self, n: usize) {
+        self.ft_retries = n;
+    }
+
+    /// Install a deterministic chaos plan on the fabric transport (kill /
+    /// delay / drop / garble — tests and the `fault_tolerance` bench
+    /// study).
+    pub fn set_fault_plan(&mut self, plan: crate::fabric::FaultPlan) {
+        self.fabric.install_fault_plan(plan);
+    }
+
+    /// Health classification of one fabric worker (test observability).
+    pub fn worker_state(&self, w: usize) -> crate::fabric::WorkerState {
+        self.fabric.worker_state(w)
+    }
+
     /// Deterministic migration hook for studies and tests: replicate
     /// expert `expert` of every MoE layer onto the least-expert-loaded
     /// non-hosting workers until it has `r` hosts, shipping weights over
@@ -1181,6 +1301,82 @@ impl EpEngine {
             self.apply_placement()?;
         }
         Ok(())
+    }
+
+    /// Classify a fabric fault for the report counters: a missed exchange
+    /// deadline is an `exchange_timeout` (dead or hung worker), anything
+    /// else (e.g. a garbled reply frame surfacing as a worker error) a
+    /// `worker_error`.
+    fn note_fault(&self, e: &anyhow::Error) {
+        if format!("{e:#}").contains("deadline") {
+            self.metrics.inc("exchange_timeouts", 1);
+        } else {
+            self.metrics.inc("worker_errors", 1);
+        }
+    }
+
+    /// The failure path behind every fault-tolerant retry: abort all open
+    /// exchanges (stash drained, partial replies discarded — never
+    /// combined), drop any staged admission (its prefill re-runs from
+    /// scratch), sweep worker health, and fail over each newly dead
+    /// worker.  After this the fabric is quiescent and the placement
+    /// epoch reflects only live workers, so the retried forward
+    /// re-executes bit-identically — replicas and re-shipped experts hold
+    /// byte-identical weights wherever they live.
+    fn recover_from_fault(&mut self) -> Result<()> {
+        let t = std::time::Instant::now();
+        let tags = std::mem::take(&mut self.open_tags);
+        self.fabric.abort_open_exchanges(&tags);
+        self.pending_admission = None;
+        let report = self.fabric.probe_workers(
+            self.probe_timeout,
+            self.ft_dead_after,
+            self.ft_recover_after,
+        )?;
+        for w in report.newly_dead {
+            self.failover_worker(w)?;
+        }
+        self.metrics.observe("ft_recovery", t.elapsed());
+        Ok(())
+    }
+
+    /// Live expert failover for a declared-dead worker: plan replications
+    /// that keep every expert it hosted on a live replica-group-0 worker
+    /// (dispatch derives destinations from `owner(e, 0)`), re-ship those
+    /// weights from the shared checkpoint over the fabric's blocking load
+    /// path, evict the worker from every layer, and bump the placement
+    /// epoch exactly like an online rebalance.  The worker is marked dead
+    /// on the fabric first, so hierarchical relays re-route around it and
+    /// probe sweeps skip it from now on.
+    fn failover_worker(&mut self, w: usize) -> Result<()> {
+        self.metrics.inc("worker_deaths", 1);
+        self.fabric.mark_dead(w);
+        let dead: Vec<bool> = (0..self.fabric.n_workers())
+            .map(|x| self.fabric.is_dead(x))
+            .collect();
+        let layers: Vec<usize> =
+            self.placement.layers.keys().copied().collect();
+        let mut ships: Vec<(usize, usize, usize)> = Vec::new();
+        for layer in layers {
+            let lp = self.placement.layer_mut(layer).unwrap();
+            for a in Rebalancer::plan_failover(lp, w, &dead) {
+                if let Action::Replicate { expert, to, .. } = a {
+                    if lp.add_replica(expert, to) {
+                        ships.push((layer, expert, to));
+                    }
+                }
+            }
+            lp.evict_worker(w);
+            let max_r = lp.max_replication();
+            self.metrics
+                .gauge(&format!("expert_replicas_l{layer}"), max_r as f64);
+        }
+        for (layer, e, to) in ships {
+            self.ship_expert(layer, e, to)?;
+            self.metrics.inc("expert_migrations", 1);
+        }
+        self.metrics.inc("failovers", 1);
+        self.apply_placement()
     }
 
     /// Request leader shard threads (defaults to `DSMOE_LEADER_THREADS`,
@@ -1325,7 +1521,56 @@ impl EpEngine {
 
     /// Full prefill over padded prompts [B, smax]; returns last-position
     /// logits per lane at `lens[b]-1` and primes the decode caches.
+    ///
+    /// With `DSMOE_FAULT_TOLERANCE`, a fabric fault (dead/hung worker,
+    /// garbled reply) triggers abort → probe → failover and up to
+    /// `DSMOE_FT_RETRIES` re-executions; a prefill rebuilds every lane
+    /// from the tokens, so a retried run is bit-identical to an unfaulted
+    /// one.
     pub fn forward_prefill(
+        &mut self,
+        tokens: &[i32],
+        lens: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut attempt = 0usize;
+        loop {
+            match self.forward_prefill_inner(tokens, lens) {
+                Ok(out) => return Ok(out),
+                Err(e) => {
+                    if !self.should_retry_fault(&e, attempt) {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    self.retry_recover(&e)?;
+                }
+            }
+        }
+    }
+
+    /// Retry gate shared by the forward wrappers: an engine-local retry
+    /// is worthwhile only when fault tolerance is on, the error is a
+    /// recoverable fabric fault, retries remain, and no staged admission
+    /// is in flight — an interrupted staged admission must escape to the
+    /// scheduler, whose fold re-queues the staged requests (an
+    /// engine-local retry would silently lose them).  A propagated error
+    /// keeps its type chain so the scheduler's `try_recover` can still
+    /// classify it.
+    fn should_retry_fault(&self, e: &anyhow::Error, attempt: usize) -> bool {
+        self.fault_tolerance
+            && self.pending_admission.is_none()
+            && crate::fabric::is_fault(e)
+            && attempt < self.ft_retries
+    }
+
+    /// Count and run one recovery ahead of a forward retry.
+    fn retry_recover(&mut self, e: &anyhow::Error) -> Result<()> {
+        self.metrics.inc("ft_retries", 1);
+        self.note_fault(e);
+        self.recover_from_fault()
+            .with_context(|| format!("recovering from fault: {e:#}"))
+    }
+
+    fn forward_prefill_inner(
         &mut self,
         tokens: &[i32],
         lens: &[usize],
@@ -1574,6 +1819,29 @@ impl EpEngine {
 
     /// One decode step over [B] tokens at per-lane positions.
     pub fn forward_decode(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        // Fault-tolerant retry loop (see `forward_prefill`): a decode
+        // step reads KV below each lane's position and writes only at it,
+        // so re-execution after a failover is bit-identical.
+        let mut attempt = 0usize;
+        loop {
+            match self.forward_decode_inner(tokens, pos) {
+                Ok(out) => return Ok(out),
+                Err(e) => {
+                    if !self.should_retry_fault(&e, attempt) {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    self.retry_recover(&e)?;
+                }
+            }
+        }
+    }
+
+    fn forward_decode_inner(
         &mut self,
         tokens: &[i32],
         pos: &[i32],
@@ -3124,6 +3392,19 @@ impl ForwardModel for EpEngine {
         if let Some(l) = self.lane_live.get_mut(phys) {
             *l = false;
         }
+    }
+
+    fn try_recover(&mut self, err: &anyhow::Error) -> Result<bool> {
+        // The scheduler's second line of defense: engine-local retries
+        // are exhausted (or were skipped because a staged admission was
+        // in flight).  Recover the fabric/placement here and tell the
+        // scheduler to fold every in-flight request back into the queue.
+        if !self.fault_tolerance || !crate::fabric::is_fault(err) {
+            return Ok(false);
+        }
+        self.note_fault(err);
+        self.recover_from_fault()?;
+        Ok(true)
     }
 }
 

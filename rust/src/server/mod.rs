@@ -136,6 +136,18 @@
 //! |                        | new arrival, default) or `drop-oldest` (the |
 //! |                        | tier's stalest waiter — the new arrival     |
 //! |                        | takes its slot).                            |
+//! | `DSMOE_FAULT_TOLERANCE`| survive worker death/hangs: exchange        |
+//! |                        | deadlines, probe sweeps, live expert        |
+//! |                        | failover, and scheduler-level request       |
+//! |                        | requeue (token-identical continuations).    |
+//! |                        | Default off: any worker fault is a loud,    |
+//! |                        | immediate error, bitwise identical to the   |
+//! |                        | pre-FT path.  See `server/ep.rs` for the    |
+//! |                        | companion `DSMOE_EXCHANGE_TIMEOUT_MS` /     |
+//! |                        | `DSMOE_FT_PROBE_TIMEOUT_MS` /               |
+//! |                        | `DSMOE_FT_DEAD_AFTER` /                     |
+//! |                        | `DSMOE_FT_RECOVER_AFTER` /                  |
+//! |                        | `DSMOE_FT_RETRIES` knobs.                   |
 
 pub mod engine;
 pub mod ep;

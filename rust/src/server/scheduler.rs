@@ -182,7 +182,24 @@ pub trait ForwardModel {
 
     /// Free a retired request's lane.
     fn release(&mut self, lane: usize);
+
+    /// A step failed with `err`: attempt backend-level recovery.  A
+    /// fault-tolerant backend (the EP engine under
+    /// `DSMOE_FAULT_TOLERANCE`) probes its workers, fails over dead
+    /// ones, and returns `Ok(true)` — the scheduler then folds every
+    /// in-flight request back into the queue through the preemption seam
+    /// (continuations stay token-identical) and keeps stepping.
+    /// `Ok(false)` (the default) means the error is not recoverable here
+    /// and must propagate.
+    fn try_recover(&mut self, _err: &anyhow::Error) -> Result<bool> {
+        Ok(false)
+    }
 }
+
+/// Consecutive recovered-but-failed steps after which the scheduler stops
+/// retrying and propagates the fault (a wedged fabric must not spin
+/// forever); any successful step resets the count.
+const MAX_CONSECUTIVE_FAULTS: u32 = 8;
 
 struct ActiveSeq {
     request: Request,
@@ -214,6 +231,14 @@ pub struct Scheduler<M: ForwardModel> {
     /// Requests whose chunked admission is mid-flight in the backend
     /// (staged, not yet collectable) — see `step_chunked`.
     chunked: Option<Vec<Request>>,
+    /// Requests popped for the admission running *within the current
+    /// step* (staged or stop-the-world).  Held in a field rather than a
+    /// local so a fault mid-step can fold them back into the queue
+    /// instead of losing them.
+    admitting: Option<Vec<Request>>,
+    /// Consecutive steps that ended in a recovered fault (see
+    /// [`MAX_CONSECUTIVE_FAULTS`]).
+    consecutive_faults: u32,
     /// Preempted-lane progress awaiting re-admission, by request id.
     resumes: HashMap<u64, ResumeState>,
     pub done: Vec<Response>,
@@ -244,6 +269,8 @@ impl<M: ForwardModel> Scheduler<M> {
             serving,
             active: HashMap::new(),
             chunked: None,
+            admitting: None,
+            consecutive_faults: 0,
             resumes: HashMap::new(),
             done: Vec::new(),
             metrics,
@@ -305,6 +332,16 @@ impl<M: ForwardModel> Scheduler<M> {
     /// of stopping every decode lane for the whole prefill.  The `prefill`
     /// latency metric then covers only the exposed (non-hidden) tail.
     pub fn step(&mut self) -> Result<bool> {
+        match self.step_attempt() {
+            Ok(worked) => {
+                self.consecutive_faults = 0;
+                Ok(worked)
+            }
+            Err(e) => self.recover_step(e),
+        }
+    }
+
+    fn step_attempt(&mut self) -> Result<bool> {
         if self.chunked.is_some() {
             return self.step_chunked();
         }
@@ -320,8 +357,6 @@ impl<M: ForwardModel> Scheduler<M> {
             urgent,
         );
         let mut worked = false;
-        // Requests whose admission is staged behind this step's decode.
-        let mut staged: Option<Vec<Request>> = None;
         if let Decision::Prefill { compiled, take } = decision {
             let reqs = self.router.pop_up_to(take);
             for req in &reqs {
@@ -334,15 +369,30 @@ impl<M: ForwardModel> Scheduler<M> {
                     );
                 }
             }
-            if !self.active.is_empty()
-                && self.model.begin_prefill(compiled, &reqs)?
-            {
-                staged = Some(reqs);
-            } else {
+            // Popped requests live in `self.admitting` until registered,
+            // so a fault anywhere in the step can fold them back into
+            // the queue (`recover_step`) instead of losing them.
+            let interleave = !self.active.is_empty();
+            self.admitting = Some(reqs);
+            let staged = interleave && {
+                let reqs = self.admitting.take().unwrap();
+                let r = self.model.begin_prefill(compiled, &reqs);
+                self.admitting = Some(reqs);
+                r?
+            };
+            if !staged {
+                let reqs = self.admitting.take().unwrap();
                 let t = std::time::Instant::now();
-                let admitted = self.model.prefill(compiled, &reqs)?;
-                self.metrics.observe("prefill", t.elapsed());
-                self.register_admitted(reqs, admitted)?;
+                match self.model.prefill(compiled, &reqs) {
+                    Ok(admitted) => {
+                        self.metrics.observe("prefill", t.elapsed());
+                        self.register_admitted(reqs, admitted)?;
+                    }
+                    Err(e) => {
+                        self.admitting = Some(reqs);
+                        return Err(e);
+                    }
+                }
             }
             worked = true;
         }
@@ -352,24 +402,84 @@ impl<M: ForwardModel> Scheduler<M> {
             self.metrics.observe("decode_step", t.elapsed());
             worked = true;
         }
-        if let Some(reqs) = staged {
+        if self.admitting.is_some() {
             if self.model.prefill_pending() {
                 // Chunked prefill: the staged admission ran only a
                 // token-budget slice behind this decode step.  Park it;
                 // subsequent steps keep draining it (`step_chunked`).
                 self.metrics.inc("chunked_admissions", 1);
-                self.chunked = Some(reqs);
+                self.chunked = self.admitting.take();
             } else {
                 let t = std::time::Instant::now();
                 let admitted = self.model.finish_prefill()?;
                 self.metrics.observe("prefill", t.elapsed());
                 self.metrics.inc("interleaved_admissions", 1);
+                let reqs = self.admitting.take().unwrap();
                 self.register_admitted(reqs, admitted)?;
             }
         }
         self.metrics.gauge("queue_depth", self.router.queue_len() as f64);
         self.metrics.gauge("lanes_busy", self.active.len() as f64);
         Ok(worked)
+    }
+
+    /// A step failed.  If the backend recovers
+    /// ([`ForwardModel::try_recover`]: probe → failover → placement
+    /// bump), fold every in-flight request back into the queue through
+    /// the preemption seam — interrupted admissions re-queue untouched,
+    /// interrupted decodes fold their generated prefix into the prompt
+    /// with a [`ResumeState`] so the re-prefilled continuation is
+    /// token-identical — and report the step as worked so drive loops
+    /// keep going.  Unrecoverable errors (and faults that persist past
+    /// [`MAX_CONSECUTIVE_FAULTS`] steps without one clean step in
+    /// between) propagate unchanged.
+    fn recover_step(&mut self, e: anyhow::Error) -> Result<bool> {
+        self.consecutive_faults += 1;
+        if self.consecutive_faults > MAX_CONSECUTIVE_FAULTS
+            || !self.model.try_recover(&e)?
+        {
+            return Err(e);
+        }
+        let mut folded = 0u64;
+        // Interrupted admissions first: these requests were popped from
+        // the queue front, so re-queueing them before the older active
+        // lanes keeps overall age order once both are at the front.
+        for reqs in [self.admitting.take(), self.chunked.take()]
+            .into_iter()
+            .flatten()
+        {
+            for req in reqs.into_iter().rev() {
+                self.router.requeue_front(req);
+                folded += 1;
+            }
+        }
+        // Interrupted decodes: exactly the preemption fold.  Push in
+        // reverse id (admission) order so the oldest request ends up
+        // frontmost within its tier.
+        let mut lanes: Vec<usize> = self.active.keys().copied().collect();
+        lanes.sort_unstable_by_key(|l| {
+            std::cmp::Reverse(self.active[l].request.id)
+        });
+        for lane in lanes {
+            let seq = self.active.remove(&lane).unwrap();
+            self.model.release(lane);
+            let mut req = seq.request;
+            req.prompt.truncate(seq.prompt_len);
+            req.prompt.extend_from_slice(&seq.generated);
+            self.resumes.insert(
+                req.id,
+                ResumeState {
+                    prompt_len: seq.prompt_len,
+                    generated: seq.generated,
+                    first_token_at: seq.first_token_at,
+                },
+            );
+            self.router.requeue_front(req);
+            folded += 1;
+        }
+        self.metrics.inc("fault_requeues", folded);
+        self.metrics.inc("degraded_steps", 1);
+        Ok(true)
     }
 
     /// One scheduler iteration while a chunked admission is mid-flight:

@@ -29,6 +29,16 @@
 //! work that now runs concurrently across shards) and `shard_idle` (each
 //! shard's exposed wait for expert replies).  With `leader_threads = 1`
 //! the engine never constructs a pool and nothing here runs.
+//!
+//! **Failure model.**  Shards are leader-side threads, not fabric workers:
+//! a shard panic or channel break is a *leader* failure and fails the
+//! forward loudly and coherently (the pool joins on drop; see
+//! `leader_shard_and_fabric_threads_join_on_drop`).  The fault-tolerance
+//! path (`DSMOE_FAULT_TOLERANCE`, PR 10) covers *worker* death/hangs only
+//! and is exercised with `leader_threads = 1`; composing mid-protocol
+//! shard state with worker failover is deliberately out of scope — a
+//! fault surfacing while a shard holds prepared-but-undispatched batches
+//! propagates as an ordinary error rather than being retried.
 
 use std::collections::HashMap;
 use std::rc::Rc;

@@ -188,7 +188,7 @@ fn coalesced_batch_matches_per_expert_path_with_fewer_messages() {
                 w,
                 ExpertFfnBatch {
                     layer: 0,
-                    experts: experts.iter().map(|&e| (e, counts[e])).collect(),
+                    experts: experts.iter().map(|&e| (e, 0, counts[e])).collect(),
                     data: HostTensor::f32(&[total, mdim], data),
                     tag: 7, // one exchange generation shared by both workers
                 },
@@ -205,7 +205,7 @@ fn coalesced_batch_matches_per_expert_path_with_fewer_messages() {
         assert_eq!(r.layer, 0);
         let flat = r.data.as_f32().unwrap();
         let mut off = 0usize;
-        for &(e, c) in &r.experts {
+        for &(e, _slot, c) in &r.experts {
             assert_eq!(c, counts[e]);
             assert_eq!(
                 &flat[off * mdim..(off + c) * mdim],
@@ -311,7 +311,7 @@ fn concurrent_tagged_exchanges_collect_by_tag() {
         let count = block.len() / mdim;
         ExpertFfnBatch {
             layer,
-            experts: vec![(e, count)],
+            experts: vec![(e, 0, count)],
             data: HostTensor::f32(&[count, mdim], block.to_vec()),
             tag,
         }
@@ -369,7 +369,7 @@ fn stash_bounded_by_open_tags_and_drains() {
         (0..3 * mdim).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
     let mk_batch = |tag: u64| ExpertFfnBatch {
         layer: 0,
-        experts: vec![(0, 3)],
+        experts: vec![(0, 0, 3)],
         data: HostTensor::f32(&[3, mdim], block.clone()),
         tag,
     };
@@ -427,7 +427,7 @@ fn stash_bounded_at_ring_depth_4() {
         (0..3 * mdim).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
     let mk_batch = |tag: u64| ExpertFfnBatch {
         layer: 0,
-        experts: vec![(0, 3)],
+        experts: vec![(0, 0, 3)],
         data: HostTensor::f32(&[3, mdim], block.clone()),
         tag,
     };
@@ -497,7 +497,7 @@ fn hierarchical_and_socket_exchanges_match_flat_bitwise() {
                     w,
                     ExpertFfnBatch {
                         layer: 0,
-                        experts: vec![(w, counts[w])],
+                        experts: vec![(w, 0, counts[w])],
                         data: HostTensor::f32(
                             &[counts[w], mdim],
                             blocks[w].clone(),
@@ -606,7 +606,7 @@ fn relayed_reply_counts_once_in_stash_bound() {
                     w,
                     ExpertFfnBatch {
                         layer: 0,
-                        experts: vec![(w, c)],
+                        experts: vec![(w, 0, c)],
                         data: HostTensor::f32(
                             &[c, mdim],
                             (0..c * mdim)

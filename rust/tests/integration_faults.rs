@@ -1,0 +1,314 @@
+//! Fault tolerance (`DSMOE_FAULT_TOLERANCE` semantics, set here through
+//! the programmatic setters): killing, delaying, dropping or garbling a
+//! worker mid-trace via a deterministic [`FaultPlan`] must never change a
+//! single emitted token — the leader hits its exchange deadline, probes
+//! the fleet, fails dead workers over (re-homing their experts onto live
+//! group-0 survivors) and re-executes or re-queues the interrupted work.
+//! Every test compares the full per-request token streams of a faulted
+//! run against an unfaulted reference, bitwise.
+//!
+//! All tests no-op without `artifacts/` (like every integration test) and
+//! use `leader_threads = 1` — composing worker failover with mid-protocol
+//! leader-shard state is deliberately out of scope (see
+//! `rust/src/server/shard.rs`).
+
+use std::time::Duration;
+
+use ds_moe::config::{AllToAllKind, ServingConfig};
+use ds_moe::data::{Corpus, CorpusConfig};
+use ds_moe::fabric::{FaultPlan, TransportKind, WorkerState};
+use ds_moe::runtime::Manifest;
+use ds_moe::server::{EpEngine, Scheduler};
+
+fn manifest() -> Option<Manifest> {
+    let root = std::path::Path::new("artifacts");
+    root.join("manifest.json")
+        .exists()
+        .then(|| Manifest::load(root).unwrap())
+}
+
+fn corpus() -> Corpus {
+    Corpus::generate(CorpusConfig::default())
+}
+
+const WORKERS: usize = 4;
+const BATCH: usize = 8;
+const REQUESTS: usize = 12;
+const MAX_NEW: usize = 6;
+
+/// Scheduler-driven EP engine with fault tolerance armed through the
+/// setters (tests never touch env vars): tight exchange deadline so a
+/// faulted collect fails over in test time, one probe miss = dead (the
+/// probe window is generous enough that a live in-process worker can
+/// never miss it).
+fn ft_scheduler(
+    m: &Manifest,
+    transport: TransportKind,
+    hier: bool,
+    fault_tolerance: bool,
+) -> Scheduler<EpEngine> {
+    let mut ep = EpEngine::new_with_transport(
+        m,
+        "moe-s-8",
+        WORKERS,
+        AllToAllKind::Hierarchical,
+        BATCH,
+        transport,
+    )
+    .unwrap();
+    ep.set_serial_moe(false);
+    ep.set_pipeline(true);
+    if hier {
+        ep.set_node_size(2);
+    }
+    ep.set_a2a_hierarchical(hier);
+    let serving = ServingConfig {
+        model: "moe-s-8".into(),
+        workers: WORKERS,
+        max_batch: BATCH,
+        max_new_tokens: MAX_NEW,
+        batch_timeout: Duration::from_millis(1),
+        pipe_depth: 2,
+        leader_threads: 1,
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(ep, serving);
+    // After `configure` so nothing can clobber the FT knobs.
+    sched.model.set_fault_tolerance(fault_tolerance);
+    sched.model.set_exchange_timeout(Duration::from_millis(1000));
+    sched.model.set_probe_params(Duration::from_secs(2), 1, 2);
+    sched
+}
+
+/// Serve the deterministic 12-request trace, returning per-request token
+/// streams sorted by id.  Greedy sampling + per-lane decode independence
+/// make each request's stream a pure function of its prompt, so faulted
+/// and unfaulted runs compare bitwise no matter how admissions batch up
+/// or how often the fault path re-executes a step.
+fn serve_trace(sched: &mut Scheduler<EpEngine>) -> Vec<(u64, Vec<i32>)> {
+    let c = corpus();
+    for i in 0..REQUESTS {
+        sched.submit(c.prompt(i, 8), Some(MAX_NEW)).unwrap();
+    }
+    let responses = sched.run_until_idle().unwrap();
+    assert_eq!(responses.len(), REQUESTS, "requests lost");
+    let mut out: Vec<(u64, Vec<i32>)> = responses
+        .into_iter()
+        .map(|r| {
+            assert!(!r.tokens.is_empty());
+            (r.id, r.tokens)
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+/// The tentpole invariant: kill one worker mid-trace and every request
+/// still completes with tokens bitwise-identical to an unfailed run, the
+/// victim is declared dead, and its experts are re-homed off it in every
+/// MoE layer.
+fn kill_is_token_identical(
+    transport: TransportKind,
+    hier: bool,
+    victim: usize,
+) {
+    let Some(m) = manifest() else { return };
+    let baseline = serve_trace(&mut ft_scheduler(&m, transport, hier, true));
+
+    let mut sched = ft_scheduler(&m, transport, hier, true);
+    // The victim must actually host experts before the failure, or the
+    // eviction assertions below would pass vacuously.
+    for lp in sched.model.placement().layers.values() {
+        assert!(
+            !lp.experts_of[victim].is_empty(),
+            "victim {victim} hosts nothing at layer {} — bad test setup",
+            lp.layer
+        );
+    }
+    // Crash the victim at its 6th expert-batch dispatch: past the first
+    // admission, with decode traffic on every lane.
+    sched.model.set_fault_plan(FaultPlan {
+        kill: Some((victim, 6)),
+        ..Default::default()
+    });
+    let faulted = serve_trace(&mut sched);
+
+    assert_eq!(
+        faulted, baseline,
+        "tokens diverged after killing worker {victim} \
+         ({transport:?}, hier={hier})"
+    );
+    let m = &sched.metrics;
+    assert!(m.counter("worker_deaths") >= 1, "death never detected");
+    assert!(m.counter("failovers") >= 1, "failover never ran");
+    assert!(m.value_count("ft_recovery") >= 1, "recovery never timed");
+    assert_eq!(sched.model.worker_state(victim), WorkerState::Dead);
+    for lp in sched.model.placement().layers.values() {
+        assert!(
+            lp.experts_of[victim].is_empty(),
+            "layer {} still routes to the dead worker {victim}: {:?}",
+            lp.layer,
+            lp.experts_of[victim]
+        );
+    }
+}
+
+#[test]
+fn killed_worker_fails_over_token_identical_channel_flat() {
+    kill_is_token_identical(TransportKind::Channel, false, 1);
+}
+
+#[test]
+fn killed_worker_fails_over_token_identical_channel_hier_relay_victim() {
+    // Worker 0 relays node {0, 1} under node_size 2 — killing it forces
+    // both a relay re-route and an expert failover.
+    kill_is_token_identical(TransportKind::Channel, true, 0);
+}
+
+#[test]
+fn killed_worker_fails_over_token_identical_socket_flat() {
+    kill_is_token_identical(TransportKind::Socket, false, 1);
+}
+
+#[test]
+fn killed_worker_fails_over_token_identical_socket_hier_relay_victim() {
+    kill_is_token_identical(TransportKind::Socket, true, 0);
+}
+
+/// Default-off discipline: arming fault tolerance (deadline + probe
+/// machinery, no faults injected) must not move a single token relative
+/// to the stock infallible path.
+#[test]
+fn fault_tolerance_toggle_is_token_inert_without_faults() {
+    let Some(m) = manifest() else { return };
+    let mut off = ft_scheduler(&m, TransportKind::Channel, false, false);
+    let mut on = ft_scheduler(&m, TransportKind::Channel, false, true);
+    assert!(!off.model.fault_tolerance());
+    assert!(on.model.fault_tolerance());
+    assert_eq!(
+        serve_trace(&mut off),
+        serve_trace(&mut on),
+        "arming fault tolerance changed tokens with no fault injected"
+    );
+    assert_eq!(on.metrics.counter("worker_deaths"), 0);
+    assert_eq!(on.metrics.counter("exchange_timeouts"), 0);
+}
+
+/// With engine-local retries disabled the fault must escape to the
+/// scheduler, whose `try_recover` + fold path re-queues every in-flight
+/// request through the preemption seam — and the continuations are still
+/// token-identical.
+#[test]
+fn escalated_fault_folds_requests_through_scheduler() {
+    let Some(m) = manifest() else { return };
+    let mut baseline = ft_scheduler(&m, TransportKind::Channel, false, true);
+    baseline.model.set_ft_retries(0);
+    let expect = serve_trace(&mut baseline);
+
+    let mut sched = ft_scheduler(&m, TransportKind::Channel, false, true);
+    sched.model.set_ft_retries(0);
+    sched.model.set_fault_plan(FaultPlan {
+        kill: Some((1, 6)),
+        ..Default::default()
+    });
+    let got = serve_trace(&mut sched);
+    assert_eq!(got, expect, "scheduler-fold recovery changed tokens");
+    let mets = &sched.metrics;
+    assert!(mets.counter("worker_deaths") >= 1);
+    assert!(
+        mets.counter("fault_requeues") >= 1,
+        "no request was folded back into the queue"
+    );
+    assert!(mets.counter("degraded_steps") >= 1);
+}
+
+/// A lost reply frame: the exchange deadline elapses, but the probe finds
+/// every worker alive — recovery must re-execute without killing anyone.
+#[test]
+fn dropped_reply_recovers_without_declaring_deaths() {
+    let Some(m) = manifest() else { return };
+    let baseline =
+        serve_trace(&mut ft_scheduler(&m, TransportKind::Channel, false, true));
+    let mut sched = ft_scheduler(&m, TransportKind::Channel, false, true);
+    sched.model.set_fault_plan(FaultPlan {
+        drop_reply: Some(5),
+        ..Default::default()
+    });
+    assert_eq!(serve_trace(&mut sched), baseline);
+    let mets = &sched.metrics;
+    assert!(
+        mets.counter("exchange_timeouts") >= 1,
+        "the dropped reply never tripped the deadline"
+    );
+    assert_eq!(mets.counter("worker_deaths"), 0, "live worker declared dead");
+    assert_eq!(mets.counter("failovers"), 0);
+}
+
+/// A garbled reply frame surfaces as a worker error (`Reply::Err`) — with
+/// fault tolerance on it is recoverable, counted, and token-neutral.
+#[test]
+fn garbled_reply_recovers_without_declaring_deaths() {
+    let Some(m) = manifest() else { return };
+    let baseline =
+        serve_trace(&mut ft_scheduler(&m, TransportKind::Channel, false, true));
+    let mut sched = ft_scheduler(&m, TransportKind::Channel, false, true);
+    sched.model.set_fault_plan(FaultPlan {
+        garble_reply: Some(4),
+        ..Default::default()
+    });
+    assert_eq!(serve_trace(&mut sched), baseline);
+    let mets = &sched.metrics;
+    assert!(mets.counter("worker_errors") >= 1, "garble never surfaced");
+    assert_eq!(mets.counter("worker_deaths"), 0, "live worker declared dead");
+}
+
+/// Replies held back well inside the deadline (a GC-pausing worker): no
+/// fault fires at all, and the tokens are untouched.
+#[test]
+fn delayed_replies_within_deadline_are_harmless() {
+    let Some(m) = manifest() else { return };
+    let baseline =
+        serve_trace(&mut ft_scheduler(&m, TransportKind::Channel, false, true));
+    let mut sched = ft_scheduler(&m, TransportKind::Channel, false, true);
+    sched.model.set_fault_plan(FaultPlan {
+        delay: Some((Duration::from_millis(20), 3)),
+        ..Default::default()
+    });
+    assert_eq!(serve_trace(&mut sched), baseline);
+    let mets = &sched.metrics;
+    assert_eq!(mets.counter("exchange_timeouts"), 0);
+    assert_eq!(mets.counter("worker_deaths"), 0);
+    assert_eq!(mets.counter("ft_retries"), 0);
+}
+
+/// A worker that is dead at drop time must not deadlock the teardown
+/// join (the transport hard-closes the wire after the shutdown frames) —
+/// the fault-path companion of
+/// `leader_shard_and_fabric_threads_join_on_drop`.
+#[test]
+fn dead_worker_does_not_deadlock_drop() {
+    let Some(m) = manifest() else { return };
+    for transport in [TransportKind::Channel, TransportKind::Socket] {
+        let mut sched = ft_scheduler(&m, transport, false, true);
+        sched.model.set_fault_plan(FaultPlan {
+            kill: Some((1, 6)),
+            ..Default::default()
+        });
+        let _ = serve_trace(&mut sched);
+        assert!(
+            sched.metrics.counter("worker_deaths") >= 1,
+            "setup: the kill never landed ({transport:?})"
+        );
+        let h = std::thread::spawn(move || drop(sched));
+        let t0 = std::time::Instant::now();
+        while !h.is_finished() && t0.elapsed() < Duration::from_secs(120) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        assert!(
+            h.is_finished(),
+            "dropping the engine deadlocked with a dead worker \
+             ({transport:?})"
+        );
+        h.join().unwrap();
+    }
+}

@@ -5,61 +5,84 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-cargo build --release
-cargo test -q
+# Every named single-test invocation below runs under a 60-second timeout:
+# the failure mode this repo's fault-tolerance layer can regress into is a
+# hang (a missed exchange deadline, a stuck teardown join), and a wedged CI
+# job is strictly worse than a loud one.  The heavyweight steps (build,
+# full suite, clippy, bench) get a generous ceiling instead.
+t() { timeout 60 "$@"; }
+
+timeout 900 cargo build --release
+timeout 900 cargo test -q
 # EP continuous-batching smoke: the scheduler-backed expert-parallel path
 # must admit/retire requests end to end (no-ops without artifacts/, like
 # every integration test).  Named explicitly so a filtered `cargo test`
 # invocation can never silently drop it from the gate.
-cargo test -q --test integration_serving ep_scheduler
+t cargo test -q --test integration_serving ep_scheduler
 # Depth-N pipeline ring: depth-3 three-way bitwise parity (uneven 3/3/2
 # lane groups) and the skewed-retirement regroup test, named explicitly
 # for the same reason.
-cargo test -q --test integration_parity pipelined_bitwise_identical_moe_depth3
-cargo test -q --test integration_serving ep_regroup_rebalances_skewed_retirement
+t cargo test -q --test integration_parity pipelined_bitwise_identical_moe_depth3
+t cargo test -q --test integration_serving ep_regroup_rebalances_skewed_retirement
 # Parallel leader shards: sharded-vs-single bitwise parity, the slow-shard
 # oldest-first ordering invariant, and the thread-join-on-drop guard.
-cargo test -q --test integration_parity leader_shards_bitwise_identical
-cargo test -q --test integration_serving leader_shard
+t cargo test -q --test integration_parity leader_shards_bitwise_identical
+t cargo test -q --test integration_serving leader_shard
 # Hierarchical all-to-all + transport seam: the three-way bitwise parity
 # runs (flat/channel, hier/channel, hier/socket), the fabric-level
 # exchange parity with cross-/intra-node counter accounting, the
 # coalesced-relay-reply stash bound, and loud socket-transport errors.
-cargo test -q --test integration_parity a2a_transport_bitwise_identical
-cargo test -q --test integration_fabric hierarchical_and_socket_exchanges_match_flat_bitwise
-cargo test -q --test integration_fabric relayed_reply_counts_once_in_stash_bound
-cargo test -q --test integration_fabric socket_transport_errors_stay_loud
+t cargo test -q --test integration_parity a2a_transport_bitwise_identical
+t cargo test -q --test integration_fabric hierarchical_and_socket_exchanges_match_flat_bitwise
+t cargo test -q --test integration_fabric relayed_reply_counts_once_in_stash_bound
+t cargo test -q --test integration_fabric socket_transport_errors_stay_loud
 # Hot-expert replication + online migration: replicated placements must be
 # bitwise-identical to the static single-owner packs on every schedule and
 # transport, and a mid-run weight-ship + placement-epoch flip (both
 # directions) must not perturb a bit or leave a stale tagged reply behind.
-cargo test -q --test integration_parity replicated_placement_bitwise_identical
-cargo test -q --test integration_parity migration_mid_run_bitwise_identical
+t cargo test -q --test integration_parity replicated_placement_bitwise_identical
+t cargo test -q --test integration_parity migration_mid_run_bitwise_identical
 # Compressed expert data path: the frame codec must round-trip every
 # dtype tag (f16/bf16/i8 included) and reject truncated/garbage frames;
 # the bf16/int8 weight ladders and the f16 activation wire must hold
 # tolerance parity against the all-f32 reference across flat/channel and
 # hier/socket, and compose bitwise with PR 7's replicated placements.
-cargo test -q --lib fabric::frame::
-cargo test -q --test integration_parity bf16_experts_close_to_f32
-cargo test -q --test integration_parity int8_experts
-cargo test -q --test integration_parity f16_wire_close_to_f32
-cargo test -q --test integration_parity int8_replicated_expert_is_replica_consistent
+t cargo test -q --lib fabric::frame::
+t cargo test -q --test integration_parity bf16_experts_close_to_f32
+t cargo test -q --test integration_parity int8_experts
+t cargo test -q --test integration_parity f16_wire_close_to_f32
+t cargo test -q --test integration_parity int8_replicated_expert_is_replica_consistent
 # SLO-aware serving: chunked prefill must be token-parity neutral (mock
 # and EP backends), preemption must round-trip to an identical
 # continuation, and backpressure accounting must close (queued + shed ==
 # submitted) under both shed policies.
-cargo test -q --test integration_slo
-cargo test -q --test integration_serving ep_chunked_prefill_token_parity
-cargo clippy --all-targets -- -D warnings
-cargo fmt --check
+t cargo test -q --test integration_slo
+t cargo test -q --test integration_serving ep_chunked_prefill_token_parity
+# Fault tolerance: killing one worker mid-trace must fail over
+# token-identically on both transports and both all-to-all schedules,
+# arming the toggle without faults must be token-inert (the default-off
+# path stays bitwise-identical), an escalated fault must fold in-flight
+# requests through the scheduler's preemption seam, a dropped reply must
+# recover without declaring any live worker dead, and a dead worker must
+# never deadlock the teardown join.
+t cargo test -q --test integration_faults killed_worker_fails_over_token_identical_channel_flat
+t cargo test -q --test integration_faults killed_worker_fails_over_token_identical_channel_hier_relay_victim
+t cargo test -q --test integration_faults killed_worker_fails_over_token_identical_socket_flat
+t cargo test -q --test integration_faults killed_worker_fails_over_token_identical_socket_hier_relay_victim
+t cargo test -q --test integration_faults fault_tolerance_toggle_is_token_inert_without_faults
+t cargo test -q --test integration_faults escalated_fault_folds_requests_through_scheduler
+t cargo test -q --test integration_faults dropped_reply_recovers_without_declaring_deaths
+t cargo test -q --test integration_faults dead_worker_does_not_deadlock_drop
+timeout 900 cargo clippy --all-targets -- -D warnings
+t cargo fmt --check
 
 # Bench smoke: a short arrival trace, the depth-2 leader-parallel pair,
 # the flat-vs-hierarchical all-to-all pair, one compressed serving point
-# (int8 experts + f16 wire) next to the f32 baseline, and a short bursty
-# FIFO-vs-SLO multi-tenant pair (per-tier TTFT/TPOT) through the full
-# stack; refreshes BENCH_e2e.json so every PR records a perf point
+# (int8 experts + f16 wire) next to the f32 baseline, a short bursty
+# FIFO-vs-SLO multi-tenant pair (per-tier TTFT/TPOT), and an
+# unfailed-vs-one-kill fault-tolerance pair through the full stack;
+# refreshes BENCH_e2e.json so every PR records a perf point
 # (no-ops without artifacts/, like the integration tests).
-cargo bench --bench e2e_serving -- --smoke
+timeout 900 cargo bench --bench e2e_serving -- --smoke
 
 echo "tier-1 gate: OK"
